@@ -1,0 +1,107 @@
+"""AOT pipeline: lower the L2 model to HLO **text** under artifacts/.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids that xla_extension 0.5.1
+(behind the rust `xla` crate) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Variants produced (must mirror `rust/src/runtime/ArtifactRegistry`):
+
+* ``spmv_n{N}_nnz{NNZ}.hlo.txt``          (N, NNZ) in SPMV_VARIANTS
+* ``lanczos_step_n{N}_nnz{NNZ}.hlo.txt``  same variants
+* ``jacobi_k{K}.hlo.txt``                 K in JACOBI_KS
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (from python/).
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Keep in lockstep with rust/src/runtime/mod.rs::ArtifactRegistry.
+SPMV_VARIANTS = [(1024, 20_480), (4096, 81_920), (16_384, 327_680)]
+JACOBI_KS = [4, 8, 16, 32]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange).
+
+    print_large_constants=True is load-bearing: the default printer elides
+    big dense constants as `{...}`, which xla_extension 0.5.1's text parser
+    silently materializes as ZEROS (no error). Every baked constant — e.g.
+    the Jacobi round-robin selector matrices — would vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_spmv(n: int, nnz: int) -> str:
+    i32 = jax.ShapeDtypeStruct((nnz,), jnp.int32)
+    f32v = jax.ShapeDtypeStruct((nnz,), jnp.float32)
+    x = jax.ShapeDtypeStruct((n,), jnp.float32)
+    fn = lambda rows, cols, vals, xv: (model.spmv(rows, cols, vals, xv, n=n),)
+    return to_hlo_text(jax.jit(fn).lower(i32, i32, f32v, x))
+
+
+def lower_lanczos_step(n: int, nnz: int) -> str:
+    i32 = jax.ShapeDtypeStruct((nnz,), jnp.int32)
+    f32v = jax.ShapeDtypeStruct((nnz,), jnp.float32)
+    vec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    scal = jax.ShapeDtypeStruct((), jnp.float32)
+    fn = lambda rows, cols, vals, v, v_prev, beta: model.lanczos_step(
+        rows, cols, vals, v, v_prev, beta, n=n
+    )
+    return to_hlo_text(jax.jit(fn).lower(i32, i32, f32v, vec, vec, scal))
+
+
+def lower_jacobi(k: int) -> str:
+    alpha = jax.ShapeDtypeStruct((k,), jnp.float32)
+    beta = jax.ShapeDtypeStruct((k,), jnp.float32)
+    fn = lambda a, b: model.jacobi(a, b, k=k)
+    return to_hlo_text(jax.jit(fn).lower(alpha, beta))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma-separated artifact name filter (substring match)",
+    )
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    wanted = args.only.split(",") if args.only else None
+
+    jobs = []
+    for n, nnz in SPMV_VARIANTS:
+        jobs.append((f"spmv_n{n}_nnz{nnz}.hlo.txt", lambda n=n, nnz=nnz: lower_spmv(n, nnz)))
+        jobs.append(
+            (
+                f"lanczos_step_n{n}_nnz{nnz}.hlo.txt",
+                lambda n=n, nnz=nnz: lower_lanczos_step(n, nnz),
+            )
+        )
+    for k in JACOBI_KS:
+        jobs.append((f"jacobi_k{k}.hlo.txt", lambda k=k: lower_jacobi(k)))
+
+    for name, build in jobs:
+        if wanted and not any(w in name for w in wanted):
+            continue
+        path = out / name
+        text = build()
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

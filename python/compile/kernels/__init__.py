@@ -1,0 +1,22 @@
+"""Layer-1 Pallas kernels (build-time only; lowered to HLO by aot.py).
+
+`spmv` is the memory-bound hot-spot of the Lanczos phase (SS IV-B of the
+paper); `jacobi_sweep` is the compute-bound systolic step of phase 2
+(SS IV-C). Both run with interpret=True: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so the kernels lower to plain HLO ops while
+the BlockSpec structure still documents the HBM<->VMEM schedule a real
+TPU build would use (see DESIGN.md SS Hardware-Adaptation).
+"""
+
+from .spmv import spmv_pallas, PACKET_NNZ, CHUNK_NNZ
+from .jacobi import jacobi_sweep_pallas, round_robin_schedule
+from . import ref
+
+__all__ = [
+    "spmv_pallas",
+    "jacobi_sweep_pallas",
+    "round_robin_schedule",
+    "ref",
+    "PACKET_NNZ",
+    "CHUNK_NNZ",
+]

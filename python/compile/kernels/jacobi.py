@@ -1,0 +1,179 @@
+"""Pallas systolic Jacobi sweep — the paper's Brent-Luk array (SS IV-C).
+
+One *sweep* = ``K-1`` parallel steps; in step ``s`` the K/2 disjoint pairs
+of the round-robin schedule rotate simultaneously:
+
+* diagonal PEs compute ``theta = 0.5 atan2(2b, a - d)`` (Taylor datapath on
+  the FPGA; here the angle comes from the same formula and the rotation is
+  renormalized, matching `rust/src/jacobi/trig.rs`),
+* off-diagonal PEs apply the row/column angles,
+* eigenvector PEs apply the column angle.
+
+Hardware adaptation: the K^2/4 PEs' concurrent 2x2 rotations are expressed
+as K x K one-hot-selector matmuls per step (`G^T A G`), which an MXU
+executes as dense matmuls — the TPU-native equivalent of the unrolled
+systolic rotate. The round-robin interchange is **baked at trace time as
+constant selector matrices with a static unroll** (mirroring SS IV-C2's
+fixed wiring). This is deliberate: the legacy xla_extension 0.5.1 behind
+the rust runtime mis-executes dynamically-indexed gathers of the schedule
+inside a loop (it repeats the first pairing), while constant selectors
+round-trip exactly — see EXPERIMENTS.md.
+
+The kernel holds the full (K,K) blocks in VMEM (K <= 32 -> 8 KiB), i.e.
+the whole systolic state fits one core's VMEM just as the array fits one
+SLR.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def round_robin_schedule(k: int) -> np.ndarray:
+    """Static Brent-Luk pairing table: ``(k-1, k/2, 2)`` int32.
+
+    Circle method with slot 0 pinned, advanced exactly like the rust
+    `RoundRobin::advance` (reverse-order in-place shifts).
+    """
+    assert k >= 2 and k % 2 == 0, f"round robin needs even k >= 2, got {k}"
+    m = k // 2
+    top = list(range(0, k, 2))
+    bottom = list(range(1, k, 2))
+    steps = []
+    for _ in range(k - 1):
+        pairs = [(min(t, b), max(t, b)) for t, b in zip(top, bottom)]
+        steps.append(pairs)
+        if m > 1:
+            incoming_top = bottom[0]
+            outgoing_top = top[m - 1]
+            top[2:m] = top[1 : m - 1]
+            top[1] = incoming_top
+            bottom[: m - 1] = bottom[1:m]
+            bottom[m - 1] = outgoing_top
+    return np.asarray(steps, dtype=np.int32)
+
+
+def _selectors(sched: np.ndarray):
+    """Constant one-hot selector matrices per step: P[s][i] = e_{p_i}."""
+    sched = np.asarray(sched)
+    steps, m, _ = sched.shape
+    k = 2 * m
+    ps = np.zeros((steps, m, k), np.float32)
+    qs = np.zeros((steps, m, k), np.float32)
+    for s in range(steps):
+        for i, (p, q) in enumerate(sched[s]):
+            ps[s, i, int(p)] = 1.0
+            qs[s, i, int(q)] = 1.0
+    return ps, qs
+
+
+def _make_sweep_kernel(steps: int):
+    """Build the sweep kernel; selector matrices arrive as inputs (they are
+    closed-over constants at the jit boundary, so they lower to HLO
+    constants — never a dynamic gather)."""
+
+    def kernel(ps_ref, qs_ref, a_ref, v_ref, a_out_ref, v_out_ref):
+        a = a_ref[...]
+        v = v_ref[...]
+        k = a.shape[0]
+        eye = jnp.eye(k, dtype=a.dtype)
+        # Static unroll over the k-1 systolic steps: fixed wiring, like the
+        # hardware's neighbour connections.
+        for s in range(steps):
+            P = ps_ref[s]  # (k/2, k), static index
+            Q = qs_ref[s]
+            pa = P @ a
+            qa = Q @ a
+            app = jnp.sum(pa * P, axis=-1)  # diag(P a P^T)
+            apq = jnp.sum(pa * Q, axis=-1)
+            aqq = jnp.sum(qa * Q, axis=-1)
+            # Annihilating angle per diagonal PE (Fig 4a); atan2 handles
+            # a == d exactly like the hardware's zero-angle convention.
+            theta = 0.5 * jnp.arctan2(2.0 * apq, app - aqq)
+            c = jnp.cos(theta)[:, None]
+            s_ = jnp.sin(theta)[:, None]
+            # G = I with 2x2 blocks [(c, -s), (s, c)] at the pair slots.
+            g = (
+                eye
+                - P.T @ P
+                - Q.T @ Q
+                + P.T @ (c * P)
+                + Q.T @ (c * Q)
+                - P.T @ (s_ * Q)
+                + Q.T @ (s_ * P)
+            )
+            # All K/2 rotations at once: the MXU-native systolic step.
+            a = g.T @ a @ g
+            v = v @ g
+        a_out_ref[...] = a
+        v_out_ref[...] = v
+
+    return kernel
+
+
+@functools.lru_cache(maxsize=None)
+def _sweep_call(k: int):
+    sched = round_robin_schedule(k)
+    ps, qs = _selectors(sched)
+    kernel = _make_sweep_kernel(ps.shape[0])
+    call = pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((k, k), jnp.float32),
+            jax.ShapeDtypeStruct((k, k), jnp.float32),
+        ),
+        interpret=True,
+    )
+    ps_c = jnp.asarray(ps)
+    qs_c = jnp.asarray(qs)
+    return lambda a, v: call(ps_c, qs_c, a, v)
+
+
+def jacobi_sweep_pallas(sched, a, v):
+    """Run one systolic sweep.
+
+    Args:
+      sched: the (concrete) table from `round_robin_schedule` — used only
+        to size the kernel; the wiring is baked per k.
+      a: float32[k, k] symmetric working matrix.
+      v: float32[k, k] eigenvector accumulator.
+
+    Returns:
+      (a', v') after k-1 parallel steps.
+    """
+    k = int(np.asarray(sched).shape[1]) * 2
+    return _sweep_call(k)(a, v)
+
+
+def jacobi_eigh(alpha, beta, sched, *, sweeps):
+    """Full phase-2 solve: tridiagonal (alpha, beta) -> (eigvals, eigvecs).
+
+    `beta` is padded to length k (last entry ignored) so every k shares one
+    artifact signature. Runs a fixed number of sweeps (AOT has no dynamic
+    stopping; O(log k) + margin is chosen by the caller), then sorts by
+    decreasing |eigenvalue| — the Top-K convention.
+    """
+    k = alpha.shape[0]
+    # Mask-based construction (no scatter: the legacy xla_extension behind
+    # the rust runtime mis-executes scatter-set; masks round-trip exactly).
+    ii = jnp.arange(k)[:, None]
+    jj = jnp.arange(k)[None, :]
+    t = (
+        jnp.where(ii == jj, alpha[:, None], 0.0)
+        + jnp.where(jj == ii + 1, beta[:, None], 0.0)
+        + jnp.where(ii == jj + 1, beta[None, :], 0.0)
+    ).astype(jnp.float32)
+    v = jnp.eye(k, dtype=jnp.float32)
+    call = _sweep_call(int(k))
+
+    def body(_, carry):
+        a, v = carry
+        return call(a, v)
+
+    a_fin, v_fin = jax.lax.fori_loop(0, sweeps, body, (t, v))
+    d = jnp.diagonal(a_fin)
+    order = jnp.argsort(-jnp.abs(d))
+    return d[order], v_fin[:, order]

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+anchor (pytest asserts kernel == ref, ref == scipy/numpy)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def spmv_ref(rows, cols, vals, x, *, n):
+    """COO SpMV: scatter-add, no Pallas. Padding entries (0,0,0.0) add 0."""
+    return jnp.zeros((n,), jnp.float32).at[rows].add(vals * x[cols])
+
+
+def lanczos_step_ref(rows, cols, vals, v, v_prev, beta, *, n):
+    """One Lanczos inner iteration (Algorithm 1 lines 7-9, Paige order).
+
+    w = M v - beta * v_prev; alpha = <w, v>; w' = w - alpha v.
+    Returns (w', alpha).
+    """
+    w = spmv_ref(rows, cols, vals, v, n=n) - beta * v_prev
+    alpha = jnp.dot(w, v)
+    return w - alpha * v, alpha
+
+
+def jacobi_sweep_ref(sched, a, v):
+    """One Brent-Luk sweep in plain numpy (sequential rotations).
+
+    Disjoint pairs commute, so applying the K/2 rotations of a step
+    sequentially equals the parallel hardware step — same invariant the
+    rust model relies on.
+    """
+    a = np.array(a, dtype=np.float64)
+    v = np.array(v, dtype=np.float64)
+    k = a.shape[0]
+    for step in np.asarray(sched):
+        for p, q in step:
+            p, q = int(p), int(q)
+            theta = 0.5 * np.arctan2(2.0 * a[p, q], a[p, p] - a[q, q])
+            c, s = np.cos(theta), np.sin(theta)
+            g = np.eye(k)
+            g[p, p] = c
+            g[q, q] = c
+            g[p, q] = -s
+            g[q, p] = s
+            a = g.T @ a @ g
+            v = v @ g
+    return a.astype(np.float32), v.astype(np.float32)
+
+
+def tridiag_dense(alpha, beta):
+    """Dense symmetric tridiagonal from (alpha, beta[: k-1])."""
+    k = len(alpha)
+    t = np.zeros((k, k), dtype=np.float64)
+    for i in range(k):
+        t[i, i] = alpha[i]
+        if i + 1 < k:
+            t[i, i + 1] = beta[i]
+            t[i + 1, i] = beta[i]
+    return t
+
+
+def topk_eig_ref(alpha, beta):
+    """numpy eigh on the tridiagonal, sorted by decreasing magnitude."""
+    t = tridiag_dense(alpha, beta)
+    w, q = np.linalg.eigh(t)
+    order = np.argsort(-np.abs(w))
+    return w[order], q[:, order]

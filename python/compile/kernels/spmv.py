@@ -1,0 +1,82 @@
+"""Pallas COO SpMV kernel — the paper's dataflow SpMV CU (SS IV-B).
+
+Hardware adaptation (FPGA -> TPU, see DESIGN.md):
+
+* The FPGA Matrix Fetch Unit streams 512-bit packets of 5 COO entries per
+  clock from one HBM channel. Here the *grid* iterates over COO chunks and
+  the BlockSpec stages one ``(CHUNK_NNZ,)`` slab of rows/cols/vals from HBM
+  into VMEM per step — same schedule, TPU-sized granule (CHUNK_NNZ =
+  1024 packets' worth keeps the three slabs + the dense vector well inside
+  the ~16 MB VMEM budget; see DESIGN.md SS Perf for the footprint table).
+* The Dense Vector Fetch Unit's replicated random access becomes a VMEM
+  gather (``x[cols]``).
+* The Aggregation Unit + Write-Back FSM become a segment-sum scatter-add
+  into the output block, which every grid step aliases (the standard
+  Pallas reduction-grid pattern; step 0 zero-initializes).
+
+Padding convention (shared with the rust runtime, `runtime/spmv.rs`):
+entries beyond the real nnz are ``(row=0, col=0, val=0.0)`` and scatter an
+exact 0 into ``y[0]``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# COO entries per 512-bit HBM packet (3 x 32-bit words per entry).
+PACKET_NNZ = 5
+# Entries per grid step: 1024 packets (20 KiB of COO slab per ref in VMEM).
+CHUNK_NNZ = PACKET_NNZ * 1024
+
+
+def _spmv_kernel(rows_ref, cols_ref, vals_ref, x_ref, o_ref):
+    """One grid step: aggregate one COO chunk into the shared output block."""
+    step = pl.program_id(0)
+
+    # Zero-initialize the accumulator on the first chunk (the Merge Unit's
+    # fresh output vector for this iteration).
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    rows = rows_ref[...]
+    cols = cols_ref[...]
+    vals = vals_ref[...]
+    # Dense Vector Fetch Unit: gather the 5-per-cycle random accesses.
+    gathered = x_ref[...][cols]
+    # Aggregation Unit: multiply and segment-sum into the output stripe.
+    contrib = vals * gathered
+    o_ref[...] = o_ref[...] + jnp.zeros_like(o_ref).at[rows].add(contrib)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def spmv_pallas(rows, cols, vals, x, *, n):
+    """``y = M x`` for a COO matrix, as a Pallas reduction-grid kernel.
+
+    Args:
+      rows, cols: int32[nnz_pad] (padding rows/cols = 0).
+      vals: float32[nnz_pad] (padding vals = 0.0).
+      x: float32[n].
+      n: static output length.
+
+    Returns:
+      float32[n].
+    """
+    nnz = rows.shape[0]
+    assert nnz % CHUNK_NNZ == 0, f"nnz_pad {nnz} must be a multiple of {CHUNK_NNZ}"
+    grid = nnz // CHUNK_NNZ
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((CHUNK_NNZ,), lambda i: (i,)),  # rows slab
+            pl.BlockSpec((CHUNK_NNZ,), lambda i: (i,)),  # cols slab
+            pl.BlockSpec((CHUNK_NNZ,), lambda i: (i,)),  # vals slab
+            pl.BlockSpec((n,), lambda i: (0,)),  # dense vector, resident
+        ],
+        out_specs=pl.BlockSpec((n,), lambda i: (0,)),  # shared accumulator
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(rows, cols, vals, x)

@@ -1,0 +1,57 @@
+"""Layer-2 JAX model: the compute graphs `aot.py` lowers to HLO artifacts.
+
+Three exported functions (all calling the L1 Pallas kernels):
+
+* ``spmv`` — one SpMV application (Algorithm 1 line 7).
+* ``lanczos_step`` — the fused Lanczos inner iteration: SpMV + the Paige-
+  ordered recurrence terms. The rust coordinator runs the loop (K
+  iterations, reorthogonalization, breakdown handling) and calls this per
+  iteration — matching the hardware split where SLR0 owns exactly this
+  dataflow and the host sequences iterations.
+* ``jacobi`` — the full phase-2 systolic solve on the K x K tridiagonal.
+
+All shapes are static per artifact variant; padding conventions are shared
+with `rust/src/runtime/` (see ArtifactRegistry).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import jacobi as jk
+from compile.kernels import spmv as sk
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def spmv(rows, cols, vals, x, *, n):
+    """y = M x through the Pallas dataflow kernel."""
+    return sk.spmv_pallas(rows, cols, vals, x, n=n)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def lanczos_step(rows, cols, vals, v, v_prev, beta, *, n):
+    """Fused Lanczos iteration: returns ``(w', alpha)``.
+
+    w = M v - beta v_prev;  alpha = <w, v>;  w' = w - alpha v.
+    beta is a float32 scalar (0.0 on the first iteration).
+    """
+    w = sk.spmv_pallas(rows, cols, vals, v, n=n) - beta * v_prev
+    alpha = jnp.dot(w, v)
+    return w - alpha * v, alpha
+
+
+def jacobi(alpha, beta, *, k, sweeps=None):
+    """Phase-2 solve for a K x K tridiagonal: ``(eigvals, eigvecs)``.
+
+    `beta` padded to length k. Fixed sweep count: ceil(log2 k) + 4 — the
+    O(log K) systolic convergence plus margin (validated against numpy in
+    the pytest suite).
+    """
+    if sweeps is None:
+        # ceil(log2 k) + margin, static. The margin is generous because the
+        # AOT artifact cannot stop early: worst-case tridiagonals need a
+        # few extra sweeps to push the off-diagonal below f32 resolution.
+        sweeps = (k - 1).bit_length() + 7
+    sched = jnp.asarray(jk.round_robin_schedule(k))
+    return jk.jacobi_eigh(alpha, beta, sched, sweeps=sweeps)

@@ -1,0 +1,119 @@
+"""L1/L2 correctness: the systolic Jacobi kernel against the numpy sweep
+oracle and numpy.linalg.eigh."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.jacobi import jacobi_eigh, jacobi_sweep_pallas, round_robin_schedule
+
+
+def rand_tridiag(k, seed):
+    rng = np.random.default_rng(seed)
+    alpha = rng.uniform(-1, 1, k).astype(np.float32)
+    beta = rng.uniform(-1, 1, k).astype(np.float32)  # padded to k
+    return alpha, beta
+
+
+@pytest.mark.parametrize("k", [4, 6, 8, 16])
+def test_schedule_meets_every_pair_once(k):
+    sched = round_robin_schedule(k)
+    assert sched.shape == (k - 1, k // 2, 2)
+    seen = set()
+    for step in sched:
+        used = set()
+        for p, q in step:
+            assert p < q
+            assert p not in used and q not in used, "pairs within a step must be disjoint"
+            used.update((int(p), int(q)))
+            pair = (int(p), int(q))
+            assert pair not in seen, f"pair {pair} repeated"
+            seen.add(pair)
+    assert len(seen) == k * (k - 1) // 2
+
+
+@pytest.mark.parametrize("k", [4, 8])
+def test_sweep_matches_numpy_oracle(k):
+    alpha, beta = rand_tridiag(k, 3)
+    t = ref.tridiag_dense(alpha, beta[: k - 1]).astype(np.float32)
+    v = np.eye(k, dtype=np.float32)
+    sched = round_robin_schedule(k)
+    a_p, v_p = jacobi_sweep_pallas(jnp.array(sched), jnp.array(t), jnp.array(v))
+    a_r, v_r = ref.jacobi_sweep_ref(sched, t, v)
+    np.testing.assert_allclose(np.array(a_p), a_r, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.array(v_p), v_r, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("k", [4, 8, 16, 32])
+def test_eigenvalues_match_numpy(k):
+    alpha, beta = rand_tridiag(k, 11)
+    sched = round_robin_schedule(k)
+    sweeps = int(np.ceil(np.log2(k))) + 4
+    ev, V = jacobi_eigh(jnp.array(alpha), jnp.array(beta), jnp.array(sched), sweeps=sweeps)
+    w_ref, _ = ref.topk_eig_ref(alpha, beta[: k - 1])
+    np.testing.assert_allclose(np.array(ev), w_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_eigenvectors_are_orthonormal_and_residuals_small():
+    k = 16
+    alpha, beta = rand_tridiag(k, 29)
+    sched = round_robin_schedule(k)
+    ev, V = jacobi_eigh(jnp.array(alpha), jnp.array(beta), jnp.array(sched), sweeps=9)
+    V = np.array(V, dtype=np.float64)
+    ev = np.array(ev, dtype=np.float64)
+    np.testing.assert_allclose(V.T @ V, np.eye(k), atol=1e-5)
+    t = ref.tridiag_dense(alpha, beta[: k - 1])
+    for j in range(k):
+        res = np.linalg.norm(t @ V[:, j] - ev[j] * V[:, j])
+        assert res < 1e-4, f"pair {j}: residual {res}"
+
+
+def test_sorted_by_decreasing_magnitude():
+    k = 8
+    alpha, beta = rand_tridiag(k, 5)
+    sched = round_robin_schedule(k)
+    ev, _ = jacobi_eigh(jnp.array(alpha), jnp.array(beta), jnp.array(sched), sweeps=8)
+    ev = np.abs(np.array(ev))
+    assert np.all(ev[:-1] >= ev[1:] - 1e-7)
+
+
+def test_diagonal_input_is_fixed_point():
+    # beta = 0: already diagonal, eigenvalues = alpha (sorted by |.|).
+    k = 8
+    alpha = np.array([0.5, -0.9, 0.1, 0.7, -0.2, 0.05, 0.3, -0.6], np.float32)
+    beta = np.zeros(k, np.float32)
+    sched = round_robin_schedule(k)
+    ev, V = jacobi_eigh(jnp.array(alpha), jnp.array(beta), jnp.array(sched), sweeps=4)
+    np.testing.assert_allclose(np.array(ev), sorted(alpha, key=abs, reverse=True), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.sampled_from([4, 8, 16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.floats(min_value=1e-2, max_value=1.0),
+)
+def test_hypothesis_spectrum_sweep(k, seed, scale):
+    rng = np.random.default_rng(seed)
+    alpha = (rng.uniform(-1, 1, k) * scale).astype(np.float32)
+    beta = (rng.uniform(-1, 1, k) * scale).astype(np.float32)
+    sched = round_robin_schedule(k)
+    sweeps = int(np.ceil(np.log2(k))) + 4
+    ev, _ = jacobi_eigh(jnp.array(alpha), jnp.array(beta), jnp.array(sched), sweeps=sweeps)
+    w_ref, _ = ref.topk_eig_ref(alpha, beta[: k - 1])
+    np.testing.assert_allclose(np.array(ev), w_ref, rtol=1e-3, atol=1e-5 * scale + 1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_trace_preserved(seed):
+    """Similarity transforms preserve the trace."""
+    k = 8
+    rng = np.random.default_rng(seed)
+    alpha = rng.uniform(-1, 1, k).astype(np.float32)
+    beta = rng.uniform(-1, 1, k).astype(np.float32)
+    sched = round_robin_schedule(k)
+    ev, _ = jacobi_eigh(jnp.array(alpha), jnp.array(beta), jnp.array(sched), sweeps=7)
+    assert abs(float(np.sum(np.array(ev))) - float(np.sum(alpha))) < 1e-4

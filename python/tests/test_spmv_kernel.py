@@ -1,0 +1,126 @@
+"""L1 correctness: the Pallas SpMV kernel against the jnp oracle and scipy.
+
+The hypothesis sweep drives shapes, densities, index distributions, and
+value ranges; every case asserts allclose against the pure-jnp reference,
+and a scipy.sparse cross-check anchors the oracle itself.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import scipy.sparse as sp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.spmv import spmv_pallas, CHUNK_NNZ
+
+
+def pad_coo(rows, cols, vals, nnz_pad):
+    """Apply the shared padding convention: (0, 0, 0.0) tail entries."""
+    r = np.zeros(nnz_pad, np.int32)
+    c = np.zeros(nnz_pad, np.int32)
+    v = np.zeros(nnz_pad, np.float32)
+    r[: len(rows)] = rows
+    c[: len(cols)] = cols
+    v[: len(vals)] = vals
+    return jnp.array(r), jnp.array(c), jnp.array(v)
+
+
+def run_both(rows, cols, vals, x, n, nnz_pad=CHUNK_NNZ):
+    r, c, v = pad_coo(rows, cols, vals, nnz_pad)
+    xj = jnp.array(x, jnp.float32)
+    y_pallas = spmv_pallas(r, c, v, xj, n=n)
+    y_ref = ref.spmv_ref(r, c, v, xj, n=n)
+    return np.array(y_pallas), np.array(y_ref)
+
+
+def test_small_hand_case():
+    # [[1, 2], [0, 3]] @ [1, 1] = [3, 3]
+    y, yr = run_both([0, 0, 1], [0, 1, 1], [1.0, 2.0, 3.0], [1.0, 1.0], 2)
+    np.testing.assert_allclose(y, [3.0, 3.0], rtol=1e-6)
+    np.testing.assert_allclose(y, yr, rtol=1e-6)
+
+
+def test_matches_scipy_on_random_matrix():
+    rng = np.random.default_rng(42)
+    n, real = 512, 4000
+    rows = rng.integers(0, n, real)
+    cols = rng.integers(0, n, real)
+    vals = rng.normal(size=real).astype(np.float32)
+    x = rng.normal(size=n).astype(np.float32)
+    y, yr = run_both(rows, cols, vals, x, n)
+    m = sp.coo_matrix((vals, (rows, cols)), shape=(n, n))
+    expected = m @ x
+    np.testing.assert_allclose(y, expected, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(y, yr, rtol=1e-6, atol=1e-6)
+
+
+def test_multi_chunk_grid():
+    # nnz_pad spanning several grid steps must accumulate, not overwrite.
+    rng = np.random.default_rng(7)
+    n = 128
+    nnz_pad = CHUNK_NNZ * 3
+    real = CHUNK_NNZ * 2 + 17  # crosses chunk boundaries
+    rows = rng.integers(0, n, real)
+    cols = rng.integers(0, n, real)
+    vals = rng.normal(size=real).astype(np.float32)
+    x = rng.normal(size=n).astype(np.float32)
+    y, yr = run_both(rows, cols, vals, x, n, nnz_pad=nnz_pad)
+    np.testing.assert_allclose(y, yr, rtol=1e-4, atol=1e-4)
+
+
+def test_padding_is_neutral():
+    # Same matrix with different padding amounts -> identical result.
+    rows, cols, vals = [1, 2, 3], [3, 2, 1], [0.5, -1.5, 2.5]
+    x = np.arange(5, dtype=np.float32)
+    y1, _ = run_both(rows, cols, vals, x, 5, nnz_pad=CHUNK_NNZ)
+    y2, _ = run_both(rows, cols, vals, x, 5, nnz_pad=2 * CHUNK_NNZ)
+    np.testing.assert_allclose(y1, y2, rtol=1e-6)
+
+
+def test_duplicate_entries_accumulate():
+    y, yr = run_both([2, 2, 2], [0, 0, 1], [1.0, 2.0, 4.0], [1.0, 10.0, 0.0], 4)
+    np.testing.assert_allclose(y, [0.0, 0.0, 43.0, 0.0], rtol=1e-6)
+    np.testing.assert_allclose(y, yr, rtol=1e-6)
+
+
+def test_zero_matrix():
+    y, yr = run_both([], [], [], np.ones(8, np.float32), 8)
+    np.testing.assert_allclose(y, np.zeros(8))
+    np.testing.assert_allclose(yr, np.zeros(8))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=256),
+    density=st.floats(min_value=0.0, max_value=0.2),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.floats(min_value=1e-3, max_value=10.0),
+)
+def test_hypothesis_sweep(n, density, seed, scale):
+    rng = np.random.default_rng(seed)
+    real = min(int(density * n * n), CHUNK_NNZ - 1)
+    rows = rng.integers(0, n, real)
+    cols = rng.integers(0, n, real)
+    vals = (rng.normal(size=real) * scale).astype(np.float32)
+    x = rng.normal(size=n).astype(np.float32)
+    y, yr = run_both(rows, cols, vals, x, n)
+    np.testing.assert_allclose(y, yr, rtol=1e-4, atol=1e-4 * scale)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_linearity_property(seed):
+    """SpMV must be linear: M(a x + b z) = a M x + b M z."""
+    rng = np.random.default_rng(seed)
+    n, real = 64, 500
+    rows = rng.integers(0, n, real)
+    cols = rng.integers(0, n, real)
+    vals = rng.normal(size=real).astype(np.float32)
+    x = rng.normal(size=n).astype(np.float32)
+    z = rng.normal(size=n).astype(np.float32)
+    a, b = 0.7, -1.3
+    y_comb, _ = run_both(rows, cols, vals, a * x + b * z, n)
+    y_x, _ = run_both(rows, cols, vals, x, n)
+    y_z, _ = run_both(rows, cols, vals, z, n)
+    np.testing.assert_allclose(y_comb, a * y_x + b * y_z, rtol=1e-3, atol=1e-3)

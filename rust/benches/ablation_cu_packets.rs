@@ -1,0 +1,53 @@
+//! Ablation A3 (§IV-B): compute-unit count, packet width, and partition
+//! policy in the FPGA model.
+//!
+//! Sweeps CUs 1..8 (the paper ships 5 — bounded by the 32-port AXI switch:
+//! 5 CUs x (1 matrix + 5 replica channels) = 30), packet widths, and
+//! EqualRows vs BalancedNnz partitioning on a skewed power-law graph
+//! (where the paper's equal-rows scheme leaves bandwidth on the table).
+
+mod common;
+
+use topk_eigen::bench::BenchSuite;
+use topk_eigen::fpga::{FpgaTimingModel, U280};
+use topk_eigen::lanczos::ReorthPolicy;
+use topk_eigen::sparse::{imbalance, partition_rows_balanced, PartitionPolicy};
+
+fn main() {
+    let scale = common::bench_scale();
+    let k = 16;
+    let mut suite = BenchSuite::new("ablation_cu_packets", &format!("CU/packet/partition sweep, K={k} @1/{scale}"));
+    let (_, g) = common::small_suite(scale, &["WB-TA"]).pop().expect("graph"); // most skewed
+    let csr = g.to_csr();
+
+    for cus in 1..=8usize {
+        let model = FpgaTimingModel { cus, ..Default::default() };
+        for policy in [PartitionPolicy::EqualRows, PartitionPolicy::BalancedNnz] {
+            let shards = partition_rows_balanced(&csr, cus, policy);
+            let t = model.solve_time(csr.nrows, &shards, k, ReorthPolicy::EveryN(2), (k - 1) * 7);
+            let channels = cus * (1 + U280::VECTOR_REPLICAS);
+            suite.report(
+                &format!("cu{cus}/{policy:?}"),
+                &[
+                    ("total_s", t.total_s()),
+                    ("spmv_s", t.spmv_s),
+                    ("read_gbps", model.effective_read_gbps(&shards)),
+                    ("imbalance", imbalance(&shards)),
+                    ("axi_channels", channels as f64),
+                    ("fits_switch", if channels <= U280::HBM_AXI_CHANNELS { 1.0 } else { 0.0 }),
+                ],
+            );
+        }
+    }
+    // Packet-width sweep at the shipped 5-CU point.
+    for width in [1usize, 3, 5, 10, 15] {
+        let model = FpgaTimingModel { packet_nnz: width, ..Default::default() };
+        let shards = partition_rows_balanced(&csr, 5, PartitionPolicy::EqualRows);
+        let t = model.solve_time(csr.nrows, &shards, k, ReorthPolicy::EveryN(2), (k - 1) * 7);
+        suite.report(
+            &format!("packet{width}"),
+            &[("total_s", t.total_s()), ("spmv_s", t.spmv_s)],
+        );
+    }
+    suite.finish();
+}

@@ -1,0 +1,54 @@
+//! Future-work ablation (§VI): heterogeneous GPU+FPGA deployment vs the
+//! shipped FPGA-only design and a GPU-only alternative, across the Table
+//! II suite. Validates the paper's closing hypothesis: GPU bandwidth for
+//! the memory-bound SpMV phase + the FPGA systolic array for the
+//! compute-bound small-K Jacobi dominates both pure deployments.
+
+mod common;
+
+use topk_eigen::bench::BenchSuite;
+use topk_eigen::fpga::{compare_deployments, FpgaTimingModel, GpuModel};
+use topk_eigen::lanczos::ReorthPolicy;
+use topk_eigen::sparse::{partition_rows_balanced, PartitionPolicy};
+
+fn main() {
+    let scale = common::bench_scale();
+    let k = 16;
+    let mut suite = BenchSuite::new(
+        "ablation_hetero",
+        &format!("FPGA vs GPU+FPGA vs GPU deployments, K={k} @1/{scale} (modeled at published sizes)"),
+    );
+    let fpga = FpgaTimingModel::default();
+    let gpu = GpuModel::default();
+    // Model at the PUBLISHED graph sizes (the deployment question is about
+    // the real data-center workload, not the scaled twins): use catalog
+    // rows/nnz directly with balanced shards.
+    for e in topk_eigen::graphs::catalog() {
+        // Synthetic shard table at published nnz (balanced).
+        let g = e.generate(scale); // topology for the shard shape
+        let csr = g.to_csr();
+        let parts = partition_rows_balanced(&csr, 5, PartitionPolicy::BalancedNnz);
+        // Rescale shard nnz to the published size.
+        let factor = e.nnz as f64 / csr.nnz().max(1) as f64;
+        let shards: Vec<_> = parts
+            .iter()
+            .map(|p| topk_eigen::sparse::RowPartition {
+                row_start: p.row_start,
+                row_end: p.row_end,
+                nnz: (p.nnz as f64 * factor) as usize,
+            })
+            .collect();
+        let (f, h, gp) = compare_deployments(&fpga, &gpu, e.rows, &shards, k, ReorthPolicy::EveryN(2), (k - 1) * 7);
+        suite.report(
+            e.id,
+            &[
+                ("fpga_s", f.total_s()),
+                ("hybrid_s", h.total_s()),
+                ("gpu_s", gp.total_s()),
+                ("hybrid_vs_fpga", f.total_s() / h.total_s()),
+                ("hybrid_vs_gpu", gp.total_s() / h.total_s()),
+            ],
+        );
+    }
+    suite.finish();
+}

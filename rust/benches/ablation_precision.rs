@@ -1,0 +1,47 @@
+//! Ablation A2 (§IV, §V-C): arithmetic precision of the Lanczos datapath.
+//!
+//! The paper replaces float with fixed-point where the Frobenius
+//! normalization bounds values into (-1, 1). This ablation quantifies the
+//! accuracy cost across Q formats (f32 / Q1.31 / Q2.30 / Q1.15): tridiagonal
+//! drift vs the f32 reference and end-to-end Fig 11 metrics.
+
+mod common;
+
+use topk_eigen::bench::BenchSuite;
+use topk_eigen::coordinator::{verify, SolveOptions, Solver};
+use topk_eigen::fixed::Precision;
+use topk_eigen::lanczos::{lanczos, LanczosOptions, ReorthPolicy};
+
+fn main() {
+    let scale = common::bench_scale();
+    let k = 16;
+    let mut suite = BenchSuite::new("ablation_precision", &format!("fixed-point formats, K={k} @1/{scale}"));
+    for (e, g) in common::small_suite(scale, &["WB-GO", "IT"]) {
+        let csr = g.to_csr();
+        let reference = lanczos(&csr, &LanczosOptions { k, reorth: ReorthPolicy::EveryN(2), ..Default::default() });
+        for precision in [Precision::Float32, Precision::FixedQ1_31, Precision::FixedQ2_30, Precision::FixedQ1_15] {
+            let lz = lanczos(
+                &csr,
+                &LanczosOptions { k, reorth: ReorthPolicy::EveryN(2), precision, ..Default::default() },
+            );
+            // Tridiagonal drift vs f32.
+            let n_cmp = lz.tridiag.k().min(reference.tridiag.k());
+            let drift = (0..n_cmp)
+                .map(|i| (lz.tridiag.alpha[i] - reference.tridiag.alpha[i]).abs())
+                .fold(0.0f64, f64::max);
+            // End-to-end metrics.
+            let mut solver = Solver::new(SolveOptions { k, precision, ..Default::default() });
+            let sol = solver.solve(&g).expect("solve");
+            let r = verify::verify(&g, &sol);
+            suite.report(
+                &format!("{}/{}", e.id, precision.name()),
+                &[
+                    ("alpha_drift_vs_f32", drift),
+                    ("angle_deg", r.mean_angle_deg),
+                    ("mean_residual", r.mean_residual),
+                ],
+            );
+        }
+    }
+    suite.finish();
+}

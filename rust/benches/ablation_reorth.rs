@@ -1,0 +1,47 @@
+//! Ablation A1 (§III-A, §V-C): reorthogonalization policy.
+//!
+//! Measures the native solver's wall time and accuracy for reorth = none /
+//! every-2 / every, quantifying the O(n K^2 / 2) overhead the paper halves
+//! with the every-2 cadence, and the FPGA-model cost of the same choice.
+
+mod common;
+
+use topk_eigen::bench::{BenchConfig, BenchSuite};
+use topk_eigen::coordinator::{verify, SolveOptions, Solver};
+use topk_eigen::fpga::FpgaTimingModel;
+use topk_eigen::lanczos::ReorthPolicy;
+use topk_eigen::sparse::{partition_rows_balanced, PartitionPolicy};
+
+fn main() {
+    let scale = common::bench_scale();
+    let k = 24; // large K makes the reorth term visible
+    let mut suite = BenchSuite::new("ablation_reorth", &format!("reorth policy cost/accuracy, K={k} @1/{scale}"));
+    let model = FpgaTimingModel::default();
+    for (e, g) in common::small_suite(scale, &["WB-GO", "RC"]) {
+        let csr = g.to_csr();
+        let shards = partition_rows_balanced(&csr, 5, PartitionPolicy::EqualRows);
+        for policy in [ReorthPolicy::None, ReorthPolicy::EveryN(2), ReorthPolicy::Every] {
+            let mut last = None;
+            let mean_s = suite.bench(
+                &format!("{}/{}", e.id, policy.name()),
+                BenchConfig::default(),
+                || {
+                    let mut solver = Solver::new(SolveOptions { k, reorth: policy, ..Default::default() });
+                    last = Some(solver.solve(&g).expect("solve"));
+                },
+            );
+            let sol = last.unwrap();
+            let r = verify::verify(&g, &sol);
+            let fpga = model.solve_time(csr.nrows, &shards, k, policy, (k - 1) * 7);
+            suite.annotate(&[
+                ("native_s", mean_s),
+                ("fpga_model_s", fpga.total_s()),
+                ("fpga_reorth_share", fpga.reorth_s / fpga.total_s()),
+                ("angle_deg", r.mean_angle_deg),
+                ("max_cross_dot", r.max_cross_dot),
+                ("mean_residual", r.mean_residual),
+            ]);
+        }
+    }
+    suite.finish();
+}

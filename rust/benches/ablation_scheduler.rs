@@ -1,0 +1,55 @@
+//! Scheduling ablation: FIFO vs K-batched assignment over reconfigurable
+//! Jacobi cores (§IV-C's per-SLR reconfiguration), on mixed multi-tenant
+//! workloads. Reports makespan and reconfiguration counts; solve-time
+//! estimates come from the FPGA timing model on catalog twins.
+
+mod common;
+
+use topk_eigen::bench::BenchSuite;
+use topk_eigen::coordinator::scheduler::{schedule, CoreFarm, JobSpec, Policy};
+use topk_eigen::fpga::FpgaTimingModel;
+use topk_eigen::lanczos::ReorthPolicy;
+use topk_eigen::sparse::{partition_rows_balanced, PartitionPolicy};
+use topk_eigen::util::rng::Pcg64;
+
+fn main() {
+    let scale = common::bench_scale();
+    let mut suite = BenchSuite::new("ablation_scheduler", &format!("FIFO vs K-batched core scheduling @1/{scale}"));
+    let model = FpgaTimingModel::default();
+    let farm = CoreFarm::default();
+    let mut rng = Pcg64::new(7);
+
+    // Estimate solve times for a few catalog twins at each K class.
+    let graphs = common::small_suite(scale, &["WB-GO", "PA", "WK"]);
+    let mut estimates: Vec<(usize, f64)> = Vec::new(); // (k, solve_s)
+    for (_, g) in &graphs {
+        let csr = g.to_csr();
+        let shards = partition_rows_balanced(&csr, 5, PartitionPolicy::EqualRows);
+        for k in [4usize, 8, 16, 24, 32] {
+            let t = model.solve_time(csr.nrows, &shards, k, ReorthPolicy::EveryN(2), (k - 1) * 7);
+            estimates.push((k, t.total_s()));
+        }
+    }
+
+    for jobs_n in [16usize, 64, 256] {
+        let jobs: Vec<JobSpec> = (0..jobs_n)
+            .map(|_| {
+                let &(k, solve_s) = &estimates[rng.range(0, estimates.len())];
+                JobSpec { k, solve_s }
+            })
+            .collect();
+        let fifo = schedule(&farm, &jobs, Policy::Fifo).expect("fifo");
+        let batched = schedule(&farm, &jobs, Policy::KBatched).expect("batched");
+        suite.report(
+            &format!("jobs{jobs_n}"),
+            &[
+                ("fifo_makespan_s", fifo.makespan_s),
+                ("batched_makespan_s", batched.makespan_s),
+                ("speedup", fifo.makespan_s / batched.makespan_s),
+                ("fifo_reconfigs", fifo.reconfigs as f64),
+                ("batched_reconfigs", batched.reconfigs as f64),
+            ],
+        );
+    }
+    suite.finish();
+}

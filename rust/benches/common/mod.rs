@@ -1,0 +1,35 @@
+//! Shared helpers for the paper-reproduction benches.
+#![allow(dead_code)] // each bench binary uses a different subset
+
+use topk_eigen::graphs::{self, CatalogEntry};
+use topk_eigen::sparse::{normalize_frobenius, CooMatrix};
+
+/// Suite scale divisor: `TOPK_BENCH_SCALE` (default 512 — fast enough for
+/// CI-style runs; use 64 or lower for paper-shaped magnitudes).
+pub fn bench_scale() -> usize {
+    std::env::var("TOPK_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(512)
+}
+
+/// Generate the Frobenius-normalized synthetic twin for one catalog entry.
+pub fn twin(e: &CatalogEntry, scale: usize) -> CooMatrix {
+    let mut g = e.generate(scale);
+    normalize_frobenius(&mut g);
+    g
+}
+
+/// The full Table II suite at the bench scale.
+pub fn suite(scale: usize) -> Vec<(CatalogEntry, CooMatrix)> {
+    graphs::catalog().into_iter().map(|e| (e.clone(), twin(&e, scale))).collect()
+}
+
+/// A reduced suite for the more expensive benches.
+pub fn small_suite(scale: usize, ids: &[&str]) -> Vec<(CatalogEntry, CooMatrix)> {
+    graphs::catalog()
+        .into_iter()
+        .filter(|e| ids.contains(&e.id))
+        .map(|e| {
+            let g = twin(&e, scale);
+            (e, g)
+        })
+        .collect()
+}

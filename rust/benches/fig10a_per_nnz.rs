@@ -1,0 +1,51 @@
+//! Fig 10a: time to process a single matrix value vs graph size.
+//!
+//! The paper's claim: the FPGA's per-nnz time is flat across graphs
+//! (bandwidth-bound streaming), while the CPU's is erratic (cache
+//! behaviour, restart counts). Reported as ns/nnz for both.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+use topk_eigen::bench::BenchSuite;
+use topk_eigen::fpga::FpgaTimingModel;
+use topk_eigen::iram::{iram, IramOptions};
+use topk_eigen::lanczos::ShardedSpmv;
+use topk_eigen::sparse::{partition_rows_balanced, PartitionPolicy};
+use topk_eigen::util::pool::ThreadPool;
+
+fn main() {
+    let scale = common::bench_scale();
+    let k = 16;
+    let mut suite = BenchSuite::new("fig10a", &format!("per-nnz processing time, K={k}, suite @1/{scale}"));
+    let model = FpgaTimingModel::default();
+    let pool = Arc::new(ThreadPool::with_default_parallelism());
+    let mut fpga_per_nnz = Vec::new();
+
+    for (e, g) in common::suite(scale) {
+        let csr = Arc::new(g.to_csr());
+        let op = ShardedSpmv::new(Arc::clone(&csr), pool.size(), PartitionPolicy::BalancedNnz, Arc::clone(&pool));
+        let t0 = Instant::now();
+        let _ = iram(&op, &IramOptions { k, tol: 1e-6, ..Default::default() });
+        let cpu_s = t0.elapsed().as_secs_f64();
+        let shards = partition_rows_balanced(&csr, 5, PartitionPolicy::EqualRows);
+        let fpga = model
+            .solve_time(csr.nrows, &shards, k, topk_eigen::lanczos::ReorthPolicy::EveryN(2), (k - 1) * 7)
+            .total_s();
+        let nnz = csr.nnz() as f64;
+        fpga_per_nnz.push(fpga / nnz * 1e9);
+        suite.report(
+            e.id,
+            &[
+                ("nnz", nnz),
+                ("cpu_ns_per_nnz", cpu_s / nnz * 1e9),
+                ("fpga_ns_per_nnz", fpga / nnz * 1e9),
+            ],
+        );
+    }
+    // The flatness claim, quantified: max/min spread of the FPGA line.
+    let (min, max) = fpga_per_nnz.iter().fold((f64::MAX, 0.0f64), |(lo, hi), &v| (lo.min(v), hi.max(v)));
+    suite.report("fpga-flatness", &[("max_over_min", max / min)]);
+    suite.finish();
+}

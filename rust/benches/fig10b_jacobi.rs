@@ -1,0 +1,52 @@
+//! Fig 10b: speedup of the systolic-array Jacobi over an optimized CPU
+//! implementation, for growing K.
+//!
+//! CPU side: measured cyclic Jacobi (exact trig, the paper's "optimized
+//! C++ CPU implementation" role). FPGA side: constant-time steps at
+//! 225 MHz with the *measured* step count of the systolic schedule. The
+//! paper's claim is quadratic CPU growth vs near-flat FPGA time.
+
+mod common;
+
+use topk_eigen::bench::{BenchConfig, BenchSuite};
+use topk_eigen::fpga::{FpgaTimingModel, U280};
+use topk_eigen::jacobi::{cyclic_jacobi, systolic_jacobi, TrigMode};
+use topk_eigen::linalg::Tridiagonal;
+use topk_eigen::util::rng::Pcg64;
+
+fn main() {
+    let mut suite = BenchSuite::new("fig10b", "systolic-vs-CPU Jacobi for growing K");
+    let model = FpgaTimingModel::default();
+    let mut rng = Pcg64::new(99);
+    for k in [4usize, 8, 12, 16, 20, 24, 32] {
+        let t = Tridiagonal::new(
+            (0..k).map(|_| rng.f64_range(-1.0, 1.0)).collect(),
+            (0..k - 1).map(|_| rng.f64_range(-1.0, 1.0)).collect(),
+        );
+        let dense = t.to_dense();
+        let cpu_s = {
+            let mut s = BenchConfig::default();
+            s.iters = s.iters.max(10);
+            // measure inline to keep the row's metric columns together
+            let iters = 100;
+            let t0 = std::time::Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(cyclic_jacobi(&dense, TrigMode::Exact, 1e-10, 100));
+            }
+            t0.elapsed().as_secs_f64() / iters as f64
+        };
+        let (_, _, stats) = systolic_jacobi(&dense, TrigMode::Taylor3, 1e-9, 100);
+        let fpga_s = model.jacobi_cycles(k, stats.steps) as f64 / U280::CLOCK_HZ;
+        suite.report(
+            &format!("K{k}"),
+            &[
+                ("cpu_us", cpu_s * 1e6),
+                ("fpga_us", fpga_s * 1e6),
+                ("speedup", cpu_s / fpga_s),
+                ("sa_steps", stats.steps as f64),
+                ("sa_sweeps", stats.sweeps as f64),
+            ],
+        );
+    }
+    suite.finish();
+}

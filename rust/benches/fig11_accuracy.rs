@@ -1,0 +1,47 @@
+//! Fig 11: accuracy of the approximate eigencomputation for increasing K —
+//! eigenvector pairwise orthogonality (degrees; ideal 90) and
+//! reconstruction error ||Mv - lambda v|| on the normalized operator,
+//! with and without reorthogonalization-every-2, on the fixed-point
+//! (Q1.31) Lanczos datapath exactly like the hardware.
+
+mod common;
+
+use topk_eigen::bench::BenchSuite;
+use topk_eigen::coordinator::{verify, SolveOptions, Solver};
+use topk_eigen::fixed::Precision;
+use topk_eigen::lanczos::ReorthPolicy;
+
+fn main() {
+    let scale = common::bench_scale();
+    let mut suite = BenchSuite::new("fig11", &format!("accuracy vs K and reorth policy @1/{scale}"));
+    let graphs = common::small_suite(scale, &["WB-GO", "IT", "PA", "FL"]);
+    for k in [8usize, 12, 16, 20, 24] {
+        for policy in [ReorthPolicy::EveryN(2), ReorthPolicy::None] {
+            let (mut angle, mut resid, mut max_resid) = (0.0, 0.0, 0.0f64);
+            for (_, g) in &graphs {
+                let mut solver = Solver::new(SolveOptions {
+                    k,
+                    reorth: policy,
+                    precision: Precision::FixedQ1_31,
+                    ..Default::default()
+                });
+                let sol = solver.solve(g).expect("solve");
+                let r = verify::verify(g, &sol);
+                angle += r.mean_angle_deg;
+                resid += r.mean_residual;
+                max_resid = max_resid.max(r.max_residual);
+            }
+            let n = graphs.len() as f64;
+            suite.report(
+                &format!("K{k}/{}", policy.name()),
+                &[
+                    ("angle_deg", angle / n),
+                    ("mean_residual", resid / n),
+                    ("max_residual", max_resid),
+                ],
+            );
+        }
+    }
+    suite.report("paper-thresholds", &[("angle_deg", 89.9), ("mean_residual", 1e-3)]);
+    suite.finish();
+}

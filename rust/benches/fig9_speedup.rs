@@ -1,0 +1,68 @@
+//! Fig 9: speedup of the FPGA design over the ARPACK-class CPU baseline,
+//! per graph and K, with the geomean (excluding HT) the paper headlines
+//! as 6.22x.
+//!
+//! CPU time is *measured* (thick-restart Lanczos, SpMV on all host cores —
+//! the paper's baseline is 80-thread ARPACK); FPGA time comes from the
+//! U280 timing model fed with the measured systolic step count (DESIGN.md,
+//! hardware-substitution table).
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+use topk_eigen::bench::BenchSuite;
+use topk_eigen::fpga::FpgaTimingModel;
+use topk_eigen::iram::{iram, IramOptions};
+use topk_eigen::jacobi::{systolic_jacobi, TrigMode};
+use topk_eigen::lanczos::{lanczos, LanczosOptions, ReorthPolicy, ShardedSpmv};
+use topk_eigen::sparse::{partition_rows_balanced, PartitionPolicy};
+use topk_eigen::util::pool::ThreadPool;
+use topk_eigen::util::timer::geomean;
+
+fn main() {
+    let scale = common::bench_scale();
+    let mut suite = BenchSuite::new("fig9", &format!("FPGA-vs-CPU speedup, Table II suite @1/{scale}"));
+    let model = FpgaTimingModel::default();
+    let pool = Arc::new(ThreadPool::with_default_parallelism());
+    let mut speedups: Vec<(usize, String, f64)> = Vec::new();
+
+    for (e, g) in common::suite(scale) {
+        let csr = Arc::new(g.to_csr());
+        for k in [8usize, 16, 24] {
+            let label = format!("{}/K{k}", e.id);
+            // Measured multi-core CPU baseline.
+            let op = ShardedSpmv::new(Arc::clone(&csr), pool.size(), PartitionPolicy::BalancedNnz, Arc::clone(&pool));
+            let t0 = Instant::now();
+            let _ = iram(&op, &IramOptions { k, tol: 1e-6, ..Default::default() });
+            let cpu_s = t0.elapsed().as_secs_f64();
+            // Modeled FPGA time with measured systolic steps.
+            let shards = partition_rows_balanced(&csr, 5, PartitionPolicy::EqualRows);
+            let lz = lanczos(csr.as_ref(), &LanczosOptions { k, reorth: ReorthPolicy::EveryN(2), ..Default::default() });
+            let (_, _, stats) = systolic_jacobi(&lz.tridiag.to_dense(), TrigMode::Taylor3, 1e-9, 100);
+            let fpga = model.solve_time(csr.nrows, &shards, k, ReorthPolicy::EveryN(2), stats.steps);
+            let speedup = cpu_s / fpga.total_s();
+            suite.report(
+                &label,
+                &[
+                    ("cpu_s", cpu_s),
+                    ("fpga_s", fpga.total_s()),
+                    ("speedup", speedup),
+                    ("nnz", csr.nnz() as f64),
+                ],
+            );
+            speedups.push((k, e.id.to_string(), speedup));
+        }
+    }
+    for k in [8usize, 16, 24] {
+        let v: Vec<f64> = speedups
+            .iter()
+            .filter(|(kk, id, _)| *kk == k && id != "HT")
+            .map(|(_, _, s)| *s)
+            .collect();
+        suite.report(&format!("geomean/K{k} (excl HT)"), &[("speedup", geomean(&v))]);
+    }
+    let all: Vec<f64> = speedups.iter().filter(|(_, id, _)| id != "HT").map(|(_, _, s)| *s).collect();
+    suite.report("geomean/all (excl HT)", &[("speedup", geomean(&all)), ("paper", 6.22)]);
+    suite.finish();
+}

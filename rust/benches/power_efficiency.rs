@@ -1,0 +1,53 @@
+//! §V-B: power efficiency. The paper reports 49x Perf/Watt vs the CPU
+//! (24x including the FPGA host server), from meter readings of 38 W
+//! (card), 40 W (host), ~300 W (CPU). We reproduce that arithmetic with
+//! measured CPU times and modeled FPGA times per graph.
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Instant;
+use topk_eigen::bench::BenchSuite;
+use topk_eigen::fpga::{FpgaTimingModel, PowerModel};
+use topk_eigen::iram::{iram, IramOptions};
+use topk_eigen::lanczos::{ReorthPolicy, ShardedSpmv};
+use topk_eigen::sparse::{partition_rows_balanced, PartitionPolicy};
+use topk_eigen::util::pool::ThreadPool;
+use topk_eigen::util::timer::geomean;
+
+fn main() {
+    let scale = common::bench_scale();
+    let mut suite = BenchSuite::new("power", &format!("Perf/Watt vs CPU @1/{scale} (paper: 49x / 24x)"));
+    let model = FpgaTimingModel::default();
+    let power = PowerModel::default();
+    let pool = Arc::new(ThreadPool::with_default_parallelism());
+    let k = 16;
+    let mut gains = Vec::new();
+    let mut gains_host = Vec::new();
+    for (e, g) in common::small_suite(scale, &["WB-GO", "FL", "PA", "ASIA", "WK", "WB"]) {
+        let csr = Arc::new(g.to_csr());
+        let op = ShardedSpmv::new(Arc::clone(&csr), pool.size(), PartitionPolicy::BalancedNnz, Arc::clone(&pool));
+        let t0 = Instant::now();
+        let _ = iram(&op, &IramOptions { k, tol: 1e-6, ..Default::default() });
+        let cpu_s = t0.elapsed().as_secs_f64();
+        let shards = partition_rows_balanced(&csr, 5, PartitionPolicy::EqualRows);
+        let fpga_s = model.solve_time(csr.nrows, &shards, k, ReorthPolicy::EveryN(2), (k - 1) * 7).total_s();
+        let r = power.compare(fpga_s, cpu_s);
+        gains.push(r.perf_per_watt_gain);
+        gains_host.push(r.perf_per_watt_gain_with_host);
+        suite.report(
+            e.id,
+            &[
+                ("cpu_energy_j", r.cpu_energy_j),
+                ("fpga_energy_j", r.fpga_energy_j),
+                ("perf_per_watt", r.perf_per_watt_gain),
+                ("with_host", r.perf_per_watt_gain_with_host),
+            ],
+        );
+    }
+    suite.report(
+        "geomean",
+        &[("perf_per_watt", geomean(&gains)), ("with_host", geomean(&gains_host)), ("paper", 49.0), ("paper_with_host", 24.0)],
+    );
+    suite.finish();
+}

@@ -1,0 +1,54 @@
+//! SpMV microbenchmark: the L3 hot path in isolation.
+//!
+//! Measures the native CSR-stripe engine's scaling across CU worker counts
+//! and partition policies, plus the PJRT artifact path when artifacts are
+//! present (skipped with a notice otherwise). This is the §Perf workhorse.
+
+mod common;
+
+use std::sync::Arc;
+use topk_eigen::bench::{BenchConfig, BenchSuite};
+use topk_eigen::lanczos::{Operator, ShardedSpmv};
+use topk_eigen::runtime::{ArtifactRegistry, PjrtSpmv, Runtime};
+use topk_eigen::sparse::PartitionPolicy;
+use topk_eigen::util::pool::ThreadPool;
+
+fn main() {
+    let scale = common::bench_scale();
+    let mut suite = BenchSuite::new("spmv_micro", &format!("SpMV engine scaling @1/{scale}"));
+    let (_, g) = common::small_suite(scale, &["WB"]).pop().expect("graph");
+    let csr = Arc::new(g.to_csr());
+    let x: Vec<f32> = (0..csr.nrows).map(|i| ((i * 2654435761) % 1000) as f32 / 1000.0 - 0.5).collect();
+    let mut y = vec![0.0f32; csr.nrows];
+    let nnz = csr.nnz() as f64;
+    let cfg = BenchConfig { warmup: 2, iters: 10 };
+
+    // Single-threaded reference.
+    let mean = suite.bench("serial", cfg, || csr.spmv_into(&x, &mut y, 0, csr.nrows));
+    suite.annotate(&[("gflops", 2.0 * nnz / mean / 1e9), ("gbps_csr", (nnz * 8.0 + csr.nrows as f64 * 8.0) / mean / 1e9)]);
+    let serial = mean;
+
+    for cus in [1usize, 2, 4, 5, 8] {
+        let pool = Arc::new(ThreadPool::new(cus));
+        for policy in [PartitionPolicy::EqualRows, PartitionPolicy::BalancedNnz] {
+            let op = ShardedSpmv::new(Arc::clone(&csr), cus, policy, Arc::clone(&pool));
+            let mean = suite.bench(&format!("sharded/cu{cus}/{policy:?}"), cfg, || op.apply(&x, &mut y));
+            suite.annotate(&[("speedup_vs_serial", serial / mean), ("gflops", 2.0 * nnz / mean / 1e9)]);
+        }
+    }
+
+    // PJRT artifact path (requires `make artifacts`).
+    let coo = csr.to_coo();
+    if ArtifactRegistry::pick_spmv(coo.nrows, coo.nnz()).is_some() {
+        match Runtime::cpu().map(Arc::new).and_then(|rt| PjrtSpmv::new(rt, &coo)) {
+            Ok(op) => {
+                let mean = suite.bench("pjrt", cfg, || op.apply(&x, &mut y));
+                suite.annotate(&[("speedup_vs_serial", serial / mean)]);
+            }
+            Err(e) => println!("pjrt path skipped: {e} (run `make artifacts`)"),
+        }
+    } else {
+        println!("pjrt path skipped: no artifact variant fits n={} nnz={}", coo.nrows, coo.nnz());
+    }
+    suite.finish();
+}

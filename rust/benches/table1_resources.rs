@@ -1,0 +1,45 @@
+//! Table I: resource usage and clock frequency of the hardware design,
+//! from the calibrated U280 resource model, plus the scaling claims of
+//! §IV-C (quadratic in K; K=32 is the practical ceiling).
+
+use topk_eigen::bench::BenchSuite;
+use topk_eigen::fpga::{jacobi_core_resources, lanczos_core_resources, SlrBudget, U280};
+
+fn main() {
+    let mut suite = BenchSuite::new("table1", "U280 resource model (percent of one SLR)");
+    let rows = [
+        ("SLR0/Lanczos-5CU", lanczos_core_resources(5)),
+        ("SLR1/Jacobi-K32", jacobi_core_resources(32)),
+        (
+            "SLR2/Jacobi-2xK16",
+            jacobi_core_resources(16).plus(jacobi_core_resources(16)),
+        ),
+    ];
+    for (name, u) in rows {
+        let (lut, ff, bram, uram, dsp) = SlrBudget::utilization_pct(u);
+        suite.report(
+            name,
+            &[
+                ("lut_pct", lut),
+                ("ff_pct", ff),
+                ("bram_pct", bram),
+                ("uram_pct", uram),
+                ("dsp_pct", dsp),
+                ("clock_mhz", U280::CLOCK_HZ / 1e6),
+            ],
+        );
+    }
+    // Paper row for comparison.
+    suite.report("paper/SLR0", &[("lut_pct", 42.0), ("ff_pct", 13.0), ("bram_pct", 15.0), ("uram_pct", 0.0), ("dsp_pct", 16.0)]);
+    suite.report("paper/SLR1", &[("lut_pct", 40.0), ("ff_pct", 42.0), ("bram_pct", 0.0), ("uram_pct", 0.0), ("dsp_pct", 68.0)]);
+    suite.report("paper/SLR2", &[("lut_pct", 15.0), ("ff_pct", 17.0), ("bram_pct", 0.0), ("uram_pct", 0.0), ("dsp_pct", 34.0)]);
+    // Scaling: DSP cost quadruples per K doubling; K=64 does not fit.
+    for k in [4usize, 8, 16, 32, 64] {
+        let u = jacobi_core_resources(k);
+        suite.report(
+            &format!("scaling/K{k}"),
+            &[("dsp", u.dsp as f64), ("fits_slr", if SlrBudget::fits(u) { 1.0 } else { 0.0 })],
+        );
+    }
+    suite.finish();
+}

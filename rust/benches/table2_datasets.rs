@@ -1,0 +1,32 @@
+//! Table II: the evaluation suite — published sizes next to the generated
+//! synthetic twins (rows, nnz, sparsity, COO footprint), plus generation
+//! time so dataset prep is accounted for.
+
+mod common;
+
+use topk_eigen::bench::{BenchConfig, BenchSuite};
+use topk_eigen::graphs;
+
+fn main() {
+    let scale = common::bench_scale();
+    let mut suite = BenchSuite::new("table2", &format!("dataset suite @1/{scale} (published vs generated)"));
+    for e in graphs::catalog() {
+        let mut generated = None;
+        let mean_s = suite.bench(e.id, BenchConfig { warmup: 0, iters: 1 }, || {
+            generated = Some(e.generate(scale));
+        });
+        let g = generated.unwrap();
+        suite.annotate(&[
+            ("pub_rows", e.rows as f64),
+            ("pub_nnz", e.nnz as f64),
+            ("pub_sparsity_pct", e.sparsity_pct()),
+            ("pub_size_gb", e.size_gb()),
+            ("gen_rows", g.nrows as f64),
+            ("gen_nnz", g.nnz() as f64),
+            ("gen_density", g.density()),
+            ("gen_mb", g.size_bytes() as f64 / 1e6),
+            ("gen_s", mean_s),
+        ]);
+    }
+    suite.finish();
+}

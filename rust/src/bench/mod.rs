@@ -1,0 +1,208 @@
+//! Benchmark harness (offline substitute for `criterion`).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that builds a
+//! [`BenchSuite`], registers measurements, and calls [`BenchSuite::finish`]
+//! to print a table and (optionally, `TOPK_BENCH_JSON=path`) dump a JSON
+//! report. Warmup + repeated timed iterations with mean/stddev/median,
+//! like criterion's default estimator but with an explicit row model so
+//! a bench can also report *derived* quantities (speedups, error norms,
+//! modelled FPGA times) — which is what reproducing paper tables needs.
+
+use crate::util::json::Json;
+use crate::util::timer::{fmt_duration, Stats};
+use std::time::Instant;
+
+/// Measurement configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Warmup iterations (not recorded).
+    pub warmup: usize,
+    /// Recorded iterations.
+    pub iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // Keep defaults modest: paper-scale workloads run seconds each.
+        // Override per-call or with TOPK_BENCH_ITERS.
+        let iters = std::env::var("TOPK_BENCH_ITERS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+        Self { warmup: 1, iters }
+    }
+}
+
+/// One reported row: a label, measured stats, and free-form metric columns.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    /// Row label (e.g. graph ID, K value).
+    pub label: String,
+    /// Wall-time stats (empty if the row only carries metrics).
+    pub time: Stats,
+    /// Extra named columns (speedup, error, GB/s, ...), in insertion order.
+    pub metrics: Vec<(String, f64)>,
+}
+
+/// A named collection of rows, printed as one table.
+pub struct BenchSuite {
+    name: String,
+    description: String,
+    rows: Vec<BenchRow>,
+    started: Instant,
+}
+
+impl BenchSuite {
+    /// New suite; `name` should match the paper artifact (e.g. "fig9").
+    pub fn new(name: &str, description: &str) -> Self {
+        println!("\n=== {name}: {description} ===");
+        Self {
+            name: name.to_string(),
+            description: description.to_string(),
+            rows: Vec::new(),
+            started: Instant::now(),
+        }
+    }
+
+    /// Time `f` with warmup and record a row. Returns mean seconds.
+    pub fn bench<T>(&mut self, label: &str, cfg: BenchConfig, mut f: impl FnMut() -> T) -> f64 {
+        for _ in 0..cfg.warmup {
+            std::hint::black_box(f());
+        }
+        let mut stats = Stats::new();
+        for _ in 0..cfg.iters.max(1) {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            stats.push(t0.elapsed().as_secs_f64());
+        }
+        let mean = stats.mean();
+        self.rows.push(BenchRow { label: label.to_string(), time: stats, metrics: Vec::new() });
+        mean
+    }
+
+    /// Record a metrics-only row (for modelled quantities).
+    pub fn report(&mut self, label: &str, metrics: &[(&str, f64)]) {
+        self.rows.push(BenchRow {
+            label: label.to_string(),
+            time: Stats::new(),
+            metrics: metrics.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        });
+    }
+
+    /// Attach metrics to the most recent row.
+    pub fn annotate(&mut self, metrics: &[(&str, f64)]) {
+        if let Some(row) = self.rows.last_mut() {
+            row.metrics.extend(metrics.iter().map(|(k, v)| (k.to_string(), *v)));
+        }
+    }
+
+    /// Print the table and optionally write JSON; returns the rows.
+    pub fn finish(self) -> Vec<BenchRow> {
+        // Collect the union of metric columns, preserving first-seen order.
+        let mut cols: Vec<String> = Vec::new();
+        for r in &self.rows {
+            for (k, _) in &r.metrics {
+                if !cols.iter().any(|c| c == k) {
+                    cols.push(k.clone());
+                }
+            }
+        }
+        let has_time = self.rows.iter().any(|r| r.time.count() > 0);
+        // Header.
+        print!("{:<24}", "case");
+        if has_time {
+            print!(" {:>12} {:>12}", "time(mean)", "stddev");
+        }
+        for c in &cols {
+            print!(" {c:>16}");
+        }
+        println!();
+        for r in &self.rows {
+            print!("{:<24}", r.label);
+            if has_time {
+                if r.time.count() > 0 {
+                    print!(" {:>12} {:>12}", fmt_duration(r.time.mean()), fmt_duration(r.time.stddev()));
+                } else {
+                    print!(" {:>12} {:>12}", "-", "-");
+                }
+            }
+            for c in &cols {
+                match r.metrics.iter().find(|(k, _)| k == c) {
+                    Some((_, v)) => print!(" {v:>16.6}"),
+                    None => print!(" {:>16}", "-"),
+                }
+            }
+            println!();
+        }
+        println!(
+            "--- {} rows in {:.1}s ---",
+            self.rows.len(),
+            self.started.elapsed().as_secs_f64()
+        );
+
+        if let Ok(path) = std::env::var("TOPK_BENCH_JSON") {
+            let rows_json: Vec<Json> = self
+                .rows
+                .iter()
+                .map(|r| {
+                    let mut o = Json::obj().set("label", r.label.as_str());
+                    if r.time.count() > 0 {
+                        o = o
+                            .set("time_mean_s", r.time.mean())
+                            .set("time_stddev_s", r.time.stddev())
+                            .set("time_median_s", r.time.median());
+                    }
+                    for (k, v) in &r.metrics {
+                        o = o.set(k, *v);
+                    }
+                    o
+                })
+                .collect();
+            let doc = Json::obj()
+                .set("suite", self.name.as_str())
+                .set("description", self.description.as_str())
+                .set("rows", Json::Arr(rows_json));
+            // Append one JSON document per line (JSONL) so multiple suites
+            // can share a report file.
+            use std::io::Write;
+            if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+                let _ = writeln!(f, "{}", doc.to_string());
+            }
+        }
+        self.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_rows_and_returns_mean() {
+        let mut s = BenchSuite::new("test", "harness smoke");
+        let mean = s.bench("sleepless", BenchConfig { warmup: 1, iters: 3 }, || {
+            std::hint::black_box((0..10_000).sum::<usize>())
+        });
+        assert!(mean >= 0.0);
+        s.report("modelled", &[("speedup", 6.22)]);
+        s.annotate(&[("extra", 1.0)]);
+        let rows = s.finish();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].time.count(), 3);
+        assert_eq!(rows[1].metrics[0], ("speedup".to_string(), 6.22));
+        assert_eq!(rows[1].metrics[1], ("extra".to_string(), 1.0));
+    }
+
+    #[test]
+    fn json_report_is_written() {
+        let dir = std::env::temp_dir().join("topk-bench-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("report.jsonl");
+        let _ = std::fs::remove_file(&path);
+        std::env::set_var("TOPK_BENCH_JSON", &path);
+        let mut s = BenchSuite::new("jsontest", "json output");
+        s.report("row", &[("x", 1.5)]);
+        s.finish();
+        std::env::remove_var("TOPK_BENCH_JSON");
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.contains("\"suite\":\"jsontest\""), "{content}");
+        assert!(content.contains("\"x\":1.5"));
+    }
+}

@@ -1,0 +1,206 @@
+//! Multi-tenant eigensolver service — the data-center deployment shape the
+//! paper motivates (§I: "applications on top of Top-K eigenproblem are
+//! mostly encountered in data centers").
+//!
+//! A leader thread owns a FIFO job queue; worker threads (one per
+//! configured solver replica, mirroring the paper's multiple Jacobi cores
+//! per SLR) pull jobs, run the two-phase solver, and deliver results
+//! through per-job channels. Shutdown is graceful: pending jobs drain
+//! unless `abort` is requested.
+
+use crate::coordinator::{SolveOptions, Solution, Solver};
+use crate::sparse::CooMatrix;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A submitted eigenproblem.
+pub struct Job {
+    /// Client-assigned identifier.
+    pub id: u64,
+    /// The matrix to decompose.
+    pub matrix: CooMatrix,
+    /// Per-job solve options.
+    pub opts: SolveOptions,
+    reply: Sender<JobResult>,
+}
+
+/// Result delivered to the submitter.
+#[derive(Debug)]
+pub struct JobResult {
+    /// Job identifier.
+    pub id: u64,
+    /// Solution or an error string (solver errors must not kill workers).
+    pub outcome: Result<Solution, String>,
+    /// Queue wait time in seconds.
+    pub queued_s: f64,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<(Job, std::time::Instant)>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Handle returned by [`EigenService::submit`]; await with `recv`.
+pub struct Ticket {
+    rx: Receiver<JobResult>,
+}
+
+impl Ticket {
+    /// Block until the job completes.
+    pub fn wait(self) -> JobResult {
+        self.rx.recv().expect("service dropped without reply")
+    }
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<JobResult> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// The service: leader queue + solver worker replicas.
+pub struct EigenService {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+    completed: Arc<AtomicU64>,
+}
+
+impl EigenService {
+    /// Start `replicas` solver workers.
+    pub fn start(replicas: usize) -> Self {
+        assert!(replicas >= 1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let completed = Arc::new(AtomicU64::new(0));
+        let mut workers = Vec::with_capacity(replicas);
+        for w in 0..replicas {
+            let shared = Arc::clone(&shared);
+            let completed = Arc::clone(&completed);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("eigen-worker-{w}"))
+                    .spawn(move || loop {
+                        let item = {
+                            let mut q = shared.queue.lock().unwrap();
+                            loop {
+                                if let Some(item) = q.pop_front() {
+                                    break Some(item);
+                                }
+                                if shared.shutdown.load(Ordering::SeqCst) {
+                                    break None;
+                                }
+                                q = shared.available.wait(q).unwrap();
+                            }
+                        };
+                        let Some((job, enqueued)) = item else { break };
+                        let queued_s = enqueued.elapsed().as_secs_f64();
+                        // A panicking solve must not take the worker down.
+                        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            Solver::new(job.opts.clone()).solve(&job.matrix)
+                        }));
+                        let outcome = match outcome {
+                            Ok(Ok(sol)) => Ok(sol),
+                            Ok(Err(e)) => Err(e.to_string()),
+                            Err(_) => Err("solver panicked".to_string()),
+                        };
+                        completed.fetch_add(1, Ordering::SeqCst);
+                        let _ = job.reply.send(JobResult { id: job.id, outcome, queued_s });
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        Self { shared, workers, next_id: AtomicU64::new(1), completed }
+    }
+
+    /// Enqueue a job; returns a [`Ticket`] to await the result.
+    pub fn submit(&self, matrix: CooMatrix, opts: SolveOptions) -> (u64, Ticket) {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = channel();
+        let job = Job { id, matrix, opts, reply: tx };
+        self.shared.queue.lock().unwrap().push_back((job, std::time::Instant::now()));
+        self.shared.available.notify_one();
+        (id, Ticket { rx })
+    }
+
+    /// Jobs finished so far.
+    pub fn completed(&self) -> u64 {
+        self.completed.load(Ordering::SeqCst)
+    }
+
+    /// Current queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Drain the queue and stop workers.
+    pub fn shutdown(mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for EigenService {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphs;
+
+    #[test]
+    fn serves_concurrent_jobs() {
+        let svc = EigenService::start(3);
+        let mut tickets = Vec::new();
+        for seed in 0..6u64 {
+            let m = graphs::mesh2d(12, 12, 0.9, 0.02, seed);
+            let (id, t) = svc.submit(m, SolveOptions { k: 4, ..Default::default() });
+            tickets.push((id, t));
+        }
+        for (id, t) in tickets {
+            let r = t.wait();
+            assert_eq!(r.id, id);
+            let sol = r.outcome.expect("solve failed");
+            assert_eq!(sol.k(), 4);
+            assert!(r.queued_s >= 0.0);
+        }
+        assert_eq!(svc.completed(), 6);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn bad_job_reports_error_without_killing_worker() {
+        let svc = EigenService::start(1);
+        // Non-square matrix -> error, not a dead worker.
+        let bad = CooMatrix::new(4, 5);
+        let (_, t1) = svc.submit(bad, SolveOptions::default());
+        assert!(t1.wait().outcome.is_err());
+        // Worker must still serve the next job.
+        let good = graphs::mesh2d(8, 8, 0.9, 0.02, 1);
+        let (_, t2) = svc.submit(good, SolveOptions { k: 2, ..Default::default() });
+        assert!(t2.wait().outcome.is_ok());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_with_empty_queue_is_clean() {
+        let svc = EigenService::start(2);
+        assert_eq!(svc.queue_depth(), 0);
+        svc.shutdown();
+    }
+}

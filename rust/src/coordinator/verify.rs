@@ -1,0 +1,115 @@
+//! Solution verification — the paper's Fig 11 accuracy metrics (§V-C).
+//!
+//! * **Orthogonality**: eigenvectors must form an orthonormal basis; we
+//!   report the mean pairwise angle in degrees (ideal 90, paper reports
+//!   > 89.9 with reorth-every-2).
+//! * **Reconstruction error**: mean `||M v - lambda v||_2` over the K
+//!   pairs (paper reports < 1e-3 on normalized matrices).
+//!
+//! Note the convention: the paper measures on the *Frobenius-normalized*
+//! operator, so `verify` renormalizes internally before computing
+//! residuals — otherwise the metric would scale with `||M||_F` and be
+//! incomparable across graphs.
+
+use crate::coordinator::Solution;
+use crate::linalg::{self, mean_pairwise_angle_deg};
+use crate::sparse::CooMatrix;
+
+/// Accuracy report for one solution.
+#[derive(Clone, Copy, Debug)]
+pub struct VerifyReport {
+    /// Mean pairwise angle between eigenvectors, degrees (ideal: 90).
+    pub mean_angle_deg: f64,
+    /// Worst pairwise |dot| between distinct eigenvectors.
+    pub max_cross_dot: f64,
+    /// Mean `||Mv - lambda v||` on the normalized operator.
+    pub mean_residual: f64,
+    /// Max residual across pairs.
+    pub max_residual: f64,
+}
+
+/// Compute Fig 11 metrics for `sol` against the original matrix.
+pub fn verify(matrix: &CooMatrix, sol: &Solution) -> VerifyReport {
+    let k = sol.k();
+    assert!(k >= 1, "empty solution");
+    // Orthogonality.
+    let mean_angle_deg = mean_pairwise_angle_deg(&sol.eigenvectors);
+    let mut max_cross_dot = 0.0f64;
+    for i in 0..k {
+        for j in 0..i {
+            max_cross_dot = max_cross_dot.max(linalg::dot(&sol.eigenvectors[i], &sol.eigenvectors[j]).abs());
+        }
+    }
+    // Residuals on the normalized operator: lambda_norm = lambda / ||M||_F.
+    let inv_fro = 1.0 / sol.frobenius_norm;
+    let mut mean_residual = 0.0f64;
+    let mut max_residual = 0.0f64;
+    for (lambda, v) in sol.pairs() {
+        let mv = matrix.spmv_ref(v);
+        let lam_n = lambda * inv_fro;
+        let mut r2 = 0.0f64;
+        for (mvi, vi) in mv.iter().zip(v) {
+            let d = *mvi as f64 * inv_fro - lam_n * *vi as f64;
+            r2 += d * d;
+        }
+        let r = r2.sqrt();
+        mean_residual += r;
+        max_residual = max_residual.max(r);
+    }
+    mean_residual /= k as f64;
+    VerifyReport { mean_angle_deg, max_cross_dot, mean_residual, max_residual }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{SolveOptions, Solver};
+    use crate::graphs;
+    use crate::lanczos::ReorthPolicy;
+
+    #[test]
+    fn accurate_solution_passes_paper_thresholds() {
+        // A spectrum with an 8-dimensional dominant invariant subspace:
+        // K-step Lanczos converges the top pairs to high accuracy, so the
+        // paper's Fig 11 thresholds apply even at unit-test scale.
+        let mut m = crate::sparse::CooMatrix::new(256, 256);
+        for i in 0..256 {
+            let d = if i < 8 { 0.9 - 0.1 * i as f32 } else { 1e-4 / (i as f32) };
+            m.push(i, i, d);
+        }
+        // k slightly above the dominant dimension so the last Ritz pairs
+        // land in the tiny tail subspace instead of straddling the gap.
+        let mut s = Solver::new(SolveOptions { k: 12, reorth: ReorthPolicy::Every, ..Default::default() });
+        let sol = s.solve(&m).unwrap();
+        let r = verify(&m, &sol);
+        assert!(r.mean_angle_deg > 89.9, "angle {}", r.mean_angle_deg);
+        assert!(r.mean_residual < 1e-3, "residual {}", r.mean_residual);
+        assert!(r.max_residual >= r.mean_residual);
+        assert!(r.max_cross_dot < 1e-2);
+    }
+
+    #[test]
+    fn graph_scale_residual_is_modest() {
+        let m = graphs::mesh2d(24, 24, 0.9, 0.02, 9);
+        let mut s = Solver::new(SolveOptions { k: 8, reorth: ReorthPolicy::Every, ..Default::default() });
+        let sol = s.solve(&m).unwrap();
+        let r = verify(&m, &sol);
+        assert!(r.mean_angle_deg > 89.5, "angle {}", r.mean_angle_deg);
+        assert!(r.mean_residual < 5e-2, "residual {}", r.mean_residual);
+    }
+
+    #[test]
+    fn no_reorth_degrades_orthogonality_at_large_k() {
+        let m = graphs::rmat(1 << 8, 10 << 8, 0.6, 0.18, 0.18, 3);
+        let mut with = Solver::new(SolveOptions { k: 20, reorth: ReorthPolicy::EveryN(2), ..Default::default() });
+        let mut without = Solver::new(SolveOptions { k: 20, reorth: ReorthPolicy::None, ..Default::default() });
+        let rw = verify(&m, &with.solve(&m).unwrap());
+        let ro = verify(&m, &without.solve(&m).unwrap());
+        assert!(
+            rw.max_cross_dot <= ro.max_cross_dot + 1e-12,
+            "reorth should not be worse: {} vs {}",
+            rw.max_cross_dot,
+            ro.max_cross_dot
+        );
+    }
+}

@@ -1,0 +1,244 @@
+//! Fixed-point arithmetic (§III-A, §IV).
+//!
+//! After Frobenius normalization every matrix value, eigenvalue, and
+//! eigenvector entry lies in `(-1, 1)`, so the paper replaces float
+//! datapaths with fixed-point where full float precision is not needed.
+//! We provide the three formats the DSP-friendly design space covers:
+//!
+//! * [`Q1_31`] — 1 sign bit, 31 fractional bits (i32): the Lanczos vector
+//!   format; quantization step `2^-31`.
+//! * [`Q2_30`] — 2 integer bits, 30 fractional (i32): headroom format for
+//!   intermediate sums that can transiently exceed 1 in magnitude.
+//! * [`Q1_15`] — 16-bit variant for the precision ablation.
+//!
+//! All types saturate instead of wrapping (what the DSP48 accumulators do)
+//! and use round-to-nearest on quantization.
+
+/// Behaviour shared by the Q formats.
+pub trait Fixed: Copy + Clone + PartialEq + std::fmt::Debug {
+    /// Raw integer type's bit width.
+    const BITS: u32;
+    /// Number of fractional bits.
+    const FRAC: u32;
+    /// Quantize from f64 (round-to-nearest, saturating).
+    fn from_f64(x: f64) -> Self;
+    /// Dequantize to f64.
+    fn to_f64(self) -> f64;
+    /// Saturating add.
+    fn add(self, rhs: Self) -> Self;
+    /// Saturating subtract.
+    fn sub(self, rhs: Self) -> Self;
+    /// Fixed-point multiply (full-width intermediate, rounded).
+    fn mul(self, rhs: Self) -> Self;
+    /// Quantization step (1 ulp).
+    fn ulp() -> f64 {
+        (2.0f64).powi(-(Self::FRAC as i32))
+    }
+    /// Round-trip an f64 through this format (the quantization operator the
+    /// mixed-precision Lanczos path applies).
+    fn quantize(x: f64) -> f64 {
+        Self::from_f64(x).to_f64()
+    }
+}
+
+macro_rules! qformat {
+    ($(#[$doc:meta])* $name:ident, $raw:ty, $wide:ty, $bits:expr, $frac:expr) => {
+        $(#[$doc])*
+        #[derive(Copy, Clone, PartialEq, Eq, PartialOrd, Ord, Debug, Default)]
+        pub struct $name(pub $raw);
+
+        impl Fixed for $name {
+            const BITS: u32 = $bits;
+            const FRAC: u32 = $frac;
+
+            #[inline]
+            fn from_f64(x: f64) -> Self {
+                let scaled = x * (1u64 << $frac) as f64;
+                // round-to-nearest-even like the RTL rounding stage
+                let r = scaled.round_ties_even();
+                let max = <$raw>::MAX as f64;
+                let min = <$raw>::MIN as f64;
+                $name(if r >= max {
+                    <$raw>::MAX
+                } else if r <= min {
+                    <$raw>::MIN
+                } else {
+                    r as $raw
+                })
+            }
+
+            #[inline]
+            fn to_f64(self) -> f64 {
+                self.0 as f64 / (1u64 << $frac) as f64
+            }
+
+            #[inline]
+            fn add(self, rhs: Self) -> Self {
+                $name(self.0.saturating_add(rhs.0))
+            }
+
+            #[inline]
+            fn sub(self, rhs: Self) -> Self {
+                $name(self.0.saturating_sub(rhs.0))
+            }
+
+            #[inline]
+            fn mul(self, rhs: Self) -> Self {
+                let wide = (self.0 as $wide) * (rhs.0 as $wide);
+                // Round: add half-ulp before shifting back.
+                let rounded = (wide + (1 as $wide << ($frac - 1))) >> $frac;
+                let max = <$raw>::MAX as $wide;
+                let min = <$raw>::MIN as $wide;
+                $name(if rounded > max {
+                    <$raw>::MAX
+                } else if rounded < min {
+                    <$raw>::MIN
+                } else {
+                    rounded as $raw
+                })
+            }
+        }
+    };
+}
+
+qformat!(
+    /// Q1.31: sign + 31 fractional bits; values in `[-1, 1 - 2^-31]`.
+    Q1_31, i32, i64, 32, 31
+);
+qformat!(
+    /// Q2.30: one integer bit of headroom; values in `[-2, 2 - 2^-30]`.
+    Q2_30, i32, i64, 32, 30
+);
+qformat!(
+    /// Q1.15: 16-bit variant for the precision ablation; step `2^-15`.
+    Q1_15, i16, i32, 16, 15
+);
+
+/// Precision mode for the mixed-precision Lanczos datapath.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// IEEE f32 everywhere (the CPU baseline datapath).
+    Float32,
+    /// Quantize Lanczos vectors to Q1.31 after each update (the paper's
+    /// device datapath; dots/norms still accumulate in float, matching the
+    /// design's float units "where required to guarantee precise results").
+    FixedQ1_31,
+    /// Q2.30 variant (headroom, one fewer fractional bit).
+    FixedQ2_30,
+    /// Q1.15 variant (16-bit, for the ablation's accuracy cliff).
+    FixedQ1_15,
+}
+
+impl Precision {
+    /// Quantize one value under this mode.
+    #[inline]
+    pub fn quantize(self, x: f32) -> f32 {
+        match self {
+            Precision::Float32 => x,
+            Precision::FixedQ1_31 => Q1_31::quantize(x as f64) as f32,
+            Precision::FixedQ2_30 => Q2_30::quantize(x as f64) as f32,
+            Precision::FixedQ1_15 => Q1_15::quantize(x as f64) as f32,
+        }
+    }
+
+    /// Quantize a vector in place.
+    pub fn quantize_slice(self, xs: &mut [f32]) {
+        if self == Precision::Float32 {
+            return;
+        }
+        for x in xs {
+            *x = self.quantize(*x);
+        }
+    }
+
+    /// Name for reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Float32 => "f32",
+            Precision::FixedQ1_31 => "q1.31",
+            Precision::FixedQ2_30 => "q2.30",
+            Precision::FixedQ1_15 => "q1.15",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q131_round_trip_error_is_sub_ulp() {
+        for &x in &[0.0, 0.5, -0.25, 0.999_999, -0.999_999, 1e-9] {
+            let err = (Q1_31::quantize(x) - x).abs();
+            assert!(err <= Q1_31::ulp() / 2.0 + 1e-18, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn q131_saturates_at_one() {
+        assert_eq!(Q1_31::from_f64(1.5).0, i32::MAX);
+        assert_eq!(Q1_31::from_f64(-1.5).0, i32::MIN);
+        assert!((Q1_31::from_f64(-1.0).to_f64() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn q230_has_headroom() {
+        assert!((Q2_30::quantize(1.5) - 1.5).abs() < Q2_30::ulp());
+        assert_eq!(Q2_30::from_f64(2.5).0, i32::MAX);
+    }
+
+    #[test]
+    fn mul_matches_float_product() {
+        let a = Q1_31::from_f64(0.5);
+        let b = Q1_31::from_f64(-0.25);
+        assert!((a.mul(b).to_f64() - -0.125).abs() <= Q1_31::ulp());
+        // Q1.15 coarser.
+        let c = Q1_15::from_f64(0.3);
+        let d = Q1_15::from_f64(0.7);
+        assert!((c.mul(d).to_f64() - 0.21).abs() <= 2.0 * Q1_15::ulp());
+    }
+
+    #[test]
+    fn add_saturates_not_wraps() {
+        let a = Q1_31::from_f64(0.9);
+        let b = Q1_31::from_f64(0.9);
+        let s = a.add(b).to_f64();
+        assert!((s - (1.0 - Q1_31::ulp())).abs() < 1e-9, "saturated sum was {s}");
+        // Q2.30 can represent 1.8.
+        let s2 = Q2_30::from_f64(0.9).add(Q2_30::from_f64(0.9)).to_f64();
+        assert!((s2 - 1.8).abs() < 2.0 * Q2_30::ulp());
+    }
+
+    #[test]
+    fn ulp_ordering_across_formats() {
+        assert!(Q1_31::ulp() < Q2_30::ulp());
+        assert!(Q2_30::ulp() < Q1_15::ulp());
+        assert_eq!(Q1_15::ulp(), 2.0f64.powi(-15));
+    }
+
+    #[test]
+    fn precision_mode_quantizes_slices() {
+        let mut xs = vec![0.123456789f32, -0.987654321, 0.5];
+        let orig = xs.clone();
+        Precision::FixedQ1_15.quantize_slice(&mut xs);
+        assert!(xs.iter().zip(&orig).any(|(a, b)| a != b), "q1.15 must perturb");
+        for (a, b) in xs.iter().zip(&orig) {
+            assert!((a - b).abs() <= Q1_15::ulp() as f32);
+        }
+        let mut ys = orig.clone();
+        Precision::Float32.quantize_slice(&mut ys);
+        assert_eq!(ys, orig);
+    }
+
+    #[test]
+    fn quantization_error_shrinks_with_frac_bits() {
+        let mut rng = crate::util::rng::Pcg64::new(1);
+        let (mut e15, mut e31) = (0.0f64, 0.0f64);
+        for _ in 0..1000 {
+            let x = rng.f64_range(-1.0, 1.0);
+            e15 += (Q1_15::quantize(x) - x).abs();
+            e31 += (Q1_31::quantize(x) - x).abs();
+        }
+        assert!(e31 < e15 / 1000.0, "e31={e31} e15={e15}");
+    }
+}

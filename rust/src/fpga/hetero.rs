@@ -1,0 +1,203 @@
+//! Heterogeneous design point — the paper's second future-work item (§VI:
+//! "investigate heterogeneous implementations that combine the abundant
+//! memory bandwidth of GPUs for high-performance SpMV with our systolic
+//! array FPGA design for the Jacobi eigenvalue").
+//!
+//! Models three deployments of the two-phase solver:
+//! * FPGA-only (the paper's shipped system): HBM2 @ 5x14.37 GB/s SpMV +
+//!   systolic Jacobi;
+//! * GPU+FPGA: V100-class SpMV (900 GB/s HBM2 at a realistic SpMV
+//!   efficiency) + PCIe transfer of the 3K-2 tridiagonal words + FPGA
+//!   systolic Jacobi;
+//! * GPU-only: GPU SpMV + GPU Jacobi, where small-K dense eigensolves
+//!   under-fill the SMs (§II: "GPUs cannot fill all their Stream
+//!   Processors, as the input size is much smaller than what is required")
+//!   — modeled as a fixed kernel-launch + low-occupancy cost per sweep.
+
+use crate::fpga::timing::{FpgaTimingModel, JACOBI_STEP_CYCLES, PLRAM_HANDSHAKE_CYCLES};
+use crate::lanczos::ReorthPolicy;
+use crate::sparse::RowPartition;
+
+/// GPU platform constants (V100-class, as the paper's era suggests).
+#[derive(Clone, Copy, Debug)]
+pub struct GpuModel {
+    /// Peak HBM2 bandwidth (GB/s).
+    pub hbm_gbps: f64,
+    /// Achievable SpMV efficiency vs peak (COO/CSR gather-bound).
+    pub spmv_efficiency: f64,
+    /// Kernel launch + sync latency per operation (s).
+    pub launch_s: f64,
+    /// Effective throughput for a K x K dense Jacobi sweep (fraction of
+    /// SMs a K<=32 problem can fill).
+    pub small_k_occupancy: f64,
+    /// Peak FP32 throughput (GFLOP/s).
+    pub fp32_gflops: f64,
+    /// PCIe gen3 x16 effective bandwidth for device-device staging (GB/s).
+    pub pcie_gbps: f64,
+}
+
+impl Default for GpuModel {
+    fn default() -> Self {
+        Self {
+            hbm_gbps: 900.0,
+            spmv_efficiency: 0.55, // gather-bound COO SpMV on V100
+            launch_s: 8e-6,
+            small_k_occupancy: 0.02, // K<=32 fills ~2% of 80 SMs
+            fp32_gflops: 14_000.0,
+            pcie_gbps: 12.0,
+        }
+    }
+}
+
+/// Per-deployment time estimate (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct HeteroEstimate {
+    /// Lanczos phase (SpMV + vector ops), seconds.
+    pub lanczos_s: f64,
+    /// Inter-device transfer, seconds.
+    pub transfer_s: f64,
+    /// Jacobi phase, seconds.
+    pub jacobi_s: f64,
+}
+
+impl HeteroEstimate {
+    /// Total seconds.
+    pub fn total_s(&self) -> f64 {
+        self.lanczos_s + self.transfer_s + self.jacobi_s
+    }
+}
+
+/// GPU SpMV time for one iteration: bandwidth-bound COO streaming plus
+/// the dense-vector gather (counted once through HBM) and launch latency.
+fn gpu_spmv_s(g: &GpuModel, nnz: usize, n: usize) -> f64 {
+    let bytes = nnz as f64 * 12.0 + n as f64 * 8.0; // COO + x/y traffic
+    bytes / (g.hbm_gbps * g.spmv_efficiency * 1e9) + g.launch_s
+}
+
+/// GPU Jacobi sweep time: the K^3-ish flops at tiny occupancy + launch.
+fn gpu_jacobi_sweep_s(g: &GpuModel, k: usize) -> f64 {
+    let flops = (k * k * k) as f64 * 8.0; // rotations as small matmuls
+    flops / (g.fp32_gflops * g.small_k_occupancy * 1e9) + g.launch_s
+}
+
+/// Estimate all three deployments for one solve.
+///
+/// `jacobi_steps` is the measured systolic step count; GPU sweeps are
+/// `jacobi_steps / (k-1)` (same schedule, different executor).
+pub fn compare_deployments(
+    fpga: &FpgaTimingModel,
+    gpu: &GpuModel,
+    n: usize,
+    shards: &[RowPartition],
+    k: usize,
+    policy: ReorthPolicy,
+    jacobi_steps: usize,
+) -> (HeteroEstimate, HeteroEstimate, HeteroEstimate) {
+    let nnz: usize = shards.iter().map(|p| p.nnz).sum();
+    let sweeps = jacobi_steps.div_ceil((k - 1).max(1));
+
+    // --- FPGA-only (the paper's system).
+    let f = fpga.solve_time(n, shards, k, policy, jacobi_steps);
+    let fpga_only = HeteroEstimate {
+        lanczos_s: f.lanczos_s(),
+        transfer_s: PLRAM_HANDSHAKE_CYCLES as f64 / fpga.clock_hz,
+        jacobi_s: f.jacobi_s,
+    };
+
+    // --- GPU + FPGA: GPU Lanczos, tridiagonal over PCIe, FPGA Jacobi.
+    let reorth_passes: usize = (1..=k)
+        .map(|i| match policy {
+            ReorthPolicy::None => 0,
+            ReorthPolicy::Every => 2 * i,
+            ReorthPolicy::EveryN(p) => {
+                if p != 0 && i % p == 0 {
+                    2 * i
+                } else {
+                    0
+                }
+            }
+        })
+        .sum();
+    let gpu_vec_s = (3 * k + reorth_passes) as f64 * (n as f64 * 8.0 / (gpu.hbm_gbps * 1e9) + gpu.launch_s);
+    let gpu_lanczos = k as f64 * gpu_spmv_s(gpu, nnz, n) + gpu_vec_s;
+    let hybrid = HeteroEstimate {
+        lanczos_s: gpu_lanczos,
+        transfer_s: (3 * k) as f64 * 4.0 / (gpu.pcie_gbps * 1e9) + 15e-6, // words + PCIe latency
+        jacobi_s: (jacobi_steps * JACOBI_STEP_CYCLES) as f64 / fpga.clock_hz,
+    };
+
+    // --- GPU-only.
+    let gpu_only = HeteroEstimate {
+        lanczos_s: gpu_lanczos,
+        transfer_s: 0.0,
+        jacobi_s: sweeps as f64 * gpu_jacobi_sweep_s(gpu, k),
+    };
+
+    (fpga_only, hybrid, gpu_only)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shards(nnz: usize) -> Vec<RowPartition> {
+        (0..5).map(|i| RowPartition { row_start: i, row_end: i + 1, nnz: nnz / 5 }).collect()
+    }
+
+    #[test]
+    fn gpu_spmv_beats_fpga_spmv_on_bandwidth() {
+        // 900 GB/s * 0.55 = 495 GB/s effective vs 71.87 GB/s: the paper's
+        // motivation for the hybrid.
+        let fpga = FpgaTimingModel::default();
+        let gpu = GpuModel::default();
+        let (f, h, _) = compare_deployments(
+            &fpga,
+            &gpu,
+            2_000_000,
+            &shards(30_000_000),
+            16,
+            ReorthPolicy::EveryN(2),
+            150,
+        );
+        assert!(h.lanczos_s < f.lanczos_s / 3.0, "hybrid {h:?} vs fpga {f:?}");
+    }
+
+    #[test]
+    fn fpga_jacobi_beats_gpu_jacobi_at_small_k() {
+        // §II: small-K dense work cannot fill a GPU.
+        let fpga = FpgaTimingModel::default();
+        let gpu = GpuModel::default();
+        let (_, h, g) =
+            compare_deployments(&fpga, &gpu, 100_000, &shards(1_000_000), 16, ReorthPolicy::EveryN(2), 150);
+        assert!(h.jacobi_s < g.jacobi_s, "hybrid jacobi {} vs gpu jacobi {}", h.jacobi_s, g.jacobi_s);
+    }
+
+    #[test]
+    fn hybrid_wins_end_to_end_on_large_graphs() {
+        // The future-work hypothesis: GPU SpMV + FPGA Jacobi dominates both
+        // pure deployments once SpMV dominates (large nnz).
+        let fpga = FpgaTimingModel::default();
+        let gpu = GpuModel::default();
+        let (f, h, g) = compare_deployments(
+            &fpga,
+            &gpu,
+            10_000_000,
+            &shards(57_000_000),
+            24,
+            ReorthPolicy::EveryN(2),
+            250,
+        );
+        assert!(h.total_s() < f.total_s(), "hybrid {} vs fpga {}", h.total_s(), f.total_s());
+        assert!(h.total_s() <= g.total_s(), "hybrid {} vs gpu {}", h.total_s(), g.total_s());
+    }
+
+    #[test]
+    fn pcie_transfer_is_negligible() {
+        // 3K-2 words over PCIe must not erase the hybrid's advantage.
+        let fpga = FpgaTimingModel::default();
+        let gpu = GpuModel::default();
+        let (_, h, _) =
+            compare_deployments(&fpga, &gpu, 1_000_000, &shards(10_000_000), 32, ReorthPolicy::None, 300);
+        assert!(h.transfer_s < 0.01 * h.total_s(), "{h:?}");
+    }
+}

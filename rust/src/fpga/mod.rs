@@ -1,0 +1,25 @@
+//! Analytic + event-level model of the paper's Alveo U280 hardware design
+//! (§IV, §V). This is the hardware-substitution layer (see DESIGN.md):
+//! the physical FPGA is unavailable, so the performance, power, and
+//! resource claims are reproduced from the design's own first principles —
+//! the paper states SpMV is HBM-bandwidth-bound and the systolic Jacobi
+//! runs constant-time steps, which makes both phases analytically
+//! modelable to within a few percent.
+//!
+//! * [`specs`] — U280 platform constants (channels, bandwidth, clock) and
+//!   the paper's measured operating points.
+//! * [`timing`] — cycle-level execution-time model for the two phases.
+//! * [`resources`] — Table I resource-utilization model.
+//! * [`power`] — §V-B power/efficiency model.
+
+pub mod hetero;
+pub mod power;
+pub mod resources;
+pub mod specs;
+pub mod timing;
+
+pub use hetero::{compare_deployments, GpuModel, HeteroEstimate};
+pub use power::{PowerModel, PowerReport};
+pub use resources::{jacobi_core_resources, lanczos_core_resources, ResourceUsage, SlrBudget};
+pub use specs::U280;
+pub use timing::{FpgaTimingModel, PhaseTimes};

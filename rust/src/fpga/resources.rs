@@ -1,0 +1,207 @@
+//! Resource-utilization model (Table I).
+//!
+//! Per-unit costs are calibrated so the shipped design point (5 SpMV CUs on
+//! SLR0; Jacobi cores for K=32 on SLR1 and K=16+8+4 on SLR2) reproduces the
+//! paper's utilization rows; the model then extrapolates to other CU
+//! counts / K values for the ablation benches. Percentages are of one SLR
+//! (the U280 splits its resources roughly evenly across 3 SLRs), matching
+//! the table's convention.
+
+use crate::fpga::specs::U280;
+
+/// Absolute resource usage of a core/design.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ResourceUsage {
+    /// Lookup tables.
+    pub lut: usize,
+    /// Flip-flops.
+    pub ff: usize,
+    /// BRAM tiles.
+    pub bram: usize,
+    /// URAM tiles.
+    pub uram: usize,
+    /// DSP slices.
+    pub dsp: usize,
+}
+
+impl ResourceUsage {
+    /// Component-wise sum.
+    pub fn plus(self, o: ResourceUsage) -> ResourceUsage {
+        ResourceUsage {
+            lut: self.lut + o.lut,
+            ff: self.ff + o.ff,
+            bram: self.bram + o.bram,
+            uram: self.uram + o.uram,
+            dsp: self.dsp + o.dsp,
+        }
+    }
+}
+
+/// One SLR's budget (1/3 of the device, the U280's actual layout).
+#[derive(Clone, Copy, Debug)]
+pub struct SlrBudget;
+
+impl SlrBudget {
+    /// LUTs per SLR.
+    pub const LUT: usize = U280::LUTS / 3;
+    /// FFs per SLR.
+    pub const FF: usize = U280::FFS / 3;
+    /// BRAMs per SLR.
+    pub const BRAM: usize = U280::BRAMS / 3;
+    /// URAMs per SLR.
+    pub const URAM: usize = U280::URAMS / 3;
+    /// DSPs per SLR.
+    pub const DSP: usize = U280::DSPS / 3;
+
+    /// Utilization percentages `(lut, ff, bram, uram, dsp)` of `u` against
+    /// one SLR.
+    pub fn utilization_pct(u: ResourceUsage) -> (f64, f64, f64, f64, f64) {
+        (
+            100.0 * u.lut as f64 / Self::LUT as f64,
+            100.0 * u.ff as f64 / Self::FF as f64,
+            100.0 * u.bram as f64 / Self::BRAM as f64,
+            100.0 * u.uram as f64 / Self::URAM as f64,
+            100.0 * u.dsp as f64 / Self::DSP as f64,
+        )
+    }
+
+    /// Does `u` fit one SLR?
+    pub fn fits(u: ResourceUsage) -> bool {
+        u.lut <= Self::LUT && u.ff <= Self::FF && u.bram <= Self::BRAM && u.uram <= Self::URAM && u.dsp <= Self::DSP
+    }
+}
+
+// ---- Calibrated per-unit costs ------------------------------------------
+// Lanczos (SLR0, Table I row 1: 42% LUT, 13% FF, 15% BRAM, 0% URAM, 16% DSP
+// with 5 CUs): per-CU dataflow pipeline + shared merge/vector unit.
+const SPMV_CU_LUT: usize = 26_000;
+const SPMV_CU_FF: usize = 16_000;
+const SPMV_CU_BRAM: usize = 16; // stream FIFOs between the 4 stages
+const SPMV_CU_DSP: usize = 64; // 5 MACs + index arithmetic, unrolled x5
+const MERGE_VEC_LUT: usize = 23_000; // merge unit + scalar chain
+const MERGE_VEC_FF: usize = 14_500;
+const MERGE_VEC_BRAM: usize = 10;
+const MERGE_VEC_DSP: usize = 160; // dot/axpy/norm 16-lane pipelines
+
+// Jacobi (SLR1 row: 40% LUT 42% FF 68% DSP hosting the K=32 core; SLR2 row:
+// 15/17/34% hosting two K=16 cores — the DSP column being exactly half of
+// SLR1 pins that composition): K^2/4 PEs x 8 DSP rotations; the K/2
+// diagonal PEs time-multiplex their rotation multipliers for the Taylor
+// trig (the polynomial needs 10 mults once per step vs 8 sustained), so
+// trig adds LUT/FF but no standing DSPs. Per-PE LUT/FF include a wiring
+// term growing with K: each PE's neighbour exchange muxes span a row of
+// the array, so routing cost per PE grows linearly in K (this is the
+// effect that caps the systolic design at K~32, §IV-C).
+const PE_DSP: usize = 8; // 2x2 rotate: 8 mults fully unrolled
+const PE_LUT_BASE: usize = 151;
+const PE_LUT_WIRE_PER_K: usize = 12;
+const PE_FF_BASE: usize = 534;
+const PE_FF_WIRE_PER_K: usize = 19;
+const TRIG_LUT: usize = 500;
+const TRIG_FF: usize = 800;
+const JACOBI_CTRL_LUT: usize = 1_500; // sequencer + PLRAM interface
+const JACOBI_CTRL_FF: usize = 2_000;
+
+/// Resources of the Lanczos core with `cus` SpMV compute units.
+pub fn lanczos_core_resources(cus: usize) -> ResourceUsage {
+    ResourceUsage {
+        lut: SPMV_CU_LUT * cus + MERGE_VEC_LUT,
+        ff: SPMV_CU_FF * cus + MERGE_VEC_FF,
+        bram: SPMV_CU_BRAM * cus + MERGE_VEC_BRAM,
+        uram: 0, // the HBM redesign eliminated URAM (§IV-B2)
+        dsp: SPMV_CU_DSP * cus + MERGE_VEC_DSP,
+    }
+}
+
+/// Resources of one Jacobi systolic core sized for `k` eigencomponents.
+pub fn jacobi_core_resources(k: usize) -> ResourceUsage {
+    assert!(k >= 2, "jacobi core needs k >= 2");
+    let pes = (k / 2) * (k / 2);
+    let diag = k / 2;
+    ResourceUsage {
+        lut: (PE_LUT_BASE + PE_LUT_WIRE_PER_K * k) * pes + TRIG_LUT * diag + JACOBI_CTRL_LUT,
+        ff: (PE_FF_BASE + PE_FF_WIRE_PER_K * k) * pes + TRIG_FF * diag + JACOBI_CTRL_FF,
+        bram: 0,
+        uram: 0,
+        dsp: PE_DSP * pes,
+    }
+}
+
+/// The paper's shipped configuration: SLR1 hosts the K=32 core (§IV-C:
+/// "multiple Jacobi cores optimized for specific K").
+pub fn shipped_slr1() -> ResourceUsage {
+    jacobi_core_resources(32)
+}
+
+/// SLR2: two K=16 cores (Table I's SLR2 DSP count is exactly half of
+/// SLR1's, which identifies the replica set).
+pub fn shipped_slr2() -> ResourceUsage {
+    jacobi_core_resources(16).plus(jacobi_core_resources(16))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pct(u: ResourceUsage) -> (f64, f64, f64, f64, f64) {
+        SlrBudget::utilization_pct(u)
+    }
+
+    #[test]
+    fn lanczos_slr0_matches_table1() {
+        // Table I: LUT 42%, FF 13%, BRAM 15%, URAM 0%, DSP 16%.
+        let (lut, ff, bram, uram, dsp) = pct(lanczos_core_resources(5));
+        assert!((lut - 42.0).abs() < 2.0, "lut {lut}");
+        assert!((ff - 13.0).abs() < 2.0, "ff {ff}");
+        assert!((bram - 15.0).abs() < 2.0, "bram {bram}");
+        assert_eq!(uram, 0.0);
+        assert!((dsp - 16.0).abs() < 2.0, "dsp {dsp}");
+    }
+
+    #[test]
+    fn jacobi_slr1_matches_table1() {
+        // Table I SLR1: LUT 40%, FF 42%, DSP 68%, zero BRAM/URAM.
+        let (lut, ff, bram, uram, dsp) = pct(shipped_slr1());
+        assert!((lut - 40.0).abs() < 3.0, "lut {lut}");
+        assert!((ff - 42.0).abs() < 3.0, "ff {ff}");
+        assert_eq!(bram, 0.0);
+        assert_eq!(uram, 0.0);
+        assert!((dsp - 68.0).abs() < 3.0, "dsp {dsp}");
+    }
+
+    #[test]
+    fn jacobi_slr2_matches_table1() {
+        // Table I SLR2: LUT 15%, FF 17%, DSP 34%.
+        let (lut, ff, _, _, dsp) = pct(shipped_slr2());
+        assert!((lut - 15.0).abs() < 3.0, "lut {lut}");
+        assert!((ff - 17.0).abs() < 3.0, "ff {ff}");
+        assert!((dsp - 34.0).abs() < 6.0, "dsp {dsp}");
+    }
+
+    #[test]
+    fn jacobi_scales_quadratically_with_k() {
+        // §V: "Resource utilization of the Jacobi algorithm scales
+        // quadratically with the number of eigenvalues K".
+        let d8 = jacobi_core_resources(8).dsp as f64;
+        let d16 = jacobi_core_resources(16).dsp as f64;
+        let d32 = jacobi_core_resources(32).dsp as f64;
+        assert!((d16 / d8 - 4.0).abs() < 0.6, "8->16 ratio {}", d16 / d8);
+        assert!((d32 / d16 - 4.0).abs() < 0.3, "16->32 ratio {}", d32 / d16);
+    }
+
+    #[test]
+    fn k32_fits_one_slr_k64_does_not() {
+        // §IV-C: "the systolic formulation cannot scale beyond very small
+        // matrices (K ~ 32)".
+        assert!(SlrBudget::fits(jacobi_core_resources(32)));
+        assert!(!SlrBudget::fits(jacobi_core_resources(64)));
+    }
+
+    #[test]
+    fn lanczos_scales_linearly_with_cus() {
+        let r1 = lanczos_core_resources(1);
+        let r5 = lanczos_core_resources(5);
+        let marginal = (r5.lut - r1.lut) as f64 / 4.0;
+        assert!((marginal - SPMV_CU_LUT as f64).abs() < 1.0);
+    }
+}

@@ -1,0 +1,88 @@
+//! Platform constants: Xilinx Alveo U280 as configured in the paper.
+
+/// Alveo U280 + paper design operating point (§IV, §V, Table I).
+#[derive(Clone, Copy, Debug)]
+pub struct U280;
+
+impl U280 {
+    /// Synthesized clock (§V-A): 225 MHz.
+    pub const CLOCK_HZ: f64 = 225e6;
+    /// Measured per-channel HBM bandwidth (§IV-B1): 14.37 GB/s.
+    pub const HBM_CHANNEL_GBPS: f64 = 14.37;
+    /// AXI master ports available through the hardened switch (§IV-B1).
+    pub const HBM_AXI_CHANNELS: usize = 32;
+    /// SpMV compute units in the shipped design (§IV-B1).
+    pub const SPMV_CUS: usize = 5;
+    /// Dense-vector replicas per CU (§IV-B2).
+    pub const VECTOR_REPLICAS: usize = 5;
+    /// COO entries per 512-bit packet (§IV-B1).
+    pub const PACKET_NNZ: usize = 5;
+    /// Output values per 512-bit write-back packet (§IV-B1): "up to 15".
+    pub const WRITEBACK_VALS: usize = 15;
+    /// HBM bank capacity usable per dense-vector replica (§IV-B2): 250 MB.
+    pub const HBM_BANK_BYTES: usize = 250 * 1024 * 1024;
+    /// Max rows supported by the vector subsystem (§IV-B2): 62.4M.
+    pub const MAX_ROWS: usize = 62_400_000;
+    /// f32 lanes of one 512-bit word.
+    pub const F32_LANES: usize = 16;
+
+    /// Aggregate matrix-read bandwidth with all CUs active (§V-A).
+    pub fn aggregate_read_gbps() -> f64 {
+        Self::SPMV_CUS as f64 * Self::HBM_CHANNEL_GBPS
+    }
+
+    /// Total SLR count on the U280.
+    pub const SLRS: usize = 3;
+
+    // ---- Table I "Available" row (xcu280-fsvh2892-2L-e) ----
+    /// Device LUTs.
+    pub const LUTS: usize = 1_097_419;
+    /// Device flip-flops.
+    pub const FFS: usize = 2_180_971;
+    /// Device BRAM tiles.
+    pub const BRAMS: usize = 1_812;
+    /// Device URAM tiles.
+    pub const URAMS: usize = 960;
+    /// Device DSP48 slices.
+    pub const DSPS: usize = 9_020;
+
+    /// Paper's measured board power during execution (§V-B), watts.
+    pub const FPGA_POWER_W: f64 = 38.0;
+    /// Paper's FPGA host-server power (§V-B), watts.
+    pub const HOST_POWER_W: f64 = 40.0;
+    /// Paper's CPU-baseline power (2x Xeon 6248 under load, §V-B), watts.
+    pub const CPU_POWER_W: f64 = 300.0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_bandwidth_matches_paper() {
+        // §V-A: "14.37 GB/s, for a total of 71.87 GB/s using 5 CU".
+        let agg = U280::aggregate_read_gbps();
+        assert!((agg - 71.85).abs() < 0.2, "aggregate {agg}");
+    }
+
+    #[test]
+    fn packet_feeds_match_channel_bandwidth() {
+        // One packet (64 B) per cycle at 225 MHz = 14.4 GB/s — the model is
+        // self-consistent: packet rate saturates exactly one HBM channel.
+        let bytes_per_s = 64.0 * U280::CLOCK_HZ;
+        assert!((bytes_per_s / 1e9 - U280::HBM_CHANNEL_GBPS).abs() < 0.1);
+    }
+
+    #[test]
+    fn replica_channels_fit_axi_switch() {
+        // 5 CUs x (1 matrix + 5 replica) channels = 30 <= 32.
+        let used = U280::SPMV_CUS * (1 + U280::VECTOR_REPLICAS);
+        assert!(used <= U280::HBM_AXI_CHANNELS, "{used} channels");
+    }
+
+    #[test]
+    fn max_rows_fit_replica_bank() {
+        // 62.4M f32 rows = 249.6 MB < 250 MB bank.
+        assert!(U280::MAX_ROWS * 4 <= U280::HBM_BANK_BYTES);
+    }
+}

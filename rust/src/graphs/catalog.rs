@@ -1,0 +1,175 @@
+//! Synthetic twins of the paper's evaluation suite (Table II).
+//!
+//! The paper evaluates on 13 SuiteSparse matrices. Those files are not
+//! available offline, so each entry here records the published `rows`,
+//! `nnz`, and a topology class, and can `generate()` a synthetic graph with
+//! the same class and (scaled) size. Lanczos cost is Θ(K·nnz) + reorth
+//! Θ(n·K²), so matching `n`, `nnz`, and the degree-distribution family
+//! preserves both the arithmetic intensity and the numerical behaviour the
+//! evaluation depends on (see DESIGN.md, substitution table).
+
+use crate::graphs::generators;
+use crate::sparse::CooMatrix;
+
+/// Topology family used to pick a generator.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum TopologyClass {
+    /// Power-law web/social graph → R-MAT.
+    PowerLaw,
+    /// Road network / planar-ish mesh → jittered 2-D lattice.
+    Road,
+    /// FEM / simulation mesh → denser jittered lattice.
+    Mesh,
+}
+
+/// One row of Table II plus generation metadata.
+#[derive(Clone, Debug)]
+pub struct CatalogEntry {
+    /// Short ID used in the paper's figures (e.g. "WB-TA").
+    pub id: &'static str,
+    /// SuiteSparse name.
+    pub name: &'static str,
+    /// Published row count.
+    pub rows: usize,
+    /// Published non-zero count.
+    pub nnz: usize,
+    /// Topology family.
+    pub class: TopologyClass,
+    /// Seed so every twin is reproducible.
+    pub seed: u64,
+}
+
+impl CatalogEntry {
+    /// Published sparsity (% of cells that are non-zero), as in Table II.
+    pub fn sparsity_pct(&self) -> f64 {
+        100.0 * self.nnz as f64 / (self.rows as f64 * self.rows as f64)
+    }
+
+    /// Published COO footprint in GB (3 x 4 bytes per nnz).
+    pub fn size_gb(&self) -> f64 {
+        self.nnz as f64 * 12.0 / 1e9
+    }
+
+    /// Generate the synthetic twin at `1/scale` of the published size
+    /// (`scale = 1` reproduces the full published dimensions).
+    ///
+    /// The generated matrix is symmetric with unit-interval weights; rows
+    /// are rounded to the generator's natural granularity (power of two for
+    /// R-MAT, rectangle for meshes), keeping nnz/row faithful.
+    pub fn generate(&self, scale: usize) -> CooMatrix {
+        assert!(scale >= 1);
+        let rows = (self.rows / scale).max(64);
+        let nnz = (self.nnz / scale).max(256);
+        match self.class {
+            TopologyClass::PowerLaw => {
+                let n = rows.next_power_of_two();
+                // Graph500-ish skew: heavier 'a' for the web graphs.
+                generators::rmat(n, nnz, 0.57, 0.19, 0.19, self.seed)
+            }
+            TopologyClass::Road => {
+                // Degree ≈ 2·nnz/rows ∈ [2, 4] for road graphs; keep that by
+                // tuning the lattice keep-probability.
+                let side = (rows as f64).sqrt().ceil() as usize;
+                let target_degree = nnz as f64 / rows as f64;
+                let keep = (target_degree / 4.0).clamp(0.3, 1.0);
+                generators::mesh2d(side, side, keep, 0.002, self.seed)
+            }
+            TopologyClass::Mesh => {
+                let side = (rows as f64).sqrt().ceil() as usize;
+                let target_degree = nnz as f64 / rows as f64;
+                let keep = (target_degree / 4.0).clamp(0.5, 1.0);
+                generators::mesh2d(side, side, keep, 0.01, self.seed)
+            }
+        }
+    }
+}
+
+/// The 13-graph catalog, ordered by nnz as in Table II.
+pub fn catalog() -> Vec<CatalogEntry> {
+    use TopologyClass::*;
+    vec![
+        CatalogEntry { id: "WB-TA", name: "wiki-Talk", rows: 2_394_385, nnz: 5_021_410, class: PowerLaw, seed: 101 },
+        CatalogEntry { id: "WB-GO", name: "web-Google", rows: 916_428, nnz: 5_105_039, class: PowerLaw, seed: 102 },
+        CatalogEntry { id: "WB-BE", name: "web-Berkstan", rows: 685_230, nnz: 7_600_595, class: PowerLaw, seed: 103 },
+        CatalogEntry { id: "FL", name: "Flickr", rows: 820_878, nnz: 9_837_214, class: PowerLaw, seed: 104 },
+        CatalogEntry { id: "IT", name: "italy_osm", rows: 6_686_493, nnz: 14_027_956, class: Road, seed: 105 },
+        CatalogEntry { id: "PA", name: "patents", rows: 3_774_768, nnz: 14_970_767, class: PowerLaw, seed: 106 },
+        CatalogEntry { id: "VL3", name: "venturiLevel3", rows: 4_026_819, nnz: 16_108_474, class: Mesh, seed: 107 },
+        CatalogEntry { id: "DE", name: "germany_osm", rows: 11_548_845, nnz: 24_738_362, class: Road, seed: 108 },
+        CatalogEntry { id: "ASIA", name: "asia_osm", rows: 11_950_757, nnz: 25_423_206, class: Road, seed: 109 },
+        CatalogEntry { id: "RC", name: "road_central", rows: 14_081_816, nnz: 33_866_826, class: Road, seed: 110 },
+        CatalogEntry { id: "WK", name: "Wikipedia", rows: 3_566_907, nnz: 45_030_389, class: PowerLaw, seed: 111 },
+        CatalogEntry { id: "HT", name: "hugetrace-00020", rows: 16_002_413, nnz: 47_997_626, class: Mesh, seed: 112 },
+        CatalogEntry { id: "WB", name: "wb-edu", rows: 9_845_725, nnz: 57_156_537, class: PowerLaw, seed: 113 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thirteen_entries_sorted_by_nnz() {
+        let c = catalog();
+        assert_eq!(c.len(), 13);
+        for w in c.windows(2) {
+            assert!(w[0].nnz <= w[1].nnz, "{} > {}", w[0].name, w[1].name);
+        }
+    }
+
+    #[test]
+    fn sparsity_matches_published_order_of_magnitude() {
+        // web-Google: 6.17e-4 % in Table II. (wiki-Talk's published
+        // sparsity is internally inconsistent with its rows/nnz by 10x —
+        // see DESIGN.md — so the check anchors on WB-GO and WB.)
+        let go = catalog().into_iter().find(|e| e.id == "WB-GO").unwrap();
+        let s = go.sparsity_pct();
+        assert!((s - 6.17e-4).abs() / 6.17e-4 < 0.05, "sparsity {s}");
+        // wb-edu: 5.90e-5 %.
+        let wb = &catalog()[12];
+        assert!((wb.sparsity_pct() - 5.90e-5).abs() / 5.90e-5 < 0.05);
+    }
+
+    #[test]
+    fn size_gb_matches_table() {
+        // Table II sizes track 12 bytes/nnz within ~12% (the published
+        // column appears to include per-file metadata overhead).
+        for (id, published) in [("WB-TA", 0.06), ("WK", 0.60), ("WB", 0.73)] {
+            let e = catalog().into_iter().find(|e| e.id == id).unwrap();
+            let rel = (e.size_gb() - published).abs() / published;
+            assert!(rel < 0.12, "{id}: {} vs {published}", e.size_gb());
+        }
+    }
+
+    #[test]
+    fn generated_twin_tracks_scaled_size() {
+        for id in ["WB-GO", "IT"] {
+            let e = catalog().into_iter().find(|e| e.id == id).unwrap();
+            let scale = 256;
+            let m = e.generate(scale);
+            let target_nnz = e.nnz / scale;
+            assert!(
+                m.nnz() > target_nnz / 4 && m.nnz() < target_nnz * 4,
+                "{id}: nnz {} vs target {target_nnz}",
+                m.nnz()
+            );
+            assert!(m.is_symmetric(0.0), "{id} twin must be symmetric");
+        }
+    }
+
+    #[test]
+    fn road_twin_has_low_degree_powerlaw_high() {
+        let cat = catalog();
+        let road = cat.iter().find(|e| e.id == "ASIA").unwrap().generate(1024);
+        let web = cat.iter().find(|e| e.id == "WB-TA").unwrap().generate(1024);
+        let max_deg = |m: &CooMatrix| {
+            let mut d = vec![0usize; m.nrows];
+            for &r in &m.rows {
+                d[r as usize] += 1;
+            }
+            *d.iter().max().unwrap()
+        };
+        assert!(max_deg(&road) < 12);
+        assert!(max_deg(&web) > 20);
+    }
+}

@@ -1,0 +1,250 @@
+//! Synthetic graph generators.
+//!
+//! Each generator returns a symmetric weighted [`CooMatrix`] (undirected
+//! graph adjacency) in canonical order. The four families cover the
+//! topology classes of the paper's 13-graph suite (Table II):
+//!
+//! * [`rmat`] — Recursive-MATrix power-law graphs (web / social networks:
+//!   wiki-Talk, web-Google, web-Berkstan, Flickr, patents, Wikipedia,
+//!   wb-edu).
+//! * [`mesh2d`] — jittered 2-D lattice meshes with low, near-constant
+//!   degree (road networks: italy_osm, germany_osm, asia_osm,
+//!   road_central; FEM meshes: venturiLevel3, hugetrace).
+//! * [`erdos_renyi`] — uniform random baseline.
+//! * [`scale_free_ba`] — Barabási-Albert preferential attachment.
+//! * [`planted_partition`] — stochastic block model with known communities
+//!   (ground truth for the spectral-clustering example).
+
+use crate::sparse::CooMatrix;
+use crate::util::rng::Pcg64;
+
+/// Deduplicate + symmetrize edge list into a canonical adjacency matrix.
+fn finalize(n: usize, edges: Vec<(u32, u32)>, rng: &mut Pcg64, weighted: bool) -> CooMatrix {
+    let mut m = CooMatrix::new(n, n);
+    let mut seen = std::collections::HashSet::with_capacity(edges.len());
+    for (u, v) in edges {
+        if u == v {
+            continue; // no self loops; the diagonal stays free for Laplacians
+        }
+        let key = if u < v { (u, v) } else { (v, u) };
+        if !seen.insert(key) {
+            continue;
+        }
+        let w = if weighted { 0.25 + 0.75 * rng.f32() } else { 1.0 };
+        m.push(key.0 as usize, key.1 as usize, w);
+        m.push(key.1 as usize, key.0 as usize, w);
+    }
+    m.canonicalize();
+    m
+}
+
+/// R-MAT generator (Chakrabarti et al., SDM 2004).
+///
+/// `nnz_target` counts *directed* stored entries; the result is symmetrized
+/// so the realized nnz is close to (slightly below, after dedup) the target.
+/// Defaults matching Graph500: `a=0.57, b=0.19, c=0.19`.
+pub fn rmat(n: usize, nnz_target: usize, a: f64, b: f64, c: f64, seed: u64) -> CooMatrix {
+    assert!(n.is_power_of_two(), "rmat needs a power-of-two vertex count, got {n}");
+    assert!(a + b + c < 1.0 + 1e-9, "probabilities must sum below 1");
+    let mut rng = Pcg64::new(seed);
+    let levels = n.trailing_zeros();
+    let edge_goal = nnz_target / 2; // undirected edges
+    let mut edges = Vec::with_capacity(edge_goal);
+    for _ in 0..edge_goal {
+        let (mut u, mut v) = (0u32, 0u32);
+        for _ in 0..levels {
+            u <<= 1;
+            v <<= 1;
+            let r = rng.f64();
+            if r < a {
+                // top-left quadrant
+            } else if r < a + b {
+                v |= 1;
+            } else if r < a + b + c {
+                u |= 1;
+            } else {
+                u |= 1;
+                v |= 1;
+            }
+        }
+        edges.push((u, v));
+    }
+    finalize(n, edges, &mut rng, true)
+}
+
+/// Erdős–Rényi G(n, m): `nnz_target/2` uniform random edges.
+pub fn erdos_renyi(n: usize, nnz_target: usize, seed: u64) -> CooMatrix {
+    let mut rng = Pcg64::new(seed);
+    let m = nnz_target / 2;
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let u = rng.below(n as u64) as u32;
+        let v = rng.below(n as u64) as u32;
+        edges.push((u, v));
+    }
+    finalize(n, edges, &mut rng, true)
+}
+
+/// Jittered 2-D lattice: `rows x cols` grid with 4-neighbour links, each
+/// kept with probability `keep`, plus sparse random "shortcut" edges
+/// (fraction `shortcuts` of the lattice edges). Mimics road-network
+/// topology: huge diameter, degree ~2-4, near-banded structure.
+pub fn mesh2d(rows: usize, cols: usize, keep: f64, shortcuts: f64, seed: u64) -> CooMatrix {
+    let n = rows * cols;
+    let mut rng = Pcg64::new(seed);
+    let mut edges = Vec::with_capacity(2 * n);
+    let at = |r: usize, c: usize| (r * cols + c) as u32;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols && rng.chance(keep) {
+                edges.push((at(r, c), at(r, c + 1)));
+            }
+            if r + 1 < rows && rng.chance(keep) {
+                edges.push((at(r, c), at(r + 1, c)));
+            }
+        }
+    }
+    let extra = (edges.len() as f64 * shortcuts) as usize;
+    for _ in 0..extra {
+        let u = rng.below(n as u64) as u32;
+        let v = rng.below(n as u64) as u32;
+        edges.push((u, v));
+    }
+    finalize(n, edges, &mut rng, true)
+}
+
+/// Barabási–Albert preferential attachment with `m_links` edges per new
+/// vertex. Produces a heavy-tailed degree distribution by construction.
+pub fn scale_free_ba(n: usize, m_links: usize, seed: u64) -> CooMatrix {
+    assert!(n > m_links && m_links >= 1);
+    let mut rng = Pcg64::new(seed);
+    // Target list with repetition proportional to degree.
+    let mut targets: Vec<u32> = (0..m_links as u32).collect();
+    let mut edges = Vec::with_capacity(n * m_links);
+    for v in m_links..n {
+        let mut chosen = std::collections::HashSet::new();
+        while chosen.len() < m_links {
+            let t = targets[rng.range(0, targets.len())];
+            chosen.insert(t);
+        }
+        // Deterministic iteration order (HashSet order varies per process,
+        // which would make the generator non-reproducible across runs).
+        let mut chosen: Vec<u32> = chosen.into_iter().collect();
+        chosen.sort_unstable();
+        for &t in &chosen {
+            edges.push((v as u32, t));
+            targets.push(t);
+            targets.push(v as u32);
+        }
+    }
+    finalize(n, edges, &mut rng, true)
+}
+
+/// Stochastic block model: `k` equal communities over `n` vertices, edge
+/// probability `p_in` inside a community and `p_out` across. Returns the
+/// adjacency and the ground-truth community label per vertex.
+pub fn planted_partition(n: usize, k: usize, p_in: f64, p_out: f64, seed: u64) -> (CooMatrix, Vec<usize>) {
+    assert!(k >= 1 && n >= k);
+    let mut rng = Pcg64::new(seed);
+    let labels: Vec<usize> = (0..n).map(|i| i * k / n).collect();
+    // Sample expected number of edges per block pair instead of testing all
+    // O(n^2) pairs: for each pair class draw Binomial(pairs, p) ~ Poisson.
+    let mut edges = Vec::new();
+    let approx_edges_in = (p_in * (n * n) as f64 / (2.0 * k as f64)) as usize;
+    let approx_edges_out = (p_out * (n * n) as f64 * (k - 1) as f64 / (2.0 * k as f64)) as usize;
+    for _ in 0..approx_edges_in {
+        let c = rng.range(0, k);
+        let lo = c * n / k;
+        let hi = (c + 1) * n / k;
+        edges.push((rng.range(lo, hi) as u32, rng.range(lo, hi) as u32));
+    }
+    for _ in 0..approx_edges_out {
+        let u = rng.below(n as u64) as u32;
+        let v = rng.below(n as u64) as u32;
+        if labels[u as usize] != labels[v as usize] {
+            edges.push((u, v));
+        }
+    }
+    (finalize(n, edges, &mut rng, false), labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_shape_and_symmetry() {
+        let m = rmat(1 << 8, 4 * (1 << 8), 0.57, 0.19, 0.19, 1);
+        assert_eq!(m.nrows, 256);
+        assert!(m.is_symmetric(0.0));
+        // Dedup loses some edges; expect at least half the target.
+        assert!(m.nnz() > 2 * (1 << 8), "nnz={}", m.nnz());
+        assert!(m.nnz() <= 4 * (1 << 8));
+    }
+
+    #[test]
+    fn rmat_is_deterministic_per_seed() {
+        let a = rmat(1 << 7, 1 << 9, 0.57, 0.19, 0.19, 9);
+        let b = rmat(1 << 7, 1 << 9, 0.57, 0.19, 0.19, 9);
+        let c = rmat(1 << 7, 1 << 9, 0.57, 0.19, 0.19, 10);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn rmat_degree_skew_exceeds_er() {
+        let n = 1 << 10;
+        let r = rmat(n, 8 * n, 0.65, 0.15, 0.15, 4);
+        let e = erdos_renyi(n, 8 * n, 4);
+        let max_deg = |m: &CooMatrix| {
+            let mut d = vec![0usize; m.nrows];
+            for &r in &m.rows {
+                d[r as usize] += 1;
+            }
+            *d.iter().max().unwrap()
+        };
+        assert!(max_deg(&r) > 2 * max_deg(&e), "rmat={} er={}", max_deg(&r), max_deg(&e));
+    }
+
+    #[test]
+    fn mesh_degree_is_bounded() {
+        let m = mesh2d(32, 32, 0.95, 0.01, 3);
+        let mut deg = vec![0usize; m.nrows];
+        for &r in &m.rows {
+            deg[r as usize] += 1;
+        }
+        let max = *deg.iter().max().unwrap();
+        assert!(max <= 10, "road-like mesh should have tiny max degree, got {max}");
+        assert!(m.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn ba_has_no_self_loops_or_duplicates() {
+        let m = scale_free_ba(500, 3, 5);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..m.nnz() {
+            assert_ne!(m.rows[i], m.cols[i], "self loop");
+            assert!(seen.insert((m.rows[i], m.cols[i])), "duplicate entry");
+        }
+    }
+
+    #[test]
+    fn planted_partition_is_assortative() {
+        let (m, labels) = planted_partition(400, 4, 0.1, 0.005, 6);
+        let (mut within, mut across) = (0usize, 0usize);
+        for i in 0..m.nnz() {
+            if labels[m.rows[i] as usize] == labels[m.cols[i] as usize] {
+                within += 1;
+            } else {
+                across += 1;
+            }
+        }
+        assert!(within > 3 * across, "within={within} across={across}");
+    }
+
+    #[test]
+    fn weights_are_in_unit_interval() {
+        let m = rmat(1 << 6, 1 << 8, 0.57, 0.19, 0.19, 2);
+        assert!(m.vals.iter().all(|&v| v > 0.0 && v <= 1.0));
+    }
+}

@@ -1,0 +1,11 @@
+//! Graph workload substrate: synthetic generators matched to the paper's
+//! evaluation suite (Table II) plus graph-analytics helpers (adjacency /
+//! Laplacian construction) for the spectral-clustering example.
+
+mod catalog;
+mod generators;
+mod spectral;
+
+pub use catalog::{catalog, CatalogEntry, TopologyClass};
+pub use generators::{erdos_renyi, mesh2d, planted_partition, rmat, scale_free_ba};
+pub use spectral::{adjacency_to_laplacian, LaplacianKind};

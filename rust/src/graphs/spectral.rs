@@ -1,0 +1,142 @@
+//! Adjacency → Laplacian transforms used by spectral methods (§I): the
+//! application layer the paper motivates (spectral clustering consumes the
+//! Top-K eigenvectors of a graph operator).
+
+use crate::sparse::CooMatrix;
+
+/// Which Laplacian-family operator to build.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum LaplacianKind {
+    /// `L = D - A` (combinatorial Laplacian).
+    Unnormalized,
+    /// `L_sym = I - D^{-1/2} A D^{-1/2}` (symmetric normalized).
+    SymmetricNormalized,
+    /// `W = D^{-1/2} A D^{-1/2}` — the operator whose *largest* eigenpairs
+    /// drive Ng-Jordan-Weiss spectral clustering; this is the natural
+    /// input for a Top-K (largest) eigensolver like ours.
+    NormalizedAdjacency,
+}
+
+/// Build the requested operator from a symmetric adjacency matrix.
+/// Isolated vertices (degree 0) get a unit diagonal in the normalized
+/// variants so the operator stays well-defined.
+pub fn adjacency_to_laplacian(adj: &CooMatrix, kind: LaplacianKind) -> CooMatrix {
+    assert_eq!(adj.nrows, adj.ncols, "adjacency must be square");
+    let n = adj.nrows;
+    // Weighted degrees.
+    let mut deg = vec![0.0f64; n];
+    for i in 0..adj.nnz() {
+        deg[adj.rows[i] as usize] += adj.vals[i] as f64;
+    }
+    let inv_sqrt: Vec<f64> = deg.iter().map(|&d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 }).collect();
+
+    let mut out = CooMatrix::new(n, n);
+    match kind {
+        LaplacianKind::Unnormalized => {
+            for i in 0..adj.nnz() {
+                out.push(adj.rows[i] as usize, adj.cols[i] as usize, -adj.vals[i]);
+            }
+            for (i, &d) in deg.iter().enumerate() {
+                if d != 0.0 {
+                    out.push(i, i, d as f32);
+                }
+            }
+        }
+        LaplacianKind::SymmetricNormalized => {
+            for i in 0..adj.nnz() {
+                let (r, c) = (adj.rows[i] as usize, adj.cols[i] as usize);
+                let v = -(adj.vals[i] as f64) * inv_sqrt[r] * inv_sqrt[c];
+                out.push(r, c, v as f32);
+            }
+            for i in 0..n {
+                out.push(i, i, 1.0);
+            }
+        }
+        LaplacianKind::NormalizedAdjacency => {
+            for i in 0..adj.nnz() {
+                let (r, c) = (adj.rows[i] as usize, adj.cols[i] as usize);
+                let v = (adj.vals[i] as f64) * inv_sqrt[r] * inv_sqrt[c];
+                out.push(r, c, v as f32);
+            }
+            // Isolated vertices: identity block keeps the spectrum in [-1,1].
+            for (i, &d) in deg.iter().enumerate() {
+                if d == 0.0 {
+                    out.push(i, i, 1.0);
+                }
+            }
+        }
+    }
+    out.canonicalize();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Path graph 0-1-2.
+    fn path3() -> CooMatrix {
+        let mut a = CooMatrix::new(3, 3);
+        a.push(0, 1, 1.0);
+        a.push(1, 0, 1.0);
+        a.push(1, 2, 1.0);
+        a.push(2, 1, 1.0);
+        a.canonicalize();
+        a
+    }
+
+    #[test]
+    fn unnormalized_laplacian_rows_sum_to_zero() {
+        let l = adjacency_to_laplacian(&path3(), LaplacianKind::Unnormalized);
+        let ones = vec![1.0f32; 3];
+        let y = l.spmv_ref(&ones);
+        assert!(y.iter().all(|&v| v.abs() < 1e-6), "{y:?}");
+    }
+
+    #[test]
+    fn normalized_adjacency_has_unit_top_eigenvalue_direction() {
+        // For W = D^{-1/2} A D^{-1/2}, the vector D^{1/2} 1 satisfies W x = x.
+        let a = path3();
+        let w = adjacency_to_laplacian(&a, LaplacianKind::NormalizedAdjacency);
+        let x = [1.0f32, (2.0f32).sqrt(), 1.0]; // sqrt of degrees (1,2,1)
+        let y = w.spmv_ref(&x);
+        for i in 0..3 {
+            assert!((y[i] - x[i]).abs() < 1e-6, "i={i} {y:?}");
+        }
+    }
+
+    #[test]
+    fn sym_normalized_is_i_minus_w() {
+        let a = path3();
+        let l = adjacency_to_laplacian(&a, LaplacianKind::SymmetricNormalized);
+        let w = adjacency_to_laplacian(&a, LaplacianKind::NormalizedAdjacency);
+        let x = [0.3f32, -0.7, 0.2];
+        let lx = l.spmv_ref(&x);
+        let wx = w.spmv_ref(&x);
+        for i in 0..3 {
+            assert!((lx[i] - (x[i] - wx[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn all_kinds_symmetric() {
+        let a = path3();
+        for kind in [
+            LaplacianKind::Unnormalized,
+            LaplacianKind::SymmetricNormalized,
+            LaplacianKind::NormalizedAdjacency,
+        ] {
+            assert!(adjacency_to_laplacian(&a, kind).is_symmetric(1e-6), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn isolated_vertex_handled() {
+        let mut a = CooMatrix::new(3, 3);
+        a.push(0, 1, 1.0);
+        a.push(1, 0, 1.0); // vertex 2 isolated
+        let w = adjacency_to_laplacian(&a, LaplacianKind::NormalizedAdjacency);
+        let y = w.spmv_ref(&[0.0, 0.0, 1.0]);
+        assert_eq!(y[2], 1.0, "isolated vertex keeps identity action");
+    }
+}

@@ -1,0 +1,236 @@
+//! Systolic-array Jacobi (§III-B, §IV-C; Algorithm 2) — a cycle-faithful
+//! software model of the Brent-Luk processor grid.
+//!
+//! The hardware maps the `K x K` matrix onto `K^2/4` processing elements,
+//! each holding a 2x2 block. One *parallel step* does, simultaneously:
+//!
+//! 1. every diagonal PE computes its annihilating angle (Taylor trig) and
+//!    rotates its block (Fig 4a);
+//! 2. every off-diagonal PE applies the row angle from `p_ii` and the
+//!    column angle from `p_jj` (Fig 4b);
+//! 3. every eigenvector PE applies the column angle (Fig 4c);
+//! 4. rows/columns interchange per the Brent-Luk round-robin so new pairs
+//!    become adjacent — executed *in reverse order* (§IV-C2), the paper's
+//!    resource optimization that avoids K temporary vectors.
+//!
+//! Because the K/2 rotations of a step touch disjoint index pairs, the
+//! parallel hardware step is mathematically a product of commuting Givens
+//! rotations; the model applies them sequentially and counts one step.
+//! Convergence takes `O(log K)` *sweeps* (each sweep = K-1 steps of
+//! constant hardware latency), versus the CPU's `O(K^3)`-per-sweep cost.
+
+use crate::jacobi::cyclic::apply_givens;
+use crate::jacobi::trig::{rotation_coeffs, TrigMode};
+use crate::linalg::DenseMatrix;
+
+/// Statistics from a systolic run (consumed by the FPGA timing model).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SystolicStats {
+    /// Parallel steps executed (each = constant cycles in hardware).
+    pub steps: usize,
+    /// Full sweeps (K-1 steps each).
+    pub sweeps: usize,
+    /// Total 2x2 rotations performed across all PEs.
+    pub rotations: usize,
+}
+
+/// Round-robin pairing state (the tournament "circle method").
+///
+/// Slots: `top[i]` meets `bottom[i]`. Element `top[0]` is pinned; the rest
+/// rotate one position per step. After `K-1` steps every unordered pair has
+/// met exactly once — this is precisely the Brent-Luk data movement, with
+/// the physical shifts realized here as an index permutation (the hardware
+/// moves values between neighbour PEs; §IV-C2's "reverse order" trick makes
+/// those shifts in-place with FFs only).
+#[derive(Clone, Debug)]
+pub struct RoundRobin {
+    top: Vec<usize>,
+    bottom: Vec<usize>,
+}
+
+impl RoundRobin {
+    /// Initial adjacent pairing (0,1), (2,3), ...
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 2 && k % 2 == 0, "round robin needs even k >= 2, got {k}");
+        let top = (0..k / 2).map(|i| 2 * i).collect();
+        let bottom = (0..k / 2).map(|i| 2 * i + 1).collect();
+        Self { top, bottom }
+    }
+
+    /// Current disjoint pairs.
+    pub fn pairs(&self) -> Vec<(usize, usize)> {
+        self.top.iter().zip(&self.bottom).map(|(&a, &b)| (a.min(b), a.max(b))).collect()
+    }
+
+    /// Advance one step. The shift runs from high indices to low —
+    /// "in reverse" — so each slot's source is read before being
+    /// overwritten, the in-place schedule of §IV-C2.
+    pub fn advance(&mut self) {
+        let m = self.top.len();
+        if m == 1 {
+            return;
+        }
+        // Keep top[0]; bottom[0] moves into top[1]; top shifts right;
+        // bottom shifts left; top[m-1] drops into bottom[m-1].
+        let incoming_top = self.bottom[0];
+        let outgoing_top = self.top[m - 1];
+        // Reverse-order in-place shifts (no K-length temporaries).
+        for i in (2..m).rev() {
+            self.top[i] = self.top[i - 1];
+        }
+        self.top[1] = incoming_top;
+        for i in 0..m - 1 {
+            self.bottom[i] = self.bottom[i + 1];
+        }
+        self.bottom[m - 1] = outgoing_top;
+    }
+}
+
+/// Diagonalize a symmetric `K x K` matrix on the systolic model.
+///
+/// Returns `(diagonalized A, V, stats)` with `A_in = V A_diag V^T`.
+/// `K` may be odd: the schedule pads with a phantom index that never
+/// rotates (a "bye" in the tournament).
+pub fn systolic_jacobi(
+    a: &DenseMatrix,
+    mode: TrigMode,
+    tol: f64,
+    max_sweeps: usize,
+) -> (DenseMatrix, DenseMatrix, SystolicStats) {
+    assert!(a.is_symmetric(1e-9), "systolic Jacobi expects symmetric input");
+    let k = a.nrows;
+    let mut work = a.clone();
+    let mut v = DenseMatrix::identity(k);
+    let mut stats = SystolicStats::default();
+    if k == 1 {
+        return (work, v, stats);
+    }
+    let padded = k + (k % 2); // phantom "bye" index when odd
+    let steps_per_sweep = padded - 1;
+
+    let mut rr = RoundRobin::new(padded);
+    while work.max_offdiag() > tol && stats.sweeps < max_sweeps {
+        for _ in 0..steps_per_sweep {
+            // One parallel hardware step: all disjoint pairs rotate.
+            for (p, q) in rr.pairs() {
+                if q >= k {
+                    continue; // bye
+                }
+                if work[(p, q)].abs() <= tol * 0.1 {
+                    continue; // PE idles; no rotation issued
+                }
+                let (c, s) = rotation_coeffs(work[(p, p)], work[(p, q)], work[(q, q)], mode);
+                apply_givens(&mut work, &mut v, p, q, c, s);
+                stats.rotations += 1;
+            }
+            rr.advance();
+            stats.steps += 1;
+        }
+        stats.sweeps += 1;
+    }
+    (work, v, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Tridiagonal;
+
+    fn rand_tridiag(k: usize, seed: u64) -> DenseMatrix {
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        let alpha: Vec<f64> = (0..k).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+        let beta: Vec<f64> = (0..k - 1).map(|_| rng.f64_range(-1.0, 1.0)).collect();
+        Tridiagonal::new(alpha, beta).to_dense()
+    }
+
+    #[test]
+    fn round_robin_meets_every_pair_once() {
+        for k in [4usize, 6, 8, 16] {
+            let mut rr = RoundRobin::new(k);
+            let mut met = std::collections::HashSet::new();
+            for _ in 0..k - 1 {
+                for (p, q) in rr.pairs() {
+                    assert!(met.insert((p, q)), "pair ({p},{q}) met twice in k={k}");
+                }
+                rr.advance();
+            }
+            assert_eq!(met.len(), k * (k - 1) / 2, "k={k}");
+        }
+    }
+
+    #[test]
+    fn round_robin_pairs_are_disjoint_each_step() {
+        let mut rr = RoundRobin::new(12);
+        for _ in 0..11 {
+            let mut used = std::collections::HashSet::new();
+            for (p, q) in rr.pairs() {
+                assert!(used.insert(p) && used.insert(q));
+            }
+            rr.advance();
+        }
+    }
+
+    #[test]
+    fn diagonalizes_tridiagonal_and_matches_sturm() {
+        let t = Tridiagonal::new(vec![2.0, 2.0, 2.0, 2.0], vec![-1.0, -1.0, -1.0]);
+        let (d, v, stats) = systolic_jacobi(&t.to_dense(), TrigMode::Exact, 1e-12, 40);
+        assert!(d.max_offdiag() < 1e-10);
+        assert!(stats.sweeps <= 12, "sweeps {}", stats.sweeps);
+        // Every diagonal entry must be an eigenvalue per Sturm counting.
+        for i in 0..4 {
+            let lam = d[(i, i)];
+            let below = t.eigenvalues_below(lam - 1e-9);
+            let below_up = t.eigenvalues_below(lam + 1e-9);
+            assert_eq!(below_up - below, 1, "lambda {lam} not in spectrum");
+        }
+        let rec = v.matmul(&d).matmul(&v.transpose());
+        assert!(rec.max_abs_diff(&t.to_dense()) < 1e-9);
+    }
+
+    #[test]
+    fn odd_k_padding_works() {
+        let a = rand_tridiag(7, 3);
+        let (d, v, _) = systolic_jacobi(&a, TrigMode::Exact, 1e-11, 60);
+        assert!(d.max_offdiag() < 1e-9);
+        let rec = v.matmul(&d).matmul(&v.transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-8);
+    }
+
+    #[test]
+    fn taylor_mode_matches_exact_eigenvalues_to_hw_tolerance() {
+        let a = rand_tridiag(8, 17);
+        let (d_ex, _, _) = systolic_jacobi(&a, TrigMode::Exact, 1e-12, 60);
+        let (d_ty, _, _) = systolic_jacobi(&a, TrigMode::Taylor3, 1e-7, 60);
+        let mut ex: Vec<f64> = (0..8).map(|i| d_ex[(i, i)]).collect();
+        let mut ty: Vec<f64> = (0..8).map(|i| d_ty[(i, i)]).collect();
+        ex.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        ty.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        for (e, t) in ex.iter().zip(&ty) {
+            assert!((e - t).abs() < 1e-5, "exact {e} vs taylor {t}");
+        }
+    }
+
+    #[test]
+    fn sweeps_grow_slowly_with_k() {
+        // O(log K) convergence: doubling K should add O(1) sweeps.
+        let mut sweeps = Vec::new();
+        for k in [4usize, 8, 16, 32] {
+            let a = rand_tridiag(k, 42);
+            let (_, _, stats) = systolic_jacobi(&a, TrigMode::Exact, 1e-10, 100);
+            sweeps.push(stats.sweeps);
+        }
+        // Each doubling adds at most ~4 sweeps (log-like), never doubles.
+        for w in sweeps.windows(2) {
+            assert!(w[1] <= w[0] + 5, "sweeps jumped {} -> {}", w[0], w[1]);
+            assert!(w[1] < 2 * w[0].max(3), "super-log growth {:?}", sweeps);
+        }
+    }
+
+    #[test]
+    fn rotations_bounded_by_steps_times_pes() {
+        let a = rand_tridiag(8, 7);
+        let (_, _, stats) = systolic_jacobi(&a, TrigMode::Exact, 1e-10, 50);
+        assert!(stats.rotations <= stats.steps * 4, "{stats:?}");
+        assert_eq!(stats.steps, stats.sweeps * 7, "{stats:?}");
+    }
+}

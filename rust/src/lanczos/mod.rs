@@ -1,0 +1,345 @@
+//! Phase 1 — the Lanczos algorithm (§III-A, Algorithm 1).
+//!
+//! Reduces a symmetric sparse operator `M` (n x n) to a `K x K` symmetric
+//! tridiagonal matrix `T` plus `K` orthonormal Lanczos vectors `V`, such
+//! that eigenpairs of `T` lift to approximate eigenpairs of `M`
+//! (`lambda(T) ≈ lambda(M)`, eigenvector `= V^T x`).
+//!
+//! Numerical-stability features reproduced from the paper:
+//! * Paige's reordered recurrence [31]: `alpha` is computed against the
+//!   *current* `w` after subtracting the `beta v_{i-1}` term.
+//! * Full reorthogonalization [32] with a configurable cadence
+//!   ([`ReorthPolicy`]): every iteration, every 2 iterations (the paper's
+//!   recommended cheap mode), or off.
+//! * Frobenius pre-normalization is expected upstream (see
+//!   [`crate::sparse::normalize_frobenius`]); with entries in `(-1,1)` the
+//!   mixed-precision datapath ([`crate::fixed::Precision`]) quantizes
+//!   Lanczos vectors exactly where the FPGA design uses fixed point.
+
+mod operator;
+
+pub use operator::{CountingOperator, Operator, ShardedSpmv};
+
+use crate::fixed::Precision;
+use crate::linalg::{self, Tridiagonal};
+
+/// Reorthogonalization cadence (§III-A).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum ReorthPolicy {
+    /// No reorthogonalization: fastest, loses orthogonality for large K.
+    None,
+    /// Reorthogonalize every iteration: `O(n K^2 / 2)` extra work.
+    Every,
+    /// Every `N` iterations (the paper evaluates N=2: "negligible accuracy
+    /// loss" at half the overhead).
+    EveryN(usize),
+}
+
+impl ReorthPolicy {
+    fn due(self, iter: usize) -> bool {
+        match self {
+            ReorthPolicy::None => false,
+            ReorthPolicy::Every => true,
+            ReorthPolicy::EveryN(n) => n != 0 && iter % n == 0,
+        }
+    }
+
+    /// Name for reports.
+    pub fn name(self) -> String {
+        match self {
+            ReorthPolicy::None => "none".into(),
+            ReorthPolicy::Every => "every".into(),
+            ReorthPolicy::EveryN(n) => format!("every-{n}"),
+        }
+    }
+}
+
+/// Options for one Lanczos run.
+#[derive(Clone, Debug)]
+pub struct LanczosOptions {
+    /// Number of eigencomponents K (and Lanczos iterations).
+    pub k: usize,
+    /// Reorthogonalization cadence.
+    pub reorth: ReorthPolicy,
+    /// Arithmetic mode for the Lanczos-vector datapath.
+    pub precision: Precision,
+    /// Starting vector: uniform `1/n^2`-style (the paper's init) when
+    /// `None`, otherwise the provided vector (will be normalized).
+    pub v1: Option<Vec<f32>>,
+}
+
+impl Default for LanczosOptions {
+    fn default() -> Self {
+        Self { k: 8, reorth: ReorthPolicy::EveryN(2), precision: Precision::Float32, v1: None }
+    }
+}
+
+/// Lanczos output: `T`, the Lanczos basis, and diagnostics.
+#[derive(Clone, Debug)]
+pub struct LanczosResult {
+    /// The K x K symmetric tridiagonal projection.
+    pub tridiag: Tridiagonal,
+    /// Lanczos vectors, `k` rows each of length `n` (the paper's `V`,
+    /// streamed to DDR on the device).
+    pub basis: Vec<Vec<f32>>,
+    /// Iteration at which the recurrence broke down (`beta -> 0`), if any.
+    /// A breakdown at iteration `i` truncates the output to `i` components
+    /// — mathematically it means an exact invariant subspace was found.
+    pub breakdown_at: Option<usize>,
+    /// Number of SpMV applications performed.
+    pub spmv_count: usize,
+}
+
+impl LanczosResult {
+    /// Effective number of components produced.
+    pub fn k(&self) -> usize {
+        self.tridiag.k()
+    }
+}
+
+/// Run Algorithm 1 against an [`Operator`].
+///
+/// Breakdown (`beta_i ≈ 0`) truncates the decomposition early rather than
+/// erroring: the subspace found so far is exactly invariant, which is a
+/// *better* answer, not a failure.
+pub fn lanczos<O: Operator + ?Sized>(op: &O, opts: &LanczosOptions) -> LanczosResult {
+    let n = op.n();
+    let k = opts.k;
+    assert!(k >= 1, "k must be >= 1");
+    assert!(k <= n, "k = {k} exceeds matrix dimension {n}");
+
+    // v1: the paper initializes with constant 1/n^2 values then L2-
+    // normalizes — i.e. the normalized uniform vector.
+    let mut v = match &opts.v1 {
+        Some(v1) => {
+            assert_eq!(v1.len(), n, "v1 length mismatch");
+            v1.clone()
+        }
+        None => vec![1.0f32; n],
+    };
+    if linalg::normalize(&mut v) == 0.0 {
+        panic!("starting vector must be non-zero");
+    }
+    opts.precision.quantize_slice(&mut v);
+
+    let mut v_prev = vec![0.0f32; n];
+    let mut beta_prev = 0.0f64;
+    let mut alphas: Vec<f64> = Vec::with_capacity(k);
+    let mut betas: Vec<f64> = Vec::with_capacity(k.saturating_sub(1));
+    let mut basis: Vec<Vec<f32>> = Vec::with_capacity(k);
+    let mut w = vec![0.0f32; n];
+    let mut breakdown_at = None;
+    let mut spmv_count = 0usize;
+
+    // Breakdown tolerance scaled to the arithmetic in use: fixed-point
+    // vectors cannot meaningfully normalize below ~sqrt(n)*ulp.
+    let bd_tol = match opts.precision {
+        Precision::Float32 => 1e-12,
+        _ => 1e-9,
+    };
+
+    for i in 0..k {
+        basis.push(v.clone());
+
+        // w = M v  (Algorithm 1 line 7; the memory-bound phase).
+        op.apply(&v, &mut w);
+        spmv_count += 1;
+
+        // Paige variant [31]: subtract beta*v_{i-1} *before* alpha.
+        if i > 0 {
+            linalg::axpy(-(beta_prev as f32), &v_prev, &mut w);
+        }
+        let alpha = linalg::dot(&w, &v);
+        alphas.push(alpha);
+        linalg::axpy(-(alpha as f32), &v, &mut w);
+
+        if i + 1 == k {
+            break;
+        }
+
+        // Reorthogonalization (line 10): modified Gram-Schmidt against the
+        // whole basis, on the paper's cadence.
+        if opts.reorth.due(i + 1) {
+            for b in &basis {
+                let proj = linalg::dot(&w, b);
+                linalg::axpy(-(proj as f32), b, &mut w);
+            }
+        }
+
+        let beta = linalg::norm2(&w);
+        if beta < bd_tol {
+            breakdown_at = Some(i + 1);
+            break;
+        }
+
+        v_prev.copy_from_slice(&v);
+        let inv = (1.0 / beta) as f32;
+        for (vi, wi) in v.iter_mut().zip(&w) {
+            *vi = wi * inv;
+        }
+        // Mixed precision: the device stores Lanczos vectors in Q-format.
+        opts.precision.quantize_slice(&mut v);
+        beta_prev = beta;
+        betas.push(beta);
+    }
+
+    LanczosResult {
+        tridiag: Tridiagonal::new(alphas, betas),
+        basis,
+        breakdown_at,
+        spmv_count,
+    }
+}
+
+/// Lift an eigenvector `x` of `T` back to an (approximate) eigenvector of
+/// `M`: `q = sum_i x_i v_i`, normalized.
+pub fn lift_eigenvector(basis: &[Vec<f32>], x: &[f64]) -> Vec<f32> {
+    assert_eq!(basis.len(), x.len(), "basis/eigvec size mismatch");
+    let n = basis[0].len();
+    let mut q = vec![0.0f32; n];
+    for (xi, vi) in x.iter().zip(basis) {
+        linalg::axpy(*xi as f32, vi, &mut q);
+    }
+    linalg::normalize(&mut q);
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooMatrix;
+
+    /// Diagonal test matrix: eigenvalues are exactly the diagonal.
+    fn diag(vals: &[f32]) -> crate::sparse::CsrMatrix {
+        let n = vals.len();
+        let mut m = CooMatrix::new(n, n);
+        for (i, &v) in vals.iter().enumerate() {
+            m.push(i, i, v);
+        }
+        m.to_csr()
+    }
+
+    /// 1-D Laplacian path graph: known spectrum 2 - 2cos(pi j / (n+1)).
+    fn path_laplacian(n: usize) -> crate::sparse::CsrMatrix {
+        let mut m = CooMatrix::new(n, n);
+        for i in 0..n {
+            m.push(i, i, 2.0);
+            if i + 1 < n {
+                m.push(i, i + 1, -1.0);
+                m.push(i + 1, i, -1.0);
+            }
+        }
+        m.to_csr()
+    }
+
+    #[test]
+    fn tridiagonal_matches_operator_on_invariant_subspace() {
+        // With k == n and full reorth, T is orthogonally similar to M:
+        // same spectrum (checked through Sturm counts).
+        let m = path_laplacian(12);
+        let res = lanczos(&m, &LanczosOptions { k: 12, reorth: ReorthPolicy::Every, v1: Some((0..12).map(|i| 1.0 + (i as f32) * 0.1).collect()), ..Default::default() });
+        assert!(res.breakdown_at.is_none());
+        for j in 1..=12 {
+            let lam = 2.0 - 2.0 * (std::f64::consts::PI * j as f64 / 13.0).cos();
+            // count eigenvalues below lam + eps must equal j
+            assert_eq!(res.tridiag.eigenvalues_below(lam + 1e-5), j, "j={j}");
+        }
+    }
+
+    #[test]
+    fn basis_is_orthonormal_with_reorth() {
+        let m = path_laplacian(64);
+        let res = lanczos(&m, &LanczosOptions { k: 16, reorth: ReorthPolicy::Every, ..Default::default() });
+        for i in 0..res.basis.len() {
+            assert!((linalg::norm2(&res.basis[i]) - 1.0).abs() < 1e-5, "row {i} not unit");
+            for j in 0..i {
+                let d = linalg::dot(&res.basis[i], &res.basis[j]).abs();
+                assert!(d < 1e-4, "rows {i},{j} dot {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn breakdown_on_low_rank_operator() {
+        // Identity has one distinct eigenvalue: breakdown at iteration 1.
+        let m = diag(&[1.0; 16]);
+        let res = lanczos(&m, &LanczosOptions { k: 8, ..Default::default() });
+        assert_eq!(res.breakdown_at, Some(1));
+        assert_eq!(res.k(), 1);
+        assert!((res.tridiag.alpha[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spmv_count_is_k() {
+        let m = path_laplacian(32);
+        let c = CountingOperator::new(m);
+        let res = lanczos(&c, &LanczosOptions { k: 10, ..Default::default() });
+        assert_eq!(res.spmv_count, 10);
+        assert_eq!(c.count(), 10);
+    }
+
+    #[test]
+    fn custom_start_vector_is_used_and_normalized() {
+        let m = diag(&[0.9, 0.1, 0.1, 0.1]);
+        // Start exactly on the dominant eigenvector: alpha_1 = 0.9.
+        let res = lanczos(
+            &m,
+            &LanczosOptions { k: 1, v1: Some(vec![10.0, 0.0, 0.0, 0.0]), ..Default::default() },
+        );
+        assert!((res.tridiag.alpha[0] - 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lift_recovers_diagonal_eigenvector() {
+        let m = diag(&[0.9, -0.5, 0.3, 0.1, 0.05, 0.01]);
+        let res = lanczos(
+            &m,
+            &LanczosOptions {
+                k: 6,
+                reorth: ReorthPolicy::Every,
+                v1: Some(vec![1.0, 0.9, 0.8, 0.7, 0.6, 0.5]),
+                ..Default::default()
+            },
+        );
+        // Solve T with the QR reference and lift the top eigenvector.
+        let (vals, vecs) = crate::linalg::qr_algorithm_symmetric(&res.tridiag.to_dense(), 1e-14, 500);
+        assert!((vals[0] - 0.9).abs() < 1e-4, "vals[0]={}", vals[0]);
+        let q = lift_eigenvector(&res.basis, &vecs.col(0));
+        // Must align with e_0 (up to sign).
+        assert!(q[0].abs() > 0.99, "q[0] = {}", q[0]);
+    }
+
+    #[test]
+    fn fixed_point_stays_close_to_float() {
+        let m = path_laplacian(128);
+        // Normalize spectrum into (-1,1) as the design requires.
+        let mut coo = m.to_coo();
+        crate::sparse::normalize_frobenius(&mut coo);
+        let m = coo.to_csr();
+        let base = lanczos(&m, &LanczosOptions { k: 8, reorth: ReorthPolicy::Every, ..Default::default() });
+        let fx = lanczos(
+            &m,
+            &LanczosOptions {
+                k: 8,
+                reorth: ReorthPolicy::Every,
+                precision: Precision::FixedQ1_31,
+                ..Default::default()
+            },
+        );
+        for i in 0..8 {
+            assert!(
+                (base.tridiag.alpha[i] - fx.tridiag.alpha[i]).abs() < 1e-4,
+                "alpha[{i}] {} vs {}",
+                base.tridiag.alpha[i],
+                fx.tridiag.alpha[i]
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds matrix dimension")]
+    fn k_larger_than_n_panics() {
+        let m = diag(&[1.0, 2.0]);
+        lanczos(&m, &LanczosOptions { k: 5, ..Default::default() });
+    }
+}

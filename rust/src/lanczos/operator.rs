@@ -1,0 +1,172 @@
+//! The SpMV operator abstraction consumed by the Lanczos loop.
+//!
+//! The paper's Lanczos Core reads the matrix through 5 HBM-fed SpMV CUs and
+//! merges per-CU partial vectors (Figure 6 A-C). At the L3 layer that
+//! decomposition appears as [`Operator`] implementations:
+//!
+//! * [`CsrMatrix`] — single-threaded native kernel (the unit baseline).
+//! * [`ShardedSpmv`] — one worker per CU over nnz-balanced row stripes;
+//!   the structural twin of the hardware design (each stripe = one CU, the
+//!   scoped join = the Merge Unit).
+//! * `runtime::PjrtSpmv` — the AOT path: the same computation through a
+//!   Pallas/XLA artifact executed via PJRT (see `runtime`).
+
+use crate::sparse::{partition_rows_balanced, CsrMatrix, PartitionPolicy, RowPartition};
+use crate::util::pool::ThreadPool;
+use std::sync::Arc;
+
+/// A symmetric linear operator `y = M x` over `f32` vectors.
+pub trait Operator: Send + Sync {
+    /// Rows (== cols; operators here are square/symmetric).
+    fn n(&self) -> usize;
+    /// Stored non-zeros (for complexity accounting).
+    fn nnz(&self) -> usize;
+    /// Apply: write `M x` into `y` (`y.len() == n()`).
+    fn apply(&self, x: &[f32], y: &mut [f32]);
+}
+
+impl Operator for CsrMatrix {
+    fn n(&self) -> usize {
+        self.nrows
+    }
+    fn nnz(&self) -> usize {
+        CsrMatrix::nnz(self)
+    }
+    fn apply(&self, x: &[f32], y: &mut [f32]) {
+        self.spmv_into(x, y, 0, self.nrows);
+    }
+}
+
+/// Multi-CU SpMV: row stripes dispatched to a thread pool, one worker per
+/// CU shard. Output regions are disjoint so no synchronization is needed
+/// beyond the final join — exactly the paper's partition + merge scheme.
+pub struct ShardedSpmv {
+    matrix: Arc<CsrMatrix>,
+    parts: Vec<RowPartition>,
+    pool: Arc<ThreadPool>,
+}
+
+impl ShardedSpmv {
+    /// Shard `matrix` into `cus` stripes under `policy` and run them on
+    /// `pool` (pool should have >= `cus` workers for full overlap).
+    pub fn new(matrix: Arc<CsrMatrix>, cus: usize, policy: PartitionPolicy, pool: Arc<ThreadPool>) -> Self {
+        let parts = partition_rows_balanced(&matrix, cus, policy);
+        Self { matrix, parts, pool }
+    }
+
+    /// The shard table (exposed for the FPGA model and tests).
+    pub fn partitions(&self) -> &[RowPartition] {
+        &self.parts
+    }
+}
+
+impl Operator for ShardedSpmv {
+    fn n(&self) -> usize {
+        self.matrix.nrows
+    }
+    fn nnz(&self) -> usize {
+        self.matrix.nnz()
+    }
+    fn apply(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(y.len(), self.matrix.nrows);
+        let m = &self.matrix;
+        let parts = &self.parts;
+        // SAFETY-free disjoint writes: each task owns rows [row_start,row_end).
+        // We hand each worker a raw pointer range via split borrows.
+        let y_ptr = SendPtr(y.as_mut_ptr());
+        self.pool.scope_chunks(parts.len(), |i| {
+            let p = parts[i];
+            // Reconstruct the worker's disjoint sub-slice.
+            let y_slice = unsafe {
+                std::slice::from_raw_parts_mut(y_ptr.get(), m.nrows)
+            };
+            m.spmv_into(x, y_slice, p.row_start, p.row_end);
+        });
+    }
+}
+
+/// Pointer wrapper proving to the compiler we uphold disjointness manually.
+#[derive(Copy, Clone)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    fn get(self) -> *mut f32 {
+        self.0
+    }
+}
+
+/// Operator counting applications — used by tests and the coordinator's
+/// metrics to assert the expected number of SpMVs (K per solve, §III-A).
+pub struct CountingOperator<O: Operator> {
+    inner: O,
+    count: std::sync::atomic::AtomicUsize,
+}
+
+impl<O: Operator> CountingOperator<O> {
+    /// Wrap an operator.
+    pub fn new(inner: O) -> Self {
+        Self { inner, count: std::sync::atomic::AtomicUsize::new(0) }
+    }
+    /// Number of `apply` calls so far.
+    pub fn count(&self) -> usize {
+        self.count.load(std::sync::atomic::Ordering::SeqCst)
+    }
+}
+
+impl<O: Operator> Operator for CountingOperator<O> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+    fn nnz(&self) -> usize {
+        self.inner.nnz()
+    }
+    fn apply(&self, x: &[f32], y: &mut [f32]) {
+        self.count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        self.inner.apply(x, y);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphs;
+
+    #[test]
+    fn sharded_matches_serial() {
+        let m = Arc::new(graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 3).to_csr());
+        let pool = Arc::new(ThreadPool::new(5));
+        let x: Vec<f32> = (0..m.nrows).map(|i| ((i * 37) % 11) as f32 * 0.1 - 0.5).collect();
+        let serial = m.spmv(&x);
+        for cus in [1, 2, 5, 8] {
+            for policy in [PartitionPolicy::EqualRows, PartitionPolicy::BalancedNnz] {
+                let sharded = ShardedSpmv::new(Arc::clone(&m), cus, policy, Arc::clone(&pool));
+                let mut y = vec![0.0f32; m.nrows];
+                sharded.apply(&x, &mut y);
+                assert_eq!(serial, y, "cus={cus} policy={policy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn partitions_tile_rows() {
+        let m = Arc::new(graphs::mesh2d(40, 40, 0.9, 0.01, 5).to_csr());
+        let pool = Arc::new(ThreadPool::new(4));
+        let s = ShardedSpmv::new(Arc::clone(&m), 5, PartitionPolicy::BalancedNnz, pool);
+        let parts = s.partitions();
+        assert_eq!(parts.len(), 5);
+        assert_eq!(parts[0].row_start, 0);
+        assert_eq!(parts.last().unwrap().row_end, m.nrows);
+    }
+
+    #[test]
+    fn counting_operator_counts() {
+        let m = graphs::erdos_renyi(128, 512, 1).to_csr();
+        let c = CountingOperator::new(m);
+        let x = vec![1.0f32; 128];
+        let mut y = vec![0.0f32; 128];
+        c.apply(&x, &mut y);
+        c.apply(&x, &mut y);
+        assert_eq!(c.count(), 2);
+    }
+}

@@ -1,0 +1,65 @@
+//! # topk-eigen
+//!
+//! A Top-K sparse graph eigensolver reproducing *"Solving Large Top-K Graph
+//! Eigenproblems with a Memory and Compute-optimized FPGA Design"*
+//! (Sgherzi et al., 2021).
+//!
+//! The solver is a two-phase pipeline:
+//!
+//! 1. **Lanczos** (memory-bound): reduces a sparse symmetric `n x n` matrix
+//!    `M` to a `K x K` symmetric tridiagonal matrix `T` plus `K` orthogonal
+//!    Lanczos vectors, with the Sparse Matrix-Vector product (SpMV) as the
+//!    dominant cost. The paper streams the COO matrix through 5 HBM-fed
+//!    compute units; we reproduce that decomposition with a sharded SpMV
+//!    engine (one shard per "CU") and an FPGA performance model.
+//! 2. **Jacobi** (compute-bound): diagonalizes `T` with a systolic-array
+//!    formulation of the Jacobi eigenvalue algorithm (Brent-Luk schedule
+//!    with the paper's reverse-order row/column interchange), yielding the
+//!    Top-K eigenvalues of `M` and, via the Lanczos basis, its eigenvectors.
+//!
+//! The crate is the L3 (coordinator) layer of a three-layer stack: L2/L1 are
+//! JAX + Pallas programs AOT-lowered to HLO text at build time
+//! (`make artifacts`) and executed from rust through PJRT ([`runtime`]).
+//! Python is never on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use topk_eigen::prelude::*;
+//!
+//! // Build a small random power-law graph and solve for the top 8 pairs.
+//! let m = graphs::rmat(1 << 12, 8 * (1 << 12), 0.57, 0.19, 0.19, 42);
+//! let opts = coordinator::SolveOptions { k: 8, ..Default::default() };
+//! let sol = coordinator::Solver::new(opts).solve(&m).unwrap();
+//! for (lambda, _v) in sol.pairs() {
+//!     println!("lambda = {lambda}");
+//! }
+//! ```
+#![warn(missing_docs)]
+
+pub mod arnoldi;
+pub mod bench;
+pub mod coordinator;
+pub mod fixed;
+pub mod fpga;
+pub mod graphs;
+pub mod iram;
+pub mod jacobi;
+pub mod lanczos;
+pub mod linalg;
+pub mod runtime;
+pub mod sparse;
+pub mod util;
+
+/// Convenient glob-import of the most used types.
+pub mod prelude {
+    pub use crate::coordinator::{self, SolveOptions, Solver};
+    pub use crate::fixed::{Q1_15, Q1_31, Q2_30};
+    pub use crate::fpga;
+    pub use crate::graphs;
+    pub use crate::jacobi::{self, JacobiMode};
+    pub use crate::lanczos::{self, LanczosOptions, ReorthPolicy};
+    pub use crate::linalg;
+    pub use crate::sparse::{CooMatrix, CsrMatrix};
+    pub use crate::util::rng::Pcg64;
+}

@@ -1,0 +1,222 @@
+//! Small dense matrix (row-major, f64) used for the K x K stage: the Jacobi
+//! input/outputs, IRAM's projected problem, and verification math. K is at
+//! most a few dozen in this system, so clarity beats blocking here.
+
+use crate::linalg::vecops;
+
+/// Row-major dense matrix of `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    /// Rows.
+    pub nrows: usize,
+    /// Columns.
+    pub ncols: usize,
+    /// Row-major data, `len == nrows * ncols`.
+    pub data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    /// Zero matrix.
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        Self { nrows, ncols, data: vec![0.0; nrows * ncols] }
+    }
+
+    /// Identity.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// From row-major data.
+    pub fn from_rows(nrows: usize, ncols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), nrows * ncols);
+        Self { nrows, ncols, data }
+    }
+
+    /// Column `j` as a vector.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.nrows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Matrix product `self * rhs`.
+    pub fn matmul(&self, rhs: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.ncols, rhs.nrows);
+        let mut out = DenseMatrix::zeros(self.nrows, rhs.ncols);
+        for i in 0..self.nrows {
+            for k in 0..self.ncols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..rhs.ncols {
+                    out[(i, j)] += a * rhs[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self * x` for a dense vector.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        for i in 0..self.nrows {
+            let row = &self.data[i * self.ncols..(i + 1) * self.ncols];
+            y[i] = row.iter().zip(x).map(|(&a, &b)| a * b).sum();
+        }
+        y
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> DenseMatrix {
+        let mut t = DenseMatrix::zeros(self.ncols, self.nrows);
+        for i in 0..self.nrows {
+            for j in 0..self.ncols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Largest absolute off-diagonal entry (Jacobi convergence criterion).
+    pub fn max_offdiag(&self) -> f64 {
+        let mut m = 0.0f64;
+        for i in 0..self.nrows {
+            for j in 0..self.ncols {
+                if i != j {
+                    m = m.max(self[(i, j)].abs());
+                }
+            }
+        }
+        m
+    }
+
+    /// Is `self` symmetric within `tol`?
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.nrows != self.ncols {
+            return false;
+        }
+        for i in 0..self.nrows {
+            for j in (i + 1)..self.ncols {
+                if (self[(i, j)] - self[(j, i)]).abs() > tol {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Max |self - other| entry; panics on shape mismatch.
+    pub fn max_abs_diff(&self, other: &DenseMatrix) -> f64 {
+        assert_eq!((self.nrows, self.ncols), (other.nrows, other.ncols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Orthonormality defect `max |Q^T Q - I|` of the columns.
+    pub fn orthonormality_defect(&self) -> f64 {
+        let qtq = self.transpose().matmul(self);
+        qtq.max_abs_diff(&DenseMatrix::identity(self.ncols))
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for DenseMatrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.ncols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for DenseMatrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.ncols + j]
+    }
+}
+
+/// Mean pairwise angle (degrees) between the columns of `q` — the paper's
+/// orthogonality metric for Fig 11 (ideal: 90 degrees).
+pub fn mean_pairwise_angle_deg(cols: &[Vec<f32>]) -> f64 {
+    let k = cols.len();
+    if k < 2 {
+        return 90.0;
+    }
+    let mut sum = 0.0;
+    let mut cnt = 0usize;
+    for i in 0..k {
+        for j in (i + 1)..k {
+            let c = vecops::dot(&cols[i], &cols[j])
+                / (vecops::norm2(&cols[i]) * vecops::norm2(&cols[j])).max(1e-300);
+            let c = c.clamp(-1.0, 1.0);
+            sum += c.acos().to_degrees();
+            cnt += 1;
+        }
+    }
+    sum / cnt as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_hand_checked() {
+        let a = DenseMatrix::from_rows(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = DenseMatrix::from_rows(3, 2, vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let a = DenseMatrix::from_rows(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let i = DenseMatrix::identity(2);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = DenseMatrix::from_rows(3, 3, (1..=9).map(|v| v as f64).collect());
+        let x = vec![1.0, 0.5, -1.0];
+        let bx = DenseMatrix::from_rows(3, 1, x.clone());
+        let via_mm = a.matmul(&bx);
+        assert_eq!(a.matvec(&x), via_mm.data);
+    }
+
+    #[test]
+    fn transpose_and_symmetry() {
+        let a = DenseMatrix::from_rows(2, 2, vec![1.0, 2.0, 2.0, 5.0]);
+        assert!(a.is_symmetric(0.0));
+        assert_eq!(a.transpose(), a);
+        let b = DenseMatrix::from_rows(2, 2, vec![1.0, 2.0, 3.0, 5.0]);
+        assert!(!b.is_symmetric(0.5));
+    }
+
+    #[test]
+    fn offdiag_and_defect() {
+        let a = DenseMatrix::from_rows(2, 2, vec![5.0, 0.25, -0.5, 7.0]);
+        assert_eq!(a.max_offdiag(), 0.5);
+        assert!(DenseMatrix::identity(4).orthonormality_defect() < 1e-15);
+    }
+
+    #[test]
+    fn mean_angle_of_orthonormal_basis_is_90() {
+        let cols = vec![vec![1.0f32, 0.0, 0.0], vec![0.0, 1.0, 0.0], vec![0.0, 0.0, 1.0]];
+        assert!((mean_pairwise_angle_deg(&cols) - 90.0).abs() < 1e-9);
+        let slanted = vec![vec![1.0f32, 0.0], vec![1.0, 1.0]];
+        assert!((mean_pairwise_angle_deg(&slanted) - 45.0).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,13 @@
+//! Dense linear-algebra substrate: vector kernels, a small dense matrix
+//! type, tridiagonal utilities, and QR — everything the Lanczos loop, the
+//! IRAM baseline, and the verification paths need, with no external BLAS.
+
+mod dense;
+mod qr;
+mod tridiag;
+mod vecops;
+
+pub use dense::{mean_pairwise_angle_deg, DenseMatrix};
+pub use qr::{qr_decompose, qr_algorithm_symmetric};
+pub use tridiag::Tridiagonal;
+pub use vecops::{axpy, dot, norm2, normalize, scale, waxpby};

@@ -1,0 +1,303 @@
+//! QR decomposition (Householder) and the shifted QR eigenvalue iteration
+//! for small symmetric matrices.
+//!
+//! Two consumers: the IRAM baseline (implicit restarts need QR of the
+//! shifted projected matrix, exactly what ARPACK does), and tests that
+//! verify the Jacobi systolic results against an independent method — the
+//! paper cites QR as the approach "more common on CPU" (§IV-C).
+
+use crate::linalg::DenseMatrix;
+
+/// Householder QR: returns `(Q, R)` with `A = Q R`, `Q` orthogonal, `R`
+/// upper triangular.
+pub fn qr_decompose(a: &DenseMatrix) -> (DenseMatrix, DenseMatrix) {
+    let (m, n) = (a.nrows, a.ncols);
+    let mut r = a.clone();
+    let mut q = DenseMatrix::identity(m);
+    for k in 0..n.min(m.saturating_sub(1)) {
+        // Householder vector for column k below the diagonal.
+        let mut x_norm2 = 0.0;
+        for i in k..m {
+            x_norm2 += r[(i, k)] * r[(i, k)];
+        }
+        let x_norm = x_norm2.sqrt();
+        if x_norm == 0.0 {
+            continue;
+        }
+        let alpha = -x_norm * r[(k, k)].signum();
+        let mut v = vec![0.0; m];
+        v[k] = r[(k, k)] - alpha;
+        for i in (k + 1)..m {
+            v[i] = r[(i, k)];
+        }
+        let vtv: f64 = v.iter().map(|&x| x * x).sum();
+        if vtv == 0.0 {
+            continue;
+        }
+        // R <- (I - 2 v v^T / v^T v) R
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i] * r[(i, j)];
+            }
+            let f = 2.0 * dot / vtv;
+            for i in k..m {
+                r[(i, j)] -= f * v[i];
+            }
+        }
+        // Q <- Q (I - 2 v v^T / v^T v)
+        for i in 0..m {
+            let mut dot = 0.0;
+            for j in k..m {
+                dot += q[(i, j)] * v[j];
+            }
+            let f = 2.0 * dot / vtv;
+            for j in k..m {
+                q[(i, j)] -= f * v[j];
+            }
+        }
+    }
+    (q, r)
+}
+
+/// Symmetric eigendecomposition via Householder tridiagonalization (tred2)
+/// followed by the implicit-shift QL iteration (tql2) — the EISPACK/LAPACK
+/// `dsyev` lineage, robust for any symmetric matrix. Returns
+/// `(eigenvalues, eigenvectors)` with eigenvalues sorted by decreasing
+/// magnitude and eigenvectors as the corresponding columns.
+///
+/// `tol`/`max_iter` bound the QL iteration per eigenvalue (30 is the
+/// classic limit; `max_iter` caps it).
+pub fn qr_algorithm_symmetric(a: &DenseMatrix, tol: f64, max_iter: usize) -> (Vec<f64>, DenseMatrix) {
+    assert!(a.is_symmetric(1e-9), "QR eigensolver expects a symmetric matrix");
+    let n = a.nrows;
+    let mut v = a.clone(); // becomes the transformation accumulator
+    let mut d = vec![0.0f64; n]; // diagonal
+    let mut e = vec![0.0f64; n]; // off-diagonal
+
+    // ---- tred2: Householder reduction to tridiagonal, accumulating Q in v.
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += v[(i, k)].abs();
+            }
+            if scale == 0.0 {
+                e[i] = v[(i, l)];
+            } else {
+                for k in 0..=l {
+                    v[(i, k)] /= scale;
+                    h += v[(i, k)] * v[(i, k)];
+                }
+                let mut f = v[(i, l)];
+                let g = if f > 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                v[(i, l)] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    v[(j, i)] = v[(i, j)] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += v[(j, k)] * v[(i, k)];
+                    }
+                    for k in (j + 1)..=l {
+                        g += v[(k, j)] * v[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * v[(i, j)];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = v[(i, j)];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        v[(j, k)] -= f * e[k] + g * v[(i, k)];
+                    }
+                }
+            }
+        } else {
+            e[i] = v[(i, l)];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += v[(i, k)] * v[(k, j)];
+                }
+                for k in 0..i {
+                    v[(k, j)] -= g * v[(k, i)];
+                }
+            }
+        }
+        d[i] = v[(i, i)];
+        v[(i, i)] = 1.0;
+        for j in 0..i {
+            v[(j, i)] = 0.0;
+            v[(i, j)] = 0.0;
+        }
+    }
+
+    // ---- tql2: implicit-shift QL on (d, e), accumulating rotations in v.
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    let iter_cap = max_iter.clamp(30, 1000);
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find a small off-diagonal to split at.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= tol.max(f64::EPSILON) * dd || e[m].abs() < 1e-300 {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > iter_cap {
+                break; // accept current accuracy
+            }
+            // Form the implicit shift.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let r = (g * g + 1.0).sqrt();
+            let sign_r = if g >= 0.0 { r } else { -r };
+            g = d[m] - d[l] + e[l] / (g + sign_r);
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                let r = (f * f + g * g).sqrt();
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                let gg = d[i + 1] - p;
+                let rr = (d[i] - gg) * s + 2.0 * c * b;
+                p = s * rr;
+                d[i + 1] = gg + p;
+                g = c * rr - b;
+                // Accumulate the rotation into the eigenvector matrix.
+                for k in 0..n {
+                    f = v[(k, i + 1)];
+                    v[(k, i + 1)] = s * v[(k, i)] + c * f;
+                    v[(k, i)] = c * v[(k, i)] - s * f;
+                }
+            }
+            if e[m] == 0.0 && m > l {
+                // broke out of the inner loop with r == 0
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+
+    // ---- Sort by decreasing magnitude.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| d[j].abs().partial_cmp(&d[i].abs()).unwrap());
+    let eigvals: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+    let mut eigvecs = DenseMatrix::zeros(n, n);
+    for (newj, &oldj) in idx.iter().enumerate() {
+        for i in 0..n {
+            eigvecs[(i, newj)] = v[(i, oldj)];
+        }
+    }
+    (eigvals, eigvecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_sym(n: usize, seed: u64) -> DenseMatrix {
+        let mut rng = crate::util::rng::Pcg64::new(seed);
+        let mut a = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.f64_range(-1.0, 1.0);
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn qr_reconstructs_a() {
+        let a = rand_sym(6, 3);
+        let (q, r) = qr_decompose(&a);
+        assert!(q.matmul(&r).max_abs_diff(&a) < 1e-10);
+        assert!(q.orthonormality_defect() < 1e-10);
+        for i in 0..6 {
+            for j in 0..i {
+                assert!(r[(i, j)].abs() < 1e-10, "R not upper triangular at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn eigen_residuals_small() {
+        let a = rand_sym(8, 7);
+        let (vals, vecs) = qr_algorithm_symmetric(&a, 1e-12, 500);
+        for k in 0..8 {
+            let v = vecs.col(k);
+            let av = a.matvec(&v);
+            let res: f64 = av
+                .iter()
+                .zip(&v)
+                .map(|(&avi, &vi)| (avi - vals[k] * vi).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            assert!(res < 1e-6, "residual {res} for eig {k} = {}", vals[k]);
+        }
+    }
+
+    #[test]
+    fn eigenvalues_sorted_by_magnitude() {
+        let a = rand_sym(8, 11);
+        let (vals, _) = qr_algorithm_symmetric(&a, 1e-12, 500);
+        for w in vals.windows(2) {
+            assert!(w[0].abs() >= w[1].abs() - 1e-12);
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_eigen_identity() {
+        let mut a = DenseMatrix::zeros(4, 4);
+        for (i, v) in [3.0, -7.0, 0.5, 1.0].iter().enumerate() {
+            a[(i, i)] = *v;
+        }
+        let (vals, vecs) = qr_algorithm_symmetric(&a, 1e-14, 100);
+        assert!((vals[0] - -7.0).abs() < 1e-10);
+        assert!((vals[1] - 3.0).abs() < 1e-10);
+        assert!(vecs.orthonormality_defect() < 1e-8);
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let a = rand_sym(10, 23);
+        let tr: f64 = (0..10).map(|i| a[(i, i)]).sum();
+        let (vals, _) = qr_algorithm_symmetric(&a, 1e-12, 800);
+        let sum: f64 = vals.iter().sum();
+        assert!((tr - sum).abs() < 1e-8, "trace {tr} vs eig-sum {sum}");
+    }
+}

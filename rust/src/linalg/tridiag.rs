@@ -1,0 +1,152 @@
+//! Symmetric tridiagonal matrix `T` — the Lanczos output (Figure 3): `K`
+//! diagonal values `alpha` and `K-1` off-diagonal values `beta`, i.e. the
+//! `3K - 2` words the Lanczos Core ships to the Jacobi cores over PLRAM
+//! (§IV-C).
+
+use crate::linalg::DenseMatrix;
+
+/// Symmetric tridiagonal matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tridiagonal {
+    /// Main diagonal (`alpha`), length K.
+    pub alpha: Vec<f64>,
+    /// Off diagonal (`beta`), length K-1.
+    pub beta: Vec<f64>,
+}
+
+impl Tridiagonal {
+    /// Construct; panics unless `beta.len() + 1 == alpha.len()`.
+    pub fn new(alpha: Vec<f64>, beta: Vec<f64>) -> Self {
+        assert_eq!(beta.len() + 1, alpha.len(), "beta must be one shorter than alpha");
+        Self { alpha, beta }
+    }
+
+    /// Dimension K.
+    pub fn k(&self) -> usize {
+        self.alpha.len()
+    }
+
+    /// Number of device words (`3K - 2`) transferred to the Jacobi cores.
+    pub fn device_words(&self) -> usize {
+        3 * self.k() - 2
+    }
+
+    /// Densify.
+    pub fn to_dense(&self) -> DenseMatrix {
+        let k = self.k();
+        let mut m = DenseMatrix::zeros(k, k);
+        for i in 0..k {
+            m[(i, i)] = self.alpha[i];
+            if i + 1 < k {
+                m[(i, i + 1)] = self.beta[i];
+                m[(i + 1, i)] = self.beta[i];
+            }
+        }
+        m
+    }
+
+    /// `y = T x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let k = self.k();
+        assert_eq!(x.len(), k);
+        let mut y = vec![0.0; k];
+        for i in 0..k {
+            y[i] = self.alpha[i] * x[i];
+            if i > 0 {
+                y[i] += self.beta[i - 1] * x[i - 1];
+            }
+            if i + 1 < k {
+                y[i] += self.beta[i] * x[i + 1];
+            }
+        }
+        y
+    }
+
+    /// Characteristic-polynomial sign count (Sturm sequence): number of
+    /// eigenvalues strictly less than `x`. Used by tests to verify the
+    /// Jacobi eigenvalues without an external eigensolver.
+    pub fn eigenvalues_below(&self, x: f64) -> usize {
+        let k = self.k();
+        let mut count = 0usize;
+        let mut d = self.alpha[0] - x;
+        if d < 0.0 {
+            count += 1;
+        }
+        for i in 1..k {
+            let b2 = self.beta[i - 1] * self.beta[i - 1];
+            // Guard against division by ~0 (shift slightly, standard trick).
+            let denom = if d.abs() < 1e-300 { 1e-300_f64.copysign(d) } else { d };
+            d = self.alpha[i] - x - b2 / denom;
+            if d < 0.0 {
+                count += 1;
+            }
+        }
+        count
+    }
+
+    /// Gershgorin bound: all eigenvalues lie in `[lo, hi]`.
+    pub fn gershgorin(&self) -> (f64, f64) {
+        let k = self.k();
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for i in 0..k {
+            let mut r = 0.0;
+            if i > 0 {
+                r += self.beta[i - 1].abs();
+            }
+            if i + 1 < k {
+                r += self.beta[i].abs();
+            }
+            lo = lo.min(self.alpha[i] - r);
+            hi = hi.max(self.alpha[i] + r);
+        }
+        (lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Tridiagonal {
+        Tridiagonal::new(vec![2.0, 2.0, 2.0], vec![-1.0, -1.0])
+    }
+
+    #[test]
+    fn dense_round_trip_matvec() {
+        let t = sample();
+        let d = t.to_dense();
+        let x = vec![1.0, 2.0, 3.0];
+        assert_eq!(t.matvec(&x), d.matvec(&x));
+    }
+
+    #[test]
+    fn device_words_formula() {
+        assert_eq!(sample().device_words(), 7);
+    }
+
+    #[test]
+    fn sturm_counts_known_spectrum() {
+        // Eigenvalues of tridiag(-1, 2, -1) of size 3: 2 - sqrt(2), 2, 2 + sqrt(2).
+        let t = sample();
+        let s2 = std::f64::consts::SQRT_2;
+        assert_eq!(t.eigenvalues_below(2.0 - s2 - 1e-9), 0);
+        assert_eq!(t.eigenvalues_below(2.0 - s2 + 1e-9), 1);
+        assert_eq!(t.eigenvalues_below(2.0 + 1e-9), 2);
+        assert_eq!(t.eigenvalues_below(2.0 + s2 + 1e-9), 3);
+    }
+
+    #[test]
+    fn gershgorin_contains_spectrum() {
+        let t = sample();
+        let (lo, hi) = t.gershgorin();
+        assert!(lo <= 2.0 - std::f64::consts::SQRT_2);
+        assert!(hi >= 2.0 + std::f64::consts::SQRT_2);
+    }
+
+    #[test]
+    #[should_panic(expected = "beta must be one shorter")]
+    fn shape_mismatch_panics() {
+        Tridiagonal::new(vec![1.0, 2.0], vec![0.5, 0.5]);
+    }
+}

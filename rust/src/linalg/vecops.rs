@@ -1,0 +1,126 @@
+//! Dense vector kernels for the Lanczos loop (Algorithm 1, lines 5-10).
+//!
+//! These are the "remaining linear operations" of Figure 6(D); they run on
+//! every Lanczos iteration over length-`n` vectors, so the hot-path variants
+//! are written to autovectorize (chunked accumulators, no bounds checks in
+//! the inner loop via exact-size slices).
+
+/// Dot product with 4-lane accumulation (f32 in, f64 accumulators to keep
+/// the reorthogonalization numerically trustworthy on multi-million-element
+/// vectors).
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let (a4, b4) = (&a[4 * i..4 * i + 4], &b[4 * i..4 * i + 4]);
+        acc[0] += a4[0] as f64 * b4[0] as f64;
+        acc[1] += a4[1] as f64 * b4[1] as f64;
+        acc[2] += a4[2] as f64 * b4[2] as f64;
+        acc[3] += a4[3] as f64 * b4[3] as f64;
+    }
+    let mut tail = 0.0f64;
+    for i in 4 * chunks..a.len() {
+        tail += a[i] as f64 * b[i] as f64;
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `w = a*x + b*y` writing into `w` (used for the three-term recurrence
+/// `w' = w - alpha v_i - beta v_{i-1}` fused as two waxpby calls).
+pub fn waxpby(a: f32, x: &[f32], b: f32, y: &[f32], w: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    assert_eq!(x.len(), w.len());
+    for i in 0..w.len() {
+        w[i] = a * x[i] + b * y[i];
+    }
+}
+
+/// `x *= alpha`.
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for xi in x {
+        *xi *= alpha;
+    }
+}
+
+/// L2 norm (f64 accumulation).
+pub fn norm2(x: &[f32]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// Normalize `x` to unit L2 norm; returns the pre-normalization norm.
+/// A zero vector is left untouched (returns 0.0) — callers treat that as a
+/// Lanczos breakdown signal.
+pub fn normalize(x: &mut [f32]) -> f64 {
+    let n = norm2(x);
+    if n > 0.0 {
+        let inv = (1.0 / n) as f32;
+        scale(inv, x);
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..103).map(|i| (i as f32) * 0.25).collect();
+        let b: Vec<f32> = (0..103).map(|i| 1.0 - (i as f32) * 0.01).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dot_f64_accumulation_is_stable() {
+        // 1e7 values of 1e-1: f32 accumulation would lose digits; f64 keeps
+        // them (relative error < 1e-9).
+        let a = vec![0.1f32; 1_000_000];
+        let d = dot(&a, &vec![1.0f32; 1_000_000]);
+        let expect = 0.1f32 as f64 * 1_000_000.0;
+        assert!((d - expect).abs() / expect < 1e-9, "d={d}");
+    }
+
+    #[test]
+    fn axpy_and_waxpby() {
+        let x = vec![1.0f32, 2.0, 3.0];
+        let mut y = vec![10.0f32, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+
+        let mut w = vec![0.0f32; 3];
+        waxpby(1.0, &x, -0.5, &y, &mut w);
+        assert_eq!(w, vec![1.0 - 6.0, 2.0 - 12.0, 3.0 - 18.0]);
+    }
+
+    #[test]
+    fn normalize_unit_norm() {
+        let mut x = vec![3.0f32, 4.0];
+        let n = normalize(&mut x);
+        assert!((n - 5.0).abs() < 1e-9);
+        assert!((norm2(&x) - 1.0).abs() < 1e-6);
+        assert!((x[0] - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalize_zero_vector_signals_breakdown() {
+        let mut x = vec![0.0f32; 8];
+        assert_eq!(normalize(&mut x), 0.0);
+        assert!(x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn dot_length_mismatch_panics() {
+        dot(&[1.0], &[1.0, 2.0]);
+    }
+}

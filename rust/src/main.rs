@@ -1,0 +1,295 @@
+//! `topk-eigen` — command-line front end for the Top-K sparse eigensolver.
+//!
+//! Subcommands:
+//! * `solve <input>` — solve a MatrixMarket file or a Table II catalog ID
+//!   (e.g. `WB-GO@64` = web-Google twin at 1/64 scale).
+//! * `catalog` — print the Table II dataset catalog.
+//! * `generate <id> <out.mtx>` — materialize a synthetic twin to a file.
+//! * `model <input>` — print the FPGA timing/resource/power model estimate.
+//! * `artifacts` — verify the AOT artifact set (`make artifacts`).
+
+use topk_eigen::coordinator::{verify, Engine, SolveOptions, Solver};
+use topk_eigen::fixed::Precision;
+use topk_eigen::fpga::{FpgaTimingModel, PowerModel, SlrBudget};
+use topk_eigen::graphs;
+use topk_eigen::lanczos::ReorthPolicy;
+use topk_eigen::sparse::{partition_rows_balanced, read_matrix_market, CooMatrix, PartitionPolicy};
+use topk_eigen::util::cli::Command;
+use topk_eigen::util::timer::fmt_duration;
+
+fn main() {
+    topk_eigen::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("solve") => cmd_solve(&args[1..]),
+        Some("catalog") => cmd_catalog(),
+        Some("generate") => cmd_generate(&args[1..]),
+        Some("model") => cmd_model(&args[1..]),
+        Some("artifacts") => cmd_artifacts(),
+        _ => {
+            eprintln!(
+                "topk-eigen — Top-K sparse graph eigensolver (Lanczos + systolic Jacobi)\n\n\
+                 USAGE:\n  topk-eigen <solve|catalog|generate|model|artifacts> [...]\n\n\
+                 Run `topk-eigen solve --help` etc. for details."
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Resolve `input`: a path to a `.mtx` file, or `ID[@scale]` from the
+/// catalog (e.g. `WB-GO@64`).
+fn load_input(input: &str) -> Result<CooMatrix, String> {
+    if std::path::Path::new(input).exists() {
+        return read_matrix_market(input).map_err(|e| e.to_string());
+    }
+    let (id, scale) = match input.split_once('@') {
+        Some((id, s)) => (id, s.parse::<usize>().map_err(|e| format!("bad scale: {e}"))?),
+        None => (input, 64),
+    };
+    let entry = graphs::catalog()
+        .into_iter()
+        .find(|e| e.id.eq_ignore_ascii_case(id))
+        .ok_or_else(|| format!("'{input}' is neither a file nor a catalog ID (try `topk-eigen catalog`)"))?;
+    log::info!("generating {} twin at 1/{scale} scale", entry.name);
+    Ok(entry.generate(scale))
+}
+
+fn parse_reorth(s: &str) -> Result<ReorthPolicy, String> {
+    match s {
+        "none" => Ok(ReorthPolicy::None),
+        "every" => Ok(ReorthPolicy::Every),
+        other => other
+            .strip_prefix("every-")
+            .and_then(|n| n.parse().ok())
+            .map(ReorthPolicy::EveryN)
+            .ok_or_else(|| format!("bad reorth '{other}' (none|every|every-N)")),
+    }
+}
+
+fn parse_precision(s: &str) -> Result<Precision, String> {
+    match s {
+        "f32" => Ok(Precision::Float32),
+        "q1.31" => Ok(Precision::FixedQ1_31),
+        "q2.30" => Ok(Precision::FixedQ2_30),
+        "q1.15" => Ok(Precision::FixedQ1_15),
+        other => Err(format!("bad precision '{other}' (f32|q1.31|q2.30|q1.15)")),
+    }
+}
+
+fn cmd_solve(args: &[String]) -> i32 {
+    let cmd = Command::new("topk-eigen solve", "solve a Top-K sparse eigenproblem")
+        .positional("input", "MatrixMarket file or catalog ID[@scale]")
+        .opt("k", "number of eigenpairs", Some("8"))
+        .opt("reorth", "reorthogonalization: none|every|every-N", Some("every-2"))
+        .opt("precision", "f32|q1.31|q2.30|q1.15", Some("f32"))
+        .opt("cus", "SpMV compute units", Some("5"))
+        .opt("engine", "spmv engine: native|pjrt", Some("native"))
+        .flag("verify", "print Fig-11 accuracy metrics")
+        .flag("quiet", "suppress per-pair output");
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let run = || -> Result<i32, String> {
+        let matrix = load_input(m.str("input").map_err(|e| e.to_string())?)?;
+        let opts = SolveOptions {
+            k: m.parse::<usize>("k").map_err(|e| e.to_string())?,
+            reorth: parse_reorth(m.str("reorth").unwrap())?,
+            precision: parse_precision(m.str("precision").unwrap())?,
+            cus: m.parse::<usize>("cus").map_err(|e| e.to_string())?,
+            engine: match m.str("engine").unwrap() {
+                "pjrt" => Engine::Pjrt,
+                _ => Engine::Native,
+            },
+            ..Default::default()
+        };
+        println!(
+            "solving: n={} nnz={} k={} reorth={} precision={} cus={} engine={:?}",
+            matrix.nrows,
+            matrix.nnz(),
+            opts.k,
+            opts.reorth.name(),
+            opts.precision.name(),
+            opts.cus,
+            opts.engine
+        );
+        let mut solver = Solver::new(opts);
+        let sol = solver.solve(&matrix).map_err(|e| e.to_string())?;
+        if !m.flag("quiet") {
+            for (i, (lambda, _)) in sol.pairs().enumerate() {
+                println!("  lambda[{i}] = {lambda:+.8}");
+            }
+        }
+        let mt = &sol.metrics;
+        println!(
+            "phases: prepare={} lanczos={} jacobi={} lift={} (engine={}, spmv={}, sweeps={})",
+            fmt_duration(mt.prepare_s),
+            fmt_duration(mt.lanczos_s),
+            fmt_duration(mt.jacobi_s),
+            fmt_duration(mt.lift_s),
+            mt.engine_used,
+            mt.spmv_count,
+            mt.systolic.sweeps,
+        );
+        if let Some(b) = mt.breakdown_at {
+            println!("note: Lanczos breakdown at iteration {b} (exact invariant subspace)");
+        }
+        if m.flag("verify") {
+            let r = verify::verify(&matrix, &sol);
+            println!(
+                "accuracy: mean-angle={:.3}deg max-cross-dot={:.2e} mean-residual={:.2e} max-residual={:.2e}",
+                r.mean_angle_deg, r.max_cross_dot, r.mean_residual, r.max_residual
+            );
+        }
+        Ok(0)
+    };
+    match run() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_catalog() -> i32 {
+    println!(
+        "{:<6} {:<16} {:>12} {:>14} {:>12} {:>9}  class",
+        "ID", "name", "rows", "non-zeros", "sparsity%", "size(GB)"
+    );
+    for e in graphs::catalog() {
+        println!(
+            "{:<6} {:<16} {:>12} {:>14} {:>12.3e} {:>9.2}  {:?}",
+            e.id,
+            e.name,
+            e.rows,
+            e.nnz,
+            e.sparsity_pct(),
+            e.size_gb(),
+            e.class
+        );
+    }
+    0
+}
+
+fn cmd_generate(args: &[String]) -> i32 {
+    let cmd = Command::new("topk-eigen generate", "materialize a synthetic catalog twin")
+        .positional("id", "catalog ID (see `topk-eigen catalog`)")
+        .positional("out", "output .mtx path")
+        .opt("scale", "size divisor vs the published graph", Some("64"));
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let id = m.str("id").unwrap();
+    let scale: usize = match m.parse("scale") {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let Some(entry) = graphs::catalog().into_iter().find(|e| e.id.eq_ignore_ascii_case(id)) else {
+        eprintln!("unknown catalog ID '{id}'");
+        return 1;
+    };
+    let g = entry.generate(scale);
+    match topk_eigen::sparse::write_matrix_market(m.str("out").unwrap(), &g) {
+        Ok(()) => {
+            println!("wrote {} ({} rows, {} nnz)", m.str("out").unwrap(), g.nrows, g.nnz());
+            0
+        }
+        Err(e) => {
+            eprintln!("write failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_model(args: &[String]) -> i32 {
+    let cmd = Command::new("topk-eigen model", "FPGA timing/resource/power estimate")
+        .positional("input", "MatrixMarket file or catalog ID[@scale]")
+        .opt("k", "number of eigenpairs", Some("16"))
+        .opt("cus", "SpMV compute units", Some("5"));
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let run = || -> Result<i32, String> {
+        let matrix = load_input(m.str("input").map_err(|e| e.to_string())?)?;
+        let k: usize = m.parse("k").map_err(|e| e.to_string())?;
+        let cus: usize = m.parse("cus").map_err(|e| e.to_string())?;
+        let csr = matrix.to_csr();
+        let shards = partition_rows_balanced(&csr, cus, PartitionPolicy::EqualRows);
+        let model = FpgaTimingModel { cus, ..Default::default() };
+        // Estimate Jacobi steps as (K-1) * ~log2(K)+3 sweeps.
+        let steps = (k - 1) * ((k as f64).log2().ceil() as usize + 3);
+        let t = model.solve_time(csr.nrows, &shards, k, ReorthPolicy::EveryN(2), steps);
+        println!("FPGA model (U280 @225MHz, {cus} CUs, K={k}):");
+        println!("  spmv   = {}", fmt_duration(t.spmv_s));
+        println!("  memory = {}", fmt_duration(t.memory_s));
+        println!("  vector = {}", fmt_duration(t.vector_s));
+        println!("  reorth = {}", fmt_duration(t.reorth_s));
+        println!("  jacobi = {}", fmt_duration(t.jacobi_s));
+        println!(
+            "  total  = {}  (read bw {:.2} GB/s)",
+            fmt_duration(t.total_s()),
+            model.effective_read_gbps(&shards)
+        );
+        let lanczos_res = topk_eigen::fpga::lanczos_core_resources(cus);
+        let (lut, ff, bram, uram, dsp) = SlrBudget::utilization_pct(lanczos_res);
+        println!("  SLR0 (Lanczos): LUT {lut:.0}% FF {ff:.0}% BRAM {bram:.0}% URAM {uram:.0}% DSP {dsp:.0}%");
+        let kc = k.max(4).next_power_of_two();
+        let jk = topk_eigen::fpga::jacobi_core_resources(kc);
+        let (lut, ff, _, _, dsp) = SlrBudget::utilization_pct(jk);
+        println!("  SLR1 (Jacobi K={kc}): LUT {lut:.0}% FF {ff:.0}% DSP {dsp:.0}%");
+        let p = PowerModel::default().compare(t.total_s(), t.total_s() * 6.22);
+        println!(
+            "  power: {:.0}W card, {:.3}J per solve; at paper-geomean CPU time: perf/W {:.0}x (card), {:.0}x (with host)",
+            PowerModel::default().fpga_w,
+            p.fpga_energy_j,
+            p.perf_per_watt_gain,
+            p.perf_per_watt_gain_with_host
+        );
+        Ok(0)
+    };
+    match run() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_artifacts() -> i32 {
+    use topk_eigen::runtime::{artifacts_dir, ArtifactRegistry};
+    let dir = artifacts_dir();
+    println!("artifact dir: {}", dir.display());
+    let mut missing = 0;
+    for f in ArtifactRegistry::all_files() {
+        let p = dir.join(&f);
+        let ok = p.is_file();
+        println!("  [{}] {f}", if ok { "ok" } else { "MISSING" });
+        if !ok {
+            missing += 1;
+        }
+    }
+    if missing > 0 {
+        eprintln!("{missing} artifacts missing — run `make artifacts`");
+        1
+    } else {
+        0
+    }
+}

@@ -1,0 +1,77 @@
+//! Phase-2 through a PJRT-compiled Jacobi artifact.
+//!
+//! Mirrors the paper's fixed-K Jacobi cores: each artifact is compiled for
+//! a specific core size K (4/8/16/32); a request with smaller k runs on
+//! the next core up with zero padding (a core "can compute a lower amount
+//! of eigenvalues without a reconfiguration", §IV-C). Padding introduces
+//! exact zero eigenpairs supported on the padded coordinates, which are
+//! filtered out on return.
+
+use crate::linalg::{DenseMatrix, Tridiagonal};
+use crate::runtime::{ArtifactRegistry, Module, Runtime};
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// A compiled fixed-K Jacobi core.
+pub struct PjrtJacobi {
+    module: Arc<Module>,
+    /// Core size (the artifact's K).
+    pub k_core: usize,
+}
+
+impl PjrtJacobi {
+    /// Load the smallest core fitting `k`.
+    pub fn new(runtime: &Runtime, k: usize) -> Result<Self> {
+        let k_core = ArtifactRegistry::pick_jacobi(k)
+            .ok_or_else(|| anyhow!("no Jacobi artifact core fits k={k} (max 32)"))?;
+        let module = runtime.load(&ArtifactRegistry::jacobi_file(k_core))?;
+        Ok(Self { module, k_core })
+    }
+
+    /// Diagonalize `t`, returning `(eigenvalues, eigenvector-columns)`
+    /// sorted by decreasing magnitude, truncated to `t.k()` genuine pairs.
+    pub fn eigen(&self, t: &Tridiagonal) -> Result<(Vec<f64>, DenseMatrix)> {
+        let k = t.k();
+        anyhow::ensure!(k <= self.k_core, "tridiagonal k={k} exceeds core {}", self.k_core);
+        let kc = self.k_core;
+        let mut alpha = vec![0.0f32; kc];
+        let mut beta = vec![0.0f32; kc];
+        for i in 0..k {
+            alpha[i] = t.alpha[i] as f32;
+        }
+        for i in 0..k.saturating_sub(1) {
+            beta[i] = t.beta[i] as f32;
+        }
+        let a = xla::Literal::vec1(&alpha);
+        let b = xla::Literal::vec1(&beta);
+        let out = self.module.run(&[a, b])?;
+        anyhow::ensure!(out.len() == 2, "jacobi artifact must return (eigvals, eigvecs)");
+        let ev: Vec<f32> = out[0].to_vec()?;
+        let vecs_flat: Vec<f32> = out[1].to_vec()?;
+        anyhow::ensure!(ev.len() == kc && vecs_flat.len() == kc * kc, "unexpected output shapes");
+
+        // Filter padded pairs: a padded eigenpair's vector is supported on
+        // coordinates >= k. Keep pairs with majority support inside 0..k.
+        let mut kept: Vec<(f64, Vec<f64>)> = Vec::with_capacity(k);
+        for j in 0..kc {
+            let col: Vec<f64> = (0..kc).map(|i| vecs_flat[i * kc + j] as f64).collect();
+            let head: f64 = col[..k].iter().map(|x| x * x).sum();
+            let total: f64 = col.iter().map(|x| x * x).sum();
+            if total > 0.0 && head / total > 0.5 {
+                kept.push((ev[j] as f64, col[..k].to_vec()));
+            }
+        }
+        anyhow::ensure!(kept.len() >= k, "padding filter kept {} of {k} pairs", kept.len());
+        kept.truncate(k); // already sorted by |lambda| desc in the artifact
+        let eigenvalues: Vec<f64> = kept.iter().map(|(l, _)| *l).collect();
+        let mut eigenvectors = DenseMatrix::zeros(k, k);
+        for (j, (_, col)) in kept.iter().enumerate() {
+            // Renormalize after truncating the (tiny) padded components.
+            let norm: f64 = col.iter().map(|x| x * x).sum::<f64>().sqrt();
+            for i in 0..k {
+                eigenvectors[(i, j)] = col[i] / norm.max(1e-300);
+            }
+        }
+        Ok((eigenvalues, eigenvectors))
+    }
+}

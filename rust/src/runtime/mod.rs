@@ -1,0 +1,223 @@
+//! PJRT runtime — the L3 ↔ L2/L1 bridge.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once, lowering the JAX
+//! model (which calls the Pallas kernels) to **HLO text** under
+//! `artifacts/`. This module loads those files with
+//! `HloModuleProto::from_text_file`, compiles them on the PJRT CPU client,
+//! and executes them from the request path — Python is never involved at
+//! runtime.
+//!
+//! Artifacts are compiled for fixed shapes (XLA requirement), so the
+//! registry exposes *variants* (`spmv_n4096_nnz65536`, `jacobi_k8`, ...)
+//! and [`ArtifactRegistry::pick_spmv`] selects the smallest variant that
+//! fits a workload; inputs are zero-padded up to the variant shape (padding
+//! entries scatter `0.0 * x[0]` into row 0 — a no-op by construction).
+
+mod jacobi;
+mod spmv;
+
+pub use jacobi::PjrtJacobi;
+pub use spmv::PjrtSpmv;
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A compiled artifact ready to execute.
+pub struct Module {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact path (for diagnostics).
+    pub path: PathBuf,
+}
+
+impl Module {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.path.display()))?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with device-resident buffers (used on the hot path to keep
+    /// the matrix uploaded once); returns raw output buffers.
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        Ok(self.exe.execute_b(args)?)
+    }
+}
+
+/// PJRT client + compiled-module cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Module>>>,
+}
+
+impl Runtime {
+    /// CPU PJRT client rooted at the artifact directory (`TOPK_ARTIFACTS`
+    /// env var, default `artifacts/`).
+    pub fn cpu() -> Result<Self> {
+        let dir = artifacts_dir();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Self { client, dir, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// The artifact directory in use.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Underlying PJRT client (for buffer uploads).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an artifact by file name (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Module>> {
+        let path = self.dir.join(name);
+        if let Some(m) = self.cache.lock().unwrap().get(&path) {
+            return Ok(std::sync::Arc::clone(m));
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading HLO text {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        let module = std::sync::Arc::new(Module { exe, path: path.clone() });
+        self.cache.lock().unwrap().insert(path, std::sync::Arc::clone(&module));
+        Ok(module)
+    }
+
+    /// Upload an f32 slice as a device buffer.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload an i32 slice as a device buffer.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+}
+
+/// Artifact directory resolution: `TOPK_ARTIFACTS` env var, else
+/// `./artifacts` relative to the working directory, else next to the
+/// executable.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("TOPK_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    let cwd = PathBuf::from("artifacts");
+    if cwd.is_dir() {
+        return cwd;
+    }
+    // Fall back to the crate root (useful under `cargo test` from subdirs).
+    if let Ok(manifest) = std::env::var("CARGO_MANIFEST_DIR") {
+        let p = Path::new(&manifest).join("artifacts");
+        if p.is_dir() {
+            return p;
+        }
+    }
+    cwd
+}
+
+/// The shape variants `aot.py` emits, mirrored here. Kept in one place so
+/// the build pipeline and the registry cannot drift silently (the
+/// integration test asserts every listed artifact exists after
+/// `make artifacts`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpmvVariant {
+    /// Padded vector length.
+    pub n: usize,
+    /// Padded nnz capacity.
+    pub nnz: usize,
+}
+
+impl SpmvVariant {
+    /// Artifact file name for the plain SpMV kernel.
+    pub fn spmv_file(&self) -> String {
+        format!("spmv_n{}_nnz{}.hlo.txt", self.n, self.nnz)
+    }
+    /// Artifact file name for the fused Lanczos step.
+    pub fn lanczos_step_file(&self) -> String {
+        format!("lanczos_step_n{}_nnz{}.hlo.txt", self.n, self.nnz)
+    }
+}
+
+/// Registry of available artifact shapes.
+pub struct ArtifactRegistry;
+
+impl ArtifactRegistry {
+    /// SpMV variants emitted by `aot.py` (keep sorted by capacity).
+    pub const SPMV_VARIANTS: [SpmvVariant; 3] = [
+        SpmvVariant { n: 1024, nnz: 20_480 },
+        SpmvVariant { n: 4096, nnz: 81_920 },
+        SpmvVariant { n: 16_384, nnz: 327_680 },
+    ];
+
+    /// Jacobi core sizes emitted by `aot.py` (mirrors the paper's multi-K
+    /// bitstream: cores for K = 4, 8, 16, 32).
+    pub const JACOBI_KS: [usize; 4] = [4, 8, 16, 32];
+
+    /// Smallest SpMV variant that fits `(n, nnz)`.
+    pub fn pick_spmv(n: usize, nnz: usize) -> Option<SpmvVariant> {
+        Self::SPMV_VARIANTS.iter().copied().find(|v| v.n >= n && v.nnz >= nnz)
+    }
+
+    /// Smallest Jacobi core size >= `k`.
+    pub fn pick_jacobi(k: usize) -> Option<usize> {
+        Self::JACOBI_KS.iter().copied().find(|&c| c >= k)
+    }
+
+    /// Jacobi artifact file name.
+    pub fn jacobi_file(k_core: usize) -> String {
+        format!("jacobi_k{k_core}.hlo.txt")
+    }
+
+    /// All artifact file names the build must produce.
+    pub fn all_files() -> Vec<String> {
+        let mut v = Vec::new();
+        for s in Self::SPMV_VARIANTS {
+            v.push(s.spmv_file());
+            v.push(s.lanczos_step_file());
+        }
+        for k in Self::JACOBI_KS {
+            v.push(Self::jacobi_file(k));
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_selection_picks_smallest_fit() {
+        let v = ArtifactRegistry::pick_spmv(1000, 10_000).unwrap();
+        assert_eq!(v, SpmvVariant { n: 1024, nnz: 20_480 });
+        let v = ArtifactRegistry::pick_spmv(1025, 10_000).unwrap();
+        assert_eq!(v.n, 4096);
+        let v = ArtifactRegistry::pick_spmv(5000, 200_000).unwrap();
+        assert_eq!(v.nnz, 327_680);
+        assert!(ArtifactRegistry::pick_spmv(1 << 20, 1).is_none());
+    }
+
+    #[test]
+    fn jacobi_core_selection() {
+        assert_eq!(ArtifactRegistry::pick_jacobi(8), Some(8));
+        assert_eq!(ArtifactRegistry::pick_jacobi(12), Some(16));
+        assert_eq!(ArtifactRegistry::pick_jacobi(24), Some(32));
+        assert_eq!(ArtifactRegistry::pick_jacobi(33), None);
+    }
+
+    #[test]
+    fn file_names_are_stable() {
+        let v = SpmvVariant { n: 4096, nnz: 65_536 };
+        assert_eq!(v.spmv_file(), "spmv_n4096_nnz65536.hlo.txt");
+        assert_eq!(v.lanczos_step_file(), "lanczos_step_n4096_nnz65536.hlo.txt");
+        assert_eq!(ArtifactRegistry::jacobi_file(8), "jacobi_k8.hlo.txt");
+        assert_eq!(ArtifactRegistry::all_files().len(), 10);
+    }
+}

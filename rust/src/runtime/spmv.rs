@@ -1,0 +1,93 @@
+//! Device-resident SpMV through a compiled Pallas/XLA artifact.
+//!
+//! Mirrors the hardware residency model: the COO matrix is uploaded to the
+//! device **once** (the FPGA streams it from HBM every iteration; PJRT
+//! keeps it in device buffers), and each `apply` uploads only the dense
+//! vector — exactly the traffic pattern of the paper's iterative design
+//! ("multiple iterations without communication from device to host" except
+//! the per-iteration vector, §IV-B).
+
+use crate::lanczos::Operator;
+use crate::runtime::{ArtifactRegistry, Module, Runtime, SpmvVariant};
+use crate::sparse::CooMatrix;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// An [`Operator`] backed by a PJRT-compiled SpMV artifact.
+pub struct PjrtSpmv {
+    module: Arc<Module>,
+    rows: xla::PjRtBuffer,
+    cols: xla::PjRtBuffer,
+    vals: xla::PjRtBuffer,
+    runtime: Arc<Runtime>,
+    variant: SpmvVariant,
+    n: usize,
+    nnz: usize,
+}
+
+// The xla PJRT handles are thread-safe at the C++ level (PJRT CPU client is
+// internally synchronized); the raw pointers lack auto-traits only.
+unsafe impl Send for PjrtSpmv {}
+unsafe impl Sync for PjrtSpmv {}
+
+impl PjrtSpmv {
+    /// Load the best-fitting artifact for `coo` and upload the (padded)
+    /// matrix to the device.
+    pub fn new(runtime: Arc<Runtime>, coo: &CooMatrix) -> Result<Self> {
+        assert_eq!(coo.nrows, coo.ncols, "operator must be square");
+        let variant = ArtifactRegistry::pick_spmv(coo.nrows, coo.nnz())
+            .ok_or_else(|| anyhow!("no SpMV artifact fits n={} nnz={}", coo.nrows, coo.nnz()))?;
+        let module = runtime.load(&variant.spmv_file())?;
+
+        // Pad to the variant shape. Padding entries are (row=0, col=0,
+        // val=0.0): they scatter 0 into y[0] — a no-op.
+        let mut rows = vec![0i32; variant.nnz];
+        let mut cols = vec![0i32; variant.nnz];
+        let mut vals = vec![0f32; variant.nnz];
+        for i in 0..coo.nnz() {
+            rows[i] = coo.rows[i] as i32;
+            cols[i] = coo.cols[i] as i32;
+            vals[i] = coo.vals[i];
+        }
+        let rows = runtime.upload_i32(&rows, &[variant.nnz])?;
+        let cols = runtime.upload_i32(&cols, &[variant.nnz])?;
+        let vals = runtime.upload_f32(&vals, &[variant.nnz])?;
+        Ok(Self { module, rows, cols, vals, runtime, variant, n: coo.nrows, nnz: coo.nnz() })
+    }
+
+    /// The artifact variant in use.
+    pub fn variant(&self) -> SpmvVariant {
+        self.variant
+    }
+
+    /// Raw padded apply: `x_pad` must have length `variant.n`; returns the
+    /// padded output (length `variant.n`).
+    fn apply_padded(&self, x_pad: &[f32]) -> Result<Vec<f32>> {
+        let x = self.runtime.upload_f32(x_pad, &[self.variant.n])?;
+        let out = self.module.run_buffers(&[&self.rows, &self.cols, &self.vals, &x])?;
+        let lit = out[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let y = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        Ok(y.to_vec::<f32>()?)
+    }
+}
+
+impl Operator for PjrtSpmv {
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn nnz(&self) -> usize {
+        self.nnz
+    }
+    fn apply(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        let mut x_pad = vec![0.0f32; self.variant.n];
+        x_pad[..self.n].copy_from_slice(x);
+        let out = self.apply_padded(&x_pad).expect("PJRT SpMV execution failed");
+        y.copy_from_slice(&out[..self.n]);
+    }
+}
+
+// Tests that need built artifacts live in rust/tests/pjrt_integration.rs
+// (they skip with a notice when `make artifacts` has not run).

@@ -1,0 +1,229 @@
+//! Coordinate-format (COO) sparse matrix.
+//!
+//! COO is the paper's on-device layout: each non-zero is a `(row, col, val)`
+//! triple of 32-bit words, five of which fit a 512-bit HBM packet (§IV-B1).
+//! Unlike CSR, COO streaming has no indirect index chain, which is what
+//! makes the fully-pipelined dataflow SpMV possible.
+
+use crate::sparse::CsrMatrix;
+
+/// Sparse matrix in coordinate format with `f32` values (the paper's device
+/// word is 32 bits).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CooMatrix {
+    /// Number of rows.
+    pub nrows: usize,
+    /// Number of columns.
+    pub ncols: usize,
+    /// Row index per non-zero.
+    pub rows: Vec<u32>,
+    /// Column index per non-zero.
+    pub cols: Vec<u32>,
+    /// Value per non-zero.
+    pub vals: Vec<f32>,
+}
+
+impl CooMatrix {
+    /// Empty `nrows x ncols` matrix.
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Self { nrows, ncols, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
+    }
+
+    /// Build from parallel triplet arrays. Panics if lengths differ or any
+    /// index is out of bounds.
+    pub fn from_triplets(nrows: usize, ncols: usize, rows: Vec<u32>, cols: Vec<u32>, vals: Vec<f32>) -> Self {
+        assert_eq!(rows.len(), cols.len());
+        assert_eq!(rows.len(), vals.len());
+        debug_assert!(rows.iter().all(|&r| (r as usize) < nrows), "row index out of bounds");
+        debug_assert!(cols.iter().all(|&c| (c as usize) < ncols), "col index out of bounds");
+        Self { nrows, ncols, rows, cols, vals }
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Append one entry.
+    pub fn push(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.nrows && c < self.ncols);
+        self.rows.push(r as u32);
+        self.cols.push(c as u32);
+        self.vals.push(v);
+    }
+
+    /// Fraction of cells that are non-zero (Table II "Sparsity").
+    pub fn density(&self) -> f64 {
+        if self.nrows == 0 || self.ncols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.nrows as f64 * self.ncols as f64)
+    }
+
+    /// COO memory footprint in bytes (3 x 32-bit words per nnz, Table II
+    /// "Size" convention).
+    pub fn size_bytes(&self) -> usize {
+        self.nnz() * 12
+    }
+
+    /// Sort entries by `(row, col)` and sum duplicates. Canonical form used
+    /// before CSR conversion and device packetization.
+    pub fn canonicalize(&mut self) {
+        let mut idx: Vec<usize> = (0..self.nnz()).collect();
+        idx.sort_unstable_by_key(|&i| (self.rows[i], self.cols[i]));
+        let (mut rows, mut cols, mut vals) =
+            (Vec::with_capacity(self.nnz()), Vec::with_capacity(self.nnz()), Vec::with_capacity(self.nnz()));
+        for &i in &idx {
+            if let (Some(&lr), Some(&lc)) = (rows.last(), cols.last()) {
+                if lr == self.rows[i] && lc == self.cols[i] {
+                    *vals.last_mut().unwrap() += self.vals[i];
+                    continue;
+                }
+            }
+            rows.push(self.rows[i]);
+            cols.push(self.cols[i]);
+            vals.push(self.vals[i]);
+        }
+        self.rows = rows;
+        self.cols = cols;
+        self.vals = vals;
+    }
+
+    /// Symmetrize: `M <- (M + M^T) / 2` structurally (entries mirrored; the
+    /// average keeps eigenvalues of already-symmetric inputs unchanged).
+    /// The Lanczos phase requires a symmetric operator.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.nrows, self.ncols, "symmetrize needs a square matrix");
+        let n = self.nnz();
+        let mut rows = Vec::with_capacity(2 * n);
+        let mut cols = Vec::with_capacity(2 * n);
+        let mut vals = Vec::with_capacity(2 * n);
+        for i in 0..n {
+            let (r, c, v) = (self.rows[i], self.cols[i], self.vals[i] * 0.5);
+            rows.push(r);
+            cols.push(c);
+            vals.push(v);
+            rows.push(c);
+            cols.push(r);
+            vals.push(v);
+        }
+        self.rows = rows;
+        self.cols = cols;
+        self.vals = vals;
+        self.canonicalize();
+    }
+
+    /// Dense `y = M x` reference (test oracle; O(nnz)).
+    pub fn spmv_ref(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0f32; self.nrows];
+        for i in 0..self.nnz() {
+            y[self.rows[i] as usize] += self.vals[i] * x[self.cols[i] as usize];
+        }
+        y
+    }
+
+    /// Convert to CSR (canonicalizes a copy first).
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut c = self.clone();
+        c.canonicalize();
+        CsrMatrix::from_canonical_coo(&c)
+    }
+
+    /// Check structural symmetry (entry (r,c) implies (c,r) with equal
+    /// value up to `tol`). O(nnz log nnz).
+    pub fn is_symmetric(&self, tol: f32) -> bool {
+        if self.nrows != self.ncols {
+            return false;
+        }
+        let mut map = std::collections::HashMap::with_capacity(self.nnz());
+        for i in 0..self.nnz() {
+            *map.entry((self.rows[i], self.cols[i])).or_insert(0.0f32) += self.vals[i];
+        }
+        map.iter().all(|(&(r, c), &v)| {
+            let vt = map.get(&(c, r)).copied().unwrap_or(0.0);
+            (v - vt).abs() <= tol * v.abs().max(vt.abs()).max(1.0)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CooMatrix {
+        // [[1, 2, 0],
+        //  [0, 3, 4],
+        //  [5, 0, 6]]
+        CooMatrix::from_triplets(
+            3,
+            3,
+            vec![0, 0, 1, 1, 2, 2],
+            vec![0, 1, 1, 2, 0, 2],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        )
+    }
+
+    #[test]
+    fn spmv_ref_matches_hand_computation() {
+        let m = sample();
+        let y = m.spmv_ref(&[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 7.0, 11.0]);
+    }
+
+    #[test]
+    fn canonicalize_sorts_and_merges() {
+        let mut m = CooMatrix::from_triplets(
+            2,
+            2,
+            vec![1, 0, 1, 0],
+            vec![0, 1, 0, 1],
+            vec![1.0, 2.0, 3.0, 4.0],
+        );
+        m.canonicalize();
+        assert_eq!(m.rows, vec![0, 1]);
+        assert_eq!(m.cols, vec![1, 0]);
+        assert_eq!(m.vals, vec![6.0, 4.0]);
+    }
+
+    #[test]
+    fn symmetrize_produces_symmetric_matrix() {
+        let mut m = sample();
+        assert!(!m.is_symmetric(1e-6));
+        m.symmetrize();
+        assert!(m.is_symmetric(1e-6));
+        // Diagonal preserved exactly: (1, 3, 6).
+        let d: Vec<f32> = (0..3)
+            .map(|i| {
+                (0..m.nnz())
+                    .filter(|&k| m.rows[k] == i && m.cols[k] == i)
+                    .map(|k| m.vals[k])
+                    .sum()
+            })
+            .collect();
+        assert_eq!(d, vec![1.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn density_and_size() {
+        let m = sample();
+        assert!((m.density() - 6.0 / 9.0).abs() < 1e-12);
+        assert_eq!(m.size_bytes(), 72);
+    }
+
+    #[test]
+    fn to_csr_round_trips_spmv() {
+        let m = sample();
+        let csr = m.to_csr();
+        let x = [0.5f32, -1.0, 2.0];
+        assert_eq!(m.spmv_ref(&x), csr.spmv(&x));
+    }
+
+    #[test]
+    fn empty_matrix_is_fine() {
+        let m = CooMatrix::new(4, 4);
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.spmv_ref(&[1.0; 4]), vec![0.0; 4]);
+        assert_eq!(m.density(), 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Sparse-matrix substrate: COO and CSR storage, MatrixMarket IO, Frobenius
+//! normalization, nnz-balanced partitioning, and the 512-bit COO packet
+//! stream that models the paper's HBM read path (§IV-B).
+
+mod coo;
+mod csr;
+mod mmio;
+mod norm;
+mod packet;
+mod partition;
+
+pub use coo::CooMatrix;
+pub use csr::CsrMatrix;
+pub use mmio::{read_matrix_market, write_matrix_market, MmioError};
+pub use norm::{frobenius_norm, normalize_frobenius};
+pub use packet::{CooPacket, PacketStream, PACKET_NNZ, PACKET_BITS};
+pub use partition::{imbalance, partition_rows_balanced, PartitionPolicy, RowPartition};

@@ -1,0 +1,155 @@
+//! 512-bit COO packet stream — the paper's HBM read unit (§IV-B1).
+//!
+//! Each HBM transaction delivers a 512-bit line. A COO entry is three
+//! 32-bit words (row, col, val), so **5 entries** fit one line (480 of 512
+//! bits used). The Matrix Fetch Unit consumes one packet per clock cycle in
+//! maximum-length AXI bursts. The [`PacketStream`] iterator reproduces that
+//! granularity so both the native SpMV engine and the FPGA timing model can
+//! account per-packet work exactly as the hardware would.
+
+use crate::sparse::CooMatrix;
+
+/// Bits per HBM transaction line.
+pub const PACKET_BITS: usize = 512;
+/// COO entries per packet: floor(512 / (3 * 32)).
+pub const PACKET_NNZ: usize = 5;
+
+/// One 512-bit line: up to 5 (row, col, val) entries; `len < 5` only for the
+/// final packet of a shard.
+#[derive(Clone, Copy, Debug)]
+pub struct CooPacket {
+    /// Row indices (valid up to `len`).
+    pub rows: [u32; PACKET_NNZ],
+    /// Column indices.
+    pub cols: [u32; PACKET_NNZ],
+    /// Values.
+    pub vals: [f32; PACKET_NNZ],
+    /// Number of valid entries in this packet.
+    pub len: usize,
+}
+
+impl CooPacket {
+    /// Iterator over the valid entries.
+    pub fn entries(&self) -> impl Iterator<Item = (u32, u32, f32)> + '_ {
+        (0..self.len).map(move |i| (self.rows[i], self.cols[i], self.vals[i]))
+    }
+}
+
+/// Streaming packet view over a COO range (typically one CU's shard).
+pub struct PacketStream<'a> {
+    coo: &'a CooMatrix,
+    pos: usize,
+    end: usize,
+    width: usize,
+}
+
+impl<'a> PacketStream<'a> {
+    /// Stream the whole matrix with the standard 5-entry packets.
+    pub fn new(coo: &'a CooMatrix) -> Self {
+        Self::over_range(coo, 0, coo.nnz(), PACKET_NNZ)
+    }
+
+    /// Stream `[start, end)` with a configurable packet width (the CU-count
+    /// / packet-width ablation uses widths 1..=15).
+    pub fn over_range(coo: &'a CooMatrix, start: usize, end: usize, width: usize) -> Self {
+        assert!(width >= 1 && width <= PACKET_NNZ * 3, "unreasonable packet width {width}");
+        assert!(start <= end && end <= coo.nnz());
+        Self { coo, pos: start, end, width }
+    }
+
+    /// Total packets this stream will yield.
+    pub fn packet_count(&self) -> usize {
+        let n = self.end - self.pos;
+        n.div_ceil(self.width)
+    }
+}
+
+impl<'a> Iterator for PacketStream<'a> {
+    type Item = CooPacket;
+
+    fn next(&mut self) -> Option<CooPacket> {
+        if self.pos >= self.end {
+            return None;
+        }
+        let take = self.width.min(self.end - self.pos);
+        let mut p = CooPacket {
+            rows: [0; PACKET_NNZ],
+            cols: [0; PACKET_NNZ],
+            vals: [0.0; PACKET_NNZ],
+            len: take,
+        };
+        for i in 0..take {
+            p.rows[i] = self.coo.rows[self.pos + i];
+            p.cols[i] = self.coo.cols[self.pos + i];
+            p.vals[i] = self.coo.vals[self.pos + i];
+        }
+        self.pos += take;
+        Some(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coo(n: usize) -> CooMatrix {
+        let mut m = CooMatrix::new(n, n);
+        for i in 0..n {
+            m.push(i, (i + 1) % n, i as f32);
+        }
+        m
+    }
+
+    #[test]
+    fn packet_count_and_tail() {
+        let m = coo(13);
+        let s = PacketStream::new(&m);
+        assert_eq!(s.packet_count(), 3);
+        let ps: Vec<_> = PacketStream::new(&m).collect();
+        assert_eq!(ps.len(), 3);
+        assert_eq!(ps[0].len, 5);
+        assert_eq!(ps[1].len, 5);
+        assert_eq!(ps[2].len, 3);
+    }
+
+    #[test]
+    fn entries_round_trip() {
+        let m = coo(12);
+        let flat: Vec<(u32, u32, f32)> =
+            PacketStream::new(&m).flat_map(|p| p.entries().collect::<Vec<_>>()).collect();
+        assert_eq!(flat.len(), 12);
+        for (i, &(r, c, v)) in flat.iter().enumerate() {
+            assert_eq!(r as usize, i);
+            assert_eq!(c as usize, (i + 1) % 12);
+            assert_eq!(v, i as f32);
+        }
+    }
+
+    #[test]
+    fn spmv_via_packets_matches_reference() {
+        let m = coo(23);
+        let x: Vec<f32> = (0..23).map(|i| (i as f32).sin()).collect();
+        let mut y = vec![0.0f32; 23];
+        for p in PacketStream::new(&m) {
+            for (r, c, v) in p.entries() {
+                y[r as usize] += v * x[c as usize];
+            }
+        }
+        assert_eq!(y, m.spmv_ref(&x));
+    }
+
+    #[test]
+    fn custom_width_and_range() {
+        let m = coo(10);
+        let s = PacketStream::over_range(&m, 2, 9, 3);
+        assert_eq!(s.packet_count(), 3);
+        let lens: Vec<usize> = PacketStream::over_range(&m, 2, 9, 3).map(|p| p.len).collect();
+        assert_eq!(lens, vec![3, 3, 1]);
+    }
+
+    #[test]
+    fn five_entries_fit_512_bits() {
+        assert!(PACKET_NNZ * 3 * 32 <= PACKET_BITS);
+        assert_eq!(PACKET_NNZ, 5);
+    }
+}

@@ -1,0 +1,240 @@
+//! Tiny declarative command-line parser (offline substitute for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, positional
+//! arguments, defaults, and auto-generated `--help`. Typed accessors parse
+//! on demand and report errors with the offending flag name.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Error produced while parsing the command line.
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+/// Declaration of a single option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<&'static str>,
+    is_flag: bool,
+}
+
+/// Declaration of a command (or subcommand): options + positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    name: &'static str,
+    about: &'static str,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(&'static str, &'static str)>,
+}
+
+impl Command {
+    /// New command with a one-line description.
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, ..Default::default() }
+    }
+
+    /// Add `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec { name, help, default, is_flag: false });
+        self
+    }
+
+    /// Add a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    /// Add a required positional argument.
+    pub fn positional(mut self, name: &'static str, help: &'static str) -> Self {
+        self.positionals.push((name, help));
+        self
+    }
+
+    /// Render the usage/help text.
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n");
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let d = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+                s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, d));
+            }
+        }
+        s
+    }
+
+    /// Parse a raw argument list (without argv[0]).
+    pub fn parse(&self, args: &[String]) -> Result<Matches, CliError> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut pos: Vec<String> = Vec::new();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(CliError(self.usage()));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError(format!("unknown option --{key}\n\n{}", self.usage())))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(CliError(format!("flag --{key} does not take a value")));
+                    }
+                    flags.push(key);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| CliError(format!("option --{key} expects a value")))?
+                            .clone(),
+                    };
+                    values.insert(key, v);
+                }
+            } else {
+                pos.push(a.clone());
+            }
+        }
+        if pos.len() < self.positionals.len() {
+            return Err(CliError(format!(
+                "missing required argument <{}>\n\n{}",
+                self.positionals[pos.len()].0,
+                self.usage()
+            )));
+        }
+        for (i, (name, _)) in self.positionals.iter().enumerate() {
+            values.insert(name.to_string(), pos[i].clone());
+        }
+        Ok(Matches { values, flags, extra_positionals: pos.split_off(self.positionals.len()) })
+    }
+}
+
+/// Result of a successful parse.
+#[derive(Debug)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Positional arguments beyond the declared ones.
+    pub extra_positionals: Vec<String>,
+}
+
+impl Matches {
+    /// Raw string value (from option, positional, or default).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Required string value.
+    pub fn str(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name).ok_or_else(|| CliError(format!("missing --{name}")))
+    }
+
+    /// Typed value parsed via `FromStr`.
+    pub fn parse<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        let raw = self.str(name)?;
+        raw.parse::<T>().map_err(|e| CliError(format!("--{name}={raw}: {e}")))
+    }
+
+    /// Was the boolean flag present?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("solve", "solve an eigenproblem")
+            .positional("input", "matrix file")
+            .opt("k", "number of eigenpairs", Some("8"))
+            .opt("seed", "rng seed", Some("42"))
+            .flag("verbose", "chatty output")
+    }
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_positional_options_and_flags() {
+        let m = cmd().parse(&args(&["g.mtx", "--k", "16", "--verbose"])).unwrap();
+        assert_eq!(m.str("input").unwrap(), "g.mtx");
+        assert_eq!(m.parse::<usize>("k").unwrap(), 16);
+        assert_eq!(m.parse::<u64>("seed").unwrap(), 42); // default
+        assert!(m.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let m = cmd().parse(&args(&["g.mtx", "--k=24"])).unwrap();
+        assert_eq!(m.parse::<usize>("k").unwrap(), 24);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(&args(&["g.mtx", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn missing_positional_errors() {
+        let e = cmd().parse(&args(&[])).unwrap_err();
+        assert!(e.0.contains("missing required argument <input>"), "{}", e.0);
+    }
+
+    #[test]
+    fn bad_typed_value_reports_flag() {
+        let m = cmd().parse(&args(&["g.mtx", "--k", "pony"])).unwrap();
+        let e = m.parse::<usize>("k").unwrap_err();
+        assert!(e.0.contains("--k=pony"), "{}", e.0);
+    }
+
+    #[test]
+    fn help_is_an_error_carrying_usage() {
+        let e = cmd().parse(&args(&["--help"])).unwrap_err();
+        assert!(e.0.contains("USAGE"), "{}", e.0);
+        assert!(e.0.contains("--k"));
+    }
+
+    #[test]
+    fn extra_positionals_collected() {
+        let m = cmd().parse(&args(&["g.mtx", "other1", "other2"])).unwrap();
+        assert_eq!(m.extra_positionals, vec!["other1".to_string(), "other2".to_string()]);
+    }
+}

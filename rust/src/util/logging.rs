@@ -1,0 +1,70 @@
+//! Minimal `log` facade backend: timestamped stderr logger with a level
+//! filter from `TOPK_LOG` (error|warn|info|debug|trace). Install once at
+//! process start; repeated installs are no-ops.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::Once;
+use std::time::Instant;
+
+static INIT: Once = Once::new();
+static LOGGER: StderrLogger = StderrLogger;
+static mut START: Option<Instant> = None;
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        // SAFETY: START is written exactly once inside `Once` before any
+        // logging can happen.
+        let t0 = unsafe { (*std::ptr::addr_of!(START)).unwrap_or_else(Instant::now) };
+        let dt = t0.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{dt:10.4}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent). Level comes from `TOPK_LOG`, default
+/// `info`.
+pub fn init() {
+    INIT.call_once(|| {
+        unsafe {
+            START = Some(Instant::now());
+        }
+        let level = match std::env::var("TOPK_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            Ok("off") => LevelFilter::Off,
+            _ => LevelFilter::Info,
+        };
+        if log::set_logger(&LOGGER).is_ok() {
+            log::set_max_level(level);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,13 @@
+//! Small self-contained substrates that replace crates unavailable in the
+//! offline vendor set (clap, rand, serde_json, rayon/tokio, proptest).
+//!
+//! Each submodule is deliberately minimal but production-shaped: documented,
+//! tested, and used pervasively by the rest of the crate.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod timer;

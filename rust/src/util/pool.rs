@@ -1,0 +1,279 @@
+//! Scoped thread pool (offline substitute for `rayon`/`tokio` in the
+//! coordinator's data-parallel paths).
+//!
+//! The pool models the paper's hardware parallelism: each worker stands in
+//! for one SpMV Compute Unit (CU) fed by its own HBM pseudo-channel. Work is
+//! submitted as closures; `scope` provides structured fork/join over
+//! borrowed data (the common case for sharded SpMV over one matrix).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size thread pool with FIFO dispatch.
+pub struct ThreadPool {
+    tx: Sender<Msg>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+    in_flight: Arc<(Mutex<usize>, std::sync::Condvar)>,
+}
+
+impl ThreadPool {
+    /// Spawn `size` workers (`size >= 1`).
+    pub fn new(size: usize) -> Self {
+        assert!(size >= 1, "pool needs at least one worker");
+        let (tx, rx) = channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let in_flight = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx: Arc<Mutex<Receiver<Msg>>> = Arc::clone(&rx);
+            let in_flight = Arc::clone(&in_flight);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("cu-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = {
+                            let guard = rx.lock().expect("pool queue poisoned");
+                            guard.recv()
+                        };
+                        match msg {
+                            Ok(Msg::Run(job)) => {
+                                job();
+                                let (lock, cvar) = &*in_flight;
+                                let mut n = lock.lock().unwrap();
+                                *n -= 1;
+                                cvar.notify_all();
+                            }
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("failed to spawn pool worker"),
+            );
+        }
+        Self { tx, workers, size, in_flight }
+    }
+
+    /// Pool with one worker per available hardware thread.
+    pub fn with_default_parallelism() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n)
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Fire-and-forget execution of an owned closure.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        {
+            let (lock, _) = &*self.in_flight;
+            *lock.lock().unwrap() += 1;
+        }
+        self.tx.send(Msg::Run(Box::new(job))).expect("pool is shut down");
+    }
+
+    /// Block until every submitted job has completed.
+    pub fn wait_idle(&self) {
+        let (lock, cvar) = &*self.in_flight;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            n = cvar.wait(n).unwrap();
+        }
+    }
+
+    /// Structured fork/join over borrowed data: run `f` for each index in
+    /// `0..tasks`, partitioned across workers, and join before returning.
+    ///
+    /// Dispatches to the pool's **persistent** workers (no thread spawn per
+    /// call — this sits on the per-iteration SpMV hot path, where a
+    /// spawn-per-apply costs more than a small shard's compute; see
+    /// EXPERIMENTS.md §Perf). Borrowed state is passed through a raw
+    /// pointer that is guaranteed valid because this function blocks until
+    /// every worker has finished.
+    pub fn scope_chunks<F>(&self, tasks: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync,
+    {
+        if tasks == 0 {
+            return;
+        }
+        let workers = self.size.min(tasks);
+        if workers <= 1 {
+            for i in 0..tasks {
+                f(i);
+            }
+            return;
+        }
+
+        struct Ctx {
+            fptr: *const (),
+            call: unsafe fn(*const (), usize),
+            next: AtomicUsize,
+            tasks: usize,
+            active: Mutex<usize>,
+            done: std::sync::Condvar,
+        }
+        // SAFETY: the raw pointer is only dereferenced while `scope_chunks`
+        // blocks below, so the borrow of `f` cannot dangle.
+        unsafe impl Send for Ctx {}
+        unsafe impl Sync for Ctx {}
+
+        unsafe fn call_impl<F: Fn(usize)>(p: *const (), i: usize) {
+            unsafe { (*(p as *const F))(i) }
+        }
+
+        let ctx = Arc::new(Ctx {
+            fptr: &f as *const F as *const (),
+            call: call_impl::<F>,
+            next: AtomicUsize::new(0),
+            tasks,
+            active: Mutex::new(workers),
+            done: std::sync::Condvar::new(),
+        });
+        for _ in 0..workers {
+            let c = Arc::clone(&ctx);
+            self.execute(move || {
+                loop {
+                    let i = c.next.fetch_add(1, Ordering::Relaxed);
+                    if i >= c.tasks {
+                        break;
+                    }
+                    // SAFETY: see Ctx — `f` outlives this call.
+                    unsafe { (c.call)(c.fptr, i) }
+                }
+                let mut active = c.active.lock().unwrap();
+                *active -= 1;
+                if *active == 0 {
+                    c.done.notify_all();
+                }
+            });
+        }
+        let mut active = ctx.active.lock().unwrap();
+        while *active > 0 {
+            active = ctx.done.wait(active).unwrap();
+        }
+    }
+
+    /// Parallel map over indices `0..tasks`, preserving order of results.
+    pub fn map<T, F>(&self, tasks: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Send + Sync,
+    {
+        let mut out: Vec<Option<T>> = (0..tasks).map(|_| None).collect();
+        {
+            let slots = Mutex::new(&mut out);
+            let next = AtomicUsize::new(0);
+            let workers = self.size.min(tasks.max(1));
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(|| loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= tasks {
+                            break;
+                        }
+                        let v = f(i);
+                        // Short critical section: one slot write.
+                        let mut guard = slots.lock().unwrap();
+                        guard[i] = Some(v);
+                    });
+                }
+            });
+        }
+        out.into_iter().map(|o| o.expect("worker skipped a slot")).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scope_chunks_covers_every_index() {
+        let pool = ThreadPool::new(3);
+        let hits: Vec<AtomicU64> = (0..57).map(|_| AtomicU64::new(0)).collect();
+        pool.scope_chunks(57, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.map(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_borrows_local_state() {
+        let pool = ThreadPool::new(2);
+        let data: Vec<f64> = (0..32).map(|i| i as f64).collect();
+        let out = pool.map(4, |shard| {
+            data[shard * 8..(shard + 1) * 8].iter().sum::<f64>()
+        });
+        assert_eq!(out.iter().sum::<f64>(), (0..32).sum::<usize>() as f64);
+    }
+
+    #[test]
+    fn zero_tasks_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.scope_chunks(0, |_| panic!("must not run"));
+        let v: Vec<usize> = pool.map(0, |i| i);
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+}

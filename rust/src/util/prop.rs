@@ -1,0 +1,192 @@
+//! Miniature property-based testing harness (offline substitute for
+//! `proptest`). Deterministic by default, seedable via
+//! `TOPK_PROP_SEED`, case count via `TOPK_PROP_CASES`.
+//!
+//! Usage:
+//! ```
+//! use topk_eigen::prop_assert;
+//! use topk_eigen::util::prop::{forall, Gen};
+//! forall("sum is commutative", |g: &mut Gen| {
+//!     let a = g.f64_in(-1.0, 1.0);
+//!     let b = g.f64_in(-1.0, 1.0);
+//!     prop_assert!(g, (a + b - (b + a)).abs() == 0.0, "a={a} b={b}");
+//!     true
+//! });
+//! ```
+//!
+//! On failure the harness retries the failing case with progressively
+//! "smaller" derived seeds (a bounded shrinking pass) and reports the
+//! smallest reproduction seed it found.
+
+use crate::util::rng::Pcg64;
+
+/// Value generator handed to each property case.
+pub struct Gen {
+    rng: Pcg64,
+    /// Size hint in `[0, 1]`; early cases are small, later cases large.
+    /// Generators should scale collection lengths/magnitudes with this.
+    pub size: f64,
+    failure: Option<String>,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Self {
+        Self { rng: Pcg64::new(seed), size, failure: None }
+    }
+
+    /// Record a failure message (used by `prop_assert!`).
+    pub fn fail(&mut self, msg: String) {
+        if self.failure.is_none() {
+            self.failure = Some(msg);
+        }
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive), scaled by the size hint so
+    /// early cases stay small.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = hi - lo;
+        let scaled = ((span as f64) * self.size).ceil() as usize;
+        let hi_eff = lo + scaled.min(span);
+        self.rng.range(lo, hi_eff + 1)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.f64_range(lo, hi)
+    }
+
+    /// Standard normal.
+    pub fn normal(&mut self) -> f64 {
+        self.rng.normal()
+    }
+
+    /// Bernoulli.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Random vector of length `len` with entries in `[lo, hi)`.
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Random f32 vector of length `len` with entries in `[lo, hi)`.
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| lo + (hi - lo) * self.rng.f32()).collect()
+    }
+
+    /// Choose one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.range(0, xs.len())]
+    }
+
+    /// Access the underlying RNG for bespoke generation.
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Configuration resolved from the environment.
+fn config() -> (u64, usize) {
+    let seed = std::env::var("TOPK_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0x70_70_70);
+    let cases = std::env::var("TOPK_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(64);
+    (seed, cases)
+}
+
+/// Run `prop` for the configured number of cases; panic with the seed of the
+/// smallest failing case if any case returns `false` or records a failure.
+pub fn forall(name: &str, prop: impl Fn(&mut Gen) -> bool) {
+    let (base_seed, cases) = config();
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let size = ((case + 1) as f64 / cases as f64).min(1.0);
+        if let Some(msg) = run_case(&prop, seed, size) {
+            // Bounded "shrink": try smaller sizes with the same seed to find
+            // a smaller reproduction, then report.
+            let mut best = (size, msg);
+            for step in 1..=8 {
+                let smaller = size * (1.0 - step as f64 / 10.0);
+                if smaller <= 0.0 {
+                    break;
+                }
+                if let Some(m) = run_case(&prop, seed, smaller) {
+                    best = (smaller, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}/{cases})\n  repro: TOPK_PROP_SEED={base_seed} seed={seed} size={:.2}\n  {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+fn run_case(prop: &impl Fn(&mut Gen) -> bool, seed: u64, size: f64) -> Option<String> {
+    let mut g = Gen::new(seed, size);
+    let ok = prop(&mut g);
+    if let Some(msg) = g.failure {
+        Some(msg)
+    } else if !ok {
+        Some("property returned false".to_string())
+    } else {
+        None
+    }
+}
+
+/// Assert inside a property, recording a rich message instead of panicking so
+/// the harness can shrink.
+#[macro_export]
+macro_rules! prop_assert {
+    ($g:expr, $cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            $g.fail(format!($($fmt)*));
+            return false;
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_quietly() {
+        forall("reverse twice is identity", |g| {
+            let n = g.usize_in(0, 100);
+            let v = g.vec_f64(n, -1.0, 1.0);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            v == w
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_repro() {
+        forall("always fails", |_g| false);
+    }
+
+    #[test]
+    fn sizes_grow_over_cases() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let max_len = AtomicU64::new(0);
+        forall("observe sizes", |g| {
+            let n = g.usize_in(0, 1000) as u64;
+            max_len.fetch_max(n, Ordering::SeqCst);
+            true
+        });
+        assert!(max_len.load(Ordering::SeqCst) > 100, "late cases should be large");
+    }
+
+    #[test]
+    #[should_panic(expected = "x=")]
+    fn prop_assert_reports_bindings() {
+        forall("bad bound", |g| {
+            let x = g.f64_in(0.0, 1.0);
+            prop_assert!(g, x > 2.0, "x={x}");
+            true
+        });
+    }
+}

@@ -1,0 +1,247 @@
+//! Deterministic pseudo-random number generation (offline substitute for the
+//! `rand` crate).
+//!
+//! Provides [`Pcg64`] (PCG-XSL-RR 128/64, the same generator family as
+//! `rand_pcg::Pcg64`) seeded through SplitMix64, plus the handful of
+//! distributions the workload generators and solvers need: uniform ints,
+//! uniform floats, standard normal (Box-Muller), and Fisher-Yates shuffling.
+//!
+//! Determinism matters here: every synthetic graph in the Table II catalog is
+//! identified by `(generator, scale, seed)`, so benches and tests are
+//! reproducible bit-for-bit across runs and machines.
+
+/// SplitMix64: used to expand a single `u64` seed into the 128-bit PCG state.
+///
+/// Reference: Steele, Lea, Flood — "Fast Splittable Pseudorandom Number
+/// Generators" (OOPSLA 2014).
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// PCG-XSL-RR 128/64: a small, fast, statistically strong PRNG.
+///
+/// 128 bits of state, 64-bit output, period 2^128.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s0 = splitmix64(&mut sm);
+        let s1 = splitmix64(&mut sm);
+        let i0 = splitmix64(&mut sm);
+        let i1 = splitmix64(&mut sm);
+        let state = ((s0 as u128) << 64) | s1 as u128;
+        // The increment must be odd.
+        let inc = (((i0 as u128) << 64) | i1 as u128) | 1;
+        let mut rng = Self { state, inc };
+        // Burn one output so that nearby seeds decorrelate immediately.
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent stream, e.g. one per worker thread or CU shard.
+    pub fn split(&mut self, stream: u64) -> Self {
+        Self::new(self.next_u64() ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform `u64` in `[0, bound)` via Lemire's nearly-divisionless method.
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0, "below(0) is meaningless");
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform `usize` in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)` with 24 bits of precision.
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    #[inline]
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Standard normal sample (Box-Muller; one value per call, no caching so
+    /// the stream stays splittable/deterministic).
+    pub fn normal(&mut self) -> f64 {
+        // Avoid u1 == 0 (log(0)).
+        let u1 = loop {
+            let u = self.f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Bernoulli trial with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// In-place Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (Floyd's algorithm).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} distinct values from {n}");
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below((j + 1) as u64) as usize;
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::new(7);
+        let mut b = Pcg64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut rng = Pcg64::new(3);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            let v = rng.below(10) as usize;
+            counts[v] += 1;
+        }
+        for &c in &counts {
+            // Each bucket expects 10_000; allow 10% slack.
+            assert!((9_000..=11_000).contains(&c), "bucket count {c}");
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut rng = Pcg64::new(11);
+        let mut mean = 0.0;
+        for _ in 0..100_000 {
+            let v = rng.f64();
+            assert!((0.0..1.0).contains(&v));
+            mean += v;
+        }
+        mean /= 100_000.0;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(5);
+        let n = 200_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.normal();
+            m1 += x;
+            m2 += x * x;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.02, "mean {m1}");
+        assert!((m2 - 1.0).abs() < 0.03, "var {m2}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(9);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>(), "shuffle left input ordered");
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_bounded() {
+        let mut rng = Pcg64::new(13);
+        let s = rng.sample_indices(50, 20);
+        assert_eq!(s.len(), 20);
+        let set: std::collections::HashSet<_> = s.iter().collect();
+        assert_eq!(set.len(), 20);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn split_streams_decorrelate() {
+        let mut root = Pcg64::new(42);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,215 @@
+//! Timing and summary statistics used by the bench harness and the
+//! coordinator's metrics.
+
+use std::time::{Duration, Instant};
+
+/// Stopwatch with lap support.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        let now = Instant::now();
+        Self { start: now, last: now }
+    }
+
+    /// Seconds since construction.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Seconds since the previous `lap` (or construction), and reset the lap.
+    pub fn lap_s(&mut self) -> f64 {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        dt
+    }
+}
+
+/// Streaming summary statistics (Welford) over a series of samples.
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    samples: Vec<f64>,
+}
+
+impl Stats {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Self { min: f64::INFINITY, max: f64::NEG_INFINITY, ..Default::default() }
+    }
+
+    /// Add one sample.
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.samples.push(x);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    /// Arithmetic mean (0 when empty).
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+    /// Minimum sample.
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+    /// Maximum sample.
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Percentile in `[0, 100]` by nearest-rank on the recorded samples.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    /// Median (p50).
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+}
+
+/// Geometric mean of a slice (ignores non-positive entries, matching the
+/// paper's geomean-speedup convention).
+pub fn geomean(xs: &[f64]) -> f64 {
+    let logs: Vec<f64> = xs.iter().filter(|&&x| x > 0.0).map(|x| x.ln()).collect();
+    if logs.is_empty() {
+        return 0.0;
+    }
+    (logs.iter().sum::<f64>() / logs.len() as f64).exp()
+}
+
+/// Format seconds human-readably (ns/us/ms/s).
+pub fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Measure the wall time of `f` in seconds, returning `(result, seconds)`.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+/// Sleep-free busy-wait for at least `d` (used by failure-injection tests).
+pub fn spin_for(d: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_mean_and_stddev() {
+        let mut s = Stats::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.stddev() - 2.138).abs() < 1e-3);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        assert_eq!(s.count(), 8);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Stats::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.median() - 50.0).abs() <= 1.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+        assert!((s.percentile(90.0) - 90.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn geomean_matches_hand_value() {
+        let g = geomean(&[1.0, 4.0, 16.0]);
+        assert!((g - 4.0).abs() < 1e-12, "{g}");
+        // Non-positive entries are excluded, like the paper excluding HT.
+        let g2 = geomean(&[1.0, 4.0, 16.0, 0.0, -3.0]);
+        assert!((g2 - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fmt_duration_scales() {
+        assert!(fmt_duration(2.5e-9).ends_with("ns"));
+        assert!(fmt_duration(2.5e-6).ends_with("us"));
+        assert!(fmt_duration(2.5e-3).ends_with("ms"));
+        assert!(fmt_duration(2.5).ends_with('s'));
+    }
+
+    #[test]
+    fn time_it_measures() {
+        let (v, dt) = time_it(|| {
+            spin_for(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(dt >= 0.004, "dt={dt}");
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = Stats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.stddev(), 0.0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.median(), 0.0);
+    }
+}

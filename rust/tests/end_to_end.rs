@@ -1,0 +1,231 @@
+//! Cross-module integration: solver vs baseline agreement, catalog-suite
+//! solves, the service, and the MatrixMarket IO loop.
+
+use std::sync::Arc;
+use topk_eigen::coordinator::service::EigenService;
+use topk_eigen::coordinator::{verify, SolveOptions, Solver};
+use topk_eigen::graphs;
+use topk_eigen::iram::{iram, IramOptions};
+use topk_eigen::lanczos::{ReorthPolicy, ShardedSpmv};
+use topk_eigen::sparse::{self, PartitionPolicy};
+use topk_eigen::util::pool::ThreadPool;
+
+/// The two independent solvers (single-pass Lanczos+Jacobi vs restarted
+/// Lanczos) must agree on the dominant eigenvalues of a well-separated
+/// spectrum.
+#[test]
+fn solver_and_iram_agree_on_dominant_pairs() {
+    let mut adj = graphs::scale_free_ba(1500, 6, 3);
+    sparse::normalize_frobenius(&mut adj);
+    let csr = adj.to_csr();
+
+    let mut solver = Solver::new(SolveOptions {
+        k: 16,
+        reorth: ReorthPolicy::Every,
+        skip_normalize: true,
+        ..Default::default()
+    });
+    let sol = solver.solve(&adj).expect("solve");
+
+    let ir = iram(&csr, &IramOptions { k: 6, tol: 1e-9, ..Default::default() });
+    assert!(ir.converged);
+    // Single-pass Lanczos gives *approximate* Ritz pairs: the dominant one
+    // converges fast, deeper ones carry O(percent) error — exactly the
+    // accuracy regime the paper's Fig 11 characterizes. Compare the top
+    // pair tightly and the next two loosely.
+    assert!(
+        (sol.eigenvalues[0] - ir.eigenvalues[0]).abs() < 2e-3 * ir.eigenvalues[0].abs(),
+        "pair 0: lanczos+jacobi {} vs iram {}",
+        sol.eigenvalues[0],
+        ir.eigenvalues[0]
+    );
+    // Power-law spectra carry near-symmetric +-lambda pairs whose order
+    // under |.| can swap between approximate methods; compare magnitudes.
+    for i in 1..3 {
+        assert!(
+            (sol.eigenvalues[i].abs() - ir.eigenvalues[i].abs()).abs() < 0.08 * ir.eigenvalues[i].abs(),
+            "pair {i}: lanczos+jacobi {} vs iram {}",
+            sol.eigenvalues[i],
+            ir.eigenvalues[i]
+        );
+    }
+}
+
+#[test]
+fn catalog_suite_solves_cleanly_at_tiny_scale() {
+    for (i, e) in graphs::catalog().into_iter().enumerate() {
+        let g = e.generate(2048);
+        let mut solver = Solver::new(SolveOptions { k: 6, ..Default::default() });
+        let sol = solver.solve(&g).unwrap_or_else(|err| panic!("{} failed: {err}", e.id));
+        assert!(sol.k() >= 1, "{}: no pairs", e.id);
+        let r = verify::verify(&g, &sol);
+        assert!(r.mean_angle_deg > 88.0, "{}: angle {}", e.id, r.mean_angle_deg);
+        // Eigenvalues bounded by the Frobenius norm.
+        for (lambda, _) in sol.pairs() {
+            assert!(lambda.abs() <= sol.frobenius_norm * 1.001, "{}: |{lambda}| > fro", e.id);
+        }
+        let _ = i;
+    }
+}
+
+#[test]
+fn sharded_iram_equals_serial_iram() {
+    let mut adj = graphs::rmat(1 << 9, 6 << 9, 0.57, 0.19, 0.19, 17);
+    sparse::normalize_frobenius(&mut adj);
+    let csr = Arc::new(adj.to_csr());
+    let pool = Arc::new(ThreadPool::new(4));
+    let sharded = ShardedSpmv::new(Arc::clone(&csr), 4, PartitionPolicy::BalancedNnz, pool);
+    let a = iram(csr.as_ref(), &IramOptions { k: 4, tol: 1e-8, ..Default::default() });
+    let b = iram(&sharded, &IramOptions { k: 4, tol: 1e-8, ..Default::default() });
+    for i in 0..4 {
+        assert!(
+            (a.eigenvalues[i] - b.eigenvalues[i]).abs() < 1e-6,
+            "pair {i}: serial {} vs sharded {}",
+            a.eigenvalues[i],
+            b.eigenvalues[i]
+        );
+    }
+}
+
+#[test]
+fn mtx_round_trip_preserves_solution() {
+    let dir = std::env::temp_dir().join("topk-e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("graph.mtx");
+    let adj = graphs::mesh2d(20, 20, 0.9, 0.02, 7);
+    sparse::write_matrix_market(&path, &adj).unwrap();
+    let re = sparse::read_matrix_market(&path).unwrap();
+    let mut s1 = Solver::new(SolveOptions { k: 4, ..Default::default() });
+    let mut s2 = Solver::new(SolveOptions { k: 4, ..Default::default() });
+    let a = s1.solve(&adj).unwrap();
+    let b = s2.solve(&re).unwrap();
+    for i in 0..4 {
+        assert!((a.eigenvalues[i] - b.eigenvalues[i]).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn service_mixed_workload_under_load() {
+    let svc = EigenService::start(3);
+    let mut tickets = Vec::new();
+    for i in 0..9u64 {
+        let m = graphs::erdos_renyi(256 + (i as usize) * 32, 2048, i);
+        let (_, t) = svc.submit(m, SolveOptions { k: 3 + (i as usize % 3), ..Default::default() });
+        tickets.push(t);
+    }
+    let mut done = 0;
+    for t in tickets {
+        let r = t.wait();
+        assert!(r.outcome.is_ok(), "job {} failed: {:?}", r.id, r.outcome.err());
+        done += 1;
+    }
+    assert_eq!(done, 9);
+}
+
+#[test]
+fn breakdown_path_returns_partial_solution() {
+    // Rank-1 matrix (uniform outer product): the uniform Lanczos start is
+    // exactly the eigenvector, so the recurrence breaks down after one
+    // iteration; the solver must return the single exact pair rather than
+    // erroring.
+    let mut m = sparse::CooMatrix::new(64, 64);
+    for i in 0..64 {
+        for j in 0..64 {
+            m.push(i, j, 1.0 / 64.0);
+        }
+    }
+    let mut solver = Solver::new(SolveOptions { k: 8, ..Default::default() });
+    let sol = solver.solve(&m).expect("solve");
+    assert_eq!(sol.metrics.breakdown_at, Some(1));
+    assert_eq!(sol.k(), 1);
+    assert!((sol.eigenvalues[0] - 1.0).abs() < 1e-4, "{:?}", sol.eigenvalues);
+}
+
+#[test]
+fn equal_rows_partition_matches_paper_default_solver() {
+    // The paper partitions by equal rows; results must not depend on the
+    // partition policy.
+    let adj = graphs::rmat(1 << 8, 8 << 8, 0.6, 0.18, 0.18, 9);
+    let mut a = Solver::new(SolveOptions { partition: PartitionPolicy::EqualRows, ..Default::default() });
+    let mut b = Solver::new(SolveOptions { partition: PartitionPolicy::BalancedNnz, ..Default::default() });
+    let sa = a.solve(&adj).unwrap();
+    let sb = b.solve(&adj).unwrap();
+    for i in 0..sa.k().min(sb.k()) {
+        assert!((sa.eigenvalues[i] - sb.eigenvalues[i]).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn runtime_load_missing_artifact_errors_cleanly() {
+    use topk_eigen::runtime::Runtime;
+    let rt = Runtime::cpu().expect("client");
+    let err = match rt.load("definitely_missing.hlo.txt") {
+        Ok(_) => panic!("missing artifact must not load"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("definitely_missing"), "error should name the artifact: {msg}");
+}
+
+#[test]
+fn pjrt_spmv_rejects_oversized_matrix() {
+    use std::sync::Arc;
+    use topk_eigen::runtime::{PjrtSpmv, Runtime};
+    // 1M rows exceeds every compiled variant: constructor must error, not
+    // panic, so the coordinator can fall back to the native engine.
+    let mut m = sparse::CooMatrix::new(1 << 20, 1 << 20);
+    m.push(0, 0, 1.0);
+    let rt = Arc::new(Runtime::cpu().expect("client"));
+    let err = match PjrtSpmv::new(rt, &m) {
+        Ok(_) => panic!("oversized matrix must not load"),
+        Err(e) => e,
+    };
+    assert!(format!("{err}").contains("no SpMV artifact"), "{err}");
+}
+
+#[test]
+fn reorth_every_zero_behaves_as_none() {
+    // EveryN(0) must not divide by zero; it degrades to no reorth.
+    let adj = graphs::erdos_renyi(128, 1024, 3);
+    let mut a = Solver::new(SolveOptions { reorth: ReorthPolicy::EveryN(0), k: 4, ..Default::default() });
+    let mut b = Solver::new(SolveOptions { reorth: ReorthPolicy::None, k: 4, ..Default::default() });
+    let sa = a.solve(&adj).unwrap();
+    let sb = b.solve(&adj).unwrap();
+    assert_eq!(sa.eigenvalues, sb.eigenvalues);
+}
+
+#[test]
+fn solver_more_cus_than_rows_is_fine() {
+    let mut m = sparse::CooMatrix::new(3, 3);
+    m.push(0, 1, 1.0);
+    m.push(1, 0, 1.0);
+    m.push(2, 2, 0.5);
+    let mut s = Solver::new(SolveOptions { k: 2, cus: 16, ..Default::default() });
+    let sol = s.solve(&m).unwrap();
+    assert!(sol.k() >= 1);
+}
+
+#[test]
+fn cli_binary_catalog_and_model_run() {
+    // Smoke the installed binary end-to-end (subprocess, like a user).
+    let exe = env!("CARGO_BIN_EXE_topk-eigen");
+    let out = std::process::Command::new(exe).arg("catalog").output().expect("run");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("wiki-Talk") && text.contains("wb-edu"), "{text}");
+
+    let out = std::process::Command::new(exe)
+        .args(["solve", "WB-GO@2048", "--k", "4", "--quiet", "--verify"])
+        .output()
+        .expect("run");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("accuracy:"), "{text}");
+
+    let out = std::process::Command::new(exe)
+        .args(["model", "IT@2048", "--k", "8"])
+        .output()
+        .expect("run");
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("SLR0"));
+}

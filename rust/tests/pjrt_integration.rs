@@ -1,0 +1,186 @@
+//! Integration tests over the AOT bridge: HLO artifacts -> PJRT -> rust.
+//!
+//! These require `make artifacts`. If the artifact directory is missing
+//! they fail with an actionable message — the build pipeline (Makefile
+//! `test` target) always builds artifacts first.
+
+use std::sync::Arc;
+use topk_eigen::graphs;
+use topk_eigen::lanczos::Operator;
+use topk_eigen::linalg::Tridiagonal;
+use topk_eigen::runtime::{artifacts_dir, ArtifactRegistry, PjrtJacobi, PjrtSpmv, Runtime};
+use topk_eigen::sparse::normalize_frobenius;
+use topk_eigen::util::rng::Pcg64;
+
+fn artifacts_ready() -> bool {
+    let dir = artifacts_dir();
+    ArtifactRegistry::all_files().iter().all(|f| dir.join(f).is_file())
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("SKIP: artifacts missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+#[test]
+fn all_registry_artifacts_exist_after_build() {
+    require_artifacts!();
+    // (When artifacts exist at all, the full registry must be present —
+    // partial artifact sets indicate a drifted aot.py.)
+    let dir = artifacts_dir();
+    for f in ArtifactRegistry::all_files() {
+        assert!(dir.join(&f).is_file(), "missing artifact {f}");
+    }
+}
+
+#[test]
+fn pjrt_spmv_matches_native_on_rmat() {
+    require_artifacts!();
+    let mut coo = graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 5);
+    normalize_frobenius(&mut coo);
+    let csr = coo.to_csr();
+    let rt = Arc::new(Runtime::cpu().expect("runtime"));
+    let op = PjrtSpmv::new(rt, &coo).expect("load spmv artifact");
+    let mut rng = Pcg64::new(3);
+    for trial in 0..3 {
+        let x: Vec<f32> = (0..coo.nrows).map(|_| rng.f32() - 0.5).collect();
+        let mut y = vec![0.0f32; coo.nrows];
+        op.apply(&x, &mut y);
+        let expect = csr.spmv(&x);
+        for i in 0..coo.nrows {
+            assert!(
+                (y[i] - expect[i]).abs() <= 1e-5 + 1e-4 * expect[i].abs(),
+                "trial {trial} row {i}: pjrt {} vs native {}",
+                y[i],
+                expect[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_spmv_picks_larger_variant_when_needed() {
+    require_artifacts!();
+    let mut coo = graphs::mesh2d(64, 64, 0.9, 0.01, 2); // n = 4096 > 1024
+    normalize_frobenius(&mut coo);
+    let rt = Arc::new(Runtime::cpu().expect("runtime"));
+    let op = PjrtSpmv::new(rt, &coo).expect("load spmv artifact");
+    assert!(op.variant().n >= 4096);
+    let x = vec![0.5f32; coo.nrows];
+    let mut y = vec![0.0f32; coo.nrows];
+    op.apply(&x, &mut y);
+    assert_eq!(y, coo.to_csr().spmv(&x));
+}
+
+#[test]
+fn pjrt_jacobi_matches_native_eigenvalues() {
+    require_artifacts!();
+    let rt = Runtime::cpu().expect("runtime");
+    let mut rng = Pcg64::new(11);
+    for k in [4usize, 8, 16, 32] {
+        let t = Tridiagonal::new(
+            (0..k).map(|_| rng.f64_range(-1.0, 1.0)).collect(),
+            (0..k - 1).map(|_| rng.f64_range(-1.0, 1.0)).collect(),
+        );
+        let core = PjrtJacobi::new(&rt, k).expect("load jacobi artifact");
+        assert_eq!(core.k_core, k);
+        let (ev, vecs) = core.eigen(&t).expect("execute jacobi artifact");
+        let native = topk_eigen::jacobi::jacobi_eigen(&t, topk_eigen::jacobi::JacobiMode::Cyclic, 1e-12);
+        for i in 0..k {
+            assert!(
+                (ev[i] - native.eigenvalues[i]).abs() < 1e-4,
+                "k={k} pair {i}: pjrt {} vs native {}",
+                ev[i],
+                native.eigenvalues[i]
+            );
+        }
+        // Residual check against T itself.
+        for j in 0..k {
+            let x = vecs.col(j);
+            let tx = t.matvec(&x);
+            let res: f64 =
+                tx.iter().zip(&x).map(|(&a, &b)| (a - ev[j] * b).powi(2)).sum::<f64>().sqrt();
+            assert!(res < 1e-4, "k={k} pair {j} residual {res}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_jacobi_padding_filter_handles_small_k() {
+    require_artifacts!();
+    let rt = Runtime::cpu().expect("runtime");
+    // k=6 runs on the k=8 core with 2 padded dimensions.
+    let t = Tridiagonal::new(vec![0.9, -0.7, 0.5, -0.3, 0.2, -0.1], vec![0.05; 5]);
+    let core = PjrtJacobi::new(&rt, 6).expect("load");
+    assert_eq!(core.k_core, 8);
+    let (ev, vecs) = core.eigen(&t).expect("run");
+    assert_eq!(ev.len(), 6);
+    assert_eq!(vecs.nrows, 6);
+    let native = topk_eigen::jacobi::jacobi_eigen(&t, topk_eigen::jacobi::JacobiMode::Cyclic, 1e-12);
+    for i in 0..6 {
+        assert!((ev[i] - native.eigenvalues[i]).abs() < 1e-4, "pair {i}");
+    }
+}
+
+#[test]
+fn pjrt_lanczos_step_artifact_math() {
+    require_artifacts!();
+    let rt = Runtime::cpu().expect("runtime");
+    let variant = ArtifactRegistry::SPMV_VARIANTS[0];
+    let module = rt.load(&variant.lanczos_step_file()).expect("load lanczos_step");
+    // Tiny diagonal matrix: M = diag(2), v = e0-normalized ones.
+    let n = variant.n;
+    let nnz = variant.nnz;
+    let mut rows = vec![0i32; nnz];
+    let mut cols = vec![0i32; nnz];
+    let mut vals = vec![0f32; nnz];
+    for i in 0..n {
+        rows[i] = i as i32;
+        cols[i] = i as i32;
+        vals[i] = 2.0;
+    }
+    let inv = 1.0 / (n as f32).sqrt();
+    let v = vec![inv; n];
+    let v_prev = vec![0.0f32; n];
+    let args = [
+        xla::Literal::vec1(&rows),
+        xla::Literal::vec1(&cols),
+        xla::Literal::vec1(&vals),
+        xla::Literal::vec1(&v),
+        xla::Literal::vec1(&v_prev),
+        xla::Literal::scalar(0.0f32),
+    ];
+    let out = module.run(&args).expect("run");
+    assert_eq!(out.len(), 2);
+    let w: Vec<f32> = out[0].to_vec().expect("w");
+    let alpha = out[1].get_first_element::<f32>().expect("alpha");
+    // M v = 2v; alpha = <2v, v> = 2; w' = 2v - 2v = 0.
+    assert!((alpha - 2.0).abs() < 1e-4, "alpha {alpha}");
+    assert!(w.iter().all(|&x| x.abs() < 1e-4), "w' should vanish");
+}
+
+#[test]
+fn solver_pjrt_engine_end_to_end() {
+    require_artifacts!();
+    use topk_eigen::coordinator::{verify, Engine, SolveOptions, Solver};
+    let adj = graphs::rmat(1 << 9, 6 << 9, 0.57, 0.19, 0.19, 21);
+    let mut native = Solver::new(SolveOptions { k: 8, ..Default::default() });
+    let mut pjrt = Solver::new(SolveOptions { k: 8, engine: Engine::Pjrt, ..Default::default() });
+    let sn = native.solve(&adj).expect("native");
+    let sp = pjrt.solve(&adj).expect("pjrt");
+    assert_eq!(sp.metrics.engine_used, "pjrt");
+    for i in 0..sn.k().min(sp.k()) {
+        assert!(
+            (sn.eigenvalues[i] - sp.eigenvalues[i]).abs() < 1e-3 * sn.eigenvalues[0].abs().max(1.0),
+            "pair {i}: native {} vs pjrt {}",
+            sn.eigenvalues[i],
+            sp.eigenvalues[i]
+        );
+    }
+    let r = verify::verify(&adj, &sp);
+    assert!(r.mean_angle_deg > 89.0);
+}

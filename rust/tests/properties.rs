@@ -1,0 +1,296 @@
+//! Property-based tests over the system's core invariants, using the
+//! in-repo `util::prop` harness (proptest substitute; see DESIGN.md).
+
+use topk_eigen::jacobi::{jacobi_eigen, JacobiMode};
+use topk_eigen::lanczos::{lanczos, LanczosOptions, ReorthPolicy};
+use topk_eigen::linalg::{self, Tridiagonal};
+use topk_eigen::prop_assert;
+use topk_eigen::sparse::{partition_rows_balanced, CooMatrix, PartitionPolicy, PacketStream};
+use topk_eigen::util::prop::{forall, Gen};
+
+/// Random symmetric COO matrix with entries in (-1, 1) (post-normalization
+/// regime).
+fn gen_sym_coo(g: &mut Gen) -> CooMatrix {
+    let n = g.usize_in(4, 200).max(4);
+    let edges = g.usize_in(n, 6 * n).max(4);
+    let mut m = CooMatrix::new(n, n);
+    for _ in 0..edges {
+        let r = g.rng().range(0, n);
+        let c = g.rng().range(0, n);
+        let v = g.f64_in(-0.5, 0.5) as f32;
+        m.push(r, c, v);
+        if r != c {
+            m.push(c, r, v);
+        }
+    }
+    m.canonicalize();
+    m
+}
+
+#[test]
+fn prop_coo_csr_round_trip() {
+    forall("COO -> CSR -> COO is identity on canonical matrices", |g| {
+        let m = gen_sym_coo(g);
+        let back = m.to_csr().to_coo();
+        prop_assert!(g, back == m, "round trip changed the matrix (n={})", m.nrows);
+        true
+    });
+}
+
+#[test]
+fn prop_csr_spmv_matches_coo_spmv() {
+    forall("CSR and COO SpMV agree", |g| {
+        let m = gen_sym_coo(g);
+        let x = g.vec_f32(m.ncols, -1.0, 1.0);
+        let a = m.spmv_ref(&x);
+        let b = m.to_csr().spmv(&x);
+        for i in 0..a.len() {
+            prop_assert!(g, (a[i] - b[i]).abs() < 1e-4, "row {i}: {} vs {}", a[i], b[i]);
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_partitions_tile_and_preserve_nnz() {
+    forall("partitions tile [0,n) and conserve nnz", |g| {
+        let m = gen_sym_coo(g).to_csr();
+        let shards = g.usize_in(1, 9).max(1);
+        let policy = *g.choose(&[PartitionPolicy::EqualRows, PartitionPolicy::BalancedNnz]);
+        let parts = partition_rows_balanced(&m, shards, policy);
+        prop_assert!(g, parts.len() == shards, "shard count");
+        prop_assert!(g, parts[0].row_start == 0, "start");
+        prop_assert!(g, parts.last().unwrap().row_end == m.nrows, "end");
+        let mut nnz = 0;
+        for w in parts.windows(2) {
+            prop_assert!(g, w[0].row_end == w[1].row_start, "gap in tiling");
+        }
+        for p in &parts {
+            nnz += p.nnz;
+        }
+        prop_assert!(g, nnz == m.nnz(), "nnz {} != {}", nnz, m.nnz());
+        true
+    });
+}
+
+#[test]
+fn prop_packet_stream_round_trips() {
+    forall("packet stream yields every entry exactly once", |g| {
+        let m = gen_sym_coo(g);
+        let flat: Vec<(u32, u32, f32)> =
+            PacketStream::new(&m).flat_map(|p| p.entries().collect::<Vec<_>>()).collect();
+        prop_assert!(g, flat.len() == m.nnz(), "len {} vs {}", flat.len(), m.nnz());
+        for (i, &(r, c, v)) in flat.iter().enumerate() {
+            prop_assert!(
+                g,
+                r == m.rows[i] && c == m.cols[i] && v == m.vals[i],
+                "entry {i} mismatch"
+            );
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_lanczos_basis_orthonormal_under_full_reorth() {
+    forall("Lanczos basis stays orthonormal with full reorth", |g| {
+        let m = gen_sym_coo(g);
+        let k = g.usize_in(2, 12.min(m.nrows)).max(2);
+        let res = lanczos(
+            &m.to_csr(),
+            &LanczosOptions { k, reorth: ReorthPolicy::Every, ..Default::default() },
+        );
+        for i in 0..res.basis.len() {
+            let n = linalg::norm2(&res.basis[i]);
+            prop_assert!(g, (n - 1.0).abs() < 1e-4, "row {i} norm {n}");
+            for j in 0..i {
+                let d = linalg::dot(&res.basis[i], &res.basis[j]).abs();
+                prop_assert!(g, d < 1e-3, "rows {i},{j} dot {d}");
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_lanczos_ritz_values_within_spectrum_bound() {
+    forall("Ritz values bounded by Gershgorin of T and ||M||_F", |g| {
+        let mut m = gen_sym_coo(g);
+        topk_eigen::sparse::normalize_frobenius(&mut m);
+        let k = g.usize_in(2, 10.min(m.nrows)).max(2);
+        let res = lanczos(&m.to_csr(), &LanczosOptions { k, ..Default::default() });
+        let eig = jacobi_eigen(&res.tridiag, JacobiMode::Cyclic, 1e-10);
+        for &lam in &eig.eigenvalues {
+            // After Frobenius normalization, |lambda| <= ||M||_2 <= 1.
+            prop_assert!(g, lam.abs() <= 1.0 + 1e-5, "lambda {lam} escapes the unit bound");
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_jacobi_preserves_trace_and_orthogonality() {
+    forall("Jacobi similarity preserves trace; V orthonormal", |g| {
+        let k = g.usize_in(2, 24).max(2);
+        let alpha: Vec<f64> = (0..k).map(|_| g.f64_in(-1.0, 1.0)).collect();
+        let beta: Vec<f64> = (0..k - 1).map(|_| g.f64_in(-1.0, 1.0)).collect();
+        let t = Tridiagonal::new(alpha.clone(), beta);
+        let mode = *g.choose(&[JacobiMode::Cyclic, JacobiMode::Systolic]);
+        let eig = jacobi_eigen(&t, mode, 1e-9);
+        let trace: f64 = alpha.iter().sum();
+        let eigsum: f64 = eig.eigenvalues.iter().sum();
+        prop_assert!(g, (trace - eigsum).abs() < 1e-5 * (1.0 + trace.abs()), "trace {trace} vs {eigsum} ({mode:?})");
+        let defect = eig.eigenvectors.orthonormality_defect();
+        prop_assert!(g, defect < 1e-5, "orthonormality defect {defect} ({mode:?})");
+        true
+    });
+}
+
+#[test]
+fn prop_jacobi_eigenvalues_match_sturm_counts() {
+    forall("each Jacobi eigenvalue is in T's spectrum (Sturm check)", |g| {
+        let k = g.usize_in(2, 16).max(2);
+        let t = Tridiagonal::new(
+            (0..k).map(|_| g.f64_in(-1.0, 1.0)).collect(),
+            (0..k - 1).map(|_| g.f64_in(-1.0, 1.0)).collect(),
+        );
+        let eig = jacobi_eigen(&t, JacobiMode::Systolic, 1e-10);
+        for &lam in &eig.eigenvalues {
+            let lo = t.eigenvalues_below(lam - 1e-6);
+            let hi = t.eigenvalues_below(lam + 1e-6);
+            prop_assert!(g, hi > lo, "lambda {lam} not found by Sturm count");
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_fixed_point_quantization_bounded_by_ulp() {
+    use topk_eigen::fixed::{Fixed, Precision, Q1_15, Q1_31, Q2_30};
+    forall("quantization error <= ulp/2 inside the representable range", |g| {
+        let x = g.f64_in(-0.999, 0.999);
+        prop_assert!(g, (Q1_31::quantize(x) - x).abs() <= Q1_31::ulp(), "q1.31 at {x}");
+        prop_assert!(g, (Q2_30::quantize(x) - x).abs() <= Q2_30::ulp(), "q2.30 at {x}");
+        prop_assert!(g, (Q1_15::quantize(x) - x).abs() <= Q1_15::ulp(), "q1.15 at {x}");
+        let xf = x as f32;
+        for p in [Precision::FixedQ1_31, Precision::FixedQ2_30, Precision::FixedQ1_15] {
+            let q = p.quantize(xf);
+            prop_assert!(g, q.abs() <= 1.0001, "{p:?} escaped range: {q}");
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_frobenius_normalization_bounds_entries() {
+    forall("after normalization all entries are in [-1, 1]", |g| {
+        let mut m = gen_sym_coo(g);
+        // Inflate values to exercise the scaling.
+        for v in &mut m.vals {
+            *v *= 100.0;
+        }
+        let norm = topk_eigen::sparse::normalize_frobenius(&mut m);
+        prop_assert!(g, norm >= 0.0, "negative norm");
+        for &v in &m.vals {
+            prop_assert!(g, v.abs() <= 1.0, "entry {v} escaped after normalization");
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_solver_eigenvalues_sorted_and_bounded() {
+    use topk_eigen::coordinator::{SolveOptions, Solver};
+    forall("solver output is magnitude-sorted and Frobenius-bounded", |g| {
+        let m = gen_sym_coo(g);
+        if m.nnz() == 0 || m.nrows < 6 {
+            return true;
+        }
+        let k = g.usize_in(1, 6.min(m.nrows)).max(1);
+        let mut solver = Solver::new(SolveOptions { k, ..Default::default() });
+        let sol = match solver.solve(&m) {
+            Ok(s) => s,
+            Err(e) => {
+                g.fail(format!("solve failed: {e}"));
+                return false;
+            }
+        };
+        for w in sol.eigenvalues.windows(2) {
+            prop_assert!(g, w[0].abs() >= w[1].abs() - 1e-9, "not sorted: {:?}", sol.eigenvalues);
+        }
+        for (lambda, v) in sol.pairs() {
+            prop_assert!(g, lambda.abs() <= sol.frobenius_norm * 1.001, "|{lambda}| > fro");
+            let n = linalg::norm2(v);
+            prop_assert!(g, (n - 1.0).abs() < 1e-3, "eigenvector norm {n}");
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_round_robin_period_is_k_minus_1() {
+    // The circle method is cyclic with period k-1: after k-1 advances the
+    // pairing returns to the initial adjacent pairing.
+    forall("round robin period", |g| {
+        let k = 2 * g.usize_in(1, 16).max(1);
+        let mut rr = topk_eigen::jacobi::RoundRobin::new(k);
+        let initial = rr.pairs();
+        for _ in 0..k - 1 {
+            rr.advance();
+        }
+        prop_assert!(g, rr.pairs() == initial, "period != k-1 for k={k}");
+        true
+    });
+}
+
+#[test]
+fn prop_mmio_round_trip() {
+    forall("MatrixMarket write/read round trip", |g| {
+        let m = gen_sym_coo(g);
+        let dir = std::env::temp_dir().join("topk-prop");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("rt-{}.mtx", g.rng().next_u64()));
+        topk_eigen::sparse::write_matrix_market(&path, &m).unwrap();
+        let back = topk_eigen::sparse::read_matrix_market(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        prop_assert!(g, back.nnz() == m.nnz(), "nnz changed");
+        let x = g.vec_f32(m.ncols, -1.0, 1.0);
+        let (a, b) = (m.spmv_ref(&x), back.spmv_ref(&x));
+        for i in 0..a.len() {
+            // f32 values survive the decimal round trip to ~1e-6 relative.
+            prop_assert!(g, (a[i] - b[i]).abs() <= 1e-5 * (1.0 + a[i].abs()), "row {i}");
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_lanczos_invariant_under_partitioning() {
+    // The tridiagonal output must not depend on how SpMV is sharded.
+    use std::sync::Arc;
+    forall("lanczos is partition-invariant", |g| {
+        let m = Arc::new(gen_sym_coo(g).to_csr());
+        if m.nrows < 8 {
+            return true;
+        }
+        let pool = Arc::new(topk_eigen::util::pool::ThreadPool::new(3));
+        let cus = g.usize_in(2, 6).max(2);
+        let sharded = topk_eigen::lanczos::ShardedSpmv::new(
+            Arc::clone(&m),
+            cus,
+            PartitionPolicy::BalancedNnz,
+            pool,
+        );
+        let opts = LanczosOptions { k: 6.min(m.nrows), ..Default::default() };
+        let a = lanczos(m.as_ref(), &opts);
+        let b = lanczos(&sharded, &opts);
+        for i in 0..a.tridiag.k().min(b.tridiag.k()) {
+            prop_assert!(
+                g,
+                (a.tridiag.alpha[i] - b.tridiag.alpha[i]).abs() < 1e-6,
+                "alpha[{i}] differs across partitioning"
+            );
+        }
+        true
+    });
+}
