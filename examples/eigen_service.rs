@@ -3,7 +3,9 @@
 //! data centers").
 //!
 //! Starts N solver replicas, submits a batch of mixed-size eigenproblem
-//! jobs, and reports throughput and queue/solve latency percentiles.
+//! jobs, and reports throughput and queue/solve latency percentiles. A
+//! second phase demonstrates `submit_batch`: several K values over one
+//! matrix, sharing a single prepare (CSR + sharded engine) on one worker.
 //!
 //! ```bash
 //! cargo run --release --example eigen_service -- [jobs] [replicas]
@@ -63,6 +65,42 @@ fn main() -> anyhow::Result<()> {
         fmt_duration(queue.max())
     );
     anyhow::ensure!(ok == jobs, "all jobs must succeed");
+
+    // Batched phase: one matrix, several K values — the service runs the
+    // prepare phase once and shares the sharded SpMV engine across solves.
+    let ks = [4usize, 8, 12, 16];
+    let matrix = graphs::rmat(1 << 12, 8 << 12, 0.57, 0.19, 0.19, 1234);
+    let t1 = Instant::now();
+    let batch = svc.submit_batch(matrix, SolveOptions::default(), &ks);
+    let mut batch_ok = 0usize;
+    for (id, ticket) in batch {
+        let r = ticket.wait();
+        match r.outcome {
+            Ok(sol) => {
+                batch_ok += 1;
+                println!(
+                    "batch job {id}: k={} lambda0={:+.4} solve={}",
+                    sol.k(),
+                    sol.eigenvalues[0],
+                    fmt_duration(r.solve_s)
+                );
+            }
+            Err(e) => println!("batch job {id} failed: {e}"),
+        }
+    }
+    println!("batch of {} Ks over one matrix in {}", ks.len(), fmt_duration(t1.elapsed().as_secs_f64()));
+    anyhow::ensure!(batch_ok == ks.len(), "all batch members must succeed");
+
+    let stats = svc.stats();
+    println!(
+        "service stats: submitted={} completed={} failed={} batches={} total_solve={} max_queue_wait={}",
+        stats.submitted,
+        stats.completed,
+        stats.failed,
+        stats.batches,
+        fmt_duration(stats.total_solve_s),
+        fmt_duration(stats.max_queued_s)
+    );
     println!("eigen_service OK");
     Ok(())
 }

@@ -8,6 +8,7 @@ mod common;
 
 use std::sync::Arc;
 use topk_eigen::bench::{BenchConfig, BenchSuite};
+use topk_eigen::graphs;
 use topk_eigen::lanczos::{Operator, ShardedSpmv};
 use topk_eigen::runtime::{ArtifactRegistry, PjrtSpmv, Runtime};
 use topk_eigen::sparse::PartitionPolicy;
@@ -49,6 +50,45 @@ fn main() {
         }
     } else {
         println!("pjrt path skipped: no artifact variant fits n={} nnz={}", coo.nrows, coo.nnz());
+    }
+
+    // Acceptance-scale comparison: at n >= 2^16 the pool-parallel path must
+    // not be slower than the serial kernel (override the size with
+    // TOPK_SPMV_LARGE_N). Reported as `speedup_vs_serial` on the sharded
+    // rows; >= 1.0 means the parallel path wins.
+    let n_large: usize =
+        std::env::var("TOPK_SPMV_LARGE_N").ok().and_then(|s| s.parse().ok()).unwrap_or(1 << 16);
+    let g = graphs::rmat(n_large, 16 * n_large, 0.57, 0.19, 0.19, 7);
+    let csr_large = Arc::new(g.to_csr());
+    let nnz_large = csr_large.nnz() as f64;
+    let x_large: Vec<f32> =
+        (0..csr_large.nrows).map(|i| ((i * 2654435761) % 1000) as f32 / 1000.0 - 0.5).collect();
+    let mut y_large = vec![0.0f32; csr_large.nrows];
+    let serial_large = suite.bench(&format!("serial/n{n_large}"), cfg, || {
+        csr_large.spmv_into(&x_large, &mut y_large, 0, csr_large.nrows)
+    });
+    suite.annotate(&[("gflops", 2.0 * nnz_large / serial_large / 1e9)]);
+    let pool5 = Arc::new(ThreadPool::new(5));
+    let mut slower = 0usize;
+    for policy in [PartitionPolicy::EqualRows, PartitionPolicy::BalancedNnz] {
+        let op = ShardedSpmv::new(Arc::clone(&csr_large), 5, policy, Arc::clone(&pool5));
+        let mean = suite.bench(&format!("sharded/cu5/{policy:?}/n{n_large}"), cfg, || {
+            op.apply(&x_large, &mut y_large)
+        });
+        suite.annotate(&[
+            ("speedup_vs_serial", serial_large / mean),
+            ("gflops", 2.0 * nnz_large / mean / 1e9),
+            ("imbalance", op.imbalance()),
+        ]);
+        if mean > serial_large {
+            slower += 1;
+        }
+    }
+    if slower > 0 {
+        println!(
+            "WARNING: {slower} sharded configuration(s) slower than serial at n={n_large} \
+             (expected >= 1.0x on a multi-core host)"
+        );
     }
     suite.finish();
 }

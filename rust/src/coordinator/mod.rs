@@ -14,6 +14,12 @@
 //! 4. **Lift + rescale**: eigenvectors through the Lanczos basis,
 //!    eigenvalues rescaled by the Frobenius norm.
 //!
+//! The prepare phase is split out as [`Solver::prepare`] →
+//! [`PreparedMatrix`] so that several solves over the *same* matrix (the
+//! batched service's multi-K fast path) share one canonicalization, one
+//! CSR conversion and one sharded engine instead of redoing the O(nnz)
+//! setup per job.
+//!
 //! [`service`] adds a multi-tenant job queue on top (the data-center usage
 //! the paper motivates), and [`verify`] computes the paper's Fig 11
 //! accuracy metrics for any solution.
@@ -24,9 +30,9 @@ pub mod verify;
 
 use crate::fixed::Precision;
 use crate::jacobi::{jacobi_eigen, JacobiMode, SystolicStats};
-use crate::lanczos::{lanczos, lift_eigenvector, LanczosOptions, Operator, ReorthPolicy, ShardedSpmv};
+use crate::lanczos::{lanczos, lift_eigenvector, LanczosOptions, Operator, ReorthPolicy};
 use crate::runtime::{PjrtSpmv, Runtime};
-use crate::sparse::{normalize_frobenius, CooMatrix, PartitionPolicy};
+use crate::sparse::{normalize_frobenius, CooMatrix, PartitionPolicy, ShardedSpmv};
 use crate::util::pool::ThreadPool;
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
@@ -38,7 +44,8 @@ pub enum Engine {
     /// Native sharded CSR kernels on the CU thread pool.
     Native,
     /// PJRT-compiled Pallas/XLA artifact (falls back to native when no
-    /// compiled shape fits or artifacts are missing).
+    /// compiled shape fits, artifacts are missing, or the crate was built
+    /// without the `pjrt` feature).
     Pjrt,
 }
 
@@ -53,8 +60,13 @@ pub struct SolveOptions {
     pub precision: Precision,
     /// Jacobi engine for phase 2.
     pub jacobi: JacobiMode,
-    /// SpMV compute units (paper: 5).
+    /// SpMV compute units — row shards of the matrix (paper: 5).
     pub cus: usize,
+    /// Worker threads in the CU pool. `0` (the default) means one worker
+    /// per CU; smaller values multiplex shards onto fewer threads (useful
+    /// when many solver replicas share a host), larger values are allowed
+    /// but idle beyond `cus`.
+    pub threads: usize,
     /// Row partition policy across CUs.
     pub partition: PartitionPolicy,
     /// SpMV engine.
@@ -71,6 +83,7 @@ impl Default for SolveOptions {
             precision: Precision::Float32,
             jacobi: JacobiMode::Systolic,
             cus: 5,
+            threads: 0,
             partition: PartitionPolicy::BalancedNnz,
             engine: Engine::Native,
             skip_normalize: false,
@@ -78,10 +91,23 @@ impl Default for SolveOptions {
     }
 }
 
+impl SolveOptions {
+    /// Effective CU-pool worker count: `threads`, or one per CU when 0.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads == 0 {
+            self.cus.max(1)
+        } else {
+            self.threads
+        }
+    }
+}
+
 /// Timing + diagnostics of one solve.
 #[derive(Clone, Debug, Default)]
 pub struct SolveMetrics {
-    /// Prepare phase seconds (normalize + CSR + partition).
+    /// Prepare phase seconds (normalize + CSR + partition). For solves
+    /// sharing a [`PreparedMatrix`], every solution reports the same
+    /// shared preparation cost.
     pub prepare_s: f64,
     /// Lanczos phase seconds.
     pub lanczos_s: f64,
@@ -130,6 +156,43 @@ impl Solution {
     }
 }
 
+/// A matrix prepared once for repeated solves: canonicalized, normalized,
+/// converted to CSR, and bound to an SpMV engine. Built by
+/// [`Solver::prepare`]; consumed by [`Solver::solve_prepared`] /
+/// [`Solver::solve_prepared_with_k`]. This is the same-matrix multi-K fast
+/// path used by [`service::EigenService::submit_batch`].
+pub struct PreparedMatrix {
+    op: Box<dyn Operator>,
+    fro: f64,
+    n: usize,
+    nnz: usize,
+    engine_used: &'static str,
+    prepare_s: f64,
+}
+
+impl PreparedMatrix {
+    /// Matrix dimension.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+    /// Stored non-zeros after canonicalization.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+    /// Frobenius norm divided out during preparation (1.0 if skipped).
+    pub fn frobenius_norm(&self) -> f64 {
+        self.fro
+    }
+    /// Engine bound to this matrix ("native" / "pjrt").
+    pub fn engine(&self) -> &'static str {
+        self.engine_used
+    }
+    /// Preparation wall time in seconds.
+    pub fn prepare_s(&self) -> f64 {
+        self.prepare_s
+    }
+}
+
 /// The coordinator.
 pub struct Solver {
     opts: SolveOptions,
@@ -138,10 +201,11 @@ pub struct Solver {
 }
 
 impl Solver {
-    /// Build a solver; spawns the CU worker pool. The PJRT runtime is
-    /// created lazily on the first `Engine::Pjrt` solve.
+    /// Build a solver; spawns the CU worker pool (one worker per CU unless
+    /// [`SolveOptions::threads`] overrides it). The PJRT runtime is created
+    /// lazily on the first `Engine::Pjrt` solve.
     pub fn new(opts: SolveOptions) -> Self {
-        let pool = Arc::new(ThreadPool::new(opts.cus.max(1)));
+        let pool = Arc::new(ThreadPool::new(opts.effective_threads()));
         Self { opts, pool, runtime: None }
     }
 
@@ -158,49 +222,72 @@ impl Solver {
         &self.opts
     }
 
+    /// Run the prepare phase once: canonicalize, normalize, build CSR, and
+    /// bind the SpMV engine (sharded native pool, or PJRT when requested
+    /// and available). The result can back any number of
+    /// [`Solver::solve_prepared_with_k`] calls against the same matrix.
+    pub fn prepare(&mut self, matrix: &CooMatrix) -> Result<PreparedMatrix> {
+        anyhow::ensure!(matrix.nrows == matrix.ncols, "matrix must be square");
+        let mut sw = Stopwatch::start();
+        let mut m = matrix.clone();
+        m.canonicalize();
+        debug_assert!(m.is_symmetric(1e-4), "operator must be symmetric");
+        let fro = if self.opts.skip_normalize { 1.0 } else { normalize_frobenius(&mut m) };
+        let n = m.nrows;
+        let nnz = m.nnz();
+        let (op, engine_used): (Box<dyn Operator>, &'static str) = match self.opts.engine {
+            Engine::Pjrt => match self.try_pjrt_operator(&m) {
+                Ok(op) => (op, "pjrt"),
+                Err(e) => {
+                    log::warn!("PJRT engine unavailable ({e}); falling back to native");
+                    (self.native_operator(&m), "native")
+                }
+            },
+            Engine::Native => (self.native_operator(&m), "native"),
+        };
+        Ok(PreparedMatrix { op, fro, n, nnz, engine_used, prepare_s: sw.lap_s() })
+    }
+
     /// Solve the Top-K eigenproblem for a symmetric sparse matrix.
     ///
     /// The input is canonicalized and Frobenius-normalized internally;
     /// returned eigenvalues are rescaled back to the input's scale.
     pub fn solve(&mut self, matrix: &CooMatrix) -> Result<Solution> {
+        // Reject bad shapes/K before the O(nnz) prepare work.
         anyhow::ensure!(matrix.nrows == matrix.ncols, "matrix must be square");
         anyhow::ensure!(self.opts.k >= 1 && self.opts.k <= matrix.nrows, "bad k");
-        let mut sw = Stopwatch::start();
-        let mut metrics = SolveMetrics::default();
+        let prep = self.prepare(matrix)?;
+        self.solve_prepared(&prep)
+    }
 
-        // ---- Prepare -----------------------------------------------------
-        let mut m = matrix.clone();
-        m.canonicalize();
-        debug_assert!(m.is_symmetric(1e-4), "operator must be symmetric");
-        let fro = if self.opts.skip_normalize { 1.0 } else { normalize_frobenius(&mut m) };
-        let csr = Arc::new(m.to_csr());
-        metrics.prepare_s = sw.lap_s();
+    /// Solve against an already-prepared matrix with the configured K.
+    pub fn solve_prepared(&mut self, prep: &PreparedMatrix) -> Result<Solution> {
+        self.solve_prepared_with_k(prep, self.opts.k)
+    }
+
+    /// Solve against an already-prepared matrix for a caller-chosen K
+    /// (the multi-K fast path: Lanczos, Jacobi and lift re-run; the O(nnz)
+    /// preparation and the engine binding are shared).
+    pub fn solve_prepared_with_k(&mut self, prep: &PreparedMatrix, k: usize) -> Result<Solution> {
+        anyhow::ensure!(k >= 1 && k <= prep.n, "bad k");
+        let mut sw = Stopwatch::start();
+        let mut metrics = SolveMetrics {
+            prepare_s: prep.prepare_s,
+            engine_used: prep.engine_used,
+            ..Default::default()
+        };
 
         // ---- Phase 1: Lanczos --------------------------------------------
         let lopts = LanczosOptions {
-            k: self.opts.k,
+            k,
             reorth: self.opts.reorth,
             precision: self.opts.precision,
             v1: None,
         };
-        let (lres, engine_used) = match self.opts.engine {
-            Engine::Pjrt => match self.try_pjrt_operator(&m) {
-                Ok(op) => (lanczos(op.as_ref(), &lopts), "pjrt"),
-                Err(e) => {
-                    log::warn!("PJRT engine unavailable ({e}); falling back to native");
-                    let op = ShardedSpmv::new(Arc::clone(&csr), self.opts.cus, self.opts.partition, Arc::clone(&self.pool));
-                    (lanczos(&op, &lopts), "native")
-                }
-            },
-            Engine::Native => {
-                let op = ShardedSpmv::new(Arc::clone(&csr), self.opts.cus, self.opts.partition, Arc::clone(&self.pool));
-                (lanczos(&op, &lopts), "native")
-            }
-        };
+        let lres = lanczos(prep.op.as_ref(), &lopts);
         metrics.lanczos_s = sw.lap_s();
         metrics.spmv_count = lres.spmv_count;
         metrics.breakdown_at = lres.breakdown_at;
-        metrics.engine_used = engine_used;
 
         // ---- Phase 2: Jacobi ----------------------------------------------
         let eig = jacobi_eigen(&lres.tridiag, self.opts.jacobi, 1e-10);
@@ -212,12 +299,21 @@ impl Solver {
         let mut eigenvalues = Vec::with_capacity(k_eff);
         let mut eigenvectors = Vec::with_capacity(k_eff);
         for j in 0..k_eff {
-            eigenvalues.push(eig.eigenvalues[j] * fro);
+            eigenvalues.push(eig.eigenvalues[j] * prep.fro);
             eigenvectors.push(lift_eigenvector(&lres.basis, &eig.eigenvectors.col(j)));
         }
         metrics.lift_s = sw.lap_s();
 
-        Ok(Solution { eigenvalues, eigenvectors, frobenius_norm: fro, metrics })
+        Ok(Solution { eigenvalues, eigenvectors, frobenius_norm: prep.fro, metrics })
+    }
+
+    fn native_operator(&self, m: &CooMatrix) -> Box<dyn Operator> {
+        Box::new(ShardedSpmv::new(
+            Arc::new(m.to_csr()),
+            self.opts.cus,
+            self.opts.partition,
+            Arc::clone(&self.pool),
+        ))
     }
 
     fn try_pjrt_operator(&mut self, m: &CooMatrix) -> Result<Box<dyn Operator>> {
@@ -288,5 +384,54 @@ mod tests {
         let mut solver = Solver::new(SolveOptions { k: 8, ..Default::default() });
         let sol = solver.solve(&m).unwrap();
         assert!((sol.eigenvalues[0] - 42.0).abs() < 1e-3, "{:?}", sol.eigenvalues);
+    }
+
+    #[test]
+    fn prepared_matrix_shares_setup_across_ks() {
+        let m = graphs::rmat(1 << 8, 8 << 8, 0.57, 0.19, 0.19, 21);
+        let mut solver = Solver::new(SolveOptions { k: 8, ..Default::default() });
+        let prep = solver.prepare(&m).unwrap();
+        assert_eq!(prep.engine(), "native");
+        assert!(prep.n() == 1 << 8 && prep.nnz() > 0);
+        assert!(prep.prepare_s() >= 0.0);
+        // Multi-K over one prepared matrix must match fresh single solves.
+        for k in [2usize, 4, 8] {
+            let fast = solver.solve_prepared_with_k(&prep, k).unwrap();
+            let mut fresh = Solver::new(SolveOptions { k, ..Default::default() });
+            let slow = fresh.solve(&m).unwrap();
+            assert_eq!(fast.k(), slow.k(), "k={k}");
+            for i in 0..fast.k() {
+                assert!(
+                    (fast.eigenvalues[i] - slow.eigenvalues[i]).abs() < 1e-9,
+                    "k={k} pair {i}: {} vs {}",
+                    fast.eigenvalues[i],
+                    slow.eigenvalues[i]
+                );
+            }
+            // Shared prepare time is reported on every member solution.
+            assert_eq!(fast.metrics.prepare_s, prep.prepare_s());
+        }
+    }
+
+    #[test]
+    fn solve_prepared_rejects_bad_k() {
+        let m = graphs::mesh2d(8, 8, 0.9, 0.02, 1);
+        let mut solver = Solver::new(SolveOptions::default());
+        let prep = solver.prepare(&m).unwrap();
+        assert!(solver.solve_prepared_with_k(&prep, 0).is_err());
+        assert!(solver.solve_prepared_with_k(&prep, 65).is_err());
+        assert!(solver.solve_prepared_with_k(&prep, 64).is_ok());
+    }
+
+    #[test]
+    fn threads_knob_multiplexes_without_changing_results() {
+        let m = graphs::rmat(1 << 8, 6 << 8, 0.6, 0.18, 0.18, 5);
+        let mut wide = Solver::new(SolveOptions { k: 6, cus: 5, threads: 0, ..Default::default() });
+        let mut narrow = Solver::new(SolveOptions { k: 6, cus: 5, threads: 2, ..Default::default() });
+        let a = wide.solve(&m).unwrap();
+        let b = narrow.solve(&m).unwrap();
+        assert_eq!(a.eigenvalues, b.eigenvalues);
+        assert_eq!(SolveOptions { cus: 5, threads: 0, ..Default::default() }.effective_threads(), 5);
+        assert_eq!(SolveOptions { cus: 5, threads: 2, ..Default::default() }.effective_threads(), 2);
     }
 }

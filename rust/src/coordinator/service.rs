@@ -7,6 +7,23 @@
 //! per SLR) pull jobs, run the two-phase solver, and deliver results
 //! through per-job channels. Shutdown is graceful: pending jobs drain
 //! unless `abort` is requested.
+//!
+//! ## Batched submission
+//!
+//! [`EigenService::submit_batch`] enqueues one *batch* of jobs over the
+//! same matrix with different K values. A batch is scheduled as a unit on
+//! one worker, which runs the O(nnz) prepare phase **once**
+//! ([`Solver::prepare`]) and shares the resulting CSR + sharded SpMV
+//! engine across all member solves — the same-matrix multi-K fast path.
+//! Each member still gets its own [`JobResult`] through its own
+//! [`Ticket`].
+//!
+//! ## Telemetry
+//!
+//! The service keeps queue/latency counters ([`ServiceStats`]) so a
+//! deployment can watch saturation: submitted/completed/failed totals,
+//! live queue depth, cumulative and maximum queue wait, and cumulative
+//! solve time.
 
 use crate::coordinator::{SolveOptions, Solution, Solver};
 use crate::sparse::CooMatrix;
@@ -27,6 +44,20 @@ pub struct Job {
     reply: Sender<JobResult>,
 }
 
+/// A batch of same-matrix jobs differing only in K.
+struct BatchJob {
+    ids: Vec<u64>,
+    matrix: CooMatrix,
+    opts: SolveOptions,
+    ks: Vec<usize>,
+    replies: Vec<Sender<JobResult>>,
+}
+
+enum QueueItem {
+    Single(Job),
+    Batch(BatchJob),
+}
+
 /// Result delivered to the submitter.
 #[derive(Debug)]
 pub struct JobResult {
@@ -34,12 +65,62 @@ pub struct JobResult {
     pub id: u64,
     /// Solution or an error string (solver errors must not kill workers).
     pub outcome: Result<Solution, String>,
-    /// Queue wait time in seconds.
+    /// Queue wait time in seconds (for batch members: the batch's wait).
     pub queued_s: f64,
+    /// Solver wall time in seconds (for batch members: this member's
+    /// solve; the shared prepare cost is inside the first member's time).
+    pub solve_s: f64,
+}
+
+/// Snapshot of the service's queue/latency counters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServiceStats {
+    /// Jobs submitted so far (batch members count individually).
+    pub submitted: u64,
+    /// Jobs finished (successfully or not).
+    pub completed: u64,
+    /// Jobs that finished with an error outcome.
+    pub failed: u64,
+    /// Batch submissions (`submit_batch` calls that enqueued work).
+    pub batches: u64,
+    /// Queue items currently waiting (a batch counts as one item).
+    pub queue_depth: usize,
+    /// Cumulative queue wait across finished jobs, seconds.
+    pub total_queued_s: f64,
+    /// Largest single queue wait observed, seconds.
+    pub max_queued_s: f64,
+    /// Cumulative solver wall time across finished jobs, seconds.
+    pub total_solve_s: f64,
+}
+
+/// Internal atomic counters behind [`ServiceStats`]. Durations are stored
+/// as integer microseconds so they can live in `AtomicU64`s.
+#[derive(Default)]
+struct Counters {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+    total_queued_us: AtomicU64,
+    max_queued_us: AtomicU64,
+    total_solve_us: AtomicU64,
+}
+
+impl Counters {
+    fn record_result(&self, ok: bool, queued_s: f64, solve_s: f64) {
+        self.completed.fetch_add(1, Ordering::SeqCst);
+        if !ok {
+            self.failed.fetch_add(1, Ordering::SeqCst);
+        }
+        let qus = (queued_s * 1e6) as u64;
+        self.total_queued_us.fetch_add(qus, Ordering::SeqCst);
+        self.max_queued_us.fetch_max(qus, Ordering::SeqCst);
+        self.total_solve_us.fetch_add((solve_s * 1e6) as u64, Ordering::SeqCst);
+    }
 }
 
 struct Shared {
-    queue: Mutex<VecDeque<(Job, std::time::Instant)>>,
+    queue: Mutex<VecDeque<(QueueItem, std::time::Instant)>>,
     available: Condvar,
     shutdown: AtomicBool,
 }
@@ -65,7 +146,7 @@ pub struct EigenService {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
-    completed: Arc<AtomicU64>,
+    counters: Arc<Counters>,
 }
 
 impl EigenService {
@@ -77,11 +158,11 @@ impl EigenService {
             available: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
-        let completed = Arc::new(AtomicU64::new(0));
+        let counters = Arc::new(Counters::default());
         let mut workers = Vec::with_capacity(replicas);
         for w in 0..replicas {
             let shared = Arc::clone(&shared);
-            let completed = Arc::clone(&completed);
+            let counters = Arc::clone(&counters);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("eigen-worker-{w}"))
@@ -98,24 +179,88 @@ impl EigenService {
                                 q = shared.available.wait(q).unwrap();
                             }
                         };
-                        let Some((job, enqueued)) = item else { break };
+                        let Some((item, enqueued)) = item else { break };
                         let queued_s = enqueued.elapsed().as_secs_f64();
-                        // A panicking solve must not take the worker down.
-                        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                            Solver::new(job.opts.clone()).solve(&job.matrix)
-                        }));
-                        let outcome = match outcome {
-                            Ok(Ok(sol)) => Ok(sol),
-                            Ok(Err(e)) => Err(e.to_string()),
-                            Err(_) => Err("solver panicked".to_string()),
-                        };
-                        completed.fetch_add(1, Ordering::SeqCst);
-                        let _ = job.reply.send(JobResult { id: job.id, outcome, queued_s });
+                        match item {
+                            QueueItem::Single(job) => {
+                                Self::run_single(job, queued_s, &counters);
+                            }
+                            QueueItem::Batch(batch) => {
+                                Self::run_batch(batch, queued_s, &counters);
+                            }
+                        }
                     })
                     .expect("spawn worker"),
             );
         }
-        Self { shared, workers, next_id: AtomicU64::new(1), completed }
+        Self { shared, workers, next_id: AtomicU64::new(1), counters }
+    }
+
+    fn run_single(job: Job, queued_s: f64, counters: &Counters) {
+        let t0 = std::time::Instant::now();
+        // A panicking solve must not take the worker down.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            Solver::new(job.opts.clone()).solve(&job.matrix)
+        }));
+        let outcome = match outcome {
+            Ok(Ok(sol)) => Ok(sol),
+            Ok(Err(e)) => Err(e.to_string()),
+            Err(_) => Err("solver panicked".to_string()),
+        };
+        let solve_s = t0.elapsed().as_secs_f64();
+        counters.record_result(outcome.is_ok(), queued_s, solve_s);
+        let _ = job.reply.send(JobResult { id: job.id, outcome, queued_s, solve_s });
+    }
+
+    fn run_batch(batch: BatchJob, queued_s: f64, counters: &Counters) {
+        // Prepare once, then solve per K. A panicking prepare fails every
+        // member; a panicking member solve fails only that member —
+        // siblings keep their results. The shared prepare wall time is
+        // charged to the first member's `solve_s` so the batch's total
+        // solver time is conserved in the telemetry.
+        let BatchJob { ids, matrix, opts, ks, replies } = batch;
+        let prep_t0 = std::time::Instant::now();
+        let prepared = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut solver = Solver::new(opts.clone());
+            solver.prepare(&matrix).map(|p| (solver, p)).map_err(|e| e.to_string())
+        }));
+        let prep_s = prep_t0.elapsed().as_secs_f64();
+        let outcomes: Vec<(Result<Solution, String>, f64)> = match prepared {
+            Ok(Ok((mut solver, prep))) => ks
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| {
+                    let t0 = std::time::Instant::now();
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        solver.solve_prepared_with_k(&prep, k).map_err(|e| e.to_string())
+                    }))
+                    .unwrap_or_else(|_| Err("solver panicked".to_string()));
+                    let mut solve_s = t0.elapsed().as_secs_f64();
+                    if i == 0 {
+                        solve_s += prep_s;
+                    }
+                    (r, solve_s)
+                })
+                .collect(),
+            Ok(Err(msg)) => ks
+                .iter()
+                .enumerate()
+                .map(|(i, _)| (Err(msg.clone()), if i == 0 { prep_s } else { 0.0 }))
+                .collect(),
+            Err(_) => ks
+                .iter()
+                .enumerate()
+                .map(|(i, _)| {
+                    (Err("solver panicked".to_string()), if i == 0 { prep_s } else { 0.0 })
+                })
+                .collect(),
+        };
+        for ((id, reply), (outcome, solve_s)) in
+            ids.into_iter().zip(replies).zip(outcomes)
+        {
+            counters.record_result(outcome.is_ok(), queued_s, solve_s);
+            let _ = reply.send(JobResult { id, outcome, queued_s, solve_s });
+        }
     }
 
     /// Enqueue a job; returns a [`Ticket`] to await the result.
@@ -123,19 +268,76 @@ impl EigenService {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         let (tx, rx) = channel();
         let job = Job { id, matrix, opts, reply: tx };
-        self.shared.queue.lock().unwrap().push_back((job, std::time::Instant::now()));
+        self.counters.submitted.fetch_add(1, Ordering::SeqCst);
+        self.shared
+            .queue
+            .lock()
+            .unwrap()
+            .push_back((QueueItem::Single(job), std::time::Instant::now()));
         self.shared.available.notify_one();
         (id, Ticket { rx })
     }
 
-    /// Jobs finished so far.
-    pub fn completed(&self) -> u64 {
-        self.completed.load(Ordering::SeqCst)
+    /// Enqueue one batch of same-matrix jobs, one per entry of `ks`.
+    ///
+    /// The batch is scheduled as a unit on one worker; the prepare phase
+    /// (canonicalize + normalize + CSR + sharded-engine build) runs once
+    /// and is shared by every member solve. Returns one `(id, Ticket)`
+    /// pair per K, in the same order as `ks`. An empty `ks` enqueues
+    /// nothing and returns an empty vector.
+    pub fn submit_batch(
+        &self,
+        matrix: CooMatrix,
+        opts: SolveOptions,
+        ks: &[usize],
+    ) -> Vec<(u64, Ticket)> {
+        if ks.is_empty() {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(ks.len());
+        let mut ids = Vec::with_capacity(ks.len());
+        let mut replies = Vec::with_capacity(ks.len());
+        for _ in ks {
+            let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+            let (tx, rx) = channel();
+            ids.push(id);
+            replies.push(tx);
+            out.push((id, Ticket { rx }));
+        }
+        self.counters.submitted.fetch_add(ks.len() as u64, Ordering::SeqCst);
+        self.counters.batches.fetch_add(1, Ordering::SeqCst);
+        let batch = BatchJob { ids, matrix, opts, ks: ks.to_vec(), replies };
+        self.shared
+            .queue
+            .lock()
+            .unwrap()
+            .push_back((QueueItem::Batch(batch), std::time::Instant::now()));
+        self.shared.available.notify_one();
+        out
     }
 
-    /// Current queue depth.
+    /// Jobs finished so far.
+    pub fn completed(&self) -> u64 {
+        self.counters.completed.load(Ordering::SeqCst)
+    }
+
+    /// Current queue depth (items: a batch counts as one).
     pub fn queue_depth(&self) -> usize {
         self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Snapshot the queue/latency counters.
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            submitted: self.counters.submitted.load(Ordering::SeqCst),
+            completed: self.counters.completed.load(Ordering::SeqCst),
+            failed: self.counters.failed.load(Ordering::SeqCst),
+            batches: self.counters.batches.load(Ordering::SeqCst),
+            queue_depth: self.queue_depth(),
+            total_queued_s: self.counters.total_queued_us.load(Ordering::SeqCst) as f64 / 1e6,
+            max_queued_s: self.counters.max_queued_us.load(Ordering::SeqCst) as f64 / 1e6,
+            total_solve_s: self.counters.total_solve_us.load(Ordering::SeqCst) as f64 / 1e6,
+        }
     }
 
     /// Drain the queue and stop workers.
@@ -178,8 +380,16 @@ mod tests {
             let sol = r.outcome.expect("solve failed");
             assert_eq!(sol.k(), 4);
             assert!(r.queued_s >= 0.0);
+            assert!(r.solve_s >= 0.0);
         }
         assert_eq!(svc.completed(), 6);
+        let stats = svc.stats();
+        assert_eq!(stats.submitted, 6);
+        assert_eq!(stats.completed, 6);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.batches, 0);
+        assert!(stats.total_solve_s >= 0.0);
+        assert!(stats.max_queued_s <= stats.total_queued_s + 1e-9);
         svc.shutdown();
     }
 
@@ -194,6 +404,7 @@ mod tests {
         let good = graphs::mesh2d(8, 8, 0.9, 0.02, 1);
         let (_, t2) = svc.submit(good, SolveOptions { k: 2, ..Default::default() });
         assert!(t2.wait().outcome.is_ok());
+        assert_eq!(svc.stats().failed, 1);
         svc.shutdown();
     }
 
@@ -201,6 +412,62 @@ mod tests {
     fn shutdown_with_empty_queue_is_clean() {
         let svc = EigenService::start(2);
         assert_eq!(svc.queue_depth(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batch_matches_individual_submissions() {
+        let svc = EigenService::start(2);
+        let m = graphs::rmat(1 << 8, 8 << 8, 0.57, 0.19, 0.19, 31);
+        let ks = [2usize, 4, 6];
+        let batch = svc.submit_batch(m.clone(), SolveOptions::default(), &ks);
+        assert_eq!(batch.len(), 3);
+        let mut singles = Vec::new();
+        for &k in &ks {
+            let (_, t) = svc.submit(m.clone(), SolveOptions { k, ..Default::default() });
+            singles.push(t);
+        }
+        for (((_, bt), st), &k) in batch.into_iter().zip(singles).zip(&ks) {
+            let b = bt.wait().outcome.expect("batch member failed");
+            let s = st.wait().outcome.expect("single failed");
+            assert_eq!(b.k(), s.k(), "k={k}");
+            for i in 0..b.k() {
+                assert!(
+                    (b.eigenvalues[i] - s.eigenvalues[i]).abs() < 1e-9,
+                    "k={k} pair {i}: batch {} vs single {}",
+                    b.eigenvalues[i],
+                    s.eigenvalues[i]
+                );
+            }
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.batches, 1);
+        assert_eq!(stats.submitted, 6);
+        assert_eq!(stats.completed, 6);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn batch_member_error_does_not_poison_siblings() {
+        let svc = EigenService::start(1);
+        let m = graphs::mesh2d(6, 6, 0.9, 0.02, 2); // n = 36
+        // k = 100 > n fails; the others succeed.
+        let tickets = svc.submit_batch(m, SolveOptions::default(), &[4, 100, 6]);
+        let results: Vec<JobResult> = tickets.into_iter().map(|(_, t)| t.wait()).collect();
+        assert!(results[0].outcome.is_ok());
+        assert!(results[1].outcome.is_err());
+        assert!(results[2].outcome.is_ok());
+        assert_eq!(svc.stats().failed, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let svc = EigenService::start(1);
+        let m = graphs::mesh2d(4, 4, 0.9, 0.02, 3);
+        assert!(svc.submit_batch(m, SolveOptions::default(), &[]).is_empty());
+        assert_eq!(svc.stats().submitted, 0);
+        assert_eq!(svc.stats().batches, 0);
         svc.shutdown();
     }
 }

@@ -5,15 +5,17 @@
 //! decomposition appears as [`Operator`] implementations:
 //!
 //! * [`CsrMatrix`] — single-threaded native kernel (the unit baseline).
-//! * [`ShardedSpmv`] — one worker per CU over nnz-balanced row stripes;
-//!   the structural twin of the hardware design (each stripe = one CU, the
-//!   scoped join = the Merge Unit).
+//! * [`crate::sparse::ShardedSpmv`] — one pool worker per CU over row
+//!   stripes; the structural twin of the hardware design (each stripe =
+//!   one CU, the scoped join = the Merge Unit). Re-exported from this
+//!   module for convenience.
 //! * `runtime::PjrtSpmv` — the AOT path: the same computation through a
-//!   Pallas/XLA artifact executed via PJRT (see `runtime`).
+//!   Pallas/XLA artifact executed via PJRT (see `runtime`; requires the
+//!   `pjrt` feature).
 
-use crate::sparse::{partition_rows_balanced, CsrMatrix, PartitionPolicy, RowPartition};
-use crate::util::pool::ThreadPool;
-use std::sync::Arc;
+use crate::sparse::CsrMatrix;
+
+pub use crate::sparse::ShardedSpmv;
 
 /// A symmetric linear operator `y = M x` over `f32` vectors.
 pub trait Operator: Send + Sync {
@@ -34,65 +36,6 @@ impl Operator for CsrMatrix {
     }
     fn apply(&self, x: &[f32], y: &mut [f32]) {
         self.spmv_into(x, y, 0, self.nrows);
-    }
-}
-
-/// Multi-CU SpMV: row stripes dispatched to a thread pool, one worker per
-/// CU shard. Output regions are disjoint so no synchronization is needed
-/// beyond the final join — exactly the paper's partition + merge scheme.
-pub struct ShardedSpmv {
-    matrix: Arc<CsrMatrix>,
-    parts: Vec<RowPartition>,
-    pool: Arc<ThreadPool>,
-}
-
-impl ShardedSpmv {
-    /// Shard `matrix` into `cus` stripes under `policy` and run them on
-    /// `pool` (pool should have >= `cus` workers for full overlap).
-    pub fn new(matrix: Arc<CsrMatrix>, cus: usize, policy: PartitionPolicy, pool: Arc<ThreadPool>) -> Self {
-        let parts = partition_rows_balanced(&matrix, cus, policy);
-        Self { matrix, parts, pool }
-    }
-
-    /// The shard table (exposed for the FPGA model and tests).
-    pub fn partitions(&self) -> &[RowPartition] {
-        &self.parts
-    }
-}
-
-impl Operator for ShardedSpmv {
-    fn n(&self) -> usize {
-        self.matrix.nrows
-    }
-    fn nnz(&self) -> usize {
-        self.matrix.nnz()
-    }
-    fn apply(&self, x: &[f32], y: &mut [f32]) {
-        assert_eq!(y.len(), self.matrix.nrows);
-        let m = &self.matrix;
-        let parts = &self.parts;
-        // SAFETY-free disjoint writes: each task owns rows [row_start,row_end).
-        // We hand each worker a raw pointer range via split borrows.
-        let y_ptr = SendPtr(y.as_mut_ptr());
-        self.pool.scope_chunks(parts.len(), |i| {
-            let p = parts[i];
-            // Reconstruct the worker's disjoint sub-slice.
-            let y_slice = unsafe {
-                std::slice::from_raw_parts_mut(y_ptr.get(), m.nrows)
-            };
-            m.spmv_into(x, y_slice, p.row_start, p.row_end);
-        });
-    }
-}
-
-/// Pointer wrapper proving to the compiler we uphold disjointness manually.
-#[derive(Copy, Clone)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-impl SendPtr {
-    fn get(self) -> *mut f32 {
-        self.0
     }
 }
 
@@ -133,33 +76,6 @@ mod tests {
     use crate::graphs;
 
     #[test]
-    fn sharded_matches_serial() {
-        let m = Arc::new(graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 3).to_csr());
-        let pool = Arc::new(ThreadPool::new(5));
-        let x: Vec<f32> = (0..m.nrows).map(|i| ((i * 37) % 11) as f32 * 0.1 - 0.5).collect();
-        let serial = m.spmv(&x);
-        for cus in [1, 2, 5, 8] {
-            for policy in [PartitionPolicy::EqualRows, PartitionPolicy::BalancedNnz] {
-                let sharded = ShardedSpmv::new(Arc::clone(&m), cus, policy, Arc::clone(&pool));
-                let mut y = vec![0.0f32; m.nrows];
-                sharded.apply(&x, &mut y);
-                assert_eq!(serial, y, "cus={cus} policy={policy:?}");
-            }
-        }
-    }
-
-    #[test]
-    fn partitions_tile_rows() {
-        let m = Arc::new(graphs::mesh2d(40, 40, 0.9, 0.01, 5).to_csr());
-        let pool = Arc::new(ThreadPool::new(4));
-        let s = ShardedSpmv::new(Arc::clone(&m), 5, PartitionPolicy::BalancedNnz, pool);
-        let parts = s.partitions();
-        assert_eq!(parts.len(), 5);
-        assert_eq!(parts[0].row_start, 0);
-        assert_eq!(parts.last().unwrap().row_end, m.nrows);
-    }
-
-    #[test]
     fn counting_operator_counts() {
         let m = graphs::erdos_renyi(128, 512, 1).to_csr();
         let c = CountingOperator::new(m);
@@ -168,5 +84,16 @@ mod tests {
         c.apply(&x, &mut y);
         c.apply(&x, &mut y);
         assert_eq!(c.count(), 2);
+    }
+
+    #[test]
+    fn csr_operator_matches_spmv() {
+        let m = graphs::mesh2d(10, 10, 0.9, 0.02, 4).to_csr();
+        let x: Vec<f32> = (0..m.nrows).map(|i| i as f32 * 0.01 - 0.3).collect();
+        let mut y = vec![0.0f32; m.nrows];
+        Operator::apply(&m, &x, &mut y);
+        assert_eq!(y, m.spmv(&x));
+        assert_eq!(Operator::n(&m), m.nrows);
+        assert_eq!(Operator::nnz(&m), m.nnz());
     }
 }

@@ -10,8 +10,9 @@
 //!    `M` to a `K x K` symmetric tridiagonal matrix `T` plus `K` orthogonal
 //!    Lanczos vectors, with the Sparse Matrix-Vector product (SpMV) as the
 //!    dominant cost. The paper streams the COO matrix through 5 HBM-fed
-//!    compute units; we reproduce that decomposition with a sharded SpMV
-//!    engine (one shard per "CU") and an FPGA performance model.
+//!    compute units; we reproduce that decomposition with the pool-parallel
+//!    [`sparse::ShardedSpmv`] engine (one worker per "CU") and an FPGA
+//!    performance model.
 //! 2. **Jacobi** (compute-bound): diagonalizes `T` with a systolic-array
 //!    formulation of the Jacobi eigenvalue algorithm (Brent-Luk schedule
 //!    with the paper's reverse-order row/column interchange), yielding the
@@ -22,19 +23,30 @@
 //! (`make artifacts`) and executed from rust through PJRT ([`runtime`]).
 //! Python is never on the request path.
 //!
+//! ## Feature flags
+//!
+//! * **`pjrt`** (off by default) — compile the PJRT/XLA execution bridge.
+//!   The default build is hermetic pure Rust: [`runtime`] exposes the same
+//!   API through stubs that report the engine unavailable, and the
+//!   coordinator transparently falls back to the native sharded engine.
+//!
 //! ## Quick start
 //!
-//! ```no_run
+//! ```
 //! use topk_eigen::prelude::*;
 //!
-//! // Build a small random power-law graph and solve for the top 8 pairs.
-//! let m = graphs::rmat(1 << 12, 8 * (1 << 12), 0.57, 0.19, 0.19, 42);
-//! let opts = coordinator::SolveOptions { k: 8, ..Default::default() };
+//! // Build a small random power-law graph and solve for the top 4 pairs.
+//! let m = graphs::rmat(1 << 10, 8 << 10, 0.57, 0.19, 0.19, 42);
+//! let opts = coordinator::SolveOptions { k: 4, ..Default::default() };
 //! let sol = coordinator::Solver::new(opts).solve(&m).unwrap();
+//! assert_eq!(sol.k(), 4);
 //! for (lambda, _v) in sol.pairs() {
 //!     println!("lambda = {lambda}");
 //! }
 //! ```
+//!
+//! The larger tour lives in `examples/quickstart.rs`
+//! (`cargo run --release --example quickstart`).
 #![warn(missing_docs)]
 
 pub mod arnoldi;
@@ -53,13 +65,13 @@ pub mod util;
 
 /// Convenient glob-import of the most used types.
 pub mod prelude {
-    pub use crate::coordinator::{self, SolveOptions, Solver};
+    pub use crate::coordinator::{self, Engine, SolveOptions, Solver};
     pub use crate::fixed::{Q1_15, Q1_31, Q2_30};
     pub use crate::fpga;
     pub use crate::graphs;
     pub use crate::jacobi::{self, JacobiMode};
-    pub use crate::lanczos::{self, LanczosOptions, ReorthPolicy};
+    pub use crate::lanczos::{self, LanczosOptions, Operator, ReorthPolicy};
     pub use crate::linalg;
-    pub use crate::sparse::{CooMatrix, CsrMatrix};
+    pub use crate::sparse::{CooMatrix, CsrMatrix, PartitionPolicy, ShardedSpmv};
     pub use crate::util::rng::Pcg64;
 }

@@ -78,13 +78,23 @@ fn parse_precision(s: &str) -> Result<Precision, String> {
     }
 }
 
+fn parse_partition(s: &str) -> Result<PartitionPolicy, String> {
+    match s {
+        "equal-rows" => Ok(PartitionPolicy::EqualRows),
+        "balanced-nnz" => Ok(PartitionPolicy::BalancedNnz),
+        other => Err(format!("bad partition '{other}' (equal-rows|balanced-nnz)")),
+    }
+}
+
 fn cmd_solve(args: &[String]) -> i32 {
     let cmd = Command::new("topk-eigen solve", "solve a Top-K sparse eigenproblem")
         .positional("input", "MatrixMarket file or catalog ID[@scale]")
         .opt("k", "number of eigenpairs", Some("8"))
         .opt("reorth", "reorthogonalization: none|every|every-N", Some("every-2"))
         .opt("precision", "f32|q1.31|q2.30|q1.15", Some("f32"))
-        .opt("cus", "SpMV compute units", Some("5"))
+        .opt("cus", "SpMV compute units (matrix row shards)", Some("5"))
+        .opt("threads", "CU pool worker threads (0 = one per CU)", Some("0"))
+        .opt("partition", "row partition: equal-rows|balanced-nnz", Some("balanced-nnz"))
         .opt("engine", "spmv engine: native|pjrt", Some("native"))
         .flag("verify", "print Fig-11 accuracy metrics")
         .flag("quiet", "suppress per-pair output");
@@ -98,10 +108,12 @@ fn cmd_solve(args: &[String]) -> i32 {
     let run = || -> Result<i32, String> {
         let matrix = load_input(m.str("input").map_err(|e| e.to_string())?)?;
         let opts = SolveOptions {
-            k: m.parse::<usize>("k").map_err(|e| e.to_string())?,
+            k: m.parse_at_least::<usize>("k", 1).map_err(|e| e.to_string())?,
             reorth: parse_reorth(m.str("reorth").unwrap())?,
             precision: parse_precision(m.str("precision").unwrap())?,
-            cus: m.parse::<usize>("cus").map_err(|e| e.to_string())?,
+            cus: m.parse_at_least::<usize>("cus", 1).map_err(|e| e.to_string())?,
+            threads: m.parse::<usize>("threads").map_err(|e| e.to_string())?,
+            partition: parse_partition(m.str("partition").unwrap())?,
             engine: match m.str("engine").unwrap() {
                 "pjrt" => Engine::Pjrt,
                 _ => Engine::Native,
@@ -109,13 +121,15 @@ fn cmd_solve(args: &[String]) -> i32 {
             ..Default::default()
         };
         println!(
-            "solving: n={} nnz={} k={} reorth={} precision={} cus={} engine={:?}",
+            "solving: n={} nnz={} k={} reorth={} precision={} cus={} threads={} partition={:?} engine={:?}",
             matrix.nrows,
             matrix.nnz(),
             opts.k,
             opts.reorth.name(),
             opts.precision.name(),
             opts.cus,
+            opts.effective_threads(),
+            opts.partition,
             opts.engine
         );
         let mut solver = Solver::new(opts);

@@ -12,25 +12,50 @@
 //! and [`ArtifactRegistry::pick_spmv`] selects the smallest variant that
 //! fits a workload; inputs are zero-padded up to the variant shape (padding
 //! entries scatter `0.0 * x[0]` into row 0 — a no-op by construction).
+//!
+//! ## Feature gating
+//!
+//! The whole execution path sits behind the **`pjrt`** cargo feature so the
+//! default build is hermetic (no Python/XLA toolchain). Without the
+//! feature, [`Runtime`], [`PjrtSpmv`] and [`PjrtJacobi`] are pure-Rust
+//! stubs (see the private `stub` module) that resolve the artifact
+//! directory, reproduce the shape checks, and report the engine as
+//! unavailable — the coordinator then falls back to the native sharded
+//! engine. The shape registry ([`ArtifactRegistry`], [`SpmvVariant`]) and
+//! [`artifacts_dir`] are always available: the scheduler and the FPGA model
+//! use them independently of execution.
 
+#[cfg(feature = "pjrt")]
 mod jacobi;
+#[cfg(feature = "pjrt")]
 mod spmv;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
 
+#[cfg(feature = "pjrt")]
 pub use jacobi::PjrtJacobi;
+#[cfg(feature = "pjrt")]
 pub use spmv::PjrtSpmv;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Module, PjrtJacobi, PjrtSpmv, Runtime};
 
+#[cfg(feature = "pjrt")]
 use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
 /// A compiled artifact ready to execute.
+#[cfg(feature = "pjrt")]
 pub struct Module {
     exe: xla::PjRtLoadedExecutable,
     /// Artifact path (for diagnostics).
     pub path: PathBuf,
 }
 
+#[cfg(feature = "pjrt")]
 impl Module {
     /// Execute with literal inputs; returns the flattened output tuple.
     pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
@@ -50,12 +75,14 @@ impl Module {
 }
 
 /// PJRT client + compiled-module cache.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     cache: Mutex<HashMap<PathBuf, std::sync::Arc<Module>>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// CPU PJRT client rooted at the artifact directory (`TOPK_ARTIFACTS`
     /// env var, default `artifacts/`).
@@ -219,5 +246,16 @@ mod tests {
         assert_eq!(v.lanczos_step_file(), "lanczos_step_n4096_nnz65536.hlo.txt");
         assert_eq!(ArtifactRegistry::jacobi_file(8), "jacobi_k8.hlo.txt");
         assert_eq!(ArtifactRegistry::all_files().len(), 10);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_constructs_and_reports_loads_unavailable() {
+        let rt = Runtime::cpu().expect("stub runtime always constructs");
+        assert!(rt.dir().as_os_str().len() > 0);
+        let err = rt.load("spmv_n1024_nnz20480.hlo.txt").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("pjrt"), "error should name the missing feature: {msg}");
+        assert!(msg.contains("spmv_n1024_nnz20480"), "error should name the artifact: {msg}");
     }
 }

@@ -1,0 +1,147 @@
+//! Pure-Rust stand-ins for the PJRT runtime when the `pjrt` feature is off.
+//!
+//! These keep the rest of the crate (coordinator, CLI, benches, tests)
+//! compiling against one API regardless of the feature set. They perform
+//! the same *host-side* validation as the real implementations — artifact
+//! directory resolution, shape-registry fit checks — and then report the
+//! engine as unavailable, so every caller exercises its fallback path (the
+//! coordinator logs a warning and routes Lanczos through the native
+//! [`crate::sparse::ShardedSpmv`] engine).
+
+use crate::lanczos::Operator;
+use crate::linalg::{DenseMatrix, Tridiagonal};
+use crate::runtime::{artifacts_dir, ArtifactRegistry, SpmvVariant};
+use crate::sparse::CooMatrix;
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Uninhabited type: proves stub handles can never be constructed, so the
+/// unreachable method bodies below need no `unsafe`/`panic!`.
+enum Never {}
+
+/// (stub) A compiled artifact. Never constructed without the `pjrt`
+/// feature; exists so `Runtime::load`'s signature is feature-independent.
+pub struct Module {
+    _never: Never,
+    /// Artifact path (for diagnostics).
+    pub path: PathBuf,
+}
+
+/// (stub) PJRT client placeholder: resolves the artifact directory and
+/// reports every load as unavailable.
+pub struct Runtime {
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Build the stub runtime. Always succeeds — it holds only the
+    /// artifact directory; failures surface at [`Runtime::load`].
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { dir: artifacts_dir() })
+    }
+
+    /// The artifact directory in use.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Always fails: compiling artifacts requires the `pjrt` feature.
+    pub fn load(&self, name: &str) -> Result<Arc<Module>> {
+        Err(anyhow!(
+            "cannot load {}: topk-eigen was built without the `pjrt` feature \
+             (rebuild with `--features pjrt` and real XLA bindings to execute artifacts)",
+            self.dir.join(name).display()
+        ))
+    }
+}
+
+/// (stub) PJRT-backed SpMV operator. [`PjrtSpmv::new`] reproduces the real
+/// constructor's shape checks, then reports the engine unavailable so the
+/// coordinator falls back to the native sharded engine.
+pub struct PjrtSpmv {
+    _never: Never,
+}
+
+impl PjrtSpmv {
+    /// Mirror the real constructor: validate the matrix shape against the
+    /// artifact registry, then fail with a feature-gate message.
+    pub fn new(_runtime: Arc<Runtime>, coo: &CooMatrix) -> Result<Self> {
+        assert_eq!(coo.nrows, coo.ncols, "operator must be square");
+        ArtifactRegistry::pick_spmv(coo.nrows, coo.nnz())
+            .ok_or_else(|| anyhow!("no SpMV artifact fits n={} nnz={}", coo.nrows, coo.nnz()))?;
+        Err(anyhow!("PJRT SpMV engine requires the `pjrt` feature"))
+    }
+
+    /// The artifact variant in use (unreachable: stubs are never built).
+    pub fn variant(&self) -> SpmvVariant {
+        unreachable!("stub PjrtSpmv is never constructed")
+    }
+}
+
+impl Operator for PjrtSpmv {
+    fn n(&self) -> usize {
+        unreachable!("stub PjrtSpmv is never constructed")
+    }
+    fn nnz(&self) -> usize {
+        unreachable!("stub PjrtSpmv is never constructed")
+    }
+    fn apply(&self, _x: &[f32], _y: &mut [f32]) {
+        unreachable!("stub PjrtSpmv is never constructed")
+    }
+}
+
+/// (stub) PJRT-backed fixed-K Jacobi core.
+pub struct PjrtJacobi {
+    _never: Never,
+}
+
+impl PjrtJacobi {
+    /// Mirror the real constructor: validate `k` against the core registry,
+    /// then fail with a feature-gate message.
+    pub fn new(_runtime: &Runtime, k: usize) -> Result<Self> {
+        ArtifactRegistry::pick_jacobi(k)
+            .ok_or_else(|| anyhow!("no Jacobi artifact core fits k={k} (max 32)"))?;
+        Err(anyhow!("PJRT Jacobi engine requires the `pjrt` feature"))
+    }
+
+    /// The loaded core size (unreachable: stubs are never built).
+    pub fn k_core(&self) -> usize {
+        unreachable!("stub PjrtJacobi is never constructed")
+    }
+
+    /// Diagonalize `t` (unreachable: stubs are never built).
+    pub fn eigen(&self, _t: &Tridiagonal) -> Result<(Vec<f64>, DenseMatrix)> {
+        unreachable!("stub PjrtJacobi is never constructed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphs;
+
+    #[test]
+    fn stub_spmv_reports_fit_errors_like_the_real_path() {
+        let rt = Arc::new(Runtime::cpu().unwrap());
+        // Oversized: the registry check must fire first, matching the real
+        // constructor's error text (tests/end_to_end.rs relies on it).
+        let mut big = CooMatrix::new(1 << 20, 1 << 20);
+        big.push(0, 0, 1.0);
+        let err = PjrtSpmv::new(Arc::clone(&rt), &big).unwrap_err();
+        assert!(format!("{err}").contains("no SpMV artifact"), "{err}");
+        // In-range: the stub still refuses, naming the feature gate.
+        let small = graphs::erdos_renyi(64, 256, 1);
+        let err = PjrtSpmv::new(rt, &small).unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn stub_jacobi_reports_fit_errors_like_the_real_path() {
+        let rt = Runtime::cpu().unwrap();
+        let err = PjrtJacobi::new(&rt, 40).unwrap_err();
+        assert!(format!("{err}").contains("no Jacobi artifact"), "{err}");
+        let err = PjrtJacobi::new(&rt, 8).unwrap_err();
+        assert!(format!("{err}").contains("pjrt"), "{err}");
+    }
+}

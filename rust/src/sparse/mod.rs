@@ -1,6 +1,7 @@
 //! Sparse-matrix substrate: COO and CSR storage, MatrixMarket IO, Frobenius
-//! normalization, nnz-balanced partitioning, and the 512-bit COO packet
-//! stream that models the paper's HBM read path (§IV-B).
+//! normalization, nnz-balanced partitioning, the 512-bit COO packet stream
+//! that models the paper's HBM read path (§IV-B), and the pool-parallel
+//! [`ShardedSpmv`] engine that executes one CU worker per row stripe.
 
 mod coo;
 mod csr;
@@ -8,6 +9,7 @@ mod mmio;
 mod norm;
 mod packet;
 mod partition;
+mod sharded;
 
 pub use coo::CooMatrix;
 pub use csr::CsrMatrix;
@@ -15,3 +17,4 @@ pub use mmio::{read_matrix_market, write_matrix_market, MmioError};
 pub use norm::{frobenius_norm, normalize_frobenius};
 pub use packet::{CooPacket, PacketStream, PACKET_NNZ, PACKET_BITS};
 pub use partition::{imbalance, partition_rows_balanced, PartitionPolicy, RowPartition};
+pub use sharded::ShardedSpmv;

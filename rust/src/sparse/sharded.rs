@@ -1,0 +1,198 @@
+//! The pool-parallel sharded SpMV engine (§IV-B).
+//!
+//! The paper's Lanczos Core streams the COO matrix through **5 HBM-fed
+//! SpMV Compute Units** in parallel and concatenates their partial output
+//! vectors in a Merge Unit (Figure 6 A–C). [`ShardedSpmv`] is the
+//! structural twin of that design at the L3 layer:
+//!
+//! * each [`RowPartition`] stripe = one CU's slice of the matrix;
+//! * each [`ThreadPool`] worker = one CU datapath (default pool size 5);
+//! * the scoped fork/join = the Merge Unit (output rows are disjoint, so
+//!   the "merge" is free — workers write non-overlapping `y` ranges).
+//!
+//! Both partition policies are supported: [`PartitionPolicy::EqualRows`]
+//! reproduces the paper's scheme exactly, [`PartitionPolicy::BalancedNnz`]
+//! equalizes per-CU work on power-law graphs (the `ablation_cu_packets`
+//! bench quantifies the difference).
+//!
+//! Determinism: each output row is accumulated by exactly one worker in
+//! the same element order as the serial kernel, so sharded results are
+//! **bitwise identical** to [`CsrMatrix::spmv`] for any shard count or
+//! policy — `tests/sharded_spmv.rs` property-checks this.
+
+use crate::lanczos::Operator;
+use crate::sparse::{partition_rows_balanced, CsrMatrix, PartitionPolicy, RowPartition};
+use crate::util::pool::ThreadPool;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Multi-CU SpMV: row stripes dispatched to a thread pool, one worker per
+/// CU shard. Output regions are disjoint so no synchronization is needed
+/// beyond the final join — exactly the paper's partition + merge scheme.
+pub struct ShardedSpmv {
+    matrix: Arc<CsrMatrix>,
+    parts: Vec<RowPartition>,
+    policy: PartitionPolicy,
+    pool: Arc<ThreadPool>,
+    applies: AtomicUsize,
+}
+
+impl ShardedSpmv {
+    /// Shard `matrix` into `cus` stripes under `policy` and run them on
+    /// `pool` (pool should have >= `cus` workers for full overlap; with
+    /// fewer workers, stripes are multiplexed onto the available ones).
+    pub fn new(matrix: Arc<CsrMatrix>, cus: usize, policy: PartitionPolicy, pool: Arc<ThreadPool>) -> Self {
+        let parts = partition_rows_balanced(&matrix, cus, policy);
+        Self { matrix, parts, policy, pool, applies: AtomicUsize::new(0) }
+    }
+
+    /// Convenience constructor that spawns a dedicated pool with one worker
+    /// per CU — the paper's configuration when `cus == 5`. Prefer
+    /// [`ShardedSpmv::new`] when several engines can share one pool (the
+    /// coordinator and the batched service do).
+    pub fn with_own_pool(matrix: Arc<CsrMatrix>, cus: usize, policy: PartitionPolicy) -> Self {
+        let pool = Arc::new(ThreadPool::new(cus.max(1)));
+        Self::new(matrix, cus, policy, pool)
+    }
+
+    /// The shard table (exposed for the FPGA model and tests).
+    pub fn partitions(&self) -> &[RowPartition] {
+        &self.parts
+    }
+
+    /// The partition policy the shards were built with.
+    pub fn policy(&self) -> PartitionPolicy {
+        self.policy
+    }
+
+    /// Number of CU shards.
+    pub fn cus(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Heaviest-shard/ideal nnz ratio (1.0 = perfect balance); see
+    /// [`crate::sparse::imbalance`].
+    pub fn imbalance(&self) -> f64 {
+        crate::sparse::imbalance(&self.parts)
+    }
+
+    /// Number of `apply` calls so far (telemetry for the service layer).
+    pub fn applies(&self) -> usize {
+        self.applies.load(Ordering::Relaxed)
+    }
+
+    /// The underlying CSR matrix.
+    pub fn matrix(&self) -> &Arc<CsrMatrix> {
+        &self.matrix
+    }
+}
+
+impl Operator for ShardedSpmv {
+    fn n(&self) -> usize {
+        self.matrix.nrows
+    }
+    fn nnz(&self) -> usize {
+        self.matrix.nnz()
+    }
+    fn apply(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(y.len(), self.matrix.nrows);
+        self.applies.fetch_add(1, Ordering::Relaxed);
+        let m = &self.matrix;
+        let parts = &self.parts;
+        // Disjoint writes: each task owns rows [row_start, row_end). We hand
+        // each worker the full-length buffer through a raw pointer; stripes
+        // never overlap, so the only synchronization is the scoped join.
+        let y_ptr = SendPtr(y.as_mut_ptr());
+        self.pool.scope_chunks(parts.len(), |i| {
+            let p = parts[i];
+            // SAFETY: `scope_chunks` blocks until every worker finishes, so
+            // the pointer outlives all uses; stripe `i` writes only
+            // `y[p.row_start..p.row_end]`, and stripes tile `[0, nrows)`
+            // without overlap (invariant of `partition_rows_balanced`).
+            let y_slice = unsafe { std::slice::from_raw_parts_mut(y_ptr.get(), m.nrows) };
+            m.spmv_into(x, y_slice, p.row_start, p.row_end);
+        });
+    }
+}
+
+/// Pointer wrapper proving to the compiler we uphold disjointness manually.
+#[derive(Copy, Clone)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+impl SendPtr {
+    fn get(self) -> *mut f32 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphs;
+    use crate::sparse::CooMatrix;
+
+    #[test]
+    fn sharded_matches_serial() {
+        let m = Arc::new(graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 3).to_csr());
+        let pool = Arc::new(ThreadPool::new(5));
+        let x: Vec<f32> = (0..m.nrows).map(|i| ((i * 37) % 11) as f32 * 0.1 - 0.5).collect();
+        let serial = m.spmv(&x);
+        for cus in [1, 2, 5, 8] {
+            for policy in [PartitionPolicy::EqualRows, PartitionPolicy::BalancedNnz] {
+                let sharded = ShardedSpmv::new(Arc::clone(&m), cus, policy, Arc::clone(&pool));
+                let mut y = vec![0.0f32; m.nrows];
+                sharded.apply(&x, &mut y);
+                assert_eq!(serial, y, "cus={cus} policy={policy:?}");
+                assert_eq!(sharded.applies(), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn partitions_tile_rows() {
+        let m = Arc::new(graphs::mesh2d(40, 40, 0.9, 0.01, 5).to_csr());
+        let pool = Arc::new(ThreadPool::new(4));
+        let s = ShardedSpmv::new(Arc::clone(&m), 5, PartitionPolicy::BalancedNnz, pool);
+        let parts = s.partitions();
+        assert_eq!(parts.len(), 5);
+        assert_eq!(s.cus(), 5);
+        assert_eq!(parts[0].row_start, 0);
+        assert_eq!(parts.last().unwrap().row_end, m.nrows);
+        assert!(s.imbalance() >= 1.0);
+        assert_eq!(s.policy(), PartitionPolicy::BalancedNnz);
+    }
+
+    #[test]
+    fn empty_tail_shards_are_harmless() {
+        // 3 rows across 8 shards: shards 3..8 are empty ranges. The engine
+        // must still produce the exact serial result.
+        let mut coo = CooMatrix::new(3, 3);
+        coo.push(0, 1, 2.0);
+        coo.push(1, 0, 2.0);
+        coo.push(2, 2, -1.0);
+        let m = Arc::new(coo.to_csr());
+        let x = vec![1.0f32, -2.0, 0.5];
+        let serial = m.spmv(&x);
+        for policy in [PartitionPolicy::EqualRows, PartitionPolicy::BalancedNnz] {
+            let s = ShardedSpmv::with_own_pool(Arc::clone(&m), 8, policy);
+            assert_eq!(s.cus(), 8);
+            let mut y = vec![0.0f32; 3];
+            s.apply(&x, &mut y);
+            assert_eq!(serial, y, "policy={policy:?}");
+        }
+    }
+
+    #[test]
+    fn own_pool_constructor_matches_shared_pool() {
+        let m = Arc::new(graphs::erdos_renyi(200, 1600, 9).to_csr());
+        let x: Vec<f32> = (0..200).map(|i| (i as f32 * 0.017).sin()).collect();
+        let shared_pool = Arc::new(ThreadPool::new(3));
+        let a = ShardedSpmv::new(Arc::clone(&m), 5, PartitionPolicy::BalancedNnz, shared_pool);
+        let b = ShardedSpmv::with_own_pool(Arc::clone(&m), 5, PartitionPolicy::BalancedNnz);
+        let (mut ya, mut yb) = (vec![0.0f32; 200], vec![0.0f32; 200]);
+        a.apply(&x, &mut ya);
+        b.apply(&x, &mut yb);
+        assert_eq!(ya, yb);
+    }
+}

@@ -174,6 +174,20 @@ impl Matches {
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// Typed value with an inclusive lower bound — for counts that must be
+    /// positive (eigenpairs, compute units, worker threads).
+    pub fn parse_at_least<T>(&self, name: &str, min: T) -> Result<T, CliError>
+    where
+        T: std::str::FromStr + PartialOrd + fmt::Display,
+        T::Err: fmt::Display,
+    {
+        let v = self.parse::<T>(name)?;
+        if v < min {
+            return Err(CliError(format!("--{name}={v}: must be >= {min}")));
+        }
+        Ok(v)
+    }
 }
 
 #[cfg(test)]
@@ -230,6 +244,15 @@ mod tests {
         let e = cmd().parse(&args(&["--help"])).unwrap_err();
         assert!(e.0.contains("USAGE"), "{}", e.0);
         assert!(e.0.contains("--k"));
+    }
+
+    #[test]
+    fn parse_at_least_enforces_bound() {
+        let m = cmd().parse(&args(&["g.mtx", "--k", "0"])).unwrap();
+        let e = m.parse_at_least::<usize>("k", 1).unwrap_err();
+        assert!(e.0.contains("must be >= 1"), "{}", e.0);
+        let m = cmd().parse(&args(&["g.mtx", "--k", "3"])).unwrap();
+        assert_eq!(m.parse_at_least::<usize>("k", 1).unwrap(), 3);
     }
 
     #[test]

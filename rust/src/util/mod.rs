@@ -1,5 +1,8 @@
 //! Small self-contained substrates that replace crates unavailable in the
 //! offline vendor set (clap, rand, serde_json, rayon/tokio, proptest).
+//! (`anyhow`, `log`, and the `xla` API stub live as path crates under
+//! `rust/vendor/` instead, because their call sites use crate-qualified
+//! paths.)
 //!
 //! Each submodule is deliberately minimal but production-shaped: documented,
 //! tested, and used pervasively by the rest of the crate.

@@ -123,6 +123,44 @@ fn service_mixed_workload_under_load() {
 }
 
 #[test]
+fn batched_service_multi_k_matches_single_submissions() {
+    // The same-matrix multi-K fast path (one prepare + one sharded engine
+    // shared across the batch) must be numerically identical to fresh
+    // single-job solves, and the telemetry must account for every member.
+    let svc = EigenService::start(2);
+    let m = graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 77);
+    let ks = [3usize, 6, 9, 12];
+    let batch = svc.submit_batch(m.clone(), SolveOptions::default(), &ks);
+    assert_eq!(batch.len(), ks.len());
+    let mut singles = Vec::new();
+    for &k in &ks {
+        let (_, t) = svc.submit(m.clone(), SolveOptions { k, ..Default::default() });
+        singles.push(t);
+    }
+    for (((_, bt), st), &k) in batch.into_iter().zip(singles).zip(&ks) {
+        let b = bt.wait();
+        let s = st.wait();
+        let (b, s) = (b.outcome.expect("batch member"), s.outcome.expect("single"));
+        assert_eq!(b.k(), s.k(), "k={k}");
+        for i in 0..b.k() {
+            assert!(
+                (b.eigenvalues[i] - s.eigenvalues[i]).abs() < 1e-9,
+                "k={k} pair {i}: batch {} vs single {}",
+                b.eigenvalues[i],
+                s.eigenvalues[i]
+            );
+        }
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.batches, 1);
+    assert_eq!(stats.submitted, 2 * ks.len() as u64);
+    assert_eq!(stats.completed, 2 * ks.len() as u64);
+    assert_eq!(stats.failed, 0);
+    assert!(stats.max_queued_s >= 0.0 && stats.total_solve_s >= 0.0);
+    svc.shutdown();
+}
+
+#[test]
 fn breakdown_path_returns_partial_solution() {
     // Rank-1 matrix (uniform outer product): the uniform Lanczos start is
     // exactly the eigenvector, so the recurrence breaks down after one

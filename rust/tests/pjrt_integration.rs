@@ -3,6 +3,12 @@
 //! These require `make artifacts`. If the artifact directory is missing
 //! they fail with an actionable message — the build pipeline (Makefile
 //! `test` target) always builds artifacts first.
+//!
+//! The whole file is gated on the `pjrt` cargo feature: the default build
+//! substitutes pure-Rust runtime stubs (see `src/runtime/stub.rs`), so
+//! there is nothing to integrate against without the feature.
+
+#![cfg(feature = "pjrt")]
 
 use std::sync::Arc;
 use topk_eigen::graphs;

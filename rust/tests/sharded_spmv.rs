@@ -1,0 +1,148 @@
+//! Property tests for the pool-parallel sharded SpMV engine: the sharded
+//! result must equal the serial CSR kernel for every shard count and
+//! partition policy, including matrices that leave tail shards empty.
+//!
+//! Each output row is accumulated by exactly one worker in the serial
+//! element order, so equality here is *bitwise*, which is stricter than
+//! the 1e-6 closeness the acceptance bar asks for; both are asserted so a
+//! future reduction-order change would still have a meaningful bound.
+
+use std::sync::Arc;
+use topk_eigen::lanczos::Operator;
+use topk_eigen::prop_assert;
+use topk_eigen::sparse::{CooMatrix, PartitionPolicy, ShardedSpmv};
+use topk_eigen::util::pool::ThreadPool;
+use topk_eigen::util::prop::{forall, Gen};
+
+const SHARD_COUNTS: [usize; 4] = [1, 3, 5, 8];
+const POLICIES: [PartitionPolicy; 2] = [PartitionPolicy::EqualRows, PartitionPolicy::BalancedNnz];
+
+/// Random symmetric COO matrix (post-normalization value regime).
+fn gen_sym_coo(g: &mut Gen) -> CooMatrix {
+    let n = g.usize_in(4, 200).max(4);
+    let edges = g.usize_in(n, 6 * n).max(4);
+    let mut m = CooMatrix::new(n, n);
+    for _ in 0..edges {
+        let r = g.rng().range(0, n);
+        let c = g.rng().range(0, n);
+        let v = g.f64_in(-0.5, 0.5) as f32;
+        m.push(r, c, v);
+        if r != c {
+            m.push(c, r, v);
+        }
+    }
+    m.canonicalize();
+    m
+}
+
+fn assert_sharded_matches_serial(g: &mut Gen, coo: &CooMatrix, x: &[f32]) -> bool {
+    let csr = Arc::new(coo.to_csr());
+    let serial = csr.spmv(x);
+    let pool = Arc::new(ThreadPool::new(5));
+    for shards in SHARD_COUNTS {
+        for policy in POLICIES {
+            let op = ShardedSpmv::new(Arc::clone(&csr), shards, policy, Arc::clone(&pool));
+            prop_assert!(g, op.cus() == shards, "shard count {} != {shards}", op.cus());
+            let mut y = vec![0.0f32; csr.nrows];
+            op.apply(x, &mut y);
+            for i in 0..y.len() {
+                prop_assert!(
+                    g,
+                    (y[i] - serial[i]).abs() <= 1e-6,
+                    "row {i} off by more than 1e-6 (shards={shards} policy={policy:?}): {} vs {}",
+                    y[i],
+                    serial[i]
+                );
+                prop_assert!(
+                    g,
+                    y[i].to_bits() == serial[i].to_bits(),
+                    "row {i} not bitwise equal (shards={shards} policy={policy:?})"
+                );
+            }
+        }
+    }
+    true
+}
+
+#[test]
+fn prop_sharded_spmv_matches_serial_across_shards_and_policies() {
+    forall("sharded SpMV == serial SpMV for shards in {1,3,5,8} x both policies", |g| {
+        let coo = gen_sym_coo(g);
+        let x = g.vec_f32(coo.ncols, -1.0, 1.0);
+        assert_sharded_matches_serial(g, &coo, &x)
+    });
+}
+
+#[test]
+fn prop_sharded_spmv_handles_empty_tail_shards() {
+    // Fewer rows than shards: the partitioner pads with empty tail ranges,
+    // which must neither panic nor perturb the output.
+    forall("sharded SpMV with more shards than rows", |g| {
+        let n = g.usize_in(1, 7).max(1);
+        let mut coo = CooMatrix::new(n, n);
+        for r in 0..n {
+            let v = g.f64_in(-0.5, 0.5) as f32;
+            coo.push(r, r, v);
+            let c = g.rng().range(0, n);
+            if c != r {
+                let w = g.f64_in(-0.5, 0.5) as f32;
+                coo.push(r, c, w);
+                coo.push(c, r, w);
+            }
+        }
+        coo.canonicalize();
+        let x = g.vec_f32(n, -1.0, 1.0);
+        assert_sharded_matches_serial(g, &coo, &x)
+    });
+}
+
+#[test]
+fn prop_sharded_spmv_handles_skewed_mass() {
+    // All non-zeros concentrated in the first rows: under BalancedNnz the
+    // leading shards absorb everything and the tail goes empty.
+    forall("sharded SpMV with all mass in the first row(s)", |g| {
+        let n = g.usize_in(8, 120).max(8);
+        let mut coo = CooMatrix::new(n, n);
+        for c in 0..n {
+            let v = g.f64_in(-0.5, 0.5) as f32;
+            if v != 0.0 {
+                coo.push(0, c, v);
+                if c != 0 {
+                    coo.push(c, 0, v);
+                }
+            }
+        }
+        coo.push(0, 0, 0.25);
+        coo.canonicalize();
+        let x = g.vec_f32(n, -1.0, 1.0);
+        assert_sharded_matches_serial(g, &coo, &x)
+    });
+}
+
+#[test]
+fn sharded_rmat_and_mesh_match_serial_with_five_shards() {
+    // The acceptance-bar configuration, deterministic: 5 shards (the
+    // paper's CU count) on an RMAT and a mesh graph, both policies.
+    use topk_eigen::graphs;
+    for coo in [
+        graphs::rmat(1 << 10, 8 << 10, 0.57, 0.19, 0.19, 11),
+        graphs::mesh2d(32, 32, 0.9, 0.01, 4),
+    ] {
+        let csr = Arc::new(coo.to_csr());
+        let x: Vec<f32> = (0..csr.nrows).map(|i| ((i * 131) % 17) as f32 * 0.05 - 0.4).collect();
+        let serial = csr.spmv(&x);
+        for policy in POLICIES {
+            let op = ShardedSpmv::with_own_pool(Arc::clone(&csr), 5, policy);
+            let mut y = vec![0.0f32; csr.nrows];
+            op.apply(&x, &mut y);
+            for i in 0..y.len() {
+                assert!(
+                    (y[i] - serial[i]).abs() <= 1e-6,
+                    "row {i} ({policy:?}): {} vs {}",
+                    y[i],
+                    serial[i]
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Minimal, offline, API-compatible substitute for the `anyhow` crate.
+//!
+//! Vendored so the workspace builds hermetically with no registry access.
+//! Covers the subset `topk-eigen` uses: [`Error`], [`Result`], the
+//! [`anyhow!`], [`bail!`] and [`ensure!`] macros, and the [`Context`]
+//! extension trait. Semantics mirror the real crate where it matters:
+//!
+//! * `{}` displays the outermost message only;
+//! * `{:#}` displays the whole cause chain joined with `": "`;
+//! * `{:?}` displays the message plus a `Caused by:` list;
+//! * any `std::error::Error + Send + Sync + 'static` converts via `?`.
+
+use std::fmt;
+
+/// A dynamic error: an outermost message plus its chain of causes.
+pub struct Error {
+    /// `chain[0]` is the outermost (most recent) message; deeper causes
+    /// follow in order.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap the error with an additional outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate over the cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root) cause message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain, like anyhow.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Note: like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that would conflict with the blanket `From` below.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to fallible results.
+pub trait Context<T, E> {
+    /// Wrap the error value with additional context.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    /// Wrap the error value with lazily-evaluated context.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, Error> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn display_and_alternate_follow_anyhow() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = Error::from(io).context("loading artifact");
+        assert_eq!(format!("{e}"), "loading artifact");
+        assert_eq!(format!("{e:#}"), "loading artifact: gone");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 3;
+        assert_eq!(format!("{}", anyhow!("x = {x}")), "x = 3");
+        assert_eq!(format!("{}", anyhow!("x = {}", x + 1)), "x = 4");
+        assert!(fails(true).is_ok());
+        assert_eq!(fails(false).unwrap_err().to_string(), "flag was false");
+    }
+
+    #[test]
+    fn context_trait_wraps_results_and_options() {
+        let r: Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "inner"));
+        let e = r.with_context(|| format!("outer {}", 1)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer 1: inner");
+        let n: Option<u32> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+    }
+}

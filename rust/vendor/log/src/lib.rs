@@ -1,0 +1,261 @@
+//! Minimal, offline, API-compatible substitute for the `log` facade crate.
+//!
+//! Vendored so the workspace builds hermetically with no registry access.
+//! Covers the subset `topk-eigen` uses: the [`Log`] trait, [`Level`] /
+//! [`LevelFilter`], [`Record`] / [`Metadata`], [`set_logger`] /
+//! [`set_max_level`] / [`max_level`], and the `error!`..`trace!` macros.
+//! Like the real facade, logging is a no-op until a logger is installed
+//! (see `topk_eigen::util::logging::init`).
+
+use std::cmp::Ordering;
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::Mutex;
+
+/// Verbosity level of a single log record (Error is most severe).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    /// Serious failures.
+    Error = 1,
+    /// Recoverable problems.
+    Warn,
+    /// High-level progress.
+    Info,
+    /// Developer diagnostics.
+    Debug,
+    /// Very fine-grained tracing.
+    Trace,
+}
+
+/// Maximum-verbosity filter installed process-wide ([`set_max_level`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    /// Disable all logging.
+    Off = 0,
+    /// `Error` only.
+    Error,
+    /// `Warn` and up.
+    Warn,
+    /// `Info` and up.
+    Info,
+    /// `Debug` and up.
+    Debug,
+    /// Everything.
+    Trace,
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Metadata about a log record: its level and target module path.
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    /// The record's verbosity level.
+    pub fn level(&self) -> Level {
+        self.level
+    }
+    /// The record's target (module path by default).
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record: metadata plus the pre-formatted message arguments.
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    /// The record's verbosity level.
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+    /// The record's target (module path by default).
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+    /// The message as format arguments (displayable with `{}`).
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+    /// The record's metadata.
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+}
+
+/// A logging backend; install one with [`set_logger`].
+pub trait Log: Send + Sync {
+    /// Fast pre-filter: would a record with this metadata be logged?
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    /// Handle one record (only called when enabled).
+    fn log(&self, record: &Record);
+    /// Flush buffered output, if any.
+    fn flush(&self);
+}
+
+/// Returned when [`set_logger`] is called more than once.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+static LOGGER: Mutex<Option<&'static dyn Log>> = Mutex::new(None);
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+/// Install the process-wide logger. Fails if one is already installed.
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    let mut slot = LOGGER.lock().unwrap_or_else(|p| p.into_inner());
+    if slot.is_some() {
+        return Err(SetLoggerError(()));
+    }
+    *slot = Some(logger);
+    Ok(())
+}
+
+/// Set the process-wide maximum verbosity.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, AtomicOrdering::SeqCst);
+}
+
+/// The current process-wide maximum verbosity.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(AtomicOrdering::SeqCst) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+/// Implementation detail of the logging macros — not public API.
+#[doc(hidden)]
+pub fn __private_log(level: Level, target: &str, args: fmt::Arguments) {
+    let logger = *LOGGER.lock().unwrap_or_else(|p| p.into_inner());
+    if let Some(logger) = logger {
+        let record = Record { metadata: Metadata { level, target }, args };
+        if logger.enabled(&record.metadata) {
+            logger.log(&record);
+        }
+    }
+}
+
+/// Log at an explicit [`Level`].
+#[macro_export]
+macro_rules! log {
+    (target: $target:expr, $lvl:expr, $($arg:tt)+) => {{
+        let lvl = $lvl;
+        if lvl <= $crate::max_level() {
+            $crate::__private_log(lvl, $target, format_args!($($arg)+));
+        }
+    }};
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::log!(target: module_path!(), $lvl, $($arg)+)
+    };
+}
+
+/// Log at [`Level::Error`].
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+/// Log at [`Level::Warn`].
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+/// Log at [`Level::Info`].
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+/// Log at [`Level::Debug`].
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+/// Log at [`Level::Trace`].
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    static HITS: AtomicUsize = AtomicUsize::new(0);
+
+    struct CountingLogger;
+    impl Log for CountingLogger {
+        fn enabled(&self, metadata: &Metadata) -> bool {
+            metadata.level() <= max_level()
+        }
+        fn log(&self, record: &Record) {
+            assert!(!record.target().is_empty());
+            let _ = format!("{}", record.args());
+            HITS.fetch_add(1, AtomicOrdering::SeqCst);
+        }
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn levels_compare_against_filters() {
+        assert!(Level::Error <= LevelFilter::Info);
+        assert!(Level::Info <= LevelFilter::Info);
+        assert!(Level::Debug > LevelFilter::Info);
+        assert!(!(Level::Trace <= LevelFilter::Off));
+    }
+
+    #[test]
+    fn macros_respect_max_level_and_reach_logger() {
+        static LOGGER_IMPL: CountingLogger = CountingLogger;
+        let _ = set_logger(&LOGGER_IMPL);
+        set_max_level(LevelFilter::Info);
+        let before = HITS.load(AtomicOrdering::SeqCst);
+        info!("hello {}", 1);
+        debug!("filtered out {}", 2);
+        let after = HITS.load(AtomicOrdering::SeqCst);
+        assert_eq!(after - before, 1);
+    }
+}
