@@ -41,7 +41,10 @@ fn main() -> anyhow::Result<()> {
 
     // ---------------- Table II ----------------
     println!("--- Table II: evaluation suite ---");
-    println!("{:<6} {:<16} {:>11} {:>12} | {:>10} {:>12}", "ID", "name", "rows(pub)", "nnz(pub)", "rows(gen)", "nnz(gen)");
+    println!(
+        "{:<6} {:<16} {:>11} {:>12} | {:>10} {:>12}",
+        "ID", "name", "rows(pub)", "nnz(pub)", "rows(gen)", "nnz(gen)"
+    );
     let mut suite = Vec::new();
     for e in graphs::catalog() {
         let mut g = e.generate(scale);
@@ -63,7 +66,10 @@ fn main() -> anyhow::Result<()> {
     let power = PowerModel::default();
     let ks = [8usize, 16, 24];
     println!("\n--- Fig 9: speedup vs CPU baseline (FPGA timing model / measured thick-restart Lanczos) ---");
-    println!("{:<6} {:>4} {:>12} {:>12} {:>9} {:>12} {:>14}", "ID", "K", "cpu(s)", "fpga(s)", "speedup", "perf/W", "cpu ns/nnz");
+    println!(
+        "{:<6} {:>4} {:>12} {:>12} {:>9} {:>12} {:>14}",
+        "ID", "K", "cpu(s)", "fpga(s)", "speedup", "perf/W", "cpu ns/nnz"
+    );
     let mut fig9: Vec<(String, usize, f64)> = Vec::new();
     let mut fig10a: Vec<(String, usize, f64, f64)> = Vec::new();
     // Multi-threaded CPU baseline, like the paper's 80-thread ARPACK: the

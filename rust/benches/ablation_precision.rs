@@ -1,9 +1,14 @@
-//! Ablation A2 (§IV, §V-C): arithmetic precision of the Lanczos datapath.
+//! Ablation A2 (§IV, §V-C): storage precision of the Lanczos datapath.
 //!
 //! The paper replaces float with fixed-point where the Frobenius
-//! normalization bounds values into (-1, 1). This ablation quantifies the
-//! accuracy cost across Q formats (f32 / Q1.31 / Q2.30 / Q1.15): tridiagonal
-//! drift vs the f32 reference and end-to-end Fig 11 metrics.
+//! normalization bounds values into (-1, 1). With the typed storage
+//! datapath this is a real accuracy-vs-bandwidth trade-off, not a rounding
+//! pass: per format the ablation reports tridiagonal drift and Fig 11
+//! accuracy *and* the bytes the datapath actually moves — value-array
+//! bytes, entries per 512-bit line, and packets/bytes streamed across the
+//! solve's SpMVs. Results land in `BENCH_precision.json` (JSONL, one suite
+//! per line) unless `TOPK_BENCH_JSON` points elsewhere, so the perf
+//! trajectory accumulates across PRs.
 
 mod common;
 
@@ -13,13 +18,18 @@ use topk_eigen::fixed::Precision;
 use topk_eigen::lanczos::{lanczos, LanczosOptions, ReorthPolicy};
 
 fn main() {
+    // Default artifact path: keep the precision trajectory accumulating
+    // even when the caller sets no TOPK_BENCH_JSON.
+    if std::env::var("TOPK_BENCH_JSON").is_err() {
+        std::env::set_var("TOPK_BENCH_JSON", "BENCH_precision.json");
+    }
     let scale = common::bench_scale();
     let k = 16;
     let mut suite = BenchSuite::new("ablation_precision", &format!("fixed-point formats, K={k} @1/{scale}"));
     for (e, g) in common::small_suite(scale, &["WB-GO", "IT"]) {
         let csr = g.to_csr();
         let reference = lanczos(&csr, &LanczosOptions { k, reorth: ReorthPolicy::EveryN(2), ..Default::default() });
-        for precision in [Precision::Float32, Precision::FixedQ1_31, Precision::FixedQ2_30, Precision::FixedQ1_15] {
+        for precision in Precision::ALL {
             let lz = lanczos(
                 &csr,
                 &LanczosOptions { k, reorth: ReorthPolicy::EveryN(2), precision, ..Default::default() },
@@ -29,16 +39,24 @@ fn main() {
             let drift = (0..n_cmp)
                 .map(|i| (lz.tridiag.alpha[i] - reference.tridiag.alpha[i]).abs())
                 .fold(0.0f64, f64::max);
-            // End-to-end metrics.
+            // End-to-end metrics through the typed engine.
             let mut solver = Solver::new(SolveOptions { k, precision, ..Default::default() });
             let sol = solver.solve(&g).expect("solve");
             let r = verify::verify(&g, &sol);
+            let mt = &sol.metrics;
             suite.report(
                 &format!("{}/{}", e.id, precision.name()),
                 &[
                     ("alpha_drift_vs_f32", drift),
                     ("angle_deg", r.mean_angle_deg),
                     ("mean_residual", r.mean_residual),
+                    // Storage datapath: these columns must *differ* between
+                    // formats — that is the point of typed storage.
+                    ("value_bytes", mt.value_bytes as f64),
+                    ("basis_bytes", mt.basis_bytes as f64),
+                    ("entries_per_line", mt.packet_capacity as f64),
+                    ("packets_streamed", mt.packets_streamed as f64),
+                    ("hbm_bytes_streamed", mt.bytes_streamed as f64),
                 ],
             );
         }

@@ -38,7 +38,8 @@ fn main() {
             let cpu_s = t0.elapsed().as_secs_f64();
             // Modeled FPGA time with measured systolic steps.
             let shards = partition_rows_balanced(&csr, 5, PartitionPolicy::EqualRows);
-            let lz = lanczos(csr.as_ref(), &LanczosOptions { k, reorth: ReorthPolicy::EveryN(2), ..Default::default() });
+            let lz =
+                lanczos(csr.as_ref(), &LanczosOptions { k, reorth: ReorthPolicy::EveryN(2), ..Default::default() });
             let (_, _, stats) = systolic_jacobi(&lz.tridiag.to_dense(), TrigMode::Taylor3, 1e-9, 100);
             let fpga = model.solve_time(csr.nrows, &shards, k, ReorthPolicy::EveryN(2), stats.steps);
             let speedup = cpu_s / fpga.total_s();

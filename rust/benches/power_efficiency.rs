@@ -47,7 +47,12 @@ fn main() {
     }
     suite.report(
         "geomean",
-        &[("perf_per_watt", geomean(&gains)), ("with_host", geomean(&gains_host)), ("paper", 49.0), ("paper_with_host", 24.0)],
+        &[
+            ("perf_per_watt", geomean(&gains)),
+            ("with_host", geomean(&gains_host)),
+            ("paper", 49.0),
+            ("paper_with_host", 24.0),
+        ],
     );
     suite.finish();
 }

@@ -26,7 +26,10 @@ fn main() {
 
     // Single-threaded reference.
     let mean = suite.bench("serial", cfg, || csr.spmv_into(&x, &mut y, 0, csr.nrows));
-    suite.annotate(&[("gflops", 2.0 * nnz / mean / 1e9), ("gbps_csr", (nnz * 8.0 + csr.nrows as f64 * 8.0) / mean / 1e9)]);
+    suite.annotate(&[
+        ("gflops", 2.0 * nnz / mean / 1e9),
+        ("gbps_csr", (nnz * 8.0 + csr.nrows as f64 * 8.0) / mean / 1e9),
+    ]);
     let serial = mean;
 
     for cus in [1usize, 2, 4, 5, 8] {

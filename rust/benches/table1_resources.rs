@@ -30,9 +30,27 @@ fn main() {
         );
     }
     // Paper row for comparison.
-    suite.report("paper/SLR0", &[("lut_pct", 42.0), ("ff_pct", 13.0), ("bram_pct", 15.0), ("uram_pct", 0.0), ("dsp_pct", 16.0)]);
-    suite.report("paper/SLR1", &[("lut_pct", 40.0), ("ff_pct", 42.0), ("bram_pct", 0.0), ("uram_pct", 0.0), ("dsp_pct", 68.0)]);
-    suite.report("paper/SLR2", &[("lut_pct", 15.0), ("ff_pct", 17.0), ("bram_pct", 0.0), ("uram_pct", 0.0), ("dsp_pct", 34.0)]);
+    suite.report("paper/SLR0", &[
+        ("lut_pct", 42.0),
+        ("ff_pct", 13.0),
+        ("bram_pct", 15.0),
+        ("uram_pct", 0.0),
+        ("dsp_pct", 16.0),
+    ]);
+    suite.report("paper/SLR1", &[
+        ("lut_pct", 40.0),
+        ("ff_pct", 42.0),
+        ("bram_pct", 0.0),
+        ("uram_pct", 0.0),
+        ("dsp_pct", 68.0),
+    ]);
+    suite.report("paper/SLR2", &[
+        ("lut_pct", 15.0),
+        ("ff_pct", 17.0),
+        ("bram_pct", 0.0),
+        ("uram_pct", 0.0),
+        ("dsp_pct", 34.0),
+    ]);
     // Scaling: DSP cost quadruples per K doubling; K=64 does not fit.
     for k in [4usize, 8, 16, 32, 64] {
         let u = jacobi_core_resources(k);

@@ -456,7 +456,11 @@ mod tests {
         let ar = arnoldi_topk(&csr, &ArnoldiOptions { k: 3, restarts: 6, ..Default::default() });
         let lz = crate::lanczos::lanczos(
             &csr,
-            &crate::lanczos::LanczosOptions { k: 16, reorth: crate::lanczos::ReorthPolicy::Every, ..Default::default() },
+            &crate::lanczos::LanczosOptions {
+                k: 16,
+                reorth: crate::lanczos::ReorthPolicy::Every,
+                ..Default::default()
+            },
         );
         let je = crate::jacobi::jacobi_eigen(&lz.tridiag, crate::jacobi::JacobiMode::Cyclic, 1e-12);
         assert!(

@@ -3,22 +3,26 @@
 //! [`Solver`] wires the phases the way the hardware does (Figure 6):
 //!
 //! 1. **Prepare**: canonicalize + symmetrize check + Frobenius-normalize
-//!    (entries into `(-1,1)`, §III-A), build CSR, partition rows across
-//!    the CU pool.
+//!    (entries into `(-1,1)`, §III-A), build CSR **in the storage format
+//!    the solve requested** (typed engine selection: [`Precision`]
+//!    dispatched over the monomorphized `ShardedSpmv<V>` kernels),
+//!    partition rows across the CU pool.
 //! 2. **Lanczos** (SLR0 twin): K iterations with the sharded SpMV engine —
-//!    native CSR stripes on the thread pool, or the PJRT artifact path
-//!    ([`crate::runtime::PjrtSpmv`]) when enabled and a compiled shape
-//!    fits.
+//!    native typed CSR stripes on the thread pool, or the PJRT artifact
+//!    path ([`crate::runtime::PjrtSpmv`], f32 only) when enabled and a
+//!    compiled shape fits. Basis vectors are stored quantized
+//!    ([`crate::lanczos::lanczos_typed`]); dots and norms accumulate in
+//!    float (§IV).
 //! 3. **Jacobi** (SLR1/2 twin): systolic-array diagonalization of the
 //!    `K x K` tridiagonal output.
-//! 4. **Lift + rescale**: eigenvectors through the Lanczos basis,
+//! 4. **Lift + rescale**: eigenvectors through the (typed) Lanczos basis,
 //!    eigenvalues rescaled by the Frobenius norm.
 //!
 //! The prepare phase is split out as [`Solver::prepare`] →
 //! [`PreparedMatrix`] so that several solves over the *same* matrix (the
 //! batched service's multi-K fast path) share one canonicalization, one
-//! CSR conversion and one sharded engine instead of redoing the O(nnz)
-//! setup per job.
+//! typed CSR conversion and one sharded engine instead of redoing the
+//! O(nnz) setup per job.
 //!
 //! [`service`] adds a multi-tenant job queue on top (the data-center usage
 //! the paper motivates), and [`verify`] computes the paper's Fig 11
@@ -28,11 +32,11 @@ pub mod scheduler;
 pub mod service;
 pub mod verify;
 
-use crate::fixed::Precision;
+use crate::fixed::{packet_capacity, Precision};
 use crate::jacobi::{jacobi_eigen, JacobiMode, SystolicStats};
-use crate::lanczos::{lanczos, lift_eigenvector, LanczosOptions, Operator, ReorthPolicy};
+use crate::lanczos::{lanczos_typed, lift_eigenvector_typed, LanczosOptions, LanczosResult, Operator, ReorthPolicy};
 use crate::runtime::{PjrtSpmv, Runtime};
-use crate::sparse::{normalize_frobenius, CooMatrix, PartitionPolicy, ShardedSpmv};
+use crate::sparse::{normalize_frobenius, CooMatrix, CsrMatrix, PartitionPolicy, ShardedSpmv};
 use crate::util::pool::ThreadPool;
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
@@ -41,11 +45,13 @@ use std::sync::Arc;
 /// Which SpMV engine drives the Lanczos loop.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub enum Engine {
-    /// Native sharded CSR kernels on the CU thread pool.
+    /// Native sharded CSR kernels on the CU thread pool, in the storage
+    /// format selected by [`SolveOptions::precision`].
     Native,
     /// PJRT-compiled Pallas/XLA artifact (falls back to native when no
-    /// compiled shape fits, artifacts are missing, or the crate was built
-    /// without the `pjrt` feature).
+    /// compiled shape fits, artifacts are missing, the crate was built
+    /// without the `pjrt` feature, or a fixed-point storage format was
+    /// requested — the artifacts are f32).
     Pjrt,
 }
 
@@ -56,7 +62,10 @@ pub struct SolveOptions {
     pub k: usize,
     /// Reorthogonalization cadence (paper default: every 2 iterations).
     pub reorth: ReorthPolicy,
-    /// Lanczos-vector arithmetic (paper device: Q1.31 fixed point).
+    /// Storage format of the datapath: matrix value arrays and Lanczos
+    /// basis vectors are *stored* in this format (paper device: Q1.31
+    /// fixed point; Q1.15 halves value bytes and packs 6 entries per
+    /// 512-bit line instead of 5).
     pub precision: Precision,
     /// Jacobi engine for phase 2.
     pub jacobi: JacobiMode,
@@ -123,6 +132,22 @@ pub struct SolveMetrics {
     pub engine_used: &'static str,
     /// Lanczos breakdown iteration, if the subspace closed early.
     pub breakdown_at: Option<usize>,
+    /// Storage format of the datapath ("f32" / "q1.31" / "q2.30" /
+    /// "q1.15").
+    pub precision: &'static str,
+    /// Bytes of the matrix value array in the storage format (half the
+    /// f32 figure at Q1.15).
+    pub value_bytes: usize,
+    /// COO entries per 512-bit HBM line in the storage format (§IV-B1:
+    /// 5 at f32, 6 at Q1.15).
+    pub packet_capacity: usize,
+    /// 512-bit matrix-stream lines moved across all SpMVs of this solve.
+    pub packets_streamed: usize,
+    /// Matrix-stream bytes moved across all SpMVs (whole 64-byte lines).
+    pub bytes_streamed: usize,
+    /// Bytes of the stored Lanczos basis (`k * n` words of the storage
+    /// format).
+    pub basis_bytes: usize,
 }
 
 impl SolveMetrics {
@@ -157,15 +182,17 @@ impl Solution {
 }
 
 /// A matrix prepared once for repeated solves: canonicalized, normalized,
-/// converted to CSR, and bound to an SpMV engine. Built by
-/// [`Solver::prepare`]; consumed by [`Solver::solve_prepared`] /
-/// [`Solver::solve_prepared_with_k`]. This is the same-matrix multi-K fast
-/// path used by [`service::EigenService::submit_batch`].
+/// converted to CSR in the requested storage format, and bound to an SpMV
+/// engine. Built by [`Solver::prepare`]; consumed by
+/// [`Solver::solve_prepared`] / [`Solver::solve_prepared_with_k`]. This is
+/// the same-matrix multi-K fast path used by
+/// [`service::EigenService::submit_batch`].
 pub struct PreparedMatrix {
     op: Box<dyn Operator>,
     fro: f64,
     n: usize,
     nnz: usize,
+    precision: Precision,
     engine_used: &'static str,
     prepare_s: f64,
 }
@@ -186,6 +213,30 @@ impl PreparedMatrix {
     /// Engine bound to this matrix ("native" / "pjrt").
     pub fn engine(&self) -> &'static str {
         self.engine_used
+    }
+    /// Storage format the engine streams.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+    /// Stored bits per matrix value in the bound engine.
+    pub fn value_bits(&self) -> u32 {
+        self.op.value_bits()
+    }
+    /// Bytes of the engine's matrix value array.
+    pub fn value_bytes(&self) -> usize {
+        self.nnz * (self.op.value_bits() as usize / 8)
+    }
+    /// COO entries per 512-bit line in the bound engine's format.
+    pub fn packet_capacity(&self) -> usize {
+        packet_capacity(self.op.value_bits())
+    }
+    /// 512-bit lines one SpMV streams through the bound engine.
+    pub fn packets_per_apply(&self) -> usize {
+        self.op.packets_per_apply()
+    }
+    /// Matrix-stream bytes one SpMV moves through the bound engine.
+    pub fn bytes_per_apply(&self) -> usize {
+        self.op.bytes_per_apply()
     }
     /// Preparation wall time in seconds.
     pub fn prepare_s(&self) -> f64 {
@@ -222,9 +273,10 @@ impl Solver {
         &self.opts
     }
 
-    /// Run the prepare phase once: canonicalize, normalize, build CSR, and
-    /// bind the SpMV engine (sharded native pool, or PJRT when requested
-    /// and available). The result can back any number of
+    /// Run the prepare phase once: canonicalize, normalize, build the CSR
+    /// in the requested storage format, and bind the SpMV engine (typed
+    /// sharded native pool, or PJRT when requested, available, and the
+    /// format is f32). The result can back any number of
     /// [`Solver::solve_prepared_with_k`] calls against the same matrix.
     pub fn prepare(&mut self, matrix: &CooMatrix) -> Result<PreparedMatrix> {
         anyhow::ensure!(matrix.nrows == matrix.ncols, "matrix must be square");
@@ -235,7 +287,15 @@ impl Solver {
         let fro = if self.opts.skip_normalize { 1.0 } else { normalize_frobenius(&mut m) };
         let n = m.nrows;
         let nnz = m.nnz();
+        let precision = self.opts.precision;
         let (op, engine_used): (Box<dyn Operator>, &'static str) = match self.opts.engine {
+            Engine::Pjrt if precision != Precision::Float32 => {
+                log::warn!(
+                    "PJRT artifacts are f32-only; using the native {} datapath",
+                    precision.name()
+                );
+                (self.native_operator(&m), "native")
+            }
             Engine::Pjrt => match self.try_pjrt_operator(&m) {
                 Ok(op) => (op, "pjrt"),
                 Err(e) => {
@@ -245,7 +305,7 @@ impl Solver {
             },
             Engine::Native => (self.native_operator(&m), "native"),
         };
-        Ok(PreparedMatrix { op, fro, n, nnz, engine_used, prepare_s: sw.lap_s() })
+        Ok(PreparedMatrix { op, fro, n, nnz, precision, engine_used, prepare_s: sw.lap_s() })
     }
 
     /// Solve the Top-K eigenproblem for a symmetric sparse matrix.
@@ -268,52 +328,79 @@ impl Solver {
     /// Solve against an already-prepared matrix for a caller-chosen K
     /// (the multi-K fast path: Lanczos, Jacobi and lift re-run; the O(nnz)
     /// preparation and the engine binding are shared).
+    ///
+    /// The whole phase pipeline runs inside one [`crate::with_precision!`]
+    /// dispatch so the Lanczos basis stays in storage format from the
+    /// recurrence through eigenvector lift.
     pub fn solve_prepared_with_k(&mut self, prep: &PreparedMatrix, k: usize) -> Result<Solution> {
         anyhow::ensure!(k >= 1 && k <= prep.n, "bad k");
         let mut sw = Stopwatch::start();
         let mut metrics = SolveMetrics {
             prepare_s: prep.prepare_s,
             engine_used: prep.engine_used,
+            precision: prep.precision.name(),
+            value_bytes: prep.value_bytes(),
+            packet_capacity: prep.packet_capacity(),
             ..Default::default()
         };
 
-        // ---- Phase 1: Lanczos --------------------------------------------
         let lopts = LanczosOptions {
             k,
             reorth: self.opts.reorth,
-            precision: self.opts.precision,
+            precision: prep.precision,
             v1: None,
         };
-        let lres = lanczos(prep.op.as_ref(), &lopts);
-        metrics.lanczos_s = sw.lap_s();
-        metrics.spmv_count = lres.spmv_count;
-        metrics.breakdown_at = lres.breakdown_at;
+        let (eigenvalues, eigenvectors) = crate::with_precision!(prep.precision, V => {
+            // ---- Phase 1: Lanczos (typed basis storage) ------------------
+            let lres: LanczosResult<V> = lanczos_typed(prep.op.as_ref(), &lopts);
+            metrics.lanczos_s = sw.lap_s();
+            metrics.spmv_count = lres.spmv_count;
+            metrics.breakdown_at = lres.breakdown_at;
+            metrics.basis_bytes = lres.basis_value_bytes();
+            metrics.packets_streamed = lres.spmv_count * prep.packets_per_apply();
+            metrics.bytes_streamed = lres.spmv_count * prep.bytes_per_apply();
 
-        // ---- Phase 2: Jacobi ----------------------------------------------
-        let eig = jacobi_eigen(&lres.tridiag, self.opts.jacobi, 1e-10);
-        metrics.jacobi_s = sw.lap_s();
-        metrics.systolic = eig.stats;
+            // ---- Phase 2: Jacobi -----------------------------------------
+            let eig = jacobi_eigen(&lres.tridiag, self.opts.jacobi, 1e-10);
+            metrics.jacobi_s = sw.lap_s();
+            metrics.systolic = eig.stats;
 
-        // ---- Lift + rescale -----------------------------------------------
-        let k_eff = lres.k();
-        let mut eigenvalues = Vec::with_capacity(k_eff);
-        let mut eigenvectors = Vec::with_capacity(k_eff);
-        for j in 0..k_eff {
-            eigenvalues.push(eig.eigenvalues[j] * prep.fro);
-            eigenvectors.push(lift_eigenvector(&lres.basis, &eig.eigenvectors.col(j)));
-        }
-        metrics.lift_s = sw.lap_s();
+            // ---- Lift + rescale ------------------------------------------
+            let k_eff = lres.k();
+            let mut eigenvalues = Vec::with_capacity(k_eff);
+            let mut eigenvectors = Vec::with_capacity(k_eff);
+            for j in 0..k_eff {
+                eigenvalues.push(eig.eigenvalues[j] * prep.fro);
+                eigenvectors.push(lift_eigenvector_typed(&lres.basis, &eig.eigenvectors.col(j)));
+            }
+            metrics.lift_s = sw.lap_s();
+            (eigenvalues, eigenvectors)
+        });
 
         Ok(Solution { eigenvalues, eigenvectors, frobenius_norm: prep.fro, metrics })
     }
 
     fn native_operator(&self, m: &CooMatrix) -> Box<dyn Operator> {
-        Box::new(ShardedSpmv::new(
-            Arc::new(m.to_csr()),
-            self.opts.cus,
-            self.opts.partition,
-            Arc::clone(&self.pool),
-        ))
+        let csr = m.to_csr();
+        // The f32 path streams the CSR as built; only fixed-point formats
+        // pay the O(nnz) re-storage pass.
+        if self.opts.precision == Precision::Float32 {
+            return Box::new(ShardedSpmv::new(
+                Arc::new(csr),
+                self.opts.cus,
+                self.opts.partition,
+                Arc::clone(&self.pool),
+            ));
+        }
+        crate::with_precision!(self.opts.precision, V => {
+            let typed: CsrMatrix<V> = csr.to_precision::<V>();
+            Box::new(ShardedSpmv::new(
+                Arc::new(typed),
+                self.opts.cus,
+                self.opts.partition,
+                Arc::clone(&self.pool),
+            )) as Box<dyn Operator>
+        })
     }
 
     fn try_pjrt_operator(&mut self, m: &CooMatrix) -> Result<Box<dyn Operator>> {
@@ -370,6 +457,13 @@ mod tests {
         assert_eq!(sol.metrics.engine_used, "native");
         assert!(sol.metrics.total_s() > 0.0);
         assert!(sol.metrics.systolic.steps > 0);
+        // Datapath telemetry: f32 baseline figures.
+        assert_eq!(sol.metrics.precision, "f32");
+        assert_eq!(sol.metrics.packet_capacity, 5);
+        assert!(sol.metrics.value_bytes > 0);
+        assert!(sol.metrics.packets_streamed > 0);
+        assert_eq!(sol.metrics.bytes_streamed, sol.metrics.packets_streamed * 64);
+        assert!(sol.metrics.basis_bytes > 0);
     }
 
     #[test]
@@ -433,5 +527,76 @@ mod tests {
         assert_eq!(a.eigenvalues, b.eigenvalues);
         assert_eq!(SolveOptions { cus: 5, threads: 0, ..Default::default() }.effective_threads(), 5);
         assert_eq!(SolveOptions { cus: 5, threads: 2, ..Default::default() }.effective_threads(), 2);
+    }
+
+    #[test]
+    fn q115_datapath_shrinks_storage_and_stays_accurate() {
+        // The acceptance-bar configuration: Q1.15 storage must *measurably*
+        // shrink the datapath — half the value bytes, 6 entries per line —
+        // while the solve stays usable at unit-test scale.
+        let m = graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 29);
+        let mut f = Solver::new(SolveOptions { k: 6, reorth: ReorthPolicy::Every, ..Default::default() });
+        let mut q = Solver::new(SolveOptions {
+            k: 6,
+            reorth: ReorthPolicy::Every,
+            precision: Precision::FixedQ1_15,
+            ..Default::default()
+        });
+        let sf = f.solve(&m).unwrap();
+        let sq = q.solve(&m).unwrap();
+        assert_eq!(sq.metrics.precision, "q1.15");
+        assert_eq!(sq.metrics.packet_capacity, 6);
+        assert_eq!(sf.metrics.packet_capacity, 5);
+        assert_eq!(sq.metrics.value_bytes * 2, sf.metrics.value_bytes, "16-bit words halve the array");
+        assert!(sq.metrics.packets_streamed < sf.metrics.packets_streamed);
+        assert!(sq.metrics.bytes_streamed < sf.metrics.bytes_streamed);
+        assert_eq!(sq.metrics.basis_bytes * 2, sf.metrics.basis_bytes);
+        // Eigenvalues track the f32 solve within quantization-scale error.
+        for i in 0..sq.k().min(sf.k()) {
+            assert!(
+                (sq.eigenvalues[i] - sf.eigenvalues[i]).abs() < 3e-2 * sf.eigenvalues[0].abs().max(1.0),
+                "pair {i}: {} vs {}",
+                sq.eigenvalues[i],
+                sf.eigenvalues[i]
+            );
+        }
+    }
+
+    #[test]
+    fn q131_prepared_solves_match_fresh_solves() {
+        // The multi-K fast path must hold in typed storage too.
+        let m = graphs::rmat(1 << 8, 8 << 8, 0.57, 0.19, 0.19, 33);
+        let opts = SolveOptions { precision: Precision::FixedQ1_31, ..Default::default() };
+        let mut solver = Solver::new(opts.clone());
+        let prep = solver.prepare(&m).unwrap();
+        assert_eq!(prep.precision(), Precision::FixedQ1_31);
+        assert_eq!(prep.value_bits(), 32);
+        assert_eq!(prep.packet_capacity(), 5);
+        for k in [2usize, 5] {
+            let fast = solver.solve_prepared_with_k(&prep, k).unwrap();
+            let mut fresh = Solver::new(SolveOptions { k, ..opts.clone() });
+            let slow = fresh.solve(&m).unwrap();
+            for i in 0..fast.k() {
+                assert!(
+                    (fast.eigenvalues[i] - slow.eigenvalues[i]).abs() < 1e-9,
+                    "k={k} pair {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_with_fixed_precision_falls_back_to_typed_native() {
+        let m = graphs::mesh2d(12, 12, 0.9, 0.02, 5);
+        let mut solver = Solver::new(SolveOptions {
+            k: 4,
+            engine: Engine::Pjrt,
+            precision: Precision::FixedQ1_15,
+            ..Default::default()
+        });
+        let sol = solver.solve(&m).unwrap();
+        assert_eq!(sol.metrics.engine_used, "native");
+        assert_eq!(sol.metrics.precision, "q1.15");
+        assert_eq!(sol.metrics.packet_capacity, 6);
     }
 }

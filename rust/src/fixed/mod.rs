@@ -1,4 +1,4 @@
-//! Fixed-point arithmetic (§III-A, §IV).
+//! Fixed-point arithmetic and the typed storage datapath (§III-A, §IV).
 //!
 //! After Frobenius normalization every matrix value, eigenvalue, and
 //! eigenvector entry lies in `(-1, 1)`, so the paper replaces float
@@ -13,6 +13,21 @@
 //!
 //! All types saturate instead of wrapping (what the DSP48 accumulators do)
 //! and use round-to-nearest on quantization.
+//!
+//! ## Storage types, not a rounding pass
+//!
+//! [`Dataword`] is the storage-scalar abstraction the typed datapath is
+//! generic over: `CooMatrix<V>` / `CsrMatrix<V>` value arrays,
+//! `CooPacket<V>` / `PacketStream<V>` HBM lines, `ShardedSpmv<V>` engines,
+//! and Lanczos basis vectors all store `V` directly. A 16-bit word halves
+//! the value-array bytes and raises the entries-per-512-bit-line count
+//! ([`packet_capacity`]: 6 at Q1.15 vs 5 at f32, §IV-B1), which is where
+//! the paper's bandwidth headroom comes from. Arithmetic still accumulates
+//! in float (dots, norms, SpMV partial sums) — the design's float units
+//! "where required to guarantee precise results" (§IV).
+//!
+//! [`Precision`] stays the *runtime* selector: the coordinator dispatches
+//! it onto the monomorphized kernels with [`with_precision!`].
 
 /// Behaviour shared by the Q formats.
 pub trait Fixed: Copy + Clone + PartialEq + std::fmt::Debug {
@@ -38,6 +53,69 @@ pub trait Fixed: Copy + Clone + PartialEq + std::fmt::Debug {
     /// mixed-precision Lanczos path applies).
     fn quantize(x: f64) -> f64 {
         Self::from_f64(x).to_f64()
+    }
+}
+
+/// A scalar that can live in the storage datapath: matrix value arrays,
+/// 512-bit HBM packets, and Lanczos basis vectors are generic over it.
+///
+/// Implemented by `f32` (the CPU-baseline word) and the three fixed-point
+/// formats. Conversions go through f32 because every compute kernel
+/// accumulates in float (§IV); a `Dataword` only decides how many bits a
+/// *stored* value occupies and how it rounds.
+pub trait Dataword: Copy + Clone + Default + PartialEq + Send + Sync + std::fmt::Debug + 'static {
+    /// Stored width in bits (32 for f32/Q1.31/Q2.30, 16 for Q1.15).
+    const BITS: u32;
+    /// Short format name for reports ("f32", "q1.31", ...).
+    const NAME: &'static str;
+    /// True for the saturating fixed-point formats.
+    const IS_FIXED: bool;
+    /// Quantize an f32 into this storage format (round-to-nearest,
+    /// saturating for the fixed formats; identity for f32).
+    fn from_f32(x: f32) -> Self;
+    /// Dequantize back to f32 (identity for f32).
+    fn to_f32(self) -> f32;
+    /// Quantization step: `2^-FRAC` for fixed formats, `f32::EPSILON` for
+    /// f32 (used to scale error bounds in the property tests).
+    fn ulp() -> f64;
+    /// Saturating add in the storage format (plain IEEE add for f32) —
+    /// what the DSP48 accumulators do on overflow.
+    fn sat_add(self, rhs: Self) -> Self;
+    /// Saturating multiply in the storage format (plain IEEE mul for f32).
+    fn sat_mul(self, rhs: Self) -> Self;
+    /// Bytes per stored value.
+    fn bytes() -> usize {
+        (Self::BITS / 8) as usize
+    }
+    /// The runtime [`Precision`] tag naming this format.
+    fn precision() -> Precision;
+}
+
+impl Dataword for f32 {
+    const BITS: u32 = 32;
+    const NAME: &'static str = "f32";
+    const IS_FIXED: bool = false;
+    #[inline]
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self
+    }
+    fn ulp() -> f64 {
+        f32::EPSILON as f64
+    }
+    #[inline]
+    fn sat_add(self, rhs: Self) -> Self {
+        self + rhs
+    }
+    #[inline]
+    fn sat_mul(self, rhs: Self) -> Self {
+        self * rhs
+    }
+    fn precision() -> Precision {
+        Precision::Float32
     }
 }
 
@@ -114,22 +192,74 @@ qformat!(
     Q1_15, i16, i32, 16, 15
 );
 
-/// Precision mode for the mixed-precision Lanczos datapath.
+macro_rules! dataword_fixed {
+    ($name:ident, $label:expr, $prec:expr) => {
+        impl Dataword for $name {
+            const BITS: u32 = <$name as Fixed>::BITS;
+            const NAME: &'static str = $label;
+            const IS_FIXED: bool = true;
+            #[inline]
+            fn from_f32(x: f32) -> Self {
+                <$name as Fixed>::from_f64(x as f64)
+            }
+            #[inline]
+            fn to_f32(self) -> f32 {
+                <$name as Fixed>::to_f64(self) as f32
+            }
+            fn ulp() -> f64 {
+                <$name as Fixed>::ulp()
+            }
+            #[inline]
+            fn sat_add(self, rhs: Self) -> Self {
+                <$name as Fixed>::add(self, rhs)
+            }
+            #[inline]
+            fn sat_mul(self, rhs: Self) -> Self {
+                <$name as Fixed>::mul(self, rhs)
+            }
+            fn precision() -> Precision {
+                $prec
+            }
+        }
+    };
+}
+
+dataword_fixed!(Q1_31, "q1.31", Precision::FixedQ1_31);
+dataword_fixed!(Q2_30, "q2.30", Precision::FixedQ2_30);
+dataword_fixed!(Q1_15, "q1.15", Precision::FixedQ1_15);
+
+/// Bits per HBM transaction line (§IV-B1): one 512-bit AXI beat.
+pub const LINE_BITS: u32 = 512;
+
+/// COO entries per 512-bit line when values are stored in `value_bits`-wide
+/// words: `floor(512 / (32 + 32 + value_bits))` — row and column indices
+/// stay 32-bit. 5 entries at f32 (480/512 bits used), 6 at Q1.15 (§IV-B1).
+pub const fn packet_capacity(value_bits: u32) -> usize {
+    (LINE_BITS / (32 + 32 + value_bits)) as usize
+}
+
+/// Precision mode for the mixed-precision datapath: the runtime-dispatch
+/// selector over the monomorphized [`Dataword`] kernels (see
+/// [`with_precision!`]).
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
 pub enum Precision {
     /// IEEE f32 everywhere (the CPU baseline datapath).
     Float32,
-    /// Quantize Lanczos vectors to Q1.31 after each update (the paper's
+    /// Store matrix values and Lanczos vectors as Q1.31 (the paper's
     /// device datapath; dots/norms still accumulate in float, matching the
     /// design's float units "where required to guarantee precise results").
     FixedQ1_31,
     /// Q2.30 variant (headroom, one fewer fractional bit).
     FixedQ2_30,
-    /// Q1.15 variant (16-bit, for the ablation's accuracy cliff).
+    /// Q1.15 variant (16-bit: half the value bytes, 6 entries per line).
     FixedQ1_15,
 }
 
 impl Precision {
+    /// All four formats, in decreasing-precision order (ablation sweeps).
+    pub const ALL: [Precision; 4] =
+        [Precision::Float32, Precision::FixedQ1_31, Precision::FixedQ2_30, Precision::FixedQ1_15];
+
     /// Quantize one value under this mode.
     #[inline]
     pub fn quantize(self, x: f32) -> f32 {
@@ -160,6 +290,60 @@ impl Precision {
             Precision::FixedQ1_15 => "q1.15",
         }
     }
+
+    /// Stored bits per value in this format.
+    pub fn bits(self) -> u32 {
+        match self {
+            Precision::Float32 => <f32 as Dataword>::BITS,
+            Precision::FixedQ1_31 => <Q1_31 as Dataword>::BITS,
+            Precision::FixedQ2_30 => <Q2_30 as Dataword>::BITS,
+            Precision::FixedQ1_15 => <Q1_15 as Dataword>::BITS,
+        }
+    }
+
+    /// COO entries per 512-bit HBM line in this format (§IV-B1).
+    pub fn packet_capacity(self) -> usize {
+        packet_capacity(self.bits())
+    }
+
+    /// Bytes a value array of `nnz` entries occupies in this format.
+    pub fn value_bytes(self, nnz: usize) -> usize {
+        nnz * (self.bits() as usize / 8)
+    }
+}
+
+/// Dispatch a runtime [`Precision`] onto code generic over a
+/// [`Dataword`] storage type: inside `$body`, `$V` names the concrete
+/// scalar type (`f32`, [`Q1_31`], [`Q2_30`], or [`Q1_15`]).
+///
+/// ```
+/// use topk_eigen::fixed::{Dataword, Precision};
+/// let p = Precision::FixedQ1_15;
+/// let bytes = topk_eigen::with_precision!(p, V => V::bytes());
+/// assert_eq!(bytes, 2);
+/// ```
+#[macro_export]
+macro_rules! with_precision {
+    ($p:expr, $V:ident => $body:expr) => {{
+        match $p {
+            $crate::fixed::Precision::Float32 => {
+                type $V = f32;
+                $body
+            }
+            $crate::fixed::Precision::FixedQ1_31 => {
+                type $V = $crate::fixed::Q1_31;
+                $body
+            }
+            $crate::fixed::Precision::FixedQ2_30 => {
+                type $V = $crate::fixed::Q2_30;
+                $body
+            }
+            $crate::fixed::Precision::FixedQ1_15 => {
+                type $V = $crate::fixed::Q1_15;
+                $body
+            }
+        }
+    }};
 }
 
 #[cfg(test)]
@@ -170,7 +354,7 @@ mod tests {
     fn q131_round_trip_error_is_sub_ulp() {
         for &x in &[0.0, 0.5, -0.25, 0.999_999, -0.999_999, 1e-9] {
             let err = (Q1_31::quantize(x) - x).abs();
-            assert!(err <= Q1_31::ulp() / 2.0 + 1e-18, "x={x} err={err}");
+            assert!(err <= <Q1_31 as Fixed>::ulp() / 2.0 + 1e-18, "x={x} err={err}");
         }
     }
 
@@ -183,7 +367,7 @@ mod tests {
 
     #[test]
     fn q230_has_headroom() {
-        assert!((Q2_30::quantize(1.5) - 1.5).abs() < Q2_30::ulp());
+        assert!((Q2_30::quantize(1.5) - 1.5).abs() < <Q2_30 as Fixed>::ulp());
         assert_eq!(Q2_30::from_f64(2.5).0, i32::MAX);
     }
 
@@ -191,11 +375,11 @@ mod tests {
     fn mul_matches_float_product() {
         let a = Q1_31::from_f64(0.5);
         let b = Q1_31::from_f64(-0.25);
-        assert!((a.mul(b).to_f64() - -0.125).abs() <= Q1_31::ulp());
+        assert!((a.mul(b).to_f64() - -0.125).abs() <= <Q1_31 as Fixed>::ulp());
         // Q1.15 coarser.
         let c = Q1_15::from_f64(0.3);
         let d = Q1_15::from_f64(0.7);
-        assert!((c.mul(d).to_f64() - 0.21).abs() <= 2.0 * Q1_15::ulp());
+        assert!((c.mul(d).to_f64() - 0.21).abs() <= 2.0 * <Q1_15 as Fixed>::ulp());
     }
 
     #[test]
@@ -203,17 +387,17 @@ mod tests {
         let a = Q1_31::from_f64(0.9);
         let b = Q1_31::from_f64(0.9);
         let s = a.add(b).to_f64();
-        assert!((s - (1.0 - Q1_31::ulp())).abs() < 1e-9, "saturated sum was {s}");
+        assert!((s - (1.0 - <Q1_31 as Fixed>::ulp())).abs() < 1e-9, "saturated sum was {s}");
         // Q2.30 can represent 1.8.
         let s2 = Q2_30::from_f64(0.9).add(Q2_30::from_f64(0.9)).to_f64();
-        assert!((s2 - 1.8).abs() < 2.0 * Q2_30::ulp());
+        assert!((s2 - 1.8).abs() < 2.0 * <Q2_30 as Fixed>::ulp());
     }
 
     #[test]
     fn ulp_ordering_across_formats() {
-        assert!(Q1_31::ulp() < Q2_30::ulp());
-        assert!(Q2_30::ulp() < Q1_15::ulp());
-        assert_eq!(Q1_15::ulp(), 2.0f64.powi(-15));
+        assert!(<Q1_31 as Fixed>::ulp() < <Q2_30 as Fixed>::ulp());
+        assert!(<Q2_30 as Fixed>::ulp() < <Q1_15 as Fixed>::ulp());
+        assert_eq!(<Q1_15 as Fixed>::ulp(), 2.0f64.powi(-15));
     }
 
     #[test]
@@ -223,7 +407,7 @@ mod tests {
         Precision::FixedQ1_15.quantize_slice(&mut xs);
         assert!(xs.iter().zip(&orig).any(|(a, b)| a != b), "q1.15 must perturb");
         for (a, b) in xs.iter().zip(&orig) {
-            assert!((a - b).abs() <= Q1_15::ulp() as f32);
+            assert!((a - b).abs() <= <Q1_15 as Fixed>::ulp() as f32);
         }
         let mut ys = orig.clone();
         Precision::Float32.quantize_slice(&mut ys);
@@ -240,5 +424,81 @@ mod tests {
             e31 += (Q1_31::quantize(x) - x).abs();
         }
         assert!(e31 < e15 / 1000.0, "e31={e31} e15={e15}");
+    }
+
+    /// Generic round-trip check usable for any storage scalar.
+    fn roundtrip_within_ulp<V: Dataword>() {
+        for &x in &[0.0f32, 0.5, -0.25, 0.874_301, -0.999_9, 3.1e-5] {
+            let rt = V::from_f32(x).to_f32();
+            assert!(((rt - x).abs() as f64) <= V::ulp(), "{}: x={x} rt={rt}", V::NAME);
+        }
+    }
+
+    #[test]
+    fn dataword_round_trips_all_formats() {
+        roundtrip_within_ulp::<f32>();
+        roundtrip_within_ulp::<Q1_31>();
+        roundtrip_within_ulp::<Q2_30>();
+        roundtrip_within_ulp::<Q1_15>();
+    }
+
+    #[test]
+    fn dataword_f32_is_identity() {
+        for &x in &[0.1f32, -0.7, 1e-20, 123.456] {
+            assert_eq!(<f32 as Dataword>::from_f32(x).to_bits(), x.to_bits());
+        }
+        assert!(!<f32 as Dataword>::IS_FIXED);
+        assert!(<Q1_15 as Dataword>::IS_FIXED);
+    }
+
+    #[test]
+    fn dataword_matches_fixed_quantization() {
+        // The typed storage path and the legacy rounding pass must agree.
+        for &x in &[0.123_456_789f32, -0.987_654_32, 0.000_244_14] {
+            assert_eq!(<Q1_31 as Dataword>::from_f32(x).to_f32(), Precision::FixedQ1_31.quantize(x));
+            assert_eq!(<Q1_15 as Dataword>::from_f32(x).to_f32(), Precision::FixedQ1_15.quantize(x));
+        }
+    }
+
+    #[test]
+    fn dataword_sat_ops_saturate() {
+        let big = <Q1_15 as Dataword>::from_f32(0.9);
+        let sum = big.sat_add(big).to_f32() as f64;
+        assert!((sum - (1.0 - <Q1_15 as Fixed>::ulp())).abs() < 1e-4, "sum={sum}");
+        let prod = big.sat_mul(big).to_f32() as f64;
+        assert!((prod - 0.81).abs() <= 2.0 * <Q1_15 as Fixed>::ulp(), "prod={prod}");
+        // f32 sat ops are plain IEEE ops.
+        assert_eq!(2.0f32.sat_add(3.0), 5.0);
+        assert_eq!(2.0f32.sat_mul(3.0), 6.0);
+    }
+
+    #[test]
+    fn packet_capacity_per_format() {
+        // §IV-B1: 5 COO entries per 512-bit line at 32-bit values; a 16-bit
+        // dataword fits 6 (80 bits per entry, 480/512 used).
+        assert_eq!(packet_capacity(32), 5);
+        assert_eq!(packet_capacity(16), 6);
+        assert_eq!(Precision::Float32.packet_capacity(), 5);
+        assert_eq!(Precision::FixedQ1_31.packet_capacity(), 5);
+        assert_eq!(Precision::FixedQ2_30.packet_capacity(), 5);
+        assert_eq!(Precision::FixedQ1_15.packet_capacity(), 6);
+    }
+
+    #[test]
+    fn value_bytes_halve_at_q115() {
+        assert_eq!(Precision::Float32.value_bytes(1000), 4000);
+        assert_eq!(Precision::FixedQ1_15.value_bytes(1000), 2000);
+        assert_eq!(<Q1_15 as Dataword>::bytes(), 2);
+        assert_eq!(<f32 as Dataword>::bytes(), 4);
+    }
+
+    #[test]
+    fn with_precision_dispatches_every_format() {
+        for p in Precision::ALL {
+            let (name, bits) = crate::with_precision!(p, V => (V::NAME, V::BITS));
+            assert_eq!(name, p.name());
+            assert_eq!(bits, p.bits());
+            assert_eq!(crate::with_precision!(p, V => V::precision()), p);
+        }
     }
 }

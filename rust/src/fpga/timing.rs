@@ -81,6 +81,14 @@ impl Default for FpgaTimingModel {
 }
 
 impl FpgaTimingModel {
+    /// Model the design point streaming matrix values in storage format
+    /// `p`: smaller datawords raise the entries-per-line count (§IV-B1),
+    /// e.g. 6 at Q1.15 vs 5 at f32, which shortens the SpMV phase by the
+    /// same ratio at fixed HBM bandwidth.
+    pub fn for_precision(p: crate::fixed::Precision) -> Self {
+        Self { packet_nnz: p.packet_capacity(), ..Default::default() }
+    }
+
     /// Cycles for one SpMV iteration given the per-CU shard sizes: the
     /// slowest CU (most packets) gates the merge.
     pub fn spmv_cycles(&self, shards: &[RowPartition]) -> usize {
@@ -244,6 +252,21 @@ mod tests {
         let m = FpgaTimingModel::default();
         // Within 20% of the ideal aggregate despite power-law skew.
         assert!(m.effective_read_gbps(&shards) > 0.8 * 71.87);
+    }
+
+    #[test]
+    fn q115_storage_shortens_the_spmv_phase() {
+        use crate::fixed::Precision;
+        let f = FpgaTimingModel::for_precision(Precision::Float32);
+        let q = FpgaTimingModel::for_precision(Precision::FixedQ1_15);
+        assert_eq!(f.packet_nnz, 5);
+        assert_eq!(q.packet_nnz, 6);
+        let shards = shards_for(30_000_000, 5);
+        let cf = f.spmv_cycles(&shards);
+        let cq = q.spmv_cycles(&shards);
+        // 6 entries per line: exactly 5/6 of the f32 cycle count on a
+        // capacity-divisible shard size.
+        assert_eq!(cq * 6, cf * 5, "cf={cf} cq={cq}");
     }
 
     #[test]

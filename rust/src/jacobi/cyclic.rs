@@ -51,7 +51,12 @@ pub(crate) fn apply_givens(a: &mut DenseMatrix, v: &mut DenseMatrix, p: usize, q
 
 /// Diagonalize symmetric `a`: returns `(diagonalized A, V, sweeps)` where
 /// `A_in = V A_diag V^T`.
-pub fn cyclic_jacobi(a: &DenseMatrix, mode: TrigMode, tol: f64, max_sweeps: usize) -> (DenseMatrix, DenseMatrix, usize) {
+pub fn cyclic_jacobi(
+    a: &DenseMatrix,
+    mode: TrigMode,
+    tol: f64,
+    max_sweeps: usize,
+) -> (DenseMatrix, DenseMatrix, usize) {
     assert!(a.is_symmetric(1e-9), "cyclic Jacobi expects symmetric input");
     let mut work = a.clone();
     let mut v = DenseMatrix::identity(a.nrows);

@@ -13,14 +13,25 @@
 //!   recommended cheap mode), or off.
 //! * Frobenius pre-normalization is expected upstream (see
 //!   [`crate::sparse::normalize_frobenius`]); with entries in `(-1,1)` the
-//!   mixed-precision datapath ([`crate::fixed::Precision`]) quantizes
-//!   Lanczos vectors exactly where the FPGA design uses fixed point.
+//!   mixed-precision datapath stores Lanczos vectors in the requested
+//!   [`Dataword`] format exactly where the FPGA design uses fixed point.
+//!
+//! ## Typed basis storage
+//!
+//! [`lanczos_typed`] is the monomorphized kernel: the basis is a
+//! `Vec<Vec<V>>` of storage words (16-bit at Q1.15 — half the f32 DDR
+//! footprint), while dots, norms and axpys accumulate in float via
+//! [`crate::linalg::dot_q`] / [`crate::linalg::axpy_q`], the design's
+//! float units "where required to guarantee precise results" (§IV).
+//! [`lanczos`] keeps the legacy f32-basis interface by dispatching
+//! [`LanczosOptions::precision`] over the typed kernels
+//! ([`crate::with_precision!`]) and dequantizing the result.
 
 mod operator;
 
 pub use operator::{CountingOperator, Operator, ShardedSpmv};
 
-use crate::fixed::Precision;
+use crate::fixed::{Dataword, Precision};
 use crate::linalg::{self, Tridiagonal};
 
 /// Reorthogonalization cadence (§III-A).
@@ -61,7 +72,9 @@ pub struct LanczosOptions {
     pub k: usize,
     /// Reorthogonalization cadence.
     pub reorth: ReorthPolicy,
-    /// Arithmetic mode for the Lanczos-vector datapath.
+    /// Storage format for the Lanczos-vector datapath ([`lanczos`]
+    /// dispatches it over the monomorphized typed kernels; ignored by
+    /// [`lanczos_typed`], whose type parameter is the format).
     pub precision: Precision,
     /// Starting vector: uniform `1/n^2`-style (the paper's init) when
     /// `None`, otherwise the provided vector (will be normalized).
@@ -74,14 +87,15 @@ impl Default for LanczosOptions {
     }
 }
 
-/// Lanczos output: `T`, the Lanczos basis, and diagnostics.
+/// Lanczos output: `T`, the Lanczos basis in storage format `V`, and
+/// diagnostics.
 #[derive(Clone, Debug)]
-pub struct LanczosResult {
+pub struct LanczosResult<V: Dataword = f32> {
     /// The K x K symmetric tridiagonal projection.
     pub tridiag: Tridiagonal,
     /// Lanczos vectors, `k` rows each of length `n` (the paper's `V`,
-    /// streamed to DDR on the device).
-    pub basis: Vec<Vec<f32>>,
+    /// streamed to DDR on the device), stored as `V` words.
+    pub basis: Vec<Vec<V>>,
     /// Iteration at which the recurrence broke down (`beta -> 0`), if any.
     /// A breakdown at iteration `i` truncates the output to `i` components
     /// — mathematically it means an exact invariant subspace was found.
@@ -90,19 +104,38 @@ pub struct LanczosResult {
     pub spmv_count: usize,
 }
 
-impl LanczosResult {
+impl<V: Dataword> LanczosResult<V> {
     /// Effective number of components produced.
     pub fn k(&self) -> usize {
         self.tridiag.k()
     }
+
+    /// Bytes the stored basis occupies (`k * n * V::bytes()`): halved at
+    /// Q1.15 relative to f32 — the DDR-side win of the typed datapath.
+    pub fn basis_value_bytes(&self) -> usize {
+        self.basis.iter().map(|row| row.len() * V::bytes()).sum()
+    }
+
+    /// Stored bits per basis word.
+    pub fn basis_bits(&self) -> u32 {
+        V::BITS
+    }
+
+    /// Row `i` of the basis dequantized to f32 (verification paths).
+    pub fn basis_row_f32(&self, i: usize) -> Vec<f32> {
+        self.basis[i].iter().map(|v| v.to_f32()).collect()
+    }
 }
 
-/// Run Algorithm 1 against an [`Operator`].
+/// Run Algorithm 1 against an [`Operator`], storing the basis in format
+/// `V`. This is the monomorphized kernel behind [`lanczos`]; the
+/// coordinator calls it directly (via [`crate::with_precision!`]) so basis
+/// vectors stay quantized end-to-end through eigenvector lift.
 ///
 /// Breakdown (`beta_i ≈ 0`) truncates the decomposition early rather than
 /// erroring: the subspace found so far is exactly invariant, which is a
 /// *better* answer, not a failure.
-pub fn lanczos<O: Operator + ?Sized>(op: &O, opts: &LanczosOptions) -> LanczosResult {
+pub fn lanczos_typed<V: Dataword, O: Operator + ?Sized>(op: &O, opts: &LanczosOptions) -> LanczosResult<V> {
     let n = op.n();
     let k = opts.k;
     assert!(k >= 1, "k must be >= 1");
@@ -120,26 +153,28 @@ pub fn lanczos<O: Operator + ?Sized>(op: &O, opts: &LanczosOptions) -> LanczosRe
     if linalg::normalize(&mut v) == 0.0 {
         panic!("starting vector must be non-zero");
     }
-    opts.precision.quantize_slice(&mut v);
+    // Quantize into storage; the working copy holds exactly the stored
+    // values so the recurrence and the basis agree bit-for-bit.
+    let mut vq: Vec<V> = v.iter().map(|&x| V::from_f32(x)).collect();
+    for (vi, q) in v.iter_mut().zip(&vq) {
+        *vi = q.to_f32();
+    }
 
     let mut v_prev = vec![0.0f32; n];
     let mut beta_prev = 0.0f64;
     let mut alphas: Vec<f64> = Vec::with_capacity(k);
     let mut betas: Vec<f64> = Vec::with_capacity(k.saturating_sub(1));
-    let mut basis: Vec<Vec<f32>> = Vec::with_capacity(k);
+    let mut basis: Vec<Vec<V>> = Vec::with_capacity(k);
     let mut w = vec![0.0f32; n];
     let mut breakdown_at = None;
     let mut spmv_count = 0usize;
 
     // Breakdown tolerance scaled to the arithmetic in use: fixed-point
     // vectors cannot meaningfully normalize below ~sqrt(n)*ulp.
-    let bd_tol = match opts.precision {
-        Precision::Float32 => 1e-12,
-        _ => 1e-9,
-    };
+    let bd_tol = if V::IS_FIXED { 1e-9 } else { 1e-12 };
 
     for i in 0..k {
-        basis.push(v.clone());
+        basis.push(vq);
 
         // w = M v  (Algorithm 1 line 7; the memory-bound phase).
         op.apply(&v, &mut w);
@@ -158,11 +193,12 @@ pub fn lanczos<O: Operator + ?Sized>(op: &O, opts: &LanczosOptions) -> LanczosRe
         }
 
         // Reorthogonalization (line 10): modified Gram-Schmidt against the
-        // whole basis, on the paper's cadence.
+        // whole stored basis, on the paper's cadence. Dots and axpys
+        // dequantize the stored words on the fly, accumulating in float.
         if opts.reorth.due(i + 1) {
             for b in &basis {
-                let proj = linalg::dot(&w, b);
-                linalg::axpy(-(proj as f32), b, &mut w);
+                let proj = linalg::dot_q(&w, b);
+                linalg::axpy_q(-(proj as f32), b, &mut w);
             }
         }
 
@@ -177,8 +213,12 @@ pub fn lanczos<O: Operator + ?Sized>(op: &O, opts: &LanczosOptions) -> LanczosRe
         for (vi, wi) in v.iter_mut().zip(&w) {
             *vi = wi * inv;
         }
-        // Mixed precision: the device stores Lanczos vectors in Q-format.
-        opts.precision.quantize_slice(&mut v);
+        // Mixed precision: the device stores Lanczos vectors in V-format;
+        // the working copy mirrors the stored (rounded) values.
+        vq = v.iter().map(|&x| V::from_f32(x)).collect();
+        for (vi, q) in v.iter_mut().zip(&vq) {
+            *vi = q.to_f32();
+        }
         beta_prev = beta;
         betas.push(beta);
     }
@@ -191,22 +231,49 @@ pub fn lanczos<O: Operator + ?Sized>(op: &O, opts: &LanczosOptions) -> LanczosRe
     }
 }
 
+/// Run Algorithm 1 against an [`Operator`] with runtime-selected storage:
+/// dispatches [`LanczosOptions::precision`] over the monomorphized
+/// [`lanczos_typed`] kernels and returns the basis dequantized to f32 (the
+/// values are identical to the stored words — only the container widens).
+/// Callers that want the basis to *stay* in storage format use
+/// [`lanczos_typed`] directly, as the coordinator does.
+pub fn lanczos<O: Operator + ?Sized>(op: &O, opts: &LanczosOptions) -> LanczosResult {
+    crate::with_precision!(opts.precision, V => {
+        let r: LanczosResult<V> = lanczos_typed(op, opts);
+        LanczosResult {
+            tridiag: r.tridiag,
+            basis: r.basis.iter().map(|row| row.iter().map(|v| v.to_f32()).collect()).collect(),
+            breakdown_at: r.breakdown_at,
+            spmv_count: r.spmv_count,
+        }
+    })
+}
+
 /// Lift an eigenvector `x` of `T` back to an (approximate) eigenvector of
-/// `M`: `q = sum_i x_i v_i`, normalized.
-pub fn lift_eigenvector(basis: &[Vec<f32>], x: &[f64]) -> Vec<f32> {
+/// `M` through a typed basis: `q = sum_i x_i v_i`, normalized. The stored
+/// words dequantize at the multiplier input; accumulation is f32.
+pub fn lift_eigenvector_typed<V: Dataword>(basis: &[Vec<V>], x: &[f64]) -> Vec<f32> {
     assert_eq!(basis.len(), x.len(), "basis/eigvec size mismatch");
     let n = basis[0].len();
     let mut q = vec![0.0f32; n];
     for (xi, vi) in x.iter().zip(basis) {
-        linalg::axpy(*xi as f32, vi, &mut q);
+        linalg::axpy_q(*xi as f32, vi, &mut q);
     }
     linalg::normalize(&mut q);
     q
 }
 
+/// Lift an eigenvector `x` of `T` back to an (approximate) eigenvector of
+/// `M`: `q = sum_i x_i v_i`, normalized (f32-basis convenience wrapper of
+/// [`lift_eigenvector_typed`]).
+pub fn lift_eigenvector(basis: &[Vec<f32>], x: &[f64]) -> Vec<f32> {
+    lift_eigenvector_typed::<f32>(basis, x)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fixed::{Q1_15, Q1_31};
     use crate::sparse::CooMatrix;
 
     /// Diagonal test matrix: eigenvalues are exactly the diagonal.
@@ -237,7 +304,15 @@ mod tests {
         // With k == n and full reorth, T is orthogonally similar to M:
         // same spectrum (checked through Sturm counts).
         let m = path_laplacian(12);
-        let res = lanczos(&m, &LanczosOptions { k: 12, reorth: ReorthPolicy::Every, v1: Some((0..12).map(|i| 1.0 + (i as f32) * 0.1).collect()), ..Default::default() });
+        let res = lanczos(
+            &m,
+            &LanczosOptions {
+                k: 12,
+                reorth: ReorthPolicy::Every,
+                v1: Some((0..12).map(|i| 1.0 + (i as f32) * 0.1).collect()),
+                ..Default::default()
+            },
+        );
         assert!(res.breakdown_at.is_none());
         for j in 1..=12 {
             let lam = 2.0 - 2.0 * (std::f64::consts::PI * j as f64 / 13.0).cos();
@@ -334,6 +409,56 @@ mod tests {
                 fx.tridiag.alpha[i]
             );
         }
+    }
+
+    #[test]
+    fn typed_basis_is_stored_in_format_words() {
+        let m = path_laplacian(96);
+        let mut coo = m.to_coo();
+        crate::sparse::normalize_frobenius(&mut coo);
+        let m = coo.to_csr();
+        let opts = LanczosOptions { k: 6, reorth: ReorthPolicy::Every, ..Default::default() };
+        let r32: LanczosResult<Q1_31> = lanczos_typed(&m, &opts);
+        let r16: LanczosResult<Q1_15> = lanczos_typed(&m, &opts);
+        let rf: LanczosResult<f32> = lanczos_typed(&m, &opts);
+        // Storage: 16-bit basis is half the f32 bytes — the §IV-B2 claim.
+        assert_eq!(rf.basis_value_bytes(), 6 * 96 * 4);
+        assert_eq!(r16.basis_value_bytes(), 6 * 96 * 2);
+        assert_eq!(r32.basis_value_bytes(), 6 * 96 * 4);
+        assert_eq!(r16.basis_bits(), 16);
+        // Each stored row dequantizes to a unit vector within format error.
+        for i in 0..r32.k() {
+            let row = r32.basis_row_f32(i);
+            assert!((linalg::norm2(&row) - 1.0).abs() < 1e-4, "row {i}");
+        }
+        // The dispatching wrapper returns the same values the typed kernel
+        // stores, just widened to f32.
+        let wrapped = lanczos(
+            &m,
+            &LanczosOptions { precision: Precision::FixedQ1_31, ..opts.clone() },
+        );
+        for i in 0..wrapped.k() {
+            assert_eq!(wrapped.basis[i], r32.basis_row_f32(i), "row {i}");
+        }
+        assert_eq!(wrapped.tridiag.alpha, r32.tridiag.alpha);
+    }
+
+    #[test]
+    fn typed_lift_matches_f32_lift_on_f32_storage() {
+        let m = diag(&[0.8, 0.4, 0.2, 0.1]);
+        let res = lanczos(
+            &m,
+            &LanczosOptions {
+                k: 4,
+                reorth: ReorthPolicy::Every,
+                v1: Some(vec![1.0, 0.8, 0.6, 0.4]),
+                ..Default::default()
+            },
+        );
+        let (_, vecs) = crate::linalg::qr_algorithm_symmetric(&res.tridiag.to_dense(), 1e-14, 500);
+        let a = lift_eigenvector(&res.basis, &vecs.col(0));
+        let b = lift_eigenvector_typed::<f32>(&res.basis, &vecs.col(0));
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -4,15 +4,22 @@
 //! merges per-CU partial vectors (Figure 6 A-C). At the L3 layer that
 //! decomposition appears as [`Operator`] implementations:
 //!
-//! * [`CsrMatrix`] — single-threaded native kernel (the unit baseline).
+//! * [`CsrMatrix`] — single-threaded native kernel (the unit baseline),
+//!   generic over the stored value scalar.
 //! * [`crate::sparse::ShardedSpmv`] — one pool worker per CU over row
 //!   stripes; the structural twin of the hardware design (each stripe =
 //!   one CU, the scoped join = the Merge Unit). Re-exported from this
 //!   module for convenience.
 //! * `runtime::PjrtSpmv` — the AOT path: the same computation through a
 //!   Pallas/XLA artifact executed via PJRT (see `runtime`; requires the
-//!   `pjrt` feature).
+//!   `pjrt` feature; f32 only).
+//!
+//! Besides `apply`, operators report their storage datapath
+//! ([`Operator::value_bits`], [`Operator::packets_per_apply`],
+//! [`Operator::bytes_per_apply`]) so the coordinator's run reports show
+//! real bytes-moved numbers that differ between storage formats.
 
+use crate::fixed::{packet_capacity, Dataword};
 use crate::sparse::CsrMatrix;
 
 pub use crate::sparse::ShardedSpmv;
@@ -25,14 +32,32 @@ pub trait Operator: Send + Sync {
     fn nnz(&self) -> usize;
     /// Apply: write `M x` into `y` (`y.len() == n()`).
     fn apply(&self, x: &[f32], y: &mut [f32]);
+    /// Stored bits per matrix value (32 unless the operator streams a
+    /// reduced-precision format).
+    fn value_bits(&self) -> u32 {
+        32
+    }
+    /// 512-bit HBM lines one `apply` streams for the matrix (§IV-B1
+    /// packet convention; implementations with per-CU shards account tail
+    /// lines per shard).
+    fn packets_per_apply(&self) -> usize {
+        self.nnz().div_ceil(packet_capacity(self.value_bits()))
+    }
+    /// Matrix-stream bytes one `apply` moves: whole 64-byte lines.
+    fn bytes_per_apply(&self) -> usize {
+        self.packets_per_apply() * (crate::fixed::LINE_BITS as usize / 8)
+    }
 }
 
-impl Operator for CsrMatrix {
+impl<V: Dataword> Operator for CsrMatrix<V> {
     fn n(&self) -> usize {
         self.nrows
     }
     fn nnz(&self) -> usize {
         CsrMatrix::nnz(self)
+    }
+    fn value_bits(&self) -> u32 {
+        V::BITS
     }
     fn apply(&self, x: &[f32], y: &mut [f32]) {
         self.spmv_into(x, y, 0, self.nrows);
@@ -64,6 +89,15 @@ impl<O: Operator> Operator for CountingOperator<O> {
     fn nnz(&self) -> usize {
         self.inner.nnz()
     }
+    fn value_bits(&self) -> u32 {
+        self.inner.value_bits()
+    }
+    fn packets_per_apply(&self) -> usize {
+        self.inner.packets_per_apply()
+    }
+    fn bytes_per_apply(&self) -> usize {
+        self.inner.bytes_per_apply()
+    }
     fn apply(&self, x: &[f32], y: &mut [f32]) {
         self.count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
         self.inner.apply(x, y);
@@ -73,6 +107,7 @@ impl<O: Operator> Operator for CountingOperator<O> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fixed::Q1_15;
     use crate::graphs;
 
     #[test]
@@ -95,5 +130,22 @@ mod tests {
         assert_eq!(y, m.spmv(&x));
         assert_eq!(Operator::n(&m), m.nrows);
         assert_eq!(Operator::nnz(&m), m.nnz());
+    }
+
+    #[test]
+    fn datapath_telemetry_scales_with_storage_width() {
+        let m = graphs::erdos_renyi(96, 480, 7).to_csr();
+        let q: CsrMatrix<Q1_15> = m.to_precision::<Q1_15>();
+        assert_eq!(Operator::value_bits(&m), 32);
+        assert_eq!(Operator::value_bits(&q), 16);
+        // 6 entries per line instead of 5: fewer packets, fewer bytes.
+        assert_eq!(Operator::packets_per_apply(&m), m.nnz().div_ceil(5));
+        assert_eq!(Operator::packets_per_apply(&q), m.nnz().div_ceil(6));
+        assert_eq!(Operator::bytes_per_apply(&m), m.nnz().div_ceil(5) * 64);
+        assert!(Operator::bytes_per_apply(&q) < Operator::bytes_per_apply(&m));
+        // The wrapper forwards the inner operator's datapath.
+        let c = CountingOperator::new(q);
+        assert_eq!(c.value_bits(), 16);
+        assert_eq!(c.packets_per_apply(), m.nnz().div_ceil(6));
     }
 }

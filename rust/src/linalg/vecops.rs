@@ -68,6 +68,38 @@ pub fn normalize(x: &mut [f32]) -> f64 {
     n
 }
 
+/// Dot product between an f32 working vector and a typed storage vector
+/// (the quantized Lanczos basis): the same 4-lane f64 accumulation as
+/// [`dot`], dequantizing each stored word at the multiplier input — the
+/// paper's "float where required" rule for dots and norms (§IV). For
+/// `V = f32` this is exactly [`dot`].
+pub fn dot_q<V: crate::fixed::Dataword>(a: &[f32], b: &[V]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let (a4, b4) = (&a[4 * i..4 * i + 4], &b[4 * i..4 * i + 4]);
+        acc[0] += a4[0] as f64 * b4[0].to_f32() as f64;
+        acc[1] += a4[1] as f64 * b4[1].to_f32() as f64;
+        acc[2] += a4[2] as f64 * b4[2].to_f32() as f64;
+        acc[3] += a4[3] as f64 * b4[3].to_f32() as f64;
+    }
+    let mut tail = 0.0f64;
+    for i in 4 * chunks..a.len() {
+        tail += a[i] as f64 * b[i].to_f32() as f64;
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// `y += alpha * x` where `x` is a typed storage vector, dequantized on
+/// the fly. For `V = f32` this is exactly [`axpy`].
+pub fn axpy_q<V: crate::fixed::Dataword>(alpha: f32, x: &[V], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi.to_f32();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,6 +148,36 @@ mod tests {
         let mut x = vec![0.0f32; 8];
         assert_eq!(normalize(&mut x), 0.0);
         assert!(x.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn typed_kernels_match_f32_kernels_exactly() {
+        // For V = f32, dot_q/axpy_q must be bitwise-identical to dot/axpy
+        // (same lane structure), so the f32 Lanczos path is unchanged.
+        let a: Vec<f32> = (0..103).map(|i| ((i as f32) * 0.11).sin()).collect();
+        let b: Vec<f32> = (0..103).map(|i| ((i as f32) * 0.07).cos()).collect();
+        assert_eq!(dot(&a, &b).to_bits(), dot_q(&a, &b).to_bits());
+        let mut y1 = a.clone();
+        let mut y2 = a.clone();
+        axpy(0.37, &b, &mut y1);
+        axpy_q(0.37, &b, &mut y2);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn typed_kernels_dequantize_within_ulp() {
+        use crate::fixed::{Dataword, Q1_15};
+        let a: Vec<f32> = (0..64).map(|i| ((i as f32) * 0.13).sin() * 0.8).collect();
+        let q: Vec<Q1_15> = a.iter().map(|&x| Q1_15::from_f32(x)).collect();
+        let exact = dot(&a, &a);
+        let approx = dot_q(&a, &q);
+        // 64 terms, |a| < 1: error bounded by 64 * ulp/2.
+        assert!((exact - approx).abs() <= 64.0 * <Q1_15 as Dataword>::ulp(), "{exact} vs {approx}");
+        let mut y = vec![0.0f32; 64];
+        axpy_q(1.0, &q, &mut y);
+        for (yi, ai) in y.iter().zip(&a) {
+            assert!(((yi - ai).abs() as f64) <= <Q1_15 as Dataword>::ulp());
+        }
     }
 
     #[test]

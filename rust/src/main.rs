@@ -7,6 +7,7 @@
 //! * `generate <id> <out.mtx>` — materialize a synthetic twin to a file.
 //! * `model <input>` — print the FPGA timing/resource/power model estimate.
 //! * `artifacts` — verify the AOT artifact set (`make artifacts`).
+#![allow(clippy::needless_range_loop, clippy::excessive_precision)]
 
 use topk_eigen::coordinator::{verify, Engine, SolveOptions, Solver};
 use topk_eigen::fixed::Precision;
@@ -150,6 +151,15 @@ fn cmd_solve(args: &[String]) -> i32 {
             mt.spmv_count,
             mt.systolic.sweeps,
         );
+        println!(
+            "datapath: precision={} entries/line={} value-bytes={} basis-bytes={} packets={} hbm-bytes={}",
+            mt.precision,
+            mt.packet_capacity,
+            mt.value_bytes,
+            mt.basis_bytes,
+            mt.packets_streamed,
+            mt.bytes_streamed,
+        );
         if let Some(b) = mt.breakdown_at {
             println!("note: Lanczos breakdown at iteration {b} (exact invariant subspace)");
         }
@@ -232,7 +242,8 @@ fn cmd_model(args: &[String]) -> i32 {
     let cmd = Command::new("topk-eigen model", "FPGA timing/resource/power estimate")
         .positional("input", "MatrixMarket file or catalog ID[@scale]")
         .opt("k", "number of eigenpairs", Some("16"))
-        .opt("cus", "SpMV compute units", Some("5"));
+        .opt("cus", "SpMV compute units", Some("5"))
+        .opt("precision", "matrix storage format: f32|q1.31|q2.30|q1.15", Some("f32"));
     let m = match cmd.parse(args) {
         Ok(m) => m,
         Err(e) => {
@@ -244,13 +255,18 @@ fn cmd_model(args: &[String]) -> i32 {
         let matrix = load_input(m.str("input").map_err(|e| e.to_string())?)?;
         let k: usize = m.parse("k").map_err(|e| e.to_string())?;
         let cus: usize = m.parse("cus").map_err(|e| e.to_string())?;
+        let precision = parse_precision(m.str("precision").unwrap())?;
         let csr = matrix.to_csr();
         let shards = partition_rows_balanced(&csr, cus, PartitionPolicy::EqualRows);
-        let model = FpgaTimingModel { cus, ..Default::default() };
+        let model = FpgaTimingModel { cus, ..FpgaTimingModel::for_precision(precision) };
         // Estimate Jacobi steps as (K-1) * ~log2(K)+3 sweeps.
         let steps = (k - 1) * ((k as f64).log2().ceil() as usize + 3);
         let t = model.solve_time(csr.nrows, &shards, k, ReorthPolicy::EveryN(2), steps);
-        println!("FPGA model (U280 @225MHz, {cus} CUs, K={k}):");
+        println!(
+            "FPGA model (U280 @225MHz, {cus} CUs, K={k}, {} values, {} nnz/line):",
+            precision.name(),
+            model.packet_nnz
+        );
         println!("  spmv   = {}", fmt_duration(t.spmv_s));
         println!("  memory = {}", fmt_duration(t.memory_s));
         println!("  vector = {}", fmt_duration(t.vector_s));

@@ -1,16 +1,22 @@
-//! Coordinate-format (COO) sparse matrix.
+//! Coordinate-format (COO) sparse matrix, generic over the stored scalar.
 //!
 //! COO is the paper's on-device layout: each non-zero is a `(row, col, val)`
-//! triple of 32-bit words, five of which fit a 512-bit HBM packet (§IV-B1).
-//! Unlike CSR, COO streaming has no indirect index chain, which is what
-//! makes the fully-pipelined dataflow SpMV possible.
+//! triple — two 32-bit indices plus one [`Dataword`]-wide value — packed
+//! into 512-bit HBM lines (§IV-B1). Unlike CSR, COO streaming has no
+//! indirect index chain, which is what makes the fully-pipelined dataflow
+//! SpMV possible. The value array is generic over [`Dataword`] so the
+//! mixed-precision datapath stores 16-bit words as 16 bits, not as rounded
+//! f32s; arithmetic (duplicate merging, the `spmv_ref` oracle) still
+//! accumulates in float, matching the design's float units (§IV).
 
+use crate::fixed::Dataword;
 use crate::sparse::CsrMatrix;
 
-/// Sparse matrix in coordinate format with `f32` values (the paper's device
-/// word is 32 bits).
+/// Sparse matrix in coordinate format. `V` is the stored value scalar
+/// (default `f32`, the paper's host word; `Q1_31`/`Q2_30`/`Q1_15` for the
+/// device datapath).
 #[derive(Clone, Debug, Default, PartialEq)]
-pub struct CooMatrix {
+pub struct CooMatrix<V: Dataword = f32> {
     /// Number of rows.
     pub nrows: usize,
     /// Number of columns.
@@ -19,11 +25,11 @@ pub struct CooMatrix {
     pub rows: Vec<u32>,
     /// Column index per non-zero.
     pub cols: Vec<u32>,
-    /// Value per non-zero.
-    pub vals: Vec<f32>,
+    /// Value per non-zero, stored in format `V`.
+    pub vals: Vec<V>,
 }
 
-impl CooMatrix {
+impl<V: Dataword> CooMatrix<V> {
     /// Empty `nrows x ncols` matrix.
     pub fn new(nrows: usize, ncols: usize) -> Self {
         Self { nrows, ncols, rows: Vec::new(), cols: Vec::new(), vals: Vec::new() }
@@ -31,7 +37,7 @@ impl CooMatrix {
 
     /// Build from parallel triplet arrays. Panics if lengths differ or any
     /// index is out of bounds.
-    pub fn from_triplets(nrows: usize, ncols: usize, rows: Vec<u32>, cols: Vec<u32>, vals: Vec<f32>) -> Self {
+    pub fn from_triplets(nrows: usize, ncols: usize, rows: Vec<u32>, cols: Vec<u32>, vals: Vec<V>) -> Self {
         assert_eq!(rows.len(), cols.len());
         assert_eq!(rows.len(), vals.len());
         debug_assert!(rows.iter().all(|&r| (r as usize) < nrows), "row index out of bounds");
@@ -45,7 +51,7 @@ impl CooMatrix {
     }
 
     /// Append one entry.
-    pub fn push(&mut self, r: usize, c: usize, v: f32) {
+    pub fn push(&mut self, r: usize, c: usize, v: V) {
         debug_assert!(r < self.nrows && c < self.ncols);
         self.rows.push(r as u32);
         self.cols.push(c as u32);
@@ -60,23 +66,46 @@ impl CooMatrix {
         self.nnz() as f64 / (self.nrows as f64 * self.ncols as f64)
     }
 
-    /// COO memory footprint in bytes (3 x 32-bit words per nnz, Table II
-    /// "Size" convention).
+    /// COO memory footprint in bytes: two 32-bit indices plus one
+    /// `V::BITS`-wide value per nnz (Table II "Size" convention — 12 bytes
+    /// per entry at f32, 10 at Q1.15).
     pub fn size_bytes(&self) -> usize {
-        self.nnz() * 12
+        self.nnz() * (8 + V::bytes())
     }
 
-    /// Sort entries by `(row, col)` and sum duplicates. Canonical form used
-    /// before CSR conversion and device packetization.
+    /// Bytes occupied by the value array alone — the quantity the
+    /// mixed-precision storage halves at Q1.15.
+    pub fn value_bytes(&self) -> usize {
+        self.nnz() * V::bytes()
+    }
+
+    /// Re-store the value array in format `W` (quantizing through f32),
+    /// keeping the index arrays identical. This is the storage-side
+    /// conversion the coordinator applies when a solve requests a
+    /// fixed-point datapath.
+    pub fn to_precision<W: Dataword>(&self) -> CooMatrix<W> {
+        CooMatrix {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            rows: self.rows.clone(),
+            cols: self.cols.clone(),
+            vals: self.vals.iter().map(|v| W::from_f32(v.to_f32())).collect(),
+        }
+    }
+
+    /// Sort entries by `(row, col)` and sum duplicates (float accumulation,
+    /// re-stored in `V`). Canonical form used before CSR conversion and
+    /// device packetization.
     pub fn canonicalize(&mut self) {
         let mut idx: Vec<usize> = (0..self.nnz()).collect();
         idx.sort_unstable_by_key(|&i| (self.rows[i], self.cols[i]));
-        let (mut rows, mut cols, mut vals) =
+        let (mut rows, mut cols, mut vals): (Vec<u32>, Vec<u32>, Vec<V>) =
             (Vec::with_capacity(self.nnz()), Vec::with_capacity(self.nnz()), Vec::with_capacity(self.nnz()));
         for &i in &idx {
             if let (Some(&lr), Some(&lc)) = (rows.last(), cols.last()) {
                 if lr == self.rows[i] && lc == self.cols[i] {
-                    *vals.last_mut().unwrap() += self.vals[i];
+                    let last = vals.last_mut().unwrap();
+                    *last = V::from_f32(last.to_f32() + self.vals[i].to_f32());
                     continue;
                 }
             }
@@ -99,7 +128,8 @@ impl CooMatrix {
         let mut cols = Vec::with_capacity(2 * n);
         let mut vals = Vec::with_capacity(2 * n);
         for i in 0..n {
-            let (r, c, v) = (self.rows[i], self.cols[i], self.vals[i] * 0.5);
+            let (r, c) = (self.rows[i], self.cols[i]);
+            let v = V::from_f32(self.vals[i].to_f32() * 0.5);
             rows.push(r);
             cols.push(c);
             vals.push(v);
@@ -113,18 +143,18 @@ impl CooMatrix {
         self.canonicalize();
     }
 
-    /// Dense `y = M x` reference (test oracle; O(nnz)).
+    /// Dense `y = M x` reference (test oracle; O(nnz), f32 accumulation).
     pub fn spmv_ref(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.ncols);
         let mut y = vec![0.0f32; self.nrows];
         for i in 0..self.nnz() {
-            y[self.rows[i] as usize] += self.vals[i] * x[self.cols[i] as usize];
+            y[self.rows[i] as usize] += self.vals[i].to_f32() * x[self.cols[i] as usize];
         }
         y
     }
 
     /// Convert to CSR (canonicalizes a copy first).
-    pub fn to_csr(&self) -> CsrMatrix {
+    pub fn to_csr(&self) -> CsrMatrix<V> {
         let mut c = self.clone();
         c.canonicalize();
         CsrMatrix::from_canonical_coo(&c)
@@ -138,7 +168,7 @@ impl CooMatrix {
         }
         let mut map = std::collections::HashMap::with_capacity(self.nnz());
         for i in 0..self.nnz() {
-            *map.entry((self.rows[i], self.cols[i])).or_insert(0.0f32) += self.vals[i];
+            *map.entry((self.rows[i], self.cols[i])).or_insert(0.0f32) += self.vals[i].to_f32();
         }
         map.iter().all(|(&(r, c), &v)| {
             let vt = map.get(&(c, r)).copied().unwrap_or(0.0);
@@ -150,6 +180,7 @@ impl CooMatrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fixed::Q1_15;
 
     fn sample() -> CooMatrix {
         // [[1, 2, 0],
@@ -173,7 +204,7 @@ mod tests {
 
     #[test]
     fn canonicalize_sorts_and_merges() {
-        let mut m = CooMatrix::from_triplets(
+        let mut m: CooMatrix = CooMatrix::from_triplets(
             2,
             2,
             vec![1, 0, 1, 0],
@@ -209,6 +240,7 @@ mod tests {
         let m = sample();
         assert!((m.density() - 6.0 / 9.0).abs() < 1e-12);
         assert_eq!(m.size_bytes(), 72);
+        assert_eq!(m.value_bytes(), 24);
     }
 
     #[test]
@@ -221,9 +253,45 @@ mod tests {
 
     #[test]
     fn empty_matrix_is_fine() {
-        let m = CooMatrix::new(4, 4);
+        let m: CooMatrix = CooMatrix::new(4, 4);
         assert_eq!(m.nnz(), 0);
         assert_eq!(m.spmv_ref(&[1.0; 4]), vec![0.0; 4]);
         assert_eq!(m.density(), 0.0);
+    }
+
+    #[test]
+    fn typed_storage_shrinks_value_array() {
+        // Values bounded in (-1, 1) — the post-normalization regime.
+        let mut m: CooMatrix = CooMatrix::new(8, 8);
+        for i in 0..8 {
+            m.push(i, (i + 3) % 8, (i as f32 / 10.0) - 0.35);
+        }
+        let q: CooMatrix<Q1_15> = m.to_precision::<Q1_15>();
+        assert_eq!(q.nnz(), m.nnz());
+        assert_eq!(q.value_bytes(), m.value_bytes() / 2, "Q1.15 must halve value bytes");
+        assert_eq!(q.size_bytes(), m.nnz() * 10);
+        // Quantization stays within one step; indices are untouched.
+        assert_eq!(q.rows, m.rows);
+        assert_eq!(q.cols, m.cols);
+        for (qv, fv) in q.vals.iter().zip(&m.vals) {
+            assert!(((qv.to_f32() - fv).abs() as f64) <= <Q1_15 as Dataword>::ulp());
+        }
+    }
+
+    #[test]
+    fn typed_spmv_ref_tracks_f32_within_ulp() {
+        let mut m: CooMatrix = CooMatrix::new(16, 16);
+        for i in 0..16 {
+            m.push(i, i, 0.5 - (i as f32) / 40.0);
+            m.push(i, (i + 1) % 16, 0.125);
+        }
+        let x: Vec<f32> = (0..16).map(|i| ((i as f32) * 0.37).sin() * 0.9).collect();
+        let y_ref = m.spmv_ref(&x);
+        let q = m.to_precision::<Q1_15>();
+        let y_q = q.spmv_ref(&x);
+        for (a, b) in y_q.iter().zip(&y_ref) {
+            // Two entries per row, |x| < 1: error bounded by 2 * ulp/2.
+            assert!(((a - b).abs() as f64) <= 2.0 * <Q1_15 as Dataword>::ulp(), "{a} vs {b}");
+        }
     }
 }

@@ -1,16 +1,22 @@
-//! Compressed Sparse Row (CSR) matrix.
+//! Compressed Sparse Row (CSR) matrix, generic over the stored scalar.
 //!
 //! CSR is the host-side workhorse: the CPU baselines (IRAM, cyclic Jacobi
 //! verification) and the L3 native SpMV path use it because row-sliced CSR
 //! stripes shard cleanly across "CU" worker threads with zero write
 //! contention — each worker owns a disjoint output range, mirroring how the
 //! paper's Merge Unit concatenates per-CU partial vectors (§IV-B1).
+//!
+//! The value array stores a [`Dataword`] (`f32` by default), so the typed
+//! mixed-precision engines read 16-bit words from memory where the f32
+//! baseline reads 32 — the SpMV gather still multiplies and accumulates in
+//! f32, the paper's float-where-it-matters rule (§IV).
 
+use crate::fixed::Dataword;
 use crate::sparse::CooMatrix;
 
-/// CSR sparse matrix with `f32` values.
+/// CSR sparse matrix with values stored in format `V` (default `f32`).
 #[derive(Clone, Debug, Default, PartialEq)]
-pub struct CsrMatrix {
+pub struct CsrMatrix<V: Dataword = f32> {
     /// Number of rows.
     pub nrows: usize,
     /// Number of columns.
@@ -19,13 +25,13 @@ pub struct CsrMatrix {
     pub indptr: Vec<usize>,
     /// Column index per non-zero, grouped by row.
     pub indices: Vec<u32>,
-    /// Value per non-zero.
-    pub vals: Vec<f32>,
+    /// Value per non-zero, stored in format `V`.
+    pub vals: Vec<V>,
 }
 
-impl CsrMatrix {
+impl<V: Dataword> CsrMatrix<V> {
     /// Build from a canonical (row-major sorted, deduplicated) COO matrix.
-    pub fn from_canonical_coo(coo: &CooMatrix) -> Self {
+    pub fn from_canonical_coo(coo: &CooMatrix<V>) -> Self {
         let mut indptr = vec![0usize; coo.nrows + 1];
         for &r in &coo.rows {
             indptr[r as usize + 1] += 1;
@@ -47,8 +53,26 @@ impl CsrMatrix {
         self.vals.len()
     }
 
+    /// Bytes occupied by the value array alone (`nnz * V::bytes()`): the
+    /// quantity the 16-bit datapath halves relative to f32.
+    pub fn value_bytes(&self) -> usize {
+        self.nnz() * V::bytes()
+    }
+
+    /// Re-store the value array in format `W` (quantizing through f32),
+    /// keeping the index structure identical.
+    pub fn to_precision<W: Dataword>(&self) -> CsrMatrix<W> {
+        CsrMatrix {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            indptr: self.indptr.clone(),
+            indices: self.indices.clone(),
+            vals: self.vals.iter().map(|v| W::from_f32(v.to_f32())).collect(),
+        }
+    }
+
     /// Column indices and values of row `r`.
-    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+    pub fn row(&self, r: usize) -> (&[u32], &[V]) {
         let (a, b) = (self.indptr[r], self.indptr[r + 1]);
         (&self.indices[a..b], &self.vals[a..b])
     }
@@ -62,7 +86,8 @@ impl CsrMatrix {
     }
 
     /// `y[r0..r1] = (M x)[r0..r1]`: the row-stripe kernel each CU worker
-    /// runs. `y` must have length `nrows`.
+    /// runs. `y` must have length `nrows`. Values dequantize to f32 at the
+    /// multiplier input; the accumulator is f32 for every storage format.
     ///
     /// The inner gather loop uses unchecked indexing: `indptr` monotonicity
     /// and `indices < ncols` are structural invariants established at
@@ -82,7 +107,7 @@ impl CsrMatrix {
                 // SAFETY: indptr is monotone with last = nnz, so k < nnz;
                 // indices[k] < ncols <= x.len() by construction.
                 unsafe {
-                    acc += self.vals.get_unchecked(k)
+                    acc += self.vals.get_unchecked(k).to_f32()
                         * x.get_unchecked(*self.indices.get_unchecked(k) as usize);
                 }
             }
@@ -91,7 +116,7 @@ impl CsrMatrix {
     }
 
     /// Convert back to COO (canonical order).
-    pub fn to_coo(&self) -> CooMatrix {
+    pub fn to_coo(&self) -> CooMatrix<V> {
         let mut rows = Vec::with_capacity(self.nnz());
         for r in 0..self.nrows {
             for _ in self.indptr[r]..self.indptr[r + 1] {
@@ -102,7 +127,7 @@ impl CsrMatrix {
     }
 
     /// Transpose (O(nnz)).
-    pub fn transpose(&self) -> CsrMatrix {
+    pub fn transpose(&self) -> CsrMatrix<V> {
         let mut indptr = vec![0usize; self.ncols + 1];
         for &c in &self.indices {
             indptr[c as usize + 1] += 1;
@@ -112,7 +137,7 @@ impl CsrMatrix {
         }
         let mut cursor = indptr.clone();
         let mut indices = vec![0u32; self.nnz()];
-        let mut vals = vec![0.0f32; self.nnz()];
+        let mut vals = vec![V::default(); self.nnz()];
         for r in 0..self.nrows {
             for k in self.indptr[r]..self.indptr[r + 1] {
                 let c = self.indices[k] as usize;
@@ -125,7 +150,8 @@ impl CsrMatrix {
         CsrMatrix { nrows: self.ncols, ncols: self.nrows, indptr, indices, vals }
     }
 
-    /// Maximum row length (useful for padding decisions on the device path).
+    /// Maximum row length (useful for padding decisions on the device path
+    /// and for scaling quantization-error bounds in the property tests).
     pub fn max_row_nnz(&self) -> usize {
         (0..self.nrows).map(|r| self.indptr[r + 1] - self.indptr[r]).max().unwrap_or(0)
     }
@@ -157,6 +183,7 @@ impl CsrMatrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fixed::{Q1_15, Q1_31};
 
     fn sample() -> CsrMatrix {
         CooMatrix::from_triplets(
@@ -228,5 +255,31 @@ mod tests {
     fn max_row_nnz() {
         let m = sample();
         assert_eq!(m.max_row_nnz(), 2);
+    }
+
+    #[test]
+    fn typed_csr_halves_value_bytes_and_tracks_spmv() {
+        // Post-normalization regime: values in (-1, 1).
+        let mut coo: CooMatrix = CooMatrix::new(6, 6);
+        for i in 0..6 {
+            coo.push(i, i, 0.3 - (i as f32) * 0.05);
+            coo.push(i, (i + 2) % 6, -0.125);
+        }
+        let f = coo.to_csr();
+        let q15: CsrMatrix<Q1_15> = f.to_precision::<Q1_15>();
+        let q31: CsrMatrix<Q1_31> = f.to_precision::<Q1_31>();
+        assert_eq!(q15.value_bytes(), f.value_bytes() / 2, "16-bit words halve the array");
+        assert_eq!(q31.value_bytes(), f.value_bytes());
+        let x: Vec<f32> = (0..6).map(|i| ((i * 7 % 5) as f32) * 0.2 - 0.4).collect();
+        let y_ref = f.spmv(&x);
+        for (a, b) in q31.spmv(&x).iter().zip(&y_ref) {
+            assert!(((a - b).abs() as f64) <= 4.0 * <Q1_31 as Dataword>::ulp(), "{a} vs {b}");
+        }
+        for (a, b) in q15.spmv(&x).iter().zip(&y_ref) {
+            assert!(((a - b).abs() as f64) <= 4.0 * <Q1_15 as Dataword>::ulp(), "{a} vs {b}");
+        }
+        // Round-trips and stripes still work in typed storage.
+        assert_eq!(q15.to_coo().to_csr(), q15);
+        assert_eq!(q15.transpose().transpose(), q15);
     }
 }

@@ -1,7 +1,10 @@
-//! Sparse-matrix substrate: COO and CSR storage, MatrixMarket IO, Frobenius
+//! Sparse-matrix substrate: COO and CSR storage (generic over the
+//! [`crate::fixed::Dataword`] value scalar), MatrixMarket IO, Frobenius
 //! normalization, nnz-balanced partitioning, the 512-bit COO packet stream
-//! that models the paper's HBM read path (§IV-B), and the pool-parallel
-//! [`ShardedSpmv`] engine that executes one CU worker per row stripe.
+//! that models the paper's HBM read path (§IV-B) with per-format
+//! entries-per-line capacity, and the pool-parallel [`ShardedSpmv`] engine
+//! that executes one CU worker per row stripe over whichever storage format
+//! the solve requested.
 
 mod coo;
 mod csr;
@@ -15,6 +18,6 @@ pub use coo::CooMatrix;
 pub use csr::CsrMatrix;
 pub use mmio::{read_matrix_market, write_matrix_market, MmioError};
 pub use norm::{frobenius_norm, normalize_frobenius};
-pub use packet::{CooPacket, PacketStream, PACKET_NNZ, PACKET_BITS};
+pub use packet::{CooPacket, PacketStream, PACKET_BITS, PACKET_MAX_NNZ, PACKET_NNZ};
 pub use partition::{imbalance, partition_rows_balanced, PartitionPolicy, RowPartition};
 pub use sharded::ShardedSpmv;

@@ -1,58 +1,82 @@
-//! 512-bit COO packet stream — the paper's HBM read unit (§IV-B1).
+//! 512-bit COO packet stream — the paper's HBM read unit (§IV-B1) — generic
+//! over the stored value scalar.
 //!
-//! Each HBM transaction delivers a 512-bit line. A COO entry is three
-//! 32-bit words (row, col, val), so **5 entries** fit one line (480 of 512
-//! bits used). The Matrix Fetch Unit consumes one packet per clock cycle in
-//! maximum-length AXI bursts. The [`PacketStream`] iterator reproduces that
-//! granularity so both the native SpMV engine and the FPGA timing model can
-//! account per-packet work exactly as the hardware would.
+//! Each HBM transaction delivers a 512-bit line. A COO entry is two 32-bit
+//! indices plus one [`Dataword`]-wide value, so capacity depends on the
+//! storage format ([`packet_capacity`]): **5 entries** per line at f32
+//! (480/512 bits used) and **6 entries** at 16-bit Q1.15 (480/512 bits) —
+//! smaller datawords move more non-zeros per transaction, which is the
+//! §IV-B1 bandwidth argument for the mixed-precision datapath. The Matrix
+//! Fetch Unit consumes one packet per clock cycle in maximum-length AXI
+//! bursts; the [`PacketStream`] iterator reproduces that granularity so
+//! both the native SpMV engine and the FPGA timing model can account
+//! per-packet work exactly as the hardware would.
 
+use crate::fixed::{packet_capacity, Dataword};
 use crate::sparse::CooMatrix;
 
 /// Bits per HBM transaction line.
-pub const PACKET_BITS: usize = 512;
-/// COO entries per packet: floor(512 / (3 * 32)).
-pub const PACKET_NNZ: usize = 5;
+pub const PACKET_BITS: usize = crate::fixed::LINE_BITS as usize;
+/// COO entries per packet at the 32-bit baseline word:
+/// `floor(512 / (32 + 32 + 32))`.
+pub const PACKET_NNZ: usize = packet_capacity(32);
+/// Upper bound on entries per line across all supported datawords (6 at
+/// 16-bit values); sizes the fixed packet arrays.
+pub const PACKET_MAX_NNZ: usize = packet_capacity(16);
 
-/// One 512-bit line: up to 5 (row, col, val) entries; `len < 5` only for the
-/// final packet of a shard.
+/// One 512-bit line: up to [`CooPacket::capacity`] `(row, col, val)`
+/// entries; `len < capacity` only for the final packet of a shard.
 #[derive(Clone, Copy, Debug)]
-pub struct CooPacket {
+pub struct CooPacket<V: Dataword = f32> {
     /// Row indices (valid up to `len`).
-    pub rows: [u32; PACKET_NNZ],
+    pub rows: [u32; PACKET_MAX_NNZ],
     /// Column indices.
-    pub cols: [u32; PACKET_NNZ],
-    /// Values.
-    pub vals: [f32; PACKET_NNZ],
+    pub cols: [u32; PACKET_MAX_NNZ],
+    /// Values, stored in format `V`.
+    pub vals: [V; PACKET_MAX_NNZ],
     /// Number of valid entries in this packet.
     pub len: usize,
 }
 
-impl CooPacket {
-    /// Iterator over the valid entries.
+impl<V: Dataword> CooPacket<V> {
+    /// Entries a full packet of this format carries (§IV-B1): 5 at 32-bit
+    /// values, 6 at 16-bit.
+    pub const fn capacity() -> usize {
+        packet_capacity(V::BITS)
+    }
+
+    /// Iterator over the valid entries, values dequantized to f32 (the
+    /// multiplier input format).
     pub fn entries(&self) -> impl Iterator<Item = (u32, u32, f32)> + '_ {
+        (0..self.len).map(move |i| (self.rows[i], self.cols[i], self.vals[i].to_f32()))
+    }
+
+    /// Iterator over the valid entries in raw storage format.
+    pub fn entries_raw(&self) -> impl Iterator<Item = (u32, u32, V)> + '_ {
         (0..self.len).map(move |i| (self.rows[i], self.cols[i], self.vals[i]))
     }
 }
 
 /// Streaming packet view over a COO range (typically one CU's shard).
-pub struct PacketStream<'a> {
-    coo: &'a CooMatrix,
+pub struct PacketStream<'a, V: Dataword = f32> {
+    coo: &'a CooMatrix<V>,
     pos: usize,
     end: usize,
     width: usize,
 }
 
-impl<'a> PacketStream<'a> {
-    /// Stream the whole matrix with the standard 5-entry packets.
-    pub fn new(coo: &'a CooMatrix) -> Self {
-        Self::over_range(coo, 0, coo.nnz(), PACKET_NNZ)
+impl<'a, V: Dataword> PacketStream<'a, V> {
+    /// Stream the whole matrix at the format's full packet width
+    /// ([`CooPacket::capacity`]: 5 entries/line at f32, 6 at Q1.15).
+    pub fn new(coo: &'a CooMatrix<V>) -> Self {
+        Self::over_range(coo, 0, coo.nnz(), CooPacket::<V>::capacity())
     }
 
-    /// Stream `[start, end)` with a configurable packet width (the CU-count
-    /// / packet-width ablation uses widths 1..=15).
-    pub fn over_range(coo: &'a CooMatrix, start: usize, end: usize, width: usize) -> Self {
-        assert!(width >= 1 && width <= PACKET_NNZ * 3, "unreasonable packet width {width}");
+    /// Stream `[start, end)` with a configurable packet width up to
+    /// [`PACKET_MAX_NNZ`] (synthetic widths beyond a format's real capacity
+    /// belong to the timing model's `packet_nnz` knob, not the stream).
+    pub fn over_range(coo: &'a CooMatrix<V>, start: usize, end: usize, width: usize) -> Self {
+        assert!(width >= 1 && width <= PACKET_MAX_NNZ, "unreasonable packet width {width}");
         assert!(start <= end && end <= coo.nnz());
         Self { coo, pos: start, end, width }
     }
@@ -62,23 +86,30 @@ impl<'a> PacketStream<'a> {
         let n = self.end - self.pos;
         n.div_ceil(self.width)
     }
+
+    /// Bytes the stream moves over HBM, counting whole 64-byte lines (the
+    /// paper's accounting: a partially-filled line still costs a full
+    /// transaction).
+    pub fn line_bytes(&self) -> usize {
+        self.packet_count() * (PACKET_BITS / 8)
+    }
 }
 
-impl<'a> Iterator for PacketStream<'a> {
-    type Item = CooPacket;
+impl<'a, V: Dataword> Iterator for PacketStream<'a, V> {
+    type Item = CooPacket<V>;
 
-    fn next(&mut self) -> Option<CooPacket> {
+    fn next(&mut self) -> Option<CooPacket<V>> {
         if self.pos >= self.end {
             return None;
         }
         let take = self.width.min(self.end - self.pos);
         let mut p = CooPacket {
-            rows: [0; PACKET_NNZ],
-            cols: [0; PACKET_NNZ],
-            vals: [0.0; PACKET_NNZ],
+            rows: [0; PACKET_MAX_NNZ],
+            cols: [0; PACKET_MAX_NNZ],
+            vals: [V::default(); PACKET_MAX_NNZ],
             len: take,
         };
-        for i in 0..take {
+        for i in 0..p.len {
             p.rows[i] = self.coo.rows[self.pos + i];
             p.cols[i] = self.coo.cols[self.pos + i];
             p.vals[i] = self.coo.vals[self.pos + i];
@@ -91,9 +122,10 @@ impl<'a> Iterator for PacketStream<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fixed::{Q1_15, Q1_31};
 
     fn coo(n: usize) -> CooMatrix {
-        let mut m = CooMatrix::new(n, n);
+        let mut m: CooMatrix = CooMatrix::new(n, n);
         for i in 0..n {
             m.push(i, (i + 1) % n, i as f32);
         }
@@ -148,8 +180,57 @@ mod tests {
     }
 
     #[test]
-    fn five_entries_fit_512_bits() {
+    fn five_entries_fit_512_bits_at_f32() {
         assert!(PACKET_NNZ * 3 * 32 <= PACKET_BITS);
         assert_eq!(PACKET_NNZ, 5);
+        assert_eq!(CooPacket::<f32>::capacity(), 5);
+        assert_eq!(CooPacket::<Q1_31>::capacity(), 5);
+    }
+
+    #[test]
+    fn six_entries_fit_512_bits_at_q115() {
+        // §IV-B1: 32 + 32 + 16 = 80 bits per entry; 6 entries use 480 of
+        // 512 bits — one more non-zero per HBM transaction than f32.
+        assert_eq!(CooPacket::<Q1_15>::capacity(), 6);
+        assert!(CooPacket::<Q1_15>::capacity() * (32 + 32 + 16) <= PACKET_BITS);
+        assert_eq!(PACKET_MAX_NNZ, 6);
+    }
+
+    #[test]
+    fn typed_stream_needs_fewer_packets() {
+        // 30 nnz: 6 full f32 packets vs 5 full Q1.15 packets.
+        let m = coo(30);
+        let q: CooMatrix<Q1_15> = m.to_precision::<Q1_15>();
+        assert_eq!(PacketStream::new(&m).packet_count(), 6);
+        assert_eq!(PacketStream::new(&q).packet_count(), 5);
+        assert_eq!(PacketStream::new(&m).line_bytes(), 6 * 64);
+        assert_eq!(PacketStream::new(&q).line_bytes(), 5 * 64);
+    }
+
+    #[test]
+    fn typed_final_short_packet_and_roundtrip() {
+        // 20 nnz at capacity 6: packets of len 6,6,6,2 — the short tail
+        // must carry exactly the leftover entries, dequantized within ulp.
+        let mut m: CooMatrix = CooMatrix::new(20, 20);
+        for i in 0..20 {
+            m.push(i, (i + 1) % 20, (i as f32) / 32.0 - 0.3);
+        }
+        let q = m.to_precision::<Q1_15>();
+        let lens: Vec<usize> = PacketStream::new(&q).map(|p| p.len).collect();
+        assert_eq!(lens, vec![6, 6, 6, 2]);
+        let flat: Vec<(u32, u32, f32)> =
+            PacketStream::new(&q).flat_map(|p| p.entries().collect::<Vec<_>>()).collect();
+        assert_eq!(flat.len(), 20);
+        for (i, &(r, c, v)) in flat.iter().enumerate() {
+            assert_eq!(r as usize, i);
+            assert_eq!(c as usize, (i + 1) % 20);
+            let want = (i as f32) / 32.0 - 0.3;
+            assert!(((v - want).abs() as f64) <= <Q1_15 as Dataword>::ulp(), "{v} vs {want}");
+        }
+        // Raw entries expose the storage scalar itself.
+        let first = PacketStream::new(&q).next().unwrap();
+        let raw: Vec<(u32, u32, Q1_15)> = first.entries_raw().collect();
+        assert_eq!(raw.len(), 6);
+        assert_eq!(raw[0].2.to_f32(), flat[0].2);
     }
 }

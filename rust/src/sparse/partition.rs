@@ -38,8 +38,13 @@ pub enum PartitionPolicy {
 /// Split `m` into `shards` contiguous row ranges under `policy`.
 ///
 /// Always returns exactly `shards` partitions (possibly empty ones at the
-/// tail for tiny matrices) whose ranges tile `[0, nrows)` exactly.
-pub fn partition_rows_balanced(m: &CsrMatrix, shards: usize, policy: PartitionPolicy) -> Vec<RowPartition> {
+/// tail for tiny matrices) whose ranges tile `[0, nrows)` exactly. Generic
+/// over the stored scalar: partitioning reads only the index structure.
+pub fn partition_rows_balanced<V: crate::fixed::Dataword>(
+    m: &CsrMatrix<V>,
+    shards: usize,
+    policy: PartitionPolicy,
+) -> Vec<RowPartition> {
     assert!(shards >= 1);
     let nrows = m.nrows;
     let total_nnz = m.nnz();
@@ -107,7 +112,7 @@ mod tests {
 
     /// Matrix with a skewed row distribution: row 0 holds half the nnz.
     fn skewed(n: usize) -> CsrMatrix {
-        let mut m = CooMatrix::new(n, n);
+        let mut m: CooMatrix = CooMatrix::new(n, n);
         for c in 0..n {
             m.push(0, c, 1.0);
         }
@@ -154,7 +159,7 @@ mod tests {
         // Skew spread across rows (not one pathological row): the greedy
         // partitioner should land close to the ideal split.
         let n = 1000;
-        let mut m = CooMatrix::new(n, n);
+        let mut m: CooMatrix = CooMatrix::new(n, n);
         for r in 0..n {
             let deg = 1 + (r % 10);
             for d in 0..deg {

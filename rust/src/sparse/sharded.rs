@@ -1,4 +1,5 @@
-//! The pool-parallel sharded SpMV engine (§IV-B).
+//! The pool-parallel sharded SpMV engine (§IV-B), generic over the stored
+//! value scalar.
 //!
 //! The paper's Lanczos Core streams the COO matrix through **5 HBM-fed
 //! SpMV Compute Units** in parallel and concatenates their partial output
@@ -10,6 +11,12 @@
 //! * the scoped fork/join = the Merge Unit (output rows are disjoint, so
 //!   the "merge" is free — workers write non-overlapping `y` ranges).
 //!
+//! The engine is generic over [`Dataword`]: a Q1.15 instance stores the
+//! value array in 16-bit words (half the f32 bytes) and its per-CU packet
+//! accounting uses 6 entries per 512-bit line instead of 5 (§IV-B1) —
+//! [`ShardedSpmv::bytes_streamed`] exposes the resulting HBM traffic so
+//! precision/bandwidth trade-offs are measurable, not notional.
+//!
 //! Both partition policies are supported: [`PartitionPolicy::EqualRows`]
 //! reproduces the paper's scheme exactly, [`PartitionPolicy::BalancedNnz`]
 //! equalizes per-CU work on power-law graphs (the `ablation_cu_packets`
@@ -17,9 +24,11 @@
 //!
 //! Determinism: each output row is accumulated by exactly one worker in
 //! the same element order as the serial kernel, so sharded results are
-//! **bitwise identical** to [`CsrMatrix::spmv`] for any shard count or
-//! policy — `tests/sharded_spmv.rs` property-checks this.
+//! **bitwise identical** to [`CsrMatrix::spmv`] of the same storage format
+//! for any shard count or policy — `tests/sharded_spmv.rs` and
+//! `tests/typed_storage.rs` property-check this.
 
+use crate::fixed::{packet_capacity, Dataword};
 use crate::lanczos::Operator;
 use crate::sparse::{partition_rows_balanced, CsrMatrix, PartitionPolicy, RowPartition};
 use crate::util::pool::ThreadPool;
@@ -29,19 +38,19 @@ use std::sync::Arc;
 /// Multi-CU SpMV: row stripes dispatched to a thread pool, one worker per
 /// CU shard. Output regions are disjoint so no synchronization is needed
 /// beyond the final join — exactly the paper's partition + merge scheme.
-pub struct ShardedSpmv {
-    matrix: Arc<CsrMatrix>,
+pub struct ShardedSpmv<V: Dataword = f32> {
+    matrix: Arc<CsrMatrix<V>>,
     parts: Vec<RowPartition>,
     policy: PartitionPolicy,
     pool: Arc<ThreadPool>,
     applies: AtomicUsize,
 }
 
-impl ShardedSpmv {
+impl<V: Dataword> ShardedSpmv<V> {
     /// Shard `matrix` into `cus` stripes under `policy` and run them on
     /// `pool` (pool should have >= `cus` workers for full overlap; with
     /// fewer workers, stripes are multiplexed onto the available ones).
-    pub fn new(matrix: Arc<CsrMatrix>, cus: usize, policy: PartitionPolicy, pool: Arc<ThreadPool>) -> Self {
+    pub fn new(matrix: Arc<CsrMatrix<V>>, cus: usize, policy: PartitionPolicy, pool: Arc<ThreadPool>) -> Self {
         let parts = partition_rows_balanced(&matrix, cus, policy);
         Self { matrix, parts, policy, pool, applies: AtomicUsize::new(0) }
     }
@@ -50,7 +59,7 @@ impl ShardedSpmv {
     /// per CU — the paper's configuration when `cus == 5`. Prefer
     /// [`ShardedSpmv::new`] when several engines can share one pool (the
     /// coordinator and the batched service do).
-    pub fn with_own_pool(matrix: Arc<CsrMatrix>, cus: usize, policy: PartitionPolicy) -> Self {
+    pub fn with_own_pool(matrix: Arc<CsrMatrix<V>>, cus: usize, policy: PartitionPolicy) -> Self {
         let pool = Arc::new(ThreadPool::new(cus.max(1)));
         Self::new(matrix, cus, policy, pool)
     }
@@ -81,18 +90,48 @@ impl ShardedSpmv {
         self.applies.load(Ordering::Relaxed)
     }
 
+    /// Short name of the storage format this engine streams.
+    pub fn format_name(&self) -> &'static str {
+        V::NAME
+    }
+
+    /// COO entries per 512-bit HBM line in this engine's format (§IV-B1).
+    pub fn packet_entries_per_line(&self) -> usize {
+        packet_capacity(V::BITS)
+    }
+
+    /// Bytes of the matrix value array in this storage format.
+    pub fn value_bytes(&self) -> usize {
+        self.matrix.value_bytes()
+    }
+
+    /// Cumulative HBM matrix-stream bytes across all `apply` calls so far
+    /// (whole 64-byte lines, summed per CU shard — the paper's accounting).
+    pub fn bytes_streamed(&self) -> usize {
+        self.applies() * self.bytes_per_apply()
+    }
+
     /// The underlying CSR matrix.
-    pub fn matrix(&self) -> &Arc<CsrMatrix> {
+    pub fn matrix(&self) -> &Arc<CsrMatrix<V>> {
         &self.matrix
     }
 }
 
-impl Operator for ShardedSpmv {
+impl<V: Dataword> Operator for ShardedSpmv<V> {
     fn n(&self) -> usize {
         self.matrix.nrows
     }
     fn nnz(&self) -> usize {
         self.matrix.nnz()
+    }
+    fn value_bits(&self) -> u32 {
+        V::BITS
+    }
+    fn packets_per_apply(&self) -> usize {
+        // Each CU streams its own shard: partially-filled tail lines cost a
+        // full transaction per shard, not one per matrix.
+        let cap = packet_capacity(V::BITS);
+        self.parts.iter().map(|p| p.nnz.div_ceil(cap)).sum()
     }
     fn apply(&self, x: &[f32], y: &mut [f32]) {
         assert_eq!(y.len(), self.matrix.nrows);
@@ -129,6 +168,7 @@ impl SendPtr {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fixed::Q1_15;
     use crate::graphs;
     use crate::sparse::CooMatrix;
 
@@ -167,7 +207,7 @@ mod tests {
     fn empty_tail_shards_are_harmless() {
         // 3 rows across 8 shards: shards 3..8 are empty ranges. The engine
         // must still produce the exact serial result.
-        let mut coo = CooMatrix::new(3, 3);
+        let mut coo: CooMatrix = CooMatrix::new(3, 3);
         coo.push(0, 1, 2.0);
         coo.push(1, 0, 2.0);
         coo.push(2, 2, -1.0);
@@ -194,5 +234,36 @@ mod tests {
         a.apply(&x, &mut ya);
         b.apply(&x, &mut yb);
         assert_eq!(ya, yb);
+    }
+
+    #[test]
+    fn typed_engine_shrinks_stream_and_stays_close() {
+        let mut coo = graphs::rmat(1 << 8, 8 << 8, 0.57, 0.19, 0.19, 17);
+        crate::sparse::normalize_frobenius(&mut coo);
+        let f = Arc::new(coo.to_csr());
+        let q = Arc::new(f.to_precision::<Q1_15>());
+        let a = ShardedSpmv::with_own_pool(Arc::clone(&f), 5, PartitionPolicy::BalancedNnz);
+        let b = ShardedSpmv::with_own_pool(Arc::clone(&q), 5, PartitionPolicy::BalancedNnz);
+        // Storage telemetry: half the value bytes, 6 entries per line.
+        assert_eq!(b.value_bytes(), a.value_bytes() / 2);
+        assert_eq!(a.packet_entries_per_line(), 5);
+        assert_eq!(b.packet_entries_per_line(), 6);
+        assert!(b.packets_per_apply() < a.packets_per_apply());
+        assert_eq!(a.format_name(), "f32");
+        assert_eq!(b.format_name(), "q1.15");
+        // Bytes accumulate per apply.
+        let x: Vec<f32> = (0..f.nrows).map(|i| ((i * 13) % 7) as f32 * 0.1 - 0.3).collect();
+        let (mut ya, mut yb) = (vec![0.0f32; f.nrows], vec![0.0f32; f.nrows]);
+        a.apply(&x, &mut ya);
+        b.apply(&x, &mut yb);
+        b.apply(&x, &mut yb);
+        assert_eq!(a.bytes_streamed(), a.bytes_per_apply());
+        assert_eq!(b.bytes_streamed(), 2 * b.bytes_per_apply());
+        assert!(b.bytes_per_apply() < a.bytes_per_apply());
+        // Quantized result tracks the f32 reference within a row-scaled ulp.
+        let bound = f.max_row_nnz() as f64 * <Q1_15 as Dataword>::ulp() + 1e-5;
+        for (p, r) in yb.iter().zip(&ya) {
+            assert!(((p - r).abs() as f64) <= bound, "{p} vs {r} (bound {bound})");
+        }
     }
 }

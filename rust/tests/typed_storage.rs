@@ -1,0 +1,219 @@
+//! Property tests for the typed mixed-precision storage datapath:
+//! quantized-storage SpMV must track the f32 reference within an error
+//! bound scaled by `nnz_per_row * V::ulp()` across all four storage
+//! formats and shard counts {1, 3, 5, 8}, including the empty-tail-shard
+//! and final-short-packet edge cases, and the 16-bit format must
+//! *measurably* shrink the datapath (half the value bytes, 6 entries per
+//! 512-bit line vs 5 at f32 — the §IV-B1 capacity table).
+
+use std::sync::Arc;
+use topk_eigen::fixed::{packet_capacity, Dataword, Precision, Q1_15, Q1_31, Q2_30};
+use topk_eigen::lanczos::Operator;
+use topk_eigen::prop_assert;
+use topk_eigen::sparse::{CooMatrix, PacketStream, PartitionPolicy, ShardedSpmv};
+use topk_eigen::util::pool::ThreadPool;
+use topk_eigen::util::prop::{forall, Gen};
+
+const SHARD_COUNTS: [usize; 4] = [1, 3, 5, 8];
+const POLICIES: [PartitionPolicy; 2] = [PartitionPolicy::EqualRows, PartitionPolicy::BalancedNnz];
+
+/// Random symmetric COO matrix with entries in (-0.5, 0.5) — the
+/// post-Frobenius-normalization value regime every storage format can
+/// represent.
+fn gen_sym_coo(g: &mut Gen) -> CooMatrix {
+    let n = g.usize_in(4, 160).max(4);
+    let edges = g.usize_in(n, 5 * n).max(4);
+    let mut m = CooMatrix::new(n, n);
+    for _ in 0..edges {
+        let r = g.rng().range(0, n);
+        let c = g.rng().range(0, n);
+        let v = g.f64_in(-0.5, 0.5) as f32;
+        m.push(r, c, v);
+        if r != c {
+            m.push(c, r, v);
+        }
+    }
+    m.canonicalize();
+    // Duplicate cells were summed by canonicalize() and can exceed 1 in
+    // magnitude, where Q1.31/Q1.15 saturate and the ulp-scaled bounds no
+    // longer apply; clamp back into the representable regime (the f32
+    // reference and the typed copies both derive from the clamped matrix,
+    // so the property itself is unaffected).
+    for v in &mut m.vals {
+        *v = v.clamp(-0.9, 0.9);
+    }
+    m
+}
+
+/// Sharded SpMV in storage format `V` vs the f32 serial reference, across
+/// all shard counts and policies. The bound scales with the densest row:
+/// each stored value is off by at most `ulp/2`, `|x| <= 1`, so a row of
+/// `d` entries accumulates at most `d * ulp/2` quantization error (plus
+/// f32 round-off slack).
+fn check_format<V: Dataword>(g: &mut Gen, coo: &CooMatrix, x: &[f32], pool: &Arc<ThreadPool>) -> bool {
+    let f32_csr = coo.to_csr();
+    let reference = f32_csr.spmv(x);
+    let typed = Arc::new(f32_csr.to_precision::<V>());
+    prop_assert!(
+        g,
+        typed.value_bytes() == coo.nnz() * V::bytes(),
+        "{}: value bytes {} != nnz {} * {}",
+        V::NAME,
+        typed.value_bytes(),
+        coo.nnz(),
+        V::bytes()
+    );
+    let bound = f32_csr.max_row_nnz().max(1) as f64 * V::ulp() + 1e-5;
+    for shards in SHARD_COUNTS {
+        for policy in POLICIES {
+            let op = ShardedSpmv::new(Arc::clone(&typed), shards, policy, Arc::clone(pool));
+            prop_assert!(g, op.cus() == shards, "{}: shard count", V::NAME);
+            let mut y = vec![0.0f32; coo.nrows];
+            op.apply(x, &mut y);
+            for i in 0..y.len() {
+                prop_assert!(
+                    g,
+                    ((y[i] - reference[i]).abs() as f64) <= bound,
+                    "{}: row {i} off by {} > bound {bound} (shards={shards} policy={policy:?})",
+                    V::NAME,
+                    (y[i] - reference[i]).abs()
+                );
+            }
+        }
+    }
+    true
+}
+
+#[test]
+fn prop_quantized_spmv_tracks_f32_across_formats_and_shards() {
+    forall("typed sharded SpMV within nnz_per_row * ulp of f32 for all formats", |g| {
+        let coo = gen_sym_coo(g);
+        let x = g.vec_f32(coo.ncols, -1.0, 1.0);
+        let pool = Arc::new(ThreadPool::new(5));
+        check_format::<f32>(g, &coo, &x, &pool)
+            && check_format::<Q1_31>(g, &coo, &x, &pool)
+            && check_format::<Q2_30>(g, &coo, &x, &pool)
+            && check_format::<Q1_15>(g, &coo, &x, &pool)
+    });
+}
+
+#[test]
+fn prop_typed_empty_tail_shards_are_harmless() {
+    // Fewer rows than shards: the partitioner pads with empty tail ranges,
+    // which must neither panic nor perturb the output in any format.
+    forall("typed sharded SpMV with more shards than rows", |g| {
+        let n = g.usize_in(1, 7).max(1);
+        let mut coo = CooMatrix::new(n, n);
+        for r in 0..n {
+            coo.push(r, r, g.f64_in(-0.5, 0.5) as f32);
+            let c = g.rng().range(0, n);
+            if c != r {
+                let w = g.f64_in(-0.5, 0.5) as f32;
+                coo.push(r, c, w);
+                coo.push(c, r, w);
+            }
+        }
+        coo.canonicalize();
+        // Same saturation guard as gen_sym_coo: summed duplicates must stay
+        // inside the fixed formats' representable range.
+        for v in &mut coo.vals {
+            *v = v.clamp(-0.9, 0.9);
+        }
+        let x = g.vec_f32(n, -1.0, 1.0);
+        let pool = Arc::new(ThreadPool::new(4));
+        check_format::<f32>(g, &coo, &x, &pool)
+            && check_format::<Q1_31>(g, &coo, &x, &pool)
+            && check_format::<Q2_30>(g, &coo, &x, &pool)
+            && check_format::<Q1_15>(g, &coo, &x, &pool)
+    });
+}
+
+#[test]
+fn prop_typed_packet_stream_round_trips_with_short_tail() {
+    // The final packet of a typed stream carries `nnz % capacity` entries
+    // (when non-zero); every entry must round-trip within one ulp.
+    forall("typed packet stream yields every entry once, short tail included", |g| {
+        let coo = gen_sym_coo(g);
+        let q: CooMatrix<Q1_15> = coo.to_precision::<Q1_15>();
+        let cap = packet_capacity(16);
+        prop_assert!(g, cap == 6, "capacity {cap}");
+        let packets: Vec<_> = PacketStream::new(&q).collect();
+        let expect_tail = coo.nnz() % cap;
+        if expect_tail != 0 {
+            prop_assert!(
+                g,
+                packets.last().map(|p| p.len) == Some(expect_tail),
+                "tail len {:?} != {expect_tail}",
+                packets.last().map(|p| p.len)
+            );
+        }
+        let flat: Vec<(u32, u32, f32)> =
+            packets.iter().flat_map(|p| p.entries().collect::<Vec<_>>()).collect();
+        prop_assert!(g, flat.len() == coo.nnz(), "len {} vs {}", flat.len(), coo.nnz());
+        for (i, &(r, c, v)) in flat.iter().enumerate() {
+            prop_assert!(g, r == coo.rows[i] && c == coo.cols[i], "entry {i} index mismatch");
+            prop_assert!(
+                g,
+                ((v - coo.vals[i]).abs() as f64) <= <Q1_15 as Dataword>::ulp(),
+                "entry {i} value {} vs {}",
+                v,
+                coo.vals[i]
+            );
+        }
+        true
+    });
+}
+
+#[test]
+fn q115_shrinks_the_datapath_measurably() {
+    // The acceptance-bar numbers, asserted deterministically: 16-bit words
+    // halve the value-array bytes, and a 512-bit line carries 6 entries
+    // instead of 5, so a fixed matrix streams fewer packets.
+    use topk_eigen::graphs;
+    let mut coo = graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 41);
+    topk_eigen::sparse::normalize_frobenius(&mut coo);
+    let f = Arc::new(coo.to_csr());
+    let q = Arc::new(f.to_precision::<Q1_15>());
+    assert_eq!(q.value_bytes() * 2, f.value_bytes());
+    assert_eq!(packet_capacity(32), 5);
+    assert_eq!(packet_capacity(16), 6);
+    assert_eq!(Precision::FixedQ1_15.packet_capacity(), 6);
+    for shards in SHARD_COUNTS {
+        let a = ShardedSpmv::with_own_pool(Arc::clone(&f), shards, PartitionPolicy::BalancedNnz);
+        let b = ShardedSpmv::with_own_pool(Arc::clone(&q), shards, PartitionPolicy::BalancedNnz);
+        assert_eq!(a.packet_entries_per_line(), 5);
+        assert_eq!(b.packet_entries_per_line(), 6);
+        assert!(
+            b.packets_per_apply() < a.packets_per_apply(),
+            "shards={shards}: {} !< {}",
+            b.packets_per_apply(),
+            a.packets_per_apply()
+        );
+        assert!(b.bytes_per_apply() < a.bytes_per_apply(), "shards={shards}");
+    }
+}
+
+#[test]
+fn typed_solves_agree_with_f32_within_format_error() {
+    // End-to-end: the coordinator's typed engines produce eigenvalues that
+    // drift from the f32 datapath by at most a quantization-scale amount,
+    // tighter for finer formats.
+    use topk_eigen::coordinator::{SolveOptions, Solver};
+    use topk_eigen::graphs;
+    let m = graphs::mesh2d(16, 16, 0.9, 0.02, 11);
+    let solve = |p: Precision| {
+        let mut s = Solver::new(SolveOptions { k: 4, precision: p, ..Default::default() });
+        s.solve(&m).unwrap()
+    };
+    let sf = solve(Precision::Float32);
+    let s31 = solve(Precision::FixedQ1_31);
+    let s15 = solve(Precision::FixedQ1_15);
+    assert_eq!(sf.metrics.precision, "f32");
+    assert_eq!(s31.metrics.precision, "q1.31");
+    assert_eq!(s15.metrics.precision, "q1.15");
+    let scale = sf.eigenvalues[0].abs().max(1e-12);
+    let d31 = (s31.eigenvalues[0] - sf.eigenvalues[0]).abs() / scale;
+    let d15 = (s15.eigenvalues[0] - sf.eigenvalues[0]).abs() / scale;
+    assert!(d31 < 1e-4, "q1.31 drift {d31}");
+    assert!(d15 < 5e-2, "q1.15 drift {d15}");
+}
