@@ -84,7 +84,13 @@ fn solve_with_random_start(
     let v1: Vec<f32> = (0..csr.nrows).map(|_| rng.normal() as f32).collect();
     let res = lanczos(
         &csr,
-        &LanczosOptions { k: opts.k, reorth: opts.reorth, precision: opts.precision, v1: Some(v1) },
+        &LanczosOptions {
+            k: opts.k,
+            reorth: opts.reorth,
+            precision: opts.precision,
+            v1: Some(v1),
+            ..Default::default()
+        },
     );
     let eig = jacobi_eigen(&res.tridiag, JacobiMode::Systolic, 1e-10);
     let k_eff = res.k();

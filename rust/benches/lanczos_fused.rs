@@ -1,0 +1,86 @@
+//! Fused vs unfused Lanczos iteration — the tentpole perf comparison.
+//!
+//! Measures the full Lanczos phase (SpMV + vector recurrence + reorth)
+//! through the sharded engine with the fused single-sweep datapath on and
+//! off, at K ∈ {8, 32} with the paper's every-2 reorthogonalization.
+//! Defaults to the acceptance shape: n = 2^16 RMAT with 16n edges on a
+//! 5-worker CU pool (≥ 4 threads). Override with:
+//!
+//! * `TOPK_LANCZOS_N`       — problem size (e.g. 16384 for the CI quick mode)
+//! * `TOPK_LANCZOS_THREADS` — CU shards / pool workers
+//! * `TOPK_BENCH_ITERS`     — timed iterations per row
+//!
+//! Results append to `BENCH_lanczos.json` (JSONL) unless `TOPK_BENCH_JSON`
+//! points elsewhere, seeding the bench trajectory; the `speedup_fused`
+//! column is the unfused/fused wall-time ratio (≥ 1.25x expected at K=32
+//! on a multi-threaded host).
+
+use std::sync::Arc;
+use topk_eigen::bench::{BenchConfig, BenchSuite};
+use topk_eigen::graphs;
+use topk_eigen::lanczos::{lanczos_typed_ws, LanczosOptions, LanczosResult, LanczosWorkspace};
+use topk_eigen::lanczos::{ReorthPolicy, ShardedSpmv};
+use topk_eigen::sparse::{normalize_frobenius, PartitionPolicy};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    // Default artifact path: keep the Lanczos perf trajectory accumulating
+    // even when the caller sets no TOPK_BENCH_JSON.
+    if std::env::var("TOPK_BENCH_JSON").is_err() {
+        std::env::set_var("TOPK_BENCH_JSON", "BENCH_lanczos.json");
+    }
+    let n = env_usize("TOPK_LANCZOS_N", 1 << 16);
+    let threads = env_usize("TOPK_LANCZOS_THREADS", 5);
+    let mut suite = BenchSuite::new(
+        "lanczos_fused",
+        &format!("fused vs unfused Lanczos phase, n={n} RMAT 16n edges, reorth every-2, {threads} threads"),
+    );
+    let mut g = graphs::rmat(n, 16 * n, 0.57, 0.19, 0.19, 7);
+    normalize_frobenius(&mut g);
+    let csr = Arc::new(g.to_csr());
+    let engine = ShardedSpmv::with_own_pool(Arc::clone(&csr), threads, PartitionPolicy::BalancedNnz);
+    // The telemetry pre-run below doubles as the warmup for each row, so
+    // the timed loop adds no extra warmup solves.
+    let cfg = BenchConfig { warmup: 0, ..Default::default() };
+    let mut ws = LanczosWorkspace::new();
+
+    for k in [8usize, 32] {
+        let mk = |fused| LanczosOptions { k, reorth: ReorthPolicy::EveryN(2), fused, ..Default::default() };
+        let unfused_opts = mk(false);
+        let warm_unfused = lanczos_typed_ws::<f32, _>(&engine, &unfused_opts, &mut ws);
+        let t_unfused = suite.bench(&format!("unfused/k{k}"), cfg, || -> LanczosResult {
+            lanczos_typed_ws(&engine, &unfused_opts, &mut ws)
+        });
+        suite.annotate(&[
+            ("n", n as f64),
+            ("k", k as f64),
+            ("threads", threads as f64),
+            ("vector_passes", warm_unfused.vector_passes as f64),
+        ]);
+        let fused_opts = mk(true);
+        let warm_fused = lanczos_typed_ws::<f32, _>(&engine, &fused_opts, &mut ws);
+        let t_fused = suite.bench(&format!("fused/k{k}"), cfg, || -> LanczosResult {
+            lanczos_typed_ws(&engine, &fused_opts, &mut ws)
+        });
+        suite.annotate(&[
+            ("n", n as f64),
+            ("k", k as f64),
+            ("threads", threads as f64),
+            ("vector_passes", warm_fused.vector_passes as f64),
+            ("fused_sweeps", warm_fused.fused_sweeps as f64),
+            ("speedup_fused", t_unfused / t_fused),
+        ]);
+        println!(
+            "  k={k}: unfused {:.1} ms, fused {:.1} ms -> {:.2}x ({} -> {} vector passes)",
+            t_unfused * 1e3,
+            t_fused * 1e3,
+            t_unfused / t_fused,
+            warm_unfused.vector_passes,
+            warm_fused.vector_passes,
+        );
+    }
+    suite.finish();
+}

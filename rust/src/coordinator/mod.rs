@@ -34,7 +34,8 @@ pub mod verify;
 
 use crate::fixed::{packet_capacity, Precision};
 use crate::jacobi::{jacobi_eigen, JacobiMode, SystolicStats};
-use crate::lanczos::{lanczos_typed, lift_eigenvector_typed, LanczosOptions, LanczosResult, Operator, ReorthPolicy};
+use crate::lanczos::{lanczos_typed_ws, lift_eigenvector_typed, LanczosOptions, LanczosResult};
+use crate::lanczos::{LanczosWorkspace, Operator, ReorthPolicy};
 use crate::runtime::{PjrtSpmv, Runtime};
 use crate::sparse::{normalize_frobenius, CooMatrix, CsrMatrix, PartitionPolicy, ShardedSpmv};
 use crate::util::pool::ThreadPool;
@@ -82,6 +83,10 @@ pub struct SolveOptions {
     pub engine: Engine,
     /// Skip Frobenius normalization (input already normalized).
     pub skip_normalize: bool,
+    /// Use the fused single-sweep Lanczos datapath (default). `false`
+    /// (`--no-fuse` at the CLI) selects the serial-pass reference
+    /// implementation — same spectra, more full-length vector passes.
+    pub fuse: bool,
 }
 
 impl Default for SolveOptions {
@@ -96,6 +101,7 @@ impl Default for SolveOptions {
             partition: PartitionPolicy::BalancedNnz,
             engine: Engine::Native,
             skip_normalize: false,
+            fuse: true,
         }
     }
 }
@@ -148,6 +154,14 @@ pub struct SolveMetrics {
     /// Bytes of the stored Lanczos basis (`k * n` words of the storage
     /// format).
     pub basis_bytes: usize,
+    /// Fused Lanczos fork/join sweeps executed (`Operator::apply_fused`
+    /// calls — one per iteration on the fused datapath, 0 with
+    /// `--no-fuse`).
+    pub fused_sweeps: usize,
+    /// Full-length vector passes the Lanczos iteration phase performed
+    /// (3 per full iteration when fused; every serial axpy/dot/norm pass —
+    /// two per reorthogonalized basis row — when unfused).
+    pub vector_passes: usize,
 }
 
 impl SolveMetrics {
@@ -249,6 +263,10 @@ pub struct Solver {
     opts: SolveOptions,
     pool: Arc<ThreadPool>,
     runtime: Option<Arc<Runtime>>,
+    /// Lanczos iteration scratch, reused across every solve this solver
+    /// runs (including all members of a batched `submit_batch` job) — the
+    /// steady-state zero-allocation path.
+    ws: LanczosWorkspace,
 }
 
 impl Solver {
@@ -257,7 +275,7 @@ impl Solver {
     /// lazily on the first `Engine::Pjrt` solve.
     pub fn new(opts: SolveOptions) -> Self {
         let pool = Arc::new(ThreadPool::new(opts.effective_threads()));
-        Self { opts, pool, runtime: None }
+        Self { opts, pool, runtime: None, ws: LanczosWorkspace::new() }
     }
 
     /// Access (and lazily create) the PJRT runtime.
@@ -348,15 +366,19 @@ impl Solver {
             k,
             reorth: self.opts.reorth,
             precision: prep.precision,
+            fused: self.opts.fuse,
             v1: None,
         };
+        let ws = &mut self.ws;
         let (eigenvalues, eigenvectors) = crate::with_precision!(prep.precision, V => {
-            // ---- Phase 1: Lanczos (typed basis storage) ------------------
-            let lres: LanczosResult<V> = lanczos_typed(prep.op.as_ref(), &lopts);
+            // ---- Phase 1: Lanczos (typed basis storage, reused scratch) --
+            let lres: LanczosResult<V> = lanczos_typed_ws(prep.op.as_ref(), &lopts, ws);
             metrics.lanczos_s = sw.lap_s();
             metrics.spmv_count = lres.spmv_count;
             metrics.breakdown_at = lres.breakdown_at;
             metrics.basis_bytes = lres.basis_value_bytes();
+            metrics.fused_sweeps = lres.fused_sweeps;
+            metrics.vector_passes = lres.vector_passes;
             metrics.packets_streamed = lres.spmv_count * prep.packets_per_apply();
             metrics.bytes_streamed = lres.spmv_count * prep.bytes_per_apply();
 

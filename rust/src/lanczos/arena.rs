@@ -1,0 +1,212 @@
+//! Contiguous row-strided storage for the Lanczos basis.
+//!
+//! The paper streams Lanczos vectors to DDR as one flat region (§IV-B2);
+//! the host-side twin is [`BasisArena`]: a **single allocation** of
+//! `k * n` storage words with row views taken by stride. Replacing the
+//! former `Vec<Vec<V>>` (k separate heap blocks) means:
+//!
+//! * reorthogonalization and eigenvector lift sweep **linear memory** — no
+//!   pointer chase per row, hardware prefetch works across rows;
+//! * the whole basis costs one allocation per solve, which is what the
+//!   zero-steady-state-allocation property of the fused iteration needs;
+//! * blocked classical Gram-Schmidt ([`BasisDots::dots_range`] /
+//!   [`BasisArena::apply_projections_norm2`]) runs as two flat sweeps
+//!   instead of K dependent passes.
+//!
+//! [`BasisDots`] is the object-safe projection interface the fused
+//! [`crate::lanczos::Operator::apply_fused`] sweep uses: it erases the
+//! storage scalar so a `dyn Operator` can compute per-stripe partial
+//! projections against a basis of any precision.
+
+use crate::fixed::Dataword;
+use crate::linalg;
+
+/// Flat row-strided arena holding the Lanczos basis: `rows()` committed
+/// vectors of length `n`, all in one allocation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BasisArena<V: Dataword = f32> {
+    data: Vec<V>,
+    n: usize,
+    max_rows: usize,
+}
+
+impl<V: Dataword> BasisArena<V> {
+    /// Arena with room for `k` rows of length `n` (one allocation, done
+    /// up front; committing rows later never reallocates).
+    pub fn with_capacity(k: usize, n: usize) -> Self {
+        assert!(n > 0, "basis rows must be non-empty");
+        Self { data: Vec::with_capacity(k * n), n, max_rows: k }
+    }
+
+    /// Row length (the operator dimension).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Committed rows.
+    pub fn len(&self) -> usize {
+        self.data.len() / self.n
+    }
+
+    /// True when no rows are committed.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Commit one more row and return it for initialization. Panics if the
+    /// arena is full — capacity is fixed at construction so the warm path
+    /// never reallocates.
+    pub fn alloc_row(&mut self) -> &mut [V] {
+        assert!(self.len() < self.max_rows, "basis arena overflow");
+        let start = self.data.len();
+        self.data.resize(start + self.n, V::default());
+        &mut self.data[start..start + self.n]
+    }
+
+    /// Row `i` as a slice of storage words.
+    pub fn row(&self, i: usize) -> &[V] {
+        &self.data[i * self.n..(i + 1) * self.n]
+    }
+
+    /// Iterate the committed rows in order (linear memory sweep).
+    pub fn rows_iter(&self) -> impl Iterator<Item = &[V]> {
+        self.data.chunks_exact(self.n)
+    }
+
+    /// Row `i` dequantized to f32 (verification paths).
+    pub fn row_f32(&self, i: usize) -> Vec<f32> {
+        self.row(i).iter().map(|v| v.to_f32()).collect()
+    }
+
+    /// Bytes the stored rows occupy (`len * n * V::bytes()`).
+    pub fn value_bytes(&self) -> usize {
+        self.data.len() * V::bytes()
+    }
+
+    /// Blocked classical-GS apply + norm: `w_chunk -= sum_j projs[j] *
+    /// row_j[r0..r1]`, then return the squared L2 norm of the updated
+    /// chunk. `w_chunk` is the caller's `[r0, r1)` slice of the working
+    /// vector (chunk-local, so parallel callers never hold overlapping
+    /// `&mut` slices). One linear sweep over the arena stripe — the second
+    /// phase of the two-phase reorthogonalization (the first phase is
+    /// [`BasisDots::dots_range`]).
+    pub fn apply_projections_norm2(&self, projs: &[f64], w_chunk: &mut [f32], r0: usize, r1: usize) -> f64 {
+        assert_eq!(projs.len(), self.len(), "one projection per committed row");
+        assert_eq!(w_chunk.len(), r1 - r0, "w_chunk must be the [r0, r1) slice");
+        for (j, proj) in projs.iter().enumerate() {
+            linalg::axpy_q(-(*proj as f32), &self.row(j)[r0..r1], w_chunk);
+        }
+        linalg::dot(w_chunk, w_chunk)
+    }
+}
+
+impl<V: Dataword> std::ops::Index<usize> for BasisArena<V> {
+    type Output = [V];
+    fn index(&self, i: usize) -> &[V] {
+        self.row(i)
+    }
+}
+
+/// Object-safe view of a basis for the fused sweep: lets a boxed
+/// [`crate::lanczos::Operator`] compute per-stripe partial projections
+/// without knowing the basis storage scalar.
+pub trait BasisDots: Sync {
+    /// Committed rows.
+    fn rows(&self) -> usize;
+
+    /// `out[j] = dot(w_chunk, row_j[r0..r1])` for every committed row `j`
+    /// — the blocked classical-GS projection phase, computed on a stripe
+    /// while it is cache-hot from the SpMV. `w_chunk` is the caller's
+    /// `[r0, r1)` slice of the working vector.
+    fn dots_range(&self, w_chunk: &[f32], r0: usize, r1: usize, out: &mut [f64]);
+}
+
+impl<V: Dataword> BasisDots for BasisArena<V> {
+    fn rows(&self) -> usize {
+        self.len()
+    }
+
+    fn dots_range(&self, w_chunk: &[f32], r0: usize, r1: usize, out: &mut [f64]) {
+        assert!(out.len() >= self.len());
+        assert_eq!(w_chunk.len(), r1 - r0, "w_chunk must be the [r0, r1) slice");
+        for (j, slot) in out.iter_mut().take(self.len()).enumerate() {
+            *slot = linalg::dot_q(w_chunk, &self.row(j)[r0..r1]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q1_15;
+
+    #[test]
+    fn arena_is_one_allocation_with_strided_rows() {
+        let mut a: BasisArena<f32> = BasisArena::with_capacity(3, 4);
+        assert_eq!(a.len(), 0);
+        assert!(a.is_empty());
+        for r in 0..3 {
+            let row = a.alloc_row();
+            for (i, x) in row.iter_mut().enumerate() {
+                *x = (r * 4 + i) as f32;
+            }
+        }
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.n(), 4);
+        assert_eq!(a.row(1), &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(&a[2], &[8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(a.rows_iter().count(), 3);
+        assert_eq!(a.value_bytes(), 3 * 4 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn arena_overflow_panics_instead_of_reallocating() {
+        let mut a: BasisArena<f32> = BasisArena::with_capacity(1, 4);
+        a.alloc_row();
+        a.alloc_row();
+    }
+
+    #[test]
+    fn dots_range_matches_per_row_dot_q() {
+        let mut a: BasisArena<Q1_15> = BasisArena::with_capacity(3, 16);
+        let mut w = vec![0.0f32; 16];
+        for r in 0..3 {
+            let row = a.alloc_row();
+            for (i, x) in row.iter_mut().enumerate() {
+                *x = Q1_15::from_f32(((r * 16 + i) as f32 * 0.03).sin() * 0.5);
+            }
+        }
+        for (i, wi) in w.iter_mut().enumerate() {
+            *wi = ((i as f32) * 0.11).cos() * 0.4;
+        }
+        let mut out = vec![0.0f64; 3];
+        a.dots_range(&w[2..14], 2, 14, &mut out);
+        for j in 0..3 {
+            let expect = linalg::dot_q(&w[2..14], &a.row(j)[2..14]);
+            assert_eq!(out[j].to_bits(), expect.to_bits(), "row {j}");
+        }
+    }
+
+    #[test]
+    fn apply_projections_matches_sequential_axpys() {
+        let mut a: BasisArena<f32> = BasisArena::with_capacity(2, 8);
+        for r in 0..2 {
+            let row = a.alloc_row();
+            for (i, x) in row.iter_mut().enumerate() {
+                *x = ((r + i) as f32 * 0.2).sin();
+            }
+        }
+        let w0: Vec<f32> = (0..8).map(|i| (i as f32 * 0.3).cos()).collect();
+        let projs = [0.25f64, -0.5];
+        let mut w_ref = w0.clone();
+        for (j, p) in projs.iter().enumerate() {
+            linalg::axpy_q(-(*p as f32), a.row(j), &mut w_ref);
+        }
+        let n_ref = linalg::dot(&w_ref, &w_ref);
+        let mut w = w0.clone();
+        let n = a.apply_projections_norm2(&projs, &mut w, 0, 8);
+        assert_eq!(w, w_ref);
+        assert_eq!(n.to_bits(), n_ref.to_bits());
+    }
+}

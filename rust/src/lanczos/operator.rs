@@ -20,9 +20,36 @@
 //! real bytes-moved numbers that differ between storage formats.
 
 use crate::fixed::{packet_capacity, Dataword};
+use crate::lanczos::BasisDots;
+use crate::linalg;
 use crate::sparse::CsrMatrix;
 
 pub use crate::sparse::ShardedSpmv;
+
+/// Everything one fused Lanczos sweep needs besides the SpMV operands: the
+/// Paige correction term, optional basis projections (reorth iterations),
+/// and the per-shard partial-reduction scratch. See
+/// [`Operator::apply_fused`].
+pub struct FusedIteration<'a> {
+    /// `beta_{i-1}` of the three-term recurrence; `0.0` on the first
+    /// iteration (the `v_prev` term vanishes and the subtraction is
+    /// skipped).
+    pub beta_prev: f32,
+    /// The previous Lanczos vector (dequantized working copy).
+    pub v_prev: &'a [f32],
+    /// Basis rows to project against (blocked classical-GS phase 1) on
+    /// reorthogonalization iterations; `None` otherwise.
+    pub basis: Option<&'a dyn BasisDots>,
+    /// Per-shard partial-reduction scratch, laid out `[shard][1 + rows]`:
+    /// slot 0 holds the shard's partial `dot(w, v)`, slots `1..` the
+    /// shard's partial basis projections. Length must be at least
+    /// `fused_shards * (1 + rows)`. Preallocated by the caller
+    /// (`LanczosWorkspace`) so the sweep allocates nothing.
+    pub partials: &'a mut [f64],
+    /// Merged projection output, one slot per committed basis row (left
+    /// untouched when `basis` is `None`).
+    pub projs: &'a mut [f64],
+}
 
 /// A symmetric linear operator `y = M x` over `f32` vectors.
 pub trait Operator: Send + Sync {
@@ -46,6 +73,47 @@ pub trait Operator: Send + Sync {
     /// Matrix-stream bytes one `apply` moves: whole 64-byte lines.
     fn bytes_per_apply(&self) -> usize {
         self.packets_per_apply() * (crate::fixed::LINE_BITS as usize / 8)
+    }
+    /// Partial-reduction lanes [`Operator::apply_fused`] uses — the CU
+    /// shard count for the sharded engine, 1 for serial operators. The
+    /// caller sizes [`FusedIteration::partials`] as `fused_shards() * (1 +
+    /// basis rows)`.
+    fn fused_shards(&self) -> usize {
+        1
+    }
+    /// The fused Lanczos sweep (the paper's Figure 6(D) overlap of the
+    /// "remaining linear operations" with the SpMV stream): compute `y = M
+    /// x`, immediately subtract `beta_prev * v_prev` (Paige reordering),
+    /// and reduce `dot(y, x)` — plus, on reorthogonalization iterations,
+    /// the projection of `y` onto every committed basis row — **in the
+    /// same pass over the data**, while each stripe is still cache-hot.
+    /// Returns `alpha = dot(y, x)`; merged projections land in
+    /// [`FusedIteration::projs`].
+    ///
+    /// The default implementation runs the same operations as serial
+    /// full-length passes after [`Operator::apply`], so any operator
+    /// (PJRT, plain CSR) supports the fused iteration; the sharded engine
+    /// overrides it with the true per-stripe fork/join.
+    fn apply_fused(&self, x: &[f32], y: &mut [f32], it: &mut FusedIteration<'_>) -> f64 {
+        self.apply(x, y);
+        if it.beta_prev != 0.0 {
+            linalg::axpy(-it.beta_prev, it.v_prev, y);
+        }
+        let alpha = linalg::dot(y, x);
+        if let Some(basis) = it.basis {
+            basis.dots_range(y, 0, y.len(), it.projs);
+        }
+        alpha
+    }
+    /// Run `f(i)` for every `i in 0..tasks`, possibly in parallel on the
+    /// operator's worker pool (the sharded engine dispatches to its CU
+    /// pool; the default runs serially). The Lanczos loop uses this to
+    /// shard its remaining vector sweeps over the same workers that run
+    /// the SpMV.
+    fn parallel_for(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        for i in 0..tasks {
+            f(i);
+        }
     }
 }
 
@@ -101,6 +169,16 @@ impl<O: Operator> Operator for CountingOperator<O> {
     fn apply(&self, x: &[f32], y: &mut [f32]) {
         self.count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
         self.inner.apply(x, y);
+    }
+    fn fused_shards(&self) -> usize {
+        self.inner.fused_shards()
+    }
+    fn apply_fused(&self, x: &[f32], y: &mut [f32], it: &mut FusedIteration<'_>) -> f64 {
+        self.count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        self.inner.apply_fused(x, y, it)
+    }
+    fn parallel_for(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        self.inner.parallel_for(tasks, f);
     }
 }
 

@@ -34,13 +34,79 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     }
 }
 
-/// `w = a*x + b*y` writing into `w` (used for the three-term recurrence
-/// `w' = w - alpha v_i - beta v_{i-1}` fused as two waxpby calls).
-pub fn waxpby(a: f32, x: &[f32], b: f32, y: &[f32], w: &mut [f32]) {
+/// Fused `y += a*x` followed by a dot product against `z`, in one pass
+/// over the data (the fused Lanczos sweep's `w -= beta v_prev` + partial
+/// `dot(w, v)` stripe kernel). The dot uses the same 4-lane f64
+/// accumulation as [`dot`], so for a full-length call the result is
+/// bitwise identical to `axpy(a, x, y); dot(y, z)` — the unfused
+/// reference path.
+pub fn axpy_dot(a: f32, x: &[f32], y: &mut [f32], z: &[f32]) -> f64 {
     assert_eq!(x.len(), y.len());
-    assert_eq!(x.len(), w.len());
+    assert_eq!(x.len(), z.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = y.len() / 4;
+    for i in 0..chunks {
+        let (x4, z4) = (&x[4 * i..4 * i + 4], &z[4 * i..4 * i + 4]);
+        let y4 = &mut y[4 * i..4 * i + 4];
+        y4[0] += a * x4[0];
+        y4[1] += a * x4[1];
+        y4[2] += a * x4[2];
+        y4[3] += a * x4[3];
+        acc[0] += y4[0] as f64 * z4[0] as f64;
+        acc[1] += y4[1] as f64 * z4[1] as f64;
+        acc[2] += y4[2] as f64 * z4[2] as f64;
+        acc[3] += y4[3] as f64 * z4[3] as f64;
+    }
+    let mut tail = 0.0f64;
+    for i in 4 * chunks..y.len() {
+        y[i] += a * x[i];
+        tail += y[i] as f64 * z[i] as f64;
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// Fused `y += a*x` followed by the squared L2 norm of the result, in one
+/// pass (the fused sweep's `w -= alpha v` + partial `||w||^2` stripe
+/// kernel). Same lane structure as [`dot`], so a full-length call matches
+/// `axpy(a, x, y); dot(y, y)` bitwise.
+pub fn axpy_norm2(a: f32, x: &[f32], y: &mut [f32]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = y.len() / 4;
+    for i in 0..chunks {
+        let x4 = &x[4 * i..4 * i + 4];
+        let y4 = &mut y[4 * i..4 * i + 4];
+        y4[0] += a * x4[0];
+        y4[1] += a * x4[1];
+        y4[2] += a * x4[2];
+        y4[3] += a * x4[3];
+        acc[0] += y4[0] as f64 * y4[0] as f64;
+        acc[1] += y4[1] as f64 * y4[1] as f64;
+        acc[2] += y4[2] as f64 * y4[2] as f64;
+        acc[3] += y4[3] as f64 * y4[3] as f64;
+    }
+    let mut tail = 0.0f64;
+    for i in 4 * chunks..y.len() {
+        y[i] += a * x[i];
+        tail += y[i] as f64 * y[i] as f64;
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// Recurrence normalization: `v = alpha * w` quantized through storage
+/// format `V`, writing the quantized words into `row` (the Lanczos basis
+/// slot) and the dequantized mirror into `v` — so the working copy holds
+/// exactly the stored values and the recurrence and the basis agree
+/// bit-for-bit. The named kernel shared by the fused and unfused Lanczos
+/// paths (for `V = f32` the round-trip is the identity and this is a plain
+/// scaled copy).
+pub fn scale_quantize_into<V: crate::fixed::Dataword>(alpha: f32, w: &[f32], v: &mut [f32], row: &mut [V]) {
+    assert_eq!(w.len(), v.len());
+    assert_eq!(w.len(), row.len());
     for i in 0..w.len() {
-        w[i] = a * x[i] + b * y[i];
+        let q = V::from_f32(w[i] * alpha);
+        row[i] = q;
+        v[i] = q.to_f32();
     }
 }
 
@@ -123,15 +189,62 @@ mod tests {
     }
 
     #[test]
-    fn axpy_and_waxpby() {
+    fn axpy_updates_in_place() {
         let x = vec![1.0f32, 2.0, 3.0];
         let mut y = vec![10.0f32, 20.0, 30.0];
         axpy(2.0, &x, &mut y);
         assert_eq!(y, vec![12.0, 24.0, 36.0]);
+    }
 
-        let mut w = vec![0.0f32; 3];
-        waxpby(1.0, &x, -0.5, &y, &mut w);
-        assert_eq!(w, vec![1.0 - 6.0, 2.0 - 12.0, 3.0 - 18.0]);
+    #[test]
+    fn axpy_dot_matches_unfused_bitwise() {
+        let x: Vec<f32> = (0..103).map(|i| ((i as f32) * 0.11).sin()).collect();
+        let z: Vec<f32> = (0..103).map(|i| ((i as f32) * 0.07).cos()).collect();
+        let y0: Vec<f32> = (0..103).map(|i| ((i as f32) * 0.05).tan() * 0.3).collect();
+        // Unfused reference: axpy then dot.
+        let mut y_ref = y0.clone();
+        axpy(-0.37, &x, &mut y_ref);
+        let d_ref = dot(&y_ref, &z);
+        // Fused single pass.
+        let mut y = y0.clone();
+        let d = axpy_dot(-0.37, &x, &mut y, &z);
+        assert_eq!(y, y_ref);
+        assert_eq!(d.to_bits(), d_ref.to_bits());
+    }
+
+    #[test]
+    fn axpy_norm2_matches_unfused_bitwise() {
+        let x: Vec<f32> = (0..101).map(|i| ((i as f32) * 0.13).sin()).collect();
+        let y0: Vec<f32> = (0..101).map(|i| ((i as f32) * 0.09).cos() * 0.7).collect();
+        let mut y_ref = y0.clone();
+        axpy(0.21, &x, &mut y_ref);
+        let n_ref = dot(&y_ref, &y_ref);
+        let mut y = y0.clone();
+        let n = axpy_norm2(0.21, &x, &mut y);
+        assert_eq!(y, y_ref);
+        assert_eq!(n.to_bits(), n_ref.to_bits());
+    }
+
+    #[test]
+    fn scale_quantize_into_mirrors_stored_words() {
+        use crate::fixed::{Dataword, Q1_15};
+        let w: Vec<f32> = (0..33).map(|i| ((i as f32) * 0.17).sin() * 2.0).collect();
+        // f32: identity round-trip, v = w * alpha exactly.
+        let mut v = vec![0.0f32; 33];
+        let mut row = vec![0.0f32; 33];
+        scale_quantize_into::<f32>(0.5, &w, &mut v, &mut row);
+        for i in 0..33 {
+            assert_eq!(v[i], w[i] * 0.5);
+            assert_eq!(row[i], v[i]);
+        }
+        // Q1.15: v must hold exactly the dequantized stored word.
+        let mut vq = vec![0.0f32; 33];
+        let mut rowq = vec![Q1_15::default(); 33];
+        scale_quantize_into::<Q1_15>(0.5, &w, &mut vq, &mut rowq);
+        for i in 0..33 {
+            assert_eq!(vq[i], rowq[i].to_f32());
+            assert!(((vq[i] - w[i] * 0.5).abs() as f64) <= <Q1_15 as Dataword>::ulp());
+        }
     }
 
     #[test]

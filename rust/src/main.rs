@@ -97,6 +97,7 @@ fn cmd_solve(args: &[String]) -> i32 {
         .opt("threads", "CU pool worker threads (0 = one per CU)", Some("0"))
         .opt("partition", "row partition: equal-rows|balanced-nnz", Some("balanced-nnz"))
         .opt("engine", "spmv engine: native|pjrt", Some("native"))
+        .flag("no-fuse", "disable the fused Lanczos datapath (serial per-pass vector phase)")
         .flag("verify", "print Fig-11 accuracy metrics")
         .flag("quiet", "suppress per-pair output");
     let m = match cmd.parse(args) {
@@ -119,10 +120,11 @@ fn cmd_solve(args: &[String]) -> i32 {
                 "pjrt" => Engine::Pjrt,
                 _ => Engine::Native,
             },
+            fuse: !m.flag("no-fuse"),
             ..Default::default()
         };
         println!(
-            "solving: n={} nnz={} k={} reorth={} precision={} cus={} threads={} partition={:?} engine={:?}",
+            "solving: n={} nnz={} k={} reorth={} precision={} cus={} threads={} partition={:?} engine={:?} fuse={}",
             matrix.nrows,
             matrix.nnz(),
             opts.k,
@@ -131,7 +133,8 @@ fn cmd_solve(args: &[String]) -> i32 {
             opts.cus,
             opts.effective_threads(),
             opts.partition,
-            opts.engine
+            opts.engine,
+            opts.fuse
         );
         let mut solver = Solver::new(opts);
         let sol = solver.solve(&matrix).map_err(|e| e.to_string())?;
@@ -150,6 +153,10 @@ fn cmd_solve(args: &[String]) -> i32 {
             mt.engine_used,
             mt.spmv_count,
             mt.systolic.sweeps,
+        );
+        println!(
+            "lanczos datapath: fused-sweeps={} vector-passes={}",
+            mt.fused_sweeps, mt.vector_passes,
         );
         println!(
             "datapath: precision={} entries/line={} value-bytes={} basis-bytes={} packets={} hbm-bytes={}",

@@ -86,16 +86,26 @@ impl<V: Dataword> CsrMatrix<V> {
     }
 
     /// `y[r0..r1] = (M x)[r0..r1]`: the row-stripe kernel each CU worker
-    /// runs. `y` must have length `nrows`. Values dequantize to f32 at the
-    /// multiplier input; the accumulator is f32 for every storage format.
+    /// runs. `y` must have length `nrows` (full-buffer convenience wrapper
+    /// of [`CsrMatrix::spmv_into_stripe`]).
+    pub fn spmv_into(&self, x: &[f32], y: &mut [f32], r0: usize, r1: usize) {
+        assert!(y.len() == self.nrows);
+        self.spmv_into_stripe(x, &mut y[r0..r1], r0, r1);
+    }
+
+    /// `y_stripe = (M x)[r0..r1]` where `y_stripe.len() == r1 - r0`: the
+    /// chunk-local form that parallel CU workers use so concurrent stripes
+    /// never hold overlapping `&mut` views of one output buffer. Values
+    /// dequantize to f32 at the multiplier input; the accumulator is f32
+    /// for every storage format.
     ///
     /// The inner gather loop uses unchecked indexing: `indptr` monotonicity
     /// and `indices < ncols` are structural invariants established at
     /// construction ([`CsrMatrix::validate`] checks them; `from_canonical_coo`
     /// guarantees them) — bounds checks here cost ~10% on the SpMV hot
     /// path (EXPERIMENTS.md §Perf).
-    pub fn spmv_into(&self, x: &[f32], y: &mut [f32], r0: usize, r1: usize) {
-        assert!(r1 <= self.nrows && y.len() == self.nrows && x.len() >= self.ncols);
+    pub fn spmv_into_stripe(&self, x: &[f32], y_stripe: &mut [f32], r0: usize, r1: usize) {
+        assert!(r0 <= r1 && r1 <= self.nrows && y_stripe.len() == r1 - r0 && x.len() >= self.ncols);
         debug_assert!(self.validate().is_ok());
         for r in r0..r1 {
             // SAFETY: r < nrows and indptr has nrows+1 entries.
@@ -111,7 +121,7 @@ impl<V: Dataword> CsrMatrix<V> {
                         * x.get_unchecked(*self.indices.get_unchecked(k) as usize);
                 }
             }
-            y[r] = acc;
+            y_stripe[r - r0] = acc;
         }
     }
 

@@ -29,9 +29,11 @@
 //! `tests/typed_storage.rs` property-check this.
 
 use crate::fixed::{packet_capacity, Dataword};
-use crate::lanczos::Operator;
+use crate::lanczos::{FusedIteration, Operator};
+use crate::linalg;
 use crate::sparse::{partition_rows_balanced, CsrMatrix, PartitionPolicy, RowPartition};
 use crate::util::pool::ThreadPool;
+use crate::util::ptr::SendPtr;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -138,30 +140,88 @@ impl<V: Dataword> Operator for ShardedSpmv<V> {
         self.applies.fetch_add(1, Ordering::Relaxed);
         let m = &self.matrix;
         let parts = &self.parts;
-        // Disjoint writes: each task owns rows [row_start, row_end). We hand
-        // each worker the full-length buffer through a raw pointer; stripes
-        // never overlap, so the only synchronization is the scoped join.
+        // Disjoint writes: each task owns rows [row_start, row_end) and
+        // materializes only its own stripe of the output buffer, so the
+        // concurrent `&mut` views never overlap and the only
+        // synchronization is the scoped join.
         let y_ptr = SendPtr(y.as_mut_ptr());
         self.pool.scope_chunks(parts.len(), |i| {
             let p = parts[i];
             // SAFETY: `scope_chunks` blocks until every worker finishes, so
-            // the pointer outlives all uses; stripe `i` writes only
-            // `y[p.row_start..p.row_end]`, and stripes tile `[0, nrows)`
+            // the pointer outlives all uses; stripes tile `[0, nrows)`
             // without overlap (invariant of `partition_rows_balanced`).
-            let y_slice = unsafe { std::slice::from_raw_parts_mut(y_ptr.get(), m.nrows) };
-            m.spmv_into(x, y_slice, p.row_start, p.row_end);
+            let y_stripe = unsafe {
+                std::slice::from_raw_parts_mut(y_ptr.get().add(p.row_start), p.row_end - p.row_start)
+            };
+            m.spmv_into_stripe(x, y_stripe, p.row_start, p.row_end);
         });
     }
-}
 
-/// Pointer wrapper proving to the compiler we uphold disjointness manually.
-#[derive(Copy, Clone)]
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-impl SendPtr {
-    fn get(self) -> *mut f32 {
-        self.0
+    fn fused_shards(&self) -> usize {
+        self.parts.len().max(1)
+    }
+
+    fn parallel_for(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+        self.pool.scope_chunks(tasks, |i| f(i));
+    }
+
+    /// The tentpole sweep: each CU worker writes its `y` stripe, then —
+    /// while the stripe is still cache-hot — subtracts `beta_prev *
+    /// v_prev`, reduces its partial `dot(w, v)`, and (on reorth
+    /// iterations) its partial projections against every basis row, into
+    /// its own `partials` slot. The join merges the per-shard partials:
+    /// SpMV + axpy + dot (+ K reorth dots) in **one** fork/join over the
+    /// data instead of a parade of serial full-length passes.
+    fn apply_fused(&self, x: &[f32], y: &mut [f32], it: &mut FusedIteration<'_>) -> f64 {
+        assert_eq!(y.len(), self.matrix.nrows);
+        assert_eq!(x.len(), self.matrix.nrows);
+        self.applies.fetch_add(1, Ordering::Relaxed);
+        let m = &self.matrix;
+        let parts = &self.parts;
+        let shards = parts.len();
+        let nproj = it.basis.map_or(0, |b| b.rows());
+        let stride = 1 + nproj;
+        assert!(it.partials.len() >= shards * stride, "partials scratch too small");
+        assert!(it.projs.len() >= nproj, "projection buffer too small");
+        let (beta_prev, v_prev, basis) = (it.beta_prev, it.v_prev, it.basis);
+        if beta_prev != 0.0 {
+            assert_eq!(v_prev.len(), m.nrows);
+        }
+        let y_ptr = SendPtr(y.as_mut_ptr());
+        let p_ptr = SendPtr(it.partials.as_mut_ptr());
+        self.pool.scope_chunks(shards, |i| {
+            let p = parts[i];
+            let (r0, r1) = (p.row_start, p.row_end);
+            // SAFETY: as in `apply` — the scoped join outlives every use,
+            // stripes tile `[0, nrows)` disjointly so the stripe-local
+            // `&mut` views never overlap, and partials slot `i` (stride
+            // `1 + nproj`) is written by exactly this task.
+            let w_stripe = unsafe { std::slice::from_raw_parts_mut(y_ptr.get().add(r0), r1 - r0) };
+            let slot = unsafe { std::slice::from_raw_parts_mut(p_ptr.get().add(i * stride), stride) };
+            m.spmv_into_stripe(x, w_stripe, r0, r1);
+            slot[0] = if beta_prev != 0.0 {
+                linalg::axpy_dot(-beta_prev, &v_prev[r0..r1], w_stripe, &x[r0..r1])
+            } else {
+                linalg::dot(w_stripe, &x[r0..r1])
+            };
+            if let Some(basis) = basis {
+                basis.dots_range(w_stripe, r0, r1, &mut slot[1..]);
+            }
+        });
+        // Merge Unit for the reductions: fold the per-shard partials in
+        // shard order (deterministic for a fixed CU count).
+        let mut alpha = 0.0f64;
+        for s in 0..shards {
+            alpha += it.partials[s * stride];
+        }
+        for (j, proj) in it.projs.iter_mut().take(nproj).enumerate() {
+            let mut acc = 0.0f64;
+            for s in 0..shards {
+                acc += it.partials[s * stride + 1 + j];
+            }
+            *proj = acc;
+        }
+        alpha
     }
 }
 

@@ -1,0 +1,79 @@
+//! Thread-local allocation counting — test infrastructure for the
+//! zero-steady-state-allocation guarantee of the fused Lanczos datapath.
+//!
+//! [`CountingAlloc`] wraps the system allocator and counts allocations and
+//! allocated bytes **per thread**. It is test-only in the sense that
+//! nothing in the library registers it: a test binary opts in with
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static A: topk_eigen::util::alloc::CountingAlloc = topk_eigen::util::alloc::CountingAlloc;
+//! ```
+//!
+//! and then brackets the code under test with [`thread_allocations`]
+//! snapshots (see `tests/alloc_regression.rs`). Counters are thread-local
+//! so concurrent test threads do not interfere; pool-worker allocations are
+//! attributed to the worker thread, not the publisher — the regression test
+//! therefore measures the *publishing* thread, which is where every
+//! steady-state allocation of the Lanczos loop would occur (workers only
+//! run borrowed closures).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOCATIONS: Cell<u64> = const { Cell::new(0) };
+    static ALLOCATED_BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Allocation calls made by the current thread since it started.
+pub fn thread_allocations() -> u64 {
+    ALLOCATIONS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+/// Bytes requested by the current thread's allocation calls so far.
+pub fn thread_allocated_bytes() -> u64 {
+    ALLOCATED_BYTES.try_with(|c| c.get()).unwrap_or(0)
+}
+
+/// A [`GlobalAlloc`] that forwards to [`System`] and counts per-thread
+/// allocation calls. Register it with `#[global_allocator]` in a test
+/// binary; it costs two thread-local increments per allocation.
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    #[inline]
+    fn record(size: usize) {
+        // try_with: allocation can happen during TLS teardown, where the
+        // counters are already destroyed — skip counting, never panic.
+        let _ = ALLOCATIONS.try_with(|c| c.set(c.get() + 1));
+        let _ = ALLOCATED_BYTES.try_with(|c| c.set(c.get() + size as u64));
+    }
+}
+
+// SAFETY: forwards verbatim to `System`, which upholds the GlobalAlloc
+// contract; the counters do not allocate (const-initialized Cells).
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        Self::record(layout.size());
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // A realloc that grows is an allocation event for the purpose of
+        // the steady-state regression (shrinks stay in place for System).
+        if new_size > layout.size() {
+            Self::record(new_size - layout.size());
+        }
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        Self::record(layout.size());
+        unsafe { System.alloc_zeroed(layout) }
+    }
+}

@@ -7,10 +7,12 @@
 //! Each submodule is deliberately minimal but production-shaped: documented,
 //! tested, and used pervasively by the rest of the crate.
 
+pub mod alloc;
 pub mod cli;
 pub mod json;
 pub mod logging;
 pub mod pool;
+pub mod ptr;
 pub mod prop;
 pub mod rng;
 pub mod timer;

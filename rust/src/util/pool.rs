@@ -3,63 +3,165 @@
 //!
 //! The pool models the paper's hardware parallelism: each worker stands in
 //! for one SpMV Compute Unit (CU) fed by its own HBM pseudo-channel. Work is
-//! submitted as closures; `scope` provides structured fork/join over
-//! borrowed data (the common case for sharded SpMV over one matrix).
+//! submitted as closures; [`ThreadPool::scope_chunks`] provides structured
+//! fork/join over borrowed data (the common case for sharded SpMV over one
+//! matrix, and for the fused Lanczos vector sweeps).
+//!
+//! ## Reduction-friendly, allocation-free scoped dispatch
+//!
+//! `scope_chunks` sits on the per-iteration hot path of the fused Lanczos
+//! datapath (three fork/joins per iteration), so it is written to perform
+//! **zero heap allocations per call**: the scoped task descriptor lives on
+//! the publishing caller's stack and is shared with the persistent workers
+//! through a raw pointer guarded by the pool mutex — no `Box` per job, no
+//! `Arc` per scope. The publisher also participates in draining the task
+//! cursor, so a pool of `W` workers runs a scope on up to `W + 1` threads
+//! and a scope never deadlocks even when every worker is busy.
+//! `tests/alloc_regression.rs` pins the zero-allocation property.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-enum Msg {
-    Run(Job),
-    Shutdown,
+/// A scoped parallel task published to the workers: the borrowed closure is
+/// shared via raw pointer (valid while the publishing call blocks), tasks
+/// are claimed through an atomic cursor, and completions are counted so the
+/// publisher knows when every index has run.
+struct ScopeTask {
+    fptr: *const (),
+    call: unsafe fn(*const (), usize),
+    next: AtomicUsize,
+    done: AtomicUsize,
+    tasks: usize,
+    /// Set when any task index panicked; remaining indices are skipped and
+    /// the publisher re-raises after the join (so the stack-held closure is
+    /// never freed while a worker can still reach it).
+    panicked: AtomicBool,
+    /// First panic's payload, re-raised verbatim by the publisher so the
+    /// original assertion message survives the fork/join.
+    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
 }
 
-/// Fixed-size thread pool with FIFO dispatch.
+impl ScopeTask {
+    /// Claim-and-run loop shared by workers and the publisher. Never
+    /// unwinds: a panicking task marks the scope poisoned (skipping the
+    /// indices not yet started), every claimed index still counts toward
+    /// `done`, and the publisher re-raises the first panic after the join.
+    ///
+    /// # Safety
+    /// `task` must point to a live `ScopeTask` whose closure outlives the
+    /// call — guaranteed by `scope_chunks`, which keeps the descriptor on
+    /// its stack and blocks until `done == tasks` and no worker holds the
+    /// pointer (`scope_users == 0`).
+    unsafe fn drain(task: *const ScopeTask) {
+        let t = unsafe { &*task };
+        loop {
+            let i = t.next.fetch_add(1, Ordering::Relaxed);
+            if i >= t.tasks {
+                break;
+            }
+            if !t.panicked.load(Ordering::Relaxed) {
+                let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    // SAFETY: see above — the closure is alive for the whole
+                    // drain.
+                    unsafe { (t.call)(t.fptr, i) }
+                }));
+                if let Err(payload) = run {
+                    t.panicked.store(true, Ordering::Relaxed);
+                    let mut slot = t.panic_payload.lock().expect("panic slot poisoned");
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                }
+            }
+            t.done.fetch_add(1, Ordering::Release);
+        }
+    }
+}
+
+struct PoolState {
+    /// Fire-and-forget jobs from [`ThreadPool::execute`].
+    queue: VecDeque<Job>,
+    /// Currently-published scoped task (null when idle). Points into the
+    /// stack frame of the blocked `scope_chunks` caller.
+    scope: *const ScopeTask,
+    /// Thread that published the current scope — publishing again from the
+    /// same thread (its own scoped task calling back into the pool) would
+    /// self-deadlock, so it is detected and rejected.
+    scope_publisher: Option<std::thread::ThreadId>,
+    /// Bumped per publication so a worker joins each scope at most once.
+    scope_gen: u64,
+    /// Workers currently holding the scope pointer; the publisher may not
+    /// return (and free the descriptor) until this is back to zero.
+    scope_users: usize,
+    /// `execute` jobs queued or running (for [`ThreadPool::wait_idle`]).
+    jobs_pending: usize,
+    /// This pool's worker threads (registered at startup) — lets debug
+    /// builds catch the deadlock-prone "scope published from inside a
+    /// worker" pattern with a panic instead of a hang.
+    worker_ids: Vec<std::thread::ThreadId>,
+    shutdown: bool,
+}
+
+// SAFETY: the raw `scope` pointer is only ever dereferenced while the
+// publishing `scope_chunks` call blocks (see ScopeTask::drain), so moving
+// the state between threads under the pool mutex is sound.
+unsafe impl Send for PoolState {}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for queue jobs, a new scope, or shutdown.
+    work_cv: Condvar,
+    /// `wait_idle` and scope publishers wait here for completions.
+    done_cv: Condvar,
+}
+
+enum Work {
+    Job(Job),
+    Scope(*const ScopeTask),
+    Exit,
+}
+
+/// Fixed-size thread pool with FIFO job dispatch and allocation-free
+/// scoped fork/join.
 pub struct ThreadPool {
-    tx: Sender<Msg>,
+    shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
     size: usize,
-    in_flight: Arc<(Mutex<usize>, std::sync::Condvar)>,
 }
 
 impl ThreadPool {
     /// Spawn `size` workers (`size >= 1`).
     pub fn new(size: usize) -> Self {
         assert!(size >= 1, "pool needs at least one worker");
-        let (tx, rx) = channel::<Msg>();
-        let rx = Arc::new(Mutex::new(rx));
-        let in_flight = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                queue: VecDeque::new(),
+                scope: std::ptr::null(),
+                scope_publisher: None,
+                scope_gen: 0,
+                scope_users: 0,
+                jobs_pending: 0,
+                worker_ids: Vec::with_capacity(size),
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
         let mut workers = Vec::with_capacity(size);
         for i in 0..size {
-            let rx: Arc<Mutex<Receiver<Msg>>> = Arc::clone(&rx);
-            let in_flight = Arc::clone(&in_flight);
+            let shared = Arc::clone(&shared);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("cu-worker-{i}"))
-                    .spawn(move || loop {
-                        let msg = {
-                            let guard = rx.lock().expect("pool queue poisoned");
-                            guard.recv()
-                        };
-                        match msg {
-                            Ok(Msg::Run(job)) => {
-                                job();
-                                let (lock, cvar) = &*in_flight;
-                                let mut n = lock.lock().unwrap();
-                                *n -= 1;
-                                cvar.notify_all();
-                            }
-                            Ok(Msg::Shutdown) | Err(_) => break,
-                        }
-                    })
+                    .spawn(move || Self::worker_loop(&shared))
                     .expect("failed to spawn pool worker"),
             );
         }
-        Self { tx, workers, size, in_flight }
+        Self { shared, workers, size }
     }
 
     /// Pool with one worker per available hardware thread.
@@ -73,33 +175,93 @@ impl ThreadPool {
         self.size
     }
 
-    /// Fire-and-forget execution of an owned closure.
-    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
-        {
-            let (lock, _) = &*self.in_flight;
-            *lock.lock().unwrap() += 1;
+    fn worker_loop(shared: &Shared) {
+        shared
+            .state
+            .lock()
+            .expect("pool state poisoned")
+            .worker_ids
+            .push(std::thread::current().id());
+        // Generation of the last scope this worker joined (never re-join).
+        let mut seen_gen = 0u64;
+        loop {
+            let work = {
+                let mut st = shared.state.lock().expect("pool state poisoned");
+                loop {
+                    if let Some(job) = st.queue.pop_front() {
+                        break Work::Job(job);
+                    }
+                    if !st.scope.is_null() && st.scope_gen != seen_gen {
+                        seen_gen = st.scope_gen;
+                        st.scope_users += 1;
+                        break Work::Scope(st.scope);
+                    }
+                    if st.shutdown {
+                        break Work::Exit;
+                    }
+                    st = shared.work_cv.wait(st).expect("pool state poisoned");
+                }
+            };
+            match work {
+                Work::Job(job) => {
+                    // A panicking job must not kill the worker or leak the
+                    // jobs_pending count (wait_idle would hang forever).
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                    let mut st = shared.state.lock().expect("pool state poisoned");
+                    st.jobs_pending -= 1;
+                    drop(st);
+                    shared.done_cv.notify_all();
+                }
+                Work::Scope(task) => {
+                    // SAFETY: scope_users was incremented under the lock, so
+                    // the publisher blocks until we are done with `task`.
+                    unsafe { ScopeTask::drain(task) };
+                    let mut st = shared.state.lock().expect("pool state poisoned");
+                    st.scope_users -= 1;
+                    drop(st);
+                    shared.done_cv.notify_all();
+                }
+                Work::Exit => return,
+            }
         }
-        self.tx.send(Msg::Run(Box::new(job))).expect("pool is shut down");
+    }
+
+    /// Fire-and-forget execution of an owned closure. A panicking job is
+    /// contained: the worker survives and the pending-job count stays
+    /// balanced (the panic itself is discarded — jobs that can fail should
+    /// report through their own channel).
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        let mut st = self.shared.state.lock().expect("pool state poisoned");
+        assert!(!st.shutdown, "pool is shut down");
+        st.jobs_pending += 1;
+        st.queue.push_back(Box::new(job));
+        drop(st);
+        self.shared.work_cv.notify_one();
     }
 
     /// Block until every submitted job has completed.
     pub fn wait_idle(&self) {
-        let (lock, cvar) = &*self.in_flight;
-        let mut n = lock.lock().unwrap();
-        while *n > 0 {
-            n = cvar.wait(n).unwrap();
+        let mut st = self.shared.state.lock().expect("pool state poisoned");
+        while st.jobs_pending > 0 {
+            st = self.shared.done_cv.wait(st).expect("pool state poisoned");
         }
     }
 
     /// Structured fork/join over borrowed data: run `f` for each index in
-    /// `0..tasks`, partitioned across workers, and join before returning.
+    /// `0..tasks`, partitioned across the pool's **persistent** workers and
+    /// the calling thread, and join before returning.
     ///
-    /// Dispatches to the pool's **persistent** workers (no thread spawn per
-    /// call — this sits on the per-iteration SpMV hot path, where a
-    /// spawn-per-apply costs more than a small shard's compute; see
-    /// EXPERIMENTS.md §Perf). Borrowed state is passed through a raw
-    /// pointer that is guaranteed valid because this function blocks until
-    /// every worker has finished.
+    /// Allocation-free: the task descriptor lives on this call's stack and
+    /// workers claim indices through an atomic cursor (see module docs).
+    /// Concurrent publishers serialize (one scope active at a time). Must
+    /// not be called from inside a worker of the same pool (asserted — a
+    /// nested scope would wait on itself forever).
+    ///
+    /// Panic safety: a panic in `f` is caught on whichever thread ran it,
+    /// the remaining unstarted indices are skipped, the join still
+    /// completes (so the borrowed closure is never freed while a worker
+    /// can reach it), and the first panic's payload is re-raised here on
+    /// the publisher — the pool itself stays fully usable.
     pub fn scope_chunks<F>(&self, tasks: usize, f: F)
     where
         F: Fn(usize) + Send + Sync,
@@ -107,64 +269,81 @@ impl ThreadPool {
         if tasks == 0 {
             return;
         }
-        let workers = self.size.min(tasks);
-        if workers <= 1 {
-            for i in 0..tasks {
-                f(i);
-            }
+        if tasks == 1 {
+            f(0);
             return;
         }
-
-        struct Ctx {
-            fptr: *const (),
-            call: unsafe fn(*const (), usize),
-            next: AtomicUsize,
-            tasks: usize,
-            active: Mutex<usize>,
-            done: std::sync::Condvar,
-        }
-        // SAFETY: the raw pointer is only dereferenced while `scope_chunks`
-        // blocks below, so the borrow of `f` cannot dangle.
-        unsafe impl Send for Ctx {}
-        unsafe impl Sync for Ctx {}
 
         unsafe fn call_impl<F: Fn(usize)>(p: *const (), i: usize) {
             unsafe { (*(p as *const F))(i) }
         }
 
-        let ctx = Arc::new(Ctx {
+        let task = ScopeTask {
             fptr: &f as *const F as *const (),
             call: call_impl::<F>,
             next: AtomicUsize::new(0),
             tasks,
-            active: Mutex::new(workers),
-            done: std::sync::Condvar::new(),
-        });
-        for _ in 0..workers {
-            let c = Arc::clone(&ctx);
-            self.execute(move || {
-                loop {
-                    let i = c.next.fetch_add(1, Ordering::Relaxed);
-                    if i >= c.tasks {
-                        break;
-                    }
-                    // SAFETY: see Ctx — `f` outlives this call.
-                    unsafe { (c.call)(c.fptr, i) }
-                }
-                let mut active = c.active.lock().unwrap();
-                *active -= 1;
-                if *active == 0 {
-                    c.done.notify_all();
-                }
-            });
+            done: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+            panic_payload: Mutex::new(None),
+        };
+        {
+            let me = std::thread::current().id();
+            let mut st = self.shared.state.lock().expect("pool state poisoned");
+            // Publishing from inside one of this pool's own scoped tasks
+            // would deadlock (the blocked index can never finish while its
+            // thread waits for the nested scope): fail fast instead of
+            // hanging, whether the task ran on a worker or on the
+            // publishing thread itself. Two ThreadId checks per fork/join
+            // are negligible next to the join.
+            assert!(
+                !st.worker_ids.contains(&me),
+                "scope_chunks called from inside a worker of the same pool"
+            );
+            assert!(
+                !(!st.scope.is_null() && st.scope_publisher == Some(me)),
+                "scope_chunks re-entered from the publishing thread's own scoped task"
+            );
+            // One scope at a time: wait for any concurrent publisher.
+            while !st.scope.is_null() {
+                st = self.shared.done_cv.wait(st).expect("pool state poisoned");
+            }
+            st.scope = &task;
+            st.scope_publisher = Some(me);
+            st.scope_gen = st.scope_gen.wrapping_add(1);
+            drop(st);
+            self.shared.work_cv.notify_all();
         }
-        let mut active = ctx.active.lock().unwrap();
-        while *active > 0 {
-            active = ctx.done.wait(active).unwrap();
+        // The publisher participates: drain alongside the workers so the
+        // scope completes even when every worker is busy elsewhere.
+        // SAFETY: `task` is on this stack frame and we block below until
+        // every index ran and no worker still holds the pointer; `drain`
+        // never unwinds (task panics are latched into `task.panicked`).
+        unsafe { ScopeTask::drain(&task) };
+        let mut st = self.shared.state.lock().expect("pool state poisoned");
+        while task.done.load(Ordering::Acquire) < tasks || st.scope_users > 0 {
+            st = self.shared.done_cv.wait(st).expect("pool state poisoned");
+        }
+        st.scope = std::ptr::null();
+        st.scope_publisher = None;
+        drop(st);
+        // Wake any publisher waiting for the scope slot.
+        self.shared.done_cv.notify_all();
+        // Re-raise the first task panic with its original payload so the
+        // failing assertion's message survives the fork/join.
+        let payload = task.panic_payload.lock().expect("panic slot poisoned").take();
+        if let Some(payload) = payload {
+            std::panic::resume_unwind(payload);
         }
     }
 
     /// Parallel map over indices `0..tasks`, preserving order of results.
+    ///
+    /// Dispatches through [`ThreadPool::scope_chunks`] — i.e. to the pool's
+    /// persistent workers, not to freshly spawned OS threads — so warm-path
+    /// callers pay no thread-spawn cost per call. Like `scope_chunks`, it
+    /// must not be called from inside a worker of the same pool (asserted —
+    /// the alternative is a silent deadlock).
     pub fn map<T, F>(&self, tasks: usize, f: F) -> Vec<T>
     where
         T: Send,
@@ -173,21 +352,10 @@ impl ThreadPool {
         let mut out: Vec<Option<T>> = (0..tasks).map(|_| None).collect();
         {
             let slots = Mutex::new(&mut out);
-            let next = AtomicUsize::new(0);
-            let workers = self.size.min(tasks.max(1));
-            std::thread::scope(|s| {
-                for _ in 0..workers {
-                    s.spawn(|| loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= tasks {
-                            break;
-                        }
-                        let v = f(i);
-                        // Short critical section: one slot write.
-                        let mut guard = slots.lock().unwrap();
-                        guard[i] = Some(v);
-                    });
-                }
+            self.scope_chunks(tasks, |i| {
+                let v = f(i);
+                // Short critical section: one slot write.
+                slots.lock().expect("map slots poisoned")[i] = Some(v);
             });
         }
         out.into_iter().map(|o| o.expect("worker skipped a slot")).collect()
@@ -196,9 +364,11 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        for _ in 0..self.workers.len() {
-            let _ = self.tx.send(Msg::Shutdown);
+        {
+            let mut st = self.shared.state.lock().expect("pool state poisoned");
+            st.shutdown = true;
         }
+        self.shared.work_cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -237,6 +407,58 @@ mod tests {
     }
 
     #[test]
+    fn scope_chunks_runs_on_pool_workers_and_caller_only() {
+        // Dispatch must hit the persistent cu-workers (or the caller), never
+        // a freshly spawned thread.
+        let pool = ThreadPool::new(2);
+        let caller = std::thread::current().id();
+        let ok = AtomicU64::new(0);
+        pool.scope_chunks(16, |_| {
+            let here = std::thread::current();
+            let on_pool = here.name().is_some_and(|n| n.starts_with("cu-worker-"));
+            if on_pool || here.id() == caller {
+                ok.fetch_add(1, Ordering::SeqCst);
+            }
+            // Give workers a chance to join in.
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn consecutive_scopes_reuse_workers() {
+        let pool = ThreadPool::new(3);
+        for round in 0..50usize {
+            let hits: Vec<AtomicU64> = (0..7).map(|_| AtomicU64::new(0)).collect();
+            pool.scope_chunks(7, |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "round {round} index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn scope_and_execute_interleave() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let scoped = AtomicU64::new(0);
+        pool.scope_chunks(20, |_| {
+            scoped.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+        assert_eq!(scoped.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
     fn map_preserves_order() {
         let pool = ThreadPool::new(8);
         let out = pool.map(100, |i| i * i);
@@ -247,9 +469,7 @@ mod tests {
     fn map_borrows_local_state() {
         let pool = ThreadPool::new(2);
         let data: Vec<f64> = (0..32).map(|i| i as f64).collect();
-        let out = pool.map(4, |shard| {
-            data[shard * 8..(shard + 1) * 8].iter().sum::<f64>()
-        });
+        let out = pool.map(4, |shard| data[shard * 8..(shard + 1) * 8].iter().sum::<f64>());
         assert_eq!(out.iter().sum::<f64>(), (0..32).sum::<usize>() as f64);
     }
 
@@ -275,5 +495,64 @@ mod tests {
         pool.wait_idle();
         drop(pool);
         assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_worker_or_leak_pending() {
+        let pool = ThreadPool::new(1);
+        pool.execute(|| panic!("job boom"));
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        pool.execute(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        // The single worker must survive the panic, run the second job,
+        // and wait_idle must not hang on a leaked pending count.
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn scoped_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(3);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.scope_chunks(16, |i| {
+                if i == 7 {
+                    panic!("boom");
+                }
+            });
+        }));
+        // The original payload must survive the re-raise.
+        let payload = r.expect_err("panic must propagate to the publisher");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
+        // The pool and its workers must remain fully usable afterwards.
+        let sum = AtomicU64::new(0);
+        pool.scope_chunks(10, |i| {
+            sum.fetch_add(i as u64 + 1, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 55);
+        let out = pool.map(5, |i| i * 2);
+        assert_eq!(out, vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn concurrent_publishers_serialize() {
+        // Two threads publishing scopes on one pool must not corrupt each
+        // other's reductions.
+        let pool = Arc::new(ThreadPool::new(3));
+        std::thread::scope(|s| {
+            for t in 0..2 {
+                let pool = Arc::clone(&pool);
+                s.spawn(move || {
+                    for _ in 0..25 {
+                        let sum = AtomicU64::new(0);
+                        pool.scope_chunks(10, |i| {
+                            sum.fetch_add(i as u64 + 1, Ordering::SeqCst);
+                        });
+                        assert_eq!(sum.load(Ordering::SeqCst), 55, "publisher {t}");
+                    }
+                });
+            }
+        });
     }
 }

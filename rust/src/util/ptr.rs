@@ -1,0 +1,39 @@
+//! Shared raw-pointer wrapper for disjoint-chunk parallel writes.
+//!
+//! The sharded SpMV engine and the fused Lanczos vector sweeps both hand
+//! every worker a full-length output buffer through a raw pointer and rely
+//! on a manual disjointness argument: each task writes only its own index
+//! range, and the structured fork/join
+//! ([`crate::util::pool::ThreadPool::scope_chunks`]) returns before the
+//! pointee can move or drop. [`SendPtr`] is the single place that unsafe
+//! `Send`/`Sync` assertion lives, so the aliasing contract has one audit
+//! point instead of one copy per call site.
+
+/// Raw mutable pointer asserted to be safe to share across a structured
+/// fork/join. The safety obligation is the *caller's*: tasks must write
+/// disjoint ranges and the join must complete before the pointee goes
+/// away.
+pub struct SendPtr<T>(
+    /// The shared address.
+    pub *mut T,
+);
+
+// SAFETY: the wrapper only transports the address; all dereferences happen
+// inside scoped tasks whose disjointness and lifetime the publishing call
+// site proves (see the SAFETY comments at each use).
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> Copy for SendPtr<T> {}
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T> SendPtr<T> {
+    /// The wrapped pointer.
+    pub fn get(self) -> *mut T {
+        self.0
+    }
+}

@@ -1,0 +1,100 @@
+//! Steady-state allocation regression for the fused Lanczos iteration.
+//!
+//! The fused datapath must perform **zero heap allocations per iteration**
+//! after warmup: all scratch lives in a reused `LanczosWorkspace`, the
+//! basis is one flat arena allocation per solve, and the pool's scoped
+//! dispatch publishes stack descriptors instead of boxing jobs. This test
+//! registers the thread-local counting allocator from `util::alloc` and
+//! pins the property by showing the per-solve allocation count does not
+//! grow with the iteration count (so the per-iteration increment is zero),
+//! and stays under a small per-solve constant.
+//!
+//! Counting is thread-local to the publishing thread; the Lanczos loop
+//! owns every steady-state allocation site (pool workers only execute
+//! borrowed closures), so this is the thread where a regression would
+//! show up.
+
+#[global_allocator]
+static ALLOC: topk_eigen::util::alloc::CountingAlloc = topk_eigen::util::alloc::CountingAlloc;
+
+use std::sync::Arc;
+use topk_eigen::graphs;
+use topk_eigen::lanczos::{lanczos_typed_ws, LanczosOptions, LanczosResult, LanczosWorkspace};
+use topk_eigen::lanczos::{ReorthPolicy, ShardedSpmv};
+use topk_eigen::sparse::{normalize_frobenius, PartitionPolicy};
+use topk_eigen::util::alloc::thread_allocations;
+
+/// Allocations attributed to this thread while running `f`, excluding the
+/// cost of dropping its result (measured before the drop).
+fn allocs_during<T>(f: impl FnOnce() -> T) -> u64 {
+    let before = thread_allocations();
+    let out = f();
+    let during = thread_allocations() - before;
+    drop(out);
+    during
+}
+
+#[test]
+fn fused_iterations_allocate_nothing_after_warmup() {
+    let mut g = graphs::rmat(1 << 11, 8 << 11, 0.57, 0.19, 0.19, 9);
+    normalize_frobenius(&mut g);
+    let csr = Arc::new(g.to_csr());
+    let engine = ShardedSpmv::with_own_pool(Arc::clone(&csr), 4, PartitionPolicy::BalancedNnz);
+    let opts = |k| LanczosOptions { k, reorth: ReorthPolicy::EveryN(2), fused: true, ..Default::default() };
+
+    let mut ws = LanczosWorkspace::new();
+    // Warmup at the largest shape: grows the workspace buffers once.
+    let _warm: LanczosResult = lanczos_typed_ws(&engine, &opts(24), &mut ws);
+
+    // Per-solve allocations at three iteration counts. Each solve still
+    // allocates a constant set (basis arena, alpha/beta vectors, the
+    // result's tridiagonal) — but the count must NOT scale with k, which
+    // is exactly the "zero allocations per iteration" property.
+    let a6 = allocs_during(|| -> LanczosResult { lanczos_typed_ws(&engine, &opts(6), &mut ws) });
+    let a12 = allocs_during(|| -> LanczosResult { lanczos_typed_ws(&engine, &opts(12), &mut ws) });
+    let a24 = allocs_during(|| -> LanczosResult { lanczos_typed_ws(&engine, &opts(24), &mut ws) });
+    assert_eq!(a6, a12, "allocation count grew with iteration count ({a6} -> {a12})");
+    assert_eq!(a12, a24, "allocation count grew with iteration count ({a12} -> {a24})");
+    // The constant itself stays small: one basis arena + the handful of
+    // result vectors. A fat bound catches gross regressions (per-iteration
+    // boxing would add dozens) without pinning implementation details.
+    assert!(a24 <= 16, "per-solve allocation constant too large: {a24}");
+}
+
+#[test]
+fn unfused_path_also_reuses_the_workspace() {
+    // The serial reference shares the workspace plumbing; its per-solve
+    // allocations must be k-independent too (reorth runs in place).
+    let mut g = graphs::rmat(1 << 10, 8 << 10, 0.57, 0.19, 0.19, 17);
+    normalize_frobenius(&mut g);
+    let csr = Arc::new(g.to_csr());
+    let engine = ShardedSpmv::with_own_pool(Arc::clone(&csr), 4, PartitionPolicy::BalancedNnz);
+    let opts = |k| LanczosOptions { k, reorth: ReorthPolicy::EveryN(2), fused: false, ..Default::default() };
+    let mut ws = LanczosWorkspace::new();
+    let _warm: LanczosResult = lanczos_typed_ws(&engine, &opts(16), &mut ws);
+    let a8 = allocs_during(|| -> LanczosResult { lanczos_typed_ws(&engine, &opts(8), &mut ws) });
+    let a16 = allocs_during(|| -> LanczosResult { lanczos_typed_ws(&engine, &opts(16), &mut ws) });
+    assert_eq!(a8, a16, "unfused per-solve allocations grew with k ({a8} -> {a16})");
+}
+
+#[test]
+fn counting_allocator_counts_this_thread_only() {
+    // Sanity-check the harness itself: an allocation on this thread is
+    // counted; a worker thread's allocation is attributed to the worker.
+    use topk_eigen::util::alloc::thread_allocated_bytes;
+    let before = thread_allocations();
+    let v: Vec<u8> = Vec::with_capacity(4096);
+    assert!(thread_allocations() > before, "own allocation must count");
+    drop(v);
+    // A worker's 16 MiB buffer must not be attributed to this thread —
+    // spawning costs a few small allocations here, nowhere near 16 MiB.
+    let bytes_before = thread_allocated_bytes();
+    std::thread::spawn(|| {
+        let v: Vec<u8> = Vec::with_capacity(16 << 20);
+        std::hint::black_box(&v);
+    })
+    .join()
+    .unwrap();
+    let spawned_bytes = thread_allocated_bytes() - bytes_before;
+    assert!(spawned_bytes < (16 << 20), "worker allocation leaked into this thread: {spawned_bytes}");
+}

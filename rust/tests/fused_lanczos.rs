@@ -1,0 +1,246 @@
+//! Property suite for the fused single-sweep Lanczos datapath: the fused
+//! path (shard-parallel SpMV + axpy + dot + blocked classical-GS reorth)
+//! must produce the same tridiagonal as the unfused serial-pass reference
+//! across every storage precision, shard count, and reorthogonalization
+//! policy — including breakdown / early-truncation cases.
+//!
+//! Tolerances: without reorthogonalization the two paths perform
+//! structurally identical arithmetic (only the shard-merge reduction order
+//! differs — f64-noise level, bound 1e-10; bitwise on a single f32 shard).
+//! On reorthogonalization iterations the paths differ by Gram-Schmidt
+//! variant: blocked classical GS computes every projection from the
+//! pre-`alpha v` residual, modified GS from the sequentially updated one —
+//! the resulting vectors differ by O(eps_f32) *within the basis span*, so
+//! later coefficients drift at the low-1e-9 scale on normalized inputs.
+//! Fixed-point storage adds quantization cliffs on top (a tiny difference
+//! in `w` near a rounding boundary moves a stored word by one ulp,
+//! shifting later coefficients by ~ulp/sqrt(n) each); those bounds are
+//! ulp-scaled.
+
+use std::sync::Arc;
+use topk_eigen::fixed::{Dataword, Q1_15, Q1_31, Q2_30};
+use topk_eigen::graphs;
+use topk_eigen::lanczos::{lanczos_typed, LanczosOptions, LanczosResult, ReorthPolicy, ShardedSpmv};
+use topk_eigen::sparse::{normalize_frobenius, CooMatrix, CsrMatrix, PartitionPolicy};
+
+const SHARD_COUNTS: [usize; 4] = [1, 3, 5, 8];
+const POLICIES: [ReorthPolicy; 4] =
+    [ReorthPolicy::None, ReorthPolicy::Every, ReorthPolicy::EveryN(2), ReorthPolicy::EveryN(3)];
+
+/// Frobenius-normalized RMAT test graph (entries in (-1,1), as the typed
+/// datapath requires).
+fn test_graph(n: usize, seed: u64) -> CsrMatrix {
+    let mut g = graphs::rmat(n, 8 * n, 0.57, 0.19, 0.19, seed);
+    normalize_frobenius(&mut g);
+    g.to_csr()
+}
+
+/// Tridiagonal agreement bound for one storage format and reorth policy
+/// (see the module docs for the error model). The reorth base is
+/// calibrated against a NumPy reference simulation of both Gram-Schmidt
+/// variants on Frobenius-normalized n=512 graphs, which measures worst
+/// drift ~1.6e-8 — the bound keeps a ~6x margin.
+fn bound<V: Dataword>(n: usize, k: usize, reorth: ReorthPolicy) -> f64 {
+    let base = if reorth == ReorthPolicy::None { 1e-10 } else { 1e-7 };
+    if V::IS_FIXED {
+        base + 8.0 * (k as f64) * V::ulp() / (n as f64).sqrt()
+    } else {
+        base
+    }
+}
+
+fn assert_tridiag_match<V: Dataword>(fused: &LanczosResult<V>, plain: &LanczosResult<V>, tol: f64, label: &str) {
+    assert_eq!(fused.breakdown_at, plain.breakdown_at, "{label}: breakdown mismatch");
+    assert_eq!(fused.k(), plain.k(), "{label}: k mismatch");
+    for i in 0..fused.k() {
+        let (a, b) = (fused.tridiag.alpha[i], plain.tridiag.alpha[i]);
+        assert!((a - b).abs() <= tol, "{label}: alpha[{i}] {a} vs {b} (tol {tol})");
+    }
+    for i in 0..fused.tridiag.beta.len() {
+        let (a, b) = (fused.tridiag.beta[i], plain.tridiag.beta[i]);
+        assert!((a - b).abs() <= tol, "{label}: beta[{i}] {a} vs {b} (tol {tol})");
+    }
+}
+
+fn check_format<V: Dataword>(csr: &Arc<CsrMatrix>, k: usize) {
+    let typed: Arc<CsrMatrix<V>> = Arc::new(csr.to_precision::<V>());
+    let n = csr.nrows;
+    for cus in SHARD_COUNTS {
+        let engine = ShardedSpmv::with_own_pool(Arc::clone(&typed), cus, PartitionPolicy::BalancedNnz);
+        for reorth in POLICIES {
+            let tol = bound::<V>(n, k, reorth);
+            let label = format!("{}/cus{cus}/{}", V::NAME, reorth.name());
+            let fused: LanczosResult<V> =
+                lanczos_typed(&engine, &LanczosOptions { k, reorth, fused: true, ..Default::default() });
+            let plain: LanczosResult<V> =
+                lanczos_typed(&engine, &LanczosOptions { k, reorth, fused: false, ..Default::default() });
+            assert_tridiag_match(&fused, &plain, tol, &label);
+            // Telemetry: the fused path runs one fused sweep per SpMV; the
+            // unfused path runs none.
+            assert_eq!(fused.fused_sweeps, fused.spmv_count, "{label}");
+            assert_eq!(plain.fused_sweeps, 0, "{label}");
+            assert!(plain.vector_passes > fused.vector_passes, "{label}: fusion must reduce passes");
+        }
+    }
+}
+
+#[test]
+fn fused_matches_unfused_f32_storage() {
+    let csr = Arc::new(test_graph(1 << 9, 11));
+    check_format::<f32>(&csr, 16);
+}
+
+#[test]
+fn fused_matches_unfused_q131_storage() {
+    let csr = Arc::new(test_graph(1 << 9, 12));
+    check_format::<Q1_31>(&csr, 16);
+}
+
+#[test]
+fn fused_matches_unfused_q230_storage() {
+    let csr = Arc::new(test_graph(1 << 9, 13));
+    check_format::<Q2_30>(&csr, 16);
+}
+
+#[test]
+fn fused_matches_unfused_q115_storage() {
+    let csr = Arc::new(test_graph(1 << 9, 14));
+    check_format::<Q1_15>(&csr, 16);
+}
+
+#[test]
+fn fused_is_bitwise_without_reorth_on_single_shard_f32() {
+    // With one shard and no basis projections, the fused sweep kernels
+    // share the serial 4-lane structure exactly — the tridiagonal must be
+    // bitwise identical.
+    let csr = Arc::new(test_graph(1 << 8, 21));
+    let engine = ShardedSpmv::with_own_pool(Arc::clone(&csr), 1, PartitionPolicy::EqualRows);
+    let opts = |fused| LanczosOptions { k: 12, reorth: ReorthPolicy::None, fused, ..Default::default() };
+    let fused: LanczosResult = lanczos_typed(&engine, &opts(true));
+    let plain: LanczosResult = lanczos_typed(&engine, &opts(false));
+    for i in 0..12 {
+        assert_eq!(
+            fused.tridiag.alpha[i].to_bits(),
+            plain.tridiag.alpha[i].to_bits(),
+            "alpha[{i}]: {} vs {}",
+            fused.tridiag.alpha[i],
+            plain.tridiag.alpha[i]
+        );
+    }
+    for i in 0..fused.tridiag.beta.len() {
+        assert_eq!(fused.tridiag.beta[i].to_bits(), plain.tridiag.beta[i].to_bits(), "beta[{i}]");
+    }
+    // And the stored bases agree word-for-word.
+    for i in 0..fused.basis.len() {
+        assert_eq!(&fused.basis[i], &plain.basis[i], "row {i}");
+    }
+}
+
+#[test]
+fn fused_is_deterministic_across_shard_counts_vs_serial_operator() {
+    // Different CU counts change the reduction partitioning but must stay
+    // within floating noise of the serial (default-fallback) operator.
+    let csr = Arc::new(test_graph(1 << 9, 31));
+    let reference: LanczosResult =
+        lanczos_typed(csr.as_ref(), &LanczosOptions { k: 12, reorth: ReorthPolicy::EveryN(2), ..Default::default() });
+    for cus in SHARD_COUNTS {
+        let engine = ShardedSpmv::with_own_pool(Arc::clone(&csr), cus, PartitionPolicy::BalancedNnz);
+        let res: LanczosResult =
+            lanczos_typed(&engine, &LanczosOptions { k: 12, reorth: ReorthPolicy::EveryN(2), ..Default::default() });
+        // Both runs are the fused CGS path: only the reduction partitioning
+        // differs, so the agreement is much tighter than fused-vs-unfused.
+        assert_tridiag_match(&res, &reference, 1e-9, &format!("cus{cus}"));
+    }
+}
+
+#[test]
+fn breakdown_and_truncation_match() {
+    // Identity at n = 16: the uniform start is 0.25 per element (an exact
+    // dyadic), so w - alpha*v vanishes *exactly* in f32 and both paths
+    // must break down at iteration 1 with alpha = 1 for any shard count.
+    let mut eye = CooMatrix::new(16, 16);
+    for i in 0..16 {
+        eye.push(i, i, 1.0);
+    }
+    let eye = Arc::new(eye.to_csr());
+    for cus in [1usize, 3] {
+        let engine = ShardedSpmv::with_own_pool(Arc::clone(&eye), cus, PartitionPolicy::EqualRows);
+        for fused in [true, false] {
+            let res: LanczosResult = lanczos_typed(&engine, &LanczosOptions { k: 8, fused, ..Default::default() });
+            assert_eq!(res.breakdown_at, Some(1), "cus={cus} fused={fused}");
+            assert_eq!(res.k(), 1, "cus={cus} fused={fused}");
+            assert!((res.tridiag.alpha[0] - 1.0).abs() < 1e-6);
+            assert_eq!(res.basis.len(), 1, "basis truncated with the recurrence");
+        }
+    }
+
+    // Rank-2 spectrum: the Krylov space closes after 2 iterations up to
+    // f32 rounding. Whether the residual dips under the breakdown
+    // tolerance is arithmetic-dependent — what must hold is that both
+    // paths make the *same* call and agree on the leading coefficients.
+    let mut two = CooMatrix::new(32, 32);
+    for i in 0..32 {
+        two.push(i, i, if i % 2 == 0 { 0.5 } else { -0.25 });
+    }
+    let two = Arc::new(two.to_csr());
+    let engine = ShardedSpmv::with_own_pool(Arc::clone(&two), 5, PartitionPolicy::BalancedNnz);
+    let fused: LanczosResult = lanczos_typed(&engine, &LanczosOptions { k: 4, fused: true, ..Default::default() });
+    let plain: LanczosResult = lanczos_typed(&engine, &LanczosOptions { k: 4, fused: false, ..Default::default() });
+    for i in 0..2 {
+        assert!(
+            (fused.tridiag.alpha[i] - plain.tridiag.alpha[i]).abs() < 1e-9,
+            "rank-2 alpha[{i}]: {} vs {}",
+            fused.tridiag.alpha[i],
+            plain.tridiag.alpha[i]
+        );
+    }
+    assert!(
+        (fused.tridiag.beta[0] - plain.tridiag.beta[0]).abs() < 1e-9,
+        "rank-2 beta[0]: {} vs {}",
+        fused.tridiag.beta[0],
+        plain.tridiag.beta[0]
+    );
+}
+
+#[test]
+fn fused_spectra_survive_the_full_solve_path() {
+    // End-to-end: SolveOptions.fuse toggles the datapath; eigenvalues must
+    // agree to solver tolerance either way (the --no-fuse escape hatch).
+    use topk_eigen::coordinator::{SolveOptions, Solver};
+    let m = graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 41);
+    let mut fused_solver = Solver::new(SolveOptions { k: 8, fuse: true, ..Default::default() });
+    let mut plain_solver = Solver::new(SolveOptions { k: 8, fuse: false, ..Default::default() });
+    let a = fused_solver.solve(&m).unwrap();
+    let b = plain_solver.solve(&m).unwrap();
+    assert_eq!(a.k(), b.k());
+    // The Frobenius rescale amplifies the CGS-vs-MGS drift back to the
+    // input's scale; 1e-6 relative is still far below solver accuracy.
+    for i in 0..a.k() {
+        assert!(
+            (a.eigenvalues[i] - b.eigenvalues[i]).abs() < 1e-6 * a.eigenvalues[0].abs().max(1.0),
+            "pair {i}: {} vs {}",
+            a.eigenvalues[i],
+            b.eigenvalues[i]
+        );
+    }
+    assert_eq!(a.metrics.fused_sweeps, a.metrics.spmv_count);
+    assert_eq!(b.metrics.fused_sweeps, 0);
+    assert!(b.metrics.vector_passes > a.metrics.vector_passes);
+}
+
+#[test]
+fn fused_respects_custom_start_vectors() {
+    let csr = Arc::new(test_graph(1 << 8, 51));
+    let v1: Vec<f32> = (0..csr.nrows).map(|i| ((i as f32) * 0.37).sin() + 1.5).collect();
+    let engine = ShardedSpmv::with_own_pool(Arc::clone(&csr), 5, PartitionPolicy::BalancedNnz);
+    let mk = |fused| LanczosOptions {
+        k: 10,
+        reorth: ReorthPolicy::Every,
+        fused,
+        v1: Some(v1.clone()),
+        ..Default::default()
+    };
+    let fused: LanczosResult = lanczos_typed(&engine, &mk(true));
+    let plain: LanczosResult = lanczos_typed(&engine, &mk(false));
+    assert_tridiag_match(&fused, &plain, bound::<f32>(csr.nrows, 10, ReorthPolicy::Every), "custom v1");
+}
