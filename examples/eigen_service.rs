@@ -91,13 +91,45 @@ fn main() -> anyhow::Result<()> {
     println!("batch of {} Ks over one matrix in {}", ks.len(), fmt_duration(t1.elapsed().as_secs_f64()));
     anyhow::ensure!(batch_ok == ks.len(), "all batch members must succeed");
 
+    // Matrix-resident phase: register the matrix once and fan mixed-K
+    // handle jobs across every replica. The queue carries handles (a few
+    // words), all workers solve on the shared prepared engine, and the
+    // registry telemetry shows exactly one prepare.
+    let handle = svc.register(graphs::rmat(1 << 12, 8 << 12, 0.57, 0.19, 0.19, 99))?;
+    let t2 = Instant::now();
+    let resident_ks = [4usize, 8, 12, 16, 8, 4, 16, 12];
+    let tickets = svc.submit_handle_batch(handle, SolveOptions::default(), &resident_ks);
+    let mut resident_ok = 0usize;
+    for (id, ticket) in tickets {
+        let r = ticket.wait();
+        match r.outcome {
+            Ok(sol) => {
+                resident_ok += 1;
+                log::debug!("handle job {id}: k={} lambda0={:+.4}", sol.k(), sol.eigenvalues[0]);
+            }
+            Err(e) => println!("handle job {id} failed: {e}"),
+        }
+    }
+    let rstats = svc.registry().stats();
+    println!(
+        "matrix-resident: {} jobs over one handle in {} (prepares={}, engine hits={}, resident={:.1}MiB)",
+        resident_ks.len(),
+        fmt_duration(t2.elapsed().as_secs_f64()),
+        rstats.prepares,
+        rstats.engine_hits,
+        rstats.resident_bytes as f64 / (1 << 20) as f64,
+    );
+    anyhow::ensure!(resident_ok == resident_ks.len(), "all handle jobs must succeed");
+    anyhow::ensure!(rstats.prepares == 1, "one handle, one engine key -> one prepare");
+
     let stats = svc.stats();
     println!(
-        "service stats: submitted={} completed={} failed={} batches={} total_solve={} max_queue_wait={}",
+        "service stats: submitted={} completed={} failed={} batches={} reconfigs={} total_solve={} max_queue_wait={}",
         stats.submitted,
         stats.completed,
         stats.failed,
         stats.batches,
+        stats.reconfigs,
         fmt_duration(stats.total_solve_s),
         fmt_duration(stats.max_queued_s)
     );

@@ -2,12 +2,26 @@
 //! Jacobi cores (§IV-C's per-SLR reconfiguration), on mixed multi-tenant
 //! workloads. Reports makespan and reconfiguration counts; solve-time
 //! estimates come from the FPGA timing model on catalog twins.
+//!
+//! Two sections, one policy type:
+//!
+//! 1. **Offline model** — `scheduler::schedule` simulates the core farm
+//!    under `Policy::{Fifo, KBatched}` with timing-model estimates.
+//! 2. **Live service** — the same mixed-K traces run through a real
+//!    `EigenService` whose dispatch loop applies the *same*
+//!    `QueuePolicy` type (and the same `select_next` rule the deployed
+//!    workers run), reporting measured reconfiguration counts. Because
+//!    the service re-exports the scheduler's `Policy` as its live
+//!    `QueuePolicy`, the model and the deployment cannot drift apart.
 
 mod common;
 
 use topk_eigen::bench::BenchSuite;
 use topk_eigen::coordinator::scheduler::{schedule, CoreFarm, JobSpec, Policy};
+use topk_eigen::coordinator::service::{select_next, EigenService, ServiceConfig};
+use topk_eigen::coordinator::SolveOptions;
 use topk_eigen::fpga::FpgaTimingModel;
+use topk_eigen::graphs;
 use topk_eigen::lanczos::ReorthPolicy;
 use topk_eigen::sparse::{partition_rows_balanced, PartitionPolicy};
 use topk_eigen::util::rng::Pcg64;
@@ -20,9 +34,9 @@ fn main() {
     let mut rng = Pcg64::new(7);
 
     // Estimate solve times for a few catalog twins at each K class.
-    let graphs = common::small_suite(scale, &["WB-GO", "PA", "WK"]);
+    let graphs_suite = common::small_suite(scale, &["WB-GO", "PA", "WK"]);
     let mut estimates: Vec<(usize, f64)> = Vec::new(); // (k, solve_s)
-    for (_, g) in &graphs {
+    for (_, g) in &graphs_suite {
         let csr = g.to_csr();
         let shards = partition_rows_balanced(&csr, 5, PartitionPolicy::EqualRows);
         for k in [4usize, 8, 16, 24, 32] {
@@ -31,6 +45,7 @@ fn main() {
         }
     }
 
+    // ---- Offline model: the §IV-C core-farm simulation -------------------
     for jobs_n in [16usize, 64, 256] {
         let jobs: Vec<JobSpec> = (0..jobs_n)
             .map(|_| {
@@ -41,7 +56,7 @@ fn main() {
         let fifo = schedule(&farm, &jobs, Policy::Fifo).expect("fifo");
         let batched = schedule(&farm, &jobs, Policy::KBatched).expect("batched");
         suite.report(
-            &format!("jobs{jobs_n}"),
+            &format!("model_jobs{jobs_n}"),
             &[
                 ("fifo_makespan_s", fifo.makespan_s),
                 ("batched_makespan_s", batched.makespan_s),
@@ -51,5 +66,43 @@ fn main() {
             ],
         );
     }
+
+    // ---- Live service: the deployed dispatch loop, same policy type ------
+    // A paused single-replica service drains a mixed-K trace under each
+    // policy; measured reconfigs come from ServiceStats, produced by the
+    // same `select_next` rule exercised below.
+    let trace: Vec<usize> = (0..24).map(|i| [4usize, 24, 8, 32][i % 4]).collect();
+    for policy in [Policy::Fifo, Policy::KBatched] {
+        let svc = EigenService::with_config(ServiceConfig {
+            replicas: 1,
+            policy,
+            paused: true,
+            ..Default::default()
+        });
+        let h = svc.register(graphs::mesh2d(12, 12, 0.9, 0.02, 3)).expect("register");
+        let tickets: Vec<_> = trace
+            .iter()
+            .map(|&k| svc.submit_handle(h, SolveOptions { k, ..Default::default() }))
+            .collect();
+        let t0 = std::time::Instant::now();
+        svc.resume();
+        for (id, t) in tickets {
+            assert!(t.wait().outcome.is_ok(), "live job {id} failed");
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        suite.report(
+            &format!("live_{}", policy.name()),
+            &[("reconfigs", svc.stats().reconfigs as f64), ("jobs_per_s", trace.len() as f64 / wall)],
+        );
+        svc.shutdown();
+    }
+
+    // Sanity-pin the dispatch rule itself (the function the workers run):
+    // with core 8 loaded and core-8 work queued, KBatched keeps the core.
+    let queue = [(8usize, 1.0), (32, 1.0), (8, 1.0)];
+    assert_eq!(select_next(&queue, Some(8), Policy::KBatched), Some(0));
+    assert_eq!(select_next(&queue, Some(32), Policy::KBatched), Some(1));
+    assert_eq!(select_next(&queue, Some(8), Policy::Fifo), Some(0));
+
     suite.finish();
 }

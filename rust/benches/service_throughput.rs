@@ -1,0 +1,156 @@
+//! Serving-path throughput: jobs/sec of the one-shot owned path vs the
+//! same-matrix batch path vs the matrix-resident registry path, plus the
+//! FIFO vs K-batched reconfiguration comparison on a mixed-K trace.
+//!
+//! Writes JSONL rows (suite `service_throughput`) to `$TOPK_BENCH_JSON`
+//! (CI: `BENCH_service.json`). Knobs: `TOPK_SERVICE_N` (matrix rows,
+//! default 4096), `TOPK_SERVICE_JOBS` (trace length, default 24),
+//! `TOPK_SERVICE_REPLICAS` (workers, default 4).
+
+use std::time::Instant;
+use topk_eigen::bench::BenchSuite;
+use topk_eigen::coordinator::service::{EigenService, QueuePolicy, ServiceConfig};
+use topk_eigen::coordinator::{RegistryConfig, SolveOptions};
+use topk_eigen::graphs;
+use topk_eigen::sparse::CooMatrix;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+fn opts_k(k: usize) -> SolveOptions {
+    SolveOptions { k, ..Default::default() }
+}
+
+/// Drain a ticket list, panicking on any failed job (throughput numbers
+/// over failed solves would be meaningless).
+fn drain(tickets: Vec<(u64, topk_eigen::coordinator::service::Ticket)>) {
+    for (id, t) in tickets {
+        let r = t.wait();
+        assert!(r.outcome.is_ok(), "job {id} failed: {:?}", r.outcome.err());
+    }
+}
+
+fn main() {
+    let n = env_usize("TOPK_SERVICE_N", 1 << 12);
+    let jobs = env_usize("TOPK_SERVICE_JOBS", 24);
+    let replicas = env_usize("TOPK_SERVICE_REPLICAS", 4);
+    let ks = [4usize, 8, 16, 32];
+    let matrix: CooMatrix = graphs::rmat(n, 8 * n, 0.57, 0.19, 0.19, 4242);
+    let trace: Vec<usize> = (0..jobs).map(|i| ks[i % ks.len()]).collect();
+
+    let mut suite = BenchSuite::new(
+        "service_throughput",
+        &format!("serving paths @ n={n} nnz={} jobs={jobs} replicas={replicas}", matrix.nnz()),
+    );
+
+    // ---- Path 1: one-shot owned jobs (full prepare per job) -------------
+    {
+        let svc = EigenService::start(replicas);
+        let t0 = Instant::now();
+        let tickets: Vec<_> = trace.iter().map(|&k| svc.submit(matrix.clone(), opts_k(k))).collect();
+        drain(tickets);
+        let wall = t0.elapsed().as_secs_f64();
+        suite.report("single_job", &[("jobs_per_s", jobs as f64 / wall), ("wall_s", wall), ("prepares", jobs as f64)]);
+        svc.shutdown();
+    }
+
+    // ---- Path 2: same-matrix batches (one prepare per batch item) -------
+    {
+        let svc = EigenService::start(replicas);
+        let t0 = Instant::now();
+        let mut tickets = Vec::new();
+        for chunk in trace.chunks(ks.len()) {
+            tickets.extend(svc.submit_batch(matrix.clone(), SolveOptions::default(), chunk));
+        }
+        drain(tickets);
+        let wall = t0.elapsed().as_secs_f64();
+        let batches = trace.chunks(ks.len()).count();
+        suite.report("batch", &[("jobs_per_s", jobs as f64 / wall), ("wall_s", wall), ("prepares", batches as f64)]);
+        svc.shutdown();
+    }
+
+    // ---- Path 3: matrix-resident registry (one prepare, period) ---------
+    {
+        let svc = EigenService::start(replicas);
+        let t0 = Instant::now();
+        let handle = svc.register(matrix.clone()).expect("register");
+        let tickets: Vec<_> = trace.iter().map(|&k| svc.submit_handle(handle, opts_k(k))).collect();
+        drain(tickets);
+        let wall = t0.elapsed().as_secs_f64();
+        let rstats = svc.registry().stats();
+        assert_eq!(rstats.prepares, 1, "registry path must prepare exactly once");
+        suite.report(
+            "registry",
+            &[
+                ("jobs_per_s", jobs as f64 / wall),
+                ("wall_s", wall),
+                ("prepares", rstats.prepares as f64),
+                ("engine_hits", rstats.engine_hits as f64),
+            ],
+        );
+        svc.shutdown();
+    }
+
+    // ---- Path 3b: registry + warm starts on a repeating (handle, k) -----
+    {
+        let svc = EigenService::with_config(ServiceConfig {
+            replicas,
+            registry: RegistryConfig { warm_start: true, ..Default::default() },
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        let handle = svc.register(matrix.clone()).expect("register");
+        let tickets: Vec<_> = trace.iter().map(|&k| svc.submit_handle(handle, opts_k(k))).collect();
+        drain(tickets);
+        let wall = t0.elapsed().as_secs_f64();
+        let rstats = svc.registry().stats();
+        suite.report(
+            "registry_warm",
+            &[("jobs_per_s", jobs as f64 / wall), ("wall_s", wall), ("warm_hits", rstats.warm_hits as f64)],
+        );
+        svc.shutdown();
+    }
+
+    // ---- K-aware dispatch: FIFO vs KBatched reconfigurations ------------
+    // Deterministic: paused single-replica service, alternating-K trace
+    // (FIFO's worst case), resumed once the whole trace is queued.
+    let mixed: Vec<usize> = (0..jobs.max(8)).map(|i| if i % 2 == 0 { 8 } else { 24 }).collect();
+    let mut reconfigs = Vec::new();
+    for policy in [QueuePolicy::Fifo, QueuePolicy::KBatched] {
+        let svc = EigenService::with_config(ServiceConfig {
+            replicas: 1,
+            policy,
+            paused: true,
+            ..Default::default()
+        });
+        let handle = svc.register(matrix.clone()).expect("register");
+        let tickets: Vec<_> = mixed.iter().map(|&k| svc.submit_handle(handle, opts_k(k))).collect();
+        let t0 = Instant::now();
+        svc.resume();
+        drain(tickets);
+        let wall = t0.elapsed().as_secs_f64();
+        reconfigs.push(svc.stats().reconfigs as f64);
+        suite.report(
+            &format!("mixed_k_{}", policy.name()),
+            &[("reconfigs", svc.stats().reconfigs as f64), ("jobs_per_s", mixed.len() as f64 / wall), ("wall_s", wall)],
+        );
+        svc.shutdown();
+    }
+    assert!(
+        reconfigs[1] < reconfigs[0],
+        "KBatched must reduce reconfigurations vs FIFO ({} vs {})",
+        reconfigs[1],
+        reconfigs[0]
+    );
+    suite.report(
+        "policy_summary",
+        &[
+            ("fifo_reconfigs", reconfigs[0]),
+            ("kbatched_reconfigs", reconfigs[1]),
+            ("reconfig_reduction", reconfigs[0] / reconfigs[1].max(1.0)),
+        ],
+    );
+
+    suite.finish();
+}

@@ -28,9 +28,12 @@
 //! the paper motivates), and [`verify`] computes the paper's Fig 11
 //! accuracy metrics for any solution.
 
+pub mod registry;
 pub mod scheduler;
 pub mod service;
 pub mod verify;
+
+pub use registry::{MatrixHandle, MatrixRegistry, RegistryConfig, RegistryStats};
 
 use crate::fixed::{packet_capacity, Precision};
 use crate::jacobi::{jacobi_eigen, JacobiMode, SystolicStats};
@@ -44,7 +47,7 @@ use anyhow::Result;
 use std::sync::Arc;
 
 /// Which SpMV engine drives the Lanczos loop.
-#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
 pub enum Engine {
     /// Native sharded CSR kernels on the CU thread pool, in the storage
     /// format selected by [`SolveOptions::precision`].
@@ -83,6 +86,13 @@ pub struct SolveOptions {
     pub engine: Engine,
     /// Skip Frobenius normalization (input already normalized).
     pub skip_normalize: bool,
+    /// Skip the O(nnz) structural symmetry check in the prepare phase.
+    /// The Lanczos recurrence silently produces wrong spectra on
+    /// asymmetric operators, so the check is on by default and rejects
+    /// asymmetric input with an error; trusted callers that already
+    /// guarantee symmetry (e.g. generators, a registry re-preparing a
+    /// checked matrix) can opt out to save the pass.
+    pub skip_symmetry_check: bool,
     /// Use the fused single-sweep Lanczos datapath (default). `false`
     /// (`--no-fuse` at the CLI) selects the serial-pass reference
     /// implementation — same spectra, more full-length vector passes.
@@ -101,6 +111,7 @@ impl Default for SolveOptions {
             partition: PartitionPolicy::BalancedNnz,
             engine: Engine::Native,
             skip_normalize: false,
+            skip_symmetry_check: false,
             fuse: true,
         }
     }
@@ -162,6 +173,10 @@ pub struct SolveMetrics {
     /// (3 per full iteration when fused; every serial axpy/dot/norm pass —
     /// two per reorthogonalized basis row — when unfused).
     pub vector_passes: usize,
+    /// Whether this solve was seeded with a warm-start vector (the
+    /// registry's cached dominant Ritz vector for a repeated `(handle, k)`
+    /// query) instead of the paper's uniform `v1`.
+    pub warm_started: bool,
 }
 
 impl SolveMetrics {
@@ -197,12 +212,20 @@ impl Solution {
 
 /// A matrix prepared once for repeated solves: canonicalized, normalized,
 /// converted to CSR in the requested storage format, and bound to an SpMV
-/// engine. Built by [`Solver::prepare`]; consumed by
-/// [`Solver::solve_prepared`] / [`Solver::solve_prepared_with_k`]. This is
-/// the same-matrix multi-K fast path used by
-/// [`service::EigenService::submit_batch`].
+/// engine. Built by [`Solver::prepare`] / [`Solver::prepare_owned`];
+/// consumed by [`Solver::solve_prepared`] /
+/// [`Solver::solve_prepared_with_k`] / [`Solver::solve_detached`].
+///
+/// `PreparedMatrix` is `Send + Sync` and the engine is held as
+/// `Arc<dyn Operator>`, so an `Arc<PreparedMatrix>` can be shared across
+/// worker threads and solved against **concurrently** — each solve brings
+/// its own [`LanczosWorkspace`]; the engine's CU pool serializes the
+/// per-iteration fork/joins of concurrent solves without affecting their
+/// results (shard merges are position-, not timing-, ordered). This is the
+/// matrix-resident serving model: the matrix is the resident asset
+/// ([`MatrixRegistry`]), solves are the cheap concurrent part.
 pub struct PreparedMatrix {
-    op: Box<dyn Operator>,
+    op: Arc<dyn Operator>,
     fro: f64,
     n: usize,
     nnz: usize,
@@ -256,6 +279,18 @@ impl PreparedMatrix {
     pub fn prepare_s(&self) -> f64 {
         self.prepare_s
     }
+    /// Estimated resident bytes of the bound engine: the COO-line
+    /// convention (two u32 indices + one value word per nnz) plus the CSR
+    /// row-pointer array. This is what the registry's byte-budgeted LRU
+    /// charges per cached engine.
+    pub fn resident_bytes(&self) -> usize {
+        self.nnz * (8 + self.op.value_bits() as usize / 8) + 4 * (self.n + 1)
+    }
+    /// The shared engine (for telemetry and tests; solves go through
+    /// [`Solver::solve_detached`]).
+    pub fn operator(&self) -> &Arc<dyn Operator> {
+        &self.op
+    }
 }
 
 /// The coordinator.
@@ -296,33 +331,42 @@ impl Solver {
     /// sharded native pool, or PJRT when requested, available, and the
     /// format is f32). The result can back any number of
     /// [`Solver::solve_prepared_with_k`] calls against the same matrix.
+    ///
+    /// Borrowing convenience wrapper: clones the input once. Callers that
+    /// own their matrix (the service's job queue, the registry) should use
+    /// [`Solver::prepare_owned`], which canonicalizes in place and never
+    /// copies the COO arrays.
     pub fn prepare(&mut self, matrix: &CooMatrix) -> Result<PreparedMatrix> {
-        anyhow::ensure!(matrix.nrows == matrix.ncols, "matrix must be square");
+        self.prepare_owned(matrix.clone())
+    }
+
+    /// The owned/in-place prepare path: consumes the matrix, canonicalizes
+    /// it in place, checks symmetry (unless
+    /// [`SolveOptions::skip_symmetry_check`]), normalizes, and binds the
+    /// engine — zero COO clones end to end.
+    pub fn prepare_owned(&mut self, mut m: CooMatrix) -> Result<PreparedMatrix> {
         let mut sw = Stopwatch::start();
-        let mut m = matrix.clone();
-        m.canonicalize();
-        debug_assert!(m.is_symmetric(1e-4), "operator must be symmetric");
-        let fro = if self.opts.skip_normalize { 1.0 } else { normalize_frobenius(&mut m) };
+        let fro = canonicalize_ingest(&mut m, self.opts.skip_symmetry_check, self.opts.skip_normalize)?;
         let n = m.nrows;
         let nnz = m.nnz();
         let precision = self.opts.precision;
-        let (op, engine_used): (Box<dyn Operator>, &'static str) = match self.opts.engine {
-            Engine::Pjrt if precision != Precision::Float32 => {
-                log::warn!(
-                    "PJRT artifacts are f32-only; using the native {} datapath",
-                    precision.name()
-                );
-                (self.native_operator(&m), "native")
-            }
-            Engine::Pjrt => match self.try_pjrt_operator(&m) {
-                Ok(op) => (op, "pjrt"),
-                Err(e) => {
-                    log::warn!("PJRT engine unavailable ({e}); falling back to native");
-                    (self.native_operator(&m), "native")
-                }
-            },
-            Engine::Native => (self.native_operator(&m), "native"),
+        // Acquire the (lazy) PJRT runtime up front when it could be needed,
+        // so the engine-selection helper borrows `self` only immutably.
+        let runtime = if self.opts.engine == Engine::Pjrt && precision == Precision::Float32 {
+            Some(self.runtime())
+        } else {
+            None
         };
+        let (op, engine_used) = select_engine(
+            self.opts.engine,
+            precision,
+            || match runtime {
+                Some(Ok(rt)) => Ok(Arc::new(PjrtSpmv::new(rt, &m)?) as Arc<dyn Operator>),
+                Some(Err(e)) => Err(e),
+                None => unreachable!("PJRT attempted without a runtime request"),
+            },
+            || self.native_operator(&m),
+        );
         Ok(PreparedMatrix { op, fro, n, nnz, precision, engine_used, prepare_s: sw.lap_s() })
     }
 
@@ -346,12 +390,36 @@ impl Solver {
     /// Solve against an already-prepared matrix for a caller-chosen K
     /// (the multi-K fast path: Lanczos, Jacobi and lift re-run; the O(nnz)
     /// preparation and the engine binding are shared).
+    pub fn solve_prepared_with_k(&mut self, prep: &PreparedMatrix, k: usize) -> Result<Solution> {
+        Solver::solve_detached(prep, k, &self.opts, &mut self.ws, None)
+    }
+
+    /// Solve against a shared prepared matrix without a `Solver` instance:
+    /// the worker-replica entry point of matrix-resident serving. Any
+    /// number of threads may call this concurrently on one
+    /// `Arc<PreparedMatrix>` — each caller brings its own
+    /// [`LanczosWorkspace`] (the only mutable per-solve state) and results
+    /// are bitwise identical to running the same solves serially.
+    ///
+    /// `v1` optionally seeds the Lanczos start vector (the registry's
+    /// warm-start cache passes the previous dominant Ritz vector for
+    /// repeated `(handle, k)` queries); `None` is the paper's deterministic
+    /// uniform start.
     ///
     /// The whole phase pipeline runs inside one [`crate::with_precision!`]
     /// dispatch so the Lanczos basis stays in storage format from the
     /// recurrence through eigenvector lift.
-    pub fn solve_prepared_with_k(&mut self, prep: &PreparedMatrix, k: usize) -> Result<Solution> {
+    pub fn solve_detached(
+        prep: &PreparedMatrix,
+        k: usize,
+        opts: &SolveOptions,
+        ws: &mut LanczosWorkspace,
+        v1: Option<Vec<f32>>,
+    ) -> Result<Solution> {
         anyhow::ensure!(k >= 1 && k <= prep.n, "bad k");
+        if let Some(v) = &v1 {
+            anyhow::ensure!(v.len() == prep.n, "warm-start v1 length mismatch");
+        }
         let mut sw = Stopwatch::start();
         let mut metrics = SolveMetrics {
             prepare_s: prep.prepare_s,
@@ -359,17 +427,11 @@ impl Solver {
             precision: prep.precision.name(),
             value_bytes: prep.value_bytes(),
             packet_capacity: prep.packet_capacity(),
+            warm_started: v1.is_some(),
             ..Default::default()
         };
 
-        let lopts = LanczosOptions {
-            k,
-            reorth: self.opts.reorth,
-            precision: prep.precision,
-            fused: self.opts.fuse,
-            v1: None,
-        };
-        let ws = &mut self.ws;
+        let lopts = LanczosOptions { k, reorth: opts.reorth, precision: prep.precision, fused: opts.fuse, v1 };
         let (eigenvalues, eigenvectors) = crate::with_precision!(prep.precision, V => {
             // ---- Phase 1: Lanczos (typed basis storage, reused scratch) --
             let lres: LanczosResult<V> = lanczos_typed_ws(prep.op.as_ref(), &lopts, ws);
@@ -383,7 +445,7 @@ impl Solver {
             metrics.bytes_streamed = lres.spmv_count * prep.bytes_per_apply();
 
             // ---- Phase 2: Jacobi -----------------------------------------
-            let eig = jacobi_eigen(&lres.tridiag, self.opts.jacobi, 1e-10);
+            let eig = jacobi_eigen(&lres.tridiag, opts.jacobi, 1e-10);
             metrics.jacobi_s = sw.lap_s();
             metrics.systolic = eig.stats;
 
@@ -402,34 +464,79 @@ impl Solver {
         Ok(Solution { eigenvalues, eigenvectors, frobenius_norm: prep.fro, metrics })
     }
 
-    fn native_operator(&self, m: &CooMatrix) -> Box<dyn Operator> {
-        let csr = m.to_csr();
-        // The f32 path streams the CSR as built; only fixed-point formats
-        // pay the O(nnz) re-storage pass.
-        if self.opts.precision == Precision::Float32 {
-            return Box::new(ShardedSpmv::new(
-                Arc::new(csr),
-                self.opts.cus,
-                self.opts.partition,
-                Arc::clone(&self.pool),
-            ));
-        }
-        crate::with_precision!(self.opts.precision, V => {
-            let typed: CsrMatrix<V> = csr.to_precision::<V>();
-            Box::new(ShardedSpmv::new(
-                Arc::new(typed),
-                self.opts.cus,
-                self.opts.partition,
-                Arc::clone(&self.pool),
-            )) as Box<dyn Operator>
-        })
+    fn native_operator(&self, m: &CooMatrix) -> Arc<dyn Operator> {
+        native_operator_from_canonical(m, self.opts.precision, self.opts.cus, self.opts.partition, &self.pool)
     }
+}
 
-    fn try_pjrt_operator(&mut self, m: &CooMatrix) -> Result<Box<dyn Operator>> {
-        let rt = self.runtime()?;
-        let op = PjrtSpmv::new(rt, m)?;
-        Ok(Box::new(op))
+/// The shared ingest pipeline of both prepare paths ([`Solver`] and the
+/// [`MatrixRegistry`]): validate squareness, canonicalize **in place**,
+/// check structural symmetry (tolerance 1e-4) unless skipped, and
+/// Frobenius-normalize unless skipped. Returns the norm divided out (1.0
+/// when normalization is skipped). One implementation so the registry's
+/// handle solves and direct `Solver` solves cannot diverge on validation
+/// or normalization semantics.
+pub(crate) fn canonicalize_ingest(m: &mut CooMatrix, skip_symmetry_check: bool, skip_normalize: bool) -> Result<f64> {
+    anyhow::ensure!(m.nrows == m.ncols, "matrix must be square");
+    m.canonicalize();
+    if !skip_symmetry_check {
+        anyhow::ensure!(
+            m.is_symmetric(1e-4),
+            "operator must be symmetric (set skip_symmetry_check for trusted input, \
+             or --skip-symmetry-check at the CLI)"
+        );
     }
+    Ok(if skip_normalize { 1.0 } else { normalize_frobenius(m) })
+}
+
+/// Resolve the SpMV engine for a prepare: PJRT when requested, available,
+/// and the storage format is f32; the typed native sharded engine
+/// otherwise, with the fallback warnings. One implementation shared by
+/// [`Solver::prepare_owned`] and the [`MatrixRegistry`] engine builder so
+/// the two prepare paths cannot drift apart.
+pub(crate) fn select_engine(
+    engine: Engine,
+    precision: Precision,
+    try_pjrt: impl FnOnce() -> Result<Arc<dyn Operator>>,
+    native: impl FnOnce() -> Arc<dyn Operator>,
+) -> (Arc<dyn Operator>, &'static str) {
+    match engine {
+        Engine::Pjrt if precision != Precision::Float32 => {
+            log::warn!("PJRT artifacts are f32-only; using the native {} datapath", precision.name());
+            (native(), "native")
+        }
+        Engine::Pjrt => match try_pjrt() {
+            Ok(op) => (op, "pjrt"),
+            Err(e) => {
+                log::warn!("PJRT engine unavailable ({e}); falling back to native");
+                (native(), "native")
+            }
+        },
+        Engine::Native => (native(), "native"),
+    }
+}
+
+/// Build the native sharded engine from an **already canonical** COO (the
+/// prepare paths canonicalize in place first, so no extra COO copy is made
+/// here). Shared by [`Solver`] and the [`MatrixRegistry`], which bind the
+/// same engine construction to different pools.
+pub(crate) fn native_operator_from_canonical(
+    m: &CooMatrix,
+    precision: Precision,
+    cus: usize,
+    partition: PartitionPolicy,
+    pool: &Arc<ThreadPool>,
+) -> Arc<dyn Operator> {
+    let csr = CsrMatrix::from_canonical_coo(m);
+    // The f32 path streams the CSR as built; only fixed-point formats pay
+    // the O(nnz) re-storage pass.
+    if precision == Precision::Float32 {
+        return Arc::new(ShardedSpmv::new(Arc::new(csr), cus, partition, Arc::clone(pool)));
+    }
+    crate::with_precision!(precision, V => {
+        let typed: CsrMatrix<V> = csr.to_precision::<V>();
+        Arc::new(ShardedSpmv::new(Arc::new(typed), cus, partition, Arc::clone(pool))) as Arc<dyn Operator>
+    })
 }
 
 #[cfg(test)]
@@ -527,6 +634,65 @@ mod tests {
             // Shared prepare time is reported on every member solution.
             assert_eq!(fast.metrics.prepare_s, prep.prepare_s());
         }
+    }
+
+    #[test]
+    fn asymmetric_input_is_rejected_in_release_semantics() {
+        // A genuinely asymmetric operator must be an error (not a
+        // debug-only assert): Lanczos silently produces wrong spectra on
+        // it.
+        let mut m = CooMatrix::new(8, 8);
+        for i in 0..8 {
+            m.push(i, i, 1.0);
+        }
+        m.push(0, 3, 0.5); // no (3, 0) mirror
+        let mut solver = Solver::new(SolveOptions { k: 2, ..Default::default() });
+        let err = solver.prepare(&m).unwrap_err();
+        assert!(err.to_string().contains("symmetric"), "{err}");
+        assert!(solver.solve(&m).is_err());
+        // Trusted callers can opt out and take responsibility.
+        let mut trusting = Solver::new(SolveOptions { k: 2, skip_symmetry_check: true, ..Default::default() });
+        assert!(trusting.prepare(&m).is_ok());
+    }
+
+    #[test]
+    fn prepare_owned_matches_borrowing_prepare() {
+        let m = graphs::rmat(1 << 8, 8 << 8, 0.57, 0.19, 0.19, 11);
+        let mut a = Solver::new(SolveOptions { k: 5, ..Default::default() });
+        let mut b = Solver::new(SolveOptions { k: 5, ..Default::default() });
+        let prep_ref = a.prepare(&m).unwrap();
+        let prep_owned = b.prepare_owned(m.clone()).unwrap();
+        assert_eq!(prep_ref.n(), prep_owned.n());
+        assert_eq!(prep_ref.nnz(), prep_owned.nnz());
+        assert_eq!(prep_ref.frobenius_norm(), prep_owned.frobenius_norm());
+        let sa = a.solve_prepared(&prep_ref).unwrap();
+        let sb = b.solve_prepared(&prep_owned).unwrap();
+        assert_eq!(sa.eigenvalues, sb.eigenvalues);
+        assert!(prep_owned.resident_bytes() > 0);
+    }
+
+    #[test]
+    fn prepared_matrix_is_shareable_across_threads() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<PreparedMatrix>();
+        // Detached concurrent solves on one Arc<PreparedMatrix> match the
+        // Solver-owned path bitwise (the full stress test lives in
+        // tests/service_registry.rs).
+        let m = graphs::mesh2d(16, 16, 0.9, 0.02, 9);
+        let opts = SolveOptions { k: 4, ..Default::default() };
+        let mut solver = Solver::new(opts.clone());
+        let prep = std::sync::Arc::new(solver.prepare(&m).unwrap());
+        let serial = solver.solve_prepared_with_k(&prep, 4).unwrap();
+        let concurrent = std::thread::scope(|s| {
+            let h = s.spawn(|| {
+                let mut ws = LanczosWorkspace::new();
+                Solver::solve_detached(&prep, 4, &opts, &mut ws, None).unwrap()
+            });
+            h.join().unwrap()
+        });
+        assert_eq!(serial.eigenvalues, concurrent.eigenvalues);
+        assert_eq!(serial.eigenvectors, concurrent.eigenvectors);
+        assert!(!concurrent.metrics.warm_started);
     }
 
     #[test]

@@ -1,0 +1,708 @@
+//! The shared prepared-engine registry — matrix-resident serving.
+//!
+//! The paper motivates Top-K eigensolvers as data-center infrastructure
+//! (§I) where the *same* enormous graph is queried over and over, and its
+//! §IV-C reconfigurable-core discussion schedules jobs *around resident
+//! state*. SSD- and multi-GPU-scale follow-ups (Zheng et al.,
+//! arXiv:1602.01421; arXiv:2201.07498) draw the same conclusion: at scale
+//! the matrix is the resident asset and solves are the cheap, concurrent
+//! part. [`MatrixRegistry`] is that inversion for the service layer:
+//!
+//! * [`MatrixRegistry::register`] ingests a `CooMatrix` **once** —
+//!   canonicalize in place (no COO clone), symmetry-check, Frobenius-
+//!   normalize — and returns a small [`MatrixHandle`]. Registration
+//!   deduplicates by content hash (full equality compare on a hash match),
+//!   so two tenants registering the same graph share one residency.
+//! * [`MatrixRegistry::prepared`] returns the `Arc<PreparedMatrix>` for a
+//!   `(handle, precision, engine, geometry)` key, building it **exactly
+//!   once** (concurrent callers for the same key block on a per-key latch;
+//!   callers for different keys build in parallel) — the prepare-count
+//!   telemetry in [`RegistryStats`] pins this.
+//! * Cached engines are evicted least-recently-used against a byte budget
+//!   ([`RegistryConfig::budget_bytes`]), charged at
+//!   [`PreparedMatrix::resident_bytes`] (the COO-line convention the
+//!   datapath telemetry already uses). Eviction only drops the registry's
+//!   `Arc`; in-flight solves keep their engine alive until they finish.
+//! * A warm-start cache ([`RegistryConfig::warm_start`]) remembers the
+//!   dominant Ritz vector of each completed `(handle, k, precision)` query
+//!   so repeated queries seed Lanczos `v1` from the previous answer
+//!   instead of the uniform start — fewer effective iterations to the same
+//!   invariant subspace on slowly-drifting production graphs.
+//!
+//! Worker replicas then run [`crate::coordinator::Solver::solve_detached`]
+//! against the shared engine concurrently, each with its own
+//! [`crate::lanczos::LanczosWorkspace`] — zero per-job COO clones, zero
+//! redundant prepare work.
+
+use crate::coordinator::{native_operator_from_canonical, select_engine, Engine, PreparedMatrix, SolveOptions};
+use crate::fixed::Precision;
+use crate::runtime::{PjrtSpmv, Runtime};
+use crate::sparse::{CooMatrix, PartitionPolicy};
+use crate::util::pool::ThreadPool;
+use crate::util::timer::Stopwatch;
+use anyhow::Result;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+/// Poison-resistant lock: a panic inside a registry section (e.g. an
+/// engine build hitting a pathological matrix) must cost that one request,
+/// not brick every later job on the registry or on one engine key. All
+/// guarded state stays valid across an unwind mid-section: maps are
+/// updated with single insert/remove calls and a half-built engine slot is
+/// simply `None`, which the next caller rebuilds.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Opaque handle to a registered matrix. Cheap to copy, hash, and send —
+/// this is what service jobs carry instead of an owned `CooMatrix`.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub struct MatrixHandle(u64);
+
+impl MatrixHandle {
+    /// The numeric id (stable for the registry's lifetime; for logs).
+    pub fn id(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Registry configuration.
+#[derive(Clone, Debug)]
+pub struct RegistryConfig {
+    /// Byte budget for cached prepared engines (LRU-evicted beyond it);
+    /// `0` = unlimited. An engine larger than the whole budget is still
+    /// served and cached — only *other* engines can be evicted for it.
+    pub budget_bytes: usize,
+    /// Seed repeated `(handle, k, precision)` queries with the previous
+    /// dominant Ritz vector. Off by default: a warm start is no longer
+    /// bit-identical to the cold solve (so deterministic replay paths
+    /// should leave it off), and a seed lying too close to an exact
+    /// eigenvector can truncate the Krylov subspace — the service's
+    /// handle path retries such solves cold so callers still get K pairs.
+    pub warm_start: bool,
+    /// Skip the O(nnz) symmetry check at registration (trusted sources).
+    pub skip_symmetry_check: bool,
+    /// Register matrices as-is without Frobenius normalization (inputs
+    /// already normalized; mirrors [`SolveOptions::skip_normalize`]).
+    pub skip_normalize: bool,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        Self { budget_bytes: 0, warm_start: false, skip_symmetry_check: false, skip_normalize: false }
+    }
+}
+
+/// Snapshot of the registry's telemetry counters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RegistryStats {
+    /// Registered (distinct) matrices currently resident.
+    pub matrices: usize,
+    /// Prepared engines currently cached.
+    pub engines: usize,
+    /// Estimated bytes of all cached engines.
+    pub resident_bytes: usize,
+    /// Engine builds performed ([`crate::coordinator::Solver::prepare`]-
+    /// equivalent work). The acceptance bar: M jobs against one registered
+    /// handle and one engine key leave this at exactly 1.
+    pub prepares: u64,
+    /// `prepared` calls served from the cache (no build).
+    pub engine_hits: u64,
+    /// Registrations that deduplicated onto an existing handle.
+    pub dedup_hits: u64,
+    /// Engines evicted by the byte-budget LRU.
+    pub evictions: u64,
+    /// Warm-start cache entries currently held.
+    pub warm_entries: usize,
+    /// Warm-start seeds served.
+    pub warm_hits: u64,
+}
+
+struct Source {
+    coo: Arc<CooMatrix>,
+    fro: f64,
+    /// Content hash computed at registration — kept so `unregister` can
+    /// maintain `by_hash` without an O(nnz) re-hash under the lock.
+    hash: u64,
+}
+
+/// Engine identity: one prepared engine per handle x storage format x
+/// engine kind x shard geometry.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct EngineKey {
+    handle: u64,
+    precision: Precision,
+    engine: Engine,
+    cus: usize,
+    partition: PartitionPolicy,
+    threads: usize,
+}
+
+impl EngineKey {
+    fn for_opts(handle: MatrixHandle, opts: &SolveOptions) -> Self {
+        Self {
+            handle: handle.0,
+            precision: opts.precision,
+            engine: Self::effective_engine(opts.engine, opts.precision),
+            cus: opts.cus,
+            partition: opts.partition,
+            threads: opts.effective_threads(),
+        }
+    }
+
+    /// Collapse PJRT requests that are statically known to fall back onto
+    /// the native key, so `Engine::Pjrt` and `Engine::Native` requests for
+    /// the same matrix share one cached engine (and one CU pool) instead
+    /// of byte-identical twins: fixed-point formats always fall back (the
+    /// artifacts are f32), and a build without the `pjrt` feature always
+    /// falls back (stub runtime). A feature-enabled f32 request that fails
+    /// at runtime (missing artifact, no fitting shape) still caches its
+    /// native fallback under the Pjrt key — accepted duplication for that
+    /// rare case.
+    fn effective_engine(engine: Engine, precision: Precision) -> Engine {
+        match engine {
+            Engine::Pjrt if precision != Precision::Float32 => Engine::Native,
+            Engine::Pjrt if !cfg!(feature = "pjrt") => Engine::Native,
+            e => e,
+        }
+    }
+}
+
+struct EngineSlot {
+    /// Build-once latch: concurrent `prepared` calls for one key serialize
+    /// here (not on the registry lock), so different keys build in
+    /// parallel while the same key is never built twice.
+    cell: Arc<Mutex<Option<Arc<PreparedMatrix>>>>,
+    last_used: u64,
+    /// 0 while the build is in flight (pending slots are never evicted).
+    bytes: usize,
+}
+
+type WarmKey = (u64, usize, Precision);
+
+/// Bound on warm-start entries (each is an n-length f32 vector).
+const WARM_CAP: usize = 256;
+
+/// One warm-start cache slot: a usable seed, or a negative entry for keys
+/// where warm-starting proved counterproductive (the seed collapsed the
+/// Krylov subspace) — those queries run cold permanently instead of
+/// paying a truncated warm solve plus a cold retry on every repeat.
+enum WarmEntry {
+    Seed(Vec<f32>),
+    Disabled,
+}
+
+struct Inner {
+    sources: HashMap<u64, Source>,
+    by_hash: HashMap<u64, Vec<u64>>,
+    engines: HashMap<EngineKey, EngineSlot>,
+    warm: HashMap<WarmKey, WarmEntry>,
+    warm_order: VecDeque<WarmKey>,
+    tick: u64,
+}
+
+/// Handle ids are process-globally unique (not per-registry), so a handle
+/// from one registry can never silently alias a different matrix in
+/// another — a lookup with a foreign handle fails instead of answering
+/// the wrong question.
+static NEXT_HANDLE_ID: AtomicU64 = AtomicU64::new(1);
+
+/// The shared prepared-engine registry (see module docs).
+pub struct MatrixRegistry {
+    cfg: RegistryConfig,
+    inner: Mutex<Inner>,
+    /// Lazy PJRT runtime for `Engine::Pjrt` keys (mirrors `Solver`).
+    runtime: Mutex<Option<Arc<Runtime>>>,
+    prepares: AtomicU64,
+    engine_hits: AtomicU64,
+    dedup_hits: AtomicU64,
+    evictions: AtomicU64,
+    warm_hits: AtomicU64,
+}
+
+impl Default for MatrixRegistry {
+    fn default() -> Self {
+        Self::new(RegistryConfig::default())
+    }
+}
+
+impl MatrixRegistry {
+    /// Empty registry under `cfg`.
+    pub fn new(cfg: RegistryConfig) -> Self {
+        Self {
+            cfg,
+            inner: Mutex::new(Inner {
+                sources: HashMap::new(),
+                by_hash: HashMap::new(),
+                engines: HashMap::new(),
+                warm: HashMap::new(),
+                warm_order: VecDeque::new(),
+                tick: 0,
+            }),
+            runtime: Mutex::new(None),
+            prepares: AtomicU64::new(0),
+            engine_hits: AtomicU64::new(0),
+            dedup_hits: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            warm_hits: AtomicU64::new(0),
+        }
+    }
+
+    /// The active configuration.
+    pub fn config(&self) -> &RegistryConfig {
+        &self.cfg
+    }
+
+    /// Ingest a matrix: canonicalize **in place** (the registry owns the
+    /// buffers — no COO clone anywhere on this path), check symmetry,
+    /// Frobenius-normalize, and deduplicate against already-registered
+    /// content. Returns the handle service jobs carry from here on.
+    pub fn register(&self, mut m: CooMatrix) -> Result<MatrixHandle> {
+        anyhow::ensure!(m.nrows > 0, "matrix must be non-empty");
+        let fro =
+            crate::coordinator::canonicalize_ingest(&mut m, self.cfg.skip_symmetry_check, self.cfg.skip_normalize)?;
+        let hash = m.content_hash();
+        let mut inner = lock(&self.inner);
+        if let Some(ids) = inner.by_hash.get(&hash) {
+            for &id in ids {
+                let s = &inner.sources[&id];
+                // Equal normalized content AND equal norm: a scaled copy of
+                // a registered graph normalizes to the same entries but a
+                // different Frobenius norm, and must get its own handle so
+                // its eigenvalues rescale correctly.
+                if s.fro.to_bits() == fro.to_bits() && *s.coo == m {
+                    self.dedup_hits.fetch_add(1, Ordering::SeqCst);
+                    return Ok(MatrixHandle(id));
+                }
+            }
+        }
+        let id = NEXT_HANDLE_ID.fetch_add(1, Ordering::Relaxed);
+        inner.sources.insert(id, Source { coo: Arc::new(m), fro, hash });
+        inner.by_hash.entry(hash).or_default().push(id);
+        Ok(MatrixHandle(id))
+    }
+
+    /// Dimensions `(n, nnz)` of a registered matrix (submit-time
+    /// validation wants `n` without touching the engine cache).
+    pub fn dims(&self, h: MatrixHandle) -> Option<(usize, usize)> {
+        let inner = lock(&self.inner);
+        inner.sources.get(&h.0).map(|s| (s.coo.nrows, s.coo.nnz()))
+    }
+
+    /// Drop a matrix's residency: its source COO, every cached engine built
+    /// from it, and its warm-start entries. In-flight solves holding an
+    /// `Arc<PreparedMatrix>` finish normally; later jobs on the handle fail
+    /// with "unknown matrix handle". Returns `false` if the handle was not
+    /// registered. The byte budget only polices *engines* — long-lived
+    /// services that register client matrices must unregister (or dedup
+    /// onto a fixed catalog) to bound the O(nnz) source memory.
+    pub fn unregister(&self, h: MatrixHandle) -> bool {
+        let mut inner = lock(&self.inner);
+        let Some(src) = inner.sources.remove(&h.0) else { return false };
+        let hash = src.hash;
+        if let Some(ids) = inner.by_hash.get_mut(&hash) {
+            ids.retain(|&id| id != h.0);
+            if ids.is_empty() {
+                inner.by_hash.remove(&hash);
+            }
+        }
+        inner.engines.retain(|k, _| k.handle != h.0);
+        inner.warm.retain(|k, _| k.0 != h.0);
+        inner.warm_order.retain(|k| k.0 != h.0);
+        true
+    }
+
+    /// The shared prepared engine for `(handle, opts)`: built exactly once
+    /// per key, cached under the byte-budget LRU, shared zero-copy with
+    /// every caller. Errors on an unknown handle.
+    pub fn prepared(&self, h: MatrixHandle, opts: &SolveOptions) -> Result<Arc<PreparedMatrix>> {
+        let key = EngineKey::for_opts(h, opts);
+        let (coo, fro, cell) = {
+            let mut inner = lock(&self.inner);
+            let src = inner.sources.get(&h.0).ok_or_else(|| anyhow::anyhow!("unknown matrix handle {}", h.0))?;
+            let coo = Arc::clone(&src.coo);
+            let fro = src.fro;
+            inner.tick += 1;
+            let tick = inner.tick;
+            let slot = inner.engines.entry(key.clone()).or_insert_with(|| EngineSlot {
+                cell: Arc::new(Mutex::new(None)),
+                last_used: tick,
+                bytes: 0,
+            });
+            slot.last_used = tick;
+            (coo, fro, Arc::clone(&slot.cell))
+        };
+
+        let mut built = lock(&cell);
+        if let Some(prep) = built.as_ref() {
+            self.engine_hits.fetch_add(1, Ordering::SeqCst);
+            return Ok(Arc::clone(prep));
+        }
+        let prep = Arc::new(self.build_engine(&coo, fro, opts));
+        self.prepares.fetch_add(1, Ordering::SeqCst);
+        *built = Some(Arc::clone(&prep));
+        drop(built);
+
+        // Record the engine's footprint and enforce the byte budget.
+        let mut inner = lock(&self.inner);
+        if let Some(slot) = inner.engines.get_mut(&key) {
+            slot.bytes = prep.resident_bytes();
+        }
+        self.evict_over_budget(&mut inner, &key);
+        Ok(prep)
+    }
+
+    /// Engine construction from the registry's canonical, normalized COO.
+    /// Runs outside the registry lock (only the per-key latch is held), so
+    /// concurrent builds of *different* engines overlap.
+    fn build_engine(&self, coo: &CooMatrix, fro: f64, opts: &SolveOptions) -> PreparedMatrix {
+        let mut sw = Stopwatch::start();
+        let precision = opts.precision;
+        // Each cached engine owns its CU pool, so solves on different
+        // resident matrices never contend on one pool (solves on the same
+        // engine serialize their fork/joins, matching one device). The
+        // cost is `effective_threads` resident OS threads per cached
+        // engine — bounded by `budget_bytes` eviction and `unregister`,
+        // both of which drop the pool with the engine.
+        let native = || {
+            let pool = Arc::new(ThreadPool::new(opts.effective_threads()));
+            native_operator_from_canonical(coo, precision, opts.cus, opts.partition, &pool)
+        };
+        let (op, engine_used) = select_engine(opts.engine, precision, || self.try_pjrt(coo), native);
+        PreparedMatrix {
+            op,
+            fro,
+            n: coo.nrows,
+            nnz: coo.nnz(),
+            precision,
+            engine_used,
+            prepare_s: sw.lap_s(),
+        }
+    }
+
+    fn try_pjrt(&self, coo: &CooMatrix) -> Result<Arc<dyn crate::lanczos::Operator>> {
+        // Only runtime *creation* serializes; the guard is released before
+        // the O(nnz) PjrtSpmv build so different-key engine builds stay
+        // parallel, as the per-key latch design promises.
+        let rt = {
+            let mut guard = lock(&self.runtime);
+            if guard.is_none() {
+                *guard = Some(Arc::new(Runtime::cpu()?));
+            }
+            Arc::clone(guard.as_ref().unwrap())
+        };
+        let op = PjrtSpmv::new(rt, coo)?;
+        Ok(Arc::new(op))
+    }
+
+    /// Evict least-recently-used **built** engines (never the one just
+    /// used, never pending builds) until the cache fits the budget.
+    fn evict_over_budget(&self, inner: &mut Inner, keep: &EngineKey) {
+        if self.cfg.budget_bytes == 0 {
+            return;
+        }
+        loop {
+            let total: usize = inner.engines.values().map(|s| s.bytes).sum();
+            if total <= self.cfg.budget_bytes {
+                return;
+            }
+            let victim = inner
+                .engines
+                .iter()
+                .filter(|(k, s)| *k != keep && s.bytes > 0)
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    inner.engines.remove(&k);
+                    self.evictions.fetch_add(1, Ordering::SeqCst);
+                }
+                None => return, // only the kept/pending engines remain
+            }
+        }
+    }
+
+    /// Warm-start seed for a repeated `(handle, k, precision)` query:
+    /// the previous dominant Ritz vector, if the cache is enabled, has
+    /// seen this query complete, and the key is not negatively cached.
+    pub fn warm_v1(&self, h: MatrixHandle, k: usize, precision: Precision) -> Option<Vec<f32>> {
+        if !self.cfg.warm_start {
+            return None;
+        }
+        let inner = lock(&self.inner);
+        match inner.warm.get(&(h.0, k, precision)) {
+            Some(WarmEntry::Seed(v)) => {
+                self.warm_hits.fetch_add(1, Ordering::SeqCst);
+                Some(v.clone())
+            }
+            Some(WarmEntry::Disabled) | None => None,
+        }
+    }
+
+    /// Record the dominant Ritz vector of a completed query for future
+    /// warm starts. No-op unless [`RegistryConfig::warm_start`] is set, or
+    /// when the key has been [`MatrixRegistry::disable_warm`]-ed.
+    pub fn store_warm(&self, h: MatrixHandle, k: usize, precision: Precision, dominant: &[f32]) {
+        if !self.cfg.warm_start || dominant.is_empty() {
+            return;
+        }
+        let mut inner = lock(&self.inner);
+        let key = (h.0, k, precision);
+        if matches!(inner.warm.get(&key), Some(WarmEntry::Disabled)) {
+            return;
+        }
+        if inner.warm.insert(key, WarmEntry::Seed(dominant.to_vec())).is_none() {
+            inner.warm_order.push_back(key);
+            while inner.warm.len() > WARM_CAP {
+                if let Some(old) = inner.warm_order.pop_front() {
+                    inner.warm.remove(&old);
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Negatively cache a `(handle, k, precision)` query: its warm seed
+    /// collapsed the Krylov subspace (truncated solve), so future repeats
+    /// run cold instead of repeating a wasted warm solve plus retry.
+    pub fn disable_warm(&self, h: MatrixHandle, k: usize, precision: Precision) {
+        if !self.cfg.warm_start {
+            return;
+        }
+        let mut inner = lock(&self.inner);
+        let key = (h.0, k, precision);
+        if inner.warm.insert(key, WarmEntry::Disabled).is_none() {
+            inner.warm_order.push_back(key);
+        }
+    }
+
+    /// Telemetry snapshot.
+    pub fn stats(&self) -> RegistryStats {
+        let inner = lock(&self.inner);
+        RegistryStats {
+            matrices: inner.sources.len(),
+            engines: inner.engines.values().filter(|s| s.bytes > 0).count(),
+            resident_bytes: inner.engines.values().map(|s| s.bytes).sum(),
+            prepares: self.prepares.load(Ordering::SeqCst),
+            engine_hits: self.engine_hits.load(Ordering::SeqCst),
+            dedup_hits: self.dedup_hits.load(Ordering::SeqCst),
+            evictions: self.evictions.load(Ordering::SeqCst),
+            warm_entries: inner.warm.len(),
+            warm_hits: self.warm_hits.load(Ordering::SeqCst),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Solver;
+    use crate::graphs;
+    use crate::lanczos::LanczosWorkspace;
+
+    fn opts_k(k: usize) -> SolveOptions {
+        SolveOptions { k, ..Default::default() }
+    }
+
+    #[test]
+    fn register_dedups_identical_content_but_not_scaled_copies() {
+        let reg = MatrixRegistry::default();
+        let m = graphs::mesh2d(10, 10, 0.9, 0.02, 1);
+        let h1 = reg.register(m.clone()).unwrap();
+        let h2 = reg.register(m.clone()).unwrap();
+        assert_eq!(h1, h2, "identical content shares one residency");
+        assert_eq!(reg.stats().dedup_hits, 1);
+        assert_eq!(reg.stats().matrices, 1);
+        // A scaled copy normalizes to the same entries but a different
+        // Frobenius norm: it must NOT alias the original.
+        let mut scaled = m.clone();
+        for v in &mut scaled.vals {
+            *v *= 2.0;
+        }
+        let h3 = reg.register(scaled).unwrap();
+        assert_ne!(h1, h3);
+        assert_eq!(reg.stats().matrices, 2);
+        // Different graph, different handle.
+        let h4 = reg.register(graphs::mesh2d(10, 10, 0.9, 0.02, 2)).unwrap();
+        assert_ne!(h1, h4);
+    }
+
+    #[test]
+    fn register_validates_input() {
+        let reg = MatrixRegistry::default();
+        assert!(reg.register(CooMatrix::new(4, 5)).is_err(), "non-square");
+        assert!(reg.register(CooMatrix::new(0, 0)).is_err(), "empty");
+        let mut asym = CooMatrix::new(4, 4);
+        asym.push(0, 0, 1.0);
+        asym.push(0, 1, 0.5);
+        assert!(reg.register(asym.clone()).is_err(), "asymmetric");
+        let trusting = MatrixRegistry::new(RegistryConfig { skip_symmetry_check: true, ..Default::default() });
+        assert!(trusting.register(asym).is_ok());
+    }
+
+    #[test]
+    fn prepared_builds_once_per_key() {
+        let reg = MatrixRegistry::default();
+        let h = reg.register(graphs::rmat(1 << 7, 8 << 7, 0.57, 0.19, 0.19, 5)).unwrap();
+        let (n, nnz) = reg.dims(h).unwrap();
+        assert_eq!(n, 1 << 7);
+        assert!(nnz > 0);
+        let a = reg.prepared(h, &opts_k(4)).unwrap();
+        let b = reg.prepared(h, &opts_k(8)).unwrap(); // same key: k is not part of engine identity
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(reg.stats().prepares, 1);
+        assert_eq!(reg.stats().engine_hits, 1);
+        // A different storage format is a different engine.
+        let c = reg.prepared(h, &SolveOptions { precision: Precision::FixedQ1_15, ..opts_k(4) }).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(reg.stats().prepares, 2);
+        assert_eq!(reg.stats().engines, 2);
+        // Unknown handle errors (ids are globally unique, so a foreign or
+        // stale handle can never alias another registry's matrix).
+        assert!(reg.prepared(MatrixHandle(u64::MAX), &opts_k(4)).is_err());
+    }
+
+    #[test]
+    fn registry_solves_match_direct_solver() {
+        let m = graphs::rmat(1 << 8, 8 << 8, 0.57, 0.19, 0.19, 23);
+        let reg = MatrixRegistry::default();
+        let h = reg.register(m.clone()).unwrap();
+        let opts = opts_k(6);
+        let prep = reg.prepared(h, &opts).unwrap();
+        let mut ws = LanczosWorkspace::new();
+        let via_registry = Solver::solve_detached(&prep, 6, &opts, &mut ws, None).unwrap();
+        let direct = Solver::new(opts).solve(&m).unwrap();
+        assert_eq!(via_registry.eigenvalues, direct.eigenvalues);
+        assert_eq!(via_registry.eigenvectors, direct.eigenvectors);
+    }
+
+    #[test]
+    fn unregister_drops_sources_engines_and_warm_entries() {
+        let reg = MatrixRegistry::new(RegistryConfig { warm_start: true, ..Default::default() });
+        let m = graphs::mesh2d(10, 10, 0.9, 0.02, 5);
+        let h = reg.register(m.clone()).unwrap();
+        let prep = reg.prepared(h, &opts_k(4)).unwrap();
+        reg.store_warm(h, 4, Precision::Float32, &[0.1; 100]);
+        assert_eq!(reg.stats().matrices, 1);
+        assert_eq!(reg.stats().engines, 1);
+        assert_eq!(reg.stats().warm_entries, 1);
+
+        assert!(reg.unregister(h));
+        assert!(!reg.unregister(h), "second unregister is a no-op");
+        let stats = reg.stats();
+        assert_eq!(stats.matrices, 0);
+        assert_eq!(stats.engines, 0);
+        assert_eq!(stats.resident_bytes, 0);
+        assert_eq!(stats.warm_entries, 0);
+        // Held engines stay usable; the handle itself is dead...
+        assert!(prep.n() > 0);
+        assert!(reg.prepared(h, &opts_k(4)).is_err());
+        assert!(reg.dims(h).is_none());
+        // ...and re-registering the same content mints a fresh handle
+        // (no dedup against removed state).
+        let h2 = reg.register(m).unwrap();
+        assert_ne!(h, h2);
+        assert!(reg.prepared(h2, &opts_k(4)).is_ok());
+    }
+
+    #[test]
+    fn byte_budget_evicts_least_recently_used() {
+        // Budget sized for roughly one engine: the second prepared engine
+        // evicts the first; re-preparing the first rebuilds it.
+        let reg = MatrixRegistry::new(RegistryConfig { budget_bytes: 1, ..Default::default() });
+        let h1 = reg.register(graphs::mesh2d(12, 12, 0.9, 0.02, 3)).unwrap();
+        let h2 = reg.register(graphs::mesh2d(12, 12, 0.9, 0.02, 4)).unwrap();
+        let a1 = reg.prepared(h1, &opts_k(4)).unwrap();
+        let _a2 = reg.prepared(h2, &opts_k(4)).unwrap();
+        let stats = reg.stats();
+        assert_eq!(stats.prepares, 2);
+        assert!(stats.evictions >= 1, "budget of 1 byte must evict");
+        // The evicted engine is still usable by holders of its Arc...
+        assert!(a1.n() > 0);
+        // ...and a new request simply rebuilds it.
+        let a1_again = reg.prepared(h1, &opts_k(4)).unwrap();
+        assert!(!Arc::ptr_eq(&a1, &a1_again));
+        assert_eq!(reg.stats().prepares, 3);
+    }
+
+    #[test]
+    fn warm_start_cache_round_trips_when_enabled() {
+        let cold = MatrixRegistry::default();
+        let h = cold.register(graphs::mesh2d(8, 8, 0.9, 0.02, 7)).unwrap();
+        cold.store_warm(h, 4, Precision::Float32, &[1.0; 64]);
+        assert!(cold.warm_v1(h, 4, Precision::Float32).is_none(), "disabled by default");
+
+        let warm = MatrixRegistry::new(RegistryConfig { warm_start: true, ..Default::default() });
+        let h = warm.register(graphs::mesh2d(8, 8, 0.9, 0.02, 7)).unwrap();
+        assert!(warm.warm_v1(h, 4, Precision::Float32).is_none(), "cold query has no seed");
+        warm.store_warm(h, 4, Precision::Float32, &[0.5; 64]);
+        assert_eq!(warm.warm_v1(h, 4, Precision::Float32).unwrap(), vec![0.5; 64]);
+        assert!(warm.warm_v1(h, 5, Precision::Float32).is_none(), "k is part of the key");
+        assert!(warm.warm_v1(h, 4, Precision::FixedQ1_15).is_none(), "precision is part of the key");
+        let stats = warm.stats();
+        assert_eq!(stats.warm_entries, 1);
+        assert_eq!(stats.warm_hits, 1);
+    }
+
+    #[test]
+    fn disable_warm_negatively_caches_a_key() {
+        let reg = MatrixRegistry::new(RegistryConfig { warm_start: true, ..Default::default() });
+        let h = reg.register(graphs::mesh2d(8, 8, 0.9, 0.02, 9)).unwrap();
+        reg.store_warm(h, 4, Precision::Float32, &[0.5; 64]);
+        assert!(reg.warm_v1(h, 4, Precision::Float32).is_some());
+        reg.disable_warm(h, 4, Precision::Float32);
+        assert!(reg.warm_v1(h, 4, Precision::Float32).is_none());
+        // Stores after disabling are ignored: the key stays cold for good.
+        reg.store_warm(h, 4, Precision::Float32, &[0.5; 64]);
+        assert!(reg.warm_v1(h, 4, Precision::Float32).is_none());
+        // Other keys are unaffected.
+        reg.store_warm(h, 5, Precision::Float32, &[0.5; 64]);
+        assert!(reg.warm_v1(h, 5, Precision::Float32).is_some());
+    }
+
+    #[test]
+    fn pjrt_requests_share_the_native_engine_when_fallback_is_static() {
+        // Without the `pjrt` feature (and always for fixed-point formats),
+        // an Engine::Pjrt request is statically known to fall back to
+        // native; the cache key collapses onto the native key so the two
+        // request flavors share one engine instead of byte-identical
+        // twins.
+        if cfg!(feature = "pjrt") {
+            return; // runtime fallback is not statically known there
+        }
+        let reg = MatrixRegistry::default();
+        let h = reg.register(graphs::mesh2d(8, 8, 0.9, 0.02, 11)).unwrap();
+        let a = reg.prepared(h, &SolveOptions { engine: Engine::Pjrt, ..opts_k(4) }).unwrap();
+        let b = reg.prepared(h, &opts_k(4)).unwrap(); // Engine::Native
+        assert!(Arc::ptr_eq(&a, &b), "fallback and native requests must share one engine");
+        assert_eq!(reg.stats().prepares, 1);
+        assert_eq!(a.engine(), "native");
+    }
+
+    #[test]
+    fn warm_started_solve_converges_on_repeat_query() {
+        let reg = MatrixRegistry::new(RegistryConfig { warm_start: true, ..Default::default() });
+        let m = graphs::rmat(1 << 7, 8 << 7, 0.57, 0.19, 0.19, 41);
+        let h = reg.register(m).unwrap();
+        let opts = opts_k(4);
+        let prep = reg.prepared(h, &opts).unwrap();
+        let mut ws = LanczosWorkspace::new();
+        let first = Solver::solve_detached(&prep, 4, &opts, &mut ws, None).unwrap();
+        assert!(!first.metrics.warm_started);
+        reg.store_warm(h, 4, opts.precision, &first.eigenvectors[0]);
+        let v1 = reg.warm_v1(h, 4, opts.precision);
+        assert!(v1.is_some());
+        let second = Solver::solve_detached(&prep, 4, &opts, &mut ws, v1).unwrap();
+        assert!(second.metrics.warm_started);
+        // Same dominant eigenvalue, warm or cold (both are finite-K Ritz
+        // estimates, so compare at estimate accuracy, not bitwise).
+        assert!(
+            (second.eigenvalues[0] - first.eigenvalues[0]).abs() < 2e-2 * first.eigenvalues[0].abs().max(1.0),
+            "{} vs {}",
+            second.eigenvalues[0],
+            first.eigenvalues[0]
+        );
+    }
+}

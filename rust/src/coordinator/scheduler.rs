@@ -28,13 +28,44 @@ pub struct JobSpec {
     pub solve_s: f64,
 }
 
-/// Scheduling policy.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Scheduling policy. This is also the **live** queue-policy type of
+/// [`crate::coordinator::service::EigenService`] (re-exported there as
+/// `QueuePolicy`): the offline model below and the deployed dispatch loop
+/// share one type, so they cannot drift apart silently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Policy {
     /// Arrival order, greedy earliest-available core.
     Fifo,
     /// Stable-sort jobs by K-core, then greedy — amortizes reconfigs.
     KBatched,
+}
+
+impl Policy {
+    /// Name for reports and CLI flags.
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Fifo => "fifo",
+            Policy::KBatched => "kbatched",
+        }
+    }
+
+    /// Parse a CLI spelling (`fifo` | `kbatched`).
+    pub fn parse(s: &str) -> Option<Policy> {
+        match s {
+            "fifo" => Some(Policy::Fifo),
+            "kbatched" | "k-batched" => Some(Policy::KBatched),
+            _ => None,
+        }
+    }
+}
+
+/// The Jacobi core class a K-value runs on: the smallest compiled core that
+/// fits (`ArtifactRegistry::pick_jacobi`), or the next power of two for
+/// K beyond the shipped bitstream (soft-core fallback — still a distinct
+/// reconfiguration class). Both the offline [`schedule`] model and the live
+/// service queue group jobs by this class.
+pub fn core_for_k(k: usize) -> usize {
+    ArtifactRegistry::pick_jacobi(k).unwrap_or_else(|| k.max(4).next_power_of_two())
 }
 
 /// A farm of reconfigurable Jacobi cores.
@@ -192,6 +223,20 @@ mod tests {
         assert!(r.completion_s.iter().all(|&t| t > 0.0));
         let max = r.completion_s.iter().fold(0.0f64, |a, &b| a.max(b));
         assert!((max - r.makespan_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn core_classes_and_policy_names() {
+        assert_eq!(core_for_k(8), 8);
+        assert_eq!(core_for_k(12), 16);
+        assert_eq!(core_for_k(32), 32);
+        // Beyond the shipped bitstream: next-power-of-two soft-core class.
+        assert_eq!(core_for_k(40), 64);
+        assert_eq!(core_for_k(1), 4);
+        assert_eq!(Policy::Fifo.name(), "fifo");
+        assert_eq!(Policy::parse("kbatched"), Some(Policy::KBatched));
+        assert_eq!(Policy::parse("k-batched"), Some(Policy::KBatched));
+        assert_eq!(Policy::parse("lifo"), None);
     }
 
     #[test]

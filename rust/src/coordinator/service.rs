@@ -2,42 +2,75 @@
 //! paper motivates (§I: "applications on top of Top-K eigenproblem are
 //! mostly encountered in data centers").
 //!
-//! A leader thread owns a FIFO job queue; worker threads (one per
-//! configured solver replica, mirroring the paper's multiple Jacobi cores
-//! per SLR) pull jobs, run the two-phase solver, and deliver results
-//! through per-job channels. Shutdown is graceful: pending jobs drain
-//! unless `abort` is requested.
+//! A leader thread owns a job queue; worker threads (one per configured
+//! solver replica, mirroring the paper's multiple Jacobi cores per SLR)
+//! pull jobs under a pluggable [`QueuePolicy`], run the two-phase solver,
+//! and deliver results through per-job channels. Shutdown is graceful:
+//! pending jobs drain unless `abort` is requested.
 //!
-//! ## Batched submission
+//! ## Matrix-resident serving
 //!
-//! [`EigenService::submit_batch`] enqueues one *batch* of jobs over the
-//! same matrix with different K values. A batch is scheduled as a unit on
-//! one worker, which runs the O(nnz) prepare phase **once**
-//! ([`Solver::prepare`]) and shares the resulting CSR + sharded SpMV
-//! engine across all member solves — the same-matrix multi-K fast path.
-//! Each member still gets its own [`JobResult`] through its own
-//! [`Ticket`].
+//! The primary serving path is **handle-based**: clients
+//! [`EigenService::register`] a matrix once (content-hash deduplicated)
+//! and submit jobs that carry a [`MatrixHandle`] instead of an owned
+//! `CooMatrix`. Every worker replica then solves against the *same*
+//! `Arc<PreparedMatrix>` from the shared [`MatrixRegistry`] — the O(nnz)
+//! prepare runs exactly once per `(handle, precision, engine, geometry)`
+//! key no matter how many jobs or workers touch it, and jobs cross the
+//! queue as a few words, never as matrix bytes. Each worker keeps one
+//! [`LanczosWorkspace`] for its whole lifetime, so steady-state handle
+//! jobs are allocation-light and clone-free end to end.
 //!
-//! ## Telemetry
+//! [`EigenService::submit`] / [`EigenService::submit_batch`] remain as the
+//! one-shot owned-matrix paths (ad-hoc queries that will never repeat);
+//! they consume the matrix into the job and use
+//! [`Solver::prepare_owned`], so even the legacy path no longer clones
+//! the COO.
 //!
-//! The service keeps queue/latency counters ([`ServiceStats`]) so a
-//! deployment can watch saturation: submitted/completed/failed totals,
-//! live queue depth, cumulative and maximum queue wait, and cumulative
-//! solve time.
+//! ## K-aware dispatch
+//!
+//! [`QueuePolicy`] is [`crate::coordinator::scheduler::Policy`] — the same
+//! type the offline §IV-C core-farm model uses, now wired into the live
+//! loop. Under [`QueuePolicy::KBatched`], a worker keeps serving jobs
+//! whose Jacobi core class ([`core_for_k`]) matches the one it
+//! last ran; when its class runs dry it switches to the class with the
+//! largest estimated backlog (solve-time estimates come from
+//! [`FpgaTimingModel`] at submit time), amortizing the expensive
+//! partial-reconfiguration over the most work. [`ServiceStats::reconfigs`]
+//! counts the switches; [`select_next`] is the pure dispatch rule, shared
+//! by the worker loop, the tests, and the `ablation_scheduler` bench so
+//! the deployed policy and the model cannot drift.
+//!
+//! ## Validation and telemetry
+//!
+//! Bad jobs are rejected at **submit** time (`k >= 1 && k <= n`, square
+//! matrix, known handle): the ticket immediately yields an error
+//! [`JobResult`] and no worker ever sees the job. The service keeps
+//! queue/latency counters ([`ServiceStats`]) so a deployment can watch
+//! saturation: submitted/completed/failed totals, live queue depth,
+//! cumulative and maximum queue wait, cumulative solve time, and core
+//! reconfigurations.
 
+use crate::coordinator::registry::{MatrixHandle, MatrixRegistry, RegistryConfig};
+use crate::coordinator::scheduler::core_for_k;
 use crate::coordinator::{SolveOptions, Solution, Solver};
-use crate::sparse::CooMatrix;
+use crate::fpga::FpgaTimingModel;
+use crate::lanczos::LanczosWorkspace;
+use crate::sparse::{CooMatrix, RowPartition};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-/// A submitted eigenproblem.
+/// The live queue policy: the offline scheduler model's type, deployed.
+pub use crate::coordinator::scheduler::Policy as QueuePolicy;
+
+/// A submitted eigenproblem (the one-shot owned-matrix path).
 pub struct Job {
     /// Client-assigned identifier.
     pub id: u64,
-    /// The matrix to decompose.
+    /// The matrix to decompose (consumed by the worker — never cloned).
     pub matrix: CooMatrix,
     /// Per-job solve options.
     pub opts: SolveOptions,
@@ -53,9 +86,28 @@ struct BatchJob {
     replies: Vec<Sender<JobResult>>,
 }
 
+/// A matrix-resident job: carries a registry handle, not matrix bytes.
+struct HandleJob {
+    id: u64,
+    handle: MatrixHandle,
+    k: usize,
+    opts: SolveOptions,
+    reply: Sender<JobResult>,
+}
+
 enum QueueItem {
     Single(Job),
     Batch(BatchJob),
+    Handle(HandleJob),
+}
+
+/// One queued unit plus its dispatch metadata: the Jacobi core class it
+/// needs and the timing-model estimate of its solve time.
+struct QueueEntry {
+    item: QueueItem,
+    enqueued: std::time::Instant,
+    core: usize,
+    est_s: f64,
 }
 
 /// Result delivered to the submitter.
@@ -75,7 +127,8 @@ pub struct JobResult {
 /// Snapshot of the service's queue/latency counters.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ServiceStats {
-    /// Jobs submitted so far (batch members count individually).
+    /// Jobs submitted so far (batch members count individually; jobs
+    /// rejected at submit time count as submitted, completed, and failed).
     pub submitted: u64,
     /// Jobs finished (successfully or not).
     pub completed: u64,
@@ -91,6 +144,10 @@ pub struct ServiceStats {
     pub max_queued_s: f64,
     /// Cumulative solver wall time across finished jobs, seconds.
     pub total_solve_s: f64,
+    /// Jacobi core-class switches workers performed (§IV-C partial
+    /// reconfigurations; [`QueuePolicy::KBatched`] exists to minimize
+    /// these).
+    pub reconfigs: u64,
 }
 
 /// Internal atomic counters behind [`ServiceStats`]. Durations are stored
@@ -101,6 +158,7 @@ struct Counters {
     completed: AtomicU64,
     failed: AtomicU64,
     batches: AtomicU64,
+    reconfigs: AtomicU64,
     total_queued_us: AtomicU64,
     max_queued_us: AtomicU64,
     total_solve_us: AtomicU64,
@@ -120,12 +178,15 @@ impl Counters {
 }
 
 struct Shared {
-    queue: Mutex<VecDeque<(QueueItem, std::time::Instant)>>,
+    queue: Mutex<VecDeque<QueueEntry>>,
     available: Condvar,
     shutdown: AtomicBool,
+    /// While set, workers leave the queue untouched (deterministic trace
+    /// loading: enqueue everything, then [`EigenService::resume`]).
+    paused: AtomicBool,
 }
 
-/// Handle returned by [`EigenService::submit`]; await with `recv`.
+/// Handle returned by the submit calls; await with `wait`.
 pub struct Ticket {
     rx: Receiver<JobResult>,
 }
@@ -141,66 +202,227 @@ impl Ticket {
     }
 }
 
-/// The service: leader queue + solver worker replicas.
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Solver worker replicas.
+    pub replicas: usize,
+    /// Live dispatch policy (FIFO, or K-batched core-affinity).
+    pub policy: QueuePolicy,
+    /// Configuration of the shared [`MatrixRegistry`] (engine byte
+    /// budget, warm-start cache, trust flags).
+    pub registry: RegistryConfig,
+    /// Start with dispatch paused; call [`EigenService::resume`] once the
+    /// queue is loaded. Used for deterministic policy traces (benches,
+    /// tests) — production services start live.
+    pub paused: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            replicas: 1,
+            policy: QueuePolicy::Fifo,
+            registry: RegistryConfig::default(),
+            paused: false,
+        }
+    }
+}
+
+/// Longest run of consecutive same-class affinity picks a worker may make
+/// before it must take the queue head instead (plain FIFO for one
+/// dispatch). This bounds starvation under [`QueuePolicy::KBatched`]: a
+/// sustained stream of hot-class arrivals cannot hold back an older
+/// other-class job forever — the oldest waiter is served at least once
+/// every `AFFINITY_STREAK_CAP` dispatches per worker, at the cost of at
+/// most one extra reconfiguration per cap window.
+pub const AFFINITY_STREAK_CAP: usize = 32;
+
+/// The pure dispatch rule of the live queue: given the queued entries'
+/// `(core class, estimated solve seconds)` in arrival order and the
+/// worker's currently-loaded core class, pick the index to run next.
+///
+/// * [`QueuePolicy::Fifo`] — always the head.
+/// * [`QueuePolicy::KBatched`] — the oldest entry of the loaded core class
+///   if any (keep the core hot), otherwise the first entry of the class
+///   with the **largest estimated backlog** (amortize the upcoming
+///   reconfiguration over the most work; ties go to the earliest class).
+///   The worker loop additionally breaks affinity every
+///   [`AFFINITY_STREAK_CAP`] consecutive same-class picks by taking the
+///   queue **head** (the oldest waiter) for one dispatch, so no class is
+///   starved by a continuous hot-class stream.
+///
+/// Dispatch is O(queue length) per pop (a snapshot Vec plus a scan) under
+/// the queue mutex — negligible next to a solve, but worth revisiting
+/// with incremental per-class totals if queues reach tens of thousands.
+///
+/// Public because it *is* the deployment behaviour: the worker loop, the
+/// unit tests, and the `ablation_scheduler` bench all call this one
+/// function, so the modelled policy and the deployed policy cannot drift.
+pub fn select_next(queue: &[(usize, f64)], loaded_core: Option<usize>, policy: QueuePolicy) -> Option<usize> {
+    if queue.is_empty() {
+        return None;
+    }
+    match policy {
+        QueuePolicy::Fifo => Some(0),
+        QueuePolicy::KBatched => {
+            if let Some(core) = loaded_core {
+                if let Some(i) = queue.iter().position(|&(c, _)| c == core) {
+                    return Some(i);
+                }
+            }
+            let mut classes: Vec<(usize, f64, usize)> = Vec::new(); // (core, backlog, first idx)
+            for (i, &(c, est)) in queue.iter().enumerate() {
+                match classes.iter_mut().find(|e| e.0 == c) {
+                    Some(e) => e.1 += est,
+                    None => classes.push((c, est, i)),
+                }
+            }
+            let mut best = &classes[0];
+            for e in &classes[1..] {
+                if e.1 > best.1 {
+                    best = e;
+                }
+            }
+            Some(best.2)
+        }
+    }
+}
+
+/// Timing-model estimate of one solve (the §IV-C dispatch currency): the
+/// [`FpgaTimingModel`] at the job's precision and CU count over an
+/// idealized balanced partition — submit time knows `n`/`nnz` but not the
+/// real shard table, and the queue only needs relative magnitudes.
+fn estimate_solve_s(n: usize, nnz: usize, opts: &SolveOptions, k: usize) -> f64 {
+    let cus = opts.cus.max(1);
+    let model = FpgaTimingModel { cus, ..FpgaTimingModel::for_precision(opts.precision) };
+    let shards: Vec<RowPartition> =
+        (0..cus).map(|i| RowPartition { row_start: i, row_end: i + 1, nnz: nnz / cus }).collect();
+    let steps = k.saturating_sub(1) * ((k.max(2) as f64).log2().ceil() as usize + 3);
+    model.solve_time(n, &shards, k, opts.reorth, steps).total_s()
+}
+
+/// The service: leader queue + solver worker replicas + shared registry.
 pub struct EigenService {
     shared: Arc<Shared>,
     workers: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
     counters: Arc<Counters>,
+    registry: Arc<MatrixRegistry>,
 }
 
 impl EigenService {
-    /// Start `replicas` solver workers.
+    /// Start `replicas` solver workers with default (FIFO) dispatch.
     pub fn start(replicas: usize) -> Self {
-        assert!(replicas >= 1);
+        Self::with_config(ServiceConfig { replicas, ..Default::default() })
+    }
+
+    /// Start a service under `cfg`.
+    pub fn with_config(cfg: ServiceConfig) -> Self {
+        assert!(cfg.replicas >= 1);
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            paused: AtomicBool::new(cfg.paused),
         });
         let counters = Arc::new(Counters::default());
-        let mut workers = Vec::with_capacity(replicas);
-        for w in 0..replicas {
+        let registry = Arc::new(MatrixRegistry::new(cfg.registry.clone()));
+        let mut workers = Vec::with_capacity(cfg.replicas);
+        for w in 0..cfg.replicas {
             let shared = Arc::clone(&shared);
             let counters = Arc::clone(&counters);
+            let registry = Arc::clone(&registry);
+            let policy = cfg.policy;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("eigen-worker-{w}"))
-                    .spawn(move || loop {
-                        let item = {
-                            let mut q = shared.queue.lock().unwrap();
-                            loop {
-                                if let Some(item) = q.pop_front() {
-                                    break Some(item);
-                                }
-                                if shared.shutdown.load(Ordering::SeqCst) {
-                                    break None;
-                                }
-                                q = shared.available.wait(q).unwrap();
-                            }
-                        };
-                        let Some((item, enqueued)) = item else { break };
-                        let queued_s = enqueued.elapsed().as_secs_f64();
-                        match item {
-                            QueueItem::Single(job) => {
-                                Self::run_single(job, queued_s, &counters);
-                            }
-                            QueueItem::Batch(batch) => {
-                                Self::run_batch(batch, queued_s, &counters);
-                            }
-                        }
-                    })
+                    .spawn(move || Self::worker_loop(&shared, &counters, &registry, policy))
                     .expect("spawn worker"),
             );
         }
-        Self { shared, workers, next_id: AtomicU64::new(1), counters }
+        Self { shared, workers, next_id: AtomicU64::new(1), counters, registry }
+    }
+
+    fn worker_loop(
+        shared: &Shared,
+        counters: &Counters,
+        registry: &Arc<MatrixRegistry>,
+        policy: QueuePolicy,
+    ) {
+        // Worker-local state: the Jacobi core class this replica last ran
+        // (reconfiguration tracking), the length of its current same-class
+        // affinity streak (starvation bound), and its reusable scratch.
+        let mut loaded_core: Option<usize> = None;
+        let mut streak = 0usize;
+        let mut ws = LanczosWorkspace::new();
+        loop {
+            let force_fifo = streak >= AFFINITY_STREAK_CAP;
+            let entry = {
+                let mut q = shared.queue.lock().unwrap();
+                loop {
+                    let shutdown = shared.shutdown.load(Ordering::SeqCst);
+                    // Shutdown drains the queue even when paused.
+                    if (!shared.paused.load(Ordering::SeqCst) || shutdown) && !q.is_empty() {
+                        let idx = if force_fifo {
+                            // Anti-starvation: serve the oldest waiter.
+                            0
+                        } else {
+                            let view: Vec<(usize, f64)> = q.iter().map(|e| (e.core, e.est_s)).collect();
+                            select_next(&view, loaded_core, policy).expect("queue non-empty")
+                        };
+                        break Some(q.remove(idx).expect("selected index in range"));
+                    }
+                    if shutdown {
+                        break None;
+                    }
+                    q = shared.available.wait(q).unwrap();
+                }
+            };
+            let Some(entry) = entry else { break };
+            // Reconfiguration accounting runs over the *member* core
+            // sequence: a batch executes its Ks in order on this worker, so
+            // its internal class switches are real reconfigurations too
+            // (entry.core — the max member class — is only the queue-side
+            // selection label). `loaded_core` ends at the physically-last
+            // member's class.
+            let member_cores: Vec<usize> = match &entry.item {
+                QueueItem::Single(job) => vec![core_for_k(job.opts.k)],
+                QueueItem::Handle(job) => vec![core_for_k(job.k)],
+                QueueItem::Batch(batch) => batch.ks.iter().map(|&k| core_for_k(k)).collect(),
+            };
+            let mut first = true;
+            for &core in &member_cores {
+                if loaded_core == Some(core) {
+                    // A forced-FIFO pick re-arms affinity even when it
+                    // happens to land on the hot class again.
+                    streak = if first && force_fifo { 0 } else { streak + 1 };
+                } else {
+                    streak = 0;
+                    if loaded_core.is_some() {
+                        counters.reconfigs.fetch_add(1, Ordering::SeqCst);
+                    }
+                    loaded_core = Some(core);
+                }
+                first = false;
+            }
+            let queued_s = entry.enqueued.elapsed().as_secs_f64();
+            match entry.item {
+                QueueItem::Single(job) => Self::run_single(job, queued_s, counters),
+                QueueItem::Batch(batch) => Self::run_batch(batch, queued_s, counters),
+                QueueItem::Handle(job) => Self::run_handle(job, queued_s, counters, registry, &mut ws),
+            }
+        }
     }
 
     fn run_single(job: Job, queued_s: f64, counters: &Counters) {
         let t0 = std::time::Instant::now();
-        // A panicking solve must not take the worker down.
+        let Job { id, matrix, opts, reply } = job;
+        // A panicking solve must not take the worker down. The job owns
+        // its matrix, so the owned prepare path runs clone-free.
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            Solver::new(job.opts.clone()).solve(&job.matrix)
+            let mut solver = Solver::new(opts);
+            solver.prepare_owned(matrix).and_then(|prep| solver.solve_prepared(&prep))
         }));
         let outcome = match outcome {
             Ok(Ok(sol)) => Ok(sol),
@@ -209,7 +431,7 @@ impl EigenService {
         };
         let solve_s = t0.elapsed().as_secs_f64();
         counters.record_result(outcome.is_ok(), queued_s, solve_s);
-        let _ = job.reply.send(JobResult { id: job.id, outcome, queued_s, solve_s });
+        let _ = reply.send(JobResult { id, outcome, queued_s, solve_s });
     }
 
     fn run_batch(batch: BatchJob, queued_s: f64, counters: &Counters) {
@@ -222,7 +444,7 @@ impl EigenService {
         let prep_t0 = std::time::Instant::now();
         let prepared = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let mut solver = Solver::new(opts.clone());
-            solver.prepare(&matrix).map(|p| (solver, p)).map_err(|e| e.to_string())
+            solver.prepare_owned(matrix).map(|p| (solver, p)).map_err(|e| e.to_string())
         }));
         let prep_s = prep_t0.elapsed().as_secs_f64();
         let outcomes: Vec<(Result<Solution, String>, f64)> = match prepared {
@@ -263,19 +485,137 @@ impl EigenService {
         }
     }
 
-    /// Enqueue a job; returns a [`Ticket`] to await the result.
+    fn run_handle(
+        job: HandleJob,
+        queued_s: f64,
+        counters: &Counters,
+        registry: &Arc<MatrixRegistry>,
+        ws: &mut LanczosWorkspace,
+    ) {
+        let t0 = std::time::Instant::now();
+        let HandleJob { id, handle, k, opts, reply } = job;
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let prep = registry.prepared(handle, &opts)?;
+            let v1 = registry.warm_v1(handle, k, opts.precision);
+            let mut sol = Solver::solve_detached(&prep, k, &opts, ws, v1)?;
+            // A warm seed that is (nearly) an exact eigenvector can break
+            // the recurrence down early, truncating the answer below the
+            // requested K. Retry cold: if the truncation was genuine (an
+            // exact invariant subspace), the cold solve reproduces it; if
+            // it was a warm-start artifact, the cold solve recovers the
+            // full K pairs. Either way the key is negatively cached —
+            // re-storing the cold dominant would just recreate the same
+            // truncating seed on every future repeat.
+            if sol.metrics.warm_started && sol.k() < k {
+                sol = Solver::solve_detached(&prep, k, &opts, ws, None)?;
+                registry.disable_warm(handle, k, opts.precision);
+            } else if let Some(dominant) = sol.eigenvectors.first() {
+                registry.store_warm(handle, k, opts.precision, dominant);
+            }
+            Ok(sol)
+        }));
+        let outcome: Result<Solution, String> = match outcome {
+            Ok(Ok(sol)) => Ok(sol),
+            Ok(Err(e)) => Err(e.to_string()),
+            Err(_) => Err("solver panicked".to_string()),
+        };
+        let solve_s = t0.elapsed().as_secs_f64();
+        counters.record_result(outcome.is_ok(), queued_s, solve_s);
+        let _ = reply.send(JobResult { id, outcome, queued_s, solve_s });
+    }
+
+    /// An immediately-failed ticket for a job rejected at submit time: the
+    /// error [`JobResult`] is already in the channel, no worker is
+    /// involved, and the counters record a completed+failed job.
+    fn rejected(&self, id: u64, msg: String) -> Ticket {
+        let (tx, rx) = channel();
+        self.counters.record_result(false, 0.0, 0.0);
+        let _ = tx.send(JobResult { id, outcome: Err(msg), queued_s: 0.0, solve_s: 0.0 });
+        Ticket { rx }
+    }
+
+    fn enqueue(&self, item: QueueItem, core: usize, est_s: f64) {
+        self.shared.queue.lock().unwrap().push_back(QueueEntry {
+            item,
+            enqueued: std::time::Instant::now(),
+            core,
+            est_s,
+        });
+        self.shared.available.notify_one();
+    }
+
+    /// The shared matrix registry (register matrices directly, read
+    /// telemetry, seed warm starts).
+    pub fn registry(&self) -> &Arc<MatrixRegistry> {
+        &self.registry
+    }
+
+    /// Register a matrix with the service's registry; the returned handle
+    /// can be submitted any number of times from any thread.
+    pub fn register(&self, matrix: CooMatrix) -> anyhow::Result<MatrixHandle> {
+        self.registry.register(matrix)
+    }
+
+    /// Drop a registered matrix's residency (source, cached engines, warm
+    /// entries). Jobs already queued for the handle fail with "unknown
+    /// matrix handle"; in-flight solves finish normally. Long-lived
+    /// services must unregister client matrices they are done with — the
+    /// registry byte budget bounds engines, not sources.
+    pub fn unregister(&self, handle: MatrixHandle) -> bool {
+        self.registry.unregister(handle)
+    }
+
+    /// Enqueue a one-shot owned-matrix job; returns a [`Ticket`] to await
+    /// the result. Invalid jobs (non-square matrix, `k` out of
+    /// `1..=n`) are rejected here — the ticket yields the error
+    /// immediately and no worker time is spent.
     pub fn submit(&self, matrix: CooMatrix, opts: SolveOptions) -> (u64, Ticket) {
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
-        let (tx, rx) = channel();
-        let job = Job { id, matrix, opts, reply: tx };
         self.counters.submitted.fetch_add(1, Ordering::SeqCst);
-        self.shared
-            .queue
-            .lock()
-            .unwrap()
-            .push_back((QueueItem::Single(job), std::time::Instant::now()));
-        self.shared.available.notify_one();
+        if matrix.nrows != matrix.ncols {
+            return (id, self.rejected(id, format!("matrix must be square ({}x{})", matrix.nrows, matrix.ncols)));
+        }
+        if opts.k < 1 || opts.k > matrix.nrows {
+            return (id, self.rejected(id, format!("bad k: {} not in 1..={}", opts.k, matrix.nrows)));
+        }
+        let (tx, rx) = channel();
+        let core = core_for_k(opts.k);
+        let est = estimate_solve_s(matrix.nrows, matrix.nnz(), &opts, opts.k);
+        let job = Job { id, matrix, opts, reply: tx };
+        self.enqueue(QueueItem::Single(job), core, est);
         (id, Ticket { rx })
+    }
+
+    /// Enqueue a job against a registered handle — the matrix-resident
+    /// path: the queue carries a handle, the worker solves on the shared
+    /// prepared engine, nothing is cloned. `k` comes from `opts.k` and is
+    /// validated against the registered dimension at submit time.
+    pub fn submit_handle(&self, handle: MatrixHandle, opts: SolveOptions) -> (u64, Ticket) {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.counters.submitted.fetch_add(1, Ordering::SeqCst);
+        let Some((n, nnz)) = self.registry.dims(handle) else {
+            return (id, self.rejected(id, format!("unknown matrix handle {}", handle.id())));
+        };
+        if opts.k < 1 || opts.k > n {
+            return (id, self.rejected(id, format!("bad k: {} not in 1..={n}", opts.k)));
+        }
+        let (tx, rx) = channel();
+        let core = core_for_k(opts.k);
+        let est = estimate_solve_s(n, nnz, &opts, opts.k);
+        let job = HandleJob { id, handle, k: opts.k, opts, reply: tx };
+        self.enqueue(QueueItem::Handle(job), core, est);
+        (id, Ticket { rx })
+    }
+
+    /// Convenience: one handle job per entry of `ks` (each an independent
+    /// queue item, so multiple workers fan out over the shared engine).
+    pub fn submit_handle_batch(
+        &self,
+        handle: MatrixHandle,
+        opts: SolveOptions,
+        ks: &[usize],
+    ) -> Vec<(u64, Ticket)> {
+        ks.iter().map(|&k| self.submit_handle(handle, SolveOptions { k, ..opts.clone() })).collect()
     }
 
     /// Enqueue one batch of same-matrix jobs, one per entry of `ks`.
@@ -284,7 +624,9 @@ impl EigenService {
     /// (canonicalize + normalize + CSR + sharded-engine build) runs once
     /// and is shared by every member solve. Returns one `(id, Ticket)`
     /// pair per K, in the same order as `ks`. An empty `ks` enqueues
-    /// nothing and returns an empty vector.
+    /// nothing and returns an empty vector. Members with invalid K (and
+    /// every member, when the matrix is not square) are rejected at
+    /// submit time without poisoning valid siblings.
     pub fn submit_batch(
         &self,
         matrix: CooMatrix,
@@ -294,26 +636,50 @@ impl EigenService {
         if ks.is_empty() {
             return Vec::new();
         }
-        let mut out = Vec::with_capacity(ks.len());
-        let mut ids = Vec::with_capacity(ks.len());
-        let mut replies = Vec::with_capacity(ks.len());
-        for _ in ks {
+        self.counters.submitted.fetch_add(ks.len() as u64, Ordering::SeqCst);
+        if matrix.nrows != matrix.ncols {
+            return ks
+                .iter()
+                .map(|_| {
+                    let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+                    let msg = format!("matrix must be square ({}x{})", matrix.nrows, matrix.ncols);
+                    (id, self.rejected(id, msg))
+                })
+                .collect();
+        }
+        let n = matrix.nrows;
+        let mut out: Vec<(u64, Option<Ticket>)> = Vec::with_capacity(ks.len());
+        let mut ids = Vec::new();
+        let mut valid_ks = Vec::new();
+        let mut replies = Vec::new();
+        let mut core = 0usize;
+        let mut est = 0.0f64;
+        for &k in ks {
             let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+            if k < 1 || k > n {
+                out.push((id, Some(self.rejected(id, format!("bad k: {k} not in 1..={n}")))));
+                continue;
+            }
             let (tx, rx) = channel();
             ids.push(id);
+            valid_ks.push(k);
             replies.push(tx);
-            out.push((id, Ticket { rx }));
+            core = core.max(core_for_k(k));
+            est += estimate_solve_s(n, matrix.nnz(), &opts, k);
+            out.push((id, Some(Ticket { rx })));
         }
-        self.counters.submitted.fetch_add(ks.len() as u64, Ordering::SeqCst);
-        self.counters.batches.fetch_add(1, Ordering::SeqCst);
-        let batch = BatchJob { ids, matrix, opts, ks: ks.to_vec(), replies };
-        self.shared
-            .queue
-            .lock()
-            .unwrap()
-            .push_back((QueueItem::Batch(batch), std::time::Instant::now()));
-        self.shared.available.notify_one();
-        out
+        if !ids.is_empty() {
+            self.counters.batches.fetch_add(1, Ordering::SeqCst);
+            let batch = BatchJob { ids, matrix, opts, ks: valid_ks, replies };
+            self.enqueue(QueueItem::Batch(batch), core, est);
+        }
+        out.into_iter().map(|(id, t)| (id, t.expect("every member has a ticket"))).collect()
+    }
+
+    /// Unpause dispatch after a [`ServiceConfig::paused`] start.
+    pub fn resume(&self) {
+        self.shared.paused.store(false, Ordering::SeqCst);
+        self.shared.available.notify_all();
     }
 
     /// Jobs finished so far.
@@ -337,6 +703,7 @@ impl EigenService {
             total_queued_s: self.counters.total_queued_us.load(Ordering::SeqCst) as f64 / 1e6,
             max_queued_s: self.counters.max_queued_us.load(Ordering::SeqCst) as f64 / 1e6,
             total_solve_s: self.counters.total_solve_us.load(Ordering::SeqCst) as f64 / 1e6,
+            reconfigs: self.counters.reconfigs.load(Ordering::SeqCst),
         }
     }
 
@@ -396,7 +763,7 @@ mod tests {
     #[test]
     fn bad_job_reports_error_without_killing_worker() {
         let svc = EigenService::start(1);
-        // Non-square matrix -> error, not a dead worker.
+        // Non-square matrix -> error at submit, not a dead worker.
         let bad = CooMatrix::new(4, 5);
         let (_, t1) = svc.submit(bad, SolveOptions::default());
         assert!(t1.wait().outcome.is_err());
@@ -405,6 +772,30 @@ mod tests {
         let (_, t2) = svc.submit(good, SolveOptions { k: 2, ..Default::default() });
         assert!(t2.wait().outcome.is_ok());
         assert_eq!(svc.stats().failed, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn bad_k_is_rejected_at_submit_time() {
+        let svc = EigenService::start(1);
+        let m = graphs::mesh2d(6, 6, 0.9, 0.02, 4); // n = 36
+        // k = 0 and k > n never reach a worker: the ticket already holds
+        // the error and the queue stays empty.
+        let (_, t0) = svc.submit(m.clone(), SolveOptions { k: 0, ..Default::default() });
+        let r0 = t0.wait();
+        assert!(r0.outcome.unwrap_err().contains("bad k"));
+        let (_, t1) = svc.submit(m.clone(), SolveOptions { k: 37, ..Default::default() });
+        assert!(t1.wait().outcome.is_err());
+        assert_eq!(svc.queue_depth(), 0);
+        let stats = svc.stats();
+        assert_eq!(stats.submitted, 2);
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.failed, 2);
+        // Unknown handles are rejected the same way.
+        let reg = MatrixRegistry::default();
+        let foreign = reg.register(m).unwrap();
+        let (_, t2) = svc.submit_handle(foreign, SolveOptions { k: 2, ..Default::default() });
+        assert!(t2.wait().outcome.unwrap_err().contains("unknown matrix handle"));
         svc.shutdown();
     }
 
@@ -468,6 +859,131 @@ mod tests {
         assert!(svc.submit_batch(m, SolveOptions::default(), &[]).is_empty());
         assert_eq!(svc.stats().submitted, 0);
         assert_eq!(svc.stats().batches, 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn handle_jobs_share_one_prepare_and_match_owned_jobs() {
+        let svc = EigenService::start(3);
+        let m = graphs::rmat(1 << 8, 8 << 8, 0.57, 0.19, 0.19, 51);
+        let h = svc.register(m.clone()).unwrap();
+        // Re-registering the same content dedups onto the same handle.
+        assert_eq!(svc.register(m.clone()).unwrap(), h);
+        let ks = [2usize, 3, 4, 5, 6, 7, 8, 6, 4, 2];
+        let tickets = svc.submit_handle_batch(h, SolveOptions::default(), &ks);
+        let mut owned = Vec::new();
+        for &k in &ks {
+            let (_, t) = svc.submit(m.clone(), SolveOptions { k, ..Default::default() });
+            owned.push(t);
+        }
+        for (((_, ht), ot), &k) in tickets.into_iter().zip(owned).zip(&ks) {
+            let hres = ht.wait().outcome.expect("handle job failed");
+            let ores = ot.wait().outcome.expect("owned job failed");
+            assert_eq!(hres.k(), ores.k(), "k={k}");
+            assert_eq!(hres.eigenvalues, ores.eigenvalues, "k={k}");
+        }
+        // The acceptance bar: M handle jobs across P workers, exactly one
+        // prepare; every other hit came from the shared engine.
+        let rstats = svc.registry().stats();
+        assert_eq!(rstats.prepares, 1, "{rstats:?}");
+        assert_eq!(rstats.engine_hits, ks.len() as u64 - 1);
+        assert_eq!(rstats.matrices, 1);
+        assert_eq!(rstats.dedup_hits, 1);
+        let stats = svc.stats();
+        assert_eq!(stats.submitted, 2 * ks.len() as u64);
+        assert_eq!(stats.completed, stats.submitted);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.queue_depth, 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn select_next_policies() {
+        // (core, est) queue in arrival order.
+        let q = [(8usize, 1.0), (32, 1.0), (8, 1.0), (32, 2.0)];
+        assert_eq!(select_next(&[], None, QueuePolicy::Fifo), None);
+        assert_eq!(select_next(&q, None, QueuePolicy::Fifo), Some(0));
+        assert_eq!(select_next(&q, Some(32), QueuePolicy::Fifo), Some(0), "FIFO ignores affinity");
+        // Affinity: keep the loaded core while its class has work.
+        assert_eq!(select_next(&q, Some(32), QueuePolicy::KBatched), Some(1));
+        assert_eq!(select_next(&q, Some(8), QueuePolicy::KBatched), Some(0));
+        // No affinity: the class with the largest estimated backlog wins
+        // (core 32 has 3.0s vs core 8's 2.0s).
+        assert_eq!(select_next(&q, None, QueuePolicy::KBatched), Some(1));
+        assert_eq!(select_next(&q, Some(16), QueuePolicy::KBatched), Some(1));
+        // Ties go to the earliest-seen class.
+        let tie = [(8usize, 1.0), (32, 1.0)];
+        assert_eq!(select_next(&tie, None, QueuePolicy::KBatched), Some(0));
+    }
+
+    #[test]
+    fn kbatched_dispatch_reduces_reconfigurations() {
+        // Deterministic trace: pause dispatch, enqueue an alternating-K
+        // trace (worst case for FIFO), resume, drain. One replica so the
+        // reconfiguration count is exact.
+        let trace: Vec<usize> = (0..16).map(|i| if i % 2 == 0 { 4 } else { 24 }).collect();
+        let mut reconfigs = Vec::new();
+        for policy in [QueuePolicy::Fifo, QueuePolicy::KBatched] {
+            let svc = EigenService::with_config(ServiceConfig {
+                replicas: 1,
+                policy,
+                paused: true,
+                ..Default::default()
+            });
+            let h = svc.register(graphs::mesh2d(8, 8, 0.9, 0.02, 6)).unwrap();
+            let tickets: Vec<_> = trace
+                .iter()
+                .map(|&k| svc.submit_handle(h, SolveOptions { k, ..Default::default() }).1)
+                .collect();
+            assert_eq!(svc.queue_depth(), trace.len(), "paused service holds the whole trace");
+            svc.resume();
+            for t in tickets {
+                assert!(t.wait().outcome.is_ok());
+            }
+            reconfigs.push(svc.stats().reconfigs);
+            svc.shutdown();
+        }
+        let (fifo, kbatched) = (reconfigs[0], reconfigs[1]);
+        assert_eq!(fifo, trace.len() as u64 - 1, "FIFO thrashes on alternation");
+        assert_eq!(kbatched, 1, "K-batched pays one switch for two classes");
+    }
+
+    #[test]
+    fn batch_internal_core_switches_are_counted() {
+        let svc = EigenService::with_config(ServiceConfig { replicas: 1, paused: true, ..Default::default() });
+        let m = graphs::mesh2d(8, 8, 0.9, 0.02, 8); // n = 64
+        let h = svc.register(m.clone()).unwrap();
+        let batch = svc.submit_batch(m, SolveOptions::default(), &[32, 4]);
+        let (_, t) = svc.submit_handle(h, SolveOptions { k: 4, ..Default::default() });
+        svc.resume();
+        for (_, bt) in batch {
+            assert!(bt.wait().outcome.is_ok());
+        }
+        assert!(t.wait().outcome.is_ok());
+        // The 32 -> 4 switch *inside* the batch is a real reconfiguration;
+        // the following k=4 handle job then runs on the already-loaded
+        // class-4 core without another switch.
+        assert_eq!(svc.stats().reconfigs, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn warm_start_service_reuses_previous_answers() {
+        let svc = EigenService::with_config(ServiceConfig {
+            replicas: 1,
+            registry: RegistryConfig { warm_start: true, ..Default::default() },
+            ..Default::default()
+        });
+        let h = svc.register(graphs::rmat(1 << 7, 8 << 7, 0.57, 0.19, 0.19, 61)).unwrap();
+        let (_, t1) = svc.submit_handle(h, SolveOptions { k: 4, ..Default::default() });
+        let first = t1.wait().outcome.unwrap();
+        assert!(!first.metrics.warm_started);
+        let (_, t2) = svc.submit_handle(h, SolveOptions { k: 4, ..Default::default() });
+        let second = t2.wait().outcome.unwrap();
+        assert!(second.metrics.warm_started, "repeat query must seed from the cache");
+        // Both are finite-K Ritz estimates of the same dominant pair.
+        assert!((second.eigenvalues[0] - first.eigenvalues[0]).abs() < 2e-2 * first.eigenvalues[0].abs().max(1.0));
+        assert_eq!(svc.registry().stats().warm_hits, 1);
         svc.shutdown();
     }
 }

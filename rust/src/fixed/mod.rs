@@ -241,7 +241,7 @@ pub const fn packet_capacity(value_bits: u32) -> usize {
 /// Precision mode for the mixed-precision datapath: the runtime-dispatch
 /// selector over the monomorphized [`Dataword`] kernels (see
 /// [`with_precision!`]).
-#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
 pub enum Precision {
     /// IEEE f32 everywhere (the CPU baseline datapath).
     Float32,

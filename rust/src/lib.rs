@@ -78,7 +78,7 @@ pub mod util;
 
 /// Convenient glob-import of the most used types.
 pub mod prelude {
-    pub use crate::coordinator::{self, Engine, SolveOptions, Solver};
+    pub use crate::coordinator::{self, Engine, MatrixHandle, MatrixRegistry, SolveOptions, Solver};
     pub use crate::fixed::{Dataword, Precision, Q1_15, Q1_31, Q2_30};
     pub use crate::fpga;
     pub use crate::graphs;

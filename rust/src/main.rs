@@ -3,13 +3,18 @@
 //! Subcommands:
 //! * `solve <input>` — solve a MatrixMarket file or a Table II catalog ID
 //!   (e.g. `WB-GO@64` = web-Google twin at 1/64 scale).
+//! * `serve <input>` — matrix-resident serving session: register the
+//!   matrix once, run a mixed-K job trace through `EigenService` worker
+//!   replicas against the shared prepared engine, print service and
+//!   registry telemetry.
 //! * `catalog` — print the Table II dataset catalog.
 //! * `generate <id> <out.mtx>` — materialize a synthetic twin to a file.
 //! * `model <input>` — print the FPGA timing/resource/power model estimate.
 //! * `artifacts` — verify the AOT artifact set (`make artifacts`).
 #![allow(clippy::needless_range_loop, clippy::excessive_precision)]
 
-use topk_eigen::coordinator::{verify, Engine, SolveOptions, Solver};
+use topk_eigen::coordinator::service::{EigenService, QueuePolicy, ServiceConfig};
+use topk_eigen::coordinator::{verify, Engine, RegistryConfig, SolveOptions, Solver};
 use topk_eigen::fixed::Precision;
 use topk_eigen::fpga::{FpgaTimingModel, PowerModel, SlrBudget};
 use topk_eigen::graphs;
@@ -23,6 +28,7 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(String::as_str) {
         Some("solve") => cmd_solve(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("catalog") => cmd_catalog(),
         Some("generate") => cmd_generate(&args[1..]),
         Some("model") => cmd_model(&args[1..]),
@@ -30,7 +36,7 @@ fn main() {
         _ => {
             eprintln!(
                 "topk-eigen — Top-K sparse graph eigensolver (Lanczos + systolic Jacobi)\n\n\
-                 USAGE:\n  topk-eigen <solve|catalog|generate|model|artifacts> [...]\n\n\
+                 USAGE:\n  topk-eigen <solve|serve|catalog|generate|model|artifacts> [...]\n\n\
                  Run `topk-eigen solve --help` etc. for details."
             );
             2
@@ -98,6 +104,7 @@ fn cmd_solve(args: &[String]) -> i32 {
         .opt("partition", "row partition: equal-rows|balanced-nnz", Some("balanced-nnz"))
         .opt("engine", "spmv engine: native|pjrt", Some("native"))
         .flag("no-fuse", "disable the fused Lanczos datapath (serial per-pass vector phase)")
+        .flag("skip-symmetry-check", "trust the input to be symmetric (skips the O(nnz) prepare-time check)")
         .flag("verify", "print Fig-11 accuracy metrics")
         .flag("quiet", "suppress per-pair output");
     let m = match cmd.parse(args) {
@@ -121,6 +128,7 @@ fn cmd_solve(args: &[String]) -> i32 {
                 _ => Engine::Native,
             },
             fuse: !m.flag("no-fuse"),
+            skip_symmetry_check: m.flag("skip-symmetry-check"),
             ..Default::default()
         };
         println!(
@@ -178,6 +186,134 @@ fn cmd_solve(args: &[String]) -> i32 {
             );
         }
         Ok(0)
+    };
+    match run() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let cmd = Command::new("topk-eigen serve", "matrix-resident serving session over one registered matrix")
+        .positional("input", "MatrixMarket file or catalog ID[@scale]")
+        .opt("replicas", "solver worker replicas", Some("2"))
+        .opt("jobs", "jobs in the trace (cycling through --ks)", Some("32"))
+        .opt("ks", "comma-separated K values of the trace", Some("4,8,16,32"))
+        .opt("policy", "queue policy: fifo|kbatched", Some("kbatched"))
+        .opt("reorth", "reorthogonalization: none|every|every-N", Some("every-2"))
+        .opt("precision", "f32|q1.31|q2.30|q1.15", Some("f32"))
+        .opt("cus", "SpMV compute units (matrix row shards)", Some("5"))
+        .opt("threads", "CU pool worker threads (0 = one per CU)", Some("0"))
+        .opt("budget-mb", "registry engine byte budget in MiB (0 = unlimited)", Some("0"))
+        .flag("warm-start", "seed repeated (handle, k) queries from the previous dominant Ritz vector")
+        .flag("skip-symmetry-check", "trust inputs to be symmetric (skips the O(nnz) registration check)")
+        .flag("quiet", "suppress per-job output");
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let run = || -> Result<i32, String> {
+        let matrix = load_input(m.str("input").map_err(|e| e.to_string())?)?;
+        let replicas = m.parse_at_least::<usize>("replicas", 1).map_err(|e| e.to_string())?;
+        let jobs = m.parse_at_least::<usize>("jobs", 1).map_err(|e| e.to_string())?;
+        let ks = m.parse_list::<usize>("ks").map_err(|e| e.to_string())?;
+        if ks.is_empty() {
+            return Err("--ks must name at least one K".into());
+        }
+        let policy = QueuePolicy::parse(m.str("policy").unwrap())
+            .ok_or_else(|| format!("bad policy '{}' (fifo|kbatched)", m.str("policy").unwrap()))?;
+        let opts = SolveOptions {
+            reorth: parse_reorth(m.str("reorth").unwrap())?,
+            precision: parse_precision(m.str("precision").unwrap())?,
+            cus: m.parse_at_least::<usize>("cus", 1).map_err(|e| e.to_string())?,
+            threads: m.parse::<usize>("threads").map_err(|e| e.to_string())?,
+            ..Default::default()
+        };
+        let budget_mb = m.parse::<usize>("budget-mb").map_err(|e| e.to_string())?;
+        let svc = EigenService::with_config(ServiceConfig {
+            replicas,
+            policy,
+            registry: RegistryConfig {
+                budget_bytes: budget_mb * (1 << 20),
+                warm_start: m.flag("warm-start"),
+                skip_symmetry_check: m.flag("skip-symmetry-check"),
+                ..Default::default()
+            },
+            paused: false,
+        });
+        println!(
+            "serving: n={} nnz={} replicas={replicas} policy={} jobs={jobs} ks={ks:?} precision={} warm-start={}",
+            matrix.nrows,
+            matrix.nnz(),
+            policy.name(),
+            opts.precision.name(),
+            m.flag("warm-start"),
+        );
+        let t0 = std::time::Instant::now();
+        let handle = svc.register(matrix).map_err(|e| e.to_string())?;
+        let tickets: Vec<_> = (0..jobs)
+            .map(|i| svc.submit_handle(handle, SolveOptions { k: ks[i % ks.len()], ..opts.clone() }))
+            .collect();
+        let mut ok = 0usize;
+        for (id, t) in tickets {
+            let r = t.wait();
+            match r.outcome {
+                Ok(sol) => {
+                    ok += 1;
+                    if !m.flag("quiet") {
+                        println!(
+                            "  job {id}: k={} lambda0={:+.6} queued={} solve={}{}",
+                            sol.k(),
+                            sol.eigenvalues[0],
+                            fmt_duration(r.queued_s),
+                            fmt_duration(r.solve_s),
+                            if sol.metrics.warm_started { " (warm)" } else { "" },
+                        );
+                    }
+                }
+                Err(e) => println!("  job {id} FAILED: {e}"),
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = svc.stats();
+        let rstats = svc.registry().stats();
+        println!(
+            "served {ok}/{jobs} jobs in {} -> {:.1} jobs/s ({} reconfigs under {})",
+            fmt_duration(wall),
+            jobs as f64 / wall,
+            stats.reconfigs,
+            policy.name(),
+        );
+        println!(
+            "registry: matrices={} engines={} prepares={} engine-hits={} dedup-hits={} evictions={} \
+             resident={:.1}MiB warm-hits={}",
+            rstats.matrices,
+            rstats.engines,
+            rstats.prepares,
+            rstats.engine_hits,
+            rstats.dedup_hits,
+            rstats.evictions,
+            rstats.resident_bytes as f64 / (1 << 20) as f64,
+            rstats.warm_hits,
+        );
+        println!(
+            "queue: total-wait={} max-wait={} total-solve={}",
+            fmt_duration(stats.total_queued_s),
+            fmt_duration(stats.max_queued_s),
+            fmt_duration(stats.total_solve_s),
+        );
+        svc.shutdown();
+        if ok == jobs {
+            Ok(0)
+        } else {
+            Err(format!("{} of {jobs} jobs failed", jobs - ok))
+        }
     };
     match run() {
         Ok(c) => c,

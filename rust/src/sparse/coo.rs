@@ -143,6 +143,33 @@ impl<V: Dataword> CooMatrix<V> {
         self.canonicalize();
     }
 
+    /// Content hash of the matrix: dimensions plus every `(row, col, val)`
+    /// triplet in stored order (FNV-1a over the raw words; values hash
+    /// their f32 bit pattern so `-0.0 != 0.0` but equal matrices in equal
+    /// storage formats always collide). The registry uses this for
+    /// register-time deduplication — hash first, full `==` compare on a
+    /// hash match — so entry *order* matters: canonicalize before hashing
+    /// to get order-independent identity.
+    pub fn content_hash(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut mix = |word: u64| {
+            for b in word.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        mix(self.nrows as u64);
+        mix(self.ncols as u64);
+        for i in 0..self.nnz() {
+            mix(self.rows[i] as u64);
+            mix(self.cols[i] as u64);
+            mix(self.vals[i].to_f32().to_bits() as u64);
+        }
+        h
+    }
+
     /// Dense `y = M x` reference (test oracle; O(nnz), f32 accumulation).
     pub fn spmv_ref(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.ncols);
@@ -257,6 +284,32 @@ mod tests {
         assert_eq!(m.nnz(), 0);
         assert_eq!(m.spmv_ref(&[1.0; 4]), vec![0.0; 4]);
         assert_eq!(m.density(), 0.0);
+    }
+
+    #[test]
+    fn content_hash_tracks_content_not_identity() {
+        let a = sample();
+        let b = sample();
+        assert_eq!(a.content_hash(), b.content_hash(), "equal matrices hash equal");
+        let mut c = sample();
+        c.vals[0] = 1.5;
+        assert_ne!(a.content_hash(), c.content_hash(), "value change must change the hash");
+        let mut d = sample();
+        d.rows[0] = 1;
+        assert_ne!(a.content_hash(), d.content_hash(), "structure change must change the hash");
+        // Entry order matters pre-canonicalization; canonical forms agree.
+        let mut e = CooMatrix::from_triplets(
+            3,
+            3,
+            vec![0, 0, 1, 1, 2, 2],
+            vec![1, 0, 2, 1, 2, 0],
+            vec![2.0, 1.0, 4.0, 3.0, 6.0, 5.0],
+        );
+        assert_ne!(a.content_hash(), e.content_hash());
+        let mut a2 = sample();
+        a2.canonicalize();
+        e.canonicalize();
+        assert_eq!(a2.content_hash(), e.content_hash(), "canonical identity is order-free");
     }
 
     #[test]

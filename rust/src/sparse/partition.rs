@@ -27,7 +27,7 @@ impl RowPartition {
 }
 
 /// Partitioning policy.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PartitionPolicy {
     /// Equal row counts per shard — the paper's scheme.
     EqualRows,

@@ -27,6 +27,17 @@
 //! **bitwise identical** to [`CsrMatrix::spmv`] of the same storage format
 //! for any shard count or policy — `tests/sharded_spmv.rs` and
 //! `tests/typed_storage.rs` property-check this.
+//!
+//! Sharing: the engine is `Send + Sync` and holds its matrix behind an
+//! `Arc`, so one `ShardedSpmv` (inside an
+//! `Arc<crate::coordinator::PreparedMatrix>`) can serve **concurrent**
+//! solves from multiple service workers. Concurrent `apply`/`apply_fused`
+//! calls serialize their fork/joins on the engine's pool (one scope at a
+//! time — see [`ThreadPool::scope_chunks`]), and because shard merges are
+//! position-ordered, not completion-ordered, results stay bitwise
+//! identical to running the same calls serially — the property
+//! matrix-resident serving rests on (`tests/service_registry.rs` stresses
+//! the full stack).
 
 use crate::fixed::{packet_capacity, Dataword};
 use crate::lanczos::{FusedIteration, Operator};
@@ -281,6 +292,33 @@ mod tests {
             s.apply(&x, &mut y);
             assert_eq!(serial, y, "policy={policy:?}");
         }
+    }
+
+    #[test]
+    fn concurrent_applies_on_one_shared_engine_are_bitwise_serial() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ShardedSpmv>();
+        assert_send_sync::<ShardedSpmv<Q1_15>>();
+        let m = Arc::new(graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 7).to_csr());
+        let engine = Arc::new(ShardedSpmv::with_own_pool(Arc::clone(&m), 5, PartitionPolicy::BalancedNnz));
+        let serial = m.spmv(&vec![0.25f32; m.nrows]);
+        let threads = 4;
+        let rounds = 8;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let engine = Arc::clone(&engine);
+                let serial = &serial;
+                s.spawn(move || {
+                    let x = vec![0.25f32; engine.n()];
+                    let mut y = vec![0.0f32; engine.n()];
+                    for _ in 0..rounds {
+                        engine.apply(&x, &mut y);
+                        assert_eq!(&y, serial, "concurrent apply must equal the serial kernel");
+                    }
+                });
+            }
+        });
+        assert_eq!(engine.applies(), threads * rounds);
     }
 
     #[test]

@@ -175,6 +175,22 @@ impl Matches {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Comma-separated typed list (e.g. `--ks 4,8,16`). Empty items are
+    /// rejected; the error names the offending flag.
+    pub fn parse_list<T: std::str::FromStr>(&self, name: &str) -> Result<Vec<T>, CliError>
+    where
+        T::Err: fmt::Display,
+    {
+        let raw = self.str(name)?;
+        raw.split(',')
+            .map(|item| {
+                item.trim()
+                    .parse::<T>()
+                    .map_err(|e| CliError(format!("--{name}={raw}: bad item '{item}': {e}")))
+            })
+            .collect()
+    }
+
     /// Typed value with an inclusive lower bound — for counts that must be
     /// positive (eigenpairs, compute units, worker threads).
     pub fn parse_at_least<T>(&self, name: &str, min: T) -> Result<T, CliError>
@@ -253,6 +269,18 @@ mod tests {
         assert!(e.0.contains("must be >= 1"), "{}", e.0);
         let m = cmd().parse(&args(&["g.mtx", "--k", "3"])).unwrap();
         assert_eq!(m.parse_at_least::<usize>("k", 1).unwrap(), 3);
+    }
+
+    #[test]
+    fn parse_list_splits_and_reports_bad_items() {
+        let cmd = Command::new("serve", "serve").opt("ks", "k list", Some("4,8"));
+        let m = cmd.parse(&args(&[])).unwrap();
+        assert_eq!(m.parse_list::<usize>("ks").unwrap(), vec![4, 8]);
+        let m = cmd.parse(&args(&["--ks", "2, 16 ,32"])).unwrap();
+        assert_eq!(m.parse_list::<usize>("ks").unwrap(), vec![2, 16, 32]);
+        let m = cmd.parse(&args(&["--ks", "2,pony"])).unwrap();
+        let e = m.parse_list::<usize>("ks").unwrap_err();
+        assert!(e.0.contains("'pony'"), "{}", e.0);
     }
 
     #[test]

@@ -1,0 +1,162 @@
+//! Matrix-resident serving: concurrent-solve correctness and registry
+//! accounting, end to end.
+//!
+//! * N threads solving different K against one shared
+//!   `Arc<PreparedMatrix>` must produce **bitwise identical** solutions to
+//!   the same solves run serially — the property that lets worker replicas
+//!   share one engine zero-copy.
+//! * M jobs across P workers against one registered handle must trigger
+//!   exactly one prepare (registry prepare-count telemetry == 1).
+//! * `ServiceStats` counters must balance under a mixed valid/invalid
+//!   workload: submitted == completed, failed == the invalid count, and
+//!   the queue drains to zero.
+
+use std::sync::Arc;
+use topk_eigen::coordinator::service::{EigenService, QueuePolicy, ServiceConfig};
+use topk_eigen::coordinator::{MatrixRegistry, RegistryConfig, SolveOptions, Solver};
+use topk_eigen::fixed::Precision;
+use topk_eigen::graphs;
+use topk_eigen::lanczos::LanczosWorkspace;
+
+#[test]
+fn concurrent_solves_on_one_shared_engine_match_serial_bitwise() {
+    let m = graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 77);
+    for precision in [Precision::Float32, Precision::FixedQ1_15] {
+        let opts = SolveOptions { precision, ..Default::default() };
+        let mut solver = Solver::new(opts.clone());
+        let prep = Arc::new(solver.prepare(&m).expect("prepare"));
+        let ks: Vec<usize> = vec![2, 3, 5, 8, 13, 8, 5, 3];
+
+        // Serial reference: same engine, one thread, one workspace.
+        let serial: Vec<_> = {
+            let mut ws = LanczosWorkspace::new();
+            ks.iter().map(|&k| Solver::solve_detached(&prep, k, &opts, &mut ws, None).expect("serial solve")).collect()
+        };
+
+        // Concurrent: one thread per K, each with its own workspace, all
+        // hammering the same Arc<PreparedMatrix> (and so the same CU pool).
+        let concurrent: Vec<_> = std::thread::scope(|s| {
+            let handles: Vec<_> = ks
+                .iter()
+                .map(|&k| {
+                    let prep = Arc::clone(&prep);
+                    let opts = opts.clone();
+                    s.spawn(move || {
+                        let mut ws = LanczosWorkspace::new();
+                        Solver::solve_detached(&prep, k, &opts, &mut ws, None).expect("concurrent solve")
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("no panic")).collect()
+        });
+
+        for ((k, a), b) in ks.iter().zip(&serial).zip(&concurrent) {
+            assert_eq!(a.eigenvalues, b.eigenvalues, "{precision:?} k={k}: eigenvalues must be bitwise equal");
+            assert_eq!(a.eigenvectors, b.eigenvectors, "{precision:?} k={k}: eigenvectors must be bitwise equal");
+            assert_eq!(a.metrics.spmv_count, b.metrics.spmv_count, "k={k}");
+        }
+    }
+}
+
+#[test]
+fn m_jobs_across_p_workers_prepare_exactly_once() {
+    let svc = EigenService::with_config(ServiceConfig {
+        replicas: 4,
+        policy: QueuePolicy::KBatched,
+        ..Default::default()
+    });
+    let m = graphs::rmat(1 << 8, 8 << 8, 0.57, 0.19, 0.19, 91);
+    let handle = svc.register(m).expect("register");
+    let ks: Vec<usize> = (0..24).map(|i| 2 + (i % 6)).collect();
+    let tickets = svc.submit_handle_batch(handle, SolveOptions::default(), &ks);
+    assert_eq!(tickets.len(), 24);
+    for (id, t) in tickets {
+        let r = t.wait();
+        assert_eq!(r.id, id);
+        assert!(r.outcome.is_ok(), "job {id}: {:?}", r.outcome.err());
+    }
+    let rstats = svc.registry().stats();
+    assert_eq!(rstats.prepares, 1, "one registered handle, one engine key -> exactly one prepare: {rstats:?}");
+    assert_eq!(rstats.engine_hits, 23, "every other job reuses the shared engine");
+    assert_eq!(rstats.matrices, 1);
+    assert!(rstats.resident_bytes > 0);
+    let stats = svc.stats();
+    assert_eq!(stats.submitted, 24);
+    assert_eq!(stats.completed, 24);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.queue_depth, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn stats_balance_under_mixed_valid_and_invalid_load() {
+    let svc = EigenService::with_config(ServiceConfig { replicas: 3, ..Default::default() });
+    let good = graphs::mesh2d(10, 10, 0.9, 0.02, 12); // n = 100
+    let handle = svc.register(good.clone()).expect("register");
+    let mut tickets = Vec::new();
+    let mut expect_failed = 0u64;
+
+    // Valid owned, handle, and batch jobs.
+    for k in [2usize, 4, 6] {
+        tickets.push(svc.submit(good.clone(), SolveOptions { k, ..Default::default() }).1);
+        tickets.push(svc.submit_handle(handle, SolveOptions { k, ..Default::default() }).1);
+    }
+    for (_, t) in svc.submit_batch(good.clone(), SolveOptions::default(), &[3, 5]) {
+        tickets.push(t);
+    }
+    // Invalid: bad k (0 and > n), non-square, unknown handle, and a batch
+    // with one bad member.
+    tickets.push(svc.submit(good.clone(), SolveOptions { k: 0, ..Default::default() }).1);
+    expect_failed += 1;
+    tickets.push(svc.submit(good.clone(), SolveOptions { k: 101, ..Default::default() }).1);
+    expect_failed += 1;
+    tickets.push(svc.submit(topk_eigen::sparse::CooMatrix::new(3, 4), SolveOptions::default()).1);
+    expect_failed += 1;
+    let foreign = MatrixRegistry::new(RegistryConfig::default()).register(good.clone()).unwrap();
+    tickets.push(svc.submit_handle(foreign, SolveOptions { k: 2, ..Default::default() }).1);
+    expect_failed += 1;
+    for (_, t) in svc.submit_batch(good, SolveOptions::default(), &[4, 500]) {
+        tickets.push(t);
+    }
+    expect_failed += 1; // the k = 500 member
+
+    let total = tickets.len() as u64;
+    let mut failed_seen = 0u64;
+    for t in tickets {
+        if t.wait().outcome.is_err() {
+            failed_seen += 1;
+        }
+    }
+    assert_eq!(failed_seen, expect_failed);
+    let stats = svc.stats();
+    assert_eq!(stats.submitted, total, "every ticket was counted as submitted");
+    assert_eq!(stats.completed, total, "submitted == completed + (0 still queued)");
+    assert_eq!(stats.failed, expect_failed);
+    assert_eq!(stats.queue_depth, 0, "queue drains to zero");
+    assert!(stats.max_queued_s <= stats.total_queued_s + 1e-9);
+    svc.shutdown();
+}
+
+#[test]
+fn evicted_engines_rebuild_transparently_under_budget_pressure() {
+    // A registry budget far below two engines forces LRU eviction between
+    // handle jobs; the service must keep answering correctly regardless.
+    let svc = EigenService::with_config(ServiceConfig {
+        replicas: 2,
+        registry: RegistryConfig { budget_bytes: 1, ..Default::default() },
+        ..Default::default()
+    });
+    let h1 = svc.register(graphs::mesh2d(9, 9, 0.9, 0.02, 1)).unwrap();
+    let h2 = svc.register(graphs::mesh2d(9, 9, 0.9, 0.02, 2)).unwrap();
+    for round in 0..3 {
+        for &h in [h1, h2].iter() {
+            let (_, t) = svc.submit_handle(h, SolveOptions { k: 3, ..Default::default() });
+            let r = t.wait();
+            assert!(r.outcome.is_ok(), "round {round}: {:?}", r.outcome.err());
+        }
+    }
+    let rstats = svc.registry().stats();
+    assert!(rstats.evictions >= 1, "budget pressure must evict: {rstats:?}");
+    assert!(rstats.prepares >= 2, "evicted engines rebuild on demand");
+    svc.shutdown();
+}
