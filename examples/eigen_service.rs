@@ -122,6 +122,69 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(resident_ok == resident_ks.len(), "all handle jobs must succeed");
     anyhow::ensure!(rstats.prepares == 1, "one handle, one engine key -> one prepare");
 
+    // Update phase: the registered graph evolves in place. Interleave
+    // small symmetric deltas with handle solves on every replica — the
+    // generation fence guarantees no solve ever sees a torn matrix, and
+    // stale engines refresh incrementally (dirty shards only).
+    let mut mirror = graphs::rmat(1 << 12, 8 << 12, 0.57, 0.19, 0.19, 99);
+    mirror.canonicalize();
+    let t3 = Instant::now();
+    let update_rounds = 4usize;
+    let mut update_ok = 0usize;
+    let mut evolving_ok = 0usize;
+    for round in 0..update_rounds {
+        let mut delta = topk_eigen::sparse::CooDelta::new(mirror.nrows, mirror.ncols);
+        let mut picked = 0usize;
+        for i in 0..mirror.nnz() {
+            let (r, c) = (mirror.rows[i] as usize, mirror.cols[i] as usize);
+            if r <= c {
+                picked += 1;
+                if (picked + round) % 200 == 0 {
+                    delta.upsert_sym(r, c, mirror.vals[i] * 1.05 + 1e-4);
+                }
+            }
+        }
+        let mut local = delta.clone();
+        local.canonicalize();
+        mirror.apply_delta(&local);
+        let (_, ut) = svc.submit_update(handle, delta);
+        let solves: Vec<_> = [4usize, 8, 12]
+            .iter()
+            .map(|&k| svc.submit_handle(handle, SolveOptions { k, ..Default::default() }).1)
+            .collect();
+        let ur = ut.wait();
+        match ur.outcome {
+            Ok(rep) => {
+                update_ok += 1;
+                println!(
+                    "update round {round}: gen={} dirty-rows={} rel-delta={:.2e} warm-{}",
+                    rep.generation,
+                    rep.dirty_rows,
+                    rep.rel_delta,
+                    if rep.warm_kept { "kept" } else { "dropped" }
+                );
+            }
+            Err(e) => println!("update round {round} FAILED: {e}"),
+        }
+        for t in solves {
+            if t.wait().outcome.is_ok() {
+                evolving_ok += 1;
+            }
+        }
+    }
+    let rstats = svc.registry().stats();
+    println!(
+        "evolving phase: {update_rounds} updates + {evolving_ok} solves in {} \
+         (generations={}, incremental-rebuilds={}, full-rebuilds={}, shards-reused={})",
+        fmt_duration(t3.elapsed().as_secs_f64()),
+        svc.registry().generation(handle).unwrap_or(0),
+        rstats.incremental_rebuilds,
+        rstats.full_rebuilds,
+        rstats.shards_reused,
+    );
+    anyhow::ensure!(update_ok == update_rounds, "all updates must succeed");
+    anyhow::ensure!(evolving_ok == 3 * update_rounds, "all evolving-phase solves must succeed");
+
     let stats = svc.stats();
     println!(
         "service stats: submitted={} completed={} failed={} batches={} reconfigs={} total_solve={} max_queue_wait={}",

@@ -1,0 +1,145 @@
+//! Delta-update bench: incremental vs full re-prep across dirty fractions,
+//! and warm-kept vs cold re-solve SpMV counts after a small delta.
+//!
+//! Writes JSONL rows (suite `delta_update`) to `$TOPK_BENCH_JSON`
+//! (CI: `BENCH_update.json`). Knobs: `TOPK_UPDATE_N` (matrix rows,
+//! default 16384 = the acceptance-bar n=2^14), `TOPK_BENCH_ITERS`.
+//!
+//! Rows:
+//! * `reprep_dirty_<f>` — wall time of `update` + incremental `prepared`
+//!   refresh vs a from-scratch `register` + `prepared` of the mutated
+//!   matrix, for dirty fractions {0.1%, 1%, 10%}, plus the per-shard
+//!   rebuild telemetry. Also asserts the refreshed engine solves bitwise
+//!   identically to the from-scratch one (the exactness acceptance).
+//! * `warm_vs_cold_k<k>` — SpMV counts of a warm-kept adaptive re-solve
+//!   after a 0.1%-dirty delta vs the same solve run cold.
+
+use std::time::Instant;
+use topk_eigen::bench::BenchSuite;
+use topk_eigen::coordinator::{MatrixRegistry, RegistryConfig, SolveOptions, Solver};
+use topk_eigen::fixed::Precision;
+use topk_eigen::graphs;
+use topk_eigen::lanczos::LanczosWorkspace;
+use topk_eigen::sparse::{CooDelta, CooMatrix};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Symmetric value-perturbation delta touching ~`frac` of the rows,
+/// confined to a leading row band so dirty rows cluster in few CU shards
+/// (the localized-churn pattern evolving graphs exhibit).
+fn banded_delta(canon: &CooMatrix, frac: f64) -> CooDelta {
+    let band = ((canon.nrows as f64 * frac).ceil() as usize).clamp(1, canon.nrows);
+    let mut d = CooDelta::new(canon.nrows, canon.ncols);
+    for i in 0..canon.nnz() {
+        let (r, c) = (canon.rows[i] as usize, canon.cols[i] as usize);
+        // Both endpoints in the band: mirrored edits stay local too.
+        if r <= c && c < band {
+            d.upsert_sym(r, c, canon.vals[i] * 1.05 + 1e-5);
+        }
+    }
+    d
+}
+
+fn main() {
+    let n = env_usize("TOPK_UPDATE_N", 1 << 14);
+    let iters = env_usize("TOPK_BENCH_ITERS", 3).max(1);
+    let base = graphs::rmat(n, 8 * n, 0.57, 0.19, 0.19, 20240831);
+    let mut canon = base.clone();
+    canon.canonicalize();
+    let opts = SolveOptions { k: 8, ..Default::default() };
+
+    let mut suite = BenchSuite::new(
+        "delta_update",
+        &format!("incremental vs full re-prep + warm vs cold re-solve @ n={n} nnz={}", canon.nnz()),
+    );
+
+    // ---- Incremental vs full re-prep across dirty fractions -------------
+    for &frac in &[0.001f64, 0.01, 0.1] {
+        let delta = banded_delta(&canon, frac);
+        let mut mutated = canon.clone();
+        {
+            let mut d = delta.clone();
+            d.canonicalize();
+            mutated.apply_delta(&d);
+        }
+
+        let (mut incr_s, mut full_s) = (0.0f64, 0.0f64);
+        let (mut shards_rebuilt, mut shards_reused) = (0u64, 0u64);
+        let mut exact = true;
+        for _ in 0..iters {
+            // Incremental: registered once, delta spliced in, stale engine
+            // refreshed on the next prepared().
+            let reg = MatrixRegistry::default();
+            let h = reg.register(base.clone()).expect("register");
+            let _ = reg.prepared(h, &opts).expect("initial prepare");
+            let t0 = Instant::now();
+            reg.update(h, delta.clone()).expect("update");
+            let inc = reg.prepared(h, &opts).expect("incremental refresh");
+            incr_s += t0.elapsed().as_secs_f64();
+            let stats = reg.stats();
+            shards_rebuilt = stats.shards_rebuilt;
+            shards_reused = stats.shards_reused;
+
+            // Full: from-scratch register + prepare of the mutated matrix
+            // (raw entry order: pays canonicalization like a cold client).
+            let reg2 = MatrixRegistry::default();
+            let t1 = Instant::now();
+            let h2 = reg2.register(mutated.clone()).expect("register mutated");
+            let fresh = reg2.prepared(h2, &opts).expect("fresh prepare");
+            full_s += t1.elapsed().as_secs_f64();
+
+            // Exactness: identical engines up to solve output, bitwise.
+            let mut ws = LanczosWorkspace::new();
+            let a = Solver::solve_detached(&inc, 8, &opts, &mut ws, None).expect("solve inc");
+            let b = Solver::solve_detached(&fresh, 8, &opts, &mut ws, None).expect("solve fresh");
+            exact &= a.eigenvalues == b.eigenvalues && a.eigenvectors == b.eigenvectors;
+        }
+        assert!(exact, "incremental refresh must equal from-scratch prepare bitwise (frac={frac})");
+        let (incr_s, full_s) = (incr_s / iters as f64, full_s / iters as f64);
+        suite.report(
+            &format!("reprep_dirty_{frac}"),
+            &[
+                ("incremental_s", incr_s),
+                ("full_s", full_s),
+                ("speedup_incremental", full_s / incr_s.max(1e-12)),
+                ("shards_rebuilt", shards_rebuilt as f64),
+                ("shards_reused", shards_reused as f64),
+                ("exact", 1.0),
+            ],
+        );
+    }
+
+    // ---- Warm-kept vs cold re-solve after a small delta ------------------
+    // Adaptive stopping (the SpMV-count currency): a warm seed carried
+    // across a 0.1%-dirty generation bump converges in fewer iterations.
+    for &k in &[1usize, 4, 8] {
+        let aopts = SolveOptions { k, adaptive_tol: Some(1e-8), ..Default::default() };
+        let reg = MatrixRegistry::new(RegistryConfig { warm_start: true, ..Default::default() });
+        let h = reg.register(base.clone()).expect("register");
+        let prep = reg.prepared(h, &aopts).expect("prepare");
+        let mut ws = LanczosWorkspace::new();
+        let first = Solver::solve_detached(&prep, k, &aopts, &mut ws, None).expect("first solve");
+        reg.store_warm(h, k, Precision::Float32, &first.eigenvectors[0]);
+
+        let rep = reg.update(h, banded_delta(&canon, 0.001)).expect("update");
+        assert!(rep.warm_kept, "0.1% delta must keep the warm seed (rel {})", rep.rel_delta);
+        let prep2 = reg.prepared(h, &aopts).expect("refresh");
+        let v1 = reg.warm_v1(h, k, Precision::Float32);
+        assert!(v1.is_some(), "warm seed retained across generations");
+        let warm = Solver::solve_detached(&prep2, k, &aopts, &mut ws, v1).expect("warm solve");
+        let cold = Solver::solve_detached(&prep2, k, &aopts, &mut ws, None).expect("cold solve");
+        suite.report(
+            &format!("warm_vs_cold_k{k}"),
+            &[
+                ("warm_spmv", warm.metrics.spmv_count as f64),
+                ("cold_spmv", cold.metrics.spmv_count as f64),
+                ("spmv_saved", (cold.metrics.spmv_count as f64) - (warm.metrics.spmv_count as f64)),
+                ("warm_started", if warm.metrics.warm_started { 1.0 } else { 0.0 }),
+            ],
+        );
+    }
+
+    suite.finish();
+}

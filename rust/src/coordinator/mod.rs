@@ -33,7 +33,7 @@ pub mod scheduler;
 pub mod service;
 pub mod verify;
 
-pub use registry::{MatrixHandle, MatrixRegistry, RegistryConfig, RegistryStats};
+pub use registry::{MatrixHandle, MatrixRegistry, RegistryConfig, RegistryStats, UpdateReport};
 
 use crate::fixed::{packet_capacity, Precision};
 use crate::jacobi::{jacobi_eigen, JacobiMode, SystolicStats};
@@ -97,6 +97,14 @@ pub struct SolveOptions {
     /// (`--no-fuse` at the CLI) selects the serial-pass reference
     /// implementation — same spectra, more full-length vector passes.
     pub fuse: bool,
+    /// Adaptive Lanczos stopping: `Some(tol)` lets the iteration run past
+    /// K (up to `2K + 8` iterations) and stop as soon as the top-K Ritz
+    /// values stabilize to relative tolerance `tol`. This is what turns a
+    /// warm start into an SpMV saving — a seed close to the invariant
+    /// subspace converges in fewer iterations. `None` (the default) is
+    /// the paper's fixed K-iteration schedule, bit-identical to previous
+    /// behaviour.
+    pub adaptive_tol: Option<f64>,
 }
 
 impl Default for SolveOptions {
@@ -113,6 +121,7 @@ impl Default for SolveOptions {
             skip_normalize: false,
             skip_symmetry_check: false,
             fuse: true,
+            adaptive_tol: None,
         }
     }
 }
@@ -177,6 +186,11 @@ pub struct SolveMetrics {
     /// registry's cached dominant Ritz vector for a repeated `(handle, k)`
     /// query) instead of the paper's uniform `v1`.
     pub warm_started: bool,
+    /// Generation of the prepared matrix this solve ran against: bumped by
+    /// every [`MatrixRegistry::update`] on the handle, 0 for matrices
+    /// prepared outside the registry. Lets clients correlate answers with
+    /// the delta stream they submitted.
+    pub generation: u64,
 }
 
 impl SolveMetrics {
@@ -232,12 +246,20 @@ pub struct PreparedMatrix {
     precision: Precision,
     engine_used: &'static str,
     prepare_s: f64,
+    /// Source generation this engine reflects (see
+    /// [`MatrixRegistry::update`]); 0 outside the registry.
+    generation: u64,
 }
 
 impl PreparedMatrix {
     /// Matrix dimension.
     pub fn n(&self) -> usize {
         self.n
+    }
+    /// Source generation this engine was built from (0 outside the
+    /// registry's update lifecycle).
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
     /// Stored non-zeros after canonicalization.
     pub fn nnz(&self) -> usize {
@@ -367,7 +389,7 @@ impl Solver {
             },
             || self.native_operator(&m),
         );
-        Ok(PreparedMatrix { op, fro, n, nnz, precision, engine_used, prepare_s: sw.lap_s() })
+        Ok(PreparedMatrix { op, fro, n, nnz, precision, engine_used, prepare_s: sw.lap_s(), generation: 0 })
     }
 
     /// Solve the Top-K eigenproblem for a symmetric sparse matrix.
@@ -428,10 +450,22 @@ impl Solver {
             value_bytes: prep.value_bytes(),
             packet_capacity: prep.packet_capacity(),
             warm_started: v1.is_some(),
+            generation: prep.generation,
             ..Default::default()
         };
 
-        let lopts = LanczosOptions { k, reorth: opts.reorth, precision: prep.precision, fused: opts.fuse, v1 };
+        // Adaptive stopping budget: up to 2K + 8 iterations (a warm seed
+        // typically stops well short of it; a cold one may use it all).
+        let max_iters = if opts.adaptive_tol.is_some() { (2 * k + 8).min(prep.n) } else { 0 };
+        let lopts = LanczosOptions {
+            k,
+            reorth: opts.reorth,
+            precision: prep.precision,
+            fused: opts.fuse,
+            v1,
+            max_iters,
+            ritz_tol: opts.adaptive_tol.unwrap_or(1e-6),
+        };
         let (eigenvalues, eigenvectors) = crate::with_precision!(prep.precision, V => {
             // ---- Phase 1: Lanczos (typed basis storage, reused scratch) --
             let lres: LanczosResult<V> = lanczos_typed_ws(prep.op.as_ref(), &lopts, ws);
@@ -450,7 +484,10 @@ impl Solver {
             metrics.systolic = eig.stats;
 
             // ---- Lift + rescale ------------------------------------------
-            let k_eff = lres.k();
+            // Adaptive runs may build a basis larger than K; the Top-K
+            // answer is the K largest-magnitude pairs of the (sorted)
+            // Jacobi output. Breakdown below K still truncates.
+            let k_eff = lres.k().min(k);
             let mut eigenvalues = Vec::with_capacity(k_eff);
             let mut eigenvectors = Vec::with_capacity(k_eff);
             for j in 0..k_eff {
@@ -527,16 +564,61 @@ pub(crate) fn native_operator_from_canonical(
     partition: PartitionPolicy,
     pool: &Arc<ThreadPool>,
 ) -> Arc<dyn Operator> {
-    let csr = CsrMatrix::from_canonical_coo(m);
-    // The f32 path streams the CSR as built; only fixed-point formats pay
-    // the O(nnz) re-storage pass.
-    if precision == Precision::Float32 {
-        return Arc::new(ShardedSpmv::new(Arc::new(csr), cus, partition, Arc::clone(pool)));
-    }
+    native_operator_scaled(m, None, precision, cus, partition, pool)
+}
+
+/// As [`native_operator_from_canonical`], but with the Frobenius
+/// normalization **deferred to build time**: `scale = Some(1/||M||_F)`
+/// multiplies every value during the CSR conversion (f64 arithmetic,
+/// clamped into the open interval — see [`crate::sparse::scale_value`]).
+/// This is the registry's path: it keeps the canonical source in original
+/// scale so delta updates compose exactly, and normalizes each engine as
+/// it is built. The values produced are bitwise identical to normalizing
+/// the COO in place first ([`Solver`]'s path), so the two prepare flavors
+/// cannot drift.
+pub(crate) fn native_operator_scaled(
+    m: &CooMatrix,
+    scale: Option<f64>,
+    precision: Precision,
+    cus: usize,
+    partition: PartitionPolicy,
+    pool: &Arc<ThreadPool>,
+) -> Arc<dyn Operator> {
     crate::with_precision!(precision, V => {
-        let typed: CsrMatrix<V> = csr.to_precision::<V>();
+        let typed: CsrMatrix<V> = typed_csr_scaled::<V>(m, scale);
         Arc::new(ShardedSpmv::new(Arc::new(typed), cus, partition, Arc::clone(pool))) as Arc<dyn Operator>
     })
+}
+
+/// One-pass typed CSR construction from a canonical COO, applying the
+/// optional normalization scale at the value stream: `W::from_f32` of the
+/// (clamped f64-scaled) f32 value — the exact composition the in-place
+/// normalize + `to_precision` pipeline performs, fused into one pass.
+pub(crate) fn typed_csr_scaled<V: crate::fixed::Dataword>(m: &CooMatrix, scale: Option<f64>) -> CsrMatrix<V> {
+    let mut indptr = vec![0usize; m.nrows + 1];
+    for &r in &m.rows {
+        indptr[r as usize + 1] += 1;
+    }
+    for i in 0..m.nrows {
+        indptr[i + 1] += indptr[i];
+    }
+    let vals: Vec<V> = match scale {
+        Some(inv) => m.vals.iter().map(|&v| V::from_f32(crate::sparse::scale_value(v, inv))).collect(),
+        None => m.vals.iter().map(|&v| V::from_f32(v)).collect(),
+    };
+    CsrMatrix { nrows: m.nrows, ncols: m.ncols, indptr, indices: m.cols.clone(), vals }
+}
+
+/// A normalized f32 copy of a canonical original-scale COO — the PJRT
+/// engine path consumes whole normalized matrices rather than a deferred
+/// scale. (Callers with no scale to apply pass the original directly —
+/// no copy.)
+pub(crate) fn scaled_coo_copy(m: &CooMatrix, inv: f64) -> CooMatrix {
+    let mut out = m.clone();
+    for v in &mut out.vals {
+        *v = crate::sparse::scale_value(*v, inv);
+    }
+    out
 }
 
 #[cfg(test)]

@@ -33,11 +33,39 @@
 //! against the shared engine concurrently, each with its own
 //! [`crate::lanczos::LanczosWorkspace`] — zero per-job COO clones, zero
 //! redundant prepare work.
+//!
+//! ## The update lifecycle (evolving graphs)
+//!
+//! Registered matrices are **updatable**: [`MatrixRegistry::update`] takes
+//! a [`CooDelta`] (edge insertions, deletions, value changes in the
+//! original value scale), splices it into the canonical source in place
+//! (`O(nnz + d)`, no re-sort), recomputes the Frobenius norm, and bumps
+//! the handle's **generation**. Cached engines are *not* evicted: they are
+//! invalidated by generation and lazily refreshed on the next
+//! [`MatrixRegistry::prepared`] — reusing the engine's CU pool and
+//! classifying every CU shard as dirty or carried-over when the dirty-row
+//! fraction is small
+//! ([`ShardedSpmv::rebuild_shards`]), falling back to a full rebuild when
+//! the delta touches too much (`RegistryConfig::dirty_full_fraction`) or
+//! the engine is opaque (PJRT). The source is kept in **original scale**
+//! and normalization is applied at engine-build time (bitwise identical
+//! to the in-place path — see
+//! [`crate::coordinator::native_operator_scaled`]), so an incrementally
+//! refreshed engine is exactly equal to a from-scratch
+//! `register` + `prepared` of the mutated matrix.
+//!
+//! The warm-start cache is **retained across generations** under a
+//! relative-perturbation guard: `||delta||_F / ||M||_F <=`
+//! [`RegistryConfig::warm_keep_tol`] keeps the previous dominant Ritz
+//! vectors as seeds (a small delta barely moves the invariant subspace);
+//! larger deltas drop the handle's warm entries and re-solves run cold.
 
-use crate::coordinator::{native_operator_from_canonical, select_engine, Engine, PreparedMatrix, SolveOptions};
+use crate::coordinator::{
+    native_operator_scaled, scaled_coo_copy, select_engine, typed_csr_scaled, Engine, PreparedMatrix, SolveOptions,
+};
 use crate::fixed::Precision;
 use crate::runtime::{PjrtSpmv, Runtime};
-use crate::sparse::{CooMatrix, PartitionPolicy};
+use crate::sparse::{frobenius_norm, CooDelta, CooMatrix, CsrMatrix, PartitionPolicy, ShardedSpmv};
 use crate::util::pool::ThreadPool;
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
@@ -86,11 +114,28 @@ pub struct RegistryConfig {
     /// Register matrices as-is without Frobenius normalization (inputs
     /// already normalized; mirrors [`SolveOptions::skip_normalize`]).
     pub skip_normalize: bool,
+    /// Warm-start retention guard across updates: a delta with relative
+    /// perturbation `||delta||_F / ||M||_F` at or below this keeps the
+    /// handle's cached dominant Ritz vectors as seeds for the next
+    /// generation's solves; a larger delta drops them (the invariant
+    /// subspace may have moved too far for the seed to help).
+    pub warm_keep_tol: f64,
+    /// Incremental re-prep cutoff: when a pending update's dirty-row
+    /// fraction exceeds this, stale engines are rebuilt from scratch
+    /// instead of incrementally (most shards would be dirty anyway).
+    pub dirty_full_fraction: f64,
 }
 
 impl Default for RegistryConfig {
     fn default() -> Self {
-        Self { budget_bytes: 0, warm_start: false, skip_symmetry_check: false, skip_normalize: false }
+        Self {
+            budget_bytes: 0,
+            warm_start: false,
+            skip_symmetry_check: false,
+            skip_normalize: false,
+            warm_keep_tol: 0.05,
+            dirty_full_fraction: 0.25,
+        }
     }
 }
 
@@ -117,14 +162,104 @@ pub struct RegistryStats {
     pub warm_entries: usize,
     /// Warm-start seeds served.
     pub warm_hits: u64,
+    /// Delta updates applied across all handles.
+    pub updates: u64,
+    /// Stale engines refreshed incrementally (dirty shards only).
+    pub incremental_rebuilds: u64,
+    /// Stale engines rebuilt from scratch (dirty fraction too high,
+    /// missing history, or an opaque engine).
+    pub full_rebuilds: u64,
+    /// CU shards re-derived across all incremental refreshes.
+    pub shards_rebuilt: u64,
+    /// CU shards carried over untouched across all incremental refreshes.
+    pub shards_reused: u64,
+    /// Updates whose perturbation was small enough to keep the handle's
+    /// warm-start seeds across the generation bump.
+    pub warm_kept: u64,
+    /// Updates that dropped the handle's warm-start seeds.
+    pub warm_dropped: u64,
 }
 
+/// What one [`MatrixRegistry::update`] did: the new generation, the size
+/// of the dirty set, op counts, and the warm-retention decision.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UpdateReport {
+    /// The handle's generation after this update.
+    pub generation: u64,
+    /// Stored non-zeros after the splice.
+    pub nnz: usize,
+    /// Rows the delta touched (the dirty set driving incremental re-prep).
+    pub dirty_rows: usize,
+    /// Entries inserted.
+    pub inserted: usize,
+    /// Entries whose value changed.
+    pub changed: usize,
+    /// Entries deleted.
+    pub deleted: usize,
+    /// `||delta||_F / ||M_old||_F` — the relative perturbation compared
+    /// against [`RegistryConfig::warm_keep_tol`].
+    pub rel_delta: f64,
+    /// Whether the handle's warm-start seeds survived this update.
+    pub warm_kept: bool,
+}
+
+/// One applied delta: the generation it produced and the rows it touched
+/// (the per-engine refresh unions records newer than the engine's build).
+struct UpdateRecord {
+    generation: u64,
+    dirty_rows: Vec<u32>,
+}
+
+/// Update history kept per source; engines lagging further behind than
+/// this take the full-rebuild path.
+const MAX_UPDATE_HISTORY: usize = 32;
+
 struct Source {
+    /// Canonical COO in **original** scale — normalization is applied at
+    /// engine-build time so delta values (also original-scale) compose
+    /// exactly and the Frobenius norm can be recomputed after each update.
     coo: Arc<CooMatrix>,
     fro: f64,
-    /// Content hash computed at registration — kept so `unregister` can
-    /// maintain `by_hash` without an O(nnz) re-hash under the lock.
+    /// Content hash computed at registration (and refreshed per update) —
+    /// kept so `unregister` can maintain `by_hash` without an O(nnz)
+    /// re-hash under the lock.
     hash: u64,
+    /// Bumped by every applied update; engines and solves carry it.
+    generation: u64,
+    /// Recent updates, oldest first, capped at [`MAX_UPDATE_HISTORY`].
+    updates: VecDeque<UpdateRecord>,
+}
+
+impl Source {
+    /// Normalization scale for engine builds (`None` = skip_normalize;
+    /// `fro` is pinned to 1.0 for zero matrices, making the scale a
+    /// bitwise no-op there, matching the in-place normalizer).
+    fn scale(&self, skip_normalize: bool) -> Option<f64> {
+        if skip_normalize {
+            None
+        } else {
+            Some(1.0 / self.fro)
+        }
+    }
+
+    /// Union of dirty rows from all updates after `from_gen`, or `None`
+    /// when the history no longer reaches back that far.
+    fn dirty_rows_since(&self, from_gen: u64) -> Option<Vec<u32>> {
+        if from_gen == self.generation {
+            return Some(Vec::new());
+        }
+        let need_oldest = from_gen + 1;
+        if self.updates.front().map(|u| u.generation) > Some(need_oldest) || self.updates.is_empty() {
+            return None;
+        }
+        let mut union: Vec<u32> = Vec::new();
+        for u in self.updates.iter().filter(|u| u.generation > from_gen) {
+            union.extend_from_slice(&u.dirty_rows);
+        }
+        union.sort_unstable();
+        union.dedup();
+        Some(union)
+    }
 }
 
 /// Engine identity: one prepared engine per handle x storage format x
@@ -169,11 +304,30 @@ impl EngineKey {
     }
 }
 
+/// A built engine plus the source generation it reflects: a mismatch with
+/// the source's current generation marks the engine stale, to be
+/// refreshed (incrementally where possible) by the next `prepared` call.
+struct BuiltEngine {
+    generation: u64,
+    prep: Arc<PreparedMatrix>,
+}
+
+/// Consistent source snapshot an engine build runs against: the canonical
+/// original-scale COO, its Frobenius norm, the generation it represents,
+/// and the normalization scale to apply at the value stream. Taken under
+/// the registry lock in one shot, so a build never mixes generations.
+struct BuildCtx {
+    coo: Arc<CooMatrix>,
+    fro: f64,
+    generation: u64,
+    scale: Option<f64>,
+}
+
 struct EngineSlot {
     /// Build-once latch: concurrent `prepared` calls for one key serialize
     /// here (not on the registry lock), so different keys build in
-    /// parallel while the same key is never built twice.
-    cell: Arc<Mutex<Option<Arc<PreparedMatrix>>>>,
+    /// parallel while the same key is never built twice per generation.
+    cell: Arc<Mutex<Option<BuiltEngine>>>,
     last_used: u64,
     /// 0 while the build is in flight (pending slots are never evicted).
     bytes: usize,
@@ -219,6 +373,13 @@ pub struct MatrixRegistry {
     dedup_hits: AtomicU64,
     evictions: AtomicU64,
     warm_hits: AtomicU64,
+    updates: AtomicU64,
+    incremental_rebuilds: AtomicU64,
+    full_rebuilds: AtomicU64,
+    shards_rebuilt: AtomicU64,
+    shards_reused: AtomicU64,
+    warm_kept: AtomicU64,
+    warm_dropped: AtomicU64,
 }
 
 impl Default for MatrixRegistry {
@@ -246,6 +407,13 @@ impl MatrixRegistry {
             dedup_hits: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
             warm_hits: AtomicU64::new(0),
+            updates: AtomicU64::new(0),
+            incremental_rebuilds: AtomicU64::new(0),
+            full_rebuilds: AtomicU64::new(0),
+            shards_rebuilt: AtomicU64::new(0),
+            shards_reused: AtomicU64::new(0),
+            warm_kept: AtomicU64::new(0),
+            warm_dropped: AtomicU64::new(0),
         }
     }
 
@@ -256,31 +424,172 @@ impl MatrixRegistry {
 
     /// Ingest a matrix: canonicalize **in place** (the registry owns the
     /// buffers — no COO clone anywhere on this path), check symmetry,
-    /// Frobenius-normalize, and deduplicate against already-registered
-    /// content. Returns the handle service jobs carry from here on.
+    /// compute the Frobenius norm, and deduplicate against already-
+    /// registered content. Returns the handle service jobs carry from
+    /// here on.
+    ///
+    /// The source is stored canonical in **original scale**; normalization
+    /// is deferred to engine-build time (bitwise identical values — see
+    /// [`crate::coordinator::native_operator_scaled`]) so that
+    /// [`MatrixRegistry::update`] deltas, which arrive in original scale,
+    /// compose exactly across generations.
     pub fn register(&self, mut m: CooMatrix) -> Result<MatrixHandle> {
         anyhow::ensure!(m.nrows > 0, "matrix must be non-empty");
-        let fro =
-            crate::coordinator::canonicalize_ingest(&mut m, self.cfg.skip_symmetry_check, self.cfg.skip_normalize)?;
+        anyhow::ensure!(m.nrows == m.ncols, "matrix must be square");
+        m.canonicalize();
+        if !self.cfg.skip_symmetry_check {
+            anyhow::ensure!(
+                m.is_symmetric(1e-4),
+                "operator must be symmetric (set skip_symmetry_check for trusted input)"
+            );
+        }
+        let fro = Self::effective_fro(&m, self.cfg.skip_normalize);
         let hash = m.content_hash();
         let mut inner = lock(&self.inner);
         if let Some(ids) = inner.by_hash.get(&hash) {
             for &id in ids {
-                let s = &inner.sources[&id];
-                // Equal normalized content AND equal norm: a scaled copy of
-                // a registered graph normalizes to the same entries but a
-                // different Frobenius norm, and must get its own handle so
-                // its eigenvalues rescale correctly.
-                if s.fro.to_bits() == fro.to_bits() && *s.coo == m {
+                // Original-scale content comparison: a scaled copy of a
+                // registered graph has different stored values, so it
+                // naturally gets its own handle (its eigenvalues rescale
+                // by a different norm).
+                if *inner.sources[&id].coo == m {
                     self.dedup_hits.fetch_add(1, Ordering::SeqCst);
                     return Ok(MatrixHandle(id));
                 }
             }
         }
         let id = NEXT_HANDLE_ID.fetch_add(1, Ordering::Relaxed);
-        inner.sources.insert(id, Source { coo: Arc::new(m), fro, hash });
+        inner
+            .sources
+            .insert(id, Source { coo: Arc::new(m), fro, hash, generation: 1, updates: VecDeque::new() });
         inner.by_hash.entry(hash).or_default().push(id);
         Ok(MatrixHandle(id))
+    }
+
+    /// Apply a delta (edge insertions, deletions, value changes — original
+    /// value scale) to a registered matrix **in place**: splice into the
+    /// canonical source (`O(nnz + d)`, no re-sort), recompute the
+    /// Frobenius norm, bump the handle's generation, and record the dirty
+    /// rows. Cached engines stay resident and are refreshed lazily — the
+    /// next [`MatrixRegistry::prepared`] on each key rebuilds only the CU
+    /// shards the accumulated deltas touched (or everything, past the
+    /// [`RegistryConfig::dirty_full_fraction`] cutoff). In-flight solves
+    /// keep their engine snapshot; nothing they read is mutated.
+    ///
+    /// Warm-start seeds survive the generation bump when the relative
+    /// perturbation `||delta||_F / ||M||_F` is at most
+    /// [`RegistryConfig::warm_keep_tol`]; otherwise the handle's seeds are
+    /// dropped and the next queries run cold.
+    pub fn update(&self, h: MatrixHandle, mut delta: CooDelta) -> Result<UpdateReport> {
+        delta.canonicalize();
+        let mut inner = lock(&self.inner);
+        let src = inner.sources.get_mut(&h.0).ok_or_else(|| anyhow::anyhow!("unknown matrix handle {}", h.0))?;
+        anyhow::ensure!(
+            (src.coo.nrows, src.coo.ncols) == (delta.nrows, delta.ncols),
+            "delta dimensions {}x{} do not match matrix {}x{}",
+            delta.nrows,
+            delta.ncols,
+            src.coo.nrows,
+            src.coo.ncols
+        );
+        if !self.cfg.skip_symmetry_check {
+            anyhow::ensure!(
+                delta.is_symmetric(),
+                "delta must be symmetric (edit both triangles, or set skip_symmetry_check)"
+            );
+        }
+        if delta.is_empty() {
+            return Ok(UpdateReport {
+                generation: src.generation,
+                nnz: src.coo.nnz(),
+                dirty_rows: 0,
+                inserted: 0,
+                changed: 0,
+                deleted: 0,
+                rel_delta: 0.0,
+                warm_kept: true,
+            });
+        }
+        // Reference norm for the warm-retention ratio: the *actual* matrix
+        // norm, even when normalization is skipped (src.fro is pinned to
+        // 1.0 there and would turn the documented relative guard into an
+        // absolute one).
+        let old_fro = if self.cfg.skip_normalize { frobenius_norm(&src.coo) } else { src.fro };
+        // Copy-on-write: in the steady state the registry's Arc is the
+        // only strong reference and the splice mutates in place; a
+        // concurrent engine build holding the Arc forces one clone and
+        // keeps reading its consistent snapshot.
+        //
+        // Scaling note: the splice, re-norm, and re-hash are O(nnz) and run
+        // under the registry lock, stalling other handles' `prepared`
+        // snapshots for the duration. Updates are the rare, heavyweight
+        // operation by contract (the service fences them anyway); if
+        // update throughput across many tenants ever matters, the next
+        // step is per-source locking so only the updated handle pays.
+        let coo = Arc::make_mut(&mut src.coo);
+        let report = coo.apply_delta(&delta);
+        src.fro = Self::effective_fro(coo, self.cfg.skip_normalize);
+        let new_hash = coo.content_hash();
+        let new_nnz = coo.nnz();
+        src.generation += 1;
+        let generation = src.generation;
+        src.updates.push_back(UpdateRecord { generation, dirty_rows: report.dirty_rows.clone() });
+        while src.updates.len() > MAX_UPDATE_HISTORY {
+            src.updates.pop_front();
+        }
+        let old_hash = src.hash;
+        src.hash = new_hash;
+        // Warm retention: small relative perturbation keeps the seeds.
+        let rel_delta = if old_fro > 0.0 { report.delta_fro() / old_fro } else { f64::INFINITY };
+        let warm_kept = rel_delta <= self.cfg.warm_keep_tol;
+        if !warm_kept {
+            inner.warm.retain(|k, _| k.0 != h.0);
+            inner.warm_order.retain(|k| k.0 != h.0);
+            self.warm_dropped.fetch_add(1, Ordering::SeqCst);
+        } else {
+            self.warm_kept.fetch_add(1, Ordering::SeqCst);
+        }
+        // Keep the dedup index consistent with the mutated content.
+        if old_hash != new_hash {
+            if let Some(ids) = inner.by_hash.get_mut(&old_hash) {
+                ids.retain(|&id| id != h.0);
+                if ids.is_empty() {
+                    inner.by_hash.remove(&old_hash);
+                }
+            }
+            inner.by_hash.entry(new_hash).or_default().push(h.0);
+        }
+        self.updates.fetch_add(1, Ordering::SeqCst);
+        Ok(UpdateReport {
+            generation,
+            nnz: new_nnz,
+            dirty_rows: report.dirty_rows.len(),
+            inserted: report.inserted,
+            changed: report.changed,
+            deleted: report.deleted,
+            rel_delta,
+            warm_kept,
+        })
+    }
+
+    /// Current generation of a registered matrix (bumped per update).
+    pub fn generation(&self, h: MatrixHandle) -> Option<u64> {
+        lock(&self.inner).sources.get(&h.0).map(|s| s.generation)
+    }
+
+    /// Frobenius norm for eigenvalue rescaling: 1.0 when normalization is
+    /// skipped or the matrix is zero (matching the in-place normalizer's
+    /// convention, so both prepare paths rescale identically).
+    fn effective_fro(m: &CooMatrix, skip_normalize: bool) -> f64 {
+        if skip_normalize {
+            return 1.0;
+        }
+        let f = frobenius_norm(m);
+        if f == 0.0 {
+            1.0
+        } else {
+            f
+        }
     }
 
     /// Dimensions `(n, nnz)` of a registered matrix (submit-time
@@ -314,15 +623,24 @@ impl MatrixRegistry {
     }
 
     /// The shared prepared engine for `(handle, opts)`: built exactly once
-    /// per key, cached under the byte-budget LRU, shared zero-copy with
-    /// every caller. Errors on an unknown handle.
+    /// per key **and generation**, cached under the byte-budget LRU,
+    /// shared zero-copy with every caller. A cached engine whose
+    /// generation lags the source (a delta landed since it was built) is
+    /// refreshed under the same per-key latch — incrementally when the
+    /// accumulated dirty-row fraction is small (untouched CU shards and
+    /// the worker pool carry over), from scratch otherwise. Errors on an
+    /// unknown handle.
     pub fn prepared(&self, h: MatrixHandle, opts: &SolveOptions) -> Result<Arc<PreparedMatrix>> {
         let key = EngineKey::for_opts(h, opts);
-        let (coo, fro, cell) = {
+        let (ctx, cell) = {
             let mut inner = lock(&self.inner);
             let src = inner.sources.get(&h.0).ok_or_else(|| anyhow::anyhow!("unknown matrix handle {}", h.0))?;
-            let coo = Arc::clone(&src.coo);
-            let fro = src.fro;
+            let ctx = BuildCtx {
+                coo: Arc::clone(&src.coo),
+                fro: src.fro,
+                generation: src.generation,
+                scale: src.scale(self.cfg.skip_normalize),
+            };
             inner.tick += 1;
             let tick = inner.tick;
             let slot = inner.engines.entry(key.clone()).or_insert_with(|| EngineSlot {
@@ -331,17 +649,35 @@ impl MatrixRegistry {
                 bytes: 0,
             });
             slot.last_used = tick;
-            (coo, fro, Arc::clone(&slot.cell))
+            (ctx, Arc::clone(&slot.cell))
         };
 
+        let generation = ctx.generation;
         let mut built = lock(&cell);
-        if let Some(prep) = built.as_ref() {
-            self.engine_hits.fetch_add(1, Ordering::SeqCst);
-            return Ok(Arc::clone(prep));
-        }
-        let prep = Arc::new(self.build_engine(&coo, fro, opts));
-        self.prepares.fetch_add(1, Ordering::SeqCst);
-        *built = Some(Arc::clone(&prep));
+        let prep = match built.as_ref() {
+            Some(b) if b.generation == generation => {
+                self.engine_hits.fetch_add(1, Ordering::SeqCst);
+                return Ok(Arc::clone(&b.prep));
+            }
+            Some(stale) => {
+                // A delta landed since this engine was built: refresh it,
+                // reusing untouched shard structure when the dirty set is
+                // small and the engine is a native sharded one.
+                let dirty = {
+                    let inner = lock(&self.inner);
+                    inner.sources.get(&h.0).and_then(|s| s.dirty_rows_since(stale.generation))
+                };
+                let prep = self.refresh_engine(&stale.prep, &ctx, dirty, opts);
+                self.prepares.fetch_add(1, Ordering::SeqCst);
+                prep
+            }
+            None => {
+                let prep = Arc::new(self.build_engine(&ctx, opts));
+                self.prepares.fetch_add(1, Ordering::SeqCst);
+                prep
+            }
+        };
+        *built = Some(BuiltEngine { generation, prep: Arc::clone(&prep) });
         drop(built);
 
         // Record the engine's footprint and enforce the byte budget.
@@ -353,12 +689,14 @@ impl MatrixRegistry {
         Ok(prep)
     }
 
-    /// Engine construction from the registry's canonical, normalized COO.
-    /// Runs outside the registry lock (only the per-key latch is held), so
-    /// concurrent builds of *different* engines overlap.
-    fn build_engine(&self, coo: &CooMatrix, fro: f64, opts: &SolveOptions) -> PreparedMatrix {
+    /// Engine construction from the registry's canonical original-scale
+    /// COO, normalizing at the value stream (`scale`). Runs outside the
+    /// registry lock (only the per-key latch is held), so concurrent
+    /// builds of *different* engines overlap.
+    fn build_engine(&self, ctx: &BuildCtx, opts: &SolveOptions) -> PreparedMatrix {
         let mut sw = Stopwatch::start();
         let precision = opts.precision;
+        let coo = ctx.coo.as_ref();
         // Each cached engine owns its CU pool, so solves on different
         // resident matrices never contend on one pool (solves on the same
         // engine serialize their fork/joins, matching one device). The
@@ -367,21 +705,75 @@ impl MatrixRegistry {
         // both of which drop the pool with the engine.
         let native = || {
             let pool = Arc::new(ThreadPool::new(opts.effective_threads()));
-            native_operator_from_canonical(coo, precision, opts.cus, opts.partition, &pool)
+            native_operator_scaled(coo, ctx.scale, precision, opts.cus, opts.partition, &pool)
         };
-        let (op, engine_used) = select_engine(opts.engine, precision, || self.try_pjrt(coo), native);
+        let (op, engine_used) = select_engine(opts.engine, precision, || self.try_pjrt(coo, ctx.scale), native);
         PreparedMatrix {
             op,
-            fro,
+            fro: ctx.fro,
             n: coo.nrows,
             nnz: coo.nnz(),
             precision,
             engine_used,
             prepare_s: sw.lap_s(),
+            generation: ctx.generation,
         }
     }
 
-    fn try_pjrt(&self, coo: &CooMatrix) -> Result<Arc<dyn crate::lanczos::Operator>> {
+    /// Refresh a stale engine to the snapshot generation: incremental when
+    /// the dirty history is available, the fraction is under the cutoff,
+    /// and the old engine is a native sharded one; full rebuild otherwise.
+    fn refresh_engine(
+        &self,
+        old: &Arc<PreparedMatrix>,
+        ctx: &BuildCtx,
+        dirty: Option<Vec<u32>>,
+        opts: &SolveOptions,
+    ) -> Arc<PreparedMatrix> {
+        if let Some(dirty) = dirty {
+            let frac = dirty.len() as f64 / ctx.coo.nrows.max(1) as f64;
+            if frac <= self.cfg.dirty_full_fraction {
+                if let Some(prep) = self.rebuild_incremental(old, ctx, &dirty) {
+                    self.incremental_rebuilds.fetch_add(1, Ordering::SeqCst);
+                    return Arc::new(prep);
+                }
+            }
+        }
+        self.full_rebuilds.fetch_add(1, Ordering::SeqCst);
+        Arc::new(self.build_engine(ctx, opts))
+    }
+
+    /// The incremental path: downcast the cached engine back to its
+    /// concrete `ShardedSpmv<V>`, restream the (re-normalized) typed value
+    /// array from the updated source — unavoidable, the new Frobenius
+    /// scale touches every word — and let
+    /// [`ShardedSpmv::rebuild_shards`] rebind the CU shard table, reusing
+    /// its worker pool and counting dirty vs carried-over shards. Returns
+    /// `None` for opaque engines (PJRT), which take the full-rebuild path.
+    fn rebuild_incremental(&self, old: &Arc<PreparedMatrix>, ctx: &BuildCtx, dirty: &[u32]) -> Option<PreparedMatrix> {
+        let mut sw = Stopwatch::start();
+        let precision = old.precision();
+        let coo = ctx.coo.as_ref();
+        crate::with_precision!(precision, V => {
+            let sharded = old.operator().as_any()?.downcast_ref::<ShardedSpmv<V>>()?;
+            let csr: CsrMatrix<V> = typed_csr_scaled::<V>(coo, ctx.scale);
+            let (engine, shard_stats) = sharded.rebuild_shards(Arc::new(csr), dirty);
+            self.shards_rebuilt.fetch_add(shard_stats.rebuilt as u64, Ordering::SeqCst);
+            self.shards_reused.fetch_add(shard_stats.reused as u64, Ordering::SeqCst);
+            Some(PreparedMatrix {
+                op: Arc::new(engine),
+                fro: ctx.fro,
+                n: coo.nrows,
+                nnz: coo.nnz(),
+                precision,
+                engine_used: "native",
+                prepare_s: sw.lap_s(),
+                generation: ctx.generation,
+            })
+        })
+    }
+
+    fn try_pjrt(&self, coo: &CooMatrix, scale: Option<f64>) -> Result<Arc<dyn crate::lanczos::Operator>> {
         // Only runtime *creation* serializes; the guard is released before
         // the O(nnz) PjrtSpmv build so different-key engine builds stay
         // parallel, as the per-key latch design promises.
@@ -392,7 +784,13 @@ impl MatrixRegistry {
             }
             Arc::clone(guard.as_ref().unwrap())
         };
-        let op = PjrtSpmv::new(rt, coo)?;
+        // The PJRT path consumes whole matrices: materialize the
+        // normalized copy (the registry's source stays original-scale).
+        // No scale (skip_normalize) needs no copy at all.
+        let op = match scale {
+            Some(inv) => PjrtSpmv::new(rt, &scaled_coo_copy(coo, inv))?,
+            None => PjrtSpmv::new(rt, coo)?,
+        };
         Ok(Arc::new(op))
     }
 
@@ -491,6 +889,13 @@ impl MatrixRegistry {
             evictions: self.evictions.load(Ordering::SeqCst),
             warm_entries: inner.warm.len(),
             warm_hits: self.warm_hits.load(Ordering::SeqCst),
+            updates: self.updates.load(Ordering::SeqCst),
+            incremental_rebuilds: self.incremental_rebuilds.load(Ordering::SeqCst),
+            full_rebuilds: self.full_rebuilds.load(Ordering::SeqCst),
+            shards_rebuilt: self.shards_rebuilt.load(Ordering::SeqCst),
+            shards_reused: self.shards_reused.load(Ordering::SeqCst),
+            warm_kept: self.warm_kept.load(Ordering::SeqCst),
+            warm_dropped: self.warm_dropped.load(Ordering::SeqCst),
         }
     }
 }
@@ -515,8 +920,9 @@ mod tests {
         assert_eq!(h1, h2, "identical content shares one residency");
         assert_eq!(reg.stats().dedup_hits, 1);
         assert_eq!(reg.stats().matrices, 1);
-        // A scaled copy normalizes to the same entries but a different
-        // Frobenius norm: it must NOT alias the original.
+        // A scaled copy has different original-scale values (and would
+        // rescale eigenvalues by a different norm): it must NOT alias the
+        // original.
         let mut scaled = m.clone();
         for v in &mut scaled.vals {
             *v *= 2.0;
@@ -679,6 +1085,178 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &b), "fallback and native requests must share one engine");
         assert_eq!(reg.stats().prepares, 1);
         assert_eq!(a.engine(), "native");
+    }
+
+    /// Build a symmetric value-perturbation delta touching ~`frac` of the
+    /// upper-triangle entries of a canonical symmetric matrix.
+    fn perturb_delta(m: &CooMatrix, frac: f64, factor: f32) -> CooDelta {
+        let mut canon = m.clone();
+        canon.canonicalize();
+        let stride = ((1.0 / frac.max(1e-9)) as usize).max(1);
+        let mut d = CooDelta::new(canon.nrows, canon.ncols);
+        let mut picked = 0usize;
+        for i in 0..canon.nnz() {
+            let (r, c) = (canon.rows[i] as usize, canon.cols[i] as usize);
+            if r <= c {
+                picked += 1;
+                if picked % stride == 0 {
+                    d.upsert_sym(r, c, canon.vals[i] * factor);
+                }
+            }
+        }
+        d
+    }
+
+    /// Symmetric value-perturbation delta confined to the row/col block
+    /// `[0, band)` — dirty rows stay inside one CU shard, so incremental
+    /// re-prep telemetry has untouched shards to report.
+    fn banded_delta(m: &CooMatrix, band: usize, factor: f32) -> CooDelta {
+        let mut canon = m.clone();
+        canon.canonicalize();
+        let mut d = CooDelta::new(canon.nrows, canon.ncols);
+        for i in 0..canon.nnz() {
+            let (r, c) = (canon.rows[i] as usize, canon.cols[i] as usize);
+            if r <= c && c < band {
+                d.upsert_sym(r, c, canon.vals[i] * factor);
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn update_bumps_generation_and_refreshes_engines_incrementally() {
+        let reg = MatrixRegistry::default();
+        let m = graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 71);
+        let h = reg.register(m.clone()).unwrap();
+        assert_eq!(reg.generation(h), Some(1));
+        let opts = opts_k(4);
+        let prep1 = reg.prepared(h, &opts).unwrap();
+        assert_eq!(prep1.generation(), 1);
+
+        // Small symmetric value perturbation confined to one row band.
+        let delta = banded_delta(&m, 24, 1.1);
+        assert!(!delta.is_empty());
+        let report = reg.update(h, delta).unwrap();
+        assert_eq!(report.generation, 2);
+        assert!(report.changed > 0 && report.dirty_rows > 0);
+        assert_eq!(reg.generation(h), Some(2));
+        assert_eq!(reg.stats().updates, 1);
+
+        // The cached engine refreshes lazily, incrementally, on next use.
+        let prep2 = reg.prepared(h, &opts).unwrap();
+        assert!(!Arc::ptr_eq(&prep1, &prep2));
+        assert_eq!(prep2.generation(), 2);
+        let stats = reg.stats();
+        assert_eq!(stats.incremental_rebuilds, 1, "{stats:?}");
+        assert_eq!(stats.full_rebuilds, 0, "{stats:?}");
+        assert!(stats.shards_reused > 0, "untouched CU shards must carry over: {stats:?}");
+        assert_eq!(stats.prepares, 2);
+        // Subsequent calls at the same generation are cache hits.
+        let prep3 = reg.prepared(h, &opts).unwrap();
+        assert!(Arc::ptr_eq(&prep2, &prep3));
+        assert_eq!(reg.stats().engine_hits, 1);
+        // The old engine snapshot stays usable for in-flight solves.
+        assert_eq!(prep1.generation(), 1);
+        assert!(prep1.n() > 0);
+    }
+
+    #[test]
+    fn incremental_refresh_is_exactly_a_fresh_register_and_prepare() {
+        // The acceptance bar, at unit scale: after a delta, solving on the
+        // incrementally refreshed engine equals (bitwise) solving on a
+        // from-scratch register+prepare of the mutated matrix.
+        let m = graphs::rmat(1 << 8, 8 << 8, 0.57, 0.19, 0.19, 81);
+        for precision in [Precision::Float32, Precision::FixedQ1_31] {
+            let opts = SolveOptions { precision, ..opts_k(5) };
+            let reg = MatrixRegistry::default();
+            let h = reg.register(m.clone()).unwrap();
+            let _ = reg.prepared(h, &opts).unwrap();
+            let delta = perturb_delta(&m, 0.02, 1.25);
+            reg.update(h, delta.clone()).unwrap();
+            let inc = reg.prepared(h, &opts).unwrap();
+            assert_eq!(reg.stats().incremental_rebuilds, 1);
+
+            // From scratch: mutate a canonical copy, register, prepare.
+            let mut scratch = m.clone();
+            scratch.canonicalize();
+            let mut d = delta.clone();
+            d.canonicalize();
+            scratch.apply_delta(&d);
+            let reg2 = MatrixRegistry::default();
+            let h2 = reg2.register(scratch).unwrap();
+            let fresh = reg2.prepared(h2, &opts).unwrap();
+            assert_eq!(reg2.stats().full_rebuilds, 0);
+
+            assert_eq!(inc.frobenius_norm().to_bits(), fresh.frobenius_norm().to_bits(), "{precision:?}");
+            assert_eq!(inc.nnz(), fresh.nnz());
+            let mut ws = LanczosWorkspace::new();
+            let a = Solver::solve_detached(&inc, 5, &opts, &mut ws, None).unwrap();
+            let b = Solver::solve_detached(&fresh, 5, &opts, &mut ws, None).unwrap();
+            assert_eq!(a.eigenvalues, b.eigenvalues, "{precision:?}");
+            assert_eq!(a.eigenvectors, b.eigenvectors, "{precision:?}");
+        }
+    }
+
+    #[test]
+    fn large_or_historyless_deltas_fall_back_to_full_rebuild() {
+        let reg = MatrixRegistry::new(RegistryConfig { dirty_full_fraction: 0.001, ..Default::default() });
+        let m = graphs::rmat(1 << 8, 8 << 8, 0.57, 0.19, 0.19, 83);
+        let h = reg.register(m.clone()).unwrap();
+        let _ = reg.prepared(h, &opts_k(4)).unwrap();
+        // Perturb far more rows than the (tiny) incremental cutoff allows.
+        reg.update(h, perturb_delta(&m, 0.5, 1.1)).unwrap();
+        let _ = reg.prepared(h, &opts_k(4)).unwrap();
+        let stats = reg.stats();
+        assert_eq!(stats.full_rebuilds, 1, "{stats:?}");
+        assert_eq!(stats.incremental_rebuilds, 0, "{stats:?}");
+    }
+
+    #[test]
+    fn update_validates_input() {
+        let reg = MatrixRegistry::default();
+        let m = graphs::mesh2d(8, 8, 0.9, 0.02, 31);
+        let h = reg.register(m).unwrap();
+        // Unknown handle.
+        assert!(reg.update(MatrixHandle(u64::MAX), CooDelta::new(64, 64)).is_err());
+        // Dimension mismatch.
+        assert!(reg.update(h, CooDelta::new(3, 3)).is_err());
+        // Asymmetric delta rejected (symmetry checking on by default).
+        let mut asym = CooDelta::new(64, 64);
+        asym.upsert(0, 1, 5.0);
+        assert!(reg.update(h, asym).is_err());
+        // Empty delta: no-op, generation unchanged.
+        let rep = reg.update(h, CooDelta::new(64, 64)).unwrap();
+        assert_eq!(rep.generation, 1);
+        assert_eq!(rep.dirty_rows, 0);
+        assert_eq!(reg.generation(h), Some(1));
+        assert_eq!(reg.stats().updates, 0);
+    }
+
+    #[test]
+    fn warm_seeds_survive_small_deltas_and_drop_on_large_ones() {
+        let reg = MatrixRegistry::new(RegistryConfig {
+            warm_start: true,
+            warm_keep_tol: 0.05,
+            ..Default::default()
+        });
+        let m = graphs::rmat(1 << 8, 8 << 8, 0.57, 0.19, 0.19, 87);
+        let h = reg.register(m.clone()).unwrap();
+        reg.store_warm(h, 4, Precision::Float32, &[0.1; 256]);
+        assert!(reg.warm_v1(h, 4, Precision::Float32).is_some());
+
+        // Tiny perturbation: seeds retained across the generation bump.
+        let rep = reg.update(h, perturb_delta(&m, 0.01, 1.0001)).unwrap();
+        assert!(rep.rel_delta <= 0.05, "rel_delta {}", rep.rel_delta);
+        assert!(rep.warm_kept);
+        assert!(reg.warm_v1(h, 4, Precision::Float32).is_some(), "warm seed kept across generations");
+        assert_eq!(reg.stats().warm_kept, 1);
+
+        // Violent perturbation: seeds dropped.
+        let rep = reg.update(h, perturb_delta(&m, 1.0, 10.0)).unwrap();
+        assert!(rep.rel_delta > 0.05, "rel_delta {}", rep.rel_delta);
+        assert!(!rep.warm_kept);
+        assert!(reg.warm_v1(h, 4, Precision::Float32).is_none(), "warm seed dropped");
+        assert_eq!(reg.stats().warm_dropped, 1);
     }
 
     #[test]

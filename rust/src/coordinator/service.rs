@@ -41,6 +41,17 @@
 //! by the worker loop, the tests, and the `ablation_scheduler` bench so
 //! the deployed policy and the model cannot drift.
 //!
+//! ## Evolving matrices
+//!
+//! [`EigenService::submit_update`] queues a [`CooDelta`] against a
+//! registered handle. Updates are **generation-fenced**: a per-handle
+//! read/write lock lets any number of solves share the handle while an
+//! update waits, then applies the splice + renormalization + generation
+//! bump exclusively — no solve ever reads a torn matrix, and every
+//! `Solution` carries `SolveMetrics.generation`. Stale engines refresh
+//! lazily and incrementally on the next solve (see
+//! [`MatrixRegistry::update`]).
+//!
 //! ## Validation and telemetry
 //!
 //! Bad jobs are rejected at **submit** time (`k >= 1 && k <= n`, square
@@ -51,16 +62,16 @@
 //! cumulative and maximum queue wait, cumulative solve time, and core
 //! reconfigurations.
 
-use crate::coordinator::registry::{MatrixHandle, MatrixRegistry, RegistryConfig};
+use crate::coordinator::registry::{MatrixHandle, MatrixRegistry, RegistryConfig, UpdateReport};
 use crate::coordinator::scheduler::core_for_k;
 use crate::coordinator::{SolveOptions, Solution, Solver};
 use crate::fpga::FpgaTimingModel;
 use crate::lanczos::LanczosWorkspace;
-use crate::sparse::{CooMatrix, RowPartition};
-use std::collections::VecDeque;
+use crate::sparse::{CooDelta, CooMatrix, RowPartition};
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 
 /// The live queue policy: the offline scheduler model's type, deployed.
@@ -95,10 +106,19 @@ struct HandleJob {
     reply: Sender<JobResult>,
 }
 
+/// A delta-update job against a registered handle.
+struct UpdateJob {
+    id: u64,
+    handle: MatrixHandle,
+    delta: CooDelta,
+    reply: Sender<UpdateResult>,
+}
+
 enum QueueItem {
     Single(Job),
     Batch(BatchJob),
     Handle(HandleJob),
+    Update(UpdateJob),
 }
 
 /// One queued unit plus its dispatch metadata: the Jacobi core class it
@@ -122,6 +142,35 @@ pub struct JobResult {
     /// Solver wall time in seconds (for batch members: this member's
     /// solve; the shared prepare cost is inside the first member's time).
     pub solve_s: f64,
+}
+
+/// Result of a delta-update job.
+#[derive(Debug)]
+pub struct UpdateResult {
+    /// Job identifier.
+    pub id: u64,
+    /// The registry's update report, or an error string.
+    pub outcome: Result<UpdateReport, String>,
+    /// Queue wait time in seconds.
+    pub queued_s: f64,
+    /// Wall time of the registry update (splice + renorm), seconds.
+    pub update_s: f64,
+}
+
+/// Ticket for a delta-update job; await with `wait`.
+pub struct UpdateTicket {
+    rx: Receiver<UpdateResult>,
+}
+
+impl UpdateTicket {
+    /// Block until the update completes.
+    pub fn wait(self) -> UpdateResult {
+        self.rx.recv().expect("service dropped without reply")
+    }
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<UpdateResult> {
+        self.rx.try_recv().ok()
+    }
 }
 
 /// Snapshot of the service's queue/latency counters.
@@ -148,6 +197,8 @@ pub struct ServiceStats {
     /// reconfigurations; [`QueuePolicy::KBatched`] exists to minimize
     /// these).
     pub reconfigs: u64,
+    /// Delta-update jobs completed (also counted in `completed`).
+    pub updates: u64,
 }
 
 /// Internal atomic counters behind [`ServiceStats`]. Durations are stored
@@ -159,6 +210,7 @@ struct Counters {
     failed: AtomicU64,
     batches: AtomicU64,
     reconfigs: AtomicU64,
+    updates: AtomicU64,
     total_queued_us: AtomicU64,
     max_queued_us: AtomicU64,
     total_solve_us: AtomicU64,
@@ -184,6 +236,26 @@ struct Shared {
     /// While set, workers leave the queue untouched (deterministic trace
     /// loading: enqueue everything, then [`EigenService::resume`]).
     paused: AtomicBool,
+    /// Per-handle generation fences: solves hold the read side while they
+    /// run, updates take the write side — an update never interleaves
+    /// with an in-flight solve on the same handle, so a solve's engine
+    /// snapshot and its warm seed always belong to one generation (no
+    /// torn reads). Entries are dropped on `unregister`.
+    fences: Mutex<HashMap<u64, Arc<RwLock<()>>>>,
+}
+
+impl Shared {
+    fn fence(&self, handle: MatrixHandle) -> Arc<RwLock<()>> {
+        let mut fences = self.fences.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        // Self-cleaning: a fence re-created by a job racing `unregister`
+        // would otherwise leak forever (handle ids are never reused).
+        // Entries whose only strong reference is the map itself belong to
+        // no running job — sweep them once the map grows past the bound.
+        if fences.len() > 64 {
+            fences.retain(|_, f| Arc::strong_count(f) > 1);
+        }
+        Arc::clone(fences.entry(handle.id()).or_default())
+    }
 }
 
 /// Handle returned by the submit calls; await with `wait`.
@@ -325,6 +397,7 @@ impl EigenService {
             available: Condvar::new(),
             shutdown: AtomicBool::new(false),
             paused: AtomicBool::new(cfg.paused),
+            fences: Mutex::new(HashMap::new()),
         });
         let counters = Arc::new(Counters::default());
         let registry = Arc::new(MatrixRegistry::new(cfg.registry.clone()));
@@ -390,6 +463,9 @@ impl EigenService {
                 QueueItem::Single(job) => vec![core_for_k(job.opts.k)],
                 QueueItem::Handle(job) => vec![core_for_k(job.k)],
                 QueueItem::Batch(batch) => batch.ks.iter().map(|&k| core_for_k(k)).collect(),
+                // Updates run on no Jacobi core: no class change, no
+                // reconfiguration accounting.
+                QueueItem::Update(_) => Vec::new(),
             };
             let mut first = true;
             for &core in &member_cores {
@@ -410,7 +486,8 @@ impl EigenService {
             match entry.item {
                 QueueItem::Single(job) => Self::run_single(job, queued_s, counters),
                 QueueItem::Batch(batch) => Self::run_batch(batch, queued_s, counters),
-                QueueItem::Handle(job) => Self::run_handle(job, queued_s, counters, registry, &mut ws),
+                QueueItem::Handle(job) => Self::run_handle(job, queued_s, counters, registry, shared, &mut ws),
+                QueueItem::Update(job) => Self::run_update(job, queued_s, counters, registry, shared),
             }
         }
     }
@@ -490,10 +567,16 @@ impl EigenService {
         queued_s: f64,
         counters: &Counters,
         registry: &Arc<MatrixRegistry>,
+        shared: &Shared,
         ws: &mut LanczosWorkspace,
     ) {
         let t0 = std::time::Instant::now();
         let HandleJob { id, handle, k, opts, reply } = job;
+        // Generation fence (read side): in-flight solves on a handle
+        // exclude updates on the same handle, so the engine snapshot and
+        // warm seed below come from one consistent generation.
+        let fence = shared.fence(handle);
+        let _guard = fence.read().unwrap_or_else(std::sync::PoisonError::into_inner);
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let prep = registry.prepared(handle, &opts)?;
             let v1 = registry.warm_v1(handle, k, opts.precision);
@@ -522,6 +605,32 @@ impl EigenService {
         let solve_s = t0.elapsed().as_secs_f64();
         counters.record_result(outcome.is_ok(), queued_s, solve_s);
         let _ = reply.send(JobResult { id, outcome, queued_s, solve_s });
+    }
+
+    fn run_update(
+        job: UpdateJob,
+        queued_s: f64,
+        counters: &Counters,
+        registry: &Arc<MatrixRegistry>,
+        shared: &Shared,
+    ) {
+        let t0 = std::time::Instant::now();
+        let UpdateJob { id, handle, delta, reply } = job;
+        // Generation fence (write side): wait out in-flight solves on this
+        // handle, and hold solves submitted behind us until the splice and
+        // generation bump are complete.
+        let fence = shared.fence(handle);
+        let _guard = fence.write().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| registry.update(handle, delta)));
+        let outcome: Result<UpdateReport, String> = match outcome {
+            Ok(Ok(rep)) => Ok(rep),
+            Ok(Err(e)) => Err(e.to_string()),
+            Err(_) => Err("update panicked".to_string()),
+        };
+        let update_s = t0.elapsed().as_secs_f64();
+        counters.updates.fetch_add(1, Ordering::SeqCst);
+        counters.record_result(outcome.is_ok(), queued_s, update_s);
+        let _ = reply.send(UpdateResult { id, outcome, queued_s, update_s });
     }
 
     /// An immediately-failed ticket for a job rejected at submit time: the
@@ -562,7 +671,12 @@ impl EigenService {
     /// services must unregister client matrices they are done with — the
     /// registry byte budget bounds engines, not sources.
     pub fn unregister(&self, handle: MatrixHandle) -> bool {
-        self.registry.unregister(handle)
+        let dropped = self.registry.unregister(handle);
+        if dropped {
+            let mut fences = self.shared.fences.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            fences.remove(&handle.id());
+        }
+        dropped
     }
 
     /// Enqueue a one-shot owned-matrix job; returns a [`Ticket`] to await
@@ -616,6 +730,52 @@ impl EigenService {
         ks: &[usize],
     ) -> Vec<(u64, Ticket)> {
         ks.iter().map(|&k| self.submit_handle(handle, SolveOptions { k, ..opts.clone() })).collect()
+    }
+
+    /// Enqueue a delta update against a registered handle — the evolving-
+    /// graph path. The update is **fenced** against solves on the same
+    /// handle: it waits out in-flight solves and completes atomically
+    /// (splice + Frobenius renorm + generation bump) before any later
+    /// solve on the handle runs, so no solve ever observes a torn state.
+    /// Cached engines refresh lazily and incrementally on the next solve;
+    /// warm-start seeds survive when the relative perturbation is within
+    /// the registry's `warm_keep_tol`.
+    ///
+    /// Ordering note: the fence serializes *execution*, not queue order —
+    /// under [`QueuePolicy::KBatched`] a later-submitted solve may be
+    /// dispatched before an earlier update. Replay pipelines that need
+    /// strict delta/query interleaving should run [`QueuePolicy::Fifo`]
+    /// or wait on the returned [`UpdateTicket`] before submitting
+    /// dependent queries.
+    pub fn submit_update(&self, handle: MatrixHandle, delta: CooDelta) -> (u64, UpdateTicket) {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.counters.submitted.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = channel();
+        let Some((n, _)) = self.registry.dims(handle) else {
+            self.counters.record_result(false, 0.0, 0.0);
+            let _ = tx.send(UpdateResult {
+                id,
+                outcome: Err(format!("unknown matrix handle {}", handle.id())),
+                queued_s: 0.0,
+                update_s: 0.0,
+            });
+            return (id, UpdateTicket { rx });
+        };
+        if (delta.nrows, delta.ncols) != (n, n) {
+            self.counters.record_result(false, 0.0, 0.0);
+            let _ = tx.send(UpdateResult {
+                id,
+                outcome: Err(format!("delta dimensions {}x{} do not match matrix {n}x{n}", delta.nrows, delta.ncols)),
+                queued_s: 0.0,
+                update_s: 0.0,
+            });
+            return (id, UpdateTicket { rx });
+        }
+        // Updates carry no Jacobi core class and a nominal cost estimate;
+        // KBatched treats them as a tiny foreign-class backlog.
+        let job = UpdateJob { id, handle, delta, reply: tx };
+        self.enqueue(QueueItem::Update(job), 0, 1e-6);
+        (id, UpdateTicket { rx })
     }
 
     /// Enqueue one batch of same-matrix jobs, one per entry of `ks`.
@@ -704,6 +864,7 @@ impl EigenService {
             max_queued_s: self.counters.max_queued_us.load(Ordering::SeqCst) as f64 / 1e6,
             total_solve_s: self.counters.total_solve_us.load(Ordering::SeqCst) as f64 / 1e6,
             reconfigs: self.counters.reconfigs.load(Ordering::SeqCst),
+            updates: self.counters.updates.load(Ordering::SeqCst),
         }
     }
 
@@ -964,6 +1125,124 @@ mod tests {
         // the following k=4 handle job then runs on the already-loaded
         // class-4 core without another switch.
         assert_eq!(svc.stats().reconfigs, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn update_jobs_are_fenced_and_bump_generations_deterministically() {
+        // Paused single-replica FIFO service: the trace solve/update/solve
+        // executes in order, so the first solve must see generation 1 and
+        // the second generation 2 — and results after the update must
+        // match a fresh solve of the mutated matrix.
+        let svc = EigenService::with_config(ServiceConfig { replicas: 1, paused: true, ..Default::default() });
+        let m = graphs::rmat(1 << 8, 8 << 8, 0.57, 0.19, 0.19, 97);
+        let h = svc.register(m.clone()).unwrap();
+
+        let mut canon = m.clone();
+        canon.canonicalize();
+        let mut delta = crate::sparse::CooDelta::new(canon.nrows, canon.ncols);
+        for i in 0..canon.nnz() {
+            let (r, c) = (canon.rows[i] as usize, canon.cols[i] as usize);
+            if r <= c && c < 16 {
+                delta.upsert_sym(r, c, canon.vals[i] * 1.5);
+            }
+        }
+        assert!(!delta.is_empty());
+
+        let (_, t1) = svc.submit_handle(h, SolveOptions { k: 4, ..Default::default() });
+        let (_, tu) = svc.submit_update(h, delta.clone());
+        let (_, t2) = svc.submit_handle(h, SolveOptions { k: 4, ..Default::default() });
+        svc.resume();
+
+        let before = t1.wait().outcome.expect("pre-update solve");
+        assert_eq!(before.metrics.generation, 1);
+        let urep = tu.wait().outcome.expect("update");
+        assert_eq!(urep.generation, 2);
+        assert!(urep.changed > 0);
+        let after = t2.wait().outcome.expect("post-update solve");
+        assert_eq!(after.metrics.generation, 2);
+        assert_ne!(before.eigenvalues, after.eigenvalues, "the delta must change the spectrum");
+
+        // Post-update answers equal a from-scratch solve of the mutated
+        // matrix (the exactness acceptance, via the service path).
+        let mut scratch = canon.clone();
+        let mut d = delta;
+        d.canonicalize();
+        scratch.apply_delta(&d);
+        let direct = Solver::new(SolveOptions { k: 4, ..Default::default() }).solve(&scratch).unwrap();
+        assert_eq!(after.eigenvalues, direct.eigenvalues);
+        assert_eq!(after.eigenvectors, direct.eigenvectors);
+
+        let stats = svc.stats();
+        assert_eq!(stats.updates, 1);
+        assert_eq!(stats.completed, 3);
+        assert_eq!(stats.failed, 0);
+        let rstats = svc.registry().stats();
+        assert_eq!(rstats.updates, 1);
+        assert_eq!(rstats.prepares, 2, "initial build + one generation refresh: {rstats:?}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn bad_updates_are_rejected_without_touching_workers() {
+        let svc = EigenService::start(1);
+        let m = graphs::mesh2d(6, 6, 0.9, 0.02, 13); // n = 36
+        let h = svc.register(m).unwrap();
+        // Unknown handle.
+        let reg = MatrixRegistry::default();
+        let foreign = reg.register(graphs::mesh2d(6, 6, 0.9, 0.02, 14)).unwrap();
+        let (_, t) = svc.submit_update(foreign, crate::sparse::CooDelta::new(36, 36));
+        assert!(t.wait().outcome.unwrap_err().contains("unknown matrix handle"));
+        // Dimension mismatch.
+        let (_, t) = svc.submit_update(h, crate::sparse::CooDelta::new(4, 4));
+        assert!(t.wait().outcome.unwrap_err().contains("do not match"));
+        assert_eq!(svc.queue_depth(), 0);
+        assert_eq!(svc.stats().failed, 2);
+        // Asymmetric delta fails on the worker, not the service.
+        let mut asym = crate::sparse::CooDelta::new(36, 36);
+        asym.upsert(0, 1, 9.0);
+        let (_, t) = svc.submit_update(h, asym);
+        assert!(t.wait().outcome.unwrap_err().contains("symmetric"));
+        // The worker still serves.
+        let (_, ts) = svc.submit_handle(h, SolveOptions { k: 2, ..Default::default() });
+        assert!(ts.wait().outcome.is_ok());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_updates_and_solves_never_tear() {
+        // Hammer one handle with interleaved solves and small updates from
+        // the submit side while 3 replicas drain: every solve must succeed
+        // and report a generation consistent with some applied update
+        // (1..=updates+1); every update must succeed.
+        let svc = EigenService::with_config(ServiceConfig { replicas: 3, ..Default::default() });
+        let m = graphs::rmat(1 << 7, 8 << 7, 0.57, 0.19, 0.19, 101);
+        let h = svc.register(m.clone()).unwrap();
+        let mut canon = m;
+        canon.canonicalize();
+        let rounds = 6usize;
+        let mut solve_tickets = Vec::new();
+        let mut update_tickets = Vec::new();
+        for round in 0..rounds {
+            for k in [2usize, 4] {
+                solve_tickets.push(svc.submit_handle(h, SolveOptions { k, ..Default::default() }).1);
+            }
+            let mut d = crate::sparse::CooDelta::new(canon.nrows, canon.ncols);
+            let (r, c) = (canon.rows[round] as usize, canon.cols[round] as usize);
+            d.upsert_sym(r, c, 0.123 + round as f32 * 0.01);
+            update_tickets.push(svc.submit_update(h, d).1);
+        }
+        for t in update_tickets {
+            assert!(t.wait().outcome.is_ok());
+        }
+        let max_gen = rounds as u64 + 1;
+        for t in solve_tickets {
+            let r = t.wait();
+            let sol = r.outcome.expect("solve under concurrent updates");
+            assert!(sol.metrics.generation >= 1 && sol.metrics.generation <= max_gen);
+        }
+        assert_eq!(svc.stats().updates, rounds as u64);
+        assert_eq!(svc.registry().generation(h), Some(max_gen));
         svc.shutdown();
     }
 

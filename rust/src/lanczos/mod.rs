@@ -120,6 +120,16 @@ pub struct LanczosOptions {
     /// Starting vector: uniform `1/n^2`-style (the paper's init) when
     /// `None`, otherwise the provided vector (will be normalized).
     pub v1: Option<Vec<f32>>,
+    /// Adaptive stopping: when `max_iters > k`, the loop may run past `k`
+    /// iterations (growing the basis) and stops as soon as the top-k Ritz
+    /// values stabilize to [`LanczosOptions::ritz_tol`] — which is what
+    /// lets a warm-started re-solve finish in measurably fewer SpMVs than
+    /// a cold one. `0` (the default) reproduces the paper's fixed
+    /// K-iteration schedule bit for bit.
+    pub max_iters: usize,
+    /// Relative stabilization tolerance on the top-k Ritz values, used
+    /// only when `max_iters > k`.
+    pub ritz_tol: f64,
 }
 
 impl Default for LanczosOptions {
@@ -130,8 +140,28 @@ impl Default for LanczosOptions {
             precision: Precision::Float32,
             fused: true,
             v1: None,
+            max_iters: 0,
+            ritz_tol: 1e-6,
         }
     }
+}
+
+/// Adaptive stopping rule: true once the top-`k` Ritz values of the
+/// current tridiagonal have stabilized relative to the previous iteration
+/// (max component change `<= tol * max(|ritz_0|, 1e-30)`). `prev` carries
+/// the last snapshot between calls.
+fn ritz_converged(alphas: &[f64], betas: &[f64], k: usize, tol: f64, prev: &mut Option<Vec<f64>>) -> bool {
+    let t = Tridiagonal::new(alphas.to_vec(), betas.to_vec());
+    let cur = t.top_k_by_magnitude(k);
+    let done = match prev {
+        Some(p) if p.len() == cur.len() => {
+            let scale = cur[0].abs().max(1e-30);
+            p.iter().zip(&cur).all(|(a, b)| (a - b).abs() <= tol * scale)
+        }
+        _ => false,
+    };
+    *prev = Some(cur);
+    done
 }
 
 /// Preallocated scratch for the Lanczos loop, reused across iterations and
@@ -246,9 +276,15 @@ pub fn lanczos_typed_ws<V: Dataword, O: Operator + ?Sized>(
     let k = opts.k;
     assert!(k >= 1, "k must be >= 1");
     assert!(k <= n, "k = {k} exceeds matrix dimension {n}");
+    // Adaptive mode iterates past k (up to m_max) until the top-k Ritz
+    // values stabilize; m_max == k is the paper's fixed schedule and
+    // leaves every code path bit-identical to the non-adaptive build.
+    let m_max = if opts.max_iters > k { opts.max_iters.min(n) } else { k };
+    let adaptive = m_max > k;
+    let mut ritz_prev: Option<Vec<f64>> = None;
 
     let shards = op.fused_shards().max(1);
-    ws.ensure(n, k, shards);
+    ws.ensure(n, m_max, shards);
 
     // v1: the paper initializes with constant 1/n^2 values then L2-
     // normalizes — i.e. the normalized uniform vector.
@@ -266,7 +302,7 @@ pub fn lanczos_typed_ws<V: Dataword, O: Operator + ?Sized>(
     // One flat allocation for the whole basis; row 0 holds the quantized
     // start vector, and the working copy mirrors the stored (rounded)
     // values so the recurrence and the basis agree bit-for-bit.
-    let mut basis = BasisArena::<V>::with_capacity(k, n);
+    let mut basis = BasisArena::<V>::with_capacity(m_max, n);
     {
         let row = basis.alloc_row();
         for (vi, q) in ws.v.iter_mut().zip(row.iter_mut()) {
@@ -275,8 +311,8 @@ pub fn lanczos_typed_ws<V: Dataword, O: Operator + ?Sized>(
         }
     }
 
-    let mut alphas: Vec<f64> = Vec::with_capacity(k);
-    let mut betas: Vec<f64> = Vec::with_capacity(k.saturating_sub(1));
+    let mut alphas: Vec<f64> = Vec::with_capacity(m_max);
+    let mut betas: Vec<f64> = Vec::with_capacity(m_max.saturating_sub(1));
     let mut breakdown_at = None;
     let mut spmv_count = 0usize;
     let mut fused_sweeps = 0usize;
@@ -290,8 +326,8 @@ pub fn lanczos_typed_ws<V: Dataword, O: Operator + ?Sized>(
     let mut beta_prev = 0.0f64;
 
     if opts.fused {
-        for i in 0..k {
-            let reorth_due = i + 1 < k && opts.reorth.due(i + 1);
+        for i in 0..m_max {
+            let reorth_due = i + 1 < m_max && opts.reorth.due(i + 1);
             let nproj = if reorth_due { basis.len() } else { 0 };
 
             // Sweep 1 (fork/join #1): y = M v, minus beta v_prev (Paige),
@@ -310,7 +346,12 @@ pub fn lanczos_typed_ws<V: Dataword, O: Operator + ?Sized>(
             fused_sweeps += 1;
             vector_passes += 1;
             alphas.push(alpha);
-            if i + 1 == k {
+            // Stop at the iteration cap, or (adaptive mode) once the top-k
+            // Ritz values of T_{i+1} have stabilized. Both breaks leave the
+            // shape invariant intact: i+1 alphas, i betas, i+1 basis rows.
+            if i + 1 == m_max
+                || (adaptive && i + 1 >= k && ritz_converged(&alphas, &betas, k, opts.ritz_tol, &mut ritz_prev))
+            {
                 break;
             }
 
@@ -369,7 +410,7 @@ pub fn lanczos_typed_ws<V: Dataword, O: Operator + ?Sized>(
     } else {
         // The unfused reference (--no-fuse): the paper's Algorithm 1 as
         // serial full-length passes with *modified* Gram-Schmidt reorth.
-        for i in 0..k {
+        for i in 0..m_max {
             // w = M v  (Algorithm 1 line 7; the memory-bound phase).
             op.apply(v, w);
             spmv_count += 1;
@@ -385,7 +426,9 @@ pub fn lanczos_typed_ws<V: Dataword, O: Operator + ?Sized>(
             linalg::axpy(-(alpha as f32), v, w);
             vector_passes += 1;
 
-            if i + 1 == k {
+            if i + 1 == m_max
+                || (adaptive && i + 1 >= k && ritz_converged(&alphas, &betas, k, opts.ritz_tol, &mut ritz_prev))
+            {
                 break;
             }
 
@@ -624,6 +667,44 @@ mod tests {
                 assert_eq!(&reused.basis[i], &fresh.basis[i], "k={k} row {i}");
             }
         }
+    }
+
+    #[test]
+    fn adaptive_mode_stops_early_when_seeded_near_the_answer() {
+        // Diagonal with a clear gap: the dominant eigenvector is e_0.
+        let mut vals = vec![0.05f32; 256];
+        vals[0] = 0.9;
+        vals[1] = 0.4;
+        let m = diag(&vals);
+        let opts_cold = LanczosOptions {
+            k: 1,
+            max_iters: 24,
+            ritz_tol: 1e-9,
+            v1: Some((0..256).map(|i| 1.0 + (i as f32) * 1e-3).collect()),
+            ..Default::default()
+        };
+        let cold = lanczos(&m, &opts_cold);
+        // Warm: start almost exactly on the dominant eigenvector.
+        let mut v1 = vec![1e-4f32; 256];
+        v1[0] = 1.0;
+        let warm = lanczos(&m, &LanczosOptions { v1: Some(v1), ..opts_cold.clone() });
+        assert!(
+            warm.spmv_count >= 1 && cold.spmv_count > warm.spmv_count,
+            "warm {} vs cold {}",
+            warm.spmv_count,
+            cold.spmv_count
+        );
+        // Both converge to the same dominant Ritz value.
+        let lw = warm.tridiag.top_k_by_magnitude(1)[0];
+        let lc = cold.tridiag.top_k_by_magnitude(1)[0];
+        assert!((lw - 0.9).abs() < 1e-4, "warm lambda {lw}");
+        assert!((lc - 0.9).abs() < 1e-4, "cold lambda {lc}");
+        // The fixed schedule is untouched: max_iters == 0 runs exactly k.
+        let fixed = lanczos(&m, &LanczosOptions { k: 4, ..Default::default() });
+        assert_eq!(fixed.spmv_count, 4);
+        // Shape invariant holds after an early adaptive stop.
+        assert_eq!(warm.tridiag.k(), warm.basis.len());
+        assert_eq!(warm.tridiag.beta.len() + 1, warm.tridiag.alpha.len());
     }
 
     #[test]

@@ -53,6 +53,14 @@ pub struct FusedIteration<'a> {
 
 /// A symmetric linear operator `y = M x` over `f32` vectors.
 pub trait Operator: Send + Sync {
+    /// Concrete-type escape hatch for engines that support in-place
+    /// maintenance: the registry's incremental re-prep downcasts a cached
+    /// `Arc<dyn Operator>` back to `ShardedSpmv<V>` to reuse its pool and
+    /// shard table across a delta update. `None` (the default) means the
+    /// operator is opaque and updates fall back to a full rebuild.
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        None
+    }
     /// Rows (== cols; operators here are square/symmetric).
     fn n(&self) -> usize;
     /// Stored non-zeros (for complexity accounting).

@@ -85,6 +85,6 @@ pub mod prelude {
     pub use crate::jacobi::{self, JacobiMode};
     pub use crate::lanczos::{self, LanczosOptions, Operator, ReorthPolicy};
     pub use crate::linalg;
-    pub use crate::sparse::{CooMatrix, CsrMatrix, PartitionPolicy, ShardedSpmv};
+    pub use crate::sparse::{CooDelta, CooMatrix, CsrMatrix, DeltaOp, PartitionPolicy, ShardedSpmv};
     pub use crate::util::rng::Pcg64;
 }

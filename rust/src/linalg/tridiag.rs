@@ -84,6 +84,46 @@ impl Tridiagonal {
         count
     }
 
+    /// The `j`-th smallest eigenvalue (0-based), located by bisection over
+    /// the Sturm count — `O(k)` per probe, ~60 probes. Used by the
+    /// adaptive Lanczos stopping rule, where the tridiagonal is tiny and
+    /// a full eigendecomposition per iteration would be wasteful.
+    pub fn kth_smallest_eigenvalue(&self, j: usize) -> f64 {
+        assert!(j < self.k(), "eigenvalue index {j} out of range (k = {})", self.k());
+        let (mut lo, mut hi) = self.gershgorin();
+        // Widen so the strict `< x` count is j at lo and k at hi.
+        let pad = 1e-12 + 1e-12 * lo.abs().max(hi.abs());
+        lo -= pad;
+        hi += pad;
+        for _ in 0..80 {
+            let mid = 0.5 * (lo + hi);
+            if self.eigenvalues_below(mid) > j {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    /// The `k` largest-magnitude eigenvalues, in decreasing `|lambda|`
+    /// order (the Top-K convention): candidates are the `k` smallest and
+    /// `k` largest algebraic eigenvalues, merged by magnitude.
+    pub fn top_k_by_magnitude(&self, k: usize) -> Vec<f64> {
+        let m = self.k();
+        let k = k.min(m);
+        // Candidate *indices* (not values — equal values from a multiple
+        // eigenvalue must each keep their slot): the k smallest and k
+        // largest, deduplicated where the ranges overlap.
+        let mut idx: Vec<usize> = (0..k).chain(m - k..m).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        let mut cand: Vec<f64> = idx.into_iter().map(|j| self.kth_smallest_eigenvalue(j)).collect();
+        cand.sort_by(|a, b| b.abs().partial_cmp(&a.abs()).unwrap());
+        cand.truncate(k);
+        cand
+    }
+
     /// Gershgorin bound: all eigenvalues lie in `[lo, hi]`.
     pub fn gershgorin(&self) -> (f64, f64) {
         let k = self.k();
@@ -134,6 +174,27 @@ mod tests {
         assert_eq!(t.eigenvalues_below(2.0 - s2 + 1e-9), 1);
         assert_eq!(t.eigenvalues_below(2.0 + 1e-9), 2);
         assert_eq!(t.eigenvalues_below(2.0 + s2 + 1e-9), 3);
+    }
+
+    #[test]
+    fn bisection_finds_indexed_and_top_magnitude_eigenvalues() {
+        // tridiag(-1, 2, -1) size 3: spectrum {2 - sqrt2, 2, 2 + sqrt2}.
+        let t = sample();
+        let s2 = std::f64::consts::SQRT_2;
+        assert!((t.kth_smallest_eigenvalue(0) - (2.0 - s2)).abs() < 1e-9);
+        assert!((t.kth_smallest_eigenvalue(1) - 2.0).abs() < 1e-9);
+        assert!((t.kth_smallest_eigenvalue(2) - (2.0 + s2)).abs() < 1e-9);
+        let top2 = t.top_k_by_magnitude(2);
+        assert!((top2[0] - (2.0 + s2)).abs() < 1e-9);
+        assert!((top2[1] - 2.0).abs() < 1e-9);
+        // Magnitude ordering picks the negative end when it dominates.
+        let t2 = Tridiagonal::new(vec![-5.0, 0.1, 3.0], vec![0.0, 0.0]);
+        let top = t2.top_k_by_magnitude(2);
+        assert!((top[0] - -5.0).abs() < 1e-9, "{top:?}");
+        assert!((top[1] - 3.0).abs() < 1e-9, "{top:?}");
+        // k clamps to the dimension; a repeated eigenvalue keeps its slots.
+        let t3 = Tridiagonal::new(vec![1.0, 1.0], vec![0.0]);
+        assert_eq!(t3.top_k_by_magnitude(5).len(), 2);
     }
 
     #[test]

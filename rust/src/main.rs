@@ -19,7 +19,7 @@ use topk_eigen::fixed::Precision;
 use topk_eigen::fpga::{FpgaTimingModel, PowerModel, SlrBudget};
 use topk_eigen::graphs;
 use topk_eigen::lanczos::ReorthPolicy;
-use topk_eigen::sparse::{partition_rows_balanced, read_matrix_market, CooMatrix, PartitionPolicy};
+use topk_eigen::sparse::{partition_rows_balanced, read_matrix_market, CooDelta, CooMatrix, PartitionPolicy};
 use topk_eigen::util::cli::Command;
 use topk_eigen::util::timer::fmt_duration;
 
@@ -85,6 +85,14 @@ fn parse_precision(s: &str) -> Result<Precision, String> {
     }
 }
 
+fn parse_adaptive(s: &str) -> Result<Option<f64>, String> {
+    let tol: f64 = s.parse().map_err(|e| format!("bad adaptive tolerance '{s}': {e}"))?;
+    if tol < 0.0 {
+        return Err(format!("adaptive tolerance must be >= 0, got {tol}"));
+    }
+    Ok(if tol == 0.0 { None } else { Some(tol) })
+}
+
 fn parse_partition(s: &str) -> Result<PartitionPolicy, String> {
     match s {
         "equal-rows" => Ok(PartitionPolicy::EqualRows),
@@ -103,6 +111,7 @@ fn cmd_solve(args: &[String]) -> i32 {
         .opt("threads", "CU pool worker threads (0 = one per CU)", Some("0"))
         .opt("partition", "row partition: equal-rows|balanced-nnz", Some("balanced-nnz"))
         .opt("engine", "spmv engine: native|pjrt", Some("native"))
+        .opt("adaptive", "adaptive Lanczos stop: Ritz tolerance (0 = paper's fixed K iterations)", Some("0"))
         .flag("no-fuse", "disable the fused Lanczos datapath (serial per-pass vector phase)")
         .flag("skip-symmetry-check", "trust the input to be symmetric (skips the O(nnz) prepare-time check)")
         .flag("verify", "print Fig-11 accuracy metrics")
@@ -129,6 +138,7 @@ fn cmd_solve(args: &[String]) -> i32 {
             },
             fuse: !m.flag("no-fuse"),
             skip_symmetry_check: m.flag("skip-symmetry-check"),
+            adaptive_tol: parse_adaptive(m.str("adaptive").unwrap())?,
             ..Default::default()
         };
         println!(
@@ -208,6 +218,9 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("cus", "SpMV compute units (matrix row shards)", Some("5"))
         .opt("threads", "CU pool worker threads (0 = one per CU)", Some("0"))
         .opt("budget-mb", "registry engine byte budget in MiB (0 = unlimited)", Some("0"))
+        .opt("updates", "delta updates interleaved with the trace (evolving-graph replay)", Some("0"))
+        .opt("update-dirty", "fraction of entries each delta perturbs (e.g. 0.01 = 1%)", Some("0.01"))
+        .opt("adaptive", "adaptive Lanczos stop: Ritz tolerance (0 = fixed K iterations)", Some("0"))
         .flag("warm-start", "seed repeated (handle, k) queries from the previous dominant Ritz vector")
         .flag("skip-symmetry-check", "trust inputs to be symmetric (skips the O(nnz) registration check)")
         .flag("quiet", "suppress per-job output");
@@ -233,9 +246,15 @@ fn cmd_serve(args: &[String]) -> i32 {
             precision: parse_precision(m.str("precision").unwrap())?,
             cus: m.parse_at_least::<usize>("cus", 1).map_err(|e| e.to_string())?,
             threads: m.parse::<usize>("threads").map_err(|e| e.to_string())?,
+            adaptive_tol: parse_adaptive(m.str("adaptive").unwrap())?,
             ..Default::default()
         };
         let budget_mb = m.parse::<usize>("budget-mb").map_err(|e| e.to_string())?;
+        let updates = m.parse::<usize>("updates").map_err(|e| e.to_string())?;
+        let update_dirty = m.parse::<f64>("update-dirty").map_err(|e| e.to_string())?;
+        if !(0.0..=1.0).contains(&update_dirty) {
+            return Err(format!("--update-dirty must be in [0, 1], got {update_dirty}"));
+        }
         let svc = EigenService::with_config(ServiceConfig {
             replicas,
             policy,
@@ -256,28 +275,60 @@ fn cmd_serve(args: &[String]) -> i32 {
             m.flag("warm-start"),
         );
         let t0 = std::time::Instant::now();
+        // Mirror of the registered matrix's canonical content, kept in
+        // sync with every applied delta so each generated delta perturbs
+        // the *current* values (the evolving-graph replay).
+        let mut mirror = matrix.clone();
+        mirror.canonicalize();
         let handle = svc.register(matrix).map_err(|e| e.to_string())?;
-        let tickets: Vec<_> = (0..jobs)
-            .map(|i| svc.submit_handle(handle, SolveOptions { k: ks[i % ks.len()], ..opts.clone() }))
-            .collect();
         let mut ok = 0usize;
-        for (id, t) in tickets {
-            let r = t.wait();
-            match r.outcome {
-                Ok(sol) => {
-                    ok += 1;
-                    if !m.flag("quiet") {
-                        println!(
-                            "  job {id}: k={} lambda0={:+.6} queued={} solve={}{}",
-                            sol.k(),
-                            sol.eigenvalues[0],
-                            fmt_duration(r.queued_s),
-                            fmt_duration(r.solve_s),
-                            if sol.metrics.warm_started { " (warm)" } else { "" },
-                        );
+        let quiet = m.flag("quiet");
+        let phases = updates + 1;
+        for phase in 0..phases {
+            let (lo, hi) = (jobs * phase / phases, jobs * (phase + 1) / phases);
+            let tickets: Vec<_> = (lo..hi)
+                .map(|i| svc.submit_handle(handle, SolveOptions { k: ks[i % ks.len()], ..opts.clone() }))
+                .collect();
+            for (id, t) in tickets {
+                let r = t.wait();
+                match r.outcome {
+                    Ok(sol) => {
+                        ok += 1;
+                        if !quiet {
+                            println!(
+                                "  job {id}: k={} gen={} lambda0={:+.6} queued={} solve={} spmv={}{}",
+                                sol.k(),
+                                sol.metrics.generation,
+                                sol.eigenvalues[0],
+                                fmt_duration(r.queued_s),
+                                fmt_duration(r.solve_s),
+                                sol.metrics.spmv_count,
+                                if sol.metrics.warm_started { " (warm)" } else { "" },
+                            );
+                        }
                     }
+                    Err(e) => println!("  job {id} FAILED: {e}"),
                 }
-                Err(e) => println!("  job {id} FAILED: {e}"),
+            }
+            if phase + 1 < phases {
+                let delta = perturbation_delta(&mirror, update_dirty, phase);
+                let mut local = delta.clone();
+                local.canonicalize();
+                mirror.apply_delta(&local);
+                let (uid, ut) = svc.submit_update(handle, delta);
+                let r = ut.wait();
+                match r.outcome {
+                    Ok(rep) => println!(
+                        "  update {uid}: gen={} dirty-rows={} changed={} rel-delta={:.2e} warm-{} took={}",
+                        rep.generation,
+                        rep.dirty_rows,
+                        rep.changed,
+                        rep.rel_delta,
+                        if rep.warm_kept { "kept" } else { "dropped" },
+                        fmt_duration(r.update_s),
+                    ),
+                    Err(e) => println!("  update {uid} FAILED: {e}"),
+                }
             }
         }
         let wall = t0.elapsed().as_secs_f64();
@@ -302,6 +353,19 @@ fn cmd_serve(args: &[String]) -> i32 {
             rstats.resident_bytes as f64 / (1 << 20) as f64,
             rstats.warm_hits,
         );
+        if updates > 0 {
+            println!(
+                "updates: applied={} incremental-rebuilds={} full-rebuilds={} shards-rebuilt={} \
+                 shards-reused={} warm-kept={} warm-dropped={}",
+                rstats.updates,
+                rstats.incremental_rebuilds,
+                rstats.full_rebuilds,
+                rstats.shards_rebuilt,
+                rstats.shards_reused,
+                rstats.warm_kept,
+                rstats.warm_dropped,
+            );
+        }
         println!(
             "queue: total-wait={} max-wait={} total-solve={}",
             fmt_duration(stats.total_queued_s),
@@ -322,6 +386,25 @@ fn cmd_serve(args: &[String]) -> i32 {
             1
         }
     }
+}
+
+/// A symmetric value-perturbation delta touching roughly `frac` of the
+/// upper-triangle entries of the (canonical) mirror, phase-shifted by
+/// `round` so successive updates touch different entries.
+fn perturbation_delta(mirror: &CooMatrix, frac: f64, round: usize) -> CooDelta {
+    let stride = ((1.0 / frac.max(1e-9)) as usize).max(1);
+    let mut d = CooDelta::new(mirror.nrows, mirror.ncols);
+    let mut picked = 0usize;
+    for i in 0..mirror.nnz() {
+        let (r, c) = (mirror.rows[i] as usize, mirror.cols[i] as usize);
+        if r <= c {
+            picked += 1;
+            if (picked + round) % stride == 0 {
+                d.upsert_sym(r, c, mirror.vals[i] * 1.02 + 1e-4);
+            }
+        }
+    }
+    d
 }
 
 fn cmd_catalog() -> i32 {

@@ -12,7 +12,7 @@
 //! f32, the paper's float-where-it-matters rule (§IV).
 
 use crate::fixed::Dataword;
-use crate::sparse::CooMatrix;
+use crate::sparse::{CooDelta, CooMatrix, DeltaApply};
 
 /// CSR sparse matrix with values stored in format `V` (default `f32`).
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -123,6 +123,40 @@ impl<V: Dataword> CsrMatrix<V> {
             }
             y_stripe[r - r0] = acc;
         }
+    }
+
+    /// Splice a canonical [`CooDelta`] into this CSR matrix in place:
+    /// one two-pointer merge over the row-major entry stream rebuilds
+    /// `indptr`/`indices`/`vals` with insertions, value changes, and
+    /// deletions applied — `O(nnz + d)`, untouched rows are straight
+    /// copies, no COO round-trip. Returns the same [`DeltaApply`] report
+    /// as [`CooMatrix::apply_delta`] (the two appliers share one splice
+    /// kernel, so a COO and a CSR of the same matrix stay byte-equivalent
+    /// under the same delta).
+    pub fn apply_delta(&mut self, delta: &CooDelta) -> DeltaApply {
+        assert_eq!((self.nrows, self.ncols), (delta.nrows, delta.ncols), "delta dimension mismatch");
+        assert!(delta.is_canonical(), "canonicalize the delta before applying");
+        let cap = self.nnz() + delta.len();
+        let mut counts = vec![0usize; self.nrows];
+        let (mut indices, mut vals) = (Vec::with_capacity(cap), Vec::with_capacity(cap));
+        let old = (0..self.nrows).flat_map(|r| {
+            let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+            self.indices[lo..hi].iter().zip(&self.vals[lo..hi]).map(move |(&c, &v)| (r as u32, c, v))
+        });
+        let report = crate::sparse::delta::splice(old, &delta.entries, |r, c, v| {
+            counts[r as usize] += 1;
+            indices.push(c);
+            vals.push(v);
+        });
+        let mut indptr = vec![0usize; self.nrows + 1];
+        for r in 0..self.nrows {
+            indptr[r + 1] = indptr[r] + counts[r];
+        }
+        self.indptr = indptr;
+        self.indices = indices;
+        self.vals = vals;
+        debug_assert!(self.validate().is_ok());
+        report
     }
 
     /// Convert back to COO (canonical order).
@@ -265,6 +299,52 @@ mod tests {
     fn max_row_nnz() {
         let m = sample();
         assert_eq!(m.max_row_nnz(), 2);
+    }
+
+    #[test]
+    fn apply_delta_matches_coo_applier() {
+        use crate::sparse::CooDelta;
+        let mut coo = CooMatrix::from_triplets(
+            3,
+            3,
+            vec![0, 0, 1, 1, 2, 2],
+            vec![0, 1, 1, 2, 0, 2],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        );
+        coo.canonicalize();
+        let mut csr = CsrMatrix::from_canonical_coo(&coo);
+        let mut d = CooDelta::new(3, 3);
+        d.upsert(0, 2, 9.0);
+        d.upsert(1, 1, -3.0);
+        d.delete(2, 0);
+        d.delete(1, 0);
+        d.canonicalize();
+        let rep_coo = coo.apply_delta(&d);
+        let rep_csr = csr.apply_delta(&d);
+        // One splice kernel behind both appliers: identical reports and
+        // byte-equivalent matrices.
+        assert_eq!(rep_coo, rep_csr);
+        assert_eq!(csr, CsrMatrix::from_canonical_coo(&coo));
+        assert!(csr.validate().is_ok());
+        // SpMV agrees with the mutated matrix.
+        let x = [1.0f32, -1.0, 0.5];
+        assert_eq!(csr.spmv(&x), coo.spmv_ref(&x));
+    }
+
+    #[test]
+    fn apply_delta_on_typed_storage_quantizes_upserts() {
+        use crate::sparse::CooDelta;
+        let mut coo: CooMatrix = CooMatrix::new(4, 4);
+        for i in 0..4 {
+            coo.push(i, i, 0.25);
+        }
+        let mut q: CsrMatrix<Q1_15> = coo.to_csr().to_precision::<Q1_15>();
+        let mut d = CooDelta::new(4, 4);
+        d.upsert(1, 1, 0.123_456); // not representable exactly at Q1.15
+        d.canonicalize();
+        q.apply_delta(&d);
+        let got = q.row(1).1[0].to_f32();
+        assert!(((got - 0.123_456).abs() as f64) <= <Q1_15 as Dataword>::ulp());
     }
 
     #[test]

@@ -1,0 +1,362 @@
+//! Sparse matrix deltas — the update currency of evolving-graph serving.
+//!
+//! The spectral workloads the paper targets run on graphs that *change*
+//! between queries (the multi-GPU follow-up, arXiv:2201.07498, and the
+//! SSD-scale FlashEigen, arXiv:1602.01421, both re-solve mutating
+//! matrices). A [`CooDelta`] is a batch of edge **insertions**, **value
+//! changes**, and **deletions** against a registered matrix; applying it
+//! to a canonical [`crate::sparse::CooMatrix`] or
+//! [`crate::sparse::CsrMatrix`] is a two-pointer splice — `O(nnz + d)`
+//! with no re-sort of the untouched entries — returning a [`DeltaApply`]
+//! report (dirty rows, op counts, `||delta||_F`) that drives the
+//! registry's incremental shard re-prep and warm-start retention.
+
+use crate::fixed::Dataword;
+
+/// One delta operation at a coordinate.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub enum DeltaOp {
+    /// Set the entry to this value, inserting it if absent.
+    Upsert(f32),
+    /// Remove the entry (a no-op if absent).
+    Delete,
+}
+
+/// A batch of coordinate-level edits against an `nrows x ncols` matrix.
+///
+/// Entries are applied **last-writer-wins** per coordinate after
+/// [`CooDelta::canonicalize`] (which the appliers call implicitly through
+/// the sorted invariant — build deltas with the push helpers and
+/// canonicalize once, or rely on the registry to do it). Values are in the
+/// matrix's **original** (pre-normalization) scale.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CooDelta {
+    /// Number of rows of the target matrix (must match at apply time).
+    pub nrows: usize,
+    /// Number of columns of the target matrix.
+    pub ncols: usize,
+    /// `(row, col, op)` edits. Crate-private so every write goes through
+    /// the push helpers: direct pushes would bypass both the bounds check
+    /// and the sortedness tracker, letting a delta that claims to be
+    /// canonical corrupt a canonical matrix on splice.
+    pub(crate) entries: Vec<(u32, u32, DeltaOp)>,
+    sorted: bool,
+}
+
+impl CooDelta {
+    /// Empty delta against an `nrows x ncols` matrix.
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Self { nrows, ncols, entries: Vec::new(), sorted: true }
+    }
+
+    /// Number of edits.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// The queued `(row, col, op)` edits, in push order until
+    /// [`CooDelta::canonicalize`], sorted and unique after.
+    pub fn entries(&self) -> &[(u32, u32, DeltaOp)] {
+        &self.entries
+    }
+
+    /// True when the delta carries no edits.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Queue `M[r, c] = v` (insert or value change).
+    pub fn upsert(&mut self, r: usize, c: usize, v: f32) {
+        self.push(r, c, DeltaOp::Upsert(v));
+    }
+
+    /// Queue removal of `M[r, c]`.
+    pub fn delete(&mut self, r: usize, c: usize) {
+        self.push(r, c, DeltaOp::Delete);
+    }
+
+    /// Queue `M[r, c] = M[c, r] = v` — the symmetric-operator convenience
+    /// (the Lanczos phase requires symmetric matrices, so most callers
+    /// edit both triangles together).
+    pub fn upsert_sym(&mut self, r: usize, c: usize, v: f32) {
+        self.upsert(r, c, v);
+        if r != c {
+            self.upsert(c, r, v);
+        }
+    }
+
+    /// Queue symmetric removal of `M[r, c]` and `M[c, r]`.
+    pub fn delete_sym(&mut self, r: usize, c: usize) {
+        self.delete(r, c);
+        if r != c {
+            self.delete(c, r);
+        }
+    }
+
+    fn push(&mut self, r: usize, c: usize, op: DeltaOp) {
+        assert!(r < self.nrows && c < self.ncols, "delta coordinate ({r},{c}) out of bounds");
+        if self.sorted {
+            if let Some(&(lr, lc, _)) = self.entries.last() {
+                self.sorted = (lr, lc) < (r as u32, c as u32);
+            }
+        }
+        self.entries.push((r as u32, c as u32, op));
+    }
+
+    /// Sort by `(row, col)` and keep the **last** op per coordinate
+    /// (last-writer-wins). Appliers require canonical deltas; this is
+    /// idempotent and `O(d log d)`.
+    pub fn canonicalize(&mut self) {
+        if self.sorted {
+            return;
+        }
+        // Stable sort preserves queue order among equal coordinates, so
+        // "last pushed" stays last.
+        self.entries.sort_by_key(|&(r, c, _)| (r, c));
+        let mut out: Vec<(u32, u32, DeltaOp)> = Vec::with_capacity(self.entries.len());
+        for &e in &self.entries {
+            match out.last_mut() {
+                Some(last) if (last.0, last.1) == (e.0, e.1) => *last = e,
+                _ => out.push(e),
+            }
+        }
+        self.entries = out;
+        self.sorted = true;
+    }
+
+    /// True once entries are sorted and unique per coordinate.
+    pub fn is_canonical(&self) -> bool {
+        self.sorted
+    }
+
+    /// Check that every off-diagonal edit has its mirror with an equal op
+    /// (value equality is exact): the cheap `O(d log d)` stand-in for the
+    /// registry's full symmetry check on updates. Requires canonical form.
+    pub fn is_symmetric(&self) -> bool {
+        debug_assert!(self.sorted, "canonicalize before is_symmetric");
+        self.entries.iter().all(|&(r, c, op)| {
+            r == c
+                || self
+                    .entries
+                    .binary_search_by_key(&(c, r), |&(er, ec, _)| (er, ec))
+                    .map(|i| self.entries[i].2 == op)
+                    .unwrap_or(false)
+        })
+    }
+}
+
+/// Report of one delta application: what changed, where, and by how much.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DeltaApply {
+    /// Rows holding at least one effective edit (sorted, deduplicated) —
+    /// the dirty set driving incremental shard re-prep.
+    pub dirty_rows: Vec<u32>,
+    /// Entries inserted (upsert on an absent coordinate).
+    pub inserted: usize,
+    /// Entries whose value changed (upsert on a present coordinate with a
+    /// different value).
+    pub changed: usize,
+    /// Entries removed.
+    pub deleted: usize,
+    /// Edits with no effect (upsert of the identical value, delete of an
+    /// absent coordinate).
+    pub noops: usize,
+    /// `sum((new - old)^2)` over every effective edit, in the original
+    /// value scale: `sqrt` of this over `||M||_F` is the relative
+    /// perturbation the warm-start retention guard compares against.
+    pub delta_fro_sq: f64,
+}
+
+impl DeltaApply {
+    /// `||delta||_F` — Frobenius norm of the change.
+    pub fn delta_fro(&self) -> f64 {
+        self.delta_fro_sq.sqrt()
+    }
+
+    /// Effective edits (everything but no-ops).
+    pub fn effective(&self) -> usize {
+        self.inserted + self.changed + self.deleted
+    }
+
+    fn mark_dirty(&mut self, r: u32) {
+        if self.dirty_rows.last() != Some(&r) {
+            self.dirty_rows.push(r);
+        }
+    }
+
+    /// Record one edit outcome. `old`/`new` are `None` when absent.
+    pub(crate) fn record(&mut self, r: u32, old: Option<f32>, new: Option<f32>) -> bool {
+        match (old, new) {
+            (None, Some(v)) => {
+                self.inserted += 1;
+                self.delta_fro_sq += (v as f64) * (v as f64);
+            }
+            (Some(o), Some(v)) => {
+                if o.to_bits() == v.to_bits() {
+                    self.noops += 1;
+                    return false;
+                }
+                self.changed += 1;
+                let d = v as f64 - o as f64;
+                self.delta_fro_sq += d * d;
+            }
+            (Some(o), None) => {
+                self.deleted += 1;
+                self.delta_fro_sq += (o as f64) * (o as f64);
+            }
+            (None, None) => {
+                self.noops += 1;
+                return false;
+            }
+        }
+        self.mark_dirty(r);
+        true
+    }
+}
+
+/// Splice a canonical delta into canonical parallel triplet arrays: the
+/// shared two-pointer merge behind `CooMatrix::apply_delta` and
+/// `CsrMatrix::apply_delta`. `rows` may be an implicit iterator source for
+/// CSR, so the caller passes closures yielding the old entries in order
+/// and receives the merged stream back in order.
+pub(crate) fn splice<V: Dataword>(
+    old: impl Iterator<Item = (u32, u32, V)>,
+    delta: &[(u32, u32, DeltaOp)],
+    mut emit: impl FnMut(u32, u32, V),
+) -> DeltaApply {
+    debug_assert!(
+        delta.windows(2).all(|w| (w[0].0, w[0].1) < (w[1].0, w[1].1)),
+        "delta entries must be sorted and unique (canonicalize first; direct `entries` edits bypass the tracker)"
+    );
+    let mut report = DeltaApply::default();
+    let mut old = old.peekable();
+    let mut j = 0usize;
+    loop {
+        let next_old = old.peek().map(|&(r, c, _)| (r, c));
+        let next_delta = delta.get(j).map(|&(r, c, _)| (r, c));
+        match (next_old, next_delta) {
+            (None, None) => break,
+            (Some(_), None) => {
+                let (r, c, v) = old.next().unwrap();
+                emit(r, c, v);
+            }
+            (Some(oc), Some(dc)) if oc < dc => {
+                let (r, c, v) = old.next().unwrap();
+                emit(r, c, v);
+            }
+            (Some(oc), Some(dc)) if oc == dc => {
+                let (r, c, v) = old.next().unwrap();
+                match delta[j].2 {
+                    DeltaOp::Upsert(nv) => {
+                        if report.record(r, Some(v.to_f32()), Some(nv)) {
+                            emit(r, c, V::from_f32(nv));
+                        } else {
+                            // No-op upsert: keep the stored word verbatim —
+                            // re-encoding through f32 could perturb a
+                            // wider-than-f32 fixed-point word (Q1.31).
+                            emit(r, c, v);
+                        }
+                    }
+                    DeltaOp::Delete => {
+                        report.record(r, Some(v.to_f32()), None);
+                    }
+                }
+                j += 1;
+            }
+            // Delta coordinate absent from the matrix.
+            _ => {
+                let (r, c, op) = delta[j];
+                match op {
+                    DeltaOp::Upsert(nv) => {
+                        if report.record(r, None, Some(nv)) {
+                            emit(r, c, V::from_f32(nv));
+                        }
+                    }
+                    DeltaOp::Delete => {
+                        report.record(r, None, None);
+                    }
+                }
+                j += 1;
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooMatrix;
+
+    #[test]
+    fn canonicalize_is_last_writer_wins() {
+        let mut d = CooDelta::new(4, 4);
+        d.upsert(2, 1, 5.0);
+        d.upsert(0, 0, 1.0);
+        d.delete(2, 1);
+        d.upsert(2, 1, 7.0);
+        assert!(!d.is_canonical());
+        d.canonicalize();
+        assert!(d.is_canonical());
+        assert_eq!(d.entries, vec![(0, 0, DeltaOp::Upsert(1.0)), (2, 1, DeltaOp::Upsert(7.0))]);
+        // Idempotent.
+        d.canonicalize();
+        assert_eq!(d.len(), 2);
+    }
+
+    #[test]
+    fn sorted_pushes_skip_the_sort() {
+        let mut d = CooDelta::new(4, 4);
+        d.upsert(0, 1, 1.0);
+        d.upsert(1, 0, 2.0);
+        d.upsert(1, 2, 3.0);
+        assert!(d.is_canonical());
+    }
+
+    #[test]
+    fn symmetric_helpers_mirror_edits() {
+        let mut d = CooDelta::new(5, 5);
+        d.upsert_sym(1, 3, 2.5);
+        d.upsert_sym(2, 2, -1.0); // diagonal: no mirror
+        d.delete_sym(0, 4);
+        d.canonicalize();
+        assert!(d.is_symmetric());
+        assert_eq!(d.len(), 5);
+        let mut asym = CooDelta::new(5, 5);
+        asym.upsert(0, 1, 1.0);
+        asym.canonicalize();
+        assert!(!asym.is_symmetric());
+        // A mirror with a different value is asymmetric too.
+        let mut off = CooDelta::new(5, 5);
+        off.upsert(0, 1, 1.0);
+        off.upsert(1, 0, 1.5);
+        off.canonicalize();
+        assert!(!off.is_symmetric());
+    }
+
+    #[test]
+    fn delta_apply_report_accumulates_frobenius_change() {
+        let mut m: CooMatrix = CooMatrix::new(3, 3);
+        m.push(0, 0, 3.0);
+        m.push(1, 1, 4.0);
+        let mut d = CooDelta::new(3, 3);
+        d.upsert(0, 0, 5.0); // change: (5-3)^2 = 4
+        d.delete(1, 1); // delete: 4^2 = 16
+        d.upsert(2, 2, 1.0); // insert: 1
+        d.canonicalize();
+        let rep = m.apply_delta(&d);
+        assert_eq!(rep.changed, 1);
+        assert_eq!(rep.deleted, 1);
+        assert_eq!(rep.inserted, 1);
+        assert!((rep.delta_fro_sq - 21.0).abs() < 1e-12);
+        assert!((rep.delta_fro() - 21.0f64.sqrt()).abs() < 1e-12);
+        assert_eq!(rep.effective(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn out_of_bounds_edit_panics() {
+        let mut d = CooDelta::new(2, 2);
+        d.upsert(2, 0, 1.0);
+    }
+}

@@ -2,10 +2,32 @@
 //! SuiteSparse collection the paper evaluates on (Table II). Supports the
 //! `matrix coordinate real|integer|pattern general|symmetric` subset, which
 //! covers every graph in the paper's suite.
+//!
+//! Duplicate coordinates are handled by an explicit [`DuplicatePolicy`]:
+//! the default reader **accumulates** them (sums values, the assembled-
+//! matrix convention scipy and SuiteSparse use), so the returned COO is
+//! always canonical — sorted, one entry per coordinate. Keeping
+//! duplicates verbatim (the old behaviour) silently inflated `nnz`,
+//! double-counted the Frobenius norm, and defeated `is_symmetric` and the
+//! registry's content-hash dedup downstream.
 
 use crate::sparse::CooMatrix;
+use std::collections::HashSet;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
+
+/// What to do with repeated `(row, col)` coordinates in a coordinate file
+/// (including a symmetric file that lists both triangles of one edge —
+/// the mirror expansion makes those duplicates too).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum DuplicatePolicy {
+    /// Sum duplicate values (pattern entries sum their implicit 1.0s) and
+    /// return a canonical matrix. The default.
+    Accumulate,
+    /// Fail with a parse error naming the first duplicated line — strict
+    /// validation for pipelines that treat duplicates as data corruption.
+    Reject,
+}
 
 /// Errors from MatrixMarket parsing.
 #[derive(Debug, thiserror::Error)]
@@ -27,9 +49,17 @@ fn perr<T>(line: usize, msg: impl Into<String>) -> Result<T, MmioError> {
     Err(MmioError::Parse { line, msg: msg.into() })
 }
 
-/// Read a MatrixMarket coordinate file into COO. `symmetric` files are
-/// expanded to full storage (both triangles).
+/// Read a MatrixMarket coordinate file into COO with the default
+/// [`DuplicatePolicy::Accumulate`]: duplicates are summed and the result
+/// is canonical. `symmetric` files are expanded to full storage (both
+/// triangles).
 pub fn read_matrix_market(path: impl AsRef<Path>) -> Result<CooMatrix, MmioError> {
+    read_matrix_market_with(path, DuplicatePolicy::Accumulate)
+}
+
+/// Read a MatrixMarket coordinate file into COO under an explicit
+/// [`DuplicatePolicy`]. See [`read_matrix_market`].
+pub fn read_matrix_market_with(path: impl AsRef<Path>, dup: DuplicatePolicy) -> Result<CooMatrix, MmioError> {
     let f = std::fs::File::open(path)?;
     let mut lines = BufReader::new(f).lines();
     // Header
@@ -78,6 +108,10 @@ pub fn read_matrix_market(path: impl AsRef<Path>) -> Result<CooMatrix, MmioError
     coo.cols.reserve(nnz);
     coo.vals.reserve(nnz);
     let mut seen = 0usize;
+    // Reject mode tracks every stored coordinate (file entries plus their
+    // symmetric mirrors), so a file listing both triangles of one edge is
+    // caught as the duplicate it becomes after expansion.
+    let mut occupied: HashSet<(u32, u32)> = HashSet::new();
     for l in lines {
         let l = l?;
         lineno += 1;
@@ -106,6 +140,17 @@ pub fn read_matrix_market(path: impl AsRef<Path>) -> Result<CooMatrix, MmioError
                 _ => return perr(lineno, "bad value"),
             }
         };
+        if dup == DuplicatePolicy::Reject {
+            let mut coords = vec![((r - 1) as u32, (c - 1) as u32)];
+            if symmetry == "symmetric" && r != c {
+                coords.push(((c - 1) as u32, (r - 1) as u32));
+            }
+            for rc in coords {
+                if !occupied.insert(rc) {
+                    return perr(lineno, format!("duplicate entry ({r},{c})"));
+                }
+            }
+        }
         coo.push(r - 1, c - 1, v);
         if symmetry == "symmetric" && r != c {
             coo.push(c - 1, r - 1, v);
@@ -115,6 +160,9 @@ pub fn read_matrix_market(path: impl AsRef<Path>) -> Result<CooMatrix, MmioError
     if seen != nnz {
         return perr(lineno, format!("expected {nnz} entries, found {seen}"));
     }
+    // Accumulate duplicates and return canonical storage: sorted, one
+    // entry per coordinate, duplicate values summed.
+    coo.canonicalize();
     Ok(coo)
 }
 
@@ -185,6 +233,84 @@ mod tests {
         let m = read_matrix_market(&p).unwrap();
         assert_eq!(m.nnz(), 1);
         assert_eq!(m.vals[0], 3.0);
+    }
+
+    #[test]
+    fn duplicate_general_entries_accumulate() {
+        let p = tmpfile("dupgen.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real general\n3 3 3\n1 2 1.5\n1 2 2.5\n3 3 1.0\n",
+        )
+        .unwrap();
+        let m = read_matrix_market(&p).unwrap();
+        // nnz is the *stored* count, not the file's inflated entry count.
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.rows, vec![0, 2]);
+        assert_eq!(m.cols, vec![1, 2]);
+        assert_eq!(m.vals, vec![4.0, 1.0]);
+        // Strict mode refuses the same file, naming the duplicated line.
+        assert!(matches!(
+            read_matrix_market_with(&p, DuplicatePolicy::Reject),
+            Err(MmioError::Parse { line: 4, .. })
+        ));
+    }
+
+    #[test]
+    fn symmetric_file_listing_both_triangles_stays_symmetric() {
+        // Non-conforming but seen in the wild: a `symmetric` file carrying
+        // both (2,1) and (1,2) of the same edge. Mirror expansion makes
+        // four entries; accumulation folds them to one per triangle with
+        // the summed value — and the result is still symmetric, so the
+        // downstream symmetry check and content-hash dedup behave.
+        let p = tmpfile("dupsym.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real symmetric\n3 3 3\n1 1 5.0\n2 1 2.0\n1 2 2.0\n",
+        )
+        .unwrap();
+        let m = read_matrix_market(&p).unwrap();
+        assert_eq!(m.nnz(), 3); // (0,0), (0,1), (1,0)
+        assert!(m.is_symmetric(0.0));
+        let off: Vec<f32> =
+            (0..m.nnz()).filter(|&i| m.rows[i] != m.cols[i]).map(|i| m.vals[i]).collect();
+        assert_eq!(off, vec![4.0, 4.0], "both triangles of the duplicated edge sum");
+        assert!(matches!(
+            read_matrix_market_with(&p, DuplicatePolicy::Reject),
+            Err(MmioError::Parse { line: 5, .. })
+        ));
+    }
+
+    #[test]
+    fn pattern_duplicates_sum_their_implicit_ones() {
+        let p = tmpfile("duppat.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate pattern general\n2 2 3\n1 2 \n1 2\n2 1\n",
+        )
+        .unwrap();
+        let m = read_matrix_market(&p).unwrap();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.vals, vec![2.0, 1.0], "duplicate pattern entry counts twice");
+        assert!(read_matrix_market_with(&p, DuplicatePolicy::Reject).is_err());
+    }
+
+    #[test]
+    fn clean_files_pass_reject_mode_and_stay_canonical() {
+        let p = tmpfile("clean.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real symmetric\n3 3 2\n1 1 5.0\n3 1 2.0\n",
+        )
+        .unwrap();
+        let strict = read_matrix_market_with(&p, DuplicatePolicy::Reject).unwrap();
+        let lax = read_matrix_market(&p).unwrap();
+        assert_eq!(strict, lax);
+        // Canonical order: sorted by (row, col).
+        let coords: Vec<(u32, u32)> = strict.rows.iter().zip(&strict.cols).map(|(&r, &c)| (r, c)).collect();
+        let mut sorted = coords.clone();
+        sorted.sort_unstable();
+        assert_eq!(coords, sorted);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 
 mod coo;
 mod csr;
+pub(crate) mod delta;
 mod mmio;
 mod norm;
 mod packet;
@@ -16,8 +17,9 @@ mod sharded;
 
 pub use coo::CooMatrix;
 pub use csr::CsrMatrix;
-pub use mmio::{read_matrix_market, write_matrix_market, MmioError};
-pub use norm::{frobenius_norm, normalize_frobenius};
+pub use delta::{CooDelta, DeltaApply, DeltaOp};
+pub use mmio::{read_matrix_market, read_matrix_market_with, write_matrix_market, DuplicatePolicy, MmioError};
+pub use norm::{frobenius_norm, normalize_frobenius, scale_value, ONE_BELOW};
 pub use packet::{CooPacket, PacketStream, PACKET_BITS, PACKET_MAX_NNZ, PACKET_NNZ};
 pub use partition::{imbalance, partition_rows_balanced, PartitionPolicy, RowPartition};
-pub use sharded::ShardedSpmv;
+pub use sharded::{ShardRebuild, ShardedSpmv};

@@ -5,8 +5,20 @@
 //! `(-1, 1)`. Eigencomponents are invariant to constant scaling (the
 //! eigenvalues simply scale by `1/||M||_F`), and the bounded range is what
 //! licenses Q1.31 fixed-point arithmetic on the device path.
+//!
+//! The interval is **open**: a single-entry matrix (or one whose norm is
+//! dominated by a single entry) has `|v| / ||M||_F` rounding to exactly
+//! `1.0` in f32, which the fixed-point storage formats cannot represent
+//! (`Q1.31` tops out at `1 - 2^-31`). [`scale_value`] therefore computes
+//! the quotient in f64 and clamps the result to the largest f32 strictly
+//! below 1.0 — every consumer of normalized matrices may rely on the
+//! post-condition `all(|v| < 1.0)`.
 
 use crate::sparse::CooMatrix;
+
+/// Largest f32 strictly below 1.0 (`1 - 2^-24`): the boundary value of the
+/// open normalization interval.
+pub const ONE_BELOW: f32 = f32::from_bits(0x3F7F_FFFF);
 
 /// `||M||_F = sqrt(sum of squared entries)`, accumulated in f64 to avoid
 /// cancellation on large nnz.
@@ -14,18 +26,33 @@ pub fn frobenius_norm(m: &CooMatrix) -> f64 {
     m.vals.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
 }
 
+/// One normalized value: `v * inv` computed in f64, rounded to f32, and
+/// clamped into the **open** interval `(-1, 1)` (a dominant entry divided
+/// by the norm can round to exactly `±1.0` in f32, violating the
+/// invariant the Q formats rely on). `inv` is `1 / ||M||_F`.
+///
+/// This is the single scaling kernel shared by [`normalize_frobenius`] and
+/// the registry's build-time normalization, so the in-place and deferred
+/// paths produce bitwise-identical values.
+#[inline]
+pub fn scale_value(v: f32, inv: f64) -> f32 {
+    let scaled = (v as f64 * inv) as f32;
+    scaled.clamp(-ONE_BELOW, ONE_BELOW)
+}
+
 /// Scale `M` by `1 / ||M||_F` in place; returns the norm used so callers can
 /// rescale eigenvalues back (`lambda_M = lambda_normalized * norm`).
 ///
-/// A zero matrix is returned unchanged with norm 1.0.
+/// Post-condition: every stored value satisfies `|v| < 1.0` exactly (see
+/// [`scale_value`]). A zero matrix is returned unchanged with norm 1.0.
 pub fn normalize_frobenius(m: &mut CooMatrix) -> f64 {
     let norm = frobenius_norm(m);
     if norm == 0.0 {
         return 1.0;
     }
-    let inv = (1.0 / norm) as f32;
+    let inv = 1.0 / norm;
     for v in &mut m.vals {
-        *v *= inv;
+        *v = scale_value(*v, inv);
     }
     norm
 }
@@ -33,6 +60,7 @@ pub fn normalize_frobenius(m: &mut CooMatrix) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fixed::{Dataword, Precision};
 
     #[test]
     fn norm_of_identity() {
@@ -73,5 +101,70 @@ mod tests {
     fn zero_matrix_untouched() {
         let mut m = CooMatrix::new(2, 2);
         assert_eq!(normalize_frobenius(&mut m), 1.0);
+    }
+
+    #[test]
+    fn one_below_is_the_open_boundary() {
+        assert!(ONE_BELOW < 1.0);
+        // The next representable f32 above ONE_BELOW is exactly 1.0.
+        assert_eq!(f32::from_bits(ONE_BELOW.to_bits() + 1), 1.0);
+    }
+
+    /// Regression for the boundary bug: a 1x1 matrix normalizes its single
+    /// entry to |v|/|v| which used to round to exactly 1.0 in f32,
+    /// violating the open-interval invariant.
+    #[test]
+    fn single_entry_matrix_stays_strictly_inside_the_open_interval() {
+        for &val in &[42.0f32, -42.0, 1.0, 1e-20, 3.4e38] {
+            let mut m = CooMatrix::new(1, 1);
+            m.push(0, 0, val);
+            let norm = normalize_frobenius(&mut m);
+            assert!(m.vals[0].abs() < 1.0, "val={val}: normalized {} must be < 1", m.vals[0]);
+            assert_eq!(m.vals[0].abs(), ONE_BELOW, "val={val}");
+            // Rescaling still recovers the original to f32 accuracy.
+            assert!(((m.vals[0] as f64 * norm - val as f64) / val as f64).abs() < 1e-6, "val={val}");
+            // Every storage format can hold the value without hitting its
+            // saturation boundary semantics (round-trip stays < 1).
+            for p in Precision::ALL {
+                let q = crate::with_precision!(p, V => V::from_f32(m.vals[0]).to_f32());
+                assert!(q.abs() < 1.0, "{}: {q}", p.name());
+            }
+        }
+    }
+
+    /// A power-law-style matrix dominated by one huge entry: the dominant
+    /// value normalizes to just under 1.0, never to 1.0, in all formats.
+    #[test]
+    fn dominated_matrix_keeps_all_precisions_strictly_bounded() {
+        let n = 64;
+        let mut m = CooMatrix::new(n, n);
+        // One entry carries (almost) the whole norm; the tail is tiny.
+        m.push(0, 0, 1e12);
+        for i in 1..n {
+            m.push(i, i, 1e-6);
+        }
+        normalize_frobenius(&mut m);
+        assert!(m.vals.iter().all(|v| v.abs() < 1.0), "all normalized entries in (-1,1)");
+        assert_eq!(m.vals[0], ONE_BELOW, "dominant entry clamps to the open boundary");
+        for p in Precision::ALL {
+            for &v in &m.vals {
+                let q = crate::with_precision!(p, V => V::from_f32(v).to_f32());
+                assert!(q.abs() < 1.0, "{}: {v} -> {q}", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn scale_value_matches_in_place_normalization_bitwise() {
+        let mut m = CooMatrix::new(3, 3);
+        m.push(0, 1, 0.125);
+        m.push(1, 0, 0.125);
+        m.push(2, 2, -7.75);
+        let orig = m.vals.clone();
+        let norm = normalize_frobenius(&mut m);
+        let inv = 1.0 / norm;
+        for (o, n) in orig.iter().zip(&m.vals) {
+            assert_eq!(scale_value(*o, inv).to_bits(), n.to_bits());
+        }
     }
 }
