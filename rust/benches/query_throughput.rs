@@ -1,0 +1,200 @@
+//! Streaming-query throughput on the resident-matrix datapath: Top-K SpMV
+//! and PPR jobs/s plus latency percentiles (p50/p99 of queued + execute
+//! time per ticket), under a pure query load and under a mixed eigen+query
+//! trace sharing one queue and one engine.
+//!
+//! Internal correctness gates (the bench aborts rather than report numbers
+//! over wrong answers): a 1-replica and an N-replica service must answer
+//! the same query stream **bitwise identically**, every job must succeed,
+//! and M PPR jobs against one resident matrix must trigger exactly one
+//! column-sum build.
+//!
+//! Writes JSONL rows (suite `query_throughput`) to `$TOPK_BENCH_JSON`
+//! (CI: `BENCH_query.json`). Knobs: `TOPK_QUERY_N` (matrix rows, default
+//! 4096), `TOPK_QUERY_JOBS` (queries per section, default 64),
+//! `TOPK_QUERY_REPLICAS` (workers, default 4), `TOPK_QUERY_K` (top-k,
+//! default 16).
+
+use std::time::Instant;
+use topk_eigen::bench::BenchSuite;
+use topk_eigen::coordinator::service::EigenService;
+use topk_eigen::coordinator::SolveOptions;
+use topk_eigen::graphs;
+use topk_eigen::sparse::{CooMatrix, PprOptions, TopKEntry};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Deterministic query vector in [-0.5, 0.5) — splitmix64 per element.
+fn query_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut state = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(1);
+    (0..n)
+        .map(|_| {
+            state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            let mut z = state;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            z ^= z >> 31;
+            (z >> 40) as f32 / (1u64 << 24) as f32 - 0.5
+        })
+        .collect()
+}
+
+/// `p`-th percentile (0..=1) of an unsorted latency sample, in seconds.
+fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.total_cmp(b));
+    s[((s.len() as f64 - 1.0) * p).round() as usize]
+}
+
+fn main() {
+    let n = env_usize("TOPK_QUERY_N", 1 << 12);
+    let jobs = env_usize("TOPK_QUERY_JOBS", 64);
+    let replicas = env_usize("TOPK_QUERY_REPLICAS", 4);
+    let k = env_usize("TOPK_QUERY_K", 16);
+    let matrix: CooMatrix = graphs::rmat(n, 8 * n, 0.57, 0.19, 0.19, 4242);
+
+    let mut suite = BenchSuite::new(
+        "query_throughput",
+        &format!("streaming queries @ n={n} nnz={} jobs={jobs} replicas={replicas} k={k}", matrix.nnz()),
+    );
+
+    // ---- Gate: 1 vs N replicas answer bitwise identically ---------------
+    {
+        let checked = 4usize;
+        let answers: Vec<Vec<Vec<TopKEntry>>> = [1usize, replicas.max(2)]
+            .iter()
+            .map(|&r| {
+                let svc = EigenService::start(r);
+                let handle = svc.register(matrix.clone()).expect("register");
+                let tickets: Vec<_> = (0..checked as u64)
+                    .map(|q| svc.submit_query(handle, query_vec(n, q), k, SolveOptions::default()).1)
+                    .collect();
+                let out = tickets
+                    .into_iter()
+                    .map(|t| t.wait().outcome.expect("query failed").entries)
+                    .collect();
+                svc.shutdown();
+                out
+            })
+            .collect();
+        assert_eq!(answers[0], answers[1], "1 vs {} replicas must answer bitwise identically", replicas.max(2));
+        suite.report("replica_equivalence", &[("replicas", replicas.max(2) as f64), ("checked", checked as f64)]);
+    }
+
+    // ---- Pure Top-K query load ------------------------------------------
+    {
+        let svc = EigenService::start(replicas);
+        let handle = svc.register(matrix.clone()).expect("register");
+        let t0 = Instant::now();
+        let tickets: Vec<_> = (0..jobs as u64)
+            .map(|q| svc.submit_query(handle, query_vec(n, q), k, SolveOptions::default()).1)
+            .collect();
+        let mut lat = Vec::with_capacity(jobs);
+        for t in tickets {
+            let r = t.wait();
+            assert!(r.outcome.is_ok(), "query {} failed: {:?}", r.id, r.outcome.err());
+            lat.push(r.queued_s + r.query_s);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(svc.registry().stats().prepares, 1, "queries must share one engine build");
+        suite.report(
+            "query_only",
+            &[
+                ("jobs_per_s", jobs as f64 / wall),
+                ("wall_s", wall),
+                ("p50_ms", percentile(&lat, 0.50) * 1e3),
+                ("p99_ms", percentile(&lat, 0.99) * 1e3),
+            ],
+        );
+        svc.shutdown();
+    }
+
+    // ---- Pure PPR load (one colsum build amortized across jobs) ---------
+    {
+        let ppr_jobs = (jobs / 8).max(4);
+        let svc = EigenService::start(replicas);
+        let handle = svc.register(matrix.clone()).expect("register");
+        let t0 = Instant::now();
+        let tickets: Vec<_> = (0..ppr_jobs)
+            .map(|i| {
+                let ppr = PprOptions { source: (i * 131) % n, ..Default::default() };
+                svc.submit_ppr(handle, ppr, SolveOptions::default()).1
+            })
+            .collect();
+        let mut lat = Vec::with_capacity(ppr_jobs);
+        for t in tickets {
+            let r = t.wait();
+            assert!(r.outcome.is_ok(), "ppr {} failed: {:?}", r.id, r.outcome.err());
+            lat.push(r.queued_s + r.query_s);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let rstats = svc.registry().stats();
+        assert_eq!(rstats.colsum_builds, 1, "one resident matrix -> one column-sum pass: {rstats:?}");
+        suite.report(
+            "ppr_only",
+            &[
+                ("jobs_per_s", ppr_jobs as f64 / wall),
+                ("wall_s", wall),
+                ("p50_ms", percentile(&lat, 0.50) * 1e3),
+                ("p99_ms", percentile(&lat, 0.99) * 1e3),
+                ("colsum_builds", rstats.colsum_builds as f64),
+                ("colsum_hits", rstats.colsum_hits as f64),
+            ],
+        );
+        svc.shutdown();
+    }
+
+    // ---- Mixed eigen + query load on one queue --------------------------
+    // Solves and queries interleave in the same submission order a real
+    // client mix would produce; query latency percentiles here show the
+    // head-of-line cost of sharing the queue with eigensolves.
+    {
+        let solves = (jobs / 4).max(2);
+        let svc = EigenService::start(replicas);
+        let handle = svc.register(matrix.clone()).expect("register");
+        let t0 = Instant::now();
+        let mut solve_tickets = Vec::with_capacity(solves);
+        let mut query_tickets = Vec::with_capacity(jobs);
+        for i in 0..jobs.max(solves) {
+            if i < solves {
+                let opts = SolveOptions { k: if i % 2 == 0 { 8 } else { 16 }, ..Default::default() };
+                solve_tickets.push(svc.submit_handle(handle, opts).1);
+            }
+            if i < jobs {
+                query_tickets.push(svc.submit_query(handle, query_vec(n, 1000 + i as u64), k, SolveOptions::default()).1);
+            }
+        }
+        let mut lat = Vec::with_capacity(jobs);
+        for t in query_tickets {
+            let r = t.wait();
+            assert!(r.outcome.is_ok(), "mixed query {} failed: {:?}", r.id, r.outcome.err());
+            lat.push(r.queued_s + r.query_s);
+        }
+        for t in solve_tickets {
+            let r = t.wait();
+            assert!(r.outcome.is_ok(), "mixed solve {} failed: {:?}", r.id, r.outcome.err());
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = svc.stats();
+        assert_eq!(stats.queries as usize, jobs);
+        suite.report(
+            "mixed_eigen_query",
+            &[
+                ("jobs_per_s", (jobs + solves) as f64 / wall),
+                ("wall_s", wall),
+                ("solves", solves as f64),
+                ("queries", jobs as f64),
+                ("query_p50_ms", percentile(&lat, 0.50) * 1e3),
+                ("query_p99_ms", percentile(&lat, 0.99) * 1e3),
+            ],
+        );
+        svc.shutdown();
+    }
+
+    suite.finish();
+}

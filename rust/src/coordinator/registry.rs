@@ -178,6 +178,12 @@ pub struct RegistryStats {
     pub warm_kept: u64,
     /// Updates that dropped the handle's warm-start seeds.
     pub warm_dropped: u64,
+    /// PPR column-sum tables computed (one O(nnz) pass each). The
+    /// acceptance bar mirrors `prepares`: M PPR jobs against one resident
+    /// matrix leave this at exactly 1 per generation.
+    pub colsum_builds: u64,
+    /// PPR column-sum requests served from the cache.
+    pub colsum_hits: u64,
 }
 
 /// What one [`MatrixRegistry::update`] did: the new generation, the size
@@ -353,6 +359,11 @@ struct Inner {
     engines: HashMap<EngineKey, EngineSlot>,
     warm: HashMap<WarmKey, WarmEntry>,
     warm_order: VecDeque<WarmKey>,
+    /// PPR normalizer tables per `(handle, precision)`, tagged with the
+    /// generation they reflect (stale entries are overwritten on next
+    /// use). Column sums depend only on the stored value stream, so the
+    /// key needs no engine geometry.
+    colsums: HashMap<(u64, Precision), (u64, Arc<Vec<f64>>)>,
     tick: u64,
 }
 
@@ -380,6 +391,8 @@ pub struct MatrixRegistry {
     shards_reused: AtomicU64,
     warm_kept: AtomicU64,
     warm_dropped: AtomicU64,
+    colsum_builds: AtomicU64,
+    colsum_hits: AtomicU64,
 }
 
 impl Default for MatrixRegistry {
@@ -399,6 +412,7 @@ impl MatrixRegistry {
                 engines: HashMap::new(),
                 warm: HashMap::new(),
                 warm_order: VecDeque::new(),
+                colsums: HashMap::new(),
                 tick: 0,
             }),
             runtime: Mutex::new(None),
@@ -414,6 +428,8 @@ impl MatrixRegistry {
             shards_reused: AtomicU64::new(0),
             warm_kept: AtomicU64::new(0),
             warm_dropped: AtomicU64::new(0),
+            colsum_builds: AtomicU64::new(0),
+            colsum_hits: AtomicU64::new(0),
         }
     }
 
@@ -619,6 +635,7 @@ impl MatrixRegistry {
         inner.engines.retain(|k, _| k.handle != h.0);
         inner.warm.retain(|k, _| k.0 != h.0);
         inner.warm_order.retain(|k| k.0 != h.0);
+        inner.colsums.retain(|k, _| k.0 != h.0);
         true
     }
 
@@ -821,6 +838,46 @@ impl MatrixRegistry {
         }
     }
 
+    /// The PPR normalizer table for a prepared engine: per-column sums of
+    /// the **stored** (quantized, Frobenius-scaled) values in f64, cached
+    /// per `(handle, precision)` and tagged with the generation — a stream
+    /// of PPR jobs on one resident matrix pays the O(nnz) pass once per
+    /// generation, not once per job ([`RegistryStats::colsum_builds`] /
+    /// [`RegistryStats::colsum_hits`] pin this). Column sums depend only
+    /// on the stored value stream, so CU count, partition policy, and
+    /// thread count share one table. Returns `None` for opaque engines
+    /// (PJRT), which cannot expose their value stream.
+    pub fn column_sums(&self, h: MatrixHandle, prep: &PreparedMatrix) -> Option<Arc<Vec<f64>>> {
+        let key = (h.0, prep.precision());
+        let generation = prep.generation();
+        {
+            let inner = lock(&self.inner);
+            if let Some((built_gen, sums)) = inner.colsums.get(&key) {
+                if *built_gen == generation {
+                    self.colsum_hits.fetch_add(1, Ordering::SeqCst);
+                    return Some(Arc::clone(sums));
+                }
+            }
+        }
+        // Compute outside the registry lock (O(nnz)); concurrent callers
+        // may race to build the same table, in which case the last insert
+        // wins — every caller still returns sums matching its own prep's
+        // generation, never a blend.
+        let sums = crate::with_precision!(prep.precision(), V => {
+            let sharded = prep.operator().as_any()?.downcast_ref::<ShardedSpmv<V>>()?;
+            Some(Arc::new(sharded.column_sums()))
+        })?;
+        self.colsum_builds.fetch_add(1, Ordering::SeqCst);
+        let mut inner = lock(&self.inner);
+        // A job racing `unregister` still gets its table, but must not
+        // resurrect a cache entry for a dead handle (ids are never reused,
+        // so the entry would leak forever).
+        if inner.sources.contains_key(&h.0) {
+            inner.colsums.insert(key, (generation, Arc::clone(&sums)));
+        }
+        Some(sums)
+    }
+
     /// Warm-start seed for a repeated `(handle, k, precision)` query:
     /// the previous dominant Ritz vector, if the cache is enabled, has
     /// seen this query complete, and the key is not negatively cached.
@@ -896,6 +953,8 @@ impl MatrixRegistry {
             shards_reused: self.shards_reused.load(Ordering::SeqCst),
             warm_kept: self.warm_kept.load(Ordering::SeqCst),
             warm_dropped: self.warm_dropped.load(Ordering::SeqCst),
+            colsum_builds: self.colsum_builds.load(Ordering::SeqCst),
+            colsum_hits: self.colsum_hits.load(Ordering::SeqCst),
         }
     }
 }
@@ -1066,6 +1125,42 @@ mod tests {
         // Other keys are unaffected.
         reg.store_warm(h, 5, Precision::Float32, &[0.5; 64]);
         assert!(reg.warm_v1(h, 5, Precision::Float32).is_some());
+    }
+
+    #[test]
+    fn column_sums_cache_builds_once_per_generation_and_precision() {
+        let reg = MatrixRegistry::default();
+        let m = graphs::rmat(1 << 7, 8 << 7, 0.57, 0.19, 0.19, 91);
+        let h = reg.register(m.clone()).unwrap();
+        let prep = reg.prepared(h, &opts_k(2)).unwrap();
+        let a = reg.column_sums(h, &prep).unwrap();
+        let b = reg.column_sums(h, &prep).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "repeat requests share one table");
+        assert_eq!(a.len(), 1 << 7);
+        assert_eq!(reg.stats().colsum_builds, 1);
+        assert_eq!(reg.stats().colsum_hits, 1);
+        // Another precision stores different values: its own table.
+        let prep_q = reg.prepared(h, &SolveOptions { precision: Precision::FixedQ1_15, ..opts_k(2) }).unwrap();
+        let q = reg.column_sums(h, &prep_q).unwrap();
+        assert!(!Arc::ptr_eq(&a, &q));
+        assert_eq!(reg.stats().colsum_builds, 2);
+        // A generation bump invalidates: the refreshed engine rebuilds
+        // once, and the new table reflects the new values and scale.
+        reg.update(h, perturb_delta(&m, 0.02, 1.5)).unwrap();
+        let prep2 = reg.prepared(h, &opts_k(2)).unwrap();
+        let c = reg.column_sums(h, &prep2).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_ne!(a.as_ref(), c.as_ref());
+        assert_eq!(reg.stats().colsum_builds, 3);
+        // Unregister purges the handle's tables; an in-flight job holding
+        // the prep still computes its table but does not resurrect the
+        // cache entry for the dead handle.
+        assert!(reg.unregister(h));
+        let orphan = reg.column_sums(h, &prep2).unwrap();
+        assert_eq!(orphan.as_ref(), c.as_ref());
+        assert_eq!(reg.stats().colsum_builds, 4, "dead handle: recompute, no cache");
+        let _ = reg.column_sums(h, &prep2).unwrap();
+        assert_eq!(reg.stats().colsum_builds, 5, "still not cached");
     }
 
     #[test]

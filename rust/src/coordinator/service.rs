@@ -61,13 +61,40 @@
 //! saturation: submitted/completed/failed totals, live queue depth,
 //! cumulative and maximum queue wait, cumulative solve time, and core
 //! reconfigurations.
+//!
+//! ## Streaming queries on the resident matrix
+//!
+//! Two non-eigen job types run on the same datapath — the high-QPS
+//! workload the paper's data-center framing motivates (thousands of
+//! cheap queries against few resident matrices):
+//!
+//! * [`EigenService::submit_query`] — streaming **Top-K SpMV**: a dense
+//!   query vector against the resident sharded matrix; every CU shard
+//!   keeps a bounded partial max-heap and the fork/join merge yields the
+//!   global top-k `(row, score)` list ([`ShardedSpmv::top_k`]). Scores
+//!   come back in the matrix's **original value scale** (the stored
+//!   stream is Frobenius-normalized; the service rescales — an
+//!   order-preserving positive factor, so ranking is untouched).
+//! * [`EigenService::submit_ppr`] — reduced-precision **Personalized
+//!   PageRank** power iteration with dangling-mass redistribution and
+//!   L1-delta stopping ([`ShardedSpmv::ppr_with_colsums`]); the O(nnz)
+//!   column-sum normalizer is cached per generation in the registry
+//!   ([`MatrixRegistry::column_sums`]).
+//!
+//! Both are **generation-fenced** like solves (read side): a query
+//! racing [`EigenService::submit_update`] observes some complete
+//! generation, never a torn matrix, and every answer carries the
+//! generation it ran against. Results are bitwise-deterministic for any
+//! replica count. Queries run on the native sharded engine (`opts.engine`
+//! is forced to [`Engine::Native`] at submit); like updates, they occupy
+//! no Jacobi core class, so they never charge reconfigurations.
 
 use crate::coordinator::registry::{MatrixHandle, MatrixRegistry, RegistryConfig, UpdateReport};
 use crate::coordinator::scheduler::core_for_k;
-use crate::coordinator::{SolveOptions, Solution, Solver};
+use crate::coordinator::{Engine, SolveOptions, Solution, Solver};
 use crate::fpga::FpgaTimingModel;
 use crate::lanczos::LanczosWorkspace;
-use crate::sparse::{CooDelta, CooMatrix, RowPartition};
+use crate::sparse::{CooDelta, CooMatrix, PprOptions, PprResult, RowPartition, ShardedSpmv, TopKEntry};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -114,11 +141,32 @@ struct UpdateJob {
     reply: Sender<UpdateResult>,
 }
 
+/// A streaming Top-K SpMV query against a registered handle.
+struct QueryJob {
+    id: u64,
+    handle: MatrixHandle,
+    x: Vec<f32>,
+    k: usize,
+    opts: SolveOptions,
+    reply: Sender<QueryResult>,
+}
+
+/// A Personalized PageRank job against a registered handle.
+struct PprJob {
+    id: u64,
+    handle: MatrixHandle,
+    ppr: PprOptions,
+    opts: SolveOptions,
+    reply: Sender<PprJobResult>,
+}
+
 enum QueueItem {
     Single(Job),
     Batch(BatchJob),
     Handle(HandleJob),
     Update(UpdateJob),
+    Query(QueryJob),
+    Ppr(PprJob),
 }
 
 /// One queued unit plus its dispatch metadata: the Jacobi core class it
@@ -173,6 +221,86 @@ impl UpdateTicket {
     }
 }
 
+/// The answer to a Top-K SpMV query.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QueryAnswer {
+    /// The global top-k `(row index, score)` pairs, best first (ties by
+    /// lower row index), scores in the matrix's original value scale.
+    pub entries: Vec<TopKEntry>,
+    /// The matrix generation the query ran against (fenced: always a
+    /// complete generation, never a blend).
+    pub generation: u64,
+}
+
+/// Result of a Top-K SpMV query job.
+#[derive(Debug)]
+pub struct QueryResult {
+    /// Job identifier.
+    pub id: u64,
+    /// Answer or an error string.
+    pub outcome: Result<QueryAnswer, String>,
+    /// Queue wait time in seconds.
+    pub queued_s: f64,
+    /// Query wall time in seconds (sweep + merge + rescale).
+    pub query_s: f64,
+}
+
+/// Ticket for a Top-K query job; await with `wait`.
+pub struct QueryTicket {
+    rx: Receiver<QueryResult>,
+}
+
+impl QueryTicket {
+    /// Block until the query completes.
+    pub fn wait(self) -> QueryResult {
+        self.rx.recv().expect("service dropped without reply")
+    }
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<QueryResult> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// The answer to a Personalized PageRank job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PprAnswer {
+    /// Converged (or max-iters-truncated) PPR scores and iteration
+    /// telemetry. Scores need no rescaling: the random walk normalizes
+    /// columns of the stored matrix, so the Frobenius scale cancels.
+    pub ppr: PprResult,
+    /// The matrix generation the walk ran against.
+    pub generation: u64,
+}
+
+/// Result of a Personalized PageRank job.
+#[derive(Debug)]
+pub struct PprJobResult {
+    /// Job identifier.
+    pub id: u64,
+    /// Answer or an error string.
+    pub outcome: Result<PprAnswer, String>,
+    /// Queue wait time in seconds.
+    pub queued_s: f64,
+    /// PPR wall time in seconds (all iterations).
+    pub query_s: f64,
+}
+
+/// Ticket for a PPR job; await with `wait`.
+pub struct PprTicket {
+    rx: Receiver<PprJobResult>,
+}
+
+impl PprTicket {
+    /// Block until the PPR job completes.
+    pub fn wait(self) -> PprJobResult {
+        self.rx.recv().expect("service dropped without reply")
+    }
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<PprJobResult> {
+        self.rx.try_recv().ok()
+    }
+}
+
 /// Snapshot of the service's queue/latency counters.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct ServiceStats {
@@ -199,6 +327,10 @@ pub struct ServiceStats {
     pub reconfigs: u64,
     /// Delta-update jobs completed (also counted in `completed`).
     pub updates: u64,
+    /// Top-K SpMV query jobs completed (also counted in `completed`).
+    pub queries: u64,
+    /// Personalized PageRank jobs completed (also counted in `completed`).
+    pub pprs: u64,
 }
 
 /// Internal atomic counters behind [`ServiceStats`]. Durations are stored
@@ -211,6 +343,8 @@ struct Counters {
     batches: AtomicU64,
     reconfigs: AtomicU64,
     updates: AtomicU64,
+    queries: AtomicU64,
+    pprs: AtomicU64,
     total_queued_us: AtomicU64,
     max_queued_us: AtomicU64,
     total_solve_us: AtomicU64,
@@ -374,6 +508,22 @@ fn estimate_solve_s(n: usize, nnz: usize, opts: &SolveOptions, k: usize) -> f64 
     model.solve_time(n, &shards, k, opts.reorth, steps).total_s()
 }
 
+/// Timing-model estimate of one Top-K query: a single matrix sweep — the
+/// `k = 1`, zero-Jacobi-step slice of the solve estimate. The queue only
+/// needs relative magnitudes; what matters is that a query is priced far
+/// below an eigensolve so [`QueuePolicy::KBatched`] backlog accounting
+/// stays sane under mixed load.
+fn estimate_query_s(n: usize, nnz: usize, opts: &SolveOptions) -> f64 {
+    estimate_solve_s(n, nnz, opts, 1)
+}
+
+/// Timing-model estimate of one PPR job: one matrix sweep per iteration,
+/// priced at the worst case (`max_iters`; early convergence only makes
+/// the estimate conservative).
+fn estimate_ppr_s(n: usize, nnz: usize, opts: &SolveOptions, max_iters: usize) -> f64 {
+    estimate_solve_s(n, nnz, opts, 1) * max_iters.max(1) as f64
+}
+
 /// The service: leader queue + solver worker replicas + shared registry.
 pub struct EigenService {
     shared: Arc<Shared>,
@@ -463,9 +613,9 @@ impl EigenService {
                 QueueItem::Single(job) => vec![core_for_k(job.opts.k)],
                 QueueItem::Handle(job) => vec![core_for_k(job.k)],
                 QueueItem::Batch(batch) => batch.ks.iter().map(|&k| core_for_k(k)).collect(),
-                // Updates run on no Jacobi core: no class change, no
-                // reconfiguration accounting.
-                QueueItem::Update(_) => Vec::new(),
+                // Updates, Top-K queries, and PPR walks run on no Jacobi
+                // core: no class change, no reconfiguration accounting.
+                QueueItem::Update(_) | QueueItem::Query(_) | QueueItem::Ppr(_) => Vec::new(),
             };
             let mut first = true;
             for &core in &member_cores {
@@ -488,6 +638,8 @@ impl EigenService {
                 QueueItem::Batch(batch) => Self::run_batch(batch, queued_s, counters),
                 QueueItem::Handle(job) => Self::run_handle(job, queued_s, counters, registry, shared, &mut ws),
                 QueueItem::Update(job) => Self::run_update(job, queued_s, counters, registry, shared),
+                QueueItem::Query(job) => Self::run_query(job, queued_s, counters, registry, shared),
+                QueueItem::Ppr(job) => Self::run_ppr(job, queued_s, counters, registry, shared),
             }
         }
     }
@@ -633,6 +785,88 @@ impl EigenService {
         let _ = reply.send(UpdateResult { id, outcome, queued_s, update_s });
     }
 
+    fn run_query(
+        job: QueryJob,
+        queued_s: f64,
+        counters: &Counters,
+        registry: &Arc<MatrixRegistry>,
+        shared: &Shared,
+    ) {
+        let t0 = std::time::Instant::now();
+        let QueryJob { id, handle, x, k, opts, reply } = job;
+        // Generation fence (read side), exactly like solves: the engine
+        // snapshot below belongs to one complete generation.
+        let fence = shared.fence(handle);
+        let _guard = fence.read().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let prep = registry.prepared(handle, &opts)?;
+            let fro = prep.frobenius_norm();
+            let generation = prep.generation();
+            crate::with_precision!(opts.precision, V => {
+                let engine = prep
+                    .operator()
+                    .as_any()
+                    .and_then(|a| a.downcast_ref::<ShardedSpmv<V>>())
+                    .ok_or_else(|| anyhow::anyhow!("query needs the native sharded engine"))?;
+                let mut entries = engine.top_k(&x, k);
+                // Stored values are Frobenius-normalized; return scores in
+                // the original value scale. The factor is positive, so the
+                // ranking (and its determinism) is untouched.
+                for e in &mut entries {
+                    e.score = (f64::from(e.score) * fro) as f32;
+                }
+                Ok(QueryAnswer { entries, generation })
+            })
+        }));
+        let outcome: Result<QueryAnswer, String> = match outcome {
+            Ok(Ok(ans)) => Ok(ans),
+            Ok(Err(e)) => Err(format!("{e}")),
+            Err(_) => Err("query panicked".to_string()),
+        };
+        let query_s = t0.elapsed().as_secs_f64();
+        counters.queries.fetch_add(1, Ordering::SeqCst);
+        counters.record_result(outcome.is_ok(), queued_s, query_s);
+        let _ = reply.send(QueryResult { id, outcome, queued_s, query_s });
+    }
+
+    fn run_ppr(
+        job: PprJob,
+        queued_s: f64,
+        counters: &Counters,
+        registry: &Arc<MatrixRegistry>,
+        shared: &Shared,
+    ) {
+        let t0 = std::time::Instant::now();
+        let PprJob { id, handle, ppr, opts, reply } = job;
+        let fence = shared.fence(handle);
+        let _guard = fence.read().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let prep = registry.prepared(handle, &opts)?;
+            let generation = prep.generation();
+            // Shared O(nnz) normalizer pass, once per generation.
+            let colsums = registry
+                .column_sums(handle, &prep)
+                .ok_or_else(|| anyhow::anyhow!("ppr needs the native sharded engine"))?;
+            crate::with_precision!(opts.precision, V => {
+                let engine = prep
+                    .operator()
+                    .as_any()
+                    .and_then(|a| a.downcast_ref::<ShardedSpmv<V>>())
+                    .ok_or_else(|| anyhow::anyhow!("ppr needs the native sharded engine"))?;
+                Ok(PprAnswer { ppr: engine.ppr_with_colsums(&ppr, &colsums), generation })
+            })
+        }));
+        let outcome: Result<PprAnswer, String> = match outcome {
+            Ok(Ok(ans)) => Ok(ans),
+            Ok(Err(e)) => Err(format!("{e}")),
+            Err(_) => Err("ppr panicked".to_string()),
+        };
+        let query_s = t0.elapsed().as_secs_f64();
+        counters.pprs.fetch_add(1, Ordering::SeqCst);
+        counters.record_result(outcome.is_ok(), queued_s, query_s);
+        let _ = reply.send(PprJobResult { id, outcome, queued_s, query_s });
+    }
+
     /// An immediately-failed ticket for a job rejected at submit time: the
     /// error [`JobResult`] is already in the channel, no worker is
     /// involved, and the counters record a completed+failed job.
@@ -641,6 +875,24 @@ impl EigenService {
         self.counters.record_result(false, 0.0, 0.0);
         let _ = tx.send(JobResult { id, outcome: Err(msg), queued_s: 0.0, solve_s: 0.0 });
         Ticket { rx }
+    }
+
+    /// [`EigenService::rejected`], for the Top-K query path.
+    fn rejected_query(&self, id: u64, msg: String) -> QueryTicket {
+        let (tx, rx) = channel();
+        self.counters.queries.fetch_add(1, Ordering::SeqCst);
+        self.counters.record_result(false, 0.0, 0.0);
+        let _ = tx.send(QueryResult { id, outcome: Err(msg), queued_s: 0.0, query_s: 0.0 });
+        QueryTicket { rx }
+    }
+
+    /// [`EigenService::rejected`], for the PPR path.
+    fn rejected_ppr(&self, id: u64, msg: String) -> PprTicket {
+        let (tx, rx) = channel();
+        self.counters.pprs.fetch_add(1, Ordering::SeqCst);
+        self.counters.record_result(false, 0.0, 0.0);
+        let _ = tx.send(PprJobResult { id, outcome: Err(msg), queued_s: 0.0, query_s: 0.0 });
+        PprTicket { rx }
     }
 
     fn enqueue(&self, item: QueueItem, core: usize, est_s: f64) {
@@ -778,6 +1030,74 @@ impl EigenService {
         (id, UpdateTicket { rx })
     }
 
+    /// Enqueue a streaming Top-K SpMV query against a registered handle:
+    /// dense query vector `x` (length `n`) times the resident matrix,
+    /// answering the global top-`k` `(row, score)` pairs, best first.
+    /// `k > n` clamps to `n`. The answer is **bitwise-deterministic** —
+    /// identical to the full-SpMV + stable-sort oracle — for any CU
+    /// count, partition policy, or replica count, and carries the
+    /// generation it ran against ([`QueryAnswer::generation`]).
+    ///
+    /// `opts` selects the storage format / engine geometry exactly as for
+    /// solves (`opts.k` is ignored; `k` is the explicit argument).
+    /// `opts.engine` is forced to [`Engine::Native`]: the heap kernel
+    /// lives in the typed sharded datapath, and an opaque PJRT engine
+    /// cannot stream it.
+    pub fn submit_query(&self, handle: MatrixHandle, x: Vec<f32>, k: usize, opts: SolveOptions) -> (u64, QueryTicket) {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.counters.submitted.fetch_add(1, Ordering::SeqCst);
+        let Some((n, nnz)) = self.registry.dims(handle) else {
+            return (id, self.rejected_query(id, format!("unknown matrix handle {}", handle.id())));
+        };
+        if x.len() != n {
+            return (id, self.rejected_query(id, format!("query vector length {} does not match n={n}", x.len())));
+        }
+        if k < 1 {
+            return (id, self.rejected_query(id, format!("bad k: {k} (queries need k >= 1)")));
+        }
+        let opts = SolveOptions { engine: Engine::Native, ..opts };
+        let est = estimate_query_s(n, nnz, &opts);
+        let (tx, rx) = channel();
+        let job = QueryJob { id, handle, x, k, opts, reply: tx };
+        // Like updates: no Jacobi core class.
+        self.enqueue(QueueItem::Query(job), 0, est);
+        (id, QueryTicket { rx })
+    }
+
+    /// Enqueue a Personalized PageRank job against a registered handle:
+    /// damped power iteration `x' = alpha * P x + (1 - alpha) * e_s` over
+    /// the resident matrix's stored (reduced-precision) values, with
+    /// dangling-mass redistribution and L1-delta stopping
+    /// ([`PprOptions`]). The converged scores, iteration count, and
+    /// final delta come back in [`PprAnswer`] with the generation the
+    /// walk ran against. Deterministic for any CU/replica count.
+    ///
+    /// Symmetric graphs work as registered; for a *directed* graph,
+    /// register the transpose (the kernel walks `M z` with columns
+    /// normalized, i.e. `M[i][j]` = weight of edge `j -> i`).
+    pub fn submit_ppr(&self, handle: MatrixHandle, ppr: PprOptions, opts: SolveOptions) -> (u64, PprTicket) {
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.counters.submitted.fetch_add(1, Ordering::SeqCst);
+        let Some((n, nnz)) = self.registry.dims(handle) else {
+            return (id, self.rejected_ppr(id, format!("unknown matrix handle {}", handle.id())));
+        };
+        if ppr.source >= n {
+            return (id, self.rejected_ppr(id, format!("ppr source {} out of range for n={n}", ppr.source)));
+        }
+        if !(ppr.alpha > 0.0 && ppr.alpha < 1.0) {
+            return (id, self.rejected_ppr(id, format!("ppr alpha {} not in (0, 1)", ppr.alpha)));
+        }
+        if ppr.max_iters < 1 {
+            return (id, self.rejected_ppr(id, "ppr needs max_iters >= 1".to_string()));
+        }
+        let opts = SolveOptions { engine: Engine::Native, ..opts };
+        let est = estimate_ppr_s(n, nnz, &opts, ppr.max_iters);
+        let (tx, rx) = channel();
+        let job = PprJob { id, handle, ppr, opts, reply: tx };
+        self.enqueue(QueueItem::Ppr(job), 0, est);
+        (id, PprTicket { rx })
+    }
+
     /// Enqueue one batch of same-matrix jobs, one per entry of `ks`.
     ///
     /// The batch is scheduled as a unit on one worker; the prepare phase
@@ -865,6 +1185,8 @@ impl EigenService {
             total_solve_s: self.counters.total_solve_us.load(Ordering::SeqCst) as f64 / 1e6,
             reconfigs: self.counters.reconfigs.load(Ordering::SeqCst),
             updates: self.counters.updates.load(Ordering::SeqCst),
+            queries: self.counters.queries.load(Ordering::SeqCst),
+            pprs: self.counters.pprs.load(Ordering::SeqCst),
         }
     }
 
@@ -1263,6 +1585,158 @@ mod tests {
         // Both are finite-K Ritz estimates of the same dominant pair.
         assert!((second.eigenvalues[0] - first.eigenvalues[0]).abs() < 2e-2 * first.eigenvalues[0].abs().max(1.0));
         assert_eq!(svc.registry().stats().warm_hits, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn query_jobs_match_the_serial_oracle_in_original_scale() {
+        let svc = EigenService::start(2);
+        let n = 1usize << 8;
+        let m = graphs::rmat(n, 8 * n, 0.57, 0.19, 0.19, 201);
+        let h = svc.register(m.clone()).unwrap();
+        let x: Vec<f32> = (0..n).map(|i| ((i * 37 + 11) % 97) as f32 / 97.0 - 0.5).collect();
+        // Oracle: normalized stored values, serial full SpMV + stable
+        // sort, scores rescaled back to the original value scale.
+        let mut canon = m.clone();
+        canon.canonicalize();
+        let fro = crate::sparse::frobenius_norm(&canon);
+        let csr = crate::coordinator::typed_csr_scaled::<f32>(&canon, Some(1.0 / fro));
+        let mut expect = crate::sparse::top_k_serial(&csr, &x, 10);
+        for e in &mut expect {
+            e.score = (f64::from(e.score) * fro) as f32;
+        }
+        // Repeats across 2 replicas: bitwise-identical answers, one engine.
+        let tickets: Vec<_> =
+            (0..4).map(|_| svc.submit_query(h, x.clone(), 10, SolveOptions::default()).1).collect();
+        for t in tickets {
+            let r = t.wait();
+            let ans = r.outcome.expect("query failed");
+            assert_eq!(ans.generation, 1);
+            assert_eq!(ans.entries, expect);
+            assert!(r.query_s >= 0.0);
+        }
+        // k > n clamps to n (every row ranked).
+        let (_, t) = svc.submit_query(h, x.clone(), n + 99, SolveOptions::default());
+        assert_eq!(t.wait().outcome.unwrap().entries.len(), n);
+        let stats = svc.stats();
+        assert_eq!(stats.queries, 5);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(svc.registry().stats().prepares, 1, "queries share one engine build");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn ppr_jobs_match_the_serial_oracle_and_share_one_colsum_pass() {
+        let svc = EigenService::start(2);
+        let m = graphs::mesh2d(12, 12, 0.9, 0.02, 17);
+        let h = svc.register(m.clone()).unwrap();
+        let popts = crate::sparse::PprOptions { source: 5, ..Default::default() };
+        // Oracle: serial PPR over the same stored values (bitwise —
+        // engine and oracle share one recurrence).
+        let mut canon = m.clone();
+        canon.canonicalize();
+        let fro = crate::sparse::frobenius_norm(&canon);
+        let csr = crate::coordinator::typed_csr_scaled::<f32>(&canon, Some(1.0 / fro));
+        let expect = crate::sparse::ppr_serial(&csr, &popts);
+        assert!(expect.converged);
+
+        let tickets: Vec<_> =
+            (0..3).map(|_| svc.submit_ppr(h, popts.clone(), SolveOptions::default()).1).collect();
+        for t in tickets {
+            let ans = t.wait().outcome.expect("ppr failed");
+            assert_eq!(ans.generation, 1);
+            assert_eq!(ans.ppr, expect);
+        }
+        let rstats = svc.registry().stats();
+        assert_eq!(rstats.colsum_builds, 1, "{rstats:?}");
+        assert_eq!(rstats.colsum_hits, 2, "{rstats:?}");
+        assert_eq!(svc.stats().pprs, 3);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn bad_queries_and_pprs_are_rejected_at_submit_time() {
+        let svc = EigenService::start(1);
+        let m = graphs::mesh2d(6, 6, 0.9, 0.02, 23); // n = 36
+        let h = svc.register(m).unwrap();
+        let reg = MatrixRegistry::default();
+        let foreign = reg.register(graphs::mesh2d(6, 6, 0.9, 0.02, 24)).unwrap();
+        let (_, t) = svc.submit_query(foreign, vec![0.0; 36], 4, SolveOptions::default());
+        assert!(t.wait().outcome.unwrap_err().contains("unknown matrix handle"));
+        let (_, t) = svc.submit_query(h, vec![1.0; 35], 4, SolveOptions::default());
+        assert!(t.wait().outcome.unwrap_err().contains("does not match"));
+        let (_, t) = svc.submit_query(h, vec![1.0; 36], 0, SolveOptions::default());
+        assert!(t.wait().outcome.unwrap_err().contains("bad k"));
+        let popts = crate::sparse::PprOptions::default();
+        let (_, t) = svc.submit_ppr(h, crate::sparse::PprOptions { source: 36, ..popts.clone() }, SolveOptions::default());
+        assert!(t.wait().outcome.unwrap_err().contains("out of range"));
+        let (_, t) = svc.submit_ppr(h, crate::sparse::PprOptions { alpha: 1.0, ..popts.clone() }, SolveOptions::default());
+        assert!(t.wait().outcome.unwrap_err().contains("alpha"));
+        let (_, t) = svc.submit_ppr(h, crate::sparse::PprOptions { max_iters: 0, ..popts }, SolveOptions::default());
+        assert!(t.wait().outcome.unwrap_err().contains("max_iters"));
+        assert_eq!(svc.queue_depth(), 0, "rejected jobs never reach the queue");
+        let stats = svc.stats();
+        assert_eq!(stats.failed, 6);
+        assert_eq!(stats.queries, 3);
+        assert_eq!(stats.pprs, 3);
+        // The worker still serves a valid query afterwards.
+        let (_, t) = svc.submit_query(h, vec![1.0; 36], 3, SolveOptions::default());
+        assert!(t.wait().outcome.is_ok());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn fenced_queries_racing_updates_answer_for_a_complete_generation() {
+        // Paused FIFO single replica: solve ordering is deterministic, so
+        // the query before the update must answer generation 1 and the
+        // query after it generation 2 — each bitwise equal to the oracle
+        // of its own generation.
+        let svc = EigenService::with_config(ServiceConfig { replicas: 1, paused: true, ..Default::default() });
+        let m = graphs::rmat(1 << 7, 8 << 7, 0.57, 0.19, 0.19, 211);
+        let h = svc.register(m.clone()).unwrap();
+        let n = 1usize << 7;
+        let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+
+        let mut canon = m.clone();
+        canon.canonicalize();
+        let mut delta = crate::sparse::CooDelta::new(n, n);
+        for i in 0..canon.nnz() {
+            let (r, c) = (canon.rows[i] as usize, canon.cols[i] as usize);
+            if r <= c && c < 12 {
+                delta.upsert_sym(r, c, canon.vals[i] * 2.5);
+            }
+        }
+        assert!(!delta.is_empty());
+
+        let oracle = |coo: &CooMatrix| {
+            let fro = crate::sparse::frobenius_norm(coo);
+            let csr = crate::coordinator::typed_csr_scaled::<f32>(coo, Some(1.0 / fro));
+            let mut top = crate::sparse::top_k_serial(&csr, &x, 8);
+            for e in &mut top {
+                e.score = (f64::from(e.score) * fro) as f32;
+            }
+            top
+        };
+        let expect_g1 = oracle(&canon);
+        let mut mutated = canon.clone();
+        let mut d = delta.clone();
+        d.canonicalize();
+        mutated.apply_delta(&d);
+        let expect_g2 = oracle(&mutated);
+        assert_ne!(expect_g1, expect_g2, "the delta must move the ranking scores");
+
+        let (_, q1) = svc.submit_query(h, x.clone(), 8, SolveOptions::default());
+        let (_, tu) = svc.submit_update(h, delta);
+        let (_, q2) = svc.submit_query(h, x.clone(), 8, SolveOptions::default());
+        svc.resume();
+
+        let a1 = q1.wait().outcome.expect("pre-update query");
+        assert_eq!(a1.generation, 1);
+        assert_eq!(a1.entries, expect_g1);
+        assert!(tu.wait().outcome.is_ok());
+        let a2 = q2.wait().outcome.expect("post-update query");
+        assert_eq!(a2.generation, 2);
+        assert_eq!(a2.entries, expect_g2);
         svc.shutdown();
     }
 }

@@ -7,6 +7,10 @@
 //!   matrix once, run a mixed-K job trace through `EigenService` worker
 //!   replicas against the shared prepared engine, print service and
 //!   registry telemetry.
+//! * `query <input>` — streaming Top-K SpMV queries on the resident
+//!   matrix (dense vector x matrix, global top-k rows via per-CU heaps).
+//! * `ppr <input>` — Personalized PageRank power iteration on the
+//!   resident matrix's reduced-precision stored values.
 //! * `catalog` — print the Table II dataset catalog.
 //! * `generate <id> <out.mtx>` — materialize a synthetic twin to a file.
 //! * `model <input>` — print the FPGA timing/resource/power model estimate.
@@ -19,7 +23,9 @@ use topk_eigen::fixed::Precision;
 use topk_eigen::fpga::{FpgaTimingModel, PowerModel, SlrBudget};
 use topk_eigen::graphs;
 use topk_eigen::lanczos::ReorthPolicy;
-use topk_eigen::sparse::{partition_rows_balanced, read_matrix_market, CooDelta, CooMatrix, PartitionPolicy};
+use topk_eigen::sparse::{
+    partition_rows_balanced, read_matrix_market, CooDelta, CooMatrix, PartitionPolicy, PprOptions, TopKHeap,
+};
 use topk_eigen::util::cli::Command;
 use topk_eigen::util::timer::fmt_duration;
 
@@ -29,6 +35,8 @@ fn main() {
     let code = match args.first().map(String::as_str) {
         Some("solve") => cmd_solve(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("query") => cmd_query(&args[1..]),
+        Some("ppr") => cmd_ppr(&args[1..]),
         Some("catalog") => cmd_catalog(),
         Some("generate") => cmd_generate(&args[1..]),
         Some("model") => cmd_model(&args[1..]),
@@ -36,7 +44,7 @@ fn main() {
         _ => {
             eprintln!(
                 "topk-eigen — Top-K sparse graph eigensolver (Lanczos + systolic Jacobi)\n\n\
-                 USAGE:\n  topk-eigen <solve|serve|catalog|generate|model|artifacts> [...]\n\n\
+                 USAGE:\n  topk-eigen <solve|serve|query|ppr|catalog|generate|model|artifacts> [...]\n\n\
                  Run `topk-eigen solve --help` etc. for details."
             );
             2
@@ -220,6 +228,9 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("budget-mb", "registry engine byte budget in MiB (0 = unlimited)", Some("0"))
         .opt("updates", "delta updates interleaved with the trace (evolving-graph replay)", Some("0"))
         .opt("update-dirty", "fraction of entries each delta perturbs (e.g. 0.01 = 1%)", Some("0.01"))
+        .opt("queries", "Top-K SpMV queries interleaved per phase (mixed eigen+query load)", Some("0"))
+        .opt("query-k", "top rows per interleaved query", Some("8"))
+        .opt("pprs", "Personalized PageRank jobs interleaved per phase", Some("0"))
         .opt("adaptive", "adaptive Lanczos stop: Ritz tolerance (0 = fixed K iterations)", Some("0"))
         .flag("warm-start", "seed repeated (handle, k) queries from the previous dominant Ritz vector")
         .flag("skip-symmetry-check", "trust inputs to be symmetric (skips the O(nnz) registration check)")
@@ -251,6 +262,9 @@ fn cmd_serve(args: &[String]) -> i32 {
         };
         let budget_mb = m.parse::<usize>("budget-mb").map_err(|e| e.to_string())?;
         let updates = m.parse::<usize>("updates").map_err(|e| e.to_string())?;
+        let queries = m.parse::<usize>("queries").map_err(|e| e.to_string())?;
+        let query_k = m.parse_at_least::<usize>("query-k", 1).map_err(|e| e.to_string())?;
+        let pprs = m.parse::<usize>("pprs").map_err(|e| e.to_string())?;
         let update_dirty = m.parse::<f64>("update-dirty").map_err(|e| e.to_string())?;
         if !(0.0..=1.0).contains(&update_dirty) {
             return Err(format!("--update-dirty must be in [0, 1], got {update_dirty}"));
@@ -281,13 +295,31 @@ fn cmd_serve(args: &[String]) -> i32 {
         let mut mirror = matrix.clone();
         mirror.canonicalize();
         let handle = svc.register(matrix).map_err(|e| e.to_string())?;
+        let n = mirror.nrows;
         let mut ok = 0usize;
+        let mut query_ok = 0usize;
+        let mut ppr_ok = 0usize;
         let quiet = m.flag("quiet");
         let phases = updates + 1;
         for phase in 0..phases {
             let (lo, hi) = (jobs * phase / phases, jobs * (phase + 1) / phases);
             let tickets: Vec<_> = (lo..hi)
                 .map(|i| svc.submit_handle(handle, SolveOptions { k: ks[i % ks.len()], ..opts.clone() }))
+                .collect();
+            // Mixed offered load: the queries and PPR walks enter the same
+            // queue as the eigensolves of this phase and drain on the same
+            // replicas, generation-fenced against the phase updates.
+            let query_tickets: Vec<_> = (0..queries)
+                .map(|q| {
+                    let x = query_vector(n, (phase * queries + q) as u64 + 1);
+                    svc.submit_query(handle, x, query_k, opts.clone())
+                })
+                .collect();
+            let ppr_tickets: Vec<_> = (0..pprs)
+                .map(|p| {
+                    let popts = PprOptions { source: (phase * pprs + p * 7) % n, ..Default::default() };
+                    svc.submit_ppr(handle, popts, opts.clone())
+                })
                 .collect();
             for (id, t) in tickets {
                 let r = t.wait();
@@ -308,6 +340,45 @@ fn cmd_serve(args: &[String]) -> i32 {
                         }
                     }
                     Err(e) => println!("  job {id} FAILED: {e}"),
+                }
+            }
+            for (id, t) in query_tickets {
+                let r = t.wait();
+                match r.outcome {
+                    Ok(ans) => {
+                        query_ok += 1;
+                        if !quiet {
+                            let top = ans.entries.first();
+                            println!(
+                                "  query {id}: gen={} top1={} queued={} took={}",
+                                ans.generation,
+                                top.map_or("-".to_string(), |e| format!("(row {}, {:+.3e})", e.index, e.score)),
+                                fmt_duration(r.queued_s),
+                                fmt_duration(r.query_s),
+                            );
+                        }
+                    }
+                    Err(e) => println!("  query {id} FAILED: {e}"),
+                }
+            }
+            for (id, t) in ppr_tickets {
+                let r = t.wait();
+                match r.outcome {
+                    Ok(ans) => {
+                        ppr_ok += 1;
+                        if !quiet {
+                            println!(
+                                "  ppr {id}: gen={} iters={} delta={:.2e}{} queued={} took={}",
+                                ans.generation,
+                                ans.ppr.iterations,
+                                ans.ppr.l1_delta,
+                                if ans.ppr.converged { "" } else { " (no convergence)" },
+                                fmt_duration(r.queued_s),
+                                fmt_duration(r.query_s),
+                            );
+                        }
+                    }
+                    Err(e) => println!("  ppr {id} FAILED: {e}"),
                 }
             }
             if phase + 1 < phases {
@@ -334,6 +405,8 @@ fn cmd_serve(args: &[String]) -> i32 {
         let wall = t0.elapsed().as_secs_f64();
         let stats = svc.stats();
         let rstats = svc.registry().stats();
+        let query_total = queries * phases;
+        let ppr_total = pprs * phases;
         println!(
             "served {ok}/{jobs} jobs in {} -> {:.1} jobs/s ({} reconfigs under {})",
             fmt_duration(wall),
@@ -341,6 +414,13 @@ fn cmd_serve(args: &[String]) -> i32 {
             stats.reconfigs,
             policy.name(),
         );
+        if query_total + ppr_total > 0 {
+            println!(
+                "mixed load: queries={query_ok}/{query_total} pprs={ppr_ok}/{ppr_total} \
+                 colsum-builds={} colsum-hits={}",
+                rstats.colsum_builds, rstats.colsum_hits,
+            );
+        }
         println!(
             "registry: matrices={} engines={} prepares={} engine-hits={} dedup-hits={} evictions={} \
              resident={:.1}MiB warm-hits={}",
@@ -373,10 +453,11 @@ fn cmd_serve(args: &[String]) -> i32 {
             fmt_duration(stats.total_solve_s),
         );
         svc.shutdown();
-        if ok == jobs {
+        let failed = (jobs - ok) + (query_total - query_ok) + (ppr_total - ppr_ok);
+        if failed == 0 {
             Ok(0)
         } else {
-            Err(format!("{} of {jobs} jobs failed", jobs - ok))
+            Err(format!("{failed} of {} jobs failed", jobs + query_total + ppr_total))
         }
     };
     match run() {
@@ -405,6 +486,199 @@ fn perturbation_delta(mirror: &CooMatrix, frac: f64, round: usize) -> CooDelta {
         }
     }
     d
+}
+
+/// Deterministic dense query vector (splitmix64-driven values in
+/// [-0.5, 0.5)), so query replays reproduce bitwise across runs.
+fn query_vector(n: usize, seed: u64) -> Vec<f32> {
+    let mut state = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(1);
+    (0..n)
+        .map(|_| {
+            state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            let mut z = state;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            z ^= z >> 31;
+            (z >> 40) as f32 / (1u64 << 24) as f32 - 0.5
+        })
+        .collect()
+}
+
+fn cmd_query(args: &[String]) -> i32 {
+    let cmd = Command::new("topk-eigen query", "streaming Top-K SpMV queries against a resident matrix")
+        .positional("input", "MatrixMarket file or catalog ID[@scale]")
+        .opt("k", "top rows to return per query", Some("10"))
+        .opt("queries", "query jobs to run (distinct seeded vectors)", Some("4"))
+        .opt("replicas", "worker replicas", Some("2"))
+        .opt("seed", "seed of the first query vector", Some("1"))
+        .opt("precision", "f32|q1.31|q2.30|q1.15", Some("f32"))
+        .opt("cus", "SpMV compute units (matrix row shards)", Some("5"))
+        .opt("threads", "CU pool worker threads (0 = one per CU)", Some("0"))
+        .flag("skip-symmetry-check", "trust the input to be symmetric")
+        .flag("quiet", "print only the summary");
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let run = || -> Result<i32, String> {
+        let matrix = load_input(m.str("input").map_err(|e| e.to_string())?)?;
+        let n = matrix.nrows;
+        let k = m.parse_at_least::<usize>("k", 1).map_err(|e| e.to_string())?;
+        let queries = m.parse_at_least::<usize>("queries", 1).map_err(|e| e.to_string())?;
+        let replicas = m.parse_at_least::<usize>("replicas", 1).map_err(|e| e.to_string())?;
+        let seed = m.parse::<u64>("seed").map_err(|e| e.to_string())?;
+        let opts = SolveOptions {
+            precision: parse_precision(m.str("precision").unwrap())?,
+            cus: m.parse_at_least::<usize>("cus", 1).map_err(|e| e.to_string())?,
+            threads: m.parse::<usize>("threads").map_err(|e| e.to_string())?,
+            ..Default::default()
+        };
+        let svc = EigenService::with_config(ServiceConfig {
+            replicas,
+            registry: RegistryConfig {
+                skip_symmetry_check: m.flag("skip-symmetry-check"),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        println!(
+            "querying: n={n} nnz={} k={k} queries={queries} replicas={replicas} precision={}",
+            matrix.nnz(),
+            opts.precision.name(),
+        );
+        let handle = svc.register(matrix).map_err(|e| e.to_string())?;
+        let t0 = std::time::Instant::now();
+        let tickets: Vec<_> =
+            (0..queries).map(|q| svc.submit_query(handle, query_vector(n, seed + q as u64), k, opts.clone())).collect();
+        let mut ok = 0usize;
+        for (id, t) in tickets {
+            let r = t.wait();
+            match r.outcome {
+                Ok(ans) => {
+                    ok += 1;
+                    if !m.flag("quiet") {
+                        println!(
+                            "  query {id}: gen={} queued={} took={}",
+                            ans.generation,
+                            fmt_duration(r.queued_s),
+                            fmt_duration(r.query_s),
+                        );
+                        for e in &ans.entries {
+                            println!("    row {:>8}  score {:+.6e}", e.index, e.score);
+                        }
+                    }
+                }
+                Err(e) => println!("  query {id} FAILED: {e}"),
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!("answered {ok}/{queries} top-{k} queries in {} -> {:.1} queries/s", fmt_duration(wall), ok as f64 / wall);
+        svc.shutdown();
+        if ok == queries {
+            Ok(0)
+        } else {
+            Err(format!("{} of {queries} queries failed", queries - ok))
+        }
+    };
+    match run() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_ppr(args: &[String]) -> i32 {
+    let cmd = Command::new("topk-eigen ppr", "Personalized PageRank on the resident matrix")
+        .positional("input", "MatrixMarket file or catalog ID[@scale]")
+        .opt("source", "personalization vertex", Some("0"))
+        .opt("alpha", "damping factor in (0, 1)", Some("0.85"))
+        .opt("tol", "L1-delta convergence tolerance", Some("5e-6"))
+        .opt("max-iters", "power-iteration cap", Some("200"))
+        .opt("top", "print the N highest-ranked vertices", Some("10"))
+        .opt("precision", "f32|q1.31|q2.30|q1.15", Some("f32"))
+        .opt("cus", "SpMV compute units (matrix row shards)", Some("5"))
+        .opt("threads", "CU pool worker threads (0 = one per CU)", Some("0"))
+        .flag("skip-symmetry-check", "trust the input to be symmetric");
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let run = || -> Result<i32, String> {
+        let matrix = load_input(m.str("input").map_err(|e| e.to_string())?)?;
+        let ppr = PprOptions {
+            source: m.parse::<usize>("source").map_err(|e| e.to_string())?,
+            alpha: m.parse::<f64>("alpha").map_err(|e| e.to_string())?,
+            tol: m.parse::<f64>("tol").map_err(|e| e.to_string())?,
+            max_iters: m.parse_at_least::<usize>("max-iters", 1).map_err(|e| e.to_string())?,
+        };
+        let top = m.parse::<usize>("top").map_err(|e| e.to_string())?;
+        let opts = SolveOptions {
+            precision: parse_precision(m.str("precision").unwrap())?,
+            cus: m.parse_at_least::<usize>("cus", 1).map_err(|e| e.to_string())?,
+            threads: m.parse::<usize>("threads").map_err(|e| e.to_string())?,
+            ..Default::default()
+        };
+        let svc = EigenService::with_config(ServiceConfig {
+            replicas: 1,
+            registry: RegistryConfig {
+                skip_symmetry_check: m.flag("skip-symmetry-check"),
+                ..Default::default()
+            },
+            ..Default::default()
+        });
+        println!(
+            "ppr: n={} nnz={} source={} alpha={} tol={:.1e} precision={}",
+            matrix.nrows,
+            matrix.nnz(),
+            ppr.source,
+            ppr.alpha,
+            ppr.tol,
+            opts.precision.name(),
+        );
+        let handle = svc.register(matrix).map_err(|e| e.to_string())?;
+        let (_, t) = svc.submit_ppr(handle, ppr, opts);
+        let r = t.wait();
+        let ans = r.outcome.map_err(|e| e.to_string())?;
+        let p = &ans.ppr;
+        println!(
+            "{} after {} iterations (L1 delta {:.3e}, {} dangling vertices, gen={}, took {})",
+            if p.converged { "converged" } else { "NOT converged" },
+            p.iterations,
+            p.l1_delta,
+            p.dangling,
+            ans.generation,
+            fmt_duration(r.query_s),
+        );
+        // Rank the scores with the same bounded heap the query CUs use.
+        let mut heap = TopKHeap::new(top.min(p.scores.len()));
+        for (i, &s) in p.scores.iter().enumerate() {
+            heap.push(i as u32, s);
+        }
+        for e in heap.into_sorted() {
+            println!("  vertex {:>8}  ppr {:.6e}", e.index, e.score);
+        }
+        svc.shutdown();
+        if p.converged {
+            Ok(0)
+        } else {
+            Err(format!("no convergence within {} iterations (last L1 delta {:.3e})", p.iterations, p.l1_delta))
+        }
+    };
+    match run() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_catalog() -> i32 {

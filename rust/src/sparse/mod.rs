@@ -4,7 +4,11 @@
 //! that models the paper's HBM read path (§IV-B) with per-format
 //! entries-per-line capacity, and the pool-parallel [`ShardedSpmv`] engine
 //! that executes one CU worker per row stripe over whichever storage format
-//! the solve requested.
+//! the solve requested. The query kernels (streaming Top-K SpMV with
+//! per-CU bounded heaps — [`TopKHeap`], [`ShardedSpmv::top_k`] — and the
+//! [`ppr_serial`]/[`ShardedSpmv::ppr`] Personalized PageRank power
+//! iteration) run non-eigen jobs over the same stripes and storage
+//! formats.
 
 mod coo;
 mod csr;
@@ -13,6 +17,7 @@ mod mmio;
 mod norm;
 mod packet;
 mod partition;
+mod query;
 mod sharded;
 
 pub use coo::CooMatrix;
@@ -22,4 +27,5 @@ pub use mmio::{read_matrix_market, read_matrix_market_with, write_matrix_market,
 pub use norm::{frobenius_norm, normalize_frobenius, scale_value, ONE_BELOW};
 pub use packet::{CooPacket, PacketStream, PACKET_BITS, PACKET_MAX_NNZ, PACKET_NNZ};
 pub use partition::{imbalance, partition_rows_balanced, PartitionPolicy, RowPartition};
+pub use query::{column_sums, merge_top_k, ppr_serial, ppr_with, top_k_serial, PprOptions, PprResult, TopKEntry, TopKHeap};
 pub use sharded::{ShardRebuild, ShardedSpmv};

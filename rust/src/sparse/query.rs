@@ -1,0 +1,420 @@
+//! Non-eigen query kernels on the resident-matrix datapath: streaming
+//! **Top-K SpMV** (approximate embedding similarity, arxiv 2103.04808) and
+//! reduced-precision **Personalized PageRank** (arxiv 2009.10443).
+//!
+//! Both reuse the exact substrate the eigensolver streams: the typed CSR
+//! value arrays ([`crate::fixed::Dataword`] storage formats), the per-CU
+//! row stripes, and the fork/join merge of
+//! [`ShardedSpmv`](crate::sparse::ShardedSpmv). This module holds the
+//! engine-independent pieces — the deterministic bounded heap, the
+//! shard-merge, the PPR power iteration core, and the brute-force serial
+//! oracles the property tests pin every result against.
+//!
+//! ## Determinism contract
+//!
+//! Top-K results are **bitwise equal** to "full SpMV + stable sort by
+//! `(score desc, index asc)` + truncate to K" for any CU shard count or
+//! partition policy: per-row scores come from the same stripe kernel the
+//! serial SpMV runs (identical accumulation order), and ranking uses the
+//! IEEE total order ([`f32::total_cmp`]) with ascending row index as the
+//! tie-break, so the selected set and its order are a pure function of the
+//! score vector. `tests/query_oracle.rs` property-checks this across all
+//! four storage formats.
+//!
+//! PPR is likewise bitwise reproducible for a fixed engine: the SpMV per
+//! iteration is the sharded engine's (bitwise serial-equal), and every
+//! other pass (dangling-mass fold, damping, L1 delta) is a serial sweep in
+//! a fixed order.
+//!
+//! ## PPR accuracy vs the f64 oracle
+//!
+//! [`ppr_with`] iterates in f32 over values *stored* in the engine's
+//! format, so its distance from a dense f64 power iteration on the
+//! original matrix is bounded by the storage quantization. The documented
+//! per-precision L1 tolerances (pinned by `tests/query_oracle.rs` on
+//! star/cycle/R-MAT/dangling graphs at unit-test scale) are:
+//!
+//! | format | L1(x - x_oracle) |
+//! |--------|------------------|
+//! | f32    | 1e-4             |
+//! | q1.31  | 1e-3             |
+//! | q2.30  | 1e-3             |
+//! | q1.15  | 8e-2             |
+//!
+//! (Q1.15's bound is loose because Frobenius normalization shrinks stored
+//! values toward the 2^-15 quantization step on larger graphs; against an
+//! oracle run on the *dequantized* stored values every format lands within
+//! 5e-4.)
+
+use crate::fixed::Dataword;
+use crate::sparse::CsrMatrix;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// One Top-K hit: a row index and its SpMV score.
+///
+/// The derived/total order ranks **better-first**: higher score wins, and
+/// equal scores (IEEE total order, so `-0.0 < 0.0`) go to the *lower* row
+/// index — the tie-break that makes heap selection equal a stable sort of
+/// the full score vector.
+#[derive(Copy, Clone, Debug)]
+pub struct TopKEntry {
+    /// Row index of the hit.
+    pub index: u32,
+    /// SpMV score of that row (engine scale; the service rescales by the
+    /// Frobenius norm so clients see original-matrix scores).
+    pub score: f32,
+}
+
+impl PartialEq for TopKEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.index == other.index && self.score.total_cmp(&other.score).is_eq()
+    }
+}
+impl Eq for TopKEntry {}
+
+impl Ord for TopKEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Greater = better: higher score, then lower index.
+        self.score.total_cmp(&other.score).then_with(|| other.index.cmp(&self.index))
+    }
+}
+impl PartialOrd for TopKEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A bounded partial max-heap: the per-CU selection structure of the Top-K
+/// SpMV sweep. Each CU shard pushes every row score it produces; the heap
+/// keeps only the `k` best under [`TopKEntry`]'s total order (internally a
+/// min-heap whose root is the current worst, so a non-improving row costs
+/// one comparison and no allocation).
+pub struct TopKHeap {
+    k: usize,
+    heap: BinaryHeap<Reverse<TopKEntry>>,
+}
+
+impl TopKHeap {
+    /// An empty heap bounded to `k` entries (`k = 0` keeps nothing).
+    pub fn new(k: usize) -> Self {
+        Self { k, heap: BinaryHeap::with_capacity(k.min(1 << 20)) }
+    }
+
+    /// Offer one `(index, score)`; kept only while among the `k` best.
+    #[inline]
+    pub fn push(&mut self, index: u32, score: f32) {
+        if self.k == 0 {
+            return;
+        }
+        let e = TopKEntry { index, score };
+        if self.heap.len() < self.k {
+            self.heap.push(Reverse(e));
+        } else if self.heap.peek().is_some_and(|worst| e > worst.0) {
+            self.heap.pop();
+            self.heap.push(Reverse(e));
+        }
+    }
+
+    /// Entries currently held.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Whether no entry is held.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drain into a best-first sorted vector.
+    pub fn into_sorted(self) -> Vec<TopKEntry> {
+        let mut v: Vec<TopKEntry> = self.heap.into_iter().map(|r| r.0).collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        v
+    }
+}
+
+/// The fork/join Merge Unit of the Top-K sweep: fold per-shard best-first
+/// lists (disjoint row ranges, shard order) into the global best-first
+/// top-`k`. Because [`TopKEntry`]'s order is total and shard row ranges are
+/// disjoint, the result is independent of shard boundaries — identical to
+/// selecting from the concatenated score vector directly.
+pub fn merge_top_k(parts: Vec<Vec<TopKEntry>>, k: usize) -> Vec<TopKEntry> {
+    let mut all: Vec<TopKEntry> = parts.into_iter().flatten().collect();
+    all.sort_unstable_by(|a, b| b.cmp(a));
+    all.truncate(k);
+    all
+}
+
+/// Brute-force Top-K oracle: full SpMV, rank every row by
+/// `(score desc, index asc)`, take the first `k` (clamped to `nrows`).
+/// The property tests pin [`ShardedSpmv::top_k`]
+/// (crate::sparse::ShardedSpmv::top_k) bitwise against this.
+pub fn top_k_serial<V: Dataword>(m: &CsrMatrix<V>, x: &[f32], k: usize) -> Vec<TopKEntry> {
+    let y = m.spmv(x);
+    let mut all: Vec<TopKEntry> =
+        y.iter().enumerate().map(|(i, &score)| TopKEntry { index: i as u32, score }).collect();
+    all.sort_by(|a, b| b.cmp(a)); // stable, though the order is total anyway
+    all.truncate(k.min(m.nrows));
+    all
+}
+
+/// Personalized PageRank configuration.
+///
+/// The iteration solves `x = alpha * P x + (1 - alpha) * e_s` by damped
+/// power iteration, where `P` is the column-normalized resident matrix
+/// (`P_ij = M_ij / colsum_j`), `e_s` the one-hot personalization on
+/// [`PprOptions::source`], and zero-out-weight (dangling) columns
+/// redistribute their mass uniformly. Stops when the L1 change of `x`
+/// falls to [`PprOptions::tol`] or after [`PprOptions::max_iters`].
+#[derive(Clone, Debug)]
+pub struct PprOptions {
+    /// Personalization vertex (the `e_s` one-hot).
+    pub source: usize,
+    /// Damping factor in `(0, 1)` (teleport probability `1 - alpha`).
+    pub alpha: f64,
+    /// L1 stopping tolerance on the per-iteration change.
+    pub tol: f64,
+    /// Iteration cap.
+    pub max_iters: usize,
+}
+
+impl Default for PprOptions {
+    fn default() -> Self {
+        // tol sits above the f32 L1-delta floor: the iteration vector is
+        // f32, so the per-iteration delta of a unit-scale graph stalls
+        // around a few ulps per component (~3e-6 L1 on a hub-heavy star)
+        // and a tighter default would spin to max_iters without ever
+        // reporting convergence.
+        Self { source: 0, alpha: 0.85, tol: 5e-6, max_iters: 200 }
+    }
+}
+
+/// A converged (or capped) PPR vector plus iteration telemetry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PprResult {
+    /// The PPR scores (length n, sums to ~1 for non-negative matrices).
+    pub scores: Vec<f32>,
+    /// Power iterations performed.
+    pub iterations: usize,
+    /// L1 change of the final iteration.
+    pub l1_delta: f64,
+    /// Whether `l1_delta <= tol` before the cap.
+    pub converged: bool,
+    /// Dangling vertices (zero column weight) whose mass was
+    /// redistributed each iteration.
+    pub dangling: usize,
+}
+
+/// Column weight sums of a typed CSR: `colsum[j] = sum_i M_ij` over the
+/// **dequantized stored** values, accumulated in f64 row-major (one fixed
+/// order, so the sums are independent of any sharding). These are the
+/// out-weight normalizers of the PPR transition matrix — the convention is
+/// `M_ij` = weight of the edge `j -> i`, so a symmetric adjacency works
+/// as-is and a directed graph should be registered **transposed**.
+pub fn column_sums<V: Dataword>(m: &CsrMatrix<V>) -> Vec<f64> {
+    let mut sums = vec![0.0f64; m.ncols];
+    for k in 0..m.nnz() {
+        sums[m.indices[k] as usize] += m.vals[k].to_f32() as f64;
+    }
+    sums
+}
+
+/// The PPR power-iteration core, parameterized over the SpMV so the
+/// sharded engine and the serial oracle share one implementation (and
+/// therefore one dangling/damping/stopping semantics):
+///
+/// per iteration, with `z_j = x_j / colsum_j` (0 on dangling columns):
+/// `x'_i = alpha * ((M z)_i + dangling_mass / n) + (1 - alpha) * e_s_i`.
+///
+/// `apply` must compute `y = M z` for the matrix `colsums` was taken from.
+/// The vector stays f32 (the datapath's word) while all scalar folds
+/// (dangling mass, damping coefficients, L1 delta) run in f64. Because the
+/// normalization `z = x ./ colsum` divides stored values by their own
+/// column totals, the result is invariant to the registry's Frobenius
+/// scaling up to quantization — scores come back in probability scale with
+/// no rescale step.
+///
+/// Panics if `source >= n`, `alpha` outside `(0, 1)`, or `max_iters == 0`
+/// (the service validates these at submit time).
+pub fn ppr_with(n: usize, colsums: &[f64], opts: &PprOptions, mut apply: impl FnMut(&[f32], &mut [f32])) -> PprResult {
+    assert_eq!(colsums.len(), n, "column-sum table must cover every vertex");
+    assert!(opts.source < n, "ppr source {} out of range (n = {n})", opts.source);
+    assert!(opts.alpha > 0.0 && opts.alpha < 1.0, "alpha must be in (0, 1), got {}", opts.alpha);
+    assert!(opts.max_iters >= 1, "max_iters must be >= 1");
+    let dangling: Vec<bool> = colsums.iter().map(|&s| s == 0.0).collect();
+    let n_dangling = dangling.iter().filter(|&&d| d).count();
+    let mut x = vec![0.0f32; n];
+    x[opts.source] = 1.0;
+    let mut z = vec![0.0f32; n];
+    let mut y = vec![0.0f32; n];
+    let teleport = 1.0 - opts.alpha;
+    let (mut iterations, mut l1_delta, mut converged) = (0usize, f64::INFINITY, false);
+    for _ in 0..opts.max_iters {
+        iterations += 1;
+        // Normalize by column weight; fold dangling mass (serial, fixed
+        // order — deterministic for any engine geometry).
+        let mut dangling_mass = 0.0f64;
+        for j in 0..n {
+            if dangling[j] {
+                dangling_mass += x[j] as f64;
+                z[j] = 0.0;
+            } else {
+                z[j] = (x[j] as f64 / colsums[j]) as f32;
+            }
+        }
+        apply(&z, &mut y);
+        let spread = opts.alpha * dangling_mass / n as f64;
+        l1_delta = 0.0;
+        for i in 0..n {
+            let xi = (opts.alpha * y[i] as f64 + spread + if i == opts.source { teleport } else { 0.0 }) as f32;
+            l1_delta += (xi as f64 - x[i] as f64).abs();
+            x[i] = xi;
+        }
+        if l1_delta <= opts.tol {
+            converged = true;
+            break;
+        }
+    }
+    PprResult { scores: x, iterations, l1_delta, converged, dangling: n_dangling }
+}
+
+/// Serial PPR oracle over a typed CSR — [`ppr_with`] driven by the plain
+/// serial SpMV. [`ShardedSpmv::ppr`](crate::sparse::ShardedSpmv::ppr) is
+/// bitwise equal to this for any CU count (the sharded apply is bitwise
+/// serial-equal and every other pass is shared code).
+pub fn ppr_serial<V: Dataword>(m: &CsrMatrix<V>, opts: &PprOptions) -> PprResult {
+    assert_eq!(m.nrows, m.ncols, "PPR needs a square matrix");
+    let colsums = column_sums(m);
+    ppr_with(m.nrows, &colsums, opts, |z, y| {
+        y.copy_from_slice(&m.spmv(z));
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::CooMatrix;
+
+    #[test]
+    fn heap_keeps_k_best_with_index_tiebreak() {
+        let mut h = TopKHeap::new(3);
+        for (i, s) in [(0u32, 1.0f32), (1, 5.0), (2, 5.0), (3, 0.5), (4, 5.0), (5, 2.0)] {
+            h.push(i, s);
+        }
+        assert_eq!(h.len(), 3);
+        let best = h.into_sorted();
+        // Three fives tie; lower indices win and order ascending.
+        assert_eq!(best, vec![
+            TopKEntry { index: 1, score: 5.0 },
+            TopKEntry { index: 2, score: 5.0 },
+            TopKEntry { index: 4, score: 5.0 },
+        ]);
+    }
+
+    #[test]
+    fn heap_k_zero_and_underfill() {
+        let mut h = TopKHeap::new(0);
+        h.push(7, 3.0);
+        assert!(h.is_empty());
+        assert!(h.into_sorted().is_empty());
+        let mut h = TopKHeap::new(10);
+        h.push(1, -1.0);
+        h.push(0, -2.0);
+        let v = h.into_sorted();
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].index, 1);
+    }
+
+    #[test]
+    fn entry_order_is_total_and_better_first() {
+        let a = TopKEntry { index: 3, score: 2.0 };
+        let b = TopKEntry { index: 1, score: 2.0 };
+        let c = TopKEntry { index: 0, score: -0.0 };
+        let d = TopKEntry { index: 0, score: 0.0 };
+        assert!(b > a, "equal scores: lower index ranks higher");
+        assert!(d > c, "IEEE total order: +0.0 outranks -0.0");
+        assert_ne!(c, d);
+    }
+
+    #[test]
+    fn merge_equals_global_selection() {
+        let scores: Vec<f32> = (0..40).map(|i| ((i * 17) % 13) as f32 * 0.5).collect();
+        let global = {
+            let mut h = TopKHeap::new(5);
+            for (i, &s) in scores.iter().enumerate() {
+                h.push(i as u32, s);
+            }
+            h.into_sorted()
+        };
+        // Shard into uneven stripes, select per shard, merge.
+        let mut parts = Vec::new();
+        for (lo, hi) in [(0usize, 7usize), (7, 25), (25, 40)] {
+            let mut h = TopKHeap::new(5);
+            for i in lo..hi {
+                h.push(i as u32, scores[i]);
+            }
+            parts.push(h.into_sorted());
+        }
+        assert_eq!(merge_top_k(parts, 5), global);
+    }
+
+    #[test]
+    fn serial_oracle_matches_hand_computation() {
+        let m: CsrMatrix =
+            CooMatrix::from_triplets(3, 3, vec![0, 1, 2], vec![0, 1, 2], vec![1.0f32, 3.0, 2.0]).to_csr();
+        let got = top_k_serial(&m, &[1.0, 1.0, 1.0], 2);
+        assert_eq!(got, vec![TopKEntry { index: 1, score: 3.0 }, TopKEntry { index: 2, score: 2.0 }]);
+        // k beyond n clamps.
+        assert_eq!(top_k_serial(&m, &[1.0, 1.0, 1.0], 99).len(), 3);
+    }
+
+    #[test]
+    fn ppr_on_two_cycle_matches_closed_form() {
+        // Two vertices joined by one undirected unit edge: P swaps mass, so
+        // x = (1-a) e_0 + a P x has the closed form
+        // x_0 = 1/(1+a), x_1 = a/(1+a).
+        let mut coo: CooMatrix = CooMatrix::new(2, 2);
+        coo.push(0, 1, 1.0);
+        coo.push(1, 0, 1.0);
+        let m = coo.to_csr();
+        // tol below the f32 delta floor: the iteration runs to the cap,
+        // oscillating a few ulps around the fixed point — `converged`
+        // stays false but the scores are as close as f32 gets.
+        let opts = PprOptions { alpha: 0.85, tol: 1e-12, max_iters: 500, source: 0 };
+        let r = ppr_serial(&m, &opts);
+        assert_eq!(r.dangling, 0);
+        assert!(r.l1_delta < 1e-5, "delta must reach the f32 floor, got {}", r.l1_delta);
+        let expect0 = 1.0 / (1.0 + 0.85);
+        let expect1 = 0.85 / (1.0 + 0.85);
+        assert!((r.scores[0] as f64 - expect0).abs() < 1e-6, "{:?}", r.scores);
+        assert!((r.scores[1] as f64 - expect1).abs() < 1e-6, "{:?}", r.scores);
+    }
+
+    #[test]
+    fn ppr_redistributes_dangling_mass_and_conserves_total() {
+        // Personalize on the isolated (dangling) vertex 2: its mass must
+        // teleport uniformly instead of vanishing, so the connected pair
+        // {0, 1} ends up with positive scores and sum(x) stays 1. (Spread
+        // only redistributes mass *held by* dangling vertices — an
+        // isolated vertex that never receives any stays at exactly 0.)
+        let mut coo: CooMatrix = CooMatrix::new(3, 3);
+        coo.push(0, 1, 1.0);
+        coo.push(1, 0, 1.0);
+        let m = coo.to_csr();
+        let r = ppr_serial(&m, &PprOptions { source: 2, tol: 1e-6, max_iters: 500, ..Default::default() });
+        assert!(r.converged);
+        assert_eq!(r.dangling, 1);
+        let total: f64 = r.scores.iter().map(|&s| s as f64).sum();
+        assert!((total - 1.0).abs() < 1e-5, "mass must be conserved, got {total}");
+        assert!(r.scores.iter().all(|&s| s > 0.0), "spread mass reaches every vertex: {:?}", r.scores);
+        assert!(r.scores[2] > r.scores[0], "the personalization vertex keeps the teleport share");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn ppr_rejects_bad_source() {
+        let m: CsrMatrix = CooMatrix::new(2, 2).to_csr();
+        ppr_serial(&m, &PprOptions { source: 2, ..Default::default() });
+    }
+}

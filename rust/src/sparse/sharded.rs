@@ -42,11 +42,18 @@
 use crate::fixed::{packet_capacity, Dataword};
 use crate::lanczos::{FusedIteration, Operator};
 use crate::linalg;
+use crate::sparse::query::{self, merge_top_k, PprOptions, PprResult, TopKEntry, TopKHeap};
 use crate::sparse::{partition_rows_balanced, CsrMatrix, PartitionPolicy, RowPartition};
 use crate::util::pool::ThreadPool;
 use crate::util::ptr::SendPtr;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
+
+/// Rows a CU worker scores per stripe-kernel call inside the Top-K sweep:
+/// large enough to amortize the call, small enough that the scratch stays
+/// cache-resident (the bounded heap, not the score vector, is the per-CU
+/// state the paper's design keeps on chip).
+const TOPK_ROW_CHUNK: usize = 512;
 
 /// Multi-CU SpMV: row stripes dispatched to a thread pool, one worker per
 /// CU shard. Output regions are disjoint so no synchronization is needed
@@ -158,6 +165,90 @@ impl<V: Dataword> ShardedSpmv<V> {
     /// re-prep bench measures. Consumers maintaining a raw *unnormalized*
     /// CSR under deltas get true in-place splicing from
     /// [`CsrMatrix::apply_delta`].
+    /// Streaming Top-K SpMV query: score every row of the resident matrix
+    /// against the dense vector `x` and return the `k` best
+    /// `(index, score)` hits, best first.
+    ///
+    /// Each CU worker streams its own row stripe through the same typed
+    /// stripe kernel the eigensolver uses, feeding scores into a
+    /// **bounded partial max-heap** ([`TopKHeap`], `k` entries) instead of
+    /// materializing the full output vector; the fork/join merge folds the
+    /// per-shard heaps in shard order ([`merge_top_k`]). One matrix stream
+    /// per query — the sweep counts as one `apply` in the byte/packet
+    /// telemetry.
+    ///
+    /// Determinism: per-row scores are bitwise identical to the serial
+    /// SpMV's and ranking is the total order of [`TopKEntry`], so the
+    /// result is **bitwise equal** to the brute-force oracle
+    /// [`top_k_serial`](crate::sparse::top_k_serial) for any shard count
+    /// or partition policy.
+    /// `k` larger than the row count clamps to it.
+    pub fn top_k(&self, x: &[f32], k: usize) -> Vec<TopKEntry> {
+        assert!(x.len() >= self.matrix.ncols, "query vector shorter than ncols");
+        self.applies.fetch_add(1, Ordering::Relaxed);
+        let m = &self.matrix;
+        let parts = &self.parts;
+        let k = k.min(m.nrows);
+        let mut slots: Vec<Vec<TopKEntry>> = vec![Vec::new(); parts.len()];
+        let s_ptr = SendPtr(slots.as_mut_ptr());
+        self.pool.scope_chunks(parts.len(), |i| {
+            let p = parts[i];
+            let mut heap = TopKHeap::new(k);
+            let mut buf = [0.0f32; TOPK_ROW_CHUNK];
+            let mut r0 = p.row_start;
+            while r0 < p.row_end {
+                let r1 = (r0 + TOPK_ROW_CHUNK).min(p.row_end);
+                let chunk = &mut buf[..r1 - r0];
+                m.spmv_into_stripe(x, chunk, r0, r1);
+                for (off, &score) in chunk.iter().enumerate() {
+                    heap.push((r0 + off) as u32, score);
+                }
+                r0 = r1;
+            }
+            // SAFETY: as in `apply` — the scoped join outlives every use
+            // and slot `i` is written by exactly this task.
+            unsafe { *s_ptr.get().add(i) = heap.into_sorted() };
+        });
+        merge_top_k(slots, k)
+    }
+
+    /// Personalized PageRank on the resident matrix: damped power
+    /// iteration `x' = alpha * P x + (1 - alpha) * e_s` with
+    /// dangling-mass redistribution and L1-delta stopping (see
+    /// [`ppr_with`](crate::sparse::ppr_with) for the exact recurrence).
+    /// `P` column-normalizes
+    /// the **stored** (quantized) values, so the reduced-precision formats
+    /// run the random walk over their own datapath words and the result is
+    /// invariant to the registry's Frobenius scaling up to quantization.
+    ///
+    /// Every iteration streams the matrix once through the sharded CU
+    /// sweep ([`Operator::apply`]), so the telemetry counters advance one
+    /// `apply` per iteration. Bitwise equal to
+    /// [`ppr_serial`](crate::sparse::ppr_serial) on
+    /// the same stored matrix for any CU count.
+    pub fn ppr(&self, opts: &PprOptions) -> PprResult {
+        let colsums = self.column_sums();
+        self.ppr_with_colsums(opts, &colsums)
+    }
+
+    /// The PPR normalizer table: per-column sums of the **stored**
+    /// (quantized, scaled) values in f64, serial and shard-independent
+    /// (see [`column_sums`](crate::sparse::column_sums)). Exposed so the
+    /// registry can cache it per `(handle, precision, generation)`.
+    pub fn column_sums(&self) -> Vec<f64> {
+        query::column_sums(self.matrix.as_ref())
+    }
+
+    /// [`ShardedSpmv::ppr`] with a precomputed column-sum table — the
+    /// registry caches these per `(handle, precision, generation)` so a
+    /// stream of PPR jobs on one resident matrix pays the O(nnz)
+    /// normalizer pass once (see
+    /// [`MatrixRegistry::column_sums`](crate::coordinator::MatrixRegistry::column_sums)).
+    pub fn ppr_with_colsums(&self, opts: &PprOptions, colsums: &[f64]) -> PprResult {
+        assert_eq!(self.matrix.nrows, self.matrix.ncols, "PPR needs a square matrix");
+        query::ppr_with(self.matrix.nrows, colsums, opts, |z, y| self.apply(z, y))
+    }
+
     pub fn rebuild_shards(&self, matrix: Arc<CsrMatrix<V>>, dirty_rows: &[u32]) -> (Self, ShardRebuild) {
         assert_eq!(matrix.nrows, self.matrix.nrows, "update must preserve dimensions");
         debug_assert!(dirty_rows.windows(2).all(|w| w[0] < w[1]), "dirty rows must be sorted and unique");
@@ -437,6 +528,35 @@ mod tests {
         a.apply(&x, &mut ya);
         b.apply(&x, &mut yb);
         assert_eq!(ya, yb);
+    }
+
+    #[test]
+    fn top_k_matches_serial_oracle_and_counts_one_apply() {
+        let m = Arc::new(graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 41).to_csr());
+        let x: Vec<f32> = (0..m.nrows).map(|i| ((i * 29) % 13) as f32 * 0.1 - 0.6).collect();
+        for cus in [1usize, 3, 5, 8] {
+            let engine = ShardedSpmv::with_own_pool(Arc::clone(&m), cus, PartitionPolicy::BalancedNnz);
+            for k in [1usize, 8, m.nrows, m.nrows + 7] {
+                let got = engine.top_k(&x, k);
+                let want = crate::sparse::top_k_serial(&m, &x, k);
+                assert_eq!(got, want, "cus={cus} k={k}");
+            }
+            assert_eq!(engine.applies(), 4, "one matrix stream per query");
+        }
+    }
+
+    #[test]
+    fn ppr_matches_serial_oracle_for_any_cu_count() {
+        let m = Arc::new(graphs::mesh2d(12, 12, 0.9, 0.02, 7).to_csr());
+        let opts = crate::sparse::PprOptions { source: 3, ..Default::default() };
+        let serial = crate::sparse::ppr_serial(&m, &opts);
+        for cus in [1usize, 3, 5, 8] {
+            let engine = ShardedSpmv::with_own_pool(Arc::clone(&m), cus, PartitionPolicy::EqualRows);
+            let got = engine.ppr(&opts);
+            assert_eq!(got, serial, "cus={cus}");
+            assert_eq!(engine.applies(), got.iterations, "one stream per iteration");
+        }
+        assert!(serial.converged);
     }
 
     #[test]

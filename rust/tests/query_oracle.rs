@@ -1,0 +1,372 @@
+//! Brute-force oracle pins for the streaming query datapath.
+//!
+//! * **Top-K SpMV**: the per-CU bounded-heap + fork/join merge must be
+//!   **bitwise equal** to "full SpMV + stable sort by (score desc, index
+//!   asc) + truncate" for every storage format, shard count, partition
+//!   policy, and k — including tie-heavy score distributions, rows with no
+//!   nonzeros, and k beyond the row count.
+//! * **Replica independence**: a 1-replica and an N-replica service must
+//!   answer the same query stream bitwise identically.
+//! * **PPR**: the reduced-precision power iteration must land within the
+//!   documented per-format L1 tolerance of a dense f64 oracle run on the
+//!   original (unquantized) matrix — on star, cycle, R-MAT n=2^10, and a
+//!   graph with a dangling vertex.
+//! * **Generation fencing**: queries racing `submit_update` deltas must
+//!   each answer for one *complete* generation — bitwise equal to that
+//!   generation's oracle, never a blend of two matrix states.
+
+use std::sync::Arc;
+use topk_eigen::coordinator::service::{EigenService, ServiceConfig};
+use topk_eigen::coordinator::SolveOptions;
+use topk_eigen::fixed::{Dataword, Precision};
+use topk_eigen::graphs;
+use topk_eigen::sparse::{
+    normalize_frobenius, ppr_serial, top_k_serial, CooDelta, CooMatrix, CsrMatrix, PartitionPolicy, PprOptions,
+    ShardedSpmv, TopKEntry,
+};
+use topk_eigen::with_precision;
+
+/// Deterministic query vector in [-0.5, 0.5) — splitmix64 per element.
+fn query_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut state = seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(1);
+    (0..n)
+        .map(|_| {
+            state = state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+            let mut z = state;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+            z ^= z >> 31;
+            (z >> 40) as f32 / (1u64 << 24) as f32 - 0.5
+        })
+        .collect()
+}
+
+/// The registry's storage pipeline, reproduced through the public API:
+/// canonicalize, Frobenius-normalize (`scale_value` per entry), quantize to
+/// `V`. Returns the typed CSR plus the norm the service rescales Top-K
+/// scores by. Value-stream bitwise equal to what `EigenService` serves.
+fn stored_csr<V: Dataword>(m: &CooMatrix) -> (CsrMatrix<V>, f64) {
+    let mut canon = m.clone();
+    canon.canonicalize();
+    let fro = normalize_frobenius(&mut canon);
+    (canon.to_csr().to_precision::<V>(), fro)
+}
+
+/// Service-scale Top-K oracle: serial sort oracle on the stored values,
+/// scores rescaled back to the original matrix scale exactly the way the
+/// service does it (`(score as f64 * fro) as f32`).
+fn expected_topk(m: &CooMatrix, x: &[f32], k: usize) -> Vec<TopKEntry> {
+    let (csr, fro) = stored_csr::<f32>(m);
+    let mut top = top_k_serial(&csr, x, k);
+    for e in &mut top {
+        e.score = (f64::from(e.score) * fro) as f32;
+    }
+    top
+}
+
+#[test]
+fn top_k_is_bitwise_equal_to_the_sort_oracle_for_every_format_shard_and_k() {
+    let n = 1usize << 8;
+    let m = graphs::rmat(n, 6 * n, 0.57, 0.19, 0.19, 42);
+    let x = query_vec(n, 7);
+    for p in Precision::ALL {
+        with_precision!(p, V => {
+            let (csr, _) = stored_csr::<V>(&m);
+            let csr = Arc::new(csr);
+            for cus in [1usize, 3, 5, 8] {
+                for policy in [PartitionPolicy::EqualRows, PartitionPolicy::BalancedNnz] {
+                    let engine = ShardedSpmv::with_own_pool(Arc::clone(&csr), cus, policy);
+                    for k in [1usize, 8, n] {
+                        let got = engine.top_k(&x, k);
+                        let want = top_k_serial(csr.as_ref(), &x, k);
+                        assert_eq!(got, want, "{} cus={cus} {policy:?} k={k}", p.name());
+                    }
+                }
+            }
+        });
+    }
+}
+
+#[test]
+fn top_k_survives_tie_floods_empty_rows_and_k_beyond_n() {
+    // 64 rows, but only rows 0..6 hold entries, all with the same stored
+    // value — the scores tie in droves (rows 6..64 additionally tie at
+    // exactly 0.0) and selection is decided purely by the index
+    // tie-break. Quantized formats collapse even more scores together.
+    let n = 64usize;
+    let mut coo = CooMatrix::new(n, n);
+    for r in 0..6usize {
+        for j in 0..8usize {
+            let c = (r * 7 + j * 3) % n;
+            coo.push(r, c, 0.25);
+        }
+    }
+    let ones = vec![1.0f32; n];
+    let tiny = query_vec(n, 3); // near-collisions without exact ties
+    for p in Precision::ALL {
+        with_precision!(p, V => {
+            let (csr, _) = stored_csr::<V>(&coo);
+            let csr = Arc::new(csr);
+            for cus in [1usize, 3, 5, 8] {
+                let engine = ShardedSpmv::with_own_pool(Arc::clone(&csr), cus, PartitionPolicy::BalancedNnz);
+                // k spans: below / at / above the nonzero-row count, the
+                // full row count, and past it (clamps to n).
+                for k in [1usize, 3, 6, 20, n, n + 7] {
+                    for x in [&ones, &tiny] {
+                        let got = engine.top_k(x, k);
+                        let want = top_k_serial(csr.as_ref(), x, k);
+                        assert_eq!(got, want, "{} cus={cus} k={k}", p.name());
+                        assert_eq!(got.len(), k.min(n));
+                    }
+                }
+                // All-zero scores: a zero query vector ranks rows purely
+                // by index through the total order.
+                let zeros = vec![0.0f32; n];
+                let got = engine.top_k(&zeros, 5);
+                assert_eq!(got.iter().map(|e| e.index).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+            }
+        });
+    }
+}
+
+#[test]
+fn one_and_many_replicas_answer_queries_bitwise_identically() {
+    let n = 1usize << 8;
+    let m = graphs::rmat(n, 8 * n, 0.57, 0.19, 0.19, 77);
+    for p in Precision::ALL {
+        let opts = SolveOptions { precision: p, ..Default::default() };
+        let answers: Vec<Vec<Vec<TopKEntry>>> = [1usize, 3]
+            .iter()
+            .map(|&replicas| {
+                let svc = EigenService::start(replicas);
+                let h = svc.register(m.clone()).unwrap();
+                let tickets: Vec<_> =
+                    (0..6u64).map(|q| svc.submit_query(h, query_vec(n, q), 12, opts.clone()).1).collect();
+                let out: Vec<Vec<TopKEntry>> = tickets
+                    .into_iter()
+                    .map(|t| t.wait().outcome.expect("query failed").entries)
+                    .collect();
+                svc.shutdown();
+                out
+            })
+            .collect();
+        assert_eq!(answers[0], answers[1], "{}: 1 vs 3 replicas must agree bitwise", p.name());
+        // And both agree with the rescaled sort oracle.
+        with_precision!(p, V => {
+            let (csr, fro) = stored_csr::<V>(&m);
+            for (q, ans) in answers[0].iter().enumerate() {
+                let mut want = top_k_serial(&csr, &query_vec(n, q as u64), 12);
+                for e in &mut want {
+                    e.score = (f64::from(e.score) * fro) as f32;
+                }
+                assert_eq!(ans, &want, "{} query {q}", p.name());
+            }
+        });
+    }
+}
+
+/// Dense f64 PPR oracle on the **original** (unnormalized, unquantized)
+/// matrix: the same damped recurrence with dangling redistribution the
+/// engine runs, but every operand in f64. Scale invariance of the
+/// column-normalized iteration makes it directly comparable to the
+/// engine's Frobenius-normalized stored values.
+fn dense_ppr_f64(m: &CooMatrix, source: usize, alpha: f64) -> Vec<f64> {
+    let n = m.nrows;
+    let mut canon = m.clone();
+    canon.canonicalize();
+    let mut colsum = vec![0.0f64; n];
+    for i in 0..canon.nnz() {
+        colsum[canon.cols[i] as usize] += canon.vals[i] as f64;
+    }
+    let mut x = vec![0.0f64; n];
+    x[source] = 1.0;
+    for _ in 0..100_000 {
+        let mut z = vec![0.0f64; n];
+        let mut dangling_mass = 0.0f64;
+        for j in 0..n {
+            if colsum[j] == 0.0 {
+                dangling_mass += x[j];
+            } else {
+                z[j] = x[j] / colsum[j];
+            }
+        }
+        let mut y = vec![0.0f64; n];
+        for i in 0..canon.nnz() {
+            y[canon.rows[i] as usize] += canon.vals[i] as f64 * z[canon.cols[i] as usize];
+        }
+        let spread = alpha * dangling_mass / n as f64;
+        let mut delta = 0.0f64;
+        for i in 0..n {
+            let xi = alpha * y[i] + spread + if i == source { 1.0 - alpha } else { 0.0 };
+            delta += (xi - x[i]).abs();
+            x[i] = xi;
+        }
+        if delta <= 1e-13 {
+            break;
+        }
+    }
+    x
+}
+
+/// Documented per-format L1 tolerance vs the dense f64 oracle (see the
+/// accuracy table in `sparse::query`).
+fn ppr_l1_tol(p: Precision) -> f64 {
+    match p {
+        Precision::Float32 => 1e-4,
+        Precision::FixedQ1_31 | Precision::FixedQ2_30 => 1e-3,
+        Precision::FixedQ1_15 => 8e-2,
+    }
+}
+
+fn star_graph(spokes: usize) -> CooMatrix {
+    let mut m = CooMatrix::new(spokes + 1, spokes + 1);
+    for v in 1..=spokes {
+        m.push(0, v, 1.0);
+        m.push(v, 0, 1.0);
+    }
+    m
+}
+
+fn cycle_graph(n: usize) -> CooMatrix {
+    let mut m = CooMatrix::new(n, n);
+    for v in 0..n {
+        let w = (v + 1) % n;
+        m.push(v, w, 1.0);
+        m.push(w, v, 1.0);
+    }
+    m
+}
+
+/// A 24-cycle plus one isolated (dangling) vertex 24.
+fn dangling_graph() -> CooMatrix {
+    let mut m = CooMatrix::new(25, 25);
+    for v in 0..24usize {
+        let w = (v + 1) % 24;
+        m.push(v, w, 1.0);
+        m.push(w, v, 1.0);
+    }
+    m
+}
+
+#[test]
+fn ppr_matches_the_dense_f64_oracle_within_documented_tolerances() {
+    let cases: Vec<(&str, CooMatrix, usize)> = vec![
+        ("star", star_graph(32), 3),
+        ("cycle", cycle_graph(40), 0),
+        ("rmat", graphs::rmat(1 << 10, 8 << 10, 0.57, 0.19, 0.19, 9), 17),
+        // Personalized on the isolated vertex itself, so its (dangling)
+        // mass actually exists and must be redistributed every iteration.
+        ("dangling", dangling_graph(), 24),
+    ];
+    for (name, m, source) in &cases {
+        let oracle = dense_ppr_f64(m, *source, 0.85);
+        let mass: f64 = oracle.iter().sum();
+        assert!((mass - 1.0).abs() < 1e-9, "{name}: oracle mass {mass}");
+        for p in Precision::ALL {
+            with_precision!(p, V => {
+                let (csr, _) = stored_csr::<V>(m);
+                let opts = PprOptions { source: *source, alpha: 0.85, tol: 1e-7, max_iters: 2000 };
+                let r = ppr_serial(&csr, &opts);
+                if *name == "dangling" {
+                    assert_eq!(r.dangling, 1, "{name} {}", p.name());
+                    assert!(
+                        r.scores.iter().all(|&s| s > 0.0),
+                        "dangling-mass spread must reach every cycle vertex: {:?}",
+                        &r.scores[..4]
+                    );
+                } else if *name != "rmat" {
+                    assert_eq!(r.dangling, 0, "{name} {}", p.name());
+                }
+                let l1: f64 = r.scores.iter().zip(&oracle).map(|(&s, &o)| (s as f64 - o).abs()).sum();
+                assert!(
+                    l1 <= ppr_l1_tol(p),
+                    "{name} {}: L1(engine - f64 oracle) = {l1:.3e} exceeds {:.0e}",
+                    p.name(),
+                    ppr_l1_tol(p)
+                );
+            });
+        }
+    }
+}
+
+#[test]
+fn ppr_through_the_service_matches_the_direct_engine_bitwise() {
+    // The service path (colsum cache, fences, worker threads) must add
+    // nothing numerically: its answer is bitwise the serial recurrence.
+    let m = cycle_graph(30);
+    let opts = PprOptions { source: 4, ..Default::default() };
+    let (csr, _) = stored_csr::<f32>(&m);
+    let want = ppr_serial(&csr, &opts);
+    let svc = EigenService::start(2);
+    let h = svc.register(m).unwrap();
+    let tickets: Vec<_> = (0..3).map(|_| svc.submit_ppr(h, opts.clone(), SolveOptions::default()).1).collect();
+    for t in tickets {
+        let ans = t.wait().outcome.expect("ppr failed");
+        assert_eq!(ans.generation, 1);
+        assert_eq!(ans.ppr, want);
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn racing_queries_always_observe_one_complete_generation() {
+    let n = 1usize << 7;
+    let m = graphs::rmat(n, 8 * n, 0.57, 0.19, 0.19, 301);
+    let x = query_vec(n, 11);
+
+    // Build three diagonal-upsert deltas, each aimed at the previous
+    // generation's top rows so every update provably moves the ranking,
+    // and precompute the exact expected answer of every generation.
+    let mut canon = m.clone();
+    canon.canonicalize();
+    let mut cur = canon.clone();
+    let mut oracles = vec![expected_topk(&cur, &x, 10)];
+    let mut deltas: Vec<CooDelta> = Vec::new();
+    for round in 0..3usize {
+        let mut d = CooDelta::new(n, n);
+        for e in &oracles[round] {
+            d.upsert(e.index as usize, e.index as usize, 2.5 + round as f32 * 0.25);
+        }
+        let mut dc = d.clone();
+        dc.canonicalize();
+        cur.apply_delta(&dc);
+        deltas.push(d);
+        oracles.push(expected_topk(&cur, &x, 10));
+        assert_ne!(oracles[round], oracles[round + 1], "round {round}: delta must move the ranking");
+    }
+
+    let svc = EigenService::with_config(ServiceConfig { replicas: 3, ..Default::default() });
+    let h = svc.register(m).unwrap();
+
+    // One thread hammers queries while the main thread walks the matrix
+    // through generations 2..4. The fence guarantees every answer is the
+    // oracle of *some* complete generation — never a torn mix.
+    let answers = std::thread::scope(|s| {
+        let worker = s.spawn(|| {
+            let mut out = Vec::new();
+            for _ in 0..40 {
+                let (_, t) = svc.submit_query(h, x.clone(), 10, SolveOptions::default());
+                out.push(t.wait().outcome.expect("query failed"));
+            }
+            out
+        });
+        for d in &deltas {
+            std::thread::sleep(std::time::Duration::from_millis(3));
+            let (_, t) = svc.submit_update(h, d.clone());
+            t.wait().outcome.expect("update failed");
+        }
+        worker.join().expect("query thread panicked")
+    });
+
+    for a in &answers {
+        let g = a.generation as usize;
+        assert!((1..=4).contains(&g), "generation {g} out of range");
+        assert_eq!(a.entries, oracles[g - 1], "generation {g}: answer must be that generation's oracle, bitwise");
+    }
+    // After all updates land, a fresh query must see the final state.
+    let (_, t) = svc.submit_query(h, x.clone(), 10, SolveOptions::default());
+    let last = t.wait().outcome.expect("final query");
+    assert_eq!(last.generation, 4);
+    assert_eq!(last.entries, oracles[3]);
+    svc.shutdown();
+}
