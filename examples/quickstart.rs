@@ -4,6 +4,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
+use topk_eigen::coordinator::service::EigenService;
 use topk_eigen::coordinator::{verify, SolveOptions, Solver};
 use topk_eigen::graphs;
 use topk_eigen::lanczos::ReorthPolicy;
@@ -49,6 +50,28 @@ fn main() -> anyhow::Result<()> {
         r.mean_angle_deg, r.mean_residual
     );
     anyhow::ensure!(r.mean_angle_deg > 89.0, "orthogonality regression");
+
+    // 5. Batched streaming queries on the serving path: register the graph
+    //    once, then answer a batch of Top-K SpMV queries with ONE matrix
+    //    sweep for the whole batch. Every member's answer is bitwise equal
+    //    to submitting it alone — batching changes bytes moved, not bits.
+    let svc = EigenService::start(2);
+    let handle = svc.register(adj)?;
+    let queries: Vec<Vec<f32>> = (0..4)
+        .map(|q| (0..n).map(|i| ((i * 31 + q * 17 + 3) % 101) as f32 / 101.0 - 0.5).collect())
+        .collect();
+    let tickets = svc.submit_query_batch(handle, queries, 5, SolveOptions::default());
+    println!("\nbatched Top-5 queries (one sweep answers all {}):", tickets.len());
+    for (id, t) in tickets {
+        let answer = t.wait().outcome.map_err(anyhow::Error::msg)?;
+        let top: Vec<String> =
+            answer.entries.iter().map(|e| format!("{}:{:+.4}", e.index, e.score)).collect();
+        println!("  query {id}: [{}]", top.join(", "));
+    }
+    let stats = svc.stats();
+    println!("query batches: {} ({} queries)", stats.query_batches, stats.batched_queries);
+    svc.shutdown();
+
     println!("\nquickstart OK");
     Ok(())
 }

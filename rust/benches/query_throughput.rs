@@ -9,6 +9,13 @@
 //! and M PPR jobs against one resident matrix must trigger exactly one
 //! column-sum build.
 //!
+//! Three optimization rows ride on the same gates: `query_batched` proves
+//! batched SpMM cuts matrix bytes per answered query >= 2x at batch 4
+//! while staying bitwise equal to the single-query stream,
+//! `query_early_exit` proves the bounded sweep skips cold shards on a
+//! skewed-norm fixture without changing a bit, and `ppr_warm_restart`
+//! counts the sweeps a cross-generation seed saves after a small delta.
+//!
 //! Writes JSONL rows (suite `query_throughput`) to `$TOPK_BENCH_JSON`
 //! (CI: `BENCH_query.json`). Knobs: `TOPK_QUERY_N` (matrix rows, default
 //! 4096), `TOPK_QUERY_JOBS` (queries per section, default 64),
@@ -17,10 +24,11 @@
 
 use std::time::Instant;
 use topk_eigen::bench::BenchSuite;
-use topk_eigen::coordinator::service::EigenService;
-use topk_eigen::coordinator::SolveOptions;
+use topk_eigen::coordinator::service::{EigenService, ServiceConfig};
+use topk_eigen::coordinator::{RegistryConfig, SolveOptions};
 use topk_eigen::graphs;
-use topk_eigen::sparse::{CooMatrix, PprOptions, TopKEntry};
+use topk_eigen::lanczos::ShardedSpmv;
+use topk_eigen::sparse::{CooDelta, CooMatrix, PartitionPolicy, PprOptions, TopKEntry};
 
 fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
@@ -39,6 +47,27 @@ fn query_vec(n: usize, seed: u64) -> Vec<f32> {
             (z >> 40) as f32 / (1u64 << 24) as f32 - 0.5
         })
         .collect()
+}
+
+/// Structurally symmetric fixture with all heavy mass inside rows
+/// `0..hot` (both endpoints of every 8.0-weight edge stay in the hot
+/// block): `EqualRows` sharding isolates that block in shard 0, leaving
+/// every other shard's score bound provably below the k-th score.
+fn skewed_symmetric(n: usize, hot: usize) -> CooMatrix {
+    let mut m = CooMatrix::new(n, n);
+    for r in 0..hot {
+        let c = (r + 1) % hot;
+        m.push(r, c, 8.0);
+        m.push(c, r, 8.0);
+    }
+    for r in hot..n {
+        let c = hot + (r - hot + 1) % (n - hot);
+        if c != r {
+            m.push(r, c, 1e-4);
+            m.push(c, r, 1e-4);
+        }
+    }
+    m
 }
 
 /// `p`-th percentile (0..=1) of an unsorted latency sample, in seconds.
@@ -114,6 +143,110 @@ fn main() {
         svc.shutdown();
     }
 
+    // ---- Batched multi-query SpMM: matrix bytes per answered query ------
+    // One resident-matrix sweep answers a whole batch, so the HBM matrix
+    // traffic per answered query drops ~b×. Gate: every batched answer is
+    // bitwise equal to the b = 1 run of the same query stream.
+    {
+        let bjobs = jobs.max(8) / 8 * 8;
+        let mut bytes_per_query = Vec::new();
+        let mut rates = Vec::new();
+        let mut baseline: Vec<Vec<TopKEntry>> = Vec::new();
+        for &b in &[1usize, 4, 8] {
+            // batch_cap = 1 disables scheduler-side coalescing so each row
+            // isolates the explicit submit_query_batch chunk size.
+            let svc = EigenService::with_config(ServiceConfig { replicas, batch_cap: 1, ..Default::default() });
+            let handle = svc.register(matrix.clone()).expect("register");
+            let t0 = Instant::now();
+            let mut tickets = Vec::with_capacity(bjobs);
+            if b == 1 {
+                for q in 0..bjobs as u64 {
+                    tickets.push(svc.submit_query(handle, query_vec(n, 5000 + q), k, SolveOptions::default()).1);
+                }
+            } else {
+                let mut q = 0usize;
+                while q < bjobs {
+                    let xs: Vec<Vec<f32>> =
+                        (q..q + b.min(bjobs - q)).map(|i| query_vec(n, 5000 + i as u64)).collect();
+                    q += xs.len();
+                    tickets.extend(
+                        svc.submit_query_batch(handle, xs, k, SolveOptions::default()).into_iter().map(|(_, t)| t),
+                    );
+                }
+            }
+            let answers: Vec<Vec<TopKEntry>> = tickets
+                .into_iter()
+                .map(|t| t.wait().outcome.expect("batched query failed").entries)
+                .collect();
+            let wall = t0.elapsed().as_secs_f64();
+            if b == 1 {
+                baseline = answers;
+            } else {
+                assert_eq!(answers, baseline, "batch size {b} changed an answer");
+            }
+            let prep = svc.registry().prepared(handle, &SolveOptions::default()).expect("prepared");
+            let engine = prep
+                .operator()
+                .as_any()
+                .and_then(|a| a.downcast_ref::<ShardedSpmv<f32>>())
+                .expect("native f32 engine");
+            bytes_per_query.push(engine.bytes_streamed() as f64 / bjobs as f64);
+            rates.push(bjobs as f64 / wall);
+            svc.shutdown();
+        }
+        let drop_b4 = bytes_per_query[0] / bytes_per_query[1];
+        let drop_b8 = bytes_per_query[0] / bytes_per_query[2];
+        assert!(drop_b4 >= 2.0, "batch = 4 must at least halve matrix bytes per query: {bytes_per_query:?}");
+        suite.report(
+            "query_batched",
+            &[
+                ("jobs", bjobs as f64),
+                ("bytes_per_query_b1", bytes_per_query[0]),
+                ("bytes_per_query_b4", bytes_per_query[1]),
+                ("bytes_per_query_b8", bytes_per_query[2]),
+                ("bytes_drop_b4", drop_b4),
+                ("bytes_drop_b8", drop_b8),
+                ("jobs_per_s_b1", rates[0]),
+                ("jobs_per_s_b4", rates[1]),
+                ("jobs_per_s_b8", rates[2]),
+            ],
+        );
+    }
+
+    // ---- Early-exit shard pruning on a skewed-norm fixture --------------
+    // Gate: the pruning path (cus = 8, EqualRows isolates the hot block in
+    // shard 0) answers bitwise what a single-shard engine — which can never
+    // prune — answers, while the service reports skipped shards.
+    {
+        let (skew_n, hot, checked) = (1024usize, 128usize, 8usize);
+        let svc = EigenService::start(replicas);
+        let handle = svc.register(skewed_symmetric(skew_n, hot)).expect("register skewed");
+        let pruning = SolveOptions { cus: 8, partition: PartitionPolicy::EqualRows, ..Default::default() };
+        let lone = SolveOptions { cus: 1, ..Default::default() };
+        let t0 = Instant::now();
+        for q in 0..checked as u64 {
+            let x = query_vec(skew_n, 9000 + q);
+            let a8 = svc.submit_query(handle, x.clone(), k, pruning.clone()).1.wait().outcome.expect("pruned query");
+            let a1 = svc.submit_query(handle, x, k, lone.clone()).1.wait().outcome.expect("lone query");
+            assert_eq!(a8.entries, a1.entries, "shard pruning changed query {q}");
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = svc.stats();
+        assert!(stats.shards_skipped > 0, "skewed fixture must trigger early exit: {stats:?}");
+        let rstats = svc.registry().stats();
+        suite.report(
+            "query_early_exit",
+            &[
+                ("queries", checked as f64),
+                ("shards_skipped", stats.shards_skipped as f64),
+                ("rowbound_builds", rstats.rowbound_builds as f64),
+                ("rowbound_hits", rstats.rowbound_hits as f64),
+                ("wall_s", wall),
+            ],
+        );
+        svc.shutdown();
+    }
+
     // ---- Pure PPR load (one colsum build amortized across jobs) ---------
     {
         let ppr_jobs = (jobs / 8).max(4);
@@ -144,6 +277,51 @@ fn main() {
                 ("p99_ms", percentile(&lat, 0.99) * 1e3),
                 ("colsum_builds", rstats.colsum_builds as f64),
                 ("colsum_hits", rstats.colsum_hits as f64),
+            ],
+        );
+        svc.shutdown();
+    }
+
+    // ---- PPR warm restart across a generation bump ----------------------
+    // A converged walk's fixed point seeds the same walk after a small
+    // CooDelta update (opt-in `warm_start`); the damped iteration has a
+    // unique fixed point, so the seed can only change how many sweeps the
+    // walk needs, never where it lands.
+    {
+        let svc = EigenService::with_config(ServiceConfig {
+            replicas,
+            registry: RegistryConfig { warm_start: true, ..Default::default() },
+            ..Default::default()
+        });
+        let handle = svc.register(matrix.clone()).expect("register");
+        let popts = PprOptions { source: 17 % n, ..Default::default() };
+        let cold =
+            svc.submit_ppr(handle, popts.clone(), SolveOptions::default()).1.wait().outcome.expect("cold ppr");
+        assert!(cold.ppr.converged, "cold walk must converge");
+        assert!(!cold.ppr.warm_started);
+        let mut canon = matrix.clone();
+        canon.canonicalize();
+        let mut delta = CooDelta::new(canon.nrows, canon.ncols);
+        let (dr, dc) = (canon.rows[0] as usize, canon.cols[0] as usize);
+        delta.upsert_sym(dr, dc, canon.vals[0] * 1.01);
+        assert!(svc.submit_update(handle, delta).1.wait().outcome.is_ok(), "update failed");
+        let warm =
+            svc.submit_ppr(handle, popts, SolveOptions::default()).1.wait().outcome.expect("warm ppr");
+        assert!(warm.ppr.warm_started, "seed must survive a small generation bump");
+        assert!(warm.ppr.converged, "warm walk must converge");
+        assert!(
+            warm.ppr.iterations <= cold.ppr.iterations,
+            "warm restart must not add sweeps: warm {} vs cold {}",
+            warm.ppr.iterations,
+            cold.ppr.iterations
+        );
+        suite.report(
+            "ppr_warm_restart",
+            &[
+                ("cold_iters", cold.ppr.iterations as f64),
+                ("warm_iters", warm.ppr.iterations as f64),
+                ("iters_saved", (cold.ppr.iterations - warm.ppr.iterations) as f64),
+                ("warm_hits", svc.registry().stats().ppr_warm_hits as f64),
             ],
         );
         svc.shutdown();

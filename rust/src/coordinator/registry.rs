@@ -184,6 +184,15 @@ pub struct RegistryStats {
     pub colsum_builds: u64,
     /// PPR column-sum requests served from the cache.
     pub colsum_hits: u64,
+    /// Early-exit row-bound tables computed (one O(nnz) pass each,
+    /// mirroring `colsum_builds`: once per (handle, precision, generation)).
+    pub rowbound_builds: u64,
+    /// Row-bound requests served from the cache.
+    pub rowbound_hits: u64,
+    /// PPR warm-score cache entries currently held.
+    pub ppr_warm_entries: usize,
+    /// PPR power iterations seeded from a previous generation's scores.
+    pub ppr_warm_hits: u64,
 }
 
 /// What one [`MatrixRegistry::update`] did: the new generation, the size
@@ -344,6 +353,15 @@ type WarmKey = (u64, usize, Precision);
 /// Bound on warm-start entries (each is an n-length f32 vector).
 const WARM_CAP: usize = 256;
 
+/// PPR warm-score identity: the iteration's fixed point depends on the
+/// stored value stream (handle + precision), the personalization vertex,
+/// and the damping factor (bit-keyed — `f64` isn't `Hash`). `tol` and
+/// `max_iters` only decide when to stop, so they share a seed.
+type PprWarmKey = (u64, Precision, usize, u64);
+
+/// Bound on PPR warm-score entries (each is an n-length f32 vector).
+const PPR_WARM_CAP: usize = 256;
+
 /// One warm-start cache slot: a usable seed, or a negative entry for keys
 /// where warm-starting proved counterproductive (the seed collapsed the
 /// Krylov subspace) — those queries run cold permanently instead of
@@ -364,6 +382,18 @@ struct Inner {
     /// use). Column sums depend only on the stored value stream, so the
     /// key needs no engine geometry.
     colsums: HashMap<(u64, Precision), (u64, Arc<Vec<f64>>)>,
+    /// Early-exit row-bound tables (per-row L1 norms of the stored
+    /// values) per `(handle, precision)`, generation-tagged exactly like
+    /// `colsums` — shard geometry is irrelevant, the engine derives its
+    /// per-shard maxima per sweep.
+    rowbounds: HashMap<(u64, Precision), (u64, Arc<Vec<f64>>)>,
+    /// Previous converged PPR scores per (handle, precision, source,
+    /// alpha): warm seeds for re-solves after a small delta. Deliberately
+    /// *not* generation-tagged — crossing generations is the point; the
+    /// `warm_keep_tol` guard in `update` drops entries the delta moved
+    /// too far.
+    ppr_warm: HashMap<PprWarmKey, Vec<f32>>,
+    ppr_warm_order: VecDeque<PprWarmKey>,
     tick: u64,
 }
 
@@ -393,6 +423,9 @@ pub struct MatrixRegistry {
     warm_dropped: AtomicU64,
     colsum_builds: AtomicU64,
     colsum_hits: AtomicU64,
+    rowbound_builds: AtomicU64,
+    rowbound_hits: AtomicU64,
+    ppr_warm_hits: AtomicU64,
 }
 
 impl Default for MatrixRegistry {
@@ -413,6 +446,9 @@ impl MatrixRegistry {
                 warm: HashMap::new(),
                 warm_order: VecDeque::new(),
                 colsums: HashMap::new(),
+                rowbounds: HashMap::new(),
+                ppr_warm: HashMap::new(),
+                ppr_warm_order: VecDeque::new(),
                 tick: 0,
             }),
             runtime: Mutex::new(None),
@@ -430,6 +466,9 @@ impl MatrixRegistry {
             warm_dropped: AtomicU64::new(0),
             colsum_builds: AtomicU64::new(0),
             colsum_hits: AtomicU64::new(0),
+            rowbound_builds: AtomicU64::new(0),
+            rowbound_hits: AtomicU64::new(0),
+            ppr_warm_hits: AtomicU64::new(0),
         }
     }
 
@@ -561,6 +600,11 @@ impl MatrixRegistry {
         if !warm_kept {
             inner.warm.retain(|k, _| k.0 != h.0);
             inner.warm_order.retain(|k| k.0 != h.0);
+            // PPR warm scores ride the same guard: a large delta may have
+            // moved the PPR fixed point too far for the old scores to be a
+            // useful (iteration-saving) seed.
+            inner.ppr_warm.retain(|k, _| k.0 != h.0);
+            inner.ppr_warm_order.retain(|k| k.0 != h.0);
             self.warm_dropped.fetch_add(1, Ordering::SeqCst);
         } else {
             self.warm_kept.fetch_add(1, Ordering::SeqCst);
@@ -636,6 +680,9 @@ impl MatrixRegistry {
         inner.warm.retain(|k, _| k.0 != h.0);
         inner.warm_order.retain(|k| k.0 != h.0);
         inner.colsums.retain(|k, _| k.0 != h.0);
+        inner.rowbounds.retain(|k, _| k.0 != h.0);
+        inner.ppr_warm.retain(|k, _| k.0 != h.0);
+        inner.ppr_warm_order.retain(|k| k.0 != h.0);
         true
     }
 
@@ -878,6 +925,88 @@ impl MatrixRegistry {
         Some(sums)
     }
 
+    /// The early-exit bound table for a prepared engine: per-row L1 norms
+    /// of the **stored** (quantized, Frobenius-scaled) values in f64,
+    /// cached per `(handle, precision)` and tagged with the generation —
+    /// exactly [`MatrixRegistry::column_sums`]'s lifecycle, for the table
+    /// [`ShardedSpmv::top_k_with_bounds`] prunes cold CU shards with
+    /// ([`RegistryStats::rowbound_builds`] /
+    /// [`RegistryStats::rowbound_hits`] pin the once-per-generation bar).
+    /// Geometry-free like colsums: every CU count and partition policy
+    /// shares one table. Returns `None` for opaque engines (PJRT).
+    pub fn row_bounds(&self, h: MatrixHandle, prep: &PreparedMatrix) -> Option<Arc<Vec<f64>>> {
+        let key = (h.0, prep.precision());
+        let generation = prep.generation();
+        {
+            let inner = lock(&self.inner);
+            if let Some((built_gen, bounds)) = inner.rowbounds.get(&key) {
+                if *built_gen == generation {
+                    self.rowbound_hits.fetch_add(1, Ordering::SeqCst);
+                    return Some(Arc::clone(bounds));
+                }
+            }
+        }
+        // Compute outside the registry lock (O(nnz)); a racing build for
+        // the same table is benign — last insert wins, every caller gets
+        // bounds matching its own prep's generation.
+        let bounds = crate::with_precision!(prep.precision(), V => {
+            let sharded = prep.operator().as_any()?.downcast_ref::<ShardedSpmv<V>>()?;
+            Some(Arc::new(sharded.row_l1_norms()))
+        })?;
+        self.rowbound_builds.fetch_add(1, Ordering::SeqCst);
+        let mut inner = lock(&self.inner);
+        // Same no-resurrect rule as colsums: a job racing `unregister`
+        // keeps its table but must not re-cache under a dead handle.
+        if inner.sources.contains_key(&h.0) {
+            inner.rowbounds.insert(key, (generation, Arc::clone(&bounds)));
+        }
+        Some(bounds)
+    }
+
+    /// Warm seed for a PPR job: the previous **converged** scores recorded
+    /// for the same `(handle, precision, source, alpha)`, if the warm-start
+    /// cache is enabled and the entry survived every update since (the
+    /// [`RegistryConfig::warm_keep_tol`] guard in
+    /// [`MatrixRegistry::update`]). The damped iteration's fixed point is
+    /// unique, so a surviving seed changes iteration count, never the
+    /// answer's limit — `ppr_warm_hits` plus the result's iteration
+    /// telemetry show warm re-solves streaming the matrix fewer times.
+    pub fn ppr_warm_scores(&self, h: MatrixHandle, precision: Precision, source: usize, alpha: f64) -> Option<Vec<f32>> {
+        if !self.cfg.warm_start {
+            return None;
+        }
+        let inner = lock(&self.inner);
+        let seed = inner.ppr_warm.get(&(h.0, precision, source, alpha.to_bits()))?;
+        self.ppr_warm_hits.fetch_add(1, Ordering::SeqCst);
+        Some(seed.clone())
+    }
+
+    /// Record a completed PPR's scores for future warm restarts. Only
+    /// **converged** results are worth seeding from (a capped run may be
+    /// far from the fixed point); callers enforce that. No-op unless
+    /// [`RegistryConfig::warm_start`] is set.
+    pub fn store_ppr_warm(&self, h: MatrixHandle, precision: Precision, source: usize, alpha: f64, scores: &[f32]) {
+        if !self.cfg.warm_start || scores.is_empty() {
+            return;
+        }
+        let mut inner = lock(&self.inner);
+        // No-resurrect: never cache under an unregistered handle.
+        if !inner.sources.contains_key(&h.0) {
+            return;
+        }
+        let key = (h.0, precision, source, alpha.to_bits());
+        if inner.ppr_warm.insert(key, scores.to_vec()).is_none() {
+            inner.ppr_warm_order.push_back(key);
+            while inner.ppr_warm.len() > PPR_WARM_CAP {
+                if let Some(old) = inner.ppr_warm_order.pop_front() {
+                    inner.ppr_warm.remove(&old);
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+
     /// Warm-start seed for a repeated `(handle, k, precision)` query:
     /// the previous dominant Ritz vector, if the cache is enabled, has
     /// seen this query complete, and the key is not negatively cached.
@@ -955,6 +1084,10 @@ impl MatrixRegistry {
             warm_dropped: self.warm_dropped.load(Ordering::SeqCst),
             colsum_builds: self.colsum_builds.load(Ordering::SeqCst),
             colsum_hits: self.colsum_hits.load(Ordering::SeqCst),
+            rowbound_builds: self.rowbound_builds.load(Ordering::SeqCst),
+            rowbound_hits: self.rowbound_hits.load(Ordering::SeqCst),
+            ppr_warm_entries: inner.ppr_warm.len(),
+            ppr_warm_hits: self.ppr_warm_hits.load(Ordering::SeqCst),
         }
     }
 }
@@ -1161,6 +1294,90 @@ mod tests {
         assert_eq!(reg.stats().colsum_builds, 4, "dead handle: recompute, no cache");
         let _ = reg.column_sums(h, &prep2).unwrap();
         assert_eq!(reg.stats().colsum_builds, 5, "still not cached");
+    }
+
+    #[test]
+    fn update_generation_bumps_invalidate_colsum_and_rowbound_caches() {
+        // PR 6 only pinned the unregister path; this pins the other half
+        // of the lifecycle: an update() generation bump must invalidate
+        // the cached colsum AND row-bound tables, and each rebuilds
+        // exactly once for the new generation.
+        let reg = MatrixRegistry::default();
+        let m = graphs::rmat(1 << 7, 8 << 7, 0.57, 0.19, 0.19, 93);
+        let h = reg.register(m.clone()).unwrap();
+        let prep = reg.prepared(h, &opts_k(2)).unwrap();
+        let cs1 = reg.column_sums(h, &prep).unwrap();
+        let rb1 = reg.row_bounds(h, &prep).unwrap();
+        assert_eq!(rb1.len(), 1 << 7);
+        let rb1_again = reg.row_bounds(h, &prep).unwrap();
+        assert!(Arc::ptr_eq(&rb1, &rb1_again), "repeat requests share one table");
+        let stats = reg.stats();
+        assert_eq!((stats.rowbound_builds, stats.rowbound_hits), (1, 1));
+        assert_eq!((stats.colsum_builds, stats.colsum_hits), (1, 0));
+
+        // A value-changing delta: new generation, new stored values.
+        reg.update(h, perturb_delta(&m, 0.02, 1.5)).unwrap();
+        let prep2 = reg.prepared(h, &opts_k(2)).unwrap();
+        assert_eq!(prep2.generation(), 2);
+        let cs2 = reg.column_sums(h, &prep2).unwrap();
+        let rb2 = reg.row_bounds(h, &prep2).unwrap();
+        assert!(!Arc::ptr_eq(&cs1, &cs2), "stale colsum table must not be served");
+        assert!(!Arc::ptr_eq(&rb1, &rb2), "stale row-bound table must not be served");
+        assert_ne!(rb1.as_ref(), rb2.as_ref(), "the 1.5x perturbation changes row norms");
+        let stats = reg.stats();
+        assert_eq!(stats.colsum_builds, 2, "{stats:?}");
+        assert_eq!(stats.rowbound_builds, 2, "{stats:?}");
+        // The new tables are cached for the new generation.
+        let _ = reg.column_sums(h, &prep2).unwrap();
+        let _ = reg.row_bounds(h, &prep2).unwrap();
+        let stats = reg.stats();
+        assert_eq!((stats.colsum_builds, stats.rowbound_builds), (2, 2));
+        assert_eq!((stats.colsum_hits, stats.rowbound_hits), (1, 2));
+        // Unregister still purges (the path PR 6 pinned for colsums).
+        assert!(reg.unregister(h));
+        let orphan = reg.row_bounds(h, &prep2).unwrap();
+        assert_eq!(orphan.as_ref(), rb2.as_ref());
+        assert_eq!(reg.stats().rowbound_builds, 3, "dead handle: recompute, no cache");
+    }
+
+    #[test]
+    fn ppr_warm_scores_survive_small_deltas_and_follow_the_guard() {
+        let reg = MatrixRegistry::new(RegistryConfig {
+            warm_start: true,
+            warm_keep_tol: 0.05,
+            ..Default::default()
+        });
+        let m = graphs::rmat(1 << 8, 8 << 8, 0.57, 0.19, 0.19, 95);
+        let h = reg.register(m.clone()).unwrap();
+        let p = Precision::Float32;
+        assert!(reg.ppr_warm_scores(h, p, 3, 0.85).is_none(), "cold cache");
+        reg.store_ppr_warm(h, p, 3, 0.85, &[0.25; 256]);
+        assert_eq!(reg.ppr_warm_scores(h, p, 3, 0.85).unwrap(), vec![0.25; 256]);
+        assert!(reg.ppr_warm_scores(h, p, 4, 0.85).is_none(), "source is part of the key");
+        assert!(reg.ppr_warm_scores(h, p, 3, 0.9).is_none(), "alpha is part of the key");
+        let stats = reg.stats();
+        assert_eq!((stats.ppr_warm_entries, stats.ppr_warm_hits), (1, 1));
+
+        // Small delta: the seed crosses the generation bump.
+        let rep = reg.update(h, perturb_delta(&m, 0.01, 1.0001)).unwrap();
+        assert!(rep.warm_kept);
+        assert!(reg.ppr_warm_scores(h, p, 3, 0.85).is_some(), "seed survives a small delta");
+        // Violent delta: the guard drops it.
+        let rep = reg.update(h, perturb_delta(&m, 1.0, 10.0)).unwrap();
+        assert!(!rep.warm_kept);
+        assert!(reg.ppr_warm_scores(h, p, 3, 0.85).is_none(), "seed dropped past warm_keep_tol");
+        assert_eq!(reg.stats().ppr_warm_entries, 0);
+
+        // Disabled by default, and unregister purges.
+        let off = MatrixRegistry::default();
+        let h2 = off.register(graphs::mesh2d(8, 8, 0.9, 0.02, 13)).unwrap();
+        off.store_ppr_warm(h2, p, 0, 0.85, &[0.1; 64]);
+        assert!(off.ppr_warm_scores(h2, p, 0, 0.85).is_none(), "off by default");
+        reg.store_ppr_warm(h, p, 1, 0.85, &[0.5; 256]);
+        assert!(reg.unregister(h));
+        assert_eq!(reg.stats().ppr_warm_entries, 0);
+        reg.store_ppr_warm(h, p, 1, 0.85, &[0.5; 256]);
+        assert!(reg.ppr_warm_scores(h, p, 1, 0.85).is_none(), "dead handles are never re-cached");
     }
 
     #[test]

@@ -147,6 +147,41 @@ pub fn schedule(farm: &CoreFarm, jobs: &[JobSpec], policy: Policy) -> Result<Sch
     Ok(ScheduleReport { makespan_s, reconfigs, completion_s: completion })
 }
 
+/// The batched-SpMM coalescing rule, shared by the live dispatch loop and
+/// the unit tests below (the same one-pure-function idiom as `select_next`,
+/// so the deployed behavior and the modeled one cannot drift apart).
+///
+/// `keys[i]` is the batch-compatibility key of the `i`-th *remaining*
+/// queue entry (`None` for entries that are not coalescible queries —
+/// solves, updates, PPRs). Given the key of a query already dequeued at
+/// the head of a batch, returns the queue indices (arrival order) of up to
+/// `cap - 1` further entries with the same key — together they form one
+/// SpMM batch that streams the matrix once.
+///
+/// Arrival order is preserved and nothing is skipped *within* the batch
+/// window: an incompatible entry does not end the scan (it simply stays
+/// queued, to be dispatched on its own later), so one odd query cannot
+/// break up an otherwise coalescible burst. Starvation is bounded by the
+/// existing policy machinery: coalescing only ever removes entries that
+/// arrived no later than the scan's last match, and the head entry was
+/// chosen by `select_next` in the first place.
+pub fn coalesce_window(keys: &[Option<u64>], head_key: u64, cap: usize) -> Vec<usize> {
+    let want = cap.saturating_sub(1);
+    let mut picked = Vec::new();
+    if want == 0 {
+        return picked;
+    }
+    for (i, key) in keys.iter().enumerate() {
+        if *key == Some(head_key) {
+            picked.push(i);
+            if picked.len() == want {
+                break;
+            }
+        }
+    }
+    picked
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,6 +272,23 @@ mod tests {
         assert_eq!(Policy::parse("kbatched"), Some(Policy::KBatched));
         assert_eq!(Policy::parse("k-batched"), Some(Policy::KBatched));
         assert_eq!(Policy::parse("lifo"), None);
+    }
+
+    #[test]
+    fn coalesce_window_picks_compatible_queries_in_arrival_order() {
+        // Keys: two compatible bursts (7) split by an incompatible query
+        // (9) and a non-query entry (None). The odd entries never end the
+        // scan and are never picked.
+        let keys = vec![Some(7), Some(9), None, Some(7), Some(7)];
+        assert_eq!(coalesce_window(&keys, 7, 8), vec![0, 3, 4]);
+        // The cap counts the already-dequeued head: cap 3 = head + 2 more.
+        assert_eq!(coalesce_window(&keys, 7, 3), vec![0, 3]);
+        // cap <= 1 disables coalescing entirely.
+        assert!(coalesce_window(&keys, 7, 1).is_empty());
+        assert!(coalesce_window(&keys, 7, 0).is_empty());
+        // No compatible entries: empty window, batch of one.
+        assert!(coalesce_window(&keys, 42, 8).is_empty());
+        assert!(coalesce_window(&[], 7, 8).is_empty());
     }
 
     #[test]

@@ -88,9 +88,39 @@
 //! replica count. Queries run on the native sharded engine (`opts.engine`
 //! is forced to [`Engine::Native`] at submit); like updates, they occupy
 //! no Jacobi core class, so they never charge reconfigurations.
+//!
+//! ### Batched queries, early-exit bounds, warm restarts
+//!
+//! Three memory optimizations ride the same query datapath, all exact:
+//!
+//! * **Batched multi-query SpMM** — [`EigenService::submit_query_batch`]
+//!   carries `b` dense vectors in one queue item, and the dispatch loop
+//!   additionally *coalesces* compatible queued single queries (same
+//!   handle and `k`, same engine geometry; up to
+//!   [`ServiceConfig::batch_cap`]) into one batch at dequeue time. The
+//!   sharded engine then streams every matrix shard **once per batch**
+//!   instead of once per query ([`ShardedSpmv::top_k_batch`]), cutting
+//!   matrix bytes moved per answered query by ~`b`x while staying
+//!   bitwise-identical to `b` independent queries.
+//! * **Per-shard early-exit bounds** — the registry caches per-row L1
+//!   norms beside the PPR column sums ([`MatrixRegistry::row_bounds`]),
+//!   and the engine uses the per-shard maxima as conservative score upper
+//!   bounds to skip shards that provably cannot alter the current top-k
+//!   ([`ShardedSpmv::top_k_with_bounds`]);
+//!   [`ServiceStats::shards_skipped`] counts the shards never streamed.
+//!   Bounds are evaluated in f64 with an f32-rounding inflation, so a
+//!   skip never changes an answer bit.
+//! * **PPR warm restarts** — converged PPR score vectors are cached per
+//!   `(handle, precision, source, alpha)` and survive generation bumps
+//!   whose relative perturbation stays within the registry's
+//!   `warm_keep_tol`; the next identical walk seeds from the previous
+//!   fixed point and converges in fewer matrix sweeps
+//!   ([`MatrixRegistry::store_ppr_warm`]). The damped iteration's fixed
+//!   point is unique, so a warm start changes the iteration count, never
+//!   the limit.
 
 use crate::coordinator::registry::{MatrixHandle, MatrixRegistry, RegistryConfig, UpdateReport};
-use crate::coordinator::scheduler::core_for_k;
+use crate::coordinator::scheduler::{coalesce_window, core_for_k};
 use crate::coordinator::{Engine, SolveOptions, Solution, Solver};
 use crate::fpga::FpgaTimingModel;
 use crate::lanczos::LanczosWorkspace;
@@ -151,6 +181,19 @@ struct QueryJob {
     reply: Sender<QueryResult>,
 }
 
+/// A batch of Top-K SpMV queries sharing one matrix sweep: same handle,
+/// same `k`, same engine geometry — only the dense vectors differ. Built
+/// by [`EigenService::submit_query_batch`], or assembled at dequeue time
+/// when the dispatch loop coalesces compatible queued [`QueryJob`]s.
+struct QueryBatchJob {
+    ids: Vec<u64>,
+    handle: MatrixHandle,
+    xs: Vec<Vec<f32>>,
+    k: usize,
+    opts: SolveOptions,
+    replies: Vec<Sender<QueryResult>>,
+}
+
 /// A Personalized PageRank job against a registered handle.
 struct PprJob {
     id: u64,
@@ -166,6 +209,7 @@ enum QueueItem {
     Handle(HandleJob),
     Update(UpdateJob),
     Query(QueryJob),
+    QueryBatch(QueryBatchJob),
     Ppr(PprJob),
 }
 
@@ -329,6 +373,16 @@ pub struct ServiceStats {
     pub updates: u64,
     /// Top-K SpMV query jobs completed (also counted in `completed`).
     pub queries: u64,
+    /// Batched query executions — one batch is one matrix sweep shared by
+    /// every member; members are counted individually in `queries`.
+    pub query_batches: u64,
+    /// Query jobs answered inside a batched sweep (coalesced singles plus
+    /// [`EigenService::submit_query_batch`] members; also in `queries`).
+    pub batched_queries: u64,
+    /// Matrix shards the early-exit bound proved irrelevant, so the query
+    /// path never streamed them — bytes saved without changing a bit of
+    /// any answer.
+    pub shards_skipped: u64,
     /// Personalized PageRank jobs completed (also counted in `completed`).
     pub pprs: u64,
 }
@@ -344,6 +398,9 @@ struct Counters {
     reconfigs: AtomicU64,
     updates: AtomicU64,
     queries: AtomicU64,
+    query_batches: AtomicU64,
+    batched_queries: AtomicU64,
+    shards_skipped: AtomicU64,
     pprs: AtomicU64,
     total_queued_us: AtomicU64,
     max_queued_us: AtomicU64,
@@ -422,6 +479,12 @@ pub struct ServiceConfig {
     /// queue is loaded. Used for deterministic policy traces (benches,
     /// tests) — production services start live.
     pub paused: bool,
+    /// Largest number of Top-K queries one dequeue may coalesce into a
+    /// single batched matrix sweep (the picked query plus up to
+    /// `batch_cap - 1` compatible queued companions). `<= 1` disables
+    /// coalescing; [`EigenService::submit_query_batch`] items are sized
+    /// by the caller and not re-coalesced.
+    pub batch_cap: usize,
 }
 
 impl Default for ServiceConfig {
@@ -431,6 +494,7 @@ impl Default for ServiceConfig {
             policy: QueuePolicy::Fifo,
             registry: RegistryConfig::default(),
             paused: false,
+            batch_cap: 8,
         }
     }
 }
@@ -495,6 +559,24 @@ pub fn select_next(queue: &[(usize, f64)], loaded_core: Option<usize>, policy: Q
     }
 }
 
+/// Can two queued Top-K queries share one batched matrix sweep? Same
+/// handle, same `k`, and the same engine geometry (precision, CU count,
+/// partition policy, thread cap — the fields of the registry's engine
+/// key; `engine` is already forced to Native for every query at submit),
+/// so one prepared engine serves every member and the batch is
+/// bitwise-equivalent to running the members independently. Generation
+/// needs no check: the batch takes one fence read and one engine
+/// snapshot, so every member answers for the same complete generation —
+/// exactly what each would have seen running alone at that moment.
+fn coalescable(a: &QueryJob, b: &QueryJob) -> bool {
+    a.handle == b.handle
+        && a.k == b.k
+        && a.opts.precision == b.opts.precision
+        && a.opts.cus == b.opts.cus
+        && a.opts.partition == b.opts.partition
+        && a.opts.threads == b.opts.threads
+}
+
 /// Timing-model estimate of one solve (the §IV-C dispatch currency): the
 /// [`FpgaTimingModel`] at the job's precision and CU count over an
 /// idealized balanced partition — submit time knows `n`/`nnz` but not the
@@ -557,10 +639,11 @@ impl EigenService {
             let counters = Arc::clone(&counters);
             let registry = Arc::clone(&registry);
             let policy = cfg.policy;
+            let batch_cap = cfg.batch_cap;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("eigen-worker-{w}"))
-                    .spawn(move || Self::worker_loop(&shared, &counters, &registry, policy))
+                    .spawn(move || Self::worker_loop(&shared, &counters, &registry, policy, batch_cap))
                     .expect("spawn worker"),
             );
         }
@@ -572,6 +655,7 @@ impl EigenService {
         counters: &Counters,
         registry: &Arc<MatrixRegistry>,
         policy: QueuePolicy,
+        batch_cap: usize,
     ) {
         // Worker-local state: the Jacobi core class this replica last ran
         // (reconfiguration tracking), the length of its current same-class
@@ -581,7 +665,7 @@ impl EigenService {
         let mut ws = LanczosWorkspace::new();
         loop {
             let force_fifo = streak >= AFFINITY_STREAK_CAP;
-            let entry = {
+            let picked = {
                 let mut q = shared.queue.lock().unwrap();
                 loop {
                     let shutdown = shared.shutdown.load(Ordering::SeqCst);
@@ -594,7 +678,30 @@ impl EigenService {
                             let view: Vec<(usize, f64)> = q.iter().map(|e| (e.core, e.est_s)).collect();
                             select_next(&view, loaded_core, policy).expect("queue non-empty")
                         };
-                        break Some(q.remove(idx).expect("selected index in range"));
+                        let entry = q.remove(idx).expect("selected index in range");
+                        // Batched-SpMM coalescing: when the pick is a Top-K
+                        // query, pull every compatible queued query (same
+                        // handle, k, and engine geometry; arrival order; up
+                        // to `batch_cap` members total) into the same
+                        // matrix sweep. Still under the queue lock, so no
+                        // submitter ever observes a half-coalesced queue.
+                        let mut tail = Vec::new();
+                        if batch_cap > 1 {
+                            if let QueueItem::Query(head) = &entry.item {
+                                let keys: Vec<Option<u64>> = q
+                                    .iter()
+                                    .map(|e| match &e.item {
+                                        QueueItem::Query(j) => Some(u64::from(coalescable(head, j))),
+                                        _ => None,
+                                    })
+                                    .collect();
+                                for &i in coalesce_window(&keys, 1, batch_cap).iter().rev() {
+                                    tail.push(q.remove(i).expect("coalesce pick in range"));
+                                }
+                                tail.reverse();
+                            }
+                        }
+                        break Some((entry, tail));
                     }
                     if shutdown {
                         break None;
@@ -602,7 +709,7 @@ impl EigenService {
                     q = shared.available.wait(q).unwrap();
                 }
             };
-            let Some(entry) = entry else { break };
+            let Some((entry, tail)) = picked else { break };
             // Reconfiguration accounting runs over the *member* core
             // sequence: a batch executes its Ks in order on this worker, so
             // its internal class switches are real reconfigurations too
@@ -613,9 +720,13 @@ impl EigenService {
                 QueueItem::Single(job) => vec![core_for_k(job.opts.k)],
                 QueueItem::Handle(job) => vec![core_for_k(job.k)],
                 QueueItem::Batch(batch) => batch.ks.iter().map(|&k| core_for_k(k)).collect(),
-                // Updates, Top-K queries, and PPR walks run on no Jacobi
-                // core: no class change, no reconfiguration accounting.
-                QueueItem::Update(_) | QueueItem::Query(_) | QueueItem::Ppr(_) => Vec::new(),
+                // Updates, Top-K queries (single or batched), and PPR
+                // walks run on no Jacobi core: no class change, no
+                // reconfiguration accounting.
+                QueueItem::Update(_)
+                | QueueItem::Query(_)
+                | QueueItem::QueryBatch(_)
+                | QueueItem::Ppr(_) => Vec::new(),
             };
             let mut first = true;
             for &core in &member_cores {
@@ -638,7 +749,35 @@ impl EigenService {
                 QueueItem::Batch(batch) => Self::run_batch(batch, queued_s, counters),
                 QueueItem::Handle(job) => Self::run_handle(job, queued_s, counters, registry, shared, &mut ws),
                 QueueItem::Update(job) => Self::run_update(job, queued_s, counters, registry, shared),
-                QueueItem::Query(job) => Self::run_query(job, queued_s, counters, registry, shared),
+                QueueItem::Query(job) if tail.is_empty() => {
+                    Self::run_query(job, queued_s, counters, registry, shared)
+                }
+                QueueItem::Query(job) => {
+                    // Fuse the picked query with its coalesced companions
+                    // into one batched sweep. Each member keeps its own
+                    // queue-wait clock — they were enqueued at different
+                    // times.
+                    let QueryJob { id, handle, x, k, opts, reply } = job;
+                    let mut ids = vec![id];
+                    let mut xs = vec![x];
+                    let mut replies = vec![reply];
+                    let mut queued = vec![queued_s];
+                    for e in tail {
+                        let QueueItem::Query(j) = e.item else {
+                            unreachable!("only queries coalesce")
+                        };
+                        ids.push(j.id);
+                        xs.push(j.x);
+                        replies.push(j.reply);
+                        queued.push(e.enqueued.elapsed().as_secs_f64());
+                    }
+                    let batch = QueryBatchJob { ids, handle, xs, k, opts, replies };
+                    Self::run_query_batch(batch, &queued, counters, registry, shared);
+                }
+                QueueItem::QueryBatch(batch) => {
+                    let queued = vec![queued_s; batch.ids.len()];
+                    Self::run_query_batch(batch, &queued, counters, registry, shared);
+                }
                 QueueItem::Ppr(job) => Self::run_ppr(job, queued_s, counters, registry, shared),
             }
         }
@@ -802,13 +941,23 @@ impl EigenService {
             let prep = registry.prepared(handle, &opts)?;
             let fro = prep.frobenius_norm();
             let generation = prep.generation();
+            // Early-exit bounds: per-row L1 norms, cached per generation
+            // beside the PPR column sums. The per-shard maxima are
+            // conservative f64 score bounds, so a skipped shard provably
+            // cannot alter the top-k — the answer stays bitwise-identical
+            // to the unbounded sweep.
+            let bounds = registry.row_bounds(handle, &prep);
             crate::with_precision!(opts.precision, V => {
                 let engine = prep
                     .operator()
                     .as_any()
                     .and_then(|a| a.downcast_ref::<ShardedSpmv<V>>())
                     .ok_or_else(|| anyhow::anyhow!("query needs the native sharded engine"))?;
-                let mut entries = engine.top_k(&x, k);
+                let (mut entries, skipped) = match bounds.as_deref() {
+                    Some(rb) => engine.top_k_with_bounds(&x, k, rb),
+                    None => (engine.top_k(&x, k), 0),
+                };
+                counters.shards_skipped.fetch_add(skipped as u64, Ordering::SeqCst);
                 // Stored values are Frobenius-normalized; return scores in
                 // the original value scale. The factor is positive, so the
                 // ranking (and its determinism) is untouched.
@@ -827,6 +976,77 @@ impl EigenService {
         counters.queries.fetch_add(1, Ordering::SeqCst);
         counters.record_result(outcome.is_ok(), queued_s, query_s);
         let _ = reply.send(QueryResult { id, outcome, queued_s, query_s });
+    }
+
+    /// One batched matrix sweep answering every member of a
+    /// [`QueryBatchJob`] — the SpMM path: each shard's packets stream
+    /// once for the whole batch, each member keeps its own bounded heap,
+    /// merge, rescale, and reply. `queued` carries each member's own
+    /// queue wait (coalesced members were enqueued at different times);
+    /// the shared sweep wall time is split evenly across members so the
+    /// batch's total solver time is conserved in the telemetry.
+    fn run_query_batch(
+        batch: QueryBatchJob,
+        queued: &[f64],
+        counters: &Counters,
+        registry: &Arc<MatrixRegistry>,
+        shared: &Shared,
+    ) {
+        let t0 = std::time::Instant::now();
+        let QueryBatchJob { ids, handle, xs, k, opts, replies } = batch;
+        let b = ids.len();
+        // One generation fence read and one engine snapshot for the whole
+        // batch: every member answers for the same complete generation.
+        let fence = shared.fence(handle);
+        let _guard = fence.read().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let prep = registry.prepared(handle, &opts)?;
+            let fro = prep.frobenius_norm();
+            let generation = prep.generation();
+            let bounds = registry.row_bounds(handle, &prep);
+            crate::with_precision!(opts.precision, V => {
+                let engine = prep
+                    .operator()
+                    .as_any()
+                    .and_then(|a| a.downcast_ref::<ShardedSpmv<V>>())
+                    .ok_or_else(|| anyhow::anyhow!("query needs the native sharded engine"))?;
+                let (mut answers, skipped) = match bounds.as_deref() {
+                    Some(rb) => engine.top_k_batch_with_bounds(&xs, k, rb),
+                    None => (engine.top_k_batch(&xs, k), 0),
+                };
+                counters.shards_skipped.fetch_add(skipped as u64, Ordering::SeqCst);
+                for entries in &mut answers {
+                    for e in entries.iter_mut() {
+                        e.score = (f64::from(e.score) * fro) as f32;
+                    }
+                }
+                Ok(answers
+                    .into_iter()
+                    .map(|entries| QueryAnswer { entries, generation })
+                    .collect::<Vec<_>>())
+            })
+        }));
+        let outcomes: Vec<Result<QueryAnswer, String>> = match outcome {
+            Ok(Ok(answers)) => answers.into_iter().map(Ok).collect(),
+            Ok(Err(e)) => {
+                let msg = format!("{e}");
+                (0..b).map(|_| Err(msg.clone())).collect()
+            }
+            Err(_) => (0..b).map(|_| Err("query panicked".to_string())).collect(),
+        };
+        // The shared sweep is split evenly: per-answer wall time is what
+        // a throughput dashboard wants, and the members' sum reproduces
+        // the batch's wall time.
+        let query_s = t0.elapsed().as_secs_f64() / b.max(1) as f64;
+        counters.query_batches.fetch_add(1, Ordering::SeqCst);
+        counters.batched_queries.fetch_add(b as u64, Ordering::SeqCst);
+        for ((id, reply), (outcome, &queued_s)) in
+            ids.into_iter().zip(replies).zip(outcomes.into_iter().zip(queued))
+        {
+            counters.queries.fetch_add(1, Ordering::SeqCst);
+            counters.record_result(outcome.is_ok(), queued_s, query_s);
+            let _ = reply.send(QueryResult { id, outcome, queued_s, query_s });
+        }
     }
 
     fn run_ppr(
@@ -853,7 +1073,22 @@ impl EigenService {
                     .as_any()
                     .and_then(|a| a.downcast_ref::<ShardedSpmv<V>>())
                     .ok_or_else(|| anyhow::anyhow!("ppr needs the native sharded engine"))?;
-                Ok(PprAnswer { ppr: engine.ppr_with_colsums(&ppr, &colsums), generation })
+                // Cross-generation warm restart: a converged walk for this
+                // (precision, source, alpha) seeds the next one. The
+                // damped iteration's fixed point is unique, so the seed
+                // changes the iteration count, never the limit; the
+                // registry drops seeds whose generation bump exceeded
+                // `warm_keep_tol`, and the whole path is off unless the
+                // registry's `warm_start` flag is set.
+                let seed = registry.ppr_warm_scores(handle, opts.precision, ppr.source, ppr.alpha);
+                let res = engine.ppr_with_colsums_seeded(&ppr, &colsums, seed.as_deref());
+                // Only converged fixed points go back into the cache — a
+                // max-iters truncation would seed the next walk with a
+                // half-converged vector for no saving.
+                if res.converged {
+                    registry.store_ppr_warm(handle, opts.precision, ppr.source, ppr.alpha, &res.scores);
+                }
+                Ok(PprAnswer { ppr: res, generation })
             })
         }));
         let outcome: Result<PprAnswer, String> = match outcome {
@@ -883,6 +1118,23 @@ impl EigenService {
         self.counters.queries.fetch_add(1, Ordering::SeqCst);
         self.counters.record_result(false, 0.0, 0.0);
         let _ = tx.send(QueryResult { id, outcome: Err(msg), queued_s: 0.0, query_s: 0.0 });
+        QueryTicket { rx }
+    }
+
+    /// An immediately-successful ticket for a `k == 0` query: the
+    /// deterministic empty answer (the stack-wide `k == 0` contract —
+    /// see [`crate::sparse::merge_top_k`]) without a queue trip or a
+    /// matrix sweep. Counted as a completed query, not a failure.
+    fn empty_query(&self, id: u64, generation: u64) -> QueryTicket {
+        let (tx, rx) = channel();
+        self.counters.queries.fetch_add(1, Ordering::SeqCst);
+        self.counters.record_result(true, 0.0, 0.0);
+        let _ = tx.send(QueryResult {
+            id,
+            outcome: Ok(QueryAnswer { entries: Vec::new(), generation }),
+            queued_s: 0.0,
+            query_s: 0.0,
+        });
         QueryTicket { rx }
     }
 
@@ -1033,7 +1285,11 @@ impl EigenService {
     /// Enqueue a streaming Top-K SpMV query against a registered handle:
     /// dense query vector `x` (length `n`) times the resident matrix,
     /// answering the global top-`k` `(row, score)` pairs, best first.
-    /// `k > n` clamps to `n`. The answer is **bitwise-deterministic** —
+    /// `k > n` clamps to `n`; `k == 0` answers the deterministic empty
+    /// list at submit time. At dispatch, compatible queued queries may be
+    /// coalesced into one batched sweep (see [`ServiceConfig::batch_cap`])
+    /// — the answer is unchanged bit for bit, only the matrix bytes
+    /// streamed per answer drop. The answer is **bitwise-deterministic** —
     /// identical to the full-SpMV + stable-sort oracle — for any CU
     /// count, partition policy, or replica count, and carries the
     /// generation it ran against ([`QueryAnswer::generation`]).
@@ -1052,8 +1308,11 @@ impl EigenService {
         if x.len() != n {
             return (id, self.rejected_query(id, format!("query vector length {} does not match n={n}", x.len())));
         }
-        if k < 1 {
-            return (id, self.rejected_query(id, format!("bad k: {k} (queries need k >= 1)")));
+        if k == 0 {
+            // k = 0 is a degenerate but well-posed request with exactly
+            // one right answer — the empty list. Answer it at submit time.
+            let generation = self.registry.generation(handle).unwrap_or(1);
+            return (id, self.empty_query(id, generation));
         }
         let opts = SolveOptions { engine: Engine::Native, ..opts };
         let est = estimate_query_s(n, nnz, &opts);
@@ -1062,6 +1321,70 @@ impl EigenService {
         // Like updates: no Jacobi core class.
         self.enqueue(QueueItem::Query(job), 0, est);
         (id, QueryTicket { rx })
+    }
+
+    /// Enqueue a batch of Top-K SpMV queries sharing one matrix sweep —
+    /// the SpMM path: every member rides the same handle, `k`, and engine
+    /// geometry, so the worker streams each matrix shard **once for the
+    /// whole batch** instead of once per member
+    /// ([`ShardedSpmv::top_k_batch`]), while the answers stay
+    /// bitwise-identical to independent [`EigenService::submit_query`]
+    /// calls. Returns one `(id, QueryTicket)` per vector, in order.
+    /// Members with the wrong vector length are rejected at submit time
+    /// without poisoning valid siblings; an unknown handle rejects every
+    /// member; `k == 0` answers every member the deterministic empty list
+    /// immediately; an empty `xs` enqueues nothing.
+    pub fn submit_query_batch(
+        &self,
+        handle: MatrixHandle,
+        xs: Vec<Vec<f32>>,
+        k: usize,
+        opts: SolveOptions,
+    ) -> Vec<(u64, QueryTicket)> {
+        if xs.is_empty() {
+            return Vec::new();
+        }
+        self.counters.submitted.fetch_add(xs.len() as u64, Ordering::SeqCst);
+        let Some((n, nnz)) = self.registry.dims(handle) else {
+            return xs
+                .iter()
+                .map(|_| {
+                    let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+                    (id, self.rejected_query(id, format!("unknown matrix handle {}", handle.id())))
+                })
+                .collect();
+        };
+        let generation = if k == 0 { self.registry.generation(handle).unwrap_or(1) } else { 0 };
+        let opts = SolveOptions { engine: Engine::Native, ..opts };
+        let mut out: Vec<(u64, Option<QueryTicket>)> = Vec::with_capacity(xs.len());
+        let mut ids = Vec::new();
+        let mut valid_xs = Vec::new();
+        let mut replies = Vec::new();
+        for x in xs {
+            let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+            if x.len() != n {
+                let msg = format!("query vector length {} does not match n={n}", x.len());
+                out.push((id, Some(self.rejected_query(id, msg))));
+                continue;
+            }
+            if k == 0 {
+                out.push((id, Some(self.empty_query(id, generation))));
+                continue;
+            }
+            let (tx, rx) = channel();
+            ids.push(id);
+            valid_xs.push(x);
+            replies.push(tx);
+            out.push((id, Some(QueryTicket { rx })));
+        }
+        if !ids.is_empty() {
+            // Priced as one sweep shared by every member — which is the
+            // point of the batch.
+            let est = estimate_query_s(n, nnz, &opts);
+            let job = QueryBatchJob { ids, handle, xs: valid_xs, k, opts, replies };
+            self.enqueue(QueueItem::QueryBatch(job), 0, est);
+        }
+        out.into_iter().map(|(id, t)| (id, t.expect("every member has a ticket"))).collect()
     }
 
     /// Enqueue a Personalized PageRank job against a registered handle:
@@ -1186,6 +1509,9 @@ impl EigenService {
             reconfigs: self.counters.reconfigs.load(Ordering::SeqCst),
             updates: self.counters.updates.load(Ordering::SeqCst),
             queries: self.counters.queries.load(Ordering::SeqCst),
+            query_batches: self.counters.query_batches.load(Ordering::SeqCst),
+            batched_queries: self.counters.batched_queries.load(Ordering::SeqCst),
+            shards_skipped: self.counters.shards_skipped.load(Ordering::SeqCst),
             pprs: self.counters.pprs.load(Ordering::SeqCst),
         }
     }
@@ -1665,8 +1991,13 @@ mod tests {
         assert!(t.wait().outcome.unwrap_err().contains("unknown matrix handle"));
         let (_, t) = svc.submit_query(h, vec![1.0; 35], 4, SolveOptions::default());
         assert!(t.wait().outcome.unwrap_err().contains("does not match"));
+        // k = 0 is not an error: the deterministic empty answer comes
+        // back at submit time without a queue trip (the stack-wide k = 0
+        // contract).
         let (_, t) = svc.submit_query(h, vec![1.0; 36], 0, SolveOptions::default());
-        assert!(t.wait().outcome.unwrap_err().contains("bad k"));
+        let empty = t.wait().outcome.expect("k = 0 answers the empty list");
+        assert!(empty.entries.is_empty());
+        assert_eq!(empty.generation, 1);
         let popts = crate::sparse::PprOptions::default();
         let (_, t) = svc.submit_ppr(h, crate::sparse::PprOptions { source: 36, ..popts.clone() }, SolveOptions::default());
         assert!(t.wait().outcome.unwrap_err().contains("out of range"));
@@ -1676,8 +2007,8 @@ mod tests {
         assert!(t.wait().outcome.unwrap_err().contains("max_iters"));
         assert_eq!(svc.queue_depth(), 0, "rejected jobs never reach the queue");
         let stats = svc.stats();
-        assert_eq!(stats.failed, 6);
-        assert_eq!(stats.queries, 3);
+        assert_eq!(stats.failed, 5);
+        assert_eq!(stats.queries, 3, "two rejections plus one k = 0 empty");
         assert_eq!(stats.pprs, 3);
         // The worker still serves a valid query afterwards.
         let (_, t) = svc.submit_query(h, vec![1.0; 36], 3, SolveOptions::default());
@@ -1737,6 +2068,136 @@ mod tests {
         let a2 = q2.wait().outcome.expect("post-update query");
         assert_eq!(a2.generation, 2);
         assert_eq!(a2.entries, expect_g2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn queued_queries_coalesce_into_one_sweep_and_stay_bitwise_exact() {
+        // Paused single replica: the queue holds five compatible k = 6
+        // queries and one incompatible k = 3 query before dispatch
+        // starts, so the first dequeue must coalesce exactly the five
+        // into one batched sweep and leave the odd one alone.
+        let svc = EigenService::with_config(ServiceConfig {
+            replicas: 1,
+            paused: true,
+            batch_cap: 8,
+            ..Default::default()
+        });
+        let n = 1usize << 8;
+        let m = graphs::rmat(n, 8 * n, 0.57, 0.19, 0.19, 221);
+        let h = svc.register(m.clone()).unwrap();
+        let mk = |seed: usize| -> Vec<f32> {
+            (0..n).map(|i| ((i * 31 + seed * 17 + 3) % 101) as f32 / 101.0 - 0.5).collect()
+        };
+        let queries: Vec<Vec<f32>> = (0..5).map(mk).collect();
+        let tickets: Vec<_> = queries
+            .iter()
+            .map(|x| svc.submit_query(h, x.clone(), 6, SolveOptions::default()).1)
+            .collect();
+        let (_, odd) = svc.submit_query(h, queries[0].clone(), 3, SolveOptions::default());
+        assert_eq!(svc.queue_depth(), 6);
+        svc.resume();
+        // Oracle: a coalescing-disabled service answering one at a time.
+        let lone = EigenService::with_config(ServiceConfig { replicas: 1, batch_cap: 1, ..Default::default() });
+        let hl = lone.register(m).unwrap();
+        for (x, t) in queries.iter().zip(tickets) {
+            let got = t.wait().outcome.expect("batched query");
+            let want =
+                lone.submit_query(hl, x.clone(), 6, SolveOptions::default()).1.wait().outcome.unwrap();
+            assert_eq!(got, want, "coalesced member must be bitwise-identical to a lone query");
+        }
+        assert!(odd.wait().outcome.is_ok());
+        let stats = svc.stats();
+        assert_eq!(stats.queries, 6);
+        assert_eq!(stats.query_batches, 1, "{stats:?}");
+        assert_eq!(stats.batched_queries, 5, "the k = 3 query must not ride the k = 6 sweep");
+        assert_eq!(stats.failed, 0);
+        let lstats = lone.stats();
+        assert_eq!(lstats.query_batches, 0, "batch_cap = 1 disables coalescing");
+        svc.shutdown();
+        lone.shutdown();
+    }
+
+    #[test]
+    fn submit_query_batch_rejects_members_without_poisoning_siblings() {
+        let svc = EigenService::start(1);
+        let m = graphs::mesh2d(8, 8, 0.9, 0.02, 29); // n = 64
+        let h = svc.register(m.clone()).unwrap();
+        let x_good: Vec<f32> = (0..64).map(|i| (i as f32 * 0.11).cos()).collect();
+        let tickets = svc.submit_query_batch(
+            h,
+            vec![x_good.clone(), vec![0.0; 63], x_good.clone()],
+            4,
+            SolveOptions::default(),
+        );
+        assert_eq!(tickets.len(), 3);
+        let results: Vec<QueryResult> = tickets.into_iter().map(|(_, t)| t.wait()).collect();
+        let a0 = results[0].outcome.as_ref().expect("good member");
+        assert!(results[1].outcome.as_ref().unwrap_err().contains("does not match"));
+        let a2 = results[2].outcome.as_ref().expect("good member");
+        // The two valid members shared one sweep and match a lone query.
+        let (_, t) = svc.submit_query(h, x_good, 4, SolveOptions::default());
+        let lone = t.wait().outcome.unwrap();
+        assert_eq!(*a0, lone);
+        assert_eq!(*a2, lone);
+        let stats = svc.stats();
+        assert_eq!(stats.query_batches, 1);
+        assert_eq!(stats.batched_queries, 2, "the rejected member never reaches the sweep");
+        assert_eq!(stats.failed, 1);
+        // k = 0 batch: deterministic empties, nothing enqueued.
+        for (_, t) in svc.submit_query_batch(h, vec![vec![0.0; 64]; 2], 0, SolveOptions::default()) {
+            let a = t.wait().outcome.expect("k = 0 empty");
+            assert!(a.entries.is_empty());
+        }
+        // An unknown handle rejects every member.
+        let reg = MatrixRegistry::default();
+        let foreign = reg.register(m).unwrap();
+        let r = svc
+            .submit_query_batch(foreign, vec![vec![0.0; 64]], 4, SolveOptions::default())
+            .pop()
+            .unwrap()
+            .1
+            .wait();
+        assert!(r.outcome.unwrap_err().contains("unknown matrix handle"));
+        // An empty batch enqueues nothing.
+        assert!(svc.submit_query_batch(h, Vec::new(), 4, SolveOptions::default()).is_empty());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn ppr_warm_restart_reuses_the_previous_fixed_point_across_generations() {
+        let svc = EigenService::with_config(ServiceConfig {
+            replicas: 1,
+            registry: RegistryConfig { warm_start: true, ..Default::default() },
+            ..Default::default()
+        });
+        let m = graphs::mesh2d(12, 12, 0.9, 0.02, 33);
+        let h = svc.register(m.clone()).unwrap();
+        let popts = crate::sparse::PprOptions { source: 7, ..Default::default() };
+        let cold =
+            svc.submit_ppr(h, popts.clone(), SolveOptions::default()).1.wait().outcome.unwrap();
+        assert!(cold.ppr.converged);
+        assert!(!cold.ppr.warm_started);
+        // A small delta bumps the generation; the cached fixed point
+        // survives the registry's warm_keep_tol guard and seeds the next
+        // walk, which converges in fewer matrix sweeps.
+        let mut canon = m;
+        canon.canonicalize();
+        let mut delta = crate::sparse::CooDelta::new(canon.nrows, canon.ncols);
+        let (r, c) = (canon.rows[0] as usize, canon.cols[0] as usize);
+        delta.upsert_sym(r, c, canon.vals[0] * 1.01);
+        assert!(svc.submit_update(h, delta).1.wait().outcome.is_ok());
+        let warm = svc.submit_ppr(h, popts, SolveOptions::default()).1.wait().outcome.unwrap();
+        assert_eq!(warm.generation, 2);
+        assert!(warm.ppr.warm_started, "the seed must survive a small generation bump");
+        assert!(warm.ppr.converged);
+        assert!(
+            warm.ppr.iterations < cold.ppr.iterations,
+            "warm restart must save sweeps: warm {} vs cold {}",
+            warm.ppr.iterations,
+            cold.ppr.iterations
+        );
+        assert_eq!(svc.registry().stats().ppr_warm_hits, 1);
         svc.shutdown();
     }
 }

@@ -231,6 +231,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("queries", "Top-K SpMV queries interleaved per phase (mixed eigen+query load)", Some("0"))
         .opt("query-k", "top rows per interleaved query", Some("8"))
         .opt("pprs", "Personalized PageRank jobs interleaved per phase", Some("0"))
+        .opt("batch-cap", "max Top-K queries coalesced into one batched sweep (1 disables)", Some("8"))
         .opt("adaptive", "adaptive Lanczos stop: Ritz tolerance (0 = fixed K iterations)", Some("0"))
         .flag("warm-start", "seed repeated (handle, k) queries from the previous dominant Ritz vector")
         .flag("skip-symmetry-check", "trust inputs to be symmetric (skips the O(nnz) registration check)")
@@ -269,6 +270,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         if !(0.0..=1.0).contains(&update_dirty) {
             return Err(format!("--update-dirty must be in [0, 1], got {update_dirty}"));
         }
+        let batch_cap = m.parse_at_least::<usize>("batch-cap", 1).map_err(|e| e.to_string())?;
         let svc = EigenService::with_config(ServiceConfig {
             replicas,
             policy,
@@ -279,6 +281,7 @@ fn cmd_serve(args: &[String]) -> i32 {
                 ..Default::default()
             },
             paused: false,
+            batch_cap,
         });
         println!(
             "serving: n={} nnz={} replicas={replicas} policy={} jobs={jobs} ks={ks:?} precision={} warm-start={}",
@@ -420,6 +423,16 @@ fn cmd_serve(args: &[String]) -> i32 {
                  colsum-builds={} colsum-hits={}",
                 rstats.colsum_builds, rstats.colsum_hits,
             );
+            println!(
+                "query path: batches={} batched-queries={} shards-skipped={} \
+                 rowbound-builds={} rowbound-hits={} ppr-warm-hits={}",
+                stats.query_batches,
+                stats.batched_queries,
+                stats.shards_skipped,
+                rstats.rowbound_builds,
+                rstats.rowbound_hits,
+                rstats.ppr_warm_hits,
+            );
         }
         println!(
             "registry: matrices={} engines={} prepares={} engine-hits={} dedup-hits={} evictions={} \
@@ -509,6 +522,7 @@ fn cmd_query(args: &[String]) -> i32 {
         .positional("input", "MatrixMarket file or catalog ID[@scale]")
         .opt("k", "top rows to return per query", Some("10"))
         .opt("queries", "query jobs to run (distinct seeded vectors)", Some("4"))
+        .opt("batch", "queries per batched submission — one matrix sweep per batch (1 = independent submits)", Some("1"))
         .opt("replicas", "worker replicas", Some("2"))
         .opt("seed", "seed of the first query vector", Some("1"))
         .opt("precision", "f32|q1.31|q2.30|q1.15", Some("f32"))
@@ -528,6 +542,7 @@ fn cmd_query(args: &[String]) -> i32 {
         let n = matrix.nrows;
         let k = m.parse_at_least::<usize>("k", 1).map_err(|e| e.to_string())?;
         let queries = m.parse_at_least::<usize>("queries", 1).map_err(|e| e.to_string())?;
+        let batch = m.parse_at_least::<usize>("batch", 1).map_err(|e| e.to_string())?;
         let replicas = m.parse_at_least::<usize>("replicas", 1).map_err(|e| e.to_string())?;
         let seed = m.parse::<u64>("seed").map_err(|e| e.to_string())?;
         let opts = SolveOptions {
@@ -545,14 +560,31 @@ fn cmd_query(args: &[String]) -> i32 {
             ..Default::default()
         });
         println!(
-            "querying: n={n} nnz={} k={k} queries={queries} replicas={replicas} precision={}",
+            "querying: n={n} nnz={} k={k} queries={queries} batch={batch} replicas={replicas} precision={}",
             matrix.nnz(),
             opts.precision.name(),
         );
         let handle = svc.register(matrix).map_err(|e| e.to_string())?;
         let t0 = std::time::Instant::now();
-        let tickets: Vec<_> =
-            (0..queries).map(|q| svc.submit_query(handle, query_vector(n, seed + q as u64), k, opts.clone())).collect();
+        // --batch groups the seeded vectors into submit_query_batch calls:
+        // one matrix sweep answers the whole group, bitwise-identical to
+        // independent submits.
+        let tickets: Vec<_> = if batch > 1 {
+            let mut all = Vec::with_capacity(queries);
+            let mut q = 0usize;
+            while q < queries {
+                let b = batch.min(queries - q);
+                let xs: Vec<Vec<f32>> =
+                    (q..q + b).map(|i| query_vector(n, seed + i as u64)).collect();
+                all.extend(svc.submit_query_batch(handle, xs, k, opts.clone()));
+                q += b;
+            }
+            all
+        } else {
+            (0..queries)
+                .map(|q| svc.submit_query(handle, query_vector(n, seed + q as u64), k, opts.clone()))
+                .collect()
+        };
         let mut ok = 0usize;
         for (id, t) in tickets {
             let r = t.wait();
@@ -576,6 +608,16 @@ fn cmd_query(args: &[String]) -> i32 {
         }
         let wall = t0.elapsed().as_secs_f64();
         println!("answered {ok}/{queries} top-{k} queries in {} -> {:.1} queries/s", fmt_duration(wall), ok as f64 / wall);
+        let stats = svc.stats();
+        let rstats = svc.registry().stats();
+        println!(
+            "query path: batches={} batched-queries={} shards-skipped={} rowbound-builds={} rowbound-hits={}",
+            stats.query_batches,
+            stats.batched_queries,
+            stats.shards_skipped,
+            rstats.rowbound_builds,
+            rstats.rowbound_hits,
+        );
         svc.shutdown();
         if ok == queries {
             Ok(0)

@@ -27,5 +27,8 @@ pub use mmio::{read_matrix_market, read_matrix_market_with, write_matrix_market,
 pub use norm::{frobenius_norm, normalize_frobenius, scale_value, ONE_BELOW};
 pub use packet::{CooPacket, PacketStream, PACKET_BITS, PACKET_MAX_NNZ, PACKET_NNZ};
 pub use partition::{imbalance, partition_rows_balanced, PartitionPolicy, RowPartition};
-pub use query::{column_sums, merge_top_k, ppr_serial, ppr_with, top_k_serial, PprOptions, PprResult, TopKEntry, TopKHeap};
+pub use query::{
+    column_sums, merge_top_k, ppr_serial, ppr_with, ppr_with_seed, row_l1_norms, top_k_serial, PprOptions,
+    PprResult, TopKEntry, TopKHeap,
+};
 pub use sharded::{ShardRebuild, ShardedSpmv};

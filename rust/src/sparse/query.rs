@@ -139,6 +139,11 @@ impl TopKHeap {
 /// top-`k`. Because [`TopKEntry`]'s order is total and shard row ranges are
 /// disjoint, the result is independent of shard boundaries — identical to
 /// selecting from the concatenated score vector directly.
+///
+/// `k == 0` returns the empty vector deterministically — the whole
+/// selection stack ([`TopKHeap::new`]`(0)`, this merge,
+/// [`top_k_serial`], [`ShardedSpmv::top_k`](crate::sparse::ShardedSpmv::top_k))
+/// shares that contract, so callers never need to pre-validate `k`.
 pub fn merge_top_k(parts: Vec<Vec<TopKEntry>>, k: usize) -> Vec<TopKEntry> {
     let mut all: Vec<TopKEntry> = parts.into_iter().flatten().collect();
     all.sort_unstable_by(|a, b| b.cmp(a));
@@ -147,8 +152,9 @@ pub fn merge_top_k(parts: Vec<Vec<TopKEntry>>, k: usize) -> Vec<TopKEntry> {
 }
 
 /// Brute-force Top-K oracle: full SpMV, rank every row by
-/// `(score desc, index asc)`, take the first `k` (clamped to `nrows`).
-/// The property tests pin [`ShardedSpmv::top_k`]
+/// `(score desc, index asc)`, take the first `k` (clamped to `nrows`;
+/// `k == 0` is deterministically empty). The property tests pin
+/// [`ShardedSpmv::top_k`]
 /// (crate::sparse::ShardedSpmv::top_k) bitwise against this.
 pub fn top_k_serial<V: Dataword>(m: &CsrMatrix<V>, x: &[f32], k: usize) -> Vec<TopKEntry> {
     let y = m.spmv(x);
@@ -157,6 +163,29 @@ pub fn top_k_serial<V: Dataword>(m: &CsrMatrix<V>, x: &[f32], k: usize) -> Vec<T
     all.sort_by(|a, b| b.cmp(a)); // stable, though the order is total anyway
     all.truncate(k.min(m.nrows));
     all
+}
+
+/// Per-row L1 norms of the **dequantized stored** values in f64:
+/// `row_l1[r] = sum_j |M_rj|`. These are the conservative score bounds the
+/// early-exit Top-K sweep prunes CU shards with — for any query `x`,
+/// `|(M x)_r| <= row_l1[r] * max_j |x_j|` holds in exact arithmetic, and
+/// [`ShardedSpmv::top_k_with_bounds`](crate::sparse::ShardedSpmv::top_k_with_bounds)
+/// inflates the product by the worst-case f32 accumulation error before
+/// comparing, so the bound also dominates the *computed* f32 score. Like
+/// [`column_sums`], the table depends only on the stored value stream
+/// (precision), not on any shard geometry — the registry caches it per
+/// `(handle, precision, generation)` beside the colsums.
+pub fn row_l1_norms<V: Dataword>(m: &CsrMatrix<V>) -> Vec<f64> {
+    let mut norms = vec![0.0f64; m.nrows];
+    for r in 0..m.nrows {
+        let (lo, hi) = (m.indptr[r], m.indptr[r + 1]);
+        let mut acc = 0.0f64;
+        for k in lo..hi {
+            acc += (m.vals[k].to_f32() as f64).abs();
+        }
+        norms[r] = acc;
+    }
+    norms
 }
 
 /// Personalized PageRank configuration.
@@ -204,6 +233,9 @@ pub struct PprResult {
     /// Dangling vertices (zero column weight) whose mass was
     /// redistributed each iteration.
     pub dangling: usize,
+    /// Whether the iteration started from a caller-supplied seed
+    /// ([`ppr_with_seed`]) instead of the cold one-hot start.
+    pub warm_started: bool,
 }
 
 /// Column weight sums of a typed CSR: `colsum[j] = sum_i M_ij` over the
@@ -237,15 +269,47 @@ pub fn column_sums<V: Dataword>(m: &CsrMatrix<V>) -> Vec<f64> {
 ///
 /// Panics if `source >= n`, `alpha` outside `(0, 1)`, or `max_iters == 0`
 /// (the service validates these at submit time).
-pub fn ppr_with(n: usize, colsums: &[f64], opts: &PprOptions, mut apply: impl FnMut(&[f32], &mut [f32])) -> PprResult {
+pub fn ppr_with(n: usize, colsums: &[f64], opts: &PprOptions, apply: impl FnMut(&[f32], &mut [f32])) -> PprResult {
+    ppr_with_seed(n, colsums, opts, None, apply)
+}
+
+/// [`ppr_with`] with an optional warm start: when `seed` is `Some`, the
+/// iteration begins from those scores instead of the cold one-hot on
+/// `opts.source`. The damped iteration `x <- alpha * P_hat x + (1-alpha) e_s`
+/// is an L1 contraction with contraction factor `alpha`, so its fixed point
+/// is unique — a warm start changes only *how many* iterations the L1-delta
+/// stop takes to reach `tol`, not which vector it converges toward. The
+/// service seeds from the previous generation's converged scores after a
+/// small `CooDelta` (the same `||delta||_F` guard the eigen warm-seed
+/// cache uses), so warm re-solves cost measurably fewer matrix passes.
+///
+/// A cold call (`seed = None`) is bitwise identical to [`ppr_with`].
+/// Panics additionally if `seed.len() != n`.
+pub fn ppr_with_seed(
+    n: usize,
+    colsums: &[f64],
+    opts: &PprOptions,
+    seed: Option<&[f32]>,
+    mut apply: impl FnMut(&[f32], &mut [f32]),
+) -> PprResult {
     assert_eq!(colsums.len(), n, "column-sum table must cover every vertex");
     assert!(opts.source < n, "ppr source {} out of range (n = {n})", opts.source);
     assert!(opts.alpha > 0.0 && opts.alpha < 1.0, "alpha must be in (0, 1), got {}", opts.alpha);
     assert!(opts.max_iters >= 1, "max_iters must be >= 1");
     let dangling: Vec<bool> = colsums.iter().map(|&s| s == 0.0).collect();
     let n_dangling = dangling.iter().filter(|&&d| d).count();
-    let mut x = vec![0.0f32; n];
-    x[opts.source] = 1.0;
+    let warm_started = seed.is_some();
+    let mut x = match seed {
+        Some(s) => {
+            assert_eq!(s.len(), n, "warm seed must cover every vertex");
+            s.to_vec()
+        }
+        None => {
+            let mut x = vec![0.0f32; n];
+            x[opts.source] = 1.0;
+            x
+        }
+    };
     let mut z = vec![0.0f32; n];
     let mut y = vec![0.0f32; n];
     let teleport = 1.0 - opts.alpha;
@@ -276,7 +340,7 @@ pub fn ppr_with(n: usize, colsums: &[f64], opts: &PprOptions, mut apply: impl Fn
             break;
         }
     }
-    PprResult { scores: x, iterations, l1_delta, converged, dangling: n_dangling }
+    PprResult { scores: x, iterations, l1_delta, converged, dangling: n_dangling, warm_started }
 }
 
 /// Serial PPR oracle over a typed CSR — [`ppr_with`] driven by the plain
@@ -416,5 +480,70 @@ mod tests {
     fn ppr_rejects_bad_source() {
         let m: CsrMatrix = CooMatrix::new(2, 2).to_csr();
         ppr_serial(&m, &PprOptions { source: 2, ..Default::default() });
+    }
+
+    #[test]
+    fn k_zero_is_deterministically_empty_across_the_stack() {
+        // The whole selection stack shares the k == 0 -> empty contract;
+        // no layer may panic or demand pre-validation.
+        assert!(merge_top_k(vec![vec![TopKEntry { index: 0, score: 1.0 }]], 0).is_empty());
+        assert!(merge_top_k(Vec::new(), 0).is_empty());
+        let m: CsrMatrix =
+            CooMatrix::from_triplets(3, 3, vec![0, 1, 2], vec![0, 1, 2], vec![1.0f32, 3.0, 2.0]).to_csr();
+        assert!(top_k_serial(&m, &[1.0, 1.0, 1.0], 0).is_empty());
+    }
+
+    #[test]
+    fn row_l1_norms_sum_absolute_stored_values() {
+        let mut coo: CooMatrix = CooMatrix::new(3, 3);
+        coo.push(0, 0, 2.0);
+        coo.push(0, 2, -3.0);
+        coo.push(2, 1, 0.5);
+        let m = coo.to_csr();
+        let norms = row_l1_norms(&m);
+        assert_eq!(norms, vec![5.0, 0.0, 0.5]);
+        // The bound it exists for: |(M x)_r| <= row_l1[r] * max|x_j|.
+        let x = [0.25f32, -1.0, 0.75];
+        let y = m.spmv(&x);
+        let xmax = x.iter().fold(0.0f64, |m, &v| m.max((v as f64).abs()));
+        for r in 0..3 {
+            assert!((y[r] as f64).abs() <= norms[r] * xmax + 1e-12);
+        }
+    }
+
+    #[test]
+    fn warm_seeded_ppr_reaches_the_same_fixed_point_in_fewer_iterations() {
+        // 5-cycle with one chord: enough structure that convergence takes
+        // a handful of iterations. Seeding from the converged answer must
+        // re-converge immediately; seeding from a nearby vector converges
+        // to the same scores (unique fixed point) in fewer iterations.
+        let mut coo: CooMatrix = CooMatrix::new(5, 5);
+        for i in 0..5 {
+            coo.push((i + 1) % 5, i, 1.0);
+            coo.push(i, (i + 1) % 5, 1.0);
+        }
+        coo.push(0, 2, 1.0);
+        coo.push(2, 0, 1.0);
+        let m = coo.to_csr();
+        let opts = PprOptions { source: 1, tol: 1e-5, max_iters: 300, ..Default::default() };
+        let colsums = column_sums(&m);
+        let cold = ppr_with(m.nrows, &colsums, &opts, |z, y| y.copy_from_slice(&m.spmv(z)));
+        assert!(cold.converged && !cold.warm_started);
+        let warm = ppr_with_seed(m.nrows, &colsums, &opts, Some(&cold.scores), |z, y| {
+            y.copy_from_slice(&m.spmv(z))
+        });
+        assert!(warm.converged && warm.warm_started);
+        assert!(
+            warm.iterations < cold.iterations,
+            "warm {} vs cold {}",
+            warm.iterations,
+            cold.iterations
+        );
+        for i in 0..5 {
+            assert!((warm.scores[i] as f64 - cold.scores[i] as f64).abs() < 1e-4);
+        }
+        // Cold call through the seeded entry point stays bitwise-equal.
+        let cold2 = ppr_with_seed(m.nrows, &colsums, &opts, None, |z, y| y.copy_from_slice(&m.spmv(z)));
+        assert_eq!(cold2, cold);
     }
 }

@@ -64,6 +64,7 @@ pub struct ShardedSpmv<V: Dataword = f32> {
     policy: PartitionPolicy,
     pool: Arc<ThreadPool>,
     applies: AtomicUsize,
+    shards_skipped: AtomicUsize,
 }
 
 impl<V: Dataword> ShardedSpmv<V> {
@@ -72,7 +73,7 @@ impl<V: Dataword> ShardedSpmv<V> {
     /// fewer workers, stripes are multiplexed onto the available ones).
     pub fn new(matrix: Arc<CsrMatrix<V>>, cus: usize, policy: PartitionPolicy, pool: Arc<ThreadPool>) -> Self {
         let parts = partition_rows_balanced(&matrix, cus, policy);
-        Self { matrix, parts, policy, pool, applies: AtomicUsize::new(0) }
+        Self { matrix, parts, policy, pool, applies: AtomicUsize::new(0), shards_skipped: AtomicUsize::new(0) }
     }
 
     /// Convenience constructor that spawns a dedicated pool with one worker
@@ -110,6 +111,15 @@ impl<V: Dataword> ShardedSpmv<V> {
         self.applies.load(Ordering::Relaxed)
     }
 
+    /// Cumulative CU shards pruned by the early-exit Top-K bound checks
+    /// ([`ShardedSpmv::top_k_with_bounds`] /
+    /// [`ShardedSpmv::top_k_batch_with_bounds`]) since this engine was
+    /// built — matrix stripes whose packets were provably not worth
+    /// streaming.
+    pub fn shards_skipped(&self) -> usize {
+        self.shards_skipped.load(Ordering::Relaxed)
+    }
+
     /// Short name of the storage format this engine streams.
     pub fn format_name(&self) -> &'static str {
         V::NAME
@@ -136,35 +146,6 @@ impl<V: Dataword> ShardedSpmv<V> {
         &self.matrix
     }
 
-    /// Rebind this engine to an updated matrix, re-deriving the CU shard
-    /// table and reporting which shards the delta actually touched — the
-    /// incremental re-prep step of the registry's update path.
-    ///
-    /// `matrix` is the post-delta CSR (same dimensions, values already in
-    /// this engine's storage format); `dirty_rows` is the sorted dirty set
-    /// from [`CooMatrix::apply_delta`](crate::sparse::CooMatrix::apply_delta).
-    /// The new engine shares this engine's worker pool (no thread churn)
-    /// and keeps its policy; partitions are recomputed with the same
-    /// function a from-scratch prepare uses, so an incrementally rebuilt
-    /// engine is **indistinguishable** from a freshly built one — solves
-    /// against either are bitwise identical.
-    ///
-    /// A shard counts as *reused* when its row range, nnz, and rows are
-    /// untouched by the delta (identical boundaries, no dirty row
-    /// inside) — the [`ShardRebuild`] telemetry classifies CU images as
-    /// dirty or carried-over, which is what the acceptance test pins. Be
-    /// precise about what is and is not saved: the caller re-streams the
-    /// full value array regardless (Frobenius re-normalization after an
-    /// update rescales every stored word — an O(nnz) pass no structural
-    /// reuse can avoid) and `matrix` arrives fully built, so "reuse" here
-    /// is the engine-level carry-over (pool, policy, and the clean
-    /// shards' identity for telemetry/validation), not a skipped copy of
-    /// index bytes. The splice-level savings live upstream: the registry
-    /// updates its canonical COO in `O(nnz + d)` without re-sorting
-    /// (`CooMatrix::apply_delta`), which is what the incremental-vs-full
-    /// re-prep bench measures. Consumers maintaining a raw *unnormalized*
-    /// CSR under deltas get true in-place splicing from
-    /// [`CsrMatrix::apply_delta`].
     /// Streaming Top-K SpMV query: score every row of the resident matrix
     /// against the dense vector `x` and return the `k` best
     /// `(index, score)` hits, best first.
@@ -212,6 +193,198 @@ impl<V: Dataword> ShardedSpmv<V> {
         merge_top_k(slots, k)
     }
 
+    /// Batched multi-query Top-K SpMM: answer `b = xs.len()` dense queries
+    /// against the resident matrix while streaming its packets **once for
+    /// the whole batch** instead of once per query (arxiv 2103.04808's
+    /// amortization — the same economics block Lanczos buys the
+    /// eigensolver).
+    ///
+    /// Each CU worker walks its row stripe in [`TOPK_ROW_CHUNK`]-row
+    /// chunks; inside a chunk the inner loop is column-blocked over the
+    /// batch — the chunk's CSR rows are re-scored for every query while
+    /// their index/value lines are cache-hot, feeding a per-(shard, query)
+    /// bounded heap. Per-query merges are the same totally-ordered
+    /// [`merge_top_k`], so element `q` of the result is **bitwise equal**
+    /// to an independent [`ShardedSpmv::top_k`]`(&xs[q], k)` call for any
+    /// shard count or policy — the per-query stripe-kernel call sequence
+    /// is identical; only the matrix traffic is shared.
+    ///
+    /// Telemetry: the sweep counts **one** `apply` regardless of `b`, so
+    /// [`ShardedSpmv::bytes_streamed`] per answered query drops by ~`b`×.
+    /// An empty batch or `k == 0` returns deterministically empty results
+    /// without streaming anything.
+    pub fn top_k_batch(&self, xs: &[Vec<f32>], k: usize) -> Vec<Vec<TopKEntry>> {
+        let refs: Vec<&[f32]> = xs.iter().map(Vec::as_slice).collect();
+        self.top_k_batch_core(&refs, k, None).0
+    }
+
+    /// [`ShardedSpmv::top_k_batch`] with early-exit shard pruning: given
+    /// the per-row L1 table from [`ShardedSpmv::row_l1_norms`] (the
+    /// registry caches it per `(handle, precision, generation)`), shards
+    /// are swept hottest-bound-first in waves, and once every query's
+    /// running top-`k` is full, a shard whose conservative score bound
+    /// cannot beat **any** query's current k-th score — and therefore no
+    /// later shard's either, the order is descending — is never streamed.
+    /// Returns the per-query results plus the number of shards skipped
+    /// (also accumulated on [`ShardedSpmv::shards_skipped`]).
+    ///
+    /// Exactness: a shard `s` is pruned only when, for every query `q`,
+    /// `shard_l1[s] * max_j|x_q[j]| * inflate < kth_q` strictly, where the
+    /// bound is evaluated in f64 and `inflate = (1 + 2^-24)^(max_row_nnz + 2)`
+    /// dominates the worst-case relative error of the f32 stripe
+    /// accumulation. Every *computed* score in a pruned shard is therefore
+    /// strictly below the running (hence the final) k-th score, so the
+    /// merged output is **bitwise equal** to the no-skip path — pruning
+    /// changes bytes moved, never bits returned.
+    pub fn top_k_batch_with_bounds(
+        &self,
+        xs: &[Vec<f32>],
+        k: usize,
+        row_l1: &[f64],
+    ) -> (Vec<Vec<TopKEntry>>, usize) {
+        let refs: Vec<&[f32]> = xs.iter().map(Vec::as_slice).collect();
+        self.top_k_batch_core(&refs, k, Some(row_l1))
+    }
+
+    /// Single-query early-exit Top-K: [`ShardedSpmv::top_k_batch_with_bounds`]
+    /// at batch size 1. Bitwise equal to [`ShardedSpmv::top_k`], returning
+    /// additionally how many CU shards the bound check pruned.
+    pub fn top_k_with_bounds(&self, x: &[f32], k: usize, row_l1: &[f64]) -> (Vec<TopKEntry>, usize) {
+        let (mut res, skipped) = self.top_k_batch_core(&[x], k, Some(row_l1));
+        (res.pop().unwrap_or_default(), skipped)
+    }
+
+    /// One CU worker's share of a batched sweep: chunk the stripe, score
+    /// every query per chunk while the chunk's matrix lines are cache-hot,
+    /// keep per-query bounded heaps. Per query this issues the exact
+    /// stripe-kernel call sequence `top_k` issues — the bitwise anchor of
+    /// the batch path.
+    fn sweep_shard(m: &CsrMatrix<V>, p: RowPartition, xs: &[&[f32]], k: usize) -> Vec<Vec<TopKEntry>> {
+        let mut heaps: Vec<TopKHeap> = xs.iter().map(|_| TopKHeap::new(k)).collect();
+        let mut buf = [0.0f32; TOPK_ROW_CHUNK];
+        let mut r0 = p.row_start;
+        while r0 < p.row_end {
+            let r1 = (r0 + TOPK_ROW_CHUNK).min(p.row_end);
+            for (heap, x) in heaps.iter_mut().zip(xs) {
+                let chunk = &mut buf[..r1 - r0];
+                m.spmv_into_stripe(x, chunk, r0, r1);
+                for (off, &score) in chunk.iter().enumerate() {
+                    heap.push((r0 + off) as u32, score);
+                }
+            }
+            r0 = r1;
+        }
+        heaps.into_iter().map(TopKHeap::into_sorted).collect()
+    }
+
+    fn top_k_batch_core(&self, xs: &[&[f32]], k: usize, row_l1: Option<&[f64]>) -> (Vec<Vec<TopKEntry>>, usize) {
+        let m = &self.matrix;
+        for x in xs {
+            assert!(x.len() >= m.ncols, "query vector shorter than ncols");
+        }
+        let b = xs.len();
+        let k = k.min(m.nrows);
+        if b == 0 || k == 0 {
+            // Nothing to select: deterministic empties, no matrix stream.
+            return (vec![Vec::new(); b], 0);
+        }
+        self.applies.fetch_add(1, Ordering::Relaxed);
+        let parts = &self.parts;
+
+        // No bound table: one scope over every shard, exactly `top_k`'s
+        // dispatch shape, batched.
+        let Some(rl1) = row_l1 else {
+            let mut slots: Vec<Vec<Vec<TopKEntry>>> = vec![Vec::new(); parts.len()];
+            let s_ptr = SendPtr(slots.as_mut_ptr());
+            self.pool.scope_chunks(parts.len(), |i| {
+                let out = Self::sweep_shard(m, parts[i], xs, k);
+                // SAFETY: as in `apply` — the scoped join outlives every
+                // use and slot `i` is written by exactly this task.
+                unsafe { *s_ptr.get().add(i) = out };
+            });
+            let mut results = Vec::with_capacity(b);
+            for q in 0..b {
+                let per_shard: Vec<Vec<TopKEntry>> =
+                    slots.iter_mut().map(|s| std::mem::take(&mut s[q])).collect();
+                results.push(merge_top_k(per_shard, k));
+            }
+            return (results, 0);
+        };
+        assert_eq!(rl1.len(), m.nrows, "row-bound table must cover every row");
+
+        // Conservative per-shard score bound: the shard's max row L1 times
+        // the query's max |x_j|, inflated past the worst-case relative
+        // error of the f32 stripe accumulation so the bound dominates
+        // computed scores, not just exact ones.
+        let mut shard_l1 = vec![0.0f64; parts.len()];
+        for (s, p) in parts.iter().enumerate() {
+            let mut hi = 0.0f64;
+            for r in p.row_start..p.row_end {
+                hi = hi.max(rl1[r]);
+            }
+            shard_l1[s] = hi;
+        }
+        let xmax: Vec<f64> =
+            xs.iter().map(|x| x[..m.ncols].iter().fold(0.0f64, |acc, &v| acc.max((v as f64).abs()))).collect();
+        let inflate = (1.0 + (-24.0f64).exp2()).powi((m.max_row_nnz().min(i32::MAX as usize - 2) as i32) + 2);
+        // Hottest bound first; ties to the lower shard (deterministic).
+        // Every query's bound shares the shard factor, so this one order
+        // is descending for the whole batch and the prune check can stop
+        // at the first unprunable shard.
+        let mut order: Vec<usize> = (0..parts.len()).collect();
+        order.sort_by(|&a, &c| shard_l1[c].total_cmp(&shard_l1[a]).then(a.cmp(&c)));
+        // Waves smaller than the full shard set buy prune points between
+        // joins even when the pool could cover every shard at once.
+        let wave = self.pool.size().min(parts.len().div_ceil(2)).max(1);
+
+        let mut merged: Vec<Vec<TopKEntry>> = vec![Vec::new(); b];
+        let mut skipped = 0usize;
+        let mut next = 0usize;
+        while next < order.len() {
+            let s = order[next];
+            let prunable = merged.iter().zip(&xmax).all(|(mq, &xm)| {
+                mq.len() == k && shard_l1[s] * xm * inflate < f64::from(mq[k - 1].score)
+            });
+            if prunable {
+                skipped = order.len() - next;
+                break;
+            }
+            let end = (next + wave).min(order.len());
+            let live = &order[next..end];
+            let mut slots: Vec<Vec<Vec<TopKEntry>>> = vec![Vec::new(); live.len()];
+            let s_ptr = SendPtr(slots.as_mut_ptr());
+            self.pool.scope_chunks(live.len(), |j| {
+                let out = Self::sweep_shard(m, parts[live[j]], xs, k);
+                // SAFETY: as in `apply` — the scoped join outlives every
+                // use and slot `j` is written by exactly this task.
+                unsafe { *s_ptr.get().add(j) = out };
+            });
+            for q in 0..b {
+                // Folding the running top-k with the new shards is exact:
+                // the order is total with unique row indices, so truncation
+                // keeps the same k best as one flat merge over all shards.
+                let mut fold: Vec<Vec<TopKEntry>> = Vec::with_capacity(live.len() + 1);
+                fold.push(std::mem::take(&mut merged[q]));
+                for slot in slots.iter_mut() {
+                    fold.push(std::mem::take(&mut slot[q]));
+                }
+                merged[q] = merge_top_k(fold, k);
+            }
+            next = end;
+        }
+        self.shards_skipped.fetch_add(skipped, Ordering::Relaxed);
+        (merged, skipped)
+    }
+
+    /// The early-exit bound table: per-row L1 norms of the stored values
+    /// in f64, serial and shard-independent (see
+    /// [`row_l1_norms`](crate::sparse::row_l1_norms)). Exposed so the
+    /// registry can cache it per `(handle, precision, generation)` beside
+    /// the PPR colsums.
+    pub fn row_l1_norms(&self) -> Vec<f64> {
+        query::row_l1_norms(self.matrix.as_ref())
+    }
+
     /// Personalized PageRank on the resident matrix: damped power
     /// iteration `x' = alpha * P x + (1 - alpha) * e_s` with
     /// dangling-mass redistribution and L1-delta stopping (see
@@ -245,10 +418,51 @@ impl<V: Dataword> ShardedSpmv<V> {
     /// normalizer pass once (see
     /// [`MatrixRegistry::column_sums`](crate::coordinator::MatrixRegistry::column_sums)).
     pub fn ppr_with_colsums(&self, opts: &PprOptions, colsums: &[f64]) -> PprResult {
-        assert_eq!(self.matrix.nrows, self.matrix.ncols, "PPR needs a square matrix");
-        query::ppr_with(self.matrix.nrows, colsums, opts, |z, y| self.apply(z, y))
+        self.ppr_with_colsums_seeded(opts, colsums, None)
     }
 
+    /// [`ShardedSpmv::ppr_with_colsums`] with an optional warm start: when
+    /// `seed` is `Some`, the power iteration begins from those scores
+    /// instead of the cold one-hot (see
+    /// [`ppr_with_seed`](crate::sparse::ppr_with_seed) — the fixed point
+    /// is unique, so seeding changes iteration count, never the limit).
+    /// The service feeds this the previous generation's converged scores
+    /// after a small `CooDelta`, so warm re-solves stream the matrix
+    /// measurably fewer times; each iteration still counts one `apply`.
+    pub fn ppr_with_colsums_seeded(&self, opts: &PprOptions, colsums: &[f64], seed: Option<&[f32]>) -> PprResult {
+        assert_eq!(self.matrix.nrows, self.matrix.ncols, "PPR needs a square matrix");
+        query::ppr_with_seed(self.matrix.nrows, colsums, opts, seed, |z, y| self.apply(z, y))
+    }
+
+    /// Rebind this engine to an updated matrix, re-deriving the CU shard
+    /// table and reporting which shards the delta actually touched — the
+    /// incremental re-prep step of the registry's update path.
+    ///
+    /// `matrix` is the post-delta CSR (same dimensions, values already in
+    /// this engine's storage format); `dirty_rows` is the sorted dirty set
+    /// from [`CooMatrix::apply_delta`](crate::sparse::CooMatrix::apply_delta).
+    /// The new engine shares this engine's worker pool (no thread churn)
+    /// and keeps its policy; partitions are recomputed with the same
+    /// function a from-scratch prepare uses, so an incrementally rebuilt
+    /// engine is **indistinguishable** from a freshly built one — solves
+    /// against either are bitwise identical.
+    ///
+    /// A shard counts as *reused* when its row range, nnz, and rows are
+    /// untouched by the delta (identical boundaries, no dirty row
+    /// inside) — the [`ShardRebuild`] telemetry classifies CU images as
+    /// dirty or carried-over, which is what the acceptance test pins. Be
+    /// precise about what is and is not saved: the caller re-streams the
+    /// full value array regardless (Frobenius re-normalization after an
+    /// update rescales every stored word — an O(nnz) pass no structural
+    /// reuse can avoid) and `matrix` arrives fully built, so "reuse" here
+    /// is the engine-level carry-over (pool, policy, and the clean
+    /// shards' identity for telemetry/validation), not a skipped copy of
+    /// index bytes. The splice-level savings live upstream: the registry
+    /// updates its canonical COO in `O(nnz + d)` without re-sorting
+    /// (`CooMatrix::apply_delta`), which is what the incremental-vs-full
+    /// re-prep bench measures. Consumers maintaining a raw *unnormalized*
+    /// CSR under deltas get true in-place splicing from
+    /// [`CsrMatrix::apply_delta`].
     pub fn rebuild_shards(&self, matrix: Arc<CsrMatrix<V>>, dirty_rows: &[u32]) -> (Self, ShardRebuild) {
         assert_eq!(matrix.nrows, self.matrix.nrows, "update must preserve dimensions");
         debug_assert!(dirty_rows.windows(2).all(|w| w[0] < w[1]), "dirty rows must be sorted and unique");
@@ -265,8 +479,14 @@ impl<V: Dataword> ShardedSpmv<V> {
                 stats.rebuilt += 1;
             }
         }
-        let engine =
-            Self { matrix, parts, policy: self.policy, pool: Arc::clone(&self.pool), applies: AtomicUsize::new(0) };
+        let engine = Self {
+            matrix,
+            parts,
+            policy: self.policy,
+            pool: Arc::clone(&self.pool),
+            applies: AtomicUsize::new(0),
+            shards_skipped: AtomicUsize::new(0),
+        };
         (engine, stats)
     }
 }
@@ -542,6 +762,86 @@ mod tests {
                 assert_eq!(got, want, "cus={cus} k={k}");
             }
             assert_eq!(engine.applies(), 4, "one matrix stream per query");
+        }
+    }
+
+    #[test]
+    fn top_k_batch_is_bitwise_equal_to_independent_queries_and_streams_once() {
+        let m = Arc::new(graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 51).to_csr());
+        let xs: Vec<Vec<f32>> = (0..4)
+            .map(|q| (0..m.nrows).map(|i| ((i * 29 + q * 7) % 13) as f32 * 0.1 - 0.6).collect())
+            .collect();
+        for cus in [1usize, 3, 5, 8] {
+            let engine = ShardedSpmv::with_own_pool(Arc::clone(&m), cus, PartitionPolicy::BalancedNnz);
+            let batch = engine.top_k_batch(&xs, 8);
+            assert_eq!(engine.applies(), 1, "one matrix stream per batch, cus={cus}");
+            assert_eq!(batch.len(), 4);
+            for (q, x) in xs.iter().enumerate() {
+                let single = ShardedSpmv::with_own_pool(Arc::clone(&m), cus, PartitionPolicy::BalancedNnz);
+                assert_eq!(batch[q], single.top_k(x, 8), "cus={cus} q={q}");
+            }
+            // Degenerate batches select nothing and stream nothing.
+            assert!(engine.top_k_batch(&[], 8).is_empty());
+            assert_eq!(engine.top_k_batch(&xs, 0), vec![Vec::new(); 4]);
+            assert_eq!(engine.applies(), 1);
+        }
+    }
+
+    #[test]
+    fn early_exit_skips_cold_shards_and_stays_bitwise_exact() {
+        // Skewed norms: rows 0..64 carry ~5 orders of magnitude more
+        // weight than the rest, so under EqualRows all hot rows land in
+        // shard 0 and every other shard is provably prunable once the
+        // running top-k is full.
+        let mut coo: CooMatrix = CooMatrix::new(512, 512);
+        for r in 0..512usize {
+            let w = if r < 64 { 8.0f32 } else { 1e-4 };
+            coo.push(r, (r * 7 + 1) % 512, w);
+            coo.push(r, (r * 13 + 5) % 512, w * 0.5);
+        }
+        let m = Arc::new(coo.to_csr());
+        // A 2-worker pool under 8 shards: waves of 2, so prune checks fire
+        // between joins.
+        let pool = Arc::new(ThreadPool::new(2));
+        let engine = ShardedSpmv::new(Arc::clone(&m), 8, PartitionPolicy::EqualRows, pool);
+        let bounds = engine.row_l1_norms();
+        let x = vec![1.0f32; 512];
+        let (got, skipped) = engine.top_k_with_bounds(&x, 8, &bounds);
+        assert!(skipped > 0, "cold shards must be pruned");
+        assert_eq!(engine.shards_skipped(), skipped);
+        assert_eq!(got, engine.top_k(&x, 8), "pruning changes bytes, never bits");
+        // Batched variant: prune only when every member allows it; each
+        // member stays bitwise-equal to its independent query.
+        let xs: Vec<Vec<f32>> = vec![x.clone(), x.iter().map(|v| v * 0.5).collect()];
+        let (batch, bskip) = engine.top_k_batch_with_bounds(&xs, 8, &bounds);
+        assert!(bskip > 0);
+        for (q, xq) in xs.iter().enumerate() {
+            assert_eq!(batch[q], engine.top_k(xq, 8), "q={q}");
+        }
+        // Bounds on a flat-norm matrix stay harmless: whatever gets
+        // pruned (likely nothing), the result is still bitwise-exact.
+        let flat = Arc::new(graphs::mesh2d(20, 20, 0.9, 0.01, 3).to_csr());
+        let fe = ShardedSpmv::with_own_pool(Arc::clone(&flat), 5, PartitionPolicy::EqualRows);
+        let fx = vec![0.3f32; flat.nrows];
+        let fb = fe.row_l1_norms();
+        let (fres, _) = fe.top_k_with_bounds(&fx, 4, &fb);
+        assert_eq!(fres, fe.top_k(&fx, 4));
+    }
+
+    #[test]
+    fn seeded_engine_ppr_matches_cold_fixed_point_in_fewer_streams() {
+        let m = Arc::new(graphs::mesh2d(12, 12, 0.9, 0.02, 7).to_csr());
+        let opts = crate::sparse::PprOptions { source: 3, ..Default::default() };
+        let engine = ShardedSpmv::with_own_pool(Arc::clone(&m), 5, PartitionPolicy::EqualRows);
+        let colsums = engine.column_sums();
+        let cold = engine.ppr_with_colsums(&opts, &colsums);
+        assert!(cold.converged && !cold.warm_started);
+        let warm = engine.ppr_with_colsums_seeded(&opts, &colsums, Some(&cold.scores));
+        assert!(warm.converged && warm.warm_started);
+        assert!(warm.iterations < cold.iterations, "warm {} vs cold {}", warm.iterations, cold.iterations);
+        assert_eq!(engine.applies(), cold.iterations + warm.iterations, "one stream per iteration, warm or cold");
+        for i in 0..m.nrows {
+            assert!((warm.scores[i] as f64 - cold.scores[i] as f64).abs() < 1e-4);
         }
     }
 

@@ -1,4 +1,5 @@
-//! Steady-state allocation regression for the fused Lanczos iteration.
+//! Steady-state allocation regression for the fused Lanczos iteration and
+//! the batched Top-K query sweep.
 //!
 //! The fused datapath must perform **zero heap allocations per iteration**
 //! after warmup: all scratch lives in a reused `LanczosWorkspace`, the
@@ -75,6 +76,42 @@ fn unfused_path_also_reuses_the_workspace() {
     let a8 = allocs_during(|| -> LanczosResult { lanczos_typed_ws(&engine, &opts(8), &mut ws) });
     let a16 = allocs_during(|| -> LanczosResult { lanczos_typed_ws(&engine, &opts(16), &mut ws) });
     assert_eq!(a8, a16, "unfused per-solve allocations grew with k ({a8} -> {a16})");
+}
+
+#[test]
+fn batched_topk_allocations_do_not_scale_with_matrix_size() {
+    // The batched Top-K sweep must allocate a constant set per call —
+    // query refs, per-(shard, query) heaps, the merged results — and
+    // nothing per row chunk, so a warm call's allocation count is flat in
+    // the matrix size. `cus = 1` routes the whole sweep through the
+    // calling thread (single-task scopes run inline), so the thread-local
+    // counter sees every allocation the batch path makes; a multi-shard
+    // dispatch would split the count nondeterministically between the
+    // caller and the pool workers.
+    let (k, b) = (8usize, 4usize);
+    let mut plain = Vec::new();
+    let mut bounded = Vec::new();
+    for n in [512usize, 1024, 2048] {
+        let mut g = graphs::rmat(n, 8 * n, 0.57, 0.19, 0.19, 23);
+        normalize_frobenius(&mut g);
+        let csr = Arc::new(g.to_csr());
+        let engine = ShardedSpmv::with_own_pool(Arc::clone(&csr), 1, PartitionPolicy::BalancedNnz);
+        let xs: Vec<Vec<f32>> = (0..b)
+            .map(|q| (0..n).map(|i| ((i * 37 + q * 101 + 5) % 97) as f32 / 97.0 - 0.5).collect())
+            .collect();
+        let row_l1 = engine.row_l1_norms();
+        let _warm = engine.top_k_batch(&xs, k);
+        plain.push(allocs_during(|| engine.top_k_batch(&xs, k)));
+        bounded.push(allocs_during(|| engine.top_k_batch_with_bounds(&xs, k, &row_l1)));
+    }
+    assert_eq!(plain[0], plain[1], "batched sweep allocations grew with n: {plain:?}");
+    assert_eq!(plain[1], plain[2], "batched sweep allocations grew with n: {plain:?}");
+    assert_eq!(bounded[0], bounded[1], "bounded sweep allocations grew with n: {bounded:?}");
+    assert_eq!(bounded[1], bounded[2], "bounded sweep allocations grew with n: {bounded:?}");
+    // The constant itself stays small: a fat bound catches gross
+    // regressions (per-chunk boxing would add hundreds) without pinning
+    // the exact breakdown.
+    assert!(plain[2] <= 64, "per-batch allocation constant too large: {}", plain[2]);
 }
 
 #[test]

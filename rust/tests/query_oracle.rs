@@ -4,7 +4,14 @@
 //!   **bitwise equal** to "full SpMV + stable sort by (score desc, index
 //!   asc) + truncate" for every storage format, shard count, partition
 //!   policy, and k — including tie-heavy score distributions, rows with no
-//!   nonzeros, and k beyond the row count.
+//!   nonzeros, k = 0 (the deterministic empty answer), and k beyond the
+//!   row count.
+//! * **Batched SpMM**: `top_k_batch` must answer every member bitwise
+//!   equal to an independent `top_k` call for every format and shard
+//!   count — batching changes bytes streamed, never bits answered.
+//! * **Early exit**: the bounded sweep (`top_k_with_bounds`, the path the
+//!   service always takes) must skip provably-cold shards on a skewed
+//!   fixture while staying bitwise equal to the full sweep.
 //! * **Replica independence**: a 1-replica and an N-replica service must
 //!   answer the same query stream bitwise identically.
 //! * **PPR**: the reduced-precision power iteration must land within the
@@ -124,9 +131,112 @@ fn top_k_survives_tie_floods_empty_rows_and_k_beyond_n() {
                 let zeros = vec![0.0f32; n];
                 let got = engine.top_k(&zeros, 5);
                 assert_eq!(got.iter().map(|e| e.index).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+                // k = 0: the deterministic empty answer, at every layer
+                // (heap, merge, engine, batch) — never a panic, never a
+                // partial result.
+                assert!(engine.top_k(&ones, 0).is_empty(), "{} cus={cus}", p.name());
+                assert!(engine.top_k_batch(&[ones.clone(), tiny.clone()], 0).iter().all(Vec::is_empty));
             }
         });
     }
+}
+
+#[test]
+fn top_k_batch_answers_every_member_bitwise_equal_to_independent_queries() {
+    // The batched-SpMM acceptance bar: for every storage format and shard
+    // count, `top_k_batch` over b vectors must reproduce b independent
+    // `top_k` calls bit for bit — the shared shard sweep changes how many
+    // times the matrix bytes stream, never a single answer bit.
+    let n = 1usize << 8;
+    let m = graphs::rmat(n, 6 * n, 0.57, 0.19, 0.19, 43);
+    let xs: Vec<Vec<f32>> = (0..4u64).map(|q| query_vec(n, 100 + q)).collect();
+    for p in Precision::ALL {
+        with_precision!(p, V => {
+            let (csr, _) = stored_csr::<V>(&m);
+            let csr = Arc::new(csr);
+            for cus in [1usize, 3, 5, 8] {
+                for policy in [PartitionPolicy::EqualRows, PartitionPolicy::BalancedNnz] {
+                    let engine = ShardedSpmv::with_own_pool(Arc::clone(&csr), cus, policy);
+                    for k in [1usize, 8, n] {
+                        let batch = engine.top_k_batch(&xs, k);
+                        assert_eq!(batch.len(), xs.len());
+                        for (q, x) in xs.iter().enumerate() {
+                            assert_eq!(
+                                batch[q],
+                                engine.top_k(x, k),
+                                "{} cus={cus} {policy:?} k={k} member {q}",
+                                p.name()
+                            );
+                        }
+                    }
+                }
+            }
+        });
+    }
+}
+
+/// A symmetric matrix whose score mass is concentrated in rows
+/// `0..hot`: a ring of weight-8 edges inside the hot block, a ring of
+/// weight-1e-4 edges among the rest. Under `EqualRows` sharding the hot
+/// block lands in the first shard(s), so a positive query fills the
+/// top-k there and the per-shard bound prunes the cold shards.
+fn skewed_symmetric(n: usize, hot: usize) -> CooMatrix {
+    let mut m = CooMatrix::new(n, n);
+    for r in 0..hot {
+        let c = (r + 1) % hot;
+        m.push(r, c, 8.0);
+        m.push(c, r, 8.0);
+    }
+    for r in hot..n {
+        let c = hot + (r - hot + 1) % (n - hot);
+        if c != r {
+            m.push(r, c, 1e-4);
+            m.push(c, r, 1e-4);
+        }
+    }
+    m
+}
+
+#[test]
+fn service_queries_skip_cold_shards_and_stay_bitwise_exact() {
+    // The early-exit acceptance bar, through the full service path: the
+    // bounded sweep (which the service always takes — row bounds are
+    // cached in the registry) must skip shards on a skewed-norm fixture,
+    // report them in `ServiceStats::shards_skipped`, and answer bitwise
+    // what the plain sort oracle answers.
+    let n = 512usize;
+    let m = skewed_symmetric(n, 64);
+    let x = vec![0.5f32; n];
+    let opts = SolveOptions { cus: 8, partition: PartitionPolicy::EqualRows, ..Default::default() };
+    let want = expected_topk(&m, &x, 8);
+    assert!(want.iter().all(|e| (e.index as usize) < 64), "top-8 must live in the hot block");
+
+    let svc = EigenService::with_config(ServiceConfig { replicas: 1, ..Default::default() });
+    let h = svc.register(m.clone()).unwrap();
+    let (_, t) = svc.submit_query(h, x.clone(), 8, opts.clone());
+    let ans = t.wait().outcome.expect("query failed");
+    assert_eq!(ans.entries, want, "early exit must not change a bit");
+    let stats = svc.stats();
+    assert!(stats.shards_skipped > 0, "skewed fixture must prune cold shards: {stats:?}");
+
+    // The batched path takes the same bounds: per-member answers stay
+    // bitwise equal to each member's own oracle, the row-bound table is
+    // built once, and skipping still happens (pruning a shard requires
+    // the bound to hold for *every* member).
+    let x_quarter: Vec<f32> = x.iter().map(|v| v * 0.25).collect();
+    let want_quarter = expected_topk(&m, &x_quarter, 8);
+    let xs = vec![x.clone(), x_quarter, x];
+    let tickets = svc.submit_query_batch(h, xs, 8, opts);
+    for ((_, t), w) in tickets.into_iter().zip([&want, &want_quarter, &want]) {
+        let a = t.wait().outcome.expect("batch member failed");
+        assert_eq!(&a.entries, w);
+    }
+    let stats2 = svc.stats();
+    assert!(stats2.shards_skipped > stats.shards_skipped, "{stats2:?}");
+    let rstats = svc.registry().stats();
+    assert_eq!(rstats.rowbound_builds, 1, "one row-bound pass serves every query: {rstats:?}");
+    assert!(rstats.rowbound_hits >= 1, "{rstats:?}");
+    svc.shutdown();
 }
 
 #[test]

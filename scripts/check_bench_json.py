@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Validate a bench JSONL report (one JSON doc per line, each carrying a
+`suite` name and a list of labeled metric `rows`).
+
+Usage: check_bench_json.py <report.json> <suite>
+
+One validator for every perf-smoke bench: exits non-zero when the report
+is missing rows the suite must produce or a cross-row semantic invariant
+fails (e.g. KBatched must reconfigure less than FIFO, batched queries
+must cut matrix bytes per answer). Raw throughput numbers are never
+gated here -- CI runners are too noisy -- only presence and internal
+consistency.
+"""
+
+import json
+import sys
+
+
+def load_rows(path, suite):
+    """All labeled rows across the file's JSONL docs, plus the row count."""
+    rows = {}
+    count = 0
+    with open(path) as f:
+        for line in f:
+            if not line.strip():
+                continue
+            doc = json.loads(line)
+            assert doc["suite"] == suite, f"suite mismatch: {doc}"
+            for row in doc["rows"]:
+                rows[row["label"]] = row
+                count += 1
+    return rows, count
+
+
+def require(rows, labels):
+    for label in labels:
+        assert label in rows, f"missing row {label}: {sorted(rows)}"
+
+
+def check_lanczos_fused(rows, count):
+    assert count >= 4, f"expected fused+unfused rows for K in {{8, 32}}, got {count}"
+    return "fused+unfused K sweep present"
+
+
+def check_service_throughput(rows, count):
+    require(rows, ("single_job", "batch", "registry", "mixed_k_fifo",
+                   "mixed_k_kbatched", "policy_summary"))
+    summary = rows["policy_summary"]
+    assert summary["kbatched_reconfigs"] < summary["fifo_reconfigs"], summary
+    assert rows["registry"]["prepares"] == 1, rows["registry"]
+    return (f"reconfigs fifo={summary['fifo_reconfigs']:.0f} "
+            f"kbatched={summary['kbatched_reconfigs']:.0f}")
+
+
+def check_delta_update(rows, count):
+    for frac in ("0.001", "0.01", "0.1"):
+        label = f"reprep_dirty_{frac}"
+        require(rows, (label,))
+        assert rows[label]["exact"] == 1.0, rows[label]
+    require(rows, tuple(f"warm_vs_cold_k{k}" for k in (1, 4, 8)))
+    # The smallest delta must reuse most CU shards.
+    small = rows["reprep_dirty_0.001"]
+    assert small["shards_reused"] >= 1, small
+    return (f"0.1%-dirty re-prep speedup {small['speedup_incremental']:.2f}x, "
+            f"warm k=1 saves {rows['warm_vs_cold_k1']['spmv_saved']:.0f} SpMVs")
+
+
+def check_query_throughput(rows, count):
+    require(rows, ("replica_equivalence", "query_only", "query_batched",
+                   "query_early_exit", "ppr_only", "ppr_warm_restart",
+                   "mixed_eigen_query"))
+    assert rows["ppr_only"]["colsum_builds"] == 1, rows["ppr_only"]
+    mixed = rows["mixed_eigen_query"]
+    for key in ("query_p50_ms", "query_p99_ms", "jobs_per_s"):
+        assert mixed[key] > 0, mixed
+    assert mixed["query_p50_ms"] <= mixed["query_p99_ms"], mixed
+    # Batched SpMM: matrix bytes per answered query must at least halve at
+    # batch 4 and keep dropping at batch 8 (the bench separately gates
+    # bitwise equality with the unbatched stream before reporting).
+    batched = rows["query_batched"]
+    assert batched["bytes_drop_b4"] >= 2.0, batched
+    assert (batched["bytes_per_query_b8"] <= batched["bytes_per_query_b4"]
+            <= batched["bytes_per_query_b1"]), batched
+    early = rows["query_early_exit"]
+    assert early["shards_skipped"] > 0, early
+    warm = rows["ppr_warm_restart"]
+    assert warm["warm_hits"] >= 1, warm
+    assert warm["warm_iters"] <= warm["cold_iters"], warm
+    return (f"batch=4 matrix bytes/query drop {batched['bytes_drop_b4']:.1f}x; "
+            f"early exit skipped {early['shards_skipped']:.0f} shards; "
+            f"warm PPR saves {warm['iters_saved']:.0f} sweeps; "
+            f"mixed-load query p99 {mixed['query_p99_ms']:.2f} ms")
+
+
+CHECKS = {
+    "lanczos_fused": check_lanczos_fused,
+    "service_throughput": check_service_throughput,
+    "delta_update": check_delta_update,
+    "query_throughput": check_query_throughput,
+}
+
+
+def main():
+    if len(sys.argv) != 3 or sys.argv[2] not in CHECKS:
+        sys.exit(f"usage: {sys.argv[0]} <report.json> <suite>; "
+                 f"suites: {', '.join(sorted(CHECKS))}")
+    path, suite = sys.argv[1], sys.argv[2]
+    rows, count = load_rows(path, suite)
+    detail = CHECKS[suite](rows, count)
+    print(f"{path} valid ({count} rows); {detail}")
+
+
+if __name__ == "__main__":
+    main()
