@@ -350,7 +350,8 @@ struct EngineSlot {
 
 type WarmKey = (u64, usize, Precision);
 
-/// Bound on warm-start entries (each is an n-length f32 vector).
+/// Bound on warm-start entries (each is a panel of up to `block_size`
+/// n-length f32 vectors; single-vector queries store one column).
 const WARM_CAP: usize = 256;
 
 /// PPR warm-score identity: the iteration's fixed point depends on the
@@ -362,12 +363,15 @@ type PprWarmKey = (u64, Precision, usize, u64);
 /// Bound on PPR warm-score entries (each is an n-length f32 vector).
 const PPR_WARM_CAP: usize = 256;
 
-/// One warm-start cache slot: a usable seed, or a negative entry for keys
-/// where warm-starting proved counterproductive (the seed collapsed the
-/// Krylov subspace) — those queries run cold permanently instead of
-/// paying a truncated warm solve plus a cold retry on every repeat.
+/// One warm-start cache slot: a usable seed panel (the converged Ritz
+/// front of a previous solve — one column for single-vector warm starts,
+/// up to `b` columns for block-Lanczos panel seeds), or a negative entry
+/// for keys where warm-starting proved counterproductive (the seed
+/// collapsed the Krylov subspace) — those queries run cold permanently
+/// instead of paying a truncated warm solve plus a cold retry on every
+/// repeat.
 enum WarmEntry {
-    Seed(Vec<f32>),
+    Seed(Vec<Vec<f32>>),
     Disabled,
 }
 
@@ -1011,14 +1015,22 @@ impl MatrixRegistry {
     /// the previous dominant Ritz vector, if the cache is enabled, has
     /// seen this query complete, and the key is not negatively cached.
     pub fn warm_v1(&self, h: MatrixHandle, k: usize, precision: Precision) -> Option<Vec<f32>> {
-        if !self.cfg.warm_start {
+        self.warm_panel(h, k, precision, 1).and_then(|p| p.into_iter().next())
+    }
+
+    /// Warm-start *panel* for a repeated `(handle, k, precision)` query:
+    /// up to `b` leading Ritz vectors of the previous completed solve, in
+    /// decreasing-magnitude order — the block-Lanczos seed block. `b = 1`
+    /// degenerates to [`MatrixRegistry::warm_v1`].
+    pub fn warm_panel(&self, h: MatrixHandle, k: usize, precision: Precision, b: usize) -> Option<Vec<Vec<f32>>> {
+        if !self.cfg.warm_start || b == 0 {
             return None;
         }
         let inner = lock(&self.inner);
         match inner.warm.get(&(h.0, k, precision)) {
-            Some(WarmEntry::Seed(v)) => {
+            Some(WarmEntry::Seed(panel)) => {
                 self.warm_hits.fetch_add(1, Ordering::SeqCst);
-                Some(v.clone())
+                Some(panel.iter().take(b).cloned().collect())
             }
             Some(WarmEntry::Disabled) | None => None,
         }
@@ -1028,7 +1040,19 @@ impl MatrixRegistry {
     /// warm starts. No-op unless [`RegistryConfig::warm_start`] is set, or
     /// when the key has been [`MatrixRegistry::disable_warm`]-ed.
     pub fn store_warm(&self, h: MatrixHandle, k: usize, precision: Precision, dominant: &[f32]) {
-        if !self.cfg.warm_start || dominant.is_empty() {
+        if dominant.is_empty() {
+            return;
+        }
+        self.store_warm_panel(h, k, precision, std::slice::from_ref(&dominant));
+    }
+
+    /// Record the leading Ritz vectors of a completed query (decreasing
+    /// magnitude) for future warm starts: column 0 seeds single-vector
+    /// solves, the whole front seeds block panels. No-op unless
+    /// [`RegistryConfig::warm_start`] is set, or when the key has been
+    /// [`MatrixRegistry::disable_warm`]-ed.
+    pub fn store_warm_panel(&self, h: MatrixHandle, k: usize, precision: Precision, ritz: &[&[f32]]) {
+        if !self.cfg.warm_start || ritz.is_empty() || ritz.iter().any(|c| c.is_empty()) {
             return;
         }
         let mut inner = lock(&self.inner);
@@ -1036,7 +1060,8 @@ impl MatrixRegistry {
         if matches!(inner.warm.get(&key), Some(WarmEntry::Disabled)) {
             return;
         }
-        if inner.warm.insert(key, WarmEntry::Seed(dominant.to_vec())).is_none() {
+        let panel: Vec<Vec<f32>> = ritz.iter().map(|c| c.to_vec()).collect();
+        if inner.warm.insert(key, WarmEntry::Seed(panel)).is_none() {
             inner.warm_order.push_back(key);
             while inner.warm.len() > WARM_CAP {
                 if let Some(old) = inner.warm_order.pop_front() {
@@ -1242,6 +1267,29 @@ mod tests {
         let stats = warm.stats();
         assert_eq!(stats.warm_entries, 1);
         assert_eq!(stats.warm_hits, 1);
+    }
+
+    #[test]
+    fn warm_panel_round_trips_and_degenerates_to_v1() {
+        let reg = MatrixRegistry::new(RegistryConfig { warm_start: true, ..Default::default() });
+        let h = reg.register(graphs::mesh2d(8, 8, 0.9, 0.02, 11)).unwrap();
+        let cols: Vec<Vec<f32>> = (0..3).map(|c| vec![c as f32 + 0.25; 64]).collect();
+        let refs: Vec<&[f32]> = cols.iter().map(|c| c.as_slice()).collect();
+        reg.store_warm_panel(h, 8, Precision::Float32, &refs);
+        // Full panel, truncated panel, and the v1 view all come from one
+        // entry; warm_v1 returns the leading (dominant) column.
+        assert_eq!(reg.warm_panel(h, 8, Precision::Float32, 4).unwrap(), cols);
+        assert_eq!(reg.warm_panel(h, 8, Precision::Float32, 2).unwrap(), cols[..2].to_vec());
+        assert_eq!(reg.warm_v1(h, 8, Precision::Float32).unwrap(), cols[0]);
+        assert_eq!(reg.stats().warm_entries, 1);
+        // A single-vector store overwrites the same key with a 1-column
+        // panel; block requests still get a (smaller) usable seed.
+        reg.store_warm(h, 8, Precision::Float32, &cols[1]);
+        assert_eq!(reg.warm_panel(h, 8, Precision::Float32, 4).unwrap(), vec![cols[1].clone()]);
+        // Disabled keys refuse panels like they refuse v1 seeds.
+        reg.disable_warm(h, 8, Precision::Float32);
+        reg.store_warm_panel(h, 8, Precision::Float32, &refs);
+        assert!(reg.warm_panel(h, 8, Precision::Float32, 4).is_none());
     }
 
     #[test]

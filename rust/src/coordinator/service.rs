@@ -870,8 +870,16 @@ impl EigenService {
         let _guard = fence.read().unwrap_or_else(std::sync::PoisonError::into_inner);
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             let prep = registry.prepared(handle, &opts)?;
-            let v1 = registry.warm_v1(handle, k, opts.precision);
-            let mut sol = Solver::solve_detached(&prep, k, &opts, ws, v1)?;
+            // Warm seed in the shape the solve path wants: the block path
+            // seeds its whole initial panel from the cached Ritz front;
+            // the single-vector path takes the dominant column only.
+            let b = opts.block_size.max(1);
+            let (v1, panel) = if b > 1 {
+                (None, registry.warm_panel(handle, k, opts.precision, b))
+            } else {
+                (registry.warm_v1(handle, k, opts.precision), None)
+            };
+            let mut sol = Solver::solve_detached_seeded(&prep, k, &opts, ws, v1, panel)?;
             // A warm seed that is (nearly) an exact eigenvector can break
             // the recurrence down early, truncating the answer below the
             // requested K. Retry cold: if the truncation was genuine (an
@@ -883,8 +891,12 @@ impl EigenService {
             if sol.metrics.warm_started && sol.k() < k {
                 sol = Solver::solve_detached(&prep, k, &opts, ws, None)?;
                 registry.disable_warm(handle, k, opts.precision);
-            } else if let Some(dominant) = sol.eigenvectors.first() {
-                registry.store_warm(handle, k, opts.precision, dominant);
+            } else if !sol.eigenvectors.is_empty() {
+                // Store the leading Ritz front (up to b columns): repeats
+                // of this key at any block width find a usable seed.
+                let front: Vec<&[f32]> =
+                    sol.eigenvectors.iter().take(b.min(sol.k())).map(|v| v.as_slice()).collect();
+                registry.store_warm_panel(handle, k, opts.precision, &front);
             }
             Ok(sol)
         }));

@@ -119,6 +119,13 @@ pub trait BasisDots: Sync {
     /// while it is cache-hot from the SpMV. `w_chunk` is the caller's
     /// `[r0, r1)` slice of the working vector.
     fn dots_range(&self, w_chunk: &[f32], r0: usize, r1: usize, out: &mut [f64]);
+
+    /// Accumulating variant: `out[j] += dot(w_chunk, row_j[r0..r1])`. The
+    /// block sweep visits a shard stripe in row *chunks* (so all `b`
+    /// columns reuse each cache-hot chunk) and folds each chunk's partial
+    /// dots into the same per-shard slot; the plain [`BasisDots::dots_range`]
+    /// overwrite would discard the previous chunks' contribution.
+    fn dots_range_add(&self, w_chunk: &[f32], r0: usize, r1: usize, out: &mut [f64]);
 }
 
 impl<V: Dataword> BasisDots for BasisArena<V> {
@@ -131,6 +138,14 @@ impl<V: Dataword> BasisDots for BasisArena<V> {
         assert_eq!(w_chunk.len(), r1 - r0, "w_chunk must be the [r0, r1) slice");
         for (j, slot) in out.iter_mut().take(self.len()).enumerate() {
             *slot = linalg::dot_q(w_chunk, &self.row(j)[r0..r1]);
+        }
+    }
+
+    fn dots_range_add(&self, w_chunk: &[f32], r0: usize, r1: usize, out: &mut [f64]) {
+        assert!(out.len() >= self.len());
+        assert_eq!(w_chunk.len(), r1 - r0, "w_chunk must be the [r0, r1) slice");
+        for (j, slot) in out.iter_mut().take(self.len()).enumerate() {
+            *slot += linalg::dot_q(w_chunk, &self.row(j)[r0..r1]);
         }
     }
 }
@@ -185,6 +200,15 @@ mod tests {
         for j in 0..3 {
             let expect = linalg::dot_q(&w[2..14], &a.row(j)[2..14]);
             assert_eq!(out[j].to_bits(), expect.to_bits(), "row {j}");
+        }
+        // The accumulating variant folds chunked partials into the same
+        // slots the one-shot call would produce.
+        let mut acc = vec![0.0f64; 3];
+        a.dots_range_add(&w[2..8], 2, 8, &mut acc);
+        a.dots_range_add(&w[8..14], 8, 14, &mut acc);
+        for j in 0..3 {
+            let one_shot = linalg::dot_q(&w[2..8], &a.row(j)[2..8]) + linalg::dot_q(&w[8..14], &a.row(j)[8..14]);
+            assert_eq!(acc[j].to_bits(), one_shot.to_bits(), "chunked row {j}");
         }
     }
 

@@ -66,10 +66,10 @@ mod arena;
 mod operator;
 
 pub use arena::{BasisArena, BasisDots};
-pub use operator::{CountingOperator, FusedIteration, Operator, ShardedSpmv};
+pub use operator::{CountingOperator, FusedBlockIteration, FusedIteration, Operator, ShardedSpmv};
 
 use crate::fixed::{Dataword, Precision};
-use crate::linalg::{self, Tridiagonal};
+use crate::linalg::{self, BandTridiagonal, Tridiagonal};
 use crate::util::ptr::SendPtr;
 
 /// Reorthogonalization cadence (§III-A).
@@ -130,6 +130,20 @@ pub struct LanczosOptions {
     /// Relative stabilization tolerance on the top-k Ritz values, used
     /// only when `max_iters > k`.
     pub ritz_tol: f64,
+    /// Block width `b` for the block-Lanczos engine
+    /// ([`block_lanczos_typed_ws`]). The single-vector entry points
+    /// ([`lanczos_typed_ws`] and friends) **ignore** this field — routing
+    /// to the block engine is the caller's decision (the coordinator
+    /// branches on `SolveOptions::block_size`), which is what keeps
+    /// `block_size == 1` solves bitwise identical to the pre-block code.
+    pub block_size: usize,
+    /// Warm-start panel for the block engine: up to `block_size` starting
+    /// columns of length `n` (the registry passes cached Ritz vectors).
+    /// Column 0 falls back to [`LanczosOptions::v1`], remaining columns to
+    /// a deterministic pseudo-random fill; the whole panel is then
+    /// orthonormalized by the initial panel QR. Ignored by the
+    /// single-vector entry points.
+    pub panel: Option<Vec<Vec<f32>>>,
 }
 
 impl Default for LanczosOptions {
@@ -142,6 +156,8 @@ impl Default for LanczosOptions {
             v1: None,
             max_iters: 0,
             ritz_tol: 1e-6,
+            block_size: 1,
+            panel: None,
         }
     }
 }
@@ -157,6 +173,56 @@ fn ritz_converged(alphas: &[f64], betas: &[f64], k: usize, tol: f64, prev: &mut 
         Some(p) if p.len() == cur.len() => {
             let scale = cur[0].abs().max(1e-30);
             p.iter().zip(&cur).all(|(a, b)| (a - b).abs() <= tol * scale)
+        }
+        _ => false,
+    };
+    *prev = Some(cur);
+    done
+}
+
+/// Assemble the band-tridiagonal projection from the flat per-iteration
+/// coefficient logs: `a_flat` holds the symmetrized `b x b` diagonal
+/// blocks `A_j` (row-major, one per block iteration), `b_flat` the
+/// upper-triangular off-diagonal blocks `B_{j+1}`. The interleave gives a
+/// symmetric band of width exactly `b`.
+fn assemble_band(a_flat: &[f64], b_flat: &[f64], b: usize) -> BandTridiagonal {
+    let blocks = a_flat.len() / (b * b);
+    let dim = blocks * b;
+    let mut t = BandTridiagonal::new(dim, b);
+    for blk in 0..blocks {
+        for r in 0..b {
+            for c in r..b {
+                t.set_sym(blk * b + r, blk * b + c, a_flat[blk * b * b + r * b + c]);
+            }
+        }
+    }
+    for blk in 0..b_flat.len() / (b * b) {
+        // T[(blk+1)b + r][blk*b + c] = B_{blk+1}[r][c], upper triangular.
+        for r in 0..b {
+            for c in r..b {
+                t.set_sym((blk + 1) * b + r, blk * b + c, b_flat[blk * b * b + r * b + c]);
+            }
+        }
+    }
+    t
+}
+
+/// Adaptive stopping rule for the block recurrence: the band twin of
+/// [`ritz_converged`], comparing the top-`k` Ritz values of the current
+/// band projection against the previous block iteration's snapshot.
+fn band_ritz_converged(
+    a_flat: &[f64],
+    b_flat: &[f64],
+    b: usize,
+    k: usize,
+    tol: f64,
+    prev: &mut Option<Vec<f64>>,
+) -> bool {
+    let cur = assemble_band(a_flat, b_flat, b).top_k_by_magnitude(k);
+    let done = match prev {
+        Some(p) if p.len() == cur.len() => {
+            let scale = cur[0].abs().max(1e-30);
+            p.iter().zip(&cur).all(|(a, c)| (a - c).abs() <= tol * scale)
         }
         _ => false,
     };
@@ -181,6 +247,20 @@ pub struct LanczosWorkspace {
     projs: Vec<f64>,
     /// Per-chunk `||w||^2` partials of the apply sweep.
     chunk_acc: Vec<f64>,
+    /// Block panels (column-major `b x n`): the working panel `W`, the
+    /// current panel `V_j` (dequantized mirror of the latest committed
+    /// basis rows), and the previous panel `V_{j-1}`.
+    wb: Vec<f32>,
+    vb: Vec<f32>,
+    vb_prev: Vec<f32>,
+    /// Per-shard block-sweep partials, layout `[shard][b*b + rows*b]`.
+    block_partials: Vec<f64>,
+    /// Merged block dots `A_j` (`b x b`, row-major).
+    block_a: Vec<f64>,
+    /// Panel-QR coefficients `B_{j+1}` (`b x b`, row-major upper-tri).
+    block_b: Vec<f64>,
+    /// Merged block projections, column-grouped (`rows * b`).
+    block_projs: Vec<f64>,
 }
 
 impl LanczosWorkspace {
@@ -200,6 +280,19 @@ impl LanczosWorkspace {
         self.projs.resize(k, 0.0);
         self.chunk_acc.resize(shards, 0.0);
     }
+
+    /// Size the block-engine buffers for an `n`-dimensional solve producing
+    /// up to `rows` basis rows with block width `b` on `shards` reduction
+    /// lanes. Same growth-only discipline as [`LanczosWorkspace::ensure`].
+    fn ensure_block(&mut self, n: usize, rows: usize, b: usize, shards: usize) {
+        self.wb.resize(b * n, 0.0);
+        self.vb.resize(b * n, 0.0);
+        self.vb_prev.resize(b * n, 0.0);
+        self.block_partials.resize(shards * (b * b + rows * b), 0.0);
+        self.block_a.resize(b * b, 0.0);
+        self.block_b.resize(b * b, 0.0);
+        self.block_projs.resize(rows * b, 0.0);
+    }
 }
 
 /// Lanczos output: `T`, the Lanczos basis in storage format `V`, and
@@ -216,8 +309,14 @@ pub struct LanczosResult<V: Dataword = f32> {
     /// A breakdown at iteration `i` truncates the output to `i` components
     /// — mathematically it means an exact invariant subspace was found.
     pub breakdown_at: Option<usize>,
-    /// Number of SpMV applications performed.
+    /// Number of SpMV applications performed (vectors multiplied).
     pub spmv_count: usize,
+    /// Full walks of the matrix stream. The single-vector recurrence
+    /// multiplies one vector per walk, so this always equals
+    /// [`LanczosResult::spmv_count`] here; the block engine
+    /// ([`BlockLanczosResult::matrix_passes`]) multiplies `b` vectors per
+    /// walk, which is the quantity HBM bytes are charged against.
+    pub matrix_passes: usize,
     /// Fused fork/join sweeps executed ([`Operator::apply_fused`] calls;
     /// 0 on the unfused path).
     pub fused_sweeps: usize,
@@ -322,7 +421,7 @@ pub fn lanczos_typed_ws<V: Dataword, O: Operator + ?Sized>(
     // vectors cannot meaningfully normalize below ~sqrt(n)*ulp.
     let bd_tol = if V::IS_FIXED { 1e-9 } else { 1e-12 };
 
-    let LanczosWorkspace { w, v, v_prev, partials, projs, chunk_acc } = ws;
+    let LanczosWorkspace { w, v, v_prev, partials, projs, chunk_acc, .. } = ws;
     let mut beta_prev = 0.0f64;
 
     if opts.fused {
@@ -466,6 +565,7 @@ pub fn lanczos_typed_ws<V: Dataword, O: Operator + ?Sized>(
         basis,
         breakdown_at,
         spmv_count,
+        matrix_passes: spmv_count,
         fused_sweeps,
         vector_passes,
     }
@@ -502,10 +602,278 @@ pub fn lanczos<O: Operator + ?Sized>(op: &O, opts: &LanczosOptions) -> LanczosRe
             basis,
             breakdown_at: r.breakdown_at,
             spmv_count: r.spmv_count,
+            matrix_passes: r.matrix_passes,
             fused_sweeps: r.fused_sweeps,
             vector_passes: r.vector_passes,
         }
     })
+}
+
+/// Block Lanczos output: the band-tridiagonal projection `T`, the block
+/// basis (panels committed row-by-row into the same flat [`BasisArena`]
+/// layout the single-vector engine uses), and diagnostics.
+#[derive(Clone, Debug)]
+pub struct BlockLanczosResult<V: Dataword = f32> {
+    /// The `m x m` symmetric band projection (bandwidth = block size).
+    pub band: BandTridiagonal,
+    /// Block Lanczos basis: `m` rows of length `n` (panel `j` occupies
+    /// rows `j*b .. (j+1)*b`), stored as `V` words in one flat allocation.
+    pub basis: BasisArena<V>,
+    /// Block width `b` the recurrence ran with.
+    pub block_size: usize,
+    /// Basis row count at which the panel QR detected rank collapse, if
+    /// any — the block analog of `beta -> 0`: the Krylov space hit an
+    /// invariant subspace and the output is truncated to the committed
+    /// panels (a *better* answer, not a failure).
+    pub breakdown_at: Option<usize>,
+    /// Vectors multiplied (`matrix_passes * b`).
+    pub spmv_count: usize,
+    /// Full walks of the matrix stream — **one per block iteration**, the
+    /// quantity HBM bytes are charged against. The whole point of the
+    /// block engine: `b` vectors advance per walk.
+    pub matrix_passes: usize,
+    /// Fused block fork/join sweeps ([`Operator::apply_fused_block`] calls).
+    pub fused_sweeps: usize,
+    /// Full-length vector passes outside the fused sweep (projection-apply
+    /// rounds and panel commits).
+    pub vector_passes: usize,
+}
+
+impl<V: Dataword> BlockLanczosResult<V> {
+    /// Effective number of basis rows / band dimension produced.
+    pub fn k(&self) -> usize {
+        self.band.dim()
+    }
+
+    /// Bytes the stored basis occupies.
+    pub fn basis_value_bytes(&self) -> usize {
+        self.basis.value_bytes()
+    }
+}
+
+/// Run the **block** Lanczos recurrence against an [`Operator`] with block
+/// width `opts.block_size`, storing the basis in format `V`, with
+/// caller-provided scratch.
+///
+/// Per block iteration `j` (Paige-reordered, the block twin of the fused
+/// single-vector datapath):
+///
+/// 1. [`Operator::apply_fused_block`] — **one walk of the matrix** computes
+///    `W = M V_j` for all `b` columns, subtracts `V_{j-1} B_j^T` while each
+///    stripe chunk is cache-hot, and reduces the block dots
+///    `A_j = V_j^T W` plus (on reorth iterations) the projections of every
+///    column onto every committed basis row.
+/// 2. one chunk-parallel sweep subtracting the merged projections
+///    (classical GS; the rows of the current panel carry the `V_j A_j`
+///    term) or just `V_j A_j`.
+/// 3. a small panel QR ([`crate::linalg::panel_qr_mgs`], O(b^2 n) — noise
+///    next to the SpMV) orthonormalizes `W` into `V_{j+1}` and yields the
+///    upper-triangular `B_{j+1}`; the panel is committed column-by-column
+///    into the quantized basis with its dequantized working mirror.
+///
+/// The `A_j`/`B_{j+1}` coefficients interleave into a symmetric **band**
+/// matrix of bandwidth `b` ([`BandTridiagonal`]); its top-K Ritz pairs lift
+/// through the basis exactly as in the single-vector path. A rank-deficient
+/// panel truncates the decomposition (block breakdown). Adaptive stopping
+/// (`max_iters > k`) checks top-K Ritz stabilization once at least `k`
+/// basis rows exist, so a well-seeded panel (registry warm start) finishes
+/// in fewer matrix passes.
+pub fn block_lanczos_typed_ws<V: Dataword, O: Operator + ?Sized>(
+    op: &O,
+    opts: &LanczosOptions,
+    ws: &mut LanczosWorkspace,
+) -> BlockLanczosResult<V> {
+    let n = op.n();
+    let k = opts.k;
+    let b = opts.block_size.max(1);
+    assert!(k >= 1, "k must be >= 1");
+    assert!(k <= n, "k = {k} exceeds matrix dimension {n}");
+    let j_fixed = k.div_ceil(b);
+    assert!(j_fixed * b <= n, "block_size {b} x ceil(k/b) {j_fixed} exceeds matrix dimension {n}");
+    // Adaptive mode: max_iters counts *vectors* (as on the single path),
+    // rounded up to whole panels and capped so the basis fits in n rows.
+    let j_max = if opts.max_iters > k { opts.max_iters.div_ceil(b).min(n / b).max(j_fixed) } else { j_fixed };
+    let adaptive = j_max > j_fixed;
+    let mut ritz_prev: Option<Vec<f64>> = None;
+
+    let shards = op.fused_shards().max(1);
+    let rows_cap = j_max * b;
+    ws.ensure_block(n, rows_cap, b, shards);
+    let LanczosWorkspace { wb, vb, vb_prev, block_partials, block_a, block_b, block_projs, .. } = ws;
+    let wb: &mut [f32] = &mut wb[..b * n];
+    let mut vb: &mut [f32] = &mut vb[..b * n];
+    let mut vb_prev: &mut [f32] = &mut vb_prev[..b * n];
+
+    // Initial panel: warm columns from `opts.panel` (cached Ritz vectors),
+    // column 0 falling back to `v1` / the paper's uniform init, the rest to
+    // a deterministic pseudo-random fill; then orthonormalize (the initial
+    // panel QR coefficient is discarded — only the subspace matters).
+    let seeded = opts.panel.as_ref().map_or(0, |p| p.len().min(b));
+    for c in 0..b {
+        let col = &mut wb[c * n..(c + 1) * n];
+        if c < seeded {
+            let src = &opts.panel.as_ref().unwrap()[c];
+            assert_eq!(src.len(), n, "panel column length mismatch");
+            col.copy_from_slice(src);
+        } else if c == 0 {
+            match &opts.v1 {
+                Some(v1) => {
+                    assert_eq!(v1.len(), n, "v1 length mismatch");
+                    col.copy_from_slice(v1);
+                }
+                None => col.fill(1.0),
+            }
+        } else {
+            let mut rng = crate::util::rng::Pcg64::new(0x5eed_b10c ^ c as u64);
+            for x in col.iter_mut() {
+                *x = rng.f64_range(-1.0, 1.0) as f32;
+            }
+        }
+    }
+    let init_rank = linalg::panel_qr_mgs(wb, n, b, block_b, 1e-12);
+    assert_eq!(init_rank, b, "initial block panel is rank deficient ({init_rank} of {b} columns)");
+
+    // Commit the start panel: quantized basis rows + dequantized mirrors,
+    // so the recurrence and the stored basis agree bit for bit.
+    let mut basis = BasisArena::<V>::with_capacity(rows_cap, n);
+    for c in 0..b {
+        let row = basis.alloc_row();
+        linalg::scale_quantize_into(1.0, &wb[c * n..(c + 1) * n], &mut vb[c * n..(c + 1) * n], row);
+    }
+
+    // Flat coefficient logs: one symmetrized b*b A-block per iteration,
+    // one upper-triangular b*b B-block per completed panel QR.
+    let mut a_flat: Vec<f64> = Vec::with_capacity(j_max * b * b);
+    let mut b_flat: Vec<f64> = Vec::with_capacity(j_max.saturating_sub(1) * b * b);
+    let mut breakdown_at = None;
+    let mut matrix_passes = 0usize;
+    let mut fused_sweeps = 0usize;
+    let mut vector_passes = 0usize;
+    let bd_tol = if V::IS_FIXED { 1e-9 } else { 1e-12 };
+
+    for j in 0..j_max {
+        let reorth_due = j + 1 < j_max && opts.reorth.due(j + 1);
+        let nproj = if reorth_due { basis.len() } else { 0 };
+
+        // Sweep 1: the once-per-iteration matrix walk.
+        {
+            let mut it = FusedBlockIteration {
+                b,
+                v_prev: if j == 0 { &[] } else { &*vb_prev },
+                b_prev: &block_b[..b * b],
+                basis: if reorth_due { Some(&basis) } else { None },
+                partials: &mut block_partials[..shards * (b * b + nproj * b)],
+                a_out: &mut block_a[..b * b],
+                projs: &mut block_projs[..nproj * b],
+            };
+            op.apply_fused_block(vb, wb, &mut it);
+        }
+        matrix_passes += 1;
+        fused_sweeps += 1;
+        vector_passes += 1;
+        // Symmetrize A_j (equal up to f32 rounding by construction) so the
+        // recurrence and the reported T use the same coefficients.
+        for r in 0..b {
+            for c in r + 1..b {
+                let m = 0.5 * (block_a[r * b + c] + block_a[c * b + r]);
+                block_a[r * b + c] = m;
+                block_a[c * b + r] = m;
+            }
+        }
+        a_flat.extend_from_slice(&block_a[..b * b]);
+
+        // Stop at the iteration cap, or (adaptive) once the top-k Ritz
+        // values of the band have stabilized. Both breaks leave the shape
+        // invariant intact: j+1 A-blocks, j B-blocks, (j+1)*b basis rows.
+        if j + 1 == j_max
+            || (adaptive
+                && (j + 1) * b >= k
+                && band_ritz_converged(&a_flat, &b_flat, b, k, opts.ritz_tol, &mut ritz_prev))
+        {
+            break;
+        }
+
+        // Sweep 2: apply the merged projections (CGS; the current panel's
+        // rows carry the V_j A_j term) or just V_j A_j, chunk-parallel.
+        {
+            let wb_ptr = SendPtr(wb.as_mut_ptr());
+            let vb_ro: &[f32] = vb;
+            let a_ro: &[f64] = &block_a[..b * b];
+            let projs_ro: &[f64] = &block_projs[..nproj * b];
+            let basis_ro = &basis;
+            op.parallel_for(shards, &|ch| {
+                let (r0, r1) = chunk_range(n, shards, ch);
+                for c in 0..b {
+                    // SAFETY: chunks tile [0, n) disjointly per column and
+                    // the fork/join returns before `wb` moves.
+                    let w_chunk =
+                        unsafe { std::slice::from_raw_parts_mut(wb_ptr.get().add(c * n + r0), r1 - r0) };
+                    if reorth_due {
+                        basis_ro.apply_projections_norm2(
+                            &projs_ro[c * nproj..(c + 1) * nproj],
+                            w_chunk,
+                            r0,
+                            r1,
+                        );
+                    } else {
+                        for r in 0..b {
+                            linalg::axpy(-(a_ro[r * b + c] as f32), &vb_ro[r * n + r0..r * n + r1], w_chunk);
+                        }
+                    }
+                }
+            });
+        }
+        vector_passes += 1;
+
+        // Sweep 3: panel QR — rank collapse is the block breakdown; a full
+        // rank panel yields B_{j+1} and the next panel's orthonormal
+        // columns in place.
+        let rank = linalg::panel_qr_mgs(wb, n, b, block_b, bd_tol);
+        if rank < b {
+            breakdown_at = Some(basis.len());
+            break;
+        }
+        b_flat.extend_from_slice(&block_b[..b * b]);
+
+        // Commit V_{j+1}: quantized rows + dequantized mirrors.
+        std::mem::swap(&mut vb, &mut vb_prev);
+        for c in 0..b {
+            let row = basis.alloc_row();
+            let row_ptr = SendPtr(row.as_mut_ptr());
+            let v_ptr = SendPtr(vb[c * n..(c + 1) * n].as_mut_ptr());
+            let w_ro: &[f32] = &wb[c * n..(c + 1) * n];
+            op.parallel_for(shards, &|ch| {
+                let (r0, r1) = chunk_range(n, shards, ch);
+                // SAFETY: disjoint chunks; join precedes scope exit.
+                let row_chunk = unsafe { std::slice::from_raw_parts_mut(row_ptr.get().add(r0), r1 - r0) };
+                let v_chunk = unsafe { std::slice::from_raw_parts_mut(v_ptr.get().add(r0), r1 - r0) };
+                linalg::scale_quantize_into(1.0, &w_ro[r0..r1], v_chunk, row_chunk);
+            });
+            vector_passes += 1;
+        }
+    }
+
+    BlockLanczosResult {
+        band: assemble_band(&a_flat, &b_flat, b),
+        basis,
+        block_size: b,
+        breakdown_at,
+        spmv_count: matrix_passes * b,
+        matrix_passes,
+        fused_sweeps,
+        vector_passes,
+    }
+}
+
+/// [`block_lanczos_typed_ws`] with a fresh workspace (tests/one-shot
+/// callers; warm paths hold a [`LanczosWorkspace`], as the coordinator
+/// does).
+pub fn block_lanczos_typed<V: Dataword, O: Operator + ?Sized>(
+    op: &O,
+    opts: &LanczosOptions,
+) -> BlockLanczosResult<V> {
+    let mut ws = LanczosWorkspace::new();
+    block_lanczos_typed_ws(op, opts, &mut ws)
 }
 
 /// Lift an eigenvector `x` of `T` back to an (approximate) eigenvector of
@@ -820,5 +1188,134 @@ mod tests {
     fn k_larger_than_n_panics() {
         let m = diag(&[1.0, 2.0]);
         lanczos(&m, &LanczosOptions { k: 5, ..Default::default() });
+    }
+
+    #[test]
+    fn block_b1_reproduces_the_single_vector_recurrence() {
+        // At b = 1 the block recurrence degenerates to the classic one:
+        // the panel QR is the normalize step, A_j the alpha, B_{j+1} the
+        // beta. On a serial CSR operator the arithmetic sequences are
+        // identical, so the band must equal the tridiagonal to rounding.
+        let m = path_laplacian(48);
+        for reorth in [ReorthPolicy::None, ReorthPolicy::Every, ReorthPolicy::EveryN(2)] {
+            let opts = LanczosOptions { k: 6, reorth, block_size: 1, ..Default::default() };
+            let single = lanczos(&m, &opts);
+            let block: BlockLanczosResult = block_lanczos_typed(&m, &opts);
+            assert_eq!(block.block_size, 1);
+            assert_eq!(block.matrix_passes, 6);
+            assert_eq!(block.spmv_count, 6);
+            let t = block.band.to_tridiagonal().expect("b=1 band is tridiagonal");
+            for i in 0..6 {
+                assert!(
+                    (t.alpha[i] - single.tridiag.alpha[i]).abs() < 1e-10,
+                    "{reorth:?} alpha[{i}]: {} vs {}",
+                    t.alpha[i],
+                    single.tridiag.alpha[i]
+                );
+            }
+            for i in 0..5 {
+                assert!((t.beta[i] - single.tridiag.beta[i]).abs() < 1e-10, "{reorth:?} beta[{i}]");
+            }
+            for i in 0..6 {
+                assert_eq!(&block.basis[i], &single.basis[i], "{reorth:?} basis row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_recovers_known_spectrum_with_one_pass_per_iteration() {
+        // Geometrically decaying diagonal: top-4 magnitudes are 0.9,
+        // 0.9*0.7, 0.9*0.7^2, 0.9*0.7^3. Counting operator pins the stream
+        // economics: matrix walks == block iterations, vectors == walks*b.
+        let mut vals = vec![0.0f32; 32];
+        let mut cur = 0.9f32;
+        for v in vals.iter_mut() {
+            *v = cur;
+            cur *= 0.7;
+        }
+        let m = diag(&vals);
+        let c = CountingOperator::new(m);
+        let opts = LanczosOptions {
+            k: 4,
+            block_size: 2,
+            reorth: ReorthPolicy::Every,
+            max_iters: 24,
+            ritz_tol: 1e-10,
+            ..Default::default()
+        };
+        let res: BlockLanczosResult = block_lanczos_typed(&c, &opts);
+        assert_eq!(c.count(), res.matrix_passes, "one operator walk per block iteration");
+        assert_eq!(res.spmv_count, res.matrix_passes * 2);
+        assert!(res.fused_sweeps == res.matrix_passes);
+        let top = res.band.top_k_by_magnitude(4);
+        for (j, want) in vals.iter().take(4).enumerate() {
+            let want = f64::from(*want);
+            assert!((top[j] - want).abs() < 1e-5, "ritz[{j}] = {} want {want}", top[j]);
+        }
+        // Ritz vectors lift through the basis like the single-vector path.
+        let (vals_t, vecs_t) = crate::linalg::qr_algorithm_symmetric(&res.band.to_dense(), 1e-12, 500);
+        assert!((vals_t[0] - 0.9).abs() < 1e-5);
+        let q = lift_eigenvector_typed::<f32>(&res.basis, &vecs_t.col(0));
+        assert!(q[0].abs() > 0.99, "dominant Ritz vector must align with e_0, got q[0]={}", q[0]);
+    }
+
+    #[test]
+    fn block_breakdown_on_exact_invariant_subspace() {
+        // Panel spans an exactly invariant subspace (e_0, e_1 of a diagonal
+        // operator): W - V A_1 is exactly zero in f32, so the first panel
+        // QR collapses to rank 0 — the block analog of beta -> 0.
+        let mut vals = vec![0.0f32; 16];
+        vals[0] = 0.5;
+        vals[1] = 0.25;
+        let m = diag(&vals);
+        let mut e0 = vec![0.0f32; 16];
+        e0[0] = 1.0;
+        let mut e1 = vec![0.0f32; 16];
+        e1[1] = 1.0;
+        let opts = LanczosOptions {
+            k: 4,
+            block_size: 2,
+            panel: Some(vec![e0, e1]),
+            ..Default::default()
+        };
+        let res: BlockLanczosResult = block_lanczos_typed(&m, &opts);
+        assert_eq!(res.breakdown_at, Some(2));
+        assert_eq!(res.k(), 2);
+        assert_eq!(res.matrix_passes, 1);
+        let top = res.band.top_k_by_magnitude(2);
+        assert!((top[0] - 0.5).abs() < 1e-7, "{top:?}");
+        assert!((top[1] - 0.25).abs() < 1e-7, "{top:?}");
+    }
+
+    #[test]
+    fn block_workspace_reuse_matches_fresh_runs() {
+        let m = path_laplacian(64);
+        let mut ws = LanczosWorkspace::new();
+        let warm_opts =
+            LanczosOptions { k: 12, block_size: 4, reorth: ReorthPolicy::EveryN(2), ..Default::default() };
+        let _warm: BlockLanczosResult = block_lanczos_typed_ws(&m, &warm_opts, &mut ws);
+        for (k, b) in [(4usize, 2usize), (8, 4), (12, 4)] {
+            let opts = LanczosOptions { k, block_size: b, reorth: ReorthPolicy::EveryN(2), ..Default::default() };
+            let reused: BlockLanczosResult = block_lanczos_typed_ws(&m, &opts, &mut ws);
+            let fresh: BlockLanczosResult = block_lanczos_typed(&m, &opts);
+            assert_eq!(reused.band, fresh.band, "k={k} b={b}");
+            for i in 0..reused.basis.len() {
+                assert_eq!(&reused.basis[i], &fresh.basis[i], "k={k} b={b} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "rank deficient")]
+    fn block_rank_deficient_start_panel_panics() {
+        let m = path_laplacian(16);
+        let ones = vec![1.0f32; 16];
+        let opts = LanczosOptions {
+            k: 4,
+            block_size: 2,
+            panel: Some(vec![ones.clone(), ones]),
+            ..Default::default()
+        };
+        let _: BlockLanczosResult = block_lanczos_typed(&m, &opts);
     }
 }

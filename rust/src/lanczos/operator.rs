@@ -51,6 +51,40 @@ pub struct FusedIteration<'a> {
     pub projs: &'a mut [f64],
 }
 
+/// Everything one fused **block** Lanczos sweep needs besides the SpMV
+/// operands — the block generalization of [`FusedIteration`], consumed by
+/// [`Operator::apply_fused_block`]. All panels are column-major `b`
+/// columns of length `n` (column `c` is `panel[c*n..(c+1)*n]`).
+pub struct FusedBlockIteration<'a> {
+    /// Block width `b` (columns per panel).
+    pub b: usize,
+    /// Previous panel `V_{j-1}` (dequantized working copies), column-major
+    /// `b * n`; empty on the first block iteration (the `B_j^T` term
+    /// vanishes and the subtraction is skipped).
+    pub v_prev: &'a [f32],
+    /// Upper-triangular block coefficient `B_j` from the previous panel QR,
+    /// row-major `b x b` (`b_prev[c*b + i]` = B_j\[c\]\[i\], zero below the
+    /// diagonal). Column `c` of `V_{j-1} B_j^T` is
+    /// `sum_{i >= c} B_j[c][i] * v_prev_i`.
+    pub b_prev: &'a [f64],
+    /// Basis rows to project against on reorthogonalization iterations;
+    /// `None` otherwise.
+    pub basis: Option<&'a dyn BasisDots>,
+    /// Per-shard partial-reduction scratch, laid out `[shard][b*b + rows*b]`:
+    /// the first `b*b` slots hold the shard's partial block dots
+    /// `A_j[r][c]`, the rest its partial basis projections (column-grouped,
+    /// `b*b + c*rows + row`). Length must be at least
+    /// `fused_shards() * (b*b + rows*b)`.
+    pub partials: &'a mut [f64],
+    /// Merged block dots `A_j = X^T W`, row-major `b x b`
+    /// (`a_out[r*b + c] = dot(x_r, w_c)`).
+    pub a_out: &'a mut [f64],
+    /// Merged projection output, column-grouped `projs[c*rows + row]` (left
+    /// untouched when `basis` is `None`). Length must be at least
+    /// `rows * b`.
+    pub projs: &'a mut [f64],
+}
+
 /// A symmetric linear operator `y = M x` over `f32` vectors.
 pub trait Operator: Send + Sync {
     /// Concrete-type escape hatch for engines that support in-place
@@ -112,6 +146,47 @@ pub trait Operator: Send + Sync {
             basis.dots_range(y, 0, y.len(), it.projs);
         }
         alpha
+    }
+    /// The fused **block** Lanczos sweep: one walk of the matrix computes
+    /// `W = M X` for all `b` panel columns, subtracts the Paige-reordered
+    /// `V_{j-1} B_j^T` correction, reduces the `b x b` block dots
+    /// `A_j = X^T W`, and (on reorthogonalization iterations) the
+    /// projections of every column of `W` onto every committed basis row.
+    /// `x`/`y` are column-major `b * n` panels. This is where the block
+    /// economics live: the matrix is streamed **once per iteration instead
+    /// of once per vector**, so implementations count it as ONE matrix
+    /// pass regardless of `b`.
+    ///
+    /// The default implementation runs `b` serial [`Operator::apply`]
+    /// passes plus full-length vector ops — semantically identical, so any
+    /// operator supports the block iteration; the sharded engine overrides
+    /// it with a chunked per-stripe fork/join that keeps each CSR chunk
+    /// cache-hot across all `b` columns.
+    fn apply_fused_block(&self, x: &[f32], y: &mut [f32], it: &mut FusedBlockIteration<'_>) {
+        let n = self.n();
+        let b = it.b;
+        assert_eq!(x.len(), b * n, "x must be a column-major b x n panel");
+        assert_eq!(y.len(), b * n, "y must be a column-major b x n panel");
+        let nproj = it.basis.map_or(0, |bs| bs.rows());
+        for c in 0..b {
+            let wc = &mut y[c * n..(c + 1) * n];
+            self.apply(&x[c * n..(c + 1) * n], wc);
+            if !it.v_prev.is_empty() {
+                // w_c -= sum_{i >= c} B_j[c][i] * v_prev_i.
+                for i in c..b {
+                    let coeff = it.b_prev[c * b + i] as f32;
+                    if coeff != 0.0 {
+                        linalg::axpy(-coeff, &it.v_prev[i * n..(i + 1) * n], wc);
+                    }
+                }
+            }
+            for r in 0..b {
+                it.a_out[r * b + c] = linalg::dot(&x[r * n..(r + 1) * n], wc);
+            }
+            if let Some(basis) = it.basis {
+                basis.dots_range(wc, 0, n, &mut it.projs[c * nproj..(c + 1) * nproj]);
+            }
+        }
     }
     /// Run `f(i)` for every `i in 0..tasks`, possibly in parallel on the
     /// operator's worker pool (the sharded engine dispatches to its CU
@@ -185,6 +260,12 @@ impl<O: Operator> Operator for CountingOperator<O> {
         self.count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
         self.inner.apply_fused(x, y, it)
     }
+    fn apply_fused_block(&self, x: &[f32], y: &mut [f32], it: &mut FusedBlockIteration<'_>) {
+        // One tick per *matrix pass*, not per panel column — the whole
+        // point of the block sweep.
+        self.count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        self.inner.apply_fused_block(x, y, it);
+    }
     fn parallel_for(&self, tasks: usize, f: &(dyn Fn(usize) + Sync)) {
         self.inner.parallel_for(tasks, f);
     }
@@ -216,6 +297,53 @@ mod tests {
         assert_eq!(y, m.spmv(&x));
         assert_eq!(Operator::n(&m), m.nrows);
         assert_eq!(Operator::nnz(&m), m.nnz());
+    }
+
+    #[test]
+    fn fused_block_default_matches_column_serial_reference() {
+        let m = graphs::mesh2d(8, 8, 0.9, 0.02, 9).to_csr();
+        let (n, b) = (m.nrows, 3usize);
+        let x: Vec<f32> = (0..b * n).map(|i| ((i as f32) * 0.07).sin() * 0.5).collect();
+        let v_prev: Vec<f32> = (0..b * n).map(|i| ((i as f32) * 0.05).cos() * 0.3).collect();
+        let b_prev = [0.4f64, -0.2, 0.1, 0.0, 0.7, 0.3, 0.0, 0.0, 0.9];
+        let mut y = vec![0.0f32; b * n];
+        let mut a_out = vec![0.0f64; b * b];
+        let mut it = FusedBlockIteration {
+            b,
+            v_prev: &v_prev,
+            b_prev: &b_prev,
+            basis: None,
+            partials: &mut [],
+            a_out: &mut a_out,
+            projs: &mut [],
+        };
+        m.apply_fused_block(&x, &mut y, &mut it);
+        // Reference: per-column apply + triangular axpy + dots.
+        for c in 0..b {
+            let mut wc = vec![0.0f32; n];
+            Operator::apply(&m, &x[c * n..(c + 1) * n], &mut wc);
+            for i in c..b {
+                linalg::axpy(-(b_prev[c * b + i] as f32), &v_prev[i * n..(i + 1) * n], &mut wc);
+            }
+            assert_eq!(&y[c * n..(c + 1) * n], &wc[..], "column {c}");
+            for r in 0..b {
+                let expect = linalg::dot(&x[r * n..(r + 1) * n], &wc);
+                assert_eq!(a_out[r * b + c].to_bits(), expect.to_bits(), "A[{r}][{c}]");
+            }
+        }
+        // The counting wrapper charges ONE application per block pass.
+        let c = CountingOperator::new(m);
+        let mut it2 = FusedBlockIteration {
+            b,
+            v_prev: &v_prev,
+            b_prev: &b_prev,
+            basis: None,
+            partials: &mut [],
+            a_out: &mut a_out,
+            projs: &mut [],
+        };
+        c.apply_fused_block(&x, &mut y, &mut it2);
+        assert_eq!(c.count(), 1);
     }
 
     #[test]

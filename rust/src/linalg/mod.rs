@@ -8,6 +8,6 @@ mod tridiag;
 mod vecops;
 
 pub use dense::{mean_pairwise_angle_deg, DenseMatrix};
-pub use qr::{qr_decompose, qr_algorithm_symmetric};
-pub use tridiag::Tridiagonal;
+pub use qr::{panel_qr_mgs, qr_decompose, qr_algorithm_symmetric};
+pub use tridiag::{BandTridiagonal, Tridiagonal};
 pub use vecops::{axpy, axpy_dot, axpy_norm2, axpy_q, dot, dot_q, norm2, normalize, scale, scale_quantize_into};

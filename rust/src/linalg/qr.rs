@@ -8,6 +8,53 @@
 
 use crate::linalg::DenseMatrix;
 
+/// Tall-skinny panel QR via modified Gram-Schmidt — the intra-block
+/// orthonormalization step of the block Lanczos recurrence.
+///
+/// `panel` holds `b` columns of length `n`, column-major (column `j` is
+/// `panel[j*n..(j+1)*n]`). On return the leading `rank` columns are
+/// orthonormal (Q) and `r` holds the `b x b` upper-triangular factor in
+/// row-major order (`r[i*b + j]` = R\[i\]\[j\]), so `A = Q R` over the
+/// full-rank prefix. Dots and norms accumulate in f64 through the
+/// [`crate::linalg`] vector kernels; the panel itself stays f32 (the
+/// working-precision mirror of the quantized basis).
+///
+/// Returns the numerical rank: the index of the first column whose
+/// residual norm fell below `tol` after orthogonalization against the
+/// previous columns, or `b` when the panel is full rank. A deficient
+/// column means the block recurrence hit an invariant subspace (the block
+/// analog of `beta -> 0` breakdown); trailing columns of `panel` and the
+/// corresponding rows of `r` are left unspecified in that case.
+///
+/// The panel is at most `b x b` coefficients of O(b^2 n) flops — noise
+/// next to the O(nnz) SpMV — so a simple column-serial MGS (numerically
+/// the same variant the unfused reorthogonalization uses) is the right
+/// tool; no Householder accumulation is needed for b this small.
+pub fn panel_qr_mgs(panel: &mut [f32], n: usize, b: usize, r: &mut [f64], tol: f64) -> usize {
+    assert_eq!(panel.len(), n * b, "panel must hold b columns of length n");
+    assert!(r.len() >= b * b, "R buffer must hold b x b coefficients");
+    r[..b * b].fill(0.0);
+    for j in 0..b {
+        let (done, rest) = panel.split_at_mut(j * n);
+        let col = &mut rest[..n];
+        // MGS: project out each previous column in sequence, recording the
+        // coefficient against the *updated* residual.
+        for i in 0..j {
+            let qi = &done[i * n..(i + 1) * n];
+            let p = crate::linalg::dot(col, qi);
+            r[i * b + j] = p;
+            crate::linalg::axpy(-(p as f32), qi, col);
+        }
+        let nrm = crate::linalg::norm2(col);
+        if nrm < tol {
+            return j;
+        }
+        r[j * b + j] = nrm;
+        crate::linalg::scale((1.0 / nrm) as f32, col);
+    }
+    b
+}
+
 /// Householder QR: returns `(Q, R)` with `A = Q R`, `Q` orthogonal, `R`
 /// upper triangular.
 pub fn qr_decompose(a: &DenseMatrix) -> (DenseMatrix, DenseMatrix) {
@@ -239,6 +286,57 @@ mod tests {
             }
         }
         a
+    }
+
+    #[test]
+    fn panel_qr_orthonormalizes_and_factors() {
+        let (n, b) = (40usize, 3usize);
+        let mut rng = crate::util::rng::Pcg64::new(5);
+        let orig: Vec<f32> = (0..n * b).map(|_| rng.f64_range(-1.0, 1.0) as f32).collect();
+        let mut panel = orig.clone();
+        let mut r = vec![0.0f64; b * b];
+        let rank = panel_qr_mgs(&mut panel, n, b, &mut r, 1e-12);
+        assert_eq!(rank, b);
+        // Q columns orthonormal.
+        for j in 0..b {
+            let qj = &panel[j * n..(j + 1) * n];
+            assert!((crate::linalg::norm2(qj) - 1.0).abs() < 1e-6, "col {j} not unit");
+            for i in 0..j {
+                let d = crate::linalg::dot(qj, &panel[i * n..(i + 1) * n]).abs();
+                assert!(d < 1e-6, "cols {i},{j} dot {d}");
+            }
+        }
+        // R upper triangular with positive diagonal, and A = Q R.
+        for i in 0..b {
+            assert!(r[i * b + i] > 0.0);
+            for j in 0..i {
+                assert_eq!(r[i * b + j], 0.0, "R not upper triangular at ({i},{j})");
+            }
+        }
+        for j in 0..b {
+            for row in 0..n {
+                let mut acc = 0.0f64;
+                for i in 0..=j {
+                    acc += panel[i * n + row] as f64 * r[i * b + j];
+                }
+                assert!((acc - orig[j * n + row] as f64).abs() < 1e-5, "A != QR at ({row},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn panel_qr_reports_rank_deficiency() {
+        let (n, b) = (16usize, 3usize);
+        let mut panel = vec![0.0f32; n * b];
+        for i in 0..n {
+            let x = (i as f32 * 0.37).sin();
+            panel[i] = x; // col 0
+            panel[n + i] = 2.0 * x; // col 1: linearly dependent
+            panel[2 * n + i] = (i as f32 * 0.11).cos(); // col 2
+        }
+        let mut r = vec![0.0f64; b * b];
+        let rank = panel_qr_mgs(&mut panel, n, b, &mut r, 1e-6);
+        assert_eq!(rank, 1, "dependent column must stop the factorization");
     }
 
     #[test]

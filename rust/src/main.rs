@@ -120,6 +120,7 @@ fn cmd_solve(args: &[String]) -> i32 {
         .opt("partition", "row partition: equal-rows|balanced-nnz", Some("balanced-nnz"))
         .opt("engine", "spmv engine: native|pjrt", Some("native"))
         .opt("adaptive", "adaptive Lanczos stop: Ritz tolerance (0 = paper's fixed K iterations)", Some("0"))
+        .opt("block", "block-Lanczos width b: columns advanced per matrix stream (1 = single-vector)", Some("1"))
         .flag("no-fuse", "disable the fused Lanczos datapath (serial per-pass vector phase)")
         .flag("skip-symmetry-check", "trust the input to be symmetric (skips the O(nnz) prepare-time check)")
         .flag("verify", "print Fig-11 accuracy metrics")
@@ -147,10 +148,11 @@ fn cmd_solve(args: &[String]) -> i32 {
             fuse: !m.flag("no-fuse"),
             skip_symmetry_check: m.flag("skip-symmetry-check"),
             adaptive_tol: parse_adaptive(m.str("adaptive").unwrap())?,
+            block_size: m.parse_at_least::<usize>("block", 1).map_err(|e| e.to_string())?,
             ..Default::default()
         };
         println!(
-            "solving: n={} nnz={} k={} reorth={} precision={} cus={} threads={} partition={:?} engine={:?} fuse={}",
+            "solving: n={} nnz={} k={} reorth={} precision={} cus={} threads={} partition={:?} engine={:?} fuse={} block={}",
             matrix.nrows,
             matrix.nnz(),
             opts.k,
@@ -160,7 +162,8 @@ fn cmd_solve(args: &[String]) -> i32 {
             opts.effective_threads(),
             opts.partition,
             opts.engine,
-            opts.fuse
+            opts.fuse,
+            opts.block_size
         );
         let mut solver = Solver::new(opts);
         let sol = solver.solve(&matrix).map_err(|e| e.to_string())?;
@@ -181,8 +184,8 @@ fn cmd_solve(args: &[String]) -> i32 {
             mt.systolic.sweeps,
         );
         println!(
-            "lanczos datapath: fused-sweeps={} vector-passes={}",
-            mt.fused_sweeps, mt.vector_passes,
+            "lanczos datapath: block={} matrix-passes={} fused-sweeps={} vector-passes={}",
+            mt.block_size, mt.matrix_passes, mt.fused_sweeps, mt.vector_passes,
         );
         println!(
             "datapath: precision={} entries/line={} value-bytes={} basis-bytes={} packets={} hbm-bytes={}",
@@ -233,7 +236,8 @@ fn cmd_serve(args: &[String]) -> i32 {
         .opt("pprs", "Personalized PageRank jobs interleaved per phase", Some("0"))
         .opt("batch-cap", "max Top-K queries coalesced into one batched sweep (1 disables)", Some("8"))
         .opt("adaptive", "adaptive Lanczos stop: Ritz tolerance (0 = fixed K iterations)", Some("0"))
-        .flag("warm-start", "seed repeated (handle, k) queries from the previous dominant Ritz vector")
+        .opt("block", "block-Lanczos width b for the eigensolve jobs (1 = single-vector)", Some("1"))
+        .flag("warm-start", "seed repeated (handle, k) queries from the previous Ritz front (panel at --block > 1)")
         .flag("skip-symmetry-check", "trust inputs to be symmetric (skips the O(nnz) registration check)")
         .flag("quiet", "suppress per-job output");
     let m = match cmd.parse(args) {
@@ -259,6 +263,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             cus: m.parse_at_least::<usize>("cus", 1).map_err(|e| e.to_string())?,
             threads: m.parse::<usize>("threads").map_err(|e| e.to_string())?,
             adaptive_tol: parse_adaptive(m.str("adaptive").unwrap())?,
+            block_size: m.parse_at_least::<usize>("block", 1).map_err(|e| e.to_string())?,
             ..Default::default()
         };
         let budget_mb = m.parse::<usize>("budget-mb").map_err(|e| e.to_string())?;
@@ -284,11 +289,12 @@ fn cmd_serve(args: &[String]) -> i32 {
             batch_cap,
         });
         println!(
-            "serving: n={} nnz={} replicas={replicas} policy={} jobs={jobs} ks={ks:?} precision={} warm-start={}",
+            "serving: n={} nnz={} replicas={replicas} policy={} jobs={jobs} ks={ks:?} precision={} block={} warm-start={}",
             matrix.nrows,
             matrix.nnz(),
             policy.name(),
             opts.precision.name(),
+            opts.block_size,
             m.flag("warm-start"),
         );
         let t0 = std::time::Instant::now();
@@ -331,13 +337,14 @@ fn cmd_serve(args: &[String]) -> i32 {
                         ok += 1;
                         if !quiet {
                             println!(
-                                "  job {id}: k={} gen={} lambda0={:+.6} queued={} solve={} spmv={}{}",
+                                "  job {id}: k={} gen={} lambda0={:+.6} queued={} solve={} spmv={} passes={}{}",
                                 sol.k(),
                                 sol.metrics.generation,
                                 sol.eigenvalues[0],
                                 fmt_duration(r.queued_s),
                                 fmt_duration(r.solve_s),
                                 sol.metrics.spmv_count,
+                                sol.metrics.matrix_passes,
                                 if sol.metrics.warm_started { " (warm)" } else { "" },
                             );
                         }

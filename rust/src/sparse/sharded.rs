@@ -40,7 +40,7 @@
 //! the full stack).
 
 use crate::fixed::{packet_capacity, Dataword};
-use crate::lanczos::{FusedIteration, Operator};
+use crate::lanczos::{FusedBlockIteration, FusedIteration, Operator};
 use crate::linalg;
 use crate::sparse::query::{self, merge_top_k, PprOptions, PprResult, TopKEntry, TopKHeap};
 use crate::sparse::{partition_rows_balanced, CsrMatrix, PartitionPolicy, RowPartition};
@@ -608,6 +608,94 @@ impl<V: Dataword> Operator for ShardedSpmv<V> {
         }
         alpha
     }
+
+    /// The block tentpole sweep: each CU worker walks its row stripe in
+    /// [`TOPK_ROW_CHUNK`]-row chunks (the same cache-hot discipline as the
+    /// Top-K batch kernel) and, per chunk, runs SpMV + the Paige-reordered
+    /// `V_{j-1} B_j^T` subtraction + partial block dots `A_j` + partial
+    /// reorth projections for **all `b` panel columns** while that chunk's
+    /// CSR lines are resident. One walk of the matrix per block iteration
+    /// — `applies` ticks once, not `b` times — which is exactly the
+    /// bytes-per-Ritz-pair economics `benches/lanczos_block.rs` pins.
+    fn apply_fused_block(&self, x: &[f32], y: &mut [f32], it: &mut FusedBlockIteration<'_>) {
+        let n = self.matrix.nrows;
+        let b = it.b;
+        assert_eq!(x.len(), b * n, "x must be a column-major b x n panel");
+        assert_eq!(y.len(), b * n, "y must be a column-major b x n panel");
+        self.applies.fetch_add(1, Ordering::Relaxed);
+        let m = &self.matrix;
+        let parts = &self.parts;
+        let shards = parts.len();
+        let nproj = it.basis.map_or(0, |bs| bs.rows());
+        let stride = b * b + nproj * b;
+        assert!(it.partials.len() >= shards * stride, "partials scratch too small");
+        assert!(it.a_out.len() >= b * b, "block-dot buffer too small");
+        assert!(it.projs.len() >= nproj * b, "projection buffer too small");
+        let (v_prev, b_prev, basis) = (it.v_prev, it.b_prev, it.basis);
+        if !v_prev.is_empty() {
+            assert_eq!(v_prev.len(), b * n, "v_prev must be a column-major b x n panel");
+            assert!(b_prev.len() >= b * b, "B_j coefficient buffer too small");
+        }
+        let y_ptr = SendPtr(y.as_mut_ptr());
+        let p_ptr = SendPtr(it.partials.as_mut_ptr());
+        self.pool.scope_chunks(shards, |i| {
+            let p = parts[i];
+            // SAFETY: as in `apply_fused` — the scoped join outlives every
+            // use; row stripes tile `[0, n)` disjointly, so the chunk-local
+            // `&mut` views of each output column never overlap across
+            // tasks; partials slot `i` (stride `b*b + nproj*b`) is written
+            // by exactly this task.
+            let slot = unsafe { std::slice::from_raw_parts_mut(p_ptr.get().add(i * stride), stride) };
+            slot.fill(0.0);
+            let mut r0 = p.row_start;
+            while r0 < p.row_end {
+                let r1 = (r0 + TOPK_ROW_CHUNK).min(p.row_end);
+                for c in 0..b {
+                    let w_chunk =
+                        unsafe { std::slice::from_raw_parts_mut(y_ptr.get().add(c * n + r0), r1 - r0) };
+                    m.spmv_into_stripe(&x[c * n..(c + 1) * n], w_chunk, r0, r1);
+                    if !v_prev.is_empty() {
+                        // w_c -= sum_{i >= c} B_j[c][i] * v_prev_i over the
+                        // chunk rows (B_j is upper triangular).
+                        for pv in c..b {
+                            let coeff = b_prev[c * b + pv] as f32;
+                            if coeff != 0.0 {
+                                linalg::axpy(-coeff, &v_prev[pv * n + r0..pv * n + r1], w_chunk);
+                            }
+                        }
+                    }
+                    for r in 0..b {
+                        slot[r * b + c] += linalg::dot(&x[r * n + r0..r * n + r1], w_chunk);
+                    }
+                    if let Some(basis) = basis {
+                        basis.dots_range_add(
+                            w_chunk,
+                            r0,
+                            r1,
+                            &mut slot[b * b + c * nproj..b * b + (c + 1) * nproj],
+                        );
+                    }
+                }
+                r0 = r1;
+            }
+        });
+        // Merge Unit: fold the per-shard partials in shard order
+        // (deterministic for a fixed CU count).
+        for (e, a) in it.a_out.iter_mut().take(b * b).enumerate() {
+            let mut acc = 0.0f64;
+            for s in 0..shards {
+                acc += it.partials[s * stride + e];
+            }
+            *a = acc;
+        }
+        for (j, proj) in it.projs.iter_mut().take(nproj * b).enumerate() {
+            let mut acc = 0.0f64;
+            for s in 0..shards {
+                acc += it.partials[s * stride + b * b + j];
+            }
+            *proj = acc;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -693,6 +781,70 @@ mod tests {
             }
         });
         assert_eq!(engine.applies(), threads * rounds);
+    }
+
+    #[test]
+    fn fused_block_sweep_matches_serial_reference_and_streams_once() {
+        use crate::lanczos::{BasisArena, BasisDots, FusedBlockIteration};
+        let m = Arc::new(graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 13).to_csr());
+        let n = m.nrows;
+        let b = 3usize;
+        let x: Vec<f32> = (0..b * n).map(|i| ((i as f32) * 0.013).sin() * 0.4).collect();
+        let v_prev: Vec<f32> = (0..b * n).map(|i| ((i as f32) * 0.021).cos() * 0.3).collect();
+        let b_prev = [0.5f64, -0.1, 0.2, 0.0, 0.8, -0.3, 0.0, 0.0, 0.6];
+        let mut basis: BasisArena<f32> = BasisArena::with_capacity(2, n);
+        for r in 0..2 {
+            let row = basis.alloc_row();
+            for (i, v) in row.iter_mut().enumerate() {
+                *v = ((r * n + i) as f32 * 0.002).sin() * 0.2;
+            }
+        }
+        let nproj = basis.rows();
+        // Serial reference through the default (CSR) implementation.
+        let mut y_ref = vec![0.0f32; b * n];
+        let mut a_ref = vec![0.0f64; b * b];
+        let mut projs_ref = vec![0.0f64; nproj * b];
+        let mut it_ref = FusedBlockIteration {
+            b,
+            v_prev: &v_prev,
+            b_prev: &b_prev,
+            basis: Some(&basis),
+            partials: &mut [],
+            a_out: &mut a_ref,
+            projs: &mut projs_ref,
+        };
+        Operator::apply_fused_block(m.as_ref(), &x, &mut y_ref, &mut it_ref);
+        for cus in [1usize, 3, 5, 8] {
+            for policy in [PartitionPolicy::EqualRows, PartitionPolicy::BalancedNnz] {
+                let engine = ShardedSpmv::with_own_pool(Arc::clone(&m), cus, policy);
+                let mut y = vec![0.0f32; b * n];
+                let mut a_out = vec![0.0f64; b * b];
+                let mut projs = vec![0.0f64; nproj * b];
+                let mut partials = vec![0.0f64; cus * (b * b + nproj * b)];
+                let mut it = FusedBlockIteration {
+                    b,
+                    v_prev: &v_prev,
+                    b_prev: &b_prev,
+                    basis: Some(&basis),
+                    partials: &mut partials,
+                    a_out: &mut a_out,
+                    projs: &mut projs,
+                };
+                engine.apply_fused_block(&x, &mut y, &mut it);
+                assert_eq!(engine.applies(), 1, "one matrix stream per block pass, cus={cus}");
+                // Panel entries are bitwise serial (per-row accumulation
+                // order is unchanged by sharding/chunking)...
+                assert_eq!(y, y_ref, "cus={cus} policy={policy:?}");
+                // ...while the f64 reductions only differ by summation
+                // order across chunks/shards.
+                for e in 0..b * b {
+                    assert!((a_out[e] - a_ref[e]).abs() < 1e-9, "A[{e}] cus={cus}: {} vs {}", a_out[e], a_ref[e]);
+                }
+                for j in 0..nproj * b {
+                    assert!((projs[j] - projs_ref[j]).abs() < 1e-9, "proj[{j}] cus={cus}");
+                }
+            }
+        }
     }
 
     #[test]

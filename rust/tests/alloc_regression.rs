@@ -20,6 +20,7 @@ static ALLOC: topk_eigen::util::alloc::CountingAlloc = topk_eigen::util::alloc::
 
 use std::sync::Arc;
 use topk_eigen::graphs;
+use topk_eigen::lanczos::{block_lanczos_typed_ws, BlockLanczosResult};
 use topk_eigen::lanczos::{lanczos_typed_ws, LanczosOptions, LanczosResult, LanczosWorkspace};
 use topk_eigen::lanczos::{ReorthPolicy, ShardedSpmv};
 use topk_eigen::sparse::{normalize_frobenius, PartitionPolicy};
@@ -60,6 +61,41 @@ fn fused_iterations_allocate_nothing_after_warmup() {
     // result vectors. A fat bound catches gross regressions (per-iteration
     // boxing would add dozens) without pinning implementation details.
     assert!(a24 <= 16, "per-solve allocation constant too large: {a24}");
+}
+
+#[test]
+fn block_iterations_allocate_nothing_after_warmup() {
+    // The block engine extends the same workspace: panels, per-shard
+    // partial slots and the A/B block scratch all live in reused buffers,
+    // so a warm block solve's allocation count is a small constant —
+    // independent of the iteration count at every block width. (The
+    // constant itself varies with b: the band result stores one diagonal
+    // vector per off-diagonal distance.)
+    let mut g = graphs::rmat(1 << 11, 8 << 11, 0.57, 0.19, 0.19, 9);
+    normalize_frobenius(&mut g);
+    let csr = Arc::new(g.to_csr());
+    let engine = ShardedSpmv::with_own_pool(Arc::clone(&csr), 4, PartitionPolicy::BalancedNnz);
+    let opts = |k, b| LanczosOptions {
+        k,
+        block_size: b,
+        reorth: ReorthPolicy::EveryN(2),
+        fused: true,
+        ..Default::default()
+    };
+    let mut ws = LanczosWorkspace::new();
+    // Warmup at the largest shape: k = 24 at the widest block (b = 4)
+    // grows every buffer once; smaller (k, b) combinations fit within it.
+    let _warm: BlockLanczosResult = block_lanczos_typed_ws(&engine, &opts(24, 4), &mut ws);
+    for b in [1usize, 2, 4] {
+        let a8 = allocs_during(|| -> BlockLanczosResult { block_lanczos_typed_ws(&engine, &opts(8, b), &mut ws) });
+        let a16 = allocs_during(|| -> BlockLanczosResult { block_lanczos_typed_ws(&engine, &opts(16, b), &mut ws) });
+        let a24 = allocs_during(|| -> BlockLanczosResult { block_lanczos_typed_ws(&engine, &opts(24, b), &mut ws) });
+        assert_eq!(a8, a16, "b={b}: allocation count grew with iteration count ({a8} -> {a16})");
+        assert_eq!(a16, a24, "b={b}: allocation count grew with iteration count ({a16} -> {a24})");
+        // Constant set per solve: basis arena, A/B coefficient vectors,
+        // the band result's diagonals. Fat bound, same spirit as above.
+        assert!(a24 <= 32, "b={b}: per-solve allocation constant too large: {a24}");
+    }
 }
 
 #[test]

@@ -42,6 +42,23 @@ def check_lanczos_fused(rows, count):
     return "fused+unfused K sweep present"
 
 
+def check_lanczos_block(rows, count):
+    require(rows, ("block_b1", "block_b4"))
+    b1, b4 = rows["block_b1"], rows["block_b4"]
+    # Stream-once accounting: the block path advances `block` columns per
+    # matrix pass; the single path streams once per column.
+    assert b1["spmv_count"] == b1["matrix_passes"], b1
+    assert b4["spmv_count"] == 4 * b4["matrix_passes"], b4
+    for row in (b1, b4):
+        assert row["converged"] >= 1, row
+    # The tentpole: matrix bytes per converged Ritz pair at least halve
+    # at block width 4 (the bench itself asserts the same before writing).
+    assert b4["bytes_drop_b4"] >= 2.0, b4
+    assert b4["bytes_per_pair"] <= b1["bytes_per_pair"] / 2.0, (b1, b4)
+    return (f"b=4 matrix bytes/converged-pair drop {b4['bytes_drop_b4']:.1f}x "
+            f"({b1['matrix_passes']:.0f} -> {b4['matrix_passes']:.0f} passes)")
+
+
 def check_service_throughput(rows, count):
     require(rows, ("single_job", "batch", "registry", "mixed_k_fifo",
                    "mixed_k_kbatched", "policy_summary"))
@@ -94,6 +111,7 @@ def check_query_throughput(rows, count):
 
 CHECKS = {
     "lanczos_fused": check_lanczos_fused,
+    "lanczos_block": check_lanczos_block,
     "service_throughput": check_service_throughput,
     "delta_update": check_delta_update,
     "query_throughput": check_query_throughput,
