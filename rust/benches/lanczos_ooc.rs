@@ -1,0 +1,151 @@
+//! Out-of-core vs in-memory Lanczos — the streaming-datapath acceptance
+//! bench.
+//!
+//! For each storage format the harness prepares the same R-MAT graph twice:
+//! resident (normalized + quantized CSR shards in RAM) and out-of-core
+//! (the resident engine's exact bits exported to packet chunk files, then
+//! streamed back through double-buffered prefetch). Both solves run the
+//! identical fused Lanczos schedule; the bench asserts the eigenpairs are
+//! **bitwise identical** — the OOC path must change where bytes live, never
+//! what they compute — and that prefetch stalls stay strictly below chunks
+//! read (I/O overlapped compute instead of serializing behind it).
+//!
+//! Reported per format: solve time, matrix bytes streamed per second on the
+//! resident path, file bytes read per second on the OOC path, chunk and
+//! stall counts.
+//!
+//! Defaults to the paper-scale shape n = 2^22 with 8n directed edges.
+//! Override with:
+//!
+//! * `TOPK_OOC_N`       — problem size (CI quick mode runs 2^18)
+//! * `TOPK_OOC_THREADS` — CU shards / pool workers
+//! * `TOPK_BENCH_ITERS` — timed iterations per row
+//!
+//! Results append to `BENCH_ooc.json` (JSONL) unless `TOPK_BENCH_JSON`
+//! points elsewhere; `scripts/check_bench_json.py <report> lanczos_ooc`
+//! validates the rows in CI.
+
+use topk_eigen::bench::{BenchConfig, BenchSuite};
+use topk_eigen::coordinator::{Solution, SolveOptions, Solver};
+use topk_eigen::fixed::Precision;
+use topk_eigen::graphs;
+use topk_eigen::lanczos::LanczosWorkspace;
+use topk_eigen::sparse::OocMatrix;
+
+/// Pairs requested per solve.
+const K: usize = 8;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Exact bit patterns of a solution — `f32`/`f64` equality would let
+/// `-0.0 == 0.0` slip through the bitwise contract.
+fn solution_bits(sol: &Solution) -> (Vec<u64>, Vec<Vec<u32>>) {
+    (
+        sol.eigenvalues.iter().map(|l| l.to_bits()).collect(),
+        sol.eigenvectors.iter().map(|v| v.iter().map(|x| x.to_bits()).collect()).collect(),
+    )
+}
+
+fn main() {
+    if std::env::var("TOPK_BENCH_JSON").is_err() {
+        std::env::set_var("TOPK_BENCH_JSON", "BENCH_ooc.json");
+    }
+    let n = env_usize("TOPK_OOC_N", 1 << 22);
+    let cus = env_usize("TOPK_OOC_THREADS", 5);
+    let mut suite = BenchSuite::new(
+        "lanczos_ooc",
+        &format!("out-of-core vs in-memory fused Lanczos, n={n} RMAT 8n edges, K={K}, {cus} shards"),
+    );
+
+    let g = graphs::rmat(n, 8 * n, 0.57, 0.19, 0.19, 23);
+    println!("  graph: n={n} nnz={}", g.nnz());
+
+    for precision in Precision::ALL {
+        let opts = SolveOptions { k: K, precision, cus, ..Default::default() };
+
+        // Resident engine, then its exact bits exported to packet files.
+        let mut solver = Solver::new(opts.clone());
+        let prep = solver.prepare(&g).expect("prepare resident");
+        let dir = std::env::temp_dir().join(format!("topk-ooc-bench-{}-{n}-{}", precision.name(), std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let man = prep.export_ooc(&dir, None).expect("export packet files");
+        let mut ooc_solver = Solver::new(opts.clone());
+        let ooc_prep = ooc_solver.prepare_ooc(&dir).expect("prepare ooc");
+        let chunks = topk_eigen::with_precision!(precision, V => {
+            OocMatrix::<V>::open(&dir).expect("open for chunk count").chunk_count()
+        });
+
+        let mut ws = LanczosWorkspace::new();
+        let cfg = BenchConfig::default();
+        let name = precision.name().replace('.', "");
+
+        let t_res = suite.bench(&format!("resident_{name}"), cfg, || {
+            Solver::solve_detached(&prep, K, &opts, &mut ws, None).expect("resident solve")
+        });
+        let sol_res = Solver::solve_detached(&prep, K, &opts, &mut ws, None).expect("resident solve");
+        let mr = &sol_res.metrics;
+        suite.annotate(&[
+            ("n", n as f64),
+            ("nnz", man.nnz as f64),
+            ("resident_bytes", prep.resident_bytes() as f64),
+            ("bytes_streamed", mr.bytes_streamed as f64),
+            ("bytes_per_s", mr.bytes_streamed as f64 / mr.lanczos_s.max(1e-12)),
+        ]);
+
+        let t_ooc = suite.bench(&format!("ooc_{name}"), cfg, || {
+            Solver::solve_detached(&ooc_prep, K, &opts, &mut ws, None).expect("ooc solve")
+        });
+        let sol_ooc = Solver::solve_detached(&ooc_prep, K, &opts, &mut ws, None).expect("ooc solve");
+        let mo = &sol_ooc.metrics;
+
+        // The whole point of the datapath: moving the matrix to disk must
+        // not move a single bit of the answer.
+        assert_eq!(
+            solution_bits(&sol_res),
+            solution_bits(&sol_ooc),
+            "{}: OOC solve diverged from the resident solve",
+            precision.name()
+        );
+        assert!(mo.io_bytes_read > 0, "{}: OOC solve read no file bytes", precision.name());
+        // Chunks read by this solve: every fused sweep streams the full
+        // chunk table once.
+        let chunks_read = (mo.matrix_passes * chunks) as u64;
+        assert!(
+            mo.prefetch_stalls < chunks_read,
+            "{}: {} stalls on {} chunk reads — prefetch failed to overlap I/O with compute",
+            precision.name(),
+            mo.prefetch_stalls,
+            chunks_read
+        );
+
+        suite.annotate(&[
+            ("n", n as f64),
+            ("nnz", man.nnz as f64),
+            ("resident_bytes", ooc_prep.resident_bytes() as f64),
+            ("io_bytes_read", mo.io_bytes_read as f64),
+            ("bytes_per_s", mo.io_bytes_read as f64 / mo.lanczos_s.max(1e-12)),
+            ("chunks_read", chunks_read as f64),
+            ("prefetch_stalls", mo.prefetch_stalls as f64),
+            ("bitwise_equal", 1.0),
+            ("slowdown_vs_resident", t_ooc / t_res.max(1e-12)),
+        ]);
+        println!(
+            "  {}: resident {:.1} ms, ooc {:.1} ms ({:.2}x), {:.1} MB read/solve, \
+             {} stalls / {} chunk reads, buffers {:.1} KiB vs CSR {:.1} KiB",
+            precision.name(),
+            t_res * 1e3,
+            t_ooc * 1e3,
+            t_ooc / t_res.max(1e-12),
+            mo.io_bytes_read as f64 / 1e6,
+            mo.prefetch_stalls,
+            chunks_read,
+            ooc_prep.resident_bytes() as f64 / 1024.0,
+            prep.resident_bytes() as f64 / 1024.0,
+        );
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    suite.finish();
+}

@@ -42,10 +42,14 @@ use crate::lanczos::{lanczos_typed_ws, lift_eigenvector_typed, LanczosOptions, L
 use crate::lanczos::{LanczosWorkspace, Operator, ReorthPolicy};
 use crate::linalg::qr_algorithm_symmetric;
 use crate::runtime::{PjrtSpmv, Runtime};
-use crate::sparse::{normalize_frobenius, CooMatrix, CsrMatrix, PartitionPolicy, ShardedSpmv};
+use crate::sparse::{
+    normalize_frobenius, CooMatrix, CsrMatrix, OocManifest, OocMatrix, PacketFileWriter, PartitionPolicy,
+    ShardedSpmv,
+};
 use crate::util::pool::ThreadPool;
 use crate::util::timer::Stopwatch;
-use anyhow::Result;
+use anyhow::{Context, Result};
+use std::path::Path;
 use std::sync::Arc;
 
 /// Which SpMV engine drives the Lanczos loop.
@@ -218,6 +222,16 @@ pub struct SolveMetrics {
     /// prepared outside the registry. Lets clients correlate answers with
     /// the delta stream they submitted.
     pub generation: u64,
+    /// Packet-file bytes this solve read from storage (out-of-core
+    /// engines only; 0 when the matrix is RAM-resident). Delta of the
+    /// engine's monotone IO counter around the solve, so concurrent solves
+    /// sharing one OOC engine each report the traffic observed during
+    /// their own window.
+    pub io_bytes_read: u64,
+    /// Times the fused sweep had to block on a chunk whose prefetch had
+    /// not completed (out-of-core engines only). Stalls well below the
+    /// chunk count mean the double buffer kept the compute units fed.
+    pub prefetch_stalls: u64,
 }
 
 impl SolveMetrics {
@@ -328,12 +342,55 @@ impl PreparedMatrix {
     pub fn prepare_s(&self) -> f64 {
         self.prepare_s
     }
-    /// Estimated resident bytes of the bound engine: the COO-line
-    /// convention (two u32 indices + one value word per nnz) plus the CSR
-    /// row-pointer array. This is what the registry's byte-budgeted LRU
-    /// charges per cached engine.
+    /// RAM actually held by the bound engine — what the registry's
+    /// byte-budgeted LRU charges per cached engine. Resident engines
+    /// report their CSR arrays (O(nnz)); out-of-core engines report only
+    /// the double-buffered chunk pool + chunk tables (O(buffer)), which is
+    /// the whole point of streaming from packet files: a huge matrix on
+    /// disk must not evict small resident matrices that do fit in RAM.
     pub fn resident_bytes(&self) -> usize {
-        self.nnz * (8 + self.op.value_bits() as usize / 8) + 4 * (self.n + 1)
+        self.op.resident_bytes()
+    }
+    /// Whether the bound engine streams the matrix from packet files
+    /// instead of holding it resident.
+    pub fn is_ooc(&self) -> bool {
+        self.op.as_any().is_some_and(|any| {
+            crate::with_precision!(self.precision, V => {
+                any.downcast_ref::<ShardedSpmv<V>>().is_some_and(|s| s.is_ooc())
+            })
+        })
+    }
+    /// Serialize this prepared matrix's **exact** engine-resident values
+    /// into an out-of-core packet directory: per-shard chunk files of
+    /// 512-bit-aligned packet lines plus a manifest, written raw-bits so a
+    /// subsequent [`Solver::prepare_ooc`] on the directory yields an
+    /// engine that is bitwise identical to this one (same quantized
+    /// values, same row partition, same fused-sweep results). Requires the
+    /// native sharded engine with a resident matrix (PJRT and already-OOC
+    /// engines have no CSR to export).
+    ///
+    /// `chunk_target_bytes` bounds each chunk's payload (`None` = the
+    /// [`DEFAULT_CHUNK_BYTES`](crate::sparse::DEFAULT_CHUNK_BYTES) 1 MiB
+    /// target); the double buffer holds two chunks per shard in flight.
+    pub fn export_ooc(&self, dir: impl AsRef<Path>, chunk_target_bytes: Option<usize>) -> Result<OocManifest> {
+        let dir = dir.as_ref();
+        let any = self
+            .op
+            .as_any()
+            .with_context(|| format!("export_ooc: the {} engine is opaque (no resident CSR)", self.engine_used))?;
+        crate::with_precision!(self.precision, V => {
+            let sharded = any
+                .downcast_ref::<ShardedSpmv<V>>()
+                .context("export_ooc: engine is not the native sharded SpMV")?;
+            let matrix = sharded
+                .matrix()
+                .context("export_ooc: engine is already out-of-core; copy the packet directory instead")?;
+            let mut writer = PacketFileWriter::new(dir);
+            if let Some(bytes) = chunk_target_bytes {
+                writer = writer.chunk_target_bytes(bytes);
+            }
+            writer.write_csr::<V>(matrix, self.fro, sharded.cus(), sharded.policy())
+        })
     }
     /// The shared engine (for telemetry and tests; solves go through
     /// [`Solver::solve_detached`]).
@@ -417,6 +474,48 @@ impl Solver {
             || self.native_operator(&m),
         );
         Ok(PreparedMatrix { op, fro, n, nnz, precision, engine_used, prepare_s: sw.lap_s(), generation: 0 })
+    }
+
+    /// Bind an **out-of-core** engine to a packet-file directory written by
+    /// [`PreparedMatrix::export_ooc`] or the streaming R-MAT generator: the
+    /// matrix stays on disk and each CU stripe streams its shard through
+    /// double-buffered chunk prefetch during every fused sweep. Resident
+    /// memory is O(n) solve vectors plus the chunk buffers — graphs larger
+    /// than RAM ride the same Lanczos datapath, bitwise-identical to the
+    /// resident engine built from the same values.
+    ///
+    /// The directory's storage format must match
+    /// [`SolveOptions::precision`]; packet files carry raw quantized bits,
+    /// so re-interpreting them in another format would silently change the
+    /// spectrum. Shard count and partition policy come from the manifest
+    /// (they were baked in at export time), not from the options.
+    pub fn prepare_ooc(&mut self, dir: impl AsRef<Path>) -> Result<PreparedMatrix> {
+        let dir = dir.as_ref();
+        let mut sw = Stopwatch::start();
+        let man = OocManifest::load(dir)?;
+        anyhow::ensure!(
+            man.precision == self.opts.precision,
+            "precision mismatch: packet files at {} store {}, solve requested {} \
+             (re-export the directory, or request --precision {})",
+            dir.display(),
+            man.precision.name(),
+            self.opts.precision.name(),
+            man.precision.name()
+        );
+        let op: Arc<dyn Operator> = crate::with_precision!(man.precision, V => {
+            let matrix: Arc<OocMatrix<V>> = OocMatrix::open(dir)?;
+            Arc::new(ShardedSpmv::new_ooc(matrix, Arc::clone(&self.pool))) as Arc<dyn Operator>
+        });
+        Ok(PreparedMatrix {
+            op,
+            fro: man.fro,
+            n: man.nrows,
+            nnz: man.nnz,
+            precision: man.precision,
+            engine_used: "native-ooc",
+            prepare_s: sw.lap_s(),
+            generation: 0,
+        })
     }
 
     /// Solve the Top-K eigenproblem for a symmetric sparse matrix.
@@ -505,6 +604,11 @@ impl Solver {
             block_size: b,
             ..Default::default()
         };
+
+        // Out-of-core telemetry baseline: the engine counters are monotone
+        // across solves, so the delta around this solve is what *it* read.
+        let io_before = prep.op.io_bytes_read();
+        let stalls_before = prep.op.prefetch_stalls();
 
         // Adaptive stopping budget: up to 2K + 8 iterations (a warm seed
         // typically stops well short of it; a cold one may use it all).
@@ -613,6 +717,8 @@ impl Solver {
             })
         };
 
+        metrics.io_bytes_read = prep.op.io_bytes_read().saturating_sub(io_before);
+        metrics.prefetch_stalls = prep.op.prefetch_stalls().saturating_sub(stalls_before);
         Ok(Solution { eigenvalues, eigenvectors, frobenius_norm: prep.fro, metrics })
     }
 
@@ -1040,6 +1146,49 @@ mod tests {
         let mut bad = Solver::new(SolveOptions { k: 15, block_size: 7, ..Default::default() });
         let err = bad.solve(&m).unwrap_err();
         assert!(err.to_string().contains("block_size"), "{err}");
+    }
+
+    #[test]
+    fn export_ooc_then_prepare_ooc_matches_resident_bitwise() {
+        let m = graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 41);
+        let opts = SolveOptions { k: 6, cus: 3, ..Default::default() };
+        let mut solver = Solver::new(opts.clone());
+        let prep = solver.prepare(&m).unwrap();
+        assert!(!prep.is_ooc());
+        let dir = crate::sparse::ooc::scratch_dir("coord");
+        let man = prep.export_ooc(&dir, Some(4096)).unwrap();
+        assert_eq!(man.nnz, prep.nnz());
+        assert_eq!(man.fro, prep.frobenius_norm());
+        let ooc = solver.prepare_ooc(&dir).unwrap();
+        assert!(ooc.is_ooc());
+        assert_eq!(ooc.engine(), "native-ooc");
+        assert_eq!(ooc.n(), prep.n());
+        assert_eq!(ooc.nnz(), prep.nnz());
+        assert_eq!(ooc.frobenius_norm(), prep.frobenius_norm());
+        let a = solver.solve_prepared(&prep).unwrap();
+        let b = solver.solve_prepared(&ooc).unwrap();
+        assert_eq!(a.eigenvalues, b.eigenvalues, "OOC solve must be bitwise resident");
+        assert_eq!(a.eigenvectors, b.eigenvectors);
+        // Telemetry: the resident solve never touches storage; the OOC
+        // solve charges every packet line it streamed.
+        assert_eq!(a.metrics.io_bytes_read, 0);
+        assert_eq!(a.metrics.prefetch_stalls, 0);
+        assert!(b.metrics.io_bytes_read > 0, "OOC solve reads packet files");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prepare_ooc_rejects_precision_mismatch() {
+        let m = graphs::mesh2d(16, 16, 0.9, 0.02, 3);
+        let mut f = Solver::new(SolveOptions { k: 4, ..Default::default() });
+        let prep = f.prepare(&m).unwrap();
+        let dir = crate::sparse::ooc::scratch_dir("coord-prec");
+        prep.export_ooc(&dir, None).unwrap();
+        let mut q =
+            Solver::new(SolveOptions { k: 4, precision: Precision::FixedQ1_15, ..Default::default() });
+        let err = q.prepare_ooc(&dir).unwrap_err();
+        assert!(err.to_string().contains("precision mismatch"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -65,11 +65,14 @@ use crate::coordinator::{
 };
 use crate::fixed::Precision;
 use crate::runtime::{PjrtSpmv, Runtime};
-use crate::sparse::{frobenius_norm, CooDelta, CooMatrix, CsrMatrix, PartitionPolicy, ShardedSpmv};
+use crate::sparse::{
+    frobenius_norm, CooDelta, CooMatrix, CsrMatrix, OocManifest, OocMatrix, PartitionPolicy, ShardedSpmv,
+};
 use crate::util::pool::ThreadPool;
 use crate::util::timer::Stopwatch;
 use anyhow::Result;
 use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
@@ -81,6 +84,18 @@ use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 /// simply `None`, which the next caller rebuilds.
 fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// FNV-1a over a directory path — the dedup pre-filter key for
+/// out-of-core sources (full path equality is still compared on a hash
+/// match, mirroring the content-hash flow for resident matrices).
+fn path_hash(p: &std::path::Path) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in p.to_string_lossy().as_bytes() {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 /// Opaque handle to a registered matrix. Cheap to copy, hash, and send —
@@ -124,6 +139,15 @@ pub struct RegistryConfig {
     /// fraction exceeds this, stale engines are rebuilt from scratch
     /// instead of incrementally (most shards would be dirty anyway).
     pub dirty_full_fraction: f64,
+    /// Cap on the chunk-buffer bytes one out-of-core engine may pin
+    /// (`serve --ooc-budget-mb` at the CLI; `0` = unlimited). Out-of-core
+    /// matrices are charged at O(n) + buffer bytes, not O(nnz), so the
+    /// ordinary [`RegistryConfig::budget_bytes`] LRU barely sees them —
+    /// this knob is the explicit promise that streaming a huge graph will
+    /// not quietly pin more RAM than the operator budgeted. Directories
+    /// whose double buffer would exceed it are rejected at prepare time
+    /// (re-export with a smaller chunk target to shrink the buffers).
+    pub ooc_buffer_budget_bytes: usize,
 }
 
 impl Default for RegistryConfig {
@@ -135,6 +159,7 @@ impl Default for RegistryConfig {
             skip_normalize: false,
             warm_keep_tol: 0.05,
             dirty_full_fraction: 0.25,
+            ooc_buffer_budget_bytes: 0,
         }
     }
 }
@@ -229,11 +254,24 @@ struct UpdateRecord {
 /// this take the full-rebuild path.
 const MAX_UPDATE_HISTORY: usize = 32;
 
-struct Source {
+/// Where a registered matrix's entries actually live.
+enum SourceData {
     /// Canonical COO in **original** scale — normalization is applied at
     /// engine-build time so delta values (also original-scale) compose
     /// exactly and the Frobenius norm can be recomputed after each update.
-    coo: Arc<CooMatrix>,
+    Resident(Arc<CooMatrix>),
+    /// An out-of-core packet directory
+    /// ([`crate::sparse::PacketFileWriter`] output): the entries never
+    /// enter RAM — engines stream the chunk files through double-buffered
+    /// prefetch, and residency is charged at the buffer pool, not O(nnz).
+    /// The stored values are already normalized and quantized (raw bits),
+    /// so these sources are immutable: [`MatrixRegistry::update`] rejects
+    /// them and dedup keys on the canonical directory path.
+    Ooc { dir: PathBuf, manifest: OocManifest },
+}
+
+struct Source {
+    data: SourceData,
     fro: f64,
     /// Content hash computed at registration (and refreshed per update) —
     /// kept so `unregister` can maintain `by_hash` without an O(nnz)
@@ -336,6 +374,14 @@ struct BuildCtx {
     fro: f64,
     generation: u64,
     scale: Option<f64>,
+}
+
+/// What `prepared` snapshotted under the registry lock: a resident build
+/// context, or the out-of-core directory whose chunk files the engine will
+/// stream (nothing O(nnz) is cloned on either path).
+enum SnapshotCtx {
+    Resident(BuildCtx),
+    Ooc { dir: PathBuf, manifest: OocManifest, generation: u64 },
 }
 
 struct EngineSlot {
@@ -511,16 +557,73 @@ impl MatrixRegistry {
                 // registered graph has different stored values, so it
                 // naturally gets its own handle (its eigenvalues rescale
                 // by a different norm).
-                if *inner.sources[&id].coo == m {
-                    self.dedup_hits.fetch_add(1, Ordering::SeqCst);
-                    return Ok(MatrixHandle(id));
+                if let SourceData::Resident(coo) = &inner.sources[&id].data {
+                    if **coo == m {
+                        self.dedup_hits.fetch_add(1, Ordering::SeqCst);
+                        return Ok(MatrixHandle(id));
+                    }
                 }
             }
         }
         let id = NEXT_HANDLE_ID.fetch_add(1, Ordering::Relaxed);
-        inner
-            .sources
-            .insert(id, Source { coo: Arc::new(m), fro, hash, generation: 1, updates: VecDeque::new() });
+        inner.sources.insert(
+            id,
+            Source {
+                data: SourceData::Resident(Arc::new(m)),
+                fro,
+                hash,
+                generation: 1,
+                updates: VecDeque::new(),
+            },
+        );
+        inner.by_hash.entry(hash).or_default().push(id);
+        Ok(MatrixHandle(id))
+    }
+
+    /// Register an **out-of-core** packet directory
+    /// ([`crate::coordinator::PreparedMatrix::export_ooc`] /
+    /// `topk-eigen generate --ooc` output) without loading the matrix:
+    /// only the manifest is read. Jobs on the returned handle stream the
+    /// chunk files through double-buffered prefetch, and the engine cache
+    /// charges the handle at its chunk-buffer bytes — a graph bigger than
+    /// RAM does not count as bigger than RAM against
+    /// [`RegistryConfig::budget_bytes`], and crucially never evicts small
+    /// resident engines that do fit.
+    ///
+    /// Registrations of the same directory (canonical path) deduplicate
+    /// onto one handle. The stored format is fixed at export time: a
+    /// `prepared` call with a different [`SolveOptions::precision`] fails
+    /// instead of silently re-quantizing.
+    pub fn register_ooc(&self, dir: impl Into<PathBuf>) -> Result<MatrixHandle> {
+        let dir = dir.into();
+        let manifest = OocManifest::load(&dir)?;
+        // Canonical path so `./graph`, `graph/` and symlinks to it share
+        // one residency (falls back to the given path if it vanished).
+        let dir = std::fs::canonicalize(&dir).unwrap_or(dir);
+        let hash = path_hash(&dir);
+        let mut inner = lock(&self.inner);
+        if let Some(ids) = inner.by_hash.get(&hash) {
+            for &id in ids {
+                if let SourceData::Ooc { dir: existing, .. } = &inner.sources[&id].data {
+                    if *existing == dir {
+                        self.dedup_hits.fetch_add(1, Ordering::SeqCst);
+                        return Ok(MatrixHandle(id));
+                    }
+                }
+            }
+        }
+        let id = NEXT_HANDLE_ID.fetch_add(1, Ordering::Relaxed);
+        let fro = manifest.fro;
+        inner.sources.insert(
+            id,
+            Source {
+                data: SourceData::Ooc { dir, manifest },
+                fro,
+                hash,
+                generation: 1,
+                updates: VecDeque::new(),
+            },
+        );
         inner.by_hash.entry(hash).or_default().push(id);
         Ok(MatrixHandle(id))
     }
@@ -543,13 +646,20 @@ impl MatrixRegistry {
         delta.canonicalize();
         let mut inner = lock(&self.inner);
         let src = inner.sources.get_mut(&h.0).ok_or_else(|| anyhow::anyhow!("unknown matrix handle {}", h.0))?;
+        let SourceData::Resident(src_coo) = &mut src.data else {
+            anyhow::bail!(
+                "matrix handle {} is out-of-core: packet files store pre-quantized bits and cannot be \
+                 spliced in place — regenerate the directory and register it again",
+                h.0
+            );
+        };
         anyhow::ensure!(
-            (src.coo.nrows, src.coo.ncols) == (delta.nrows, delta.ncols),
+            (src_coo.nrows, src_coo.ncols) == (delta.nrows, delta.ncols),
             "delta dimensions {}x{} do not match matrix {}x{}",
             delta.nrows,
             delta.ncols,
-            src.coo.nrows,
-            src.coo.ncols
+            src_coo.nrows,
+            src_coo.ncols
         );
         if !self.cfg.skip_symmetry_check {
             anyhow::ensure!(
@@ -560,7 +670,7 @@ impl MatrixRegistry {
         if delta.is_empty() {
             return Ok(UpdateReport {
                 generation: src.generation,
-                nnz: src.coo.nnz(),
+                nnz: src_coo.nnz(),
                 dirty_rows: 0,
                 inserted: 0,
                 changed: 0,
@@ -573,7 +683,7 @@ impl MatrixRegistry {
         // norm, even when normalization is skipped (src.fro is pinned to
         // 1.0 there and would turn the documented relative guard into an
         // absolute one).
-        let old_fro = if self.cfg.skip_normalize { frobenius_norm(&src.coo) } else { src.fro };
+        let old_fro = if self.cfg.skip_normalize { frobenius_norm(src_coo) } else { src.fro };
         // Copy-on-write: in the steady state the registry's Arc is the
         // only strong reference and the splice mutates in place; a
         // concurrent engine build holding the Arc forces one clone and
@@ -585,7 +695,7 @@ impl MatrixRegistry {
         // operation by contract (the service fences them anyway); if
         // update throughput across many tenants ever matters, the next
         // step is per-source locking so only the updated handle pays.
-        let coo = Arc::make_mut(&mut src.coo);
+        let coo = Arc::make_mut(src_coo);
         let report = coo.apply_delta(&delta);
         src.fro = Self::effective_fro(coo, self.cfg.skip_normalize);
         let new_hash = coo.content_hash();
@@ -660,7 +770,10 @@ impl MatrixRegistry {
     /// validation wants `n` without touching the engine cache).
     pub fn dims(&self, h: MatrixHandle) -> Option<(usize, usize)> {
         let inner = lock(&self.inner);
-        inner.sources.get(&h.0).map(|s| (s.coo.nrows, s.coo.nnz()))
+        inner.sources.get(&h.0).map(|s| match &s.data {
+            SourceData::Resident(coo) => (coo.nrows, coo.nnz()),
+            SourceData::Ooc { manifest, .. } => (manifest.nrows, manifest.nnz),
+        })
     }
 
     /// Drop a matrix's residency: its source COO, every cached engine built
@@ -703,11 +816,18 @@ impl MatrixRegistry {
         let (ctx, cell) = {
             let mut inner = lock(&self.inner);
             let src = inner.sources.get(&h.0).ok_or_else(|| anyhow::anyhow!("unknown matrix handle {}", h.0))?;
-            let ctx = BuildCtx {
-                coo: Arc::clone(&src.coo),
-                fro: src.fro,
-                generation: src.generation,
-                scale: src.scale(self.cfg.skip_normalize),
+            let ctx = match &src.data {
+                SourceData::Resident(coo) => SnapshotCtx::Resident(BuildCtx {
+                    coo: Arc::clone(coo),
+                    fro: src.fro,
+                    generation: src.generation,
+                    scale: src.scale(self.cfg.skip_normalize),
+                }),
+                SourceData::Ooc { dir, manifest } => SnapshotCtx::Ooc {
+                    dir: dir.clone(),
+                    manifest: manifest.clone(),
+                    generation: src.generation,
+                },
             };
             inner.tick += 1;
             let tick = inner.tick;
@@ -720,14 +840,17 @@ impl MatrixRegistry {
             (ctx, Arc::clone(&slot.cell))
         };
 
-        let generation = ctx.generation;
+        let generation = match &ctx {
+            SnapshotCtx::Resident(c) => c.generation,
+            SnapshotCtx::Ooc { generation, .. } => *generation,
+        };
         let mut built = lock(&cell);
-        let prep = match built.as_ref() {
-            Some(b) if b.generation == generation => {
+        let prep = match (built.as_ref(), &ctx) {
+            (Some(b), _) if b.generation == generation => {
                 self.engine_hits.fetch_add(1, Ordering::SeqCst);
                 return Ok(Arc::clone(&b.prep));
             }
-            Some(stale) => {
+            (Some(stale), SnapshotCtx::Resident(bctx)) => {
                 // A delta landed since this engine was built: refresh it,
                 // reusing untouched shard structure when the dirty set is
                 // small and the engine is a native sharded one.
@@ -735,12 +858,20 @@ impl MatrixRegistry {
                     let inner = lock(&self.inner);
                     inner.sources.get(&h.0).and_then(|s| s.dirty_rows_since(stale.generation))
                 };
-                let prep = self.refresh_engine(&stale.prep, &ctx, dirty, opts);
+                let prep = self.refresh_engine(&stale.prep, bctx, dirty, opts);
                 self.prepares.fetch_add(1, Ordering::SeqCst);
                 prep
             }
-            None => {
-                let prep = Arc::new(self.build_engine(&ctx, opts));
+            (None, SnapshotCtx::Resident(bctx)) => {
+                let prep = Arc::new(self.build_engine(bctx, opts));
+                self.prepares.fetch_add(1, Ordering::SeqCst);
+                prep
+            }
+            // OOC sources are immutable (update() rejects them), so an
+            // existing build can never be stale — but rebuilding is the
+            // correct degenerate behaviour if that ever changes.
+            (_, SnapshotCtx::Ooc { dir, manifest, .. }) => {
+                let prep = Arc::new(self.build_ooc_engine(dir, manifest, generation, opts)?);
                 self.prepares.fetch_add(1, Ordering::SeqCst);
                 prep
             }
@@ -786,6 +917,55 @@ impl MatrixRegistry {
             prepare_s: sw.lap_s(),
             generation: ctx.generation,
         }
+    }
+
+    /// Build the out-of-core engine for a packet directory: open the chunk
+    /// tables, validate the stored precision against the engine key, gate
+    /// the buffer pool on [`RegistryConfig::ooc_buffer_budget_bytes`], and
+    /// bind the double-buffered streaming `ShardedSpmv`. Shard count and
+    /// partition policy come from the manifest (they were baked in at
+    /// export time), so differing `cus`/`partition` in the options only
+    /// name the cache key.
+    fn build_ooc_engine(
+        &self,
+        dir: &std::path::Path,
+        manifest: &OocManifest,
+        generation: u64,
+        opts: &SolveOptions,
+    ) -> Result<PreparedMatrix> {
+        anyhow::ensure!(
+            manifest.precision == opts.precision,
+            "precision mismatch: packet files at {} store {}, job requested {} (the stored bits are \
+             final — re-export the directory to change formats)",
+            dir.display(),
+            manifest.precision.name(),
+            opts.precision.name()
+        );
+        let mut sw = Stopwatch::start();
+        let budget = self.cfg.ooc_buffer_budget_bytes;
+        let op: Arc<dyn crate::lanczos::Operator> = crate::with_precision!(manifest.precision, V => {
+            let matrix: Arc<OocMatrix<V>> = OocMatrix::open(dir)?;
+            anyhow::ensure!(
+                budget == 0 || matrix.buffer_bytes() <= budget,
+                "out-of-core buffers for {} need {} bytes, over the {} byte budget (--ooc-budget-mb); \
+                 re-export the directory with a smaller chunk target to shrink the buffers",
+                dir.display(),
+                matrix.buffer_bytes(),
+                budget
+            );
+            let pool = Arc::new(ThreadPool::new(opts.effective_threads()));
+            Arc::new(ShardedSpmv::new_ooc(matrix, pool)) as Arc<dyn crate::lanczos::Operator>
+        });
+        Ok(PreparedMatrix {
+            op,
+            fro: manifest.fro,
+            n: manifest.nrows,
+            nnz: manifest.nnz,
+            precision: manifest.precision,
+            engine_used: "native-ooc",
+            prepare_s: sw.lap_s(),
+            generation,
+        })
     }
 
     /// Refresh a stale engine to the snapshot generation: incremental when
@@ -1617,6 +1797,131 @@ mod tests {
         assert!(!rep.warm_kept);
         assert!(reg.warm_v1(h, 4, Precision::Float32).is_none(), "warm seed dropped");
         assert_eq!(reg.stats().warm_dropped, 1);
+    }
+
+    #[test]
+    fn ooc_handles_register_prepare_and_refuse_updates() {
+        let reg = MatrixRegistry::default();
+        // Export a resident prepare into packet files, then register the
+        // directory — the registry never sees the COO.
+        let m = graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 97);
+        let opts = SolveOptions { cus: 3, ..opts_k(4) };
+        let mut solver = Solver::new(opts.clone());
+        let prep_res = solver.prepare(&m).unwrap();
+        let dir = crate::sparse::ooc::scratch_dir("reg-ooc");
+        prep_res.export_ooc(&dir, Some(4096)).unwrap();
+
+        let h = reg.register_ooc(&dir).unwrap();
+        assert_eq!(reg.register_ooc(&dir).unwrap(), h, "same directory dedups onto one handle");
+        assert_eq!(reg.stats().dedup_hits, 1);
+        assert_eq!(reg.dims(h), Some((1 << 9, prep_res.nnz())));
+
+        let prep = reg.prepared(h, &opts).unwrap();
+        assert_eq!(prep.engine(), "native-ooc");
+        assert!(prep.is_ooc());
+        let again = reg.prepared(h, &opts).unwrap();
+        assert!(Arc::ptr_eq(&prep, &again), "the streamed engine is cached like any other");
+        assert_eq!(reg.stats().engine_hits, 1);
+
+        // Solves on the streamed engine are bitwise the resident solve.
+        let mut ws = LanczosWorkspace::new();
+        let a = Solver::solve_detached(&prep_res, 4, &opts, &mut ws, None).unwrap();
+        let b = Solver::solve_detached(&prep, 4, &opts, &mut ws, None).unwrap();
+        assert_eq!(a.eigenvalues, b.eigenvalues);
+        assert_eq!(a.eigenvectors, b.eigenvectors);
+        assert!(b.metrics.io_bytes_read > 0);
+
+        // The stored bits are final: another precision is rejected, not
+        // silently re-quantized...
+        let err = reg.prepared(h, &SolveOptions { precision: Precision::FixedQ1_15, ..opts_k(4) }).unwrap_err();
+        assert!(err.to_string().contains("precision mismatch"), "{err}");
+        // ...and deltas cannot be spliced into packet files.
+        let err = reg.update(h, CooDelta::new(1 << 9, 1 << 9)).unwrap_err();
+        assert!(err.to_string().contains("out-of-core"), "{err}");
+
+        // Unregister drops the handle; the directory itself is untouched.
+        assert!(reg.unregister(h));
+        assert!(reg.prepared(h, &opts).is_err());
+        assert!(dir.join(crate::sparse::MANIFEST_NAME).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn register_ooc_rejects_a_directory_without_a_manifest() {
+        let reg = MatrixRegistry::default();
+        let dir = crate::sparse::ooc::scratch_dir("reg-missing");
+        let err = reg.register_ooc(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("manifest"), "{err:#}");
+    }
+
+    #[test]
+    fn ooc_engine_does_not_evict_smaller_resident_engines_that_fit() {
+        // The eviction-accounting bar: an out-of-core handle is charged at
+        // its chunk-buffer bytes, NOT the O(nnz) size of the file it
+        // streams — so caching its engine must not push a small resident
+        // engine (which fits the budget) out of the LRU.
+        let small = graphs::mesh2d(12, 12, 0.9, 0.02, 3);
+        let big = graphs::mesh2d(128, 128, 0.9, 0.02, 5);
+        let small_opts = opts_k(4);
+        let big_opts = SolveOptions { cus: 2, ..opts_k(4) };
+
+        // Measure the real footprints first (engine byte accounting is
+        // deterministic, so throwaway prepares predict the registry's).
+        let small_bytes = Solver::new(small_opts.clone()).prepare(&small).unwrap().resident_bytes();
+        let big_prep = Solver::new(big_opts.clone()).prepare(&big).unwrap();
+        let dir = crate::sparse::ooc::scratch_dir("reg-evict");
+        big_prep.export_ooc(&dir, Some(4096)).unwrap();
+        let ooc_buffer = crate::sparse::OocMatrix::<f32>::open(&dir).unwrap().buffer_bytes();
+        // The scale relation the whole feature rests on: the streaming
+        // buffers plus the small engine fit where the big matrix resident
+        // would not.
+        assert!(
+            small_bytes + ooc_buffer < big_prep.resident_bytes(),
+            "buffers {ooc_buffer} + small {small_bytes} must undercut resident {}",
+            big_prep.resident_bytes()
+        );
+
+        let reg = MatrixRegistry::new(RegistryConfig {
+            budget_bytes: small_bytes + ooc_buffer,
+            ..Default::default()
+        });
+        let hs = reg.register(small).unwrap();
+        let small_engine = reg.prepared(hs, &small_opts).unwrap();
+        let hb = reg.register_ooc(&dir).unwrap();
+        let _big_engine = reg.prepared(hb, &big_opts).unwrap();
+        let stats = reg.stats();
+        assert_eq!(stats.evictions, 0, "OOC charged at O(buffer) must not evict: {stats:?}");
+        assert_eq!(stats.engines, 2);
+        assert_eq!(stats.resident_bytes, small_bytes + ooc_buffer);
+        // The small engine is still the cached one, untouched.
+        let small_again = reg.prepared(hs, &small_opts).unwrap();
+        assert!(Arc::ptr_eq(&small_engine, &small_again));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ooc_buffer_budget_gates_prepare() {
+        let m = graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 101);
+        let opts = SolveOptions { cus: 2, ..opts_k(4) };
+        let prep = Solver::new(opts.clone()).prepare(&m).unwrap();
+        let dir = crate::sparse::ooc::scratch_dir("reg-budget");
+        prep.export_ooc(&dir, Some(4096)).unwrap();
+        let reg = MatrixRegistry::new(RegistryConfig {
+            ooc_buffer_budget_bytes: 1, // nothing fits
+            ..Default::default()
+        });
+        let h = reg.register_ooc(&dir).unwrap();
+        let err = reg.prepared(h, &opts).unwrap_err();
+        assert!(err.to_string().contains("budget"), "{err}");
+        // Raising the budget (a fresh registry — config is construction-
+        // time) admits the same directory.
+        let reg2 = MatrixRegistry::new(RegistryConfig {
+            ooc_buffer_budget_bytes: 64 << 20,
+            ..Default::default()
+        });
+        let h2 = reg2.register_ooc(&dir).unwrap();
+        assert!(reg2.prepared(h2, &opts).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -87,6 +87,14 @@ pub trait Dataword: Copy + Clone + Default + PartialEq + Send + Sync + std::fmt:
     fn bytes() -> usize {
         (Self::BITS / 8) as usize
     }
+    /// Raw storage bits, zero-extended to 32. The lossless serialization
+    /// hook for the out-of-core packet files: `from_f32(to_f32(v))` is NOT
+    /// an identity for the 31/30-fraction-bit formats (an f32 mantissa has
+    /// only 24 bits), so persisted values must round-trip through the raw
+    /// representation instead.
+    fn to_bits(self) -> u32;
+    /// Inverse of [`Dataword::to_bits`]; only the low `BITS` bits are used.
+    fn from_bits(bits: u32) -> Self;
     /// The runtime [`Precision`] tag naming this format.
     fn precision() -> Precision;
 }
@@ -113,6 +121,14 @@ impl Dataword for f32 {
     #[inline]
     fn sat_mul(self, rhs: Self) -> Self {
         self * rhs
+    }
+    #[inline]
+    fn to_bits(self) -> u32 {
+        u32::from_le_bytes(self.to_le_bytes())
+    }
+    #[inline]
+    fn from_bits(bits: u32) -> Self {
+        f32::from_le_bytes(bits.to_le_bytes())
     }
     fn precision() -> Precision {
         Precision::Float32
@@ -193,7 +209,7 @@ qformat!(
 );
 
 macro_rules! dataword_fixed {
-    ($name:ident, $label:expr, $prec:expr) => {
+    ($name:ident, $label:expr, $prec:expr, $un:ty) => {
         impl Dataword for $name {
             const BITS: u32 = <$name as Fixed>::BITS;
             const NAME: &'static str = $label;
@@ -217,6 +233,16 @@ macro_rules! dataword_fixed {
             fn sat_mul(self, rhs: Self) -> Self {
                 <$name as Fixed>::mul(self, rhs)
             }
+            #[inline]
+            fn to_bits(self) -> u32 {
+                // Through the unsigned twin of the raw type: `i16 as u32`
+                // would sign-extend and leak format width into the bits.
+                self.0 as $un as u32
+            }
+            #[inline]
+            fn from_bits(bits: u32) -> Self {
+                $name(bits as $un as _)
+            }
             fn precision() -> Precision {
                 $prec
             }
@@ -224,9 +250,9 @@ macro_rules! dataword_fixed {
     };
 }
 
-dataword_fixed!(Q1_31, "q1.31", Precision::FixedQ1_31);
-dataword_fixed!(Q2_30, "q2.30", Precision::FixedQ2_30);
-dataword_fixed!(Q1_15, "q1.15", Precision::FixedQ1_15);
+dataword_fixed!(Q1_31, "q1.31", Precision::FixedQ1_31, u32);
+dataword_fixed!(Q2_30, "q2.30", Precision::FixedQ2_30, u32);
+dataword_fixed!(Q1_15, "q1.15", Precision::FixedQ1_15, u16);
 
 /// Bits per HBM transaction line (§IV-B1): one 512-bit AXI beat.
 pub const LINE_BITS: u32 = 512;
@@ -457,6 +483,44 @@ mod tests {
         for &x in &[0.123_456_789f32, -0.987_654_32, 0.000_244_14] {
             assert_eq!(<Q1_31 as Dataword>::from_f32(x).to_f32(), Precision::FixedQ1_31.quantize(x));
             assert_eq!(<Q1_15 as Dataword>::from_f32(x).to_f32(), Precision::FixedQ1_15.quantize(x));
+        }
+    }
+
+    /// Generic bit-serialization check usable for any storage scalar.
+    fn bits_round_trip_exact<V: Dataword>() {
+        for &x in &[0.0f32, 0.5, -0.25, 0.874_301, -0.999_9, 3.1e-5] {
+            let v = V::from_f32(x);
+            assert_eq!(V::from_bits(v.to_bits()), v, "{}: x={x}", V::NAME);
+        }
+    }
+
+    #[test]
+    fn dataword_bits_round_trip_all_formats() {
+        bits_round_trip_exact::<f32>();
+        bits_round_trip_exact::<Q1_31>();
+        bits_round_trip_exact::<Q2_30>();
+        bits_round_trip_exact::<Q1_15>();
+        // Negative raw values must not sign-extend into the u32 container
+        // and must come back exact — incl. the 16-bit format.
+        let q = Q1_15(-12345);
+        assert_eq!(q.to_bits(), 0x0000_CFC7);
+        assert_eq!(<Q1_15 as Dataword>::from_bits(q.to_bits()), q);
+        // f32 bits match the inherent IEEE representation.
+        assert_eq!(Dataword::to_bits(-0.5f32), (-0.5f32).to_bits());
+    }
+
+    #[test]
+    fn dataword_bits_survive_where_f32_roundtrip_is_lossy() {
+        // A raw Q1.31 value with all 31 fraction bits set is not
+        // representable in an f32 (24-bit mantissa): the f32 round-trip the
+        // in-memory quantization path uses must perturb it, while the raw
+        // bit path the packet files use must not. This is the whole reason
+        // the OOC format serializes `to_bits`, not `to_f32`.
+        for raw in [0x7FFF_FFF1u32, 0x8000_0003] {
+            let q = <Q1_31 as Dataword>::from_bits(raw);
+            assert_eq!(q.to_bits(), raw);
+            assert_ne!(<Q1_31 as Dataword>::from_f32(q.to_f32()), q, "f32 trip must be lossy");
+            assert_eq!(<Q1_31 as Dataword>::from_bits(q.to_bits()), q, "bit trip must be exact");
         }
     }
 

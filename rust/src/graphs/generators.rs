@@ -15,8 +15,11 @@
 //! * [`planted_partition`] — stochastic block model with known communities
 //!   (ground truth for the spectral-clustering example).
 
-use crate::sparse::CooMatrix;
+use crate::fixed::Dataword;
+use crate::sparse::{scale_value, CooMatrix, CsrMatrix, OocManifest, PacketFileWriter, PartitionPolicy};
 use crate::util::rng::Pcg64;
+use anyhow::Result;
+use std::path::Path;
 
 /// Deduplicate + symmetrize edge list into a canonical adjacency matrix.
 fn finalize(n: usize, edges: Vec<(u32, u32)>, rng: &mut Pcg64, weighted: bool) -> CooMatrix {
@@ -70,6 +73,141 @@ pub fn rmat(n: usize, nnz_target: usize, a: f64, b: f64, c: f64, seed: u64) -> C
         edges.push((u, v));
     }
     finalize(n, edges, &mut rng, true)
+}
+
+/// Deterministic symmetric edge weight in `[0.25, 1.0)`: a splitmix64
+/// finalizer over `(seed, min(u,v), max(u,v))`. Unlike [`rmat`]'s
+/// order-dependent weight draws, this lets the streaming scaler revisit the
+/// edge stream shard by shard and agree on every weight.
+fn edge_weight(seed: u64, u: u32, v: u32) -> f32 {
+    let (a, b) = if u < v { (u, v) } else { (v, u) };
+    let mut z = seed ^ (((a as u64) << 32) | b as u64);
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    0.25 + 0.75 * ((z >> 40) as f32 / (1u64 << 24) as f32)
+}
+
+/// Replay the R-MAT endpoint stream: `edge_goal` recursive quadrant
+/// descents from one `Pcg64` run. The stream is a pure function of the
+/// arguments, so per-shard passes regenerate identical endpoints.
+fn rmat_endpoints(n: usize, edge_goal: usize, a: f64, b: f64, c: f64, seed: u64, mut sink: impl FnMut(u32, u32)) {
+    let mut rng = Pcg64::new(seed);
+    let levels = n.trailing_zeros();
+    for _ in 0..edge_goal {
+        let (mut u, mut v) = (0u32, 0u32);
+        for _ in 0..levels {
+            u <<= 1;
+            v <<= 1;
+            let r = rng.f64();
+            if r < a {
+            } else if r < a + b {
+                v |= 1;
+            } else if r < a + b + c {
+                u |= 1;
+            } else {
+                u |= 1;
+                v |= 1;
+            }
+        }
+        sink(u, v);
+    }
+}
+
+/// One shard's symmetrized, deduplicated entries `(row, col)` with
+/// `row in [row_start, row_end)`, sorted in CSR order. Shards deduplicate
+/// independently but agree globally: both orientations of an undirected
+/// edge survive or vanish together.
+fn rmat_shard_entries(
+    n: usize,
+    edge_goal: usize,
+    a: f64,
+    b: f64,
+    c: f64,
+    seed: u64,
+    row_start: usize,
+    row_end: usize,
+) -> Vec<(u32, u32)> {
+    let mut entries = Vec::new();
+    rmat_endpoints(n, edge_goal, a, b, c, seed, |u, v| {
+        if u == v {
+            return; // no self loops, matching `finalize`
+        }
+        if (row_start..row_end).contains(&(u as usize)) {
+            entries.push((u, v));
+        }
+        if (row_start..row_end).contains(&(v as usize)) {
+            entries.push((v, u));
+        }
+    });
+    entries.sort_unstable();
+    entries.dedup();
+    entries
+}
+
+/// Streaming R-MAT scaler: generate a power-law graph **directly into an
+/// OOC packet directory**, never materializing the whole matrix. This is
+/// how n ≥ 2^22 inputs for the out-of-core datapath are produced on hosts
+/// whose RAM the graph exceeds.
+///
+/// Peak residency is one shard's entries (~nnz/cus) plus an O(n) indptr
+/// scratch. Two passes per shard over the deterministic endpoint stream:
+/// pass A accumulates the global Frobenius norm over the deduplicated
+/// entries, pass B quantizes with `V::from_f32(scale_value(w, 1/fro))` —
+/// the exact composition the resident prepare applies — and writes the
+/// shard's chunk file. Rows are split into `cus` equal ranges
+/// ([`PartitionPolicy::EqualRows`]: a streaming producer has no global CSR
+/// to nnz-balance over).
+pub fn rmat_packets<V: Dataword>(
+    dir: impl AsRef<Path>,
+    n: usize,
+    nnz_target: usize,
+    a: f64,
+    b: f64,
+    c: f64,
+    seed: u64,
+    cus: usize,
+    chunk_target_bytes: Option<usize>,
+) -> Result<OocManifest> {
+    assert!(n.is_power_of_two(), "rmat needs a power-of-two vertex count, got {n}");
+    assert!(a + b + c < 1.0 + 1e-9, "probabilities must sum below 1");
+    assert!(cus >= 1, "need at least one CU shard");
+    let edge_goal = nnz_target / 2;
+    let rows: Vec<(usize, usize)> = (0..cus).map(|s| (s * n / cus, (s + 1) * n / cus)).collect();
+    // Pass A: global Frobenius norm, one shard resident at a time. Each
+    // stored entry lands in exactly one shard, so the shard-major f64 sum
+    // covers every entry once.
+    let mut sumsq = 0f64;
+    for &(r0, r1) in &rows {
+        for &(u, v) in &rmat_shard_entries(n, edge_goal, a, b, c, seed, r0, r1) {
+            let w = edge_weight(seed, u, v) as f64;
+            sumsq += w * w;
+        }
+    }
+    let fro = if sumsq == 0.0 { 1.0 } else { sumsq.sqrt() };
+    let inv = 1.0 / fro;
+    // Pass B: re-collect each shard, quantize, write its chunk file.
+    let mut writer = PacketFileWriter::new(dir.as_ref());
+    if let Some(bytes) = chunk_target_bytes {
+        writer = writer.chunk_target_bytes(bytes);
+    }
+    writer.write_shards::<V>(n, n, fro, PartitionPolicy::EqualRows, &rows, |_s, r0, r1| {
+        let entries = rmat_shard_entries(n, edge_goal, a, b, c, seed, r0, r1);
+        let mut indptr = vec![0usize; n + 1];
+        for &(r, _) in &entries {
+            indptr[r as usize + 1] += 1;
+        }
+        for i in 0..n {
+            indptr[i + 1] += indptr[i];
+        }
+        let indices: Vec<u32> = entries.iter().map(|&(_, c)| c).collect();
+        let vals: Vec<V> = entries
+            .iter()
+            .map(|&(u, v)| V::from_f32(scale_value(edge_weight(seed, u, v), inv)))
+            .collect();
+        Ok(CsrMatrix { nrows: n, ncols: n, indptr, indices, vals })
+    })
 }
 
 /// Erdős–Rényi G(n, m): `nnz_target/2` uniform random edges.
@@ -240,6 +378,50 @@ mod tests {
             }
         }
         assert!(within > 3 * across, "within={within} across={across}");
+    }
+
+    #[test]
+    fn rmat_packets_is_symmetric_deterministic_and_shard_count_invariant() {
+        use crate::sparse::OocMatrix;
+        let (n, target) = (1 << 9, 8 << 9);
+        let dir_a = crate::sparse::ooc::scratch_dir("gen-a");
+        let dir_b = crate::sparse::ooc::scratch_dir("gen-b");
+        let dir_c = crate::sparse::ooc::scratch_dir("gen-c");
+        let ma = rmat_packets::<f32>(&dir_a, n, target, 0.57, 0.19, 0.19, 11, 3, Some(4096)).unwrap();
+        let mb = rmat_packets::<f32>(&dir_b, n, target, 0.57, 0.19, 0.19, 11, 3, Some(4096)).unwrap();
+        // Different shard count: same graph, different file geometry.
+        let mc = rmat_packets::<f32>(&dir_c, n, target, 0.57, 0.19, 0.19, 11, 5, Some(4096)).unwrap();
+        assert_eq!(ma.nnz, mb.nnz);
+        assert_eq!(ma.fro.to_bits(), mb.fro.to_bits(), "fro is deterministic");
+        assert_eq!(ma.nnz, mc.nnz, "dedup must not depend on shard boundaries");
+        assert_eq!(ma.fro.to_bits(), mc.fro.to_bits());
+        assert!(ma.nnz > target / 3, "dedup keeps most of the target, got {}", ma.nnz);
+
+        let read = |dir: &std::path::Path| {
+            let m = OocMatrix::<f32>::open(dir).unwrap();
+            let mut entries = Vec::new();
+            m.for_each_entry(|r, c, v| entries.push((r, c, v.to_bits())));
+            entries
+        };
+        let ea = read(&dir_a);
+        assert_eq!(ea, read(&dir_b), "same seed, same bytes");
+        assert_eq!(ea.len(), ma.nnz);
+        let mut ec = read(&dir_c);
+        ec.sort_unstable();
+        let mut ea_sorted = ea.clone();
+        ea_sorted.sort_unstable();
+        assert_eq!(ea_sorted, ec, "5-shard layout stores the same entry set as 3-shard");
+        // Symmetric, no self loops, values in the open normalized interval.
+        let set: std::collections::HashSet<_> = ea.iter().copied().collect();
+        for &(r, c, bits) in &ea {
+            assert_ne!(r, c, "self loop");
+            assert!(set.contains(&(c, r, bits)), "missing transpose of ({r},{c})");
+            let v = f32::from_bits(bits);
+            assert!(v > 0.0 && v < 1.0, "normalized value out of range: {v}");
+        }
+        for d in [dir_a, dir_b, dir_c] {
+            std::fs::remove_dir_all(d).ok();
+        }
     }
 
     #[test]

@@ -7,5 +7,5 @@ mod generators;
 mod spectral;
 
 pub use catalog::{catalog, CatalogEntry, TopologyClass};
-pub use generators::{erdos_renyi, mesh2d, planted_partition, rmat, scale_free_ba};
+pub use generators::{erdos_renyi, mesh2d, planted_partition, rmat, rmat_packets, scale_free_ba};
 pub use spectral::{adjacency_to_laplacian, LaplacianKind};

@@ -116,6 +116,26 @@ pub trait Operator: Send + Sync {
     fn bytes_per_apply(&self) -> usize {
         self.packets_per_apply() * (crate::fixed::LINE_BITS as usize / 8)
     }
+    /// Payload bytes read from backing *storage* so far — 0 for in-memory
+    /// operators; the out-of-core engine reports its cumulative chunk-file
+    /// traffic. Solve metrics snapshot this around a solve to report
+    /// effective storage bytes/s.
+    fn io_bytes_read(&self) -> u64 {
+        0
+    }
+    /// Times a sweep blocked on an in-flight prefetch so far — 0 for
+    /// in-memory operators. Strictly fewer stalls than chunks read means
+    /// the double buffer overlapped I/O with compute.
+    fn prefetch_stalls(&self) -> u64 {
+        0
+    }
+    /// Host-RAM bytes this operator pins for its matrix. In-memory
+    /// operators charge O(nnz) (index + value arrays plus the row
+    /// pointers); the out-of-core engine overrides this with its O(buffer)
+    /// footprint — the number the registry's byte budget charges.
+    fn resident_bytes(&self) -> usize {
+        self.nnz() * (4 + self.value_bits() as usize / 8) + 8 * (self.n() + 1)
+    }
     /// Partial-reduction lanes [`Operator::apply_fused`] uses — the CU
     /// shard count for the sharded engine, 1 for serial operators. The
     /// caller sizes [`FusedIteration::partials`] as `fused_shards() * (1 +
@@ -248,6 +268,15 @@ impl<O: Operator> Operator for CountingOperator<O> {
     }
     fn bytes_per_apply(&self) -> usize {
         self.inner.bytes_per_apply()
+    }
+    fn io_bytes_read(&self) -> u64 {
+        self.inner.io_bytes_read()
+    }
+    fn prefetch_stalls(&self) -> u64 {
+        self.inner.prefetch_stalls()
+    }
+    fn resident_bytes(&self) -> usize {
+        self.inner.resident_bytes()
     }
     fn apply(&self, x: &[f32], y: &mut [f32]) {
         self.count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);

@@ -13,6 +13,10 @@
 //!   resident matrix's reduced-precision stored values.
 //! * `catalog` — print the Table II dataset catalog.
 //! * `generate <id> <out.mtx>` — materialize a synthetic twin to a file.
+//! * `export-ooc <input> <dir>` — serialize a matrix into an out-of-core
+//!   packet directory (then `solve --ooc <dir>` streams it from disk).
+//! * `generate-ooc <dir>` — stream an R-MAT graph directly into a packet
+//!   directory without ever materializing it (graphs larger than RAM).
 //! * `model <input>` — print the FPGA timing/resource/power model estimate.
 //! * `artifacts` — verify the AOT artifact set (`make artifacts`).
 #![allow(clippy::needless_range_loop, clippy::excessive_precision)]
@@ -39,12 +43,14 @@ fn main() {
         Some("ppr") => cmd_ppr(&args[1..]),
         Some("catalog") => cmd_catalog(),
         Some("generate") => cmd_generate(&args[1..]),
+        Some("export-ooc") => cmd_export_ooc(&args[1..]),
+        Some("generate-ooc") => cmd_generate_ooc(&args[1..]),
         Some("model") => cmd_model(&args[1..]),
         Some("artifacts") => cmd_artifacts(),
         _ => {
             eprintln!(
                 "topk-eigen — Top-K sparse graph eigensolver (Lanczos + systolic Jacobi)\n\n\
-                 USAGE:\n  topk-eigen <solve|serve|query|ppr|catalog|generate|model|artifacts> [...]\n\n\
+                 USAGE:\n  topk-eigen <solve|serve|query|ppr|catalog|generate|export-ooc|generate-ooc|model|artifacts> [...]\n\n\
                  Run `topk-eigen solve --help` etc. for details."
             );
             2
@@ -111,7 +117,8 @@ fn parse_partition(s: &str) -> Result<PartitionPolicy, String> {
 
 fn cmd_solve(args: &[String]) -> i32 {
     let cmd = Command::new("topk-eigen solve", "solve a Top-K sparse eigenproblem")
-        .positional("input", "MatrixMarket file or catalog ID[@scale]")
+        .positional_opt("input", "MatrixMarket file or catalog ID[@scale] (omit with --ooc)")
+        .opt("ooc", "stream the matrix out-of-core from a packet directory (see `export-ooc`/`generate-ooc`)", None)
         .opt("k", "number of eigenpairs", Some("8"))
         .opt("reorth", "reorthogonalization: none|every|every-N", Some("every-2"))
         .opt("precision", "f32|q1.31|q2.30|q1.15", Some("f32"))
@@ -133,7 +140,6 @@ fn cmd_solve(args: &[String]) -> i32 {
         }
     };
     let run = || -> Result<i32, String> {
-        let matrix = load_input(m.str("input").map_err(|e| e.to_string())?)?;
         let opts = SolveOptions {
             k: m.parse_at_least::<usize>("k", 1).map_err(|e| e.to_string())?,
             reorth: parse_reorth(m.str("reorth").unwrap())?,
@@ -151,22 +157,44 @@ fn cmd_solve(args: &[String]) -> i32 {
             block_size: m.parse_at_least::<usize>("block", 1).map_err(|e| e.to_string())?,
             ..Default::default()
         };
+        let mut solver = Solver::new(opts.clone());
+        // Bind the engine: resident (load + normalize + shard) or
+        // out-of-core (manifest + double-buffered packet streaming; shard
+        // geometry comes from the directory, not --cus/--partition).
+        let (prep, matrix) = match m.get("ooc") {
+            Some(dir) => {
+                if m.flag("verify") {
+                    return Err("--verify recomputes residuals against the resident matrix; run without --ooc".into());
+                }
+                (solver.prepare_ooc(dir).map_err(|e| format!("{e:#}"))?, None)
+            }
+            None => {
+                let input = m
+                    .get("input")
+                    .ok_or_else(|| "missing <input> (pass a matrix, or --ooc <dir>)".to_string())?;
+                let matrix = load_input(input)?;
+                if matrix.nrows != matrix.ncols {
+                    return Err("matrix must be square".into());
+                }
+                let prep = solver.prepare(&matrix).map_err(|e| e.to_string())?;
+                (prep, Some(matrix))
+            }
+        };
         println!(
-            "solving: n={} nnz={} k={} reorth={} precision={} cus={} threads={} partition={:?} engine={:?} fuse={} block={}",
-            matrix.nrows,
-            matrix.nnz(),
+            "solving: n={} nnz={} k={} reorth={} precision={} cus={} threads={} partition={:?} engine={} fuse={} block={}",
+            prep.n(),
+            prep.nnz(),
             opts.k,
             opts.reorth.name(),
             opts.precision.name(),
             opts.cus,
             opts.effective_threads(),
             opts.partition,
-            opts.engine,
+            prep.engine(),
             opts.fuse,
             opts.block_size
         );
-        let mut solver = Solver::new(opts);
-        let sol = solver.solve(&matrix).map_err(|e| e.to_string())?;
+        let sol = solver.solve_prepared(&prep).map_err(|e| e.to_string())?;
         if !m.flag("quiet") {
             for (i, (lambda, _)) in sol.pairs().enumerate() {
                 println!("  lambda[{i}] = {lambda:+.8}");
@@ -199,8 +227,17 @@ fn cmd_solve(args: &[String]) -> i32 {
         if let Some(b) = mt.breakdown_at {
             println!("note: Lanczos breakdown at iteration {b} (exact invariant subspace)");
         }
+        if prep.engine() == "native-ooc" {
+            println!(
+                "ooc: io-bytes={} prefetch-stalls={} effective={:.1} MB/s",
+                mt.io_bytes_read,
+                mt.prefetch_stalls,
+                mt.io_bytes_read as f64 / mt.lanczos_s.max(1e-9) / 1e6,
+            );
+        }
         if m.flag("verify") {
-            let r = verify::verify(&matrix, &sol);
+            let matrix = matrix.as_ref().expect("--verify is rejected with --ooc");
+            let r = verify::verify(matrix, &sol);
             println!(
                 "accuracy: mean-angle={:.3}deg max-cross-dot={:.2e} mean-residual={:.2e} max-residual={:.2e}",
                 r.mean_angle_deg, r.max_cross_dot, r.mean_residual, r.max_residual
@@ -219,7 +256,9 @@ fn cmd_solve(args: &[String]) -> i32 {
 
 fn cmd_serve(args: &[String]) -> i32 {
     let cmd = Command::new("topk-eigen serve", "matrix-resident serving session over one registered matrix")
-        .positional("input", "MatrixMarket file or catalog ID[@scale]")
+        .positional_opt("input", "MatrixMarket file or catalog ID[@scale] (omit with --ooc)")
+        .opt("ooc", "serve a packet directory out-of-core (updates disabled; shard geometry from the manifest)", None)
+        .opt("ooc-budget-mb", "max chunk-buffer bytes an OOC engine may pin, in MiB (0 = unlimited)", Some("0"))
         .opt("replicas", "solver worker replicas", Some("2"))
         .opt("jobs", "jobs in the trace (cycling through --ks)", Some("32"))
         .opt("ks", "comma-separated K values of the trace", Some("4,8,16,32"))
@@ -248,7 +287,6 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     };
     let run = || -> Result<i32, String> {
-        let matrix = load_input(m.str("input").map_err(|e| e.to_string())?)?;
         let replicas = m.parse_at_least::<usize>("replicas", 1).map_err(|e| e.to_string())?;
         let jobs = m.parse_at_least::<usize>("jobs", 1).map_err(|e| e.to_string())?;
         let ks = m.parse_list::<usize>("ks").map_err(|e| e.to_string())?;
@@ -267,6 +305,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             ..Default::default()
         };
         let budget_mb = m.parse::<usize>("budget-mb").map_err(|e| e.to_string())?;
+        let ooc_budget_mb = m.parse::<usize>("ooc-budget-mb").map_err(|e| e.to_string())?;
         let updates = m.parse::<usize>("updates").map_err(|e| e.to_string())?;
         let queries = m.parse::<usize>("queries").map_err(|e| e.to_string())?;
         let query_k = m.parse_at_least::<usize>("query-k", 1).map_err(|e| e.to_string())?;
@@ -281,6 +320,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             policy,
             registry: RegistryConfig {
                 budget_bytes: budget_mb * (1 << 20),
+                ooc_buffer_budget_bytes: ooc_budget_mb * (1 << 20),
                 warm_start: m.flag("warm-start"),
                 skip_symmetry_check: m.flag("skip-symmetry-check"),
                 ..Default::default()
@@ -288,23 +328,47 @@ fn cmd_serve(args: &[String]) -> i32 {
             paused: false,
             batch_cap,
         });
+        let t0 = std::time::Instant::now();
+        // Residency source: a loaded matrix (with a canonical mirror kept
+        // in sync for the evolving-graph replay), or an out-of-core packet
+        // directory (immutable: updates are rejected at registration time
+        // here rather than mid-trace).
+        let (handle, n, nnz, mut mirror) = match m.get("ooc") {
+            Some(dir) => {
+                if updates > 0 {
+                    return Err(
+                        "--updates needs a resident matrix: packet files store pre-quantized bits \
+                         and cannot be spliced in place"
+                            .into(),
+                    );
+                }
+                let handle = svc.registry().register_ooc(dir).map_err(|e| format!("{e:#}"))?;
+                let (n, nnz) = svc.registry().dims(handle).ok_or("registered handle vanished")?;
+                (handle, n, nnz, None)
+            }
+            None => {
+                let input = m
+                    .get("input")
+                    .ok_or_else(|| "missing <input> (pass a matrix, or --ooc <dir>)".to_string())?;
+                let matrix = load_input(input)?;
+                // Mirror of the registered matrix's canonical content, kept
+                // in sync with every applied delta so each generated delta
+                // perturbs the *current* values.
+                let mut mirror = matrix.clone();
+                mirror.canonicalize();
+                let (n, nnz) = (matrix.nrows, matrix.nnz());
+                let handle = svc.register(matrix).map_err(|e| e.to_string())?;
+                (handle, n, nnz, Some(mirror))
+            }
+        };
         println!(
-            "serving: n={} nnz={} replicas={replicas} policy={} jobs={jobs} ks={ks:?} precision={} block={} warm-start={}",
-            matrix.nrows,
-            matrix.nnz(),
+            "serving: n={n} nnz={nnz} replicas={replicas} policy={} jobs={jobs} ks={ks:?} precision={} block={} warm-start={}{}",
             policy.name(),
             opts.precision.name(),
             opts.block_size,
             m.flag("warm-start"),
+            if m.get("ooc").is_some() { " (out-of-core)" } else { "" },
         );
-        let t0 = std::time::Instant::now();
-        // Mirror of the registered matrix's canonical content, kept in
-        // sync with every applied delta so each generated delta perturbs
-        // the *current* values (the evolving-graph replay).
-        let mut mirror = matrix.clone();
-        mirror.canonicalize();
-        let handle = svc.register(matrix).map_err(|e| e.to_string())?;
-        let n = mirror.nrows;
         let mut ok = 0usize;
         let mut query_ok = 0usize;
         let mut ppr_ok = 0usize;
@@ -392,7 +456,8 @@ fn cmd_serve(args: &[String]) -> i32 {
                 }
             }
             if phase + 1 < phases {
-                let delta = perturbation_delta(&mirror, update_dirty, phase);
+                let mirror = mirror.as_mut().expect("updates require a resident matrix");
+                let delta = perturbation_delta(mirror, update_dirty, phase);
                 let mut local = delta.clone();
                 local.canonicalize();
                 mirror.apply_delta(&local);
@@ -782,6 +847,120 @@ fn cmd_generate(args: &[String]) -> i32 {
         }
         Err(e) => {
             eprintln!("write failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_export_ooc(args: &[String]) -> i32 {
+    let cmd = Command::new("topk-eigen export-ooc", "serialize a matrix into an out-of-core packet directory")
+        .positional("input", "MatrixMarket file or catalog ID[@scale]")
+        .positional("dir", "output packet directory (created if missing)")
+        .opt("precision", "storage format baked into the files: f32|q1.31|q2.30|q1.15", Some("f32"))
+        .opt("cus", "SpMV compute units (one chunk file per shard)", Some("5"))
+        .opt("partition", "row partition: equal-rows|balanced-nnz", Some("balanced-nnz"))
+        .opt("chunk-kb", "chunk payload target in KiB (0 = library default)", Some("0"))
+        .flag("skip-symmetry-check", "trust the input to be symmetric");
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let run = || -> Result<i32, String> {
+        let matrix = load_input(m.str("input").map_err(|e| e.to_string())?)?;
+        let opts = SolveOptions {
+            precision: parse_precision(m.str("precision").unwrap())?,
+            cus: m.parse_at_least::<usize>("cus", 1).map_err(|e| e.to_string())?,
+            partition: parse_partition(m.str("partition").unwrap())?,
+            skip_symmetry_check: m.flag("skip-symmetry-check"),
+            ..Default::default()
+        };
+        let chunk_kb = m.parse::<usize>("chunk-kb").map_err(|e| e.to_string())?;
+        let chunk = if chunk_kb == 0 { None } else { Some(chunk_kb << 10) };
+        // Prepare resident once (normalize + quantize + shard), then move
+        // the engine's exact bits to disk; `solve --ooc` on the directory
+        // reproduces this prepare's solves bitwise.
+        let mut solver = Solver::new(opts);
+        let prep = solver.prepare(&matrix).map_err(|e| e.to_string())?;
+        let dir = m.str("dir").unwrap();
+        let man = prep.export_ooc(dir, chunk).map_err(|e| format!("{e:#}"))?;
+        println!(
+            "wrote {dir}: n={} nnz={} shards={} precision={} fro={:.6e}",
+            man.nrows,
+            man.nnz,
+            man.parts.len(),
+            man.precision.name(),
+            man.fro,
+        );
+        Ok(0)
+    };
+    match run() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_generate_ooc(args: &[String]) -> i32 {
+    let cmd = Command::new(
+        "topk-eigen generate-ooc",
+        "stream an R-MAT graph directly into a packet directory (never materialized in RAM)",
+    )
+    .positional("dir", "output packet directory (created if missing)")
+    .opt("n", "vertex count (power of two)", Some("4194304"))
+    .opt("degree", "directed nnz target per row", Some("8"))
+    .opt("a", "R-MAT quadrant probability a", Some("0.57"))
+    .opt("b", "R-MAT quadrant probability b", Some("0.19"))
+    .opt("c", "R-MAT quadrant probability c", Some("0.19"))
+    .opt("seed", "generator seed", Some("42"))
+    .opt("precision", "f32|q1.31|q2.30|q1.15", Some("f32"))
+    .opt("cus", "shard files (CU stripes of the eventual solve)", Some("5"))
+    .opt("chunk-kb", "chunk payload target in KiB (0 = library default)", Some("0"));
+    let m = match cmd.parse(args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let run = || -> Result<i32, String> {
+        let n = m.parse_at_least::<usize>("n", 2).map_err(|e| e.to_string())?;
+        if !n.is_power_of_two() {
+            return Err(format!("--n={n}: must be a power of two"));
+        }
+        let degree = m.parse_at_least::<usize>("degree", 1).map_err(|e| e.to_string())?;
+        let a = m.parse::<f64>("a").map_err(|e| e.to_string())?;
+        let b = m.parse::<f64>("b").map_err(|e| e.to_string())?;
+        let c = m.parse::<f64>("c").map_err(|e| e.to_string())?;
+        if !(a > 0.0 && b > 0.0 && c > 0.0 && a + b + c < 1.0) {
+            return Err(format!("bad quadrant probabilities a={a} b={b} c={c} (each > 0, sum < 1)"));
+        }
+        let seed = m.parse::<u64>("seed").map_err(|e| e.to_string())?;
+        let precision = parse_precision(m.str("precision").unwrap())?;
+        let cus = m.parse_at_least::<usize>("cus", 1).map_err(|e| e.to_string())?;
+        let chunk_kb = m.parse::<usize>("chunk-kb").map_err(|e| e.to_string())?;
+        let chunk = if chunk_kb == 0 { None } else { Some(chunk_kb << 10) };
+        let dir = m.str("dir").unwrap();
+        println!(
+            "generating: n={n} target-nnz={} precision={} cus={cus} -> {dir}",
+            n * degree,
+            precision.name(),
+        );
+        let man = topk_eigen::with_precision!(precision, V => {
+            graphs::rmat_packets::<V>(dir, n, n * degree, a, b, c, seed, cus, chunk)
+        })
+        .map_err(|e| format!("{e:#}"))?;
+        println!("wrote {dir}: nnz={} shards={} fro={:.6e}", man.nnz, man.parts.len(), man.fro);
+        Ok(0)
+    };
+    match run() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
             1
         }
     }

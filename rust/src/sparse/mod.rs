@@ -8,13 +8,17 @@
 //! per-CU bounded heaps — [`TopKHeap`], [`ShardedSpmv::top_k`] — and the
 //! [`ppr_serial`]/[`ShardedSpmv::ppr`] Personalized PageRank power
 //! iteration) run non-eigen jobs over the same stripes and storage
-//! formats.
+//! formats. The [`ooc`] module extends the packet model past RAM: matrices
+//! serialized into per-shard chunk files ([`PacketFileWriter`]) stream back
+//! through double-buffered prefetch ([`OocMatrix`]) as the engine's
+//! [`MatrixBacking::Ooc`] backing, bitwise-identical to the resident path.
 
 mod coo;
 mod csr;
 pub(crate) mod delta;
 mod mmio;
 mod norm;
+pub mod ooc;
 mod packet;
 mod partition;
 mod query;
@@ -25,10 +29,14 @@ pub use csr::CsrMatrix;
 pub use delta::{CooDelta, DeltaApply, DeltaOp};
 pub use mmio::{read_matrix_market, read_matrix_market_with, write_matrix_market, DuplicatePolicy, MmioError};
 pub use norm::{frobenius_norm, normalize_frobenius, scale_value, ONE_BELOW};
+pub use ooc::{
+    ChunkBuf, ChunkGuard, OocManifest, OocMatrix, OocShardSource, PacketFileWriter, DEFAULT_CHUNK_BYTES,
+    MANIFEST_NAME,
+};
 pub use packet::{CooPacket, PacketStream, PACKET_BITS, PACKET_MAX_NNZ, PACKET_NNZ};
 pub use partition::{imbalance, partition_rows_balanced, PartitionPolicy, RowPartition};
 pub use query::{
     column_sums, merge_top_k, ppr_serial, ppr_with, ppr_with_seed, row_l1_norms, top_k_serial, PprOptions,
     PprResult, TopKEntry, TopKHeap,
 };
-pub use sharded::{ShardRebuild, ShardedSpmv};
+pub use sharded::{MatrixBacking, ShardRebuild, ShardedSpmv};

@@ -1,0 +1,1233 @@
+//! Out-of-core packet files: the matrix lives on storage, not in RAM.
+//!
+//! The paper's premise is that the matrix is *streamed* — HBM channels feed
+//! each CU 512-bit packet lines while only the O(n) Lanczos vectors stay in
+//! fast memory. This module extends that economy past RAM (after the
+//! SSD-eigensolver design of arXiv 1602.01421): a [`PacketFileWriter`]
+//! serializes any `CsrMatrix<V>` into one chunk file per CU shard, and an
+//! [`OocShardSource`] replays a shard through a **double-buffered
+//! prefetcher** — the fused sweep consumes one chunk buffer while a
+//! dedicated I/O pool fills the other, so warm iterations overlap storage
+//! reads with SpMV and stay allocation-flat (all chunk buffers are
+//! preallocated at [`OocMatrix::open`]).
+//!
+//! ## On-disk format (version 1)
+//!
+//! Per shard `shard-NNN.pkt`:
+//!
+//! ```text
+//! header   64 B   magic "TKPK", version u32, precision tag u32, shard u32,
+//!                 nrows/ncols/row_start/row_end/nnz/chunk_count u64 (LE)
+//! table    40 B/chunk  row_start, row_end, nnz, payload_bytes, fnv1a64
+//! payload  64 B-aligned packet lines, each holding up to
+//!          packet_capacity(V::BITS) entries of (row u32, col u32,
+//!          raw value bits) — §IV-B1's line layout, zero-padded
+//! ```
+//!
+//! Values are serialized as **raw storage bits** ([`Dataword::to_bits`]):
+//! an f32 round-trip would silently perturb Q1.31/Q2.30 words (24-bit
+//! mantissa vs 31 fraction bits), and the whole point of the format is that
+//! an out-of-core solve is bitwise-identical to the resident path.
+//!
+//! Chunk boundaries fall on multiples of the 512-row kernel window
+//! ([`crate::sparse::sharded`]'s `TOPK_ROW_CHUNK`) relative to the shard's
+//! first row, so the windowed kernels (`top_k*`, `apply_fused_block`) see
+//! exactly the window sequence the resident engine produces; chunks tile
+//! the shard's whole row range (a chunk may carry zero entries) so
+//! window-level vector work runs even where the matrix is locally empty.
+//!
+//! A human-readable `manifest.tkm` records precision, dimensions, the
+//! Frobenius norm (as raw f64 bits), and the shard partition; every parse
+//! or validation failure is a line-numbered `anyhow` error.
+
+use std::io::{Read as _, Seek, SeekFrom, Write as _};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::fixed::{packet_capacity, Dataword, Precision};
+use crate::sparse::sharded::TOPK_ROW_CHUNK;
+use crate::sparse::{partition_rows_balanced, CooMatrix, CsrMatrix, PartitionPolicy, RowPartition};
+use crate::util::pool::ThreadPool;
+
+/// Bytes per 512-bit packet line.
+const LINE_BYTES: usize = (crate::fixed::LINE_BITS / 8) as usize;
+/// File magic: "TKPK" (Top-K PacKet).
+const MAGIC: [u8; 4] = *b"TKPK";
+/// On-disk format version this build reads and writes.
+const FORMAT_VERSION: u32 = 1;
+/// Fixed per-shard header size.
+const HEADER_BYTES: usize = 64;
+/// Chunk-table entry size (5 LE u64 words).
+const TABLE_ENTRY_BYTES: usize = 40;
+/// Default chunk payload target: ~1 MiB keeps seeks rare while two buffers
+/// per shard stay far below any realistic matrix size.
+pub const DEFAULT_CHUNK_BYTES: usize = 1 << 20;
+/// Manifest file name inside an OOC directory.
+pub const MANIFEST_NAME: &str = "manifest.tkm";
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over a byte slice, continuing from `h` (seed with [`FNV_OFFSET`]).
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn precision_tag(p: Precision) -> u32 {
+    match p {
+        Precision::Float32 => 0,
+        Precision::FixedQ1_31 => 1,
+        Precision::FixedQ2_30 => 2,
+        Precision::FixedQ1_15 => 3,
+    }
+}
+
+fn tag_precision(tag: u32) -> Option<Precision> {
+    Precision::ALL.iter().copied().find(|&p| precision_tag(p) == tag)
+}
+
+fn get_u32(b: &[u8], o: usize) -> u32 {
+    u32::from_le_bytes(b[o..o + 4].try_into().unwrap())
+}
+
+fn get_u64(b: &[u8], o: usize) -> u64 {
+    u64::from_le_bytes(b[o..o + 8].try_into().unwrap())
+}
+
+/// Path of shard `s`'s chunk file inside `dir`.
+pub fn shard_path(dir: &Path, s: usize) -> PathBuf {
+    dir.join(format!("shard-{s:03}.pkt"))
+}
+
+/// Unique scratch directory under the system temp dir (tests and benches;
+/// caller removes it when done).
+#[doc(hidden)]
+pub fn scratch_dir(tag: &str) -> PathBuf {
+    static SEQ: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    let n = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    std::env::temp_dir().join(format!("topk-ooc-{tag}-{}-{n}", std::process::id()))
+}
+
+// ---------------------------------------------------------------------------
+// Manifest
+// ---------------------------------------------------------------------------
+
+/// Everything the engine needs to know about an OOC directory without
+/// touching a chunk file: precision, dimensions, Frobenius norm, and the
+/// CU shard partition (identical to what `partition_rows_balanced` would
+/// produce on the resident matrix, so shard geometry matches bit-for-bit).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OocManifest {
+    /// Storage format of the persisted values.
+    pub precision: Precision,
+    /// Matrix rows.
+    pub nrows: usize,
+    /// Matrix columns.
+    pub ncols: usize,
+    /// Stored non-zeros across all shards.
+    pub nnz: usize,
+    /// Frobenius norm of the *original* matrix (values on disk are already
+    /// normalized); eigenvalues rescale by this, so it is stored as exact
+    /// f64 bits.
+    pub fro: f64,
+    /// Maximum row length (sizes the early-exit inflate bound).
+    pub max_row_nnz: usize,
+    /// Partition policy the shard table was built with.
+    pub policy: PartitionPolicy,
+    /// One row partition per shard file.
+    pub parts: Vec<RowPartition>,
+}
+
+impl OocManifest {
+    fn policy_name(policy: PartitionPolicy) -> &'static str {
+        match policy {
+            PartitionPolicy::EqualRows => "equal",
+            PartitionPolicy::BalancedNnz => "balanced",
+        }
+    }
+
+    fn save(&self, dir: &Path) -> Result<()> {
+        let mut text = String::new();
+        text.push_str("format = tkpk\n");
+        text.push_str(&format!("version = {FORMAT_VERSION}\n"));
+        text.push_str(&format!("precision = {}\n", self.precision.name()));
+        text.push_str(&format!("nrows = {}\n", self.nrows));
+        text.push_str(&format!("ncols = {}\n", self.ncols));
+        text.push_str(&format!("nnz = {}\n", self.nnz));
+        text.push_str(&format!("fro_bits = {}\n", self.fro.to_bits()));
+        text.push_str(&format!("max_row_nnz = {}\n", self.max_row_nnz));
+        text.push_str(&format!("policy = {}\n", Self::policy_name(self.policy)));
+        text.push_str(&format!("shards = {}\n", self.parts.len()));
+        for (s, p) in self.parts.iter().enumerate() {
+            text.push_str(&format!("shard = {s} {} {} {}\n", p.row_start, p.row_end, p.nnz));
+        }
+        let path = dir.join(MANIFEST_NAME);
+        std::fs::write(&path, text).with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Parse `dir/manifest.tkm`. Every malformed line is reported as
+    /// `manifest.tkm:<line>: <what>` so a damaged directory is debuggable.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join(MANIFEST_NAME);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading OOC manifest {}", path.display()))?;
+        let mut fields: std::collections::HashMap<&str, (usize, &str)> =
+            std::collections::HashMap::new();
+        let mut shard_lines: Vec<(usize, &str)> = Vec::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .with_context(|| format!("{MANIFEST_NAME}:{lineno}: expected `key = value`"))?;
+            let (key, value) = (key.trim(), value.trim());
+            if key == "shard" {
+                shard_lines.push((lineno, value));
+            } else {
+                fields.insert(key, (lineno, value));
+            }
+        }
+        fn take<'t, T: std::str::FromStr>(
+            fields: &std::collections::HashMap<&str, (usize, &'t str)>,
+            key: &str,
+        ) -> Result<T> {
+            let (lineno, value) =
+                fields.get(key).with_context(|| format!("{MANIFEST_NAME}: missing `{key}`"))?;
+            value.parse::<T>().ok().with_context(|| {
+                format!("{MANIFEST_NAME}:{lineno}: invalid `{key}` value `{value}`")
+            })
+        }
+        let format: String = take(&fields, "format")?;
+        ensure!(format == "tkpk", "{MANIFEST_NAME}: unknown format `{format}`");
+        let version: u32 = take(&fields, "version")?;
+        ensure!(
+            version == FORMAT_VERSION,
+            "{MANIFEST_NAME}: unsupported version {version} (this build reads {FORMAT_VERSION})"
+        );
+        let (prec_line, prec_name) = *fields
+            .get("precision")
+            .with_context(|| format!("{MANIFEST_NAME}: missing `precision`"))?;
+        let precision = Precision::ALL
+            .iter()
+            .copied()
+            .find(|p| p.name() == prec_name)
+            .with_context(|| {
+                format!("{MANIFEST_NAME}:{prec_line}: unknown precision `{prec_name}`")
+            })?;
+        let (pol_line, pol_name) =
+            *fields.get("policy").with_context(|| format!("{MANIFEST_NAME}: missing `policy`"))?;
+        let policy = match pol_name {
+            "equal" => PartitionPolicy::EqualRows,
+            "balanced" => PartitionPolicy::BalancedNnz,
+            other => bail!("{MANIFEST_NAME}:{pol_line}: unknown policy `{other}`"),
+        };
+        let nrows: usize = take(&fields, "nrows")?;
+        let ncols: usize = take(&fields, "ncols")?;
+        let nnz: usize = take(&fields, "nnz")?;
+        let fro = f64::from_bits(take::<u64>(&fields, "fro_bits")?);
+        let max_row_nnz: usize = take(&fields, "max_row_nnz")?;
+        let shards: usize = take(&fields, "shards")?;
+        ensure!(
+            shard_lines.len() == shards,
+            "{MANIFEST_NAME}: `shards = {shards}` but {} shard lines",
+            shard_lines.len()
+        );
+        let mut parts = Vec::with_capacity(shards);
+        for (expect, &(lineno, value)) in shard_lines.iter().enumerate() {
+            let nums: Vec<usize> = value.split_whitespace().map(|t| t.parse().ok()).collect::<
+                Option<Vec<usize>>,
+            >()
+            .with_context(|| {
+                format!("{MANIFEST_NAME}:{lineno}: expected `shard = <idx> <row_start> <row_end> <nnz>`")
+            })?;
+            ensure!(
+                nums.len() == 4 && nums[0] == expect,
+                "{MANIFEST_NAME}:{lineno}: expected shard index {expect}, got `{value}`"
+            );
+            ensure!(
+                nums[1] <= nums[2] && nums[2] <= nrows,
+                "{MANIFEST_NAME}:{lineno}: shard rows {}..{} out of bounds (nrows {nrows})",
+                nums[1],
+                nums[2]
+            );
+            parts.push(RowPartition { row_start: nums[1], row_end: nums[2], nnz: nums[3] });
+        }
+        let total: usize = parts.iter().map(|p| p.nnz).sum();
+        ensure!(total == nnz, "{MANIFEST_NAME}: shard nnz sum {total} != nnz {nnz}");
+        Ok(Self { precision, nrows, ncols, nnz, fro, max_row_nnz, policy, parts })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+/// Serializes a matrix into an OOC packet directory: one chunk file per CU
+/// shard plus `manifest.tkm`. The shard table comes from the same
+/// `partition_rows_balanced` the resident engine uses, so an OOC solve sees
+/// the exact CU geometry of its in-memory twin.
+pub struct PacketFileWriter {
+    dir: PathBuf,
+    chunk_target_bytes: usize,
+}
+
+impl PacketFileWriter {
+    /// Writer targeting `dir` (created if missing) with the default
+    /// [`DEFAULT_CHUNK_BYTES`] chunk payload target.
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into(), chunk_target_bytes: DEFAULT_CHUNK_BYTES }
+    }
+
+    /// Override the chunk payload target (tests use tiny chunks to exercise
+    /// many prefetch hand-offs). Chunk boundaries still fall on 512-row
+    /// window multiples, so a single dense window may exceed the target.
+    pub fn chunk_target_bytes(mut self, bytes: usize) -> Self {
+        self.chunk_target_bytes = bytes.max(LINE_BYTES);
+        self
+    }
+
+    /// Serialize a canonical COO matrix (convenience wrapper over
+    /// [`PacketFileWriter::write_csr`]).
+    pub fn write_coo<V: Dataword>(
+        &self,
+        coo: &CooMatrix<V>,
+        fro: f64,
+        cus: usize,
+        policy: PartitionPolicy,
+    ) -> Result<OocManifest> {
+        self.write_csr(&coo.to_csr(), fro, cus, policy)
+    }
+
+    /// Serialize a CSR matrix into `cus` shard files. `fro` is the original
+    /// Frobenius norm (the values in `m` are expected to already be
+    /// normalized/quantized exactly as the resident engine stores them —
+    /// the writer moves raw bits, never re-rounds).
+    pub fn write_csr<V: Dataword>(
+        &self,
+        m: &CsrMatrix<V>,
+        fro: f64,
+        cus: usize,
+        policy: PartitionPolicy,
+    ) -> Result<OocManifest> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating OOC dir {}", self.dir.display()))?;
+        let parts = partition_rows_balanced(m, cus, policy);
+        for (s, p) in parts.iter().enumerate() {
+            self.write_shard(m, s, p)
+                .with_context(|| format!("writing {}", shard_path(&self.dir, s).display()))?;
+        }
+        let manifest = OocManifest {
+            precision: V::precision(),
+            nrows: m.nrows,
+            ncols: m.ncols,
+            nnz: m.nnz(),
+            fro,
+            max_row_nnz: m.max_row_nnz(),
+            policy,
+            parts,
+        };
+        manifest.save(&self.dir)?;
+        Ok(manifest)
+    }
+
+    /// Serialize shard-by-shard from a producer callback — the streaming
+    /// entry point for graphs larger than RAM. `make_shard(s, row_start,
+    /// row_end)` returns a full-height CSR holding ONLY rows
+    /// `[row_start, row_end)` (all other rows empty), so peak residency is
+    /// one shard's entries, never the whole matrix. The caller fixes the
+    /// row partition up front: a streaming producer has no global CSR to
+    /// nnz-balance over, so [`PartitionPolicy::EqualRows`] geometry is the
+    /// norm here.
+    pub fn write_shards<V: Dataword>(
+        &self,
+        nrows: usize,
+        ncols: usize,
+        fro: f64,
+        policy: PartitionPolicy,
+        rows: &[(usize, usize)],
+        mut make_shard: impl FnMut(usize, usize, usize) -> Result<CsrMatrix<V>>,
+    ) -> Result<OocManifest> {
+        ensure!(!rows.is_empty(), "write_shards needs at least one shard");
+        ensure!(
+            rows[0].0 == 0
+                && rows[rows.len() - 1].1 == nrows
+                && rows.windows(2).all(|w| w[0].1 == w[1].0),
+            "shard row ranges must tile 0..{nrows} contiguously"
+        );
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating OOC dir {}", self.dir.display()))?;
+        let mut parts = Vec::with_capacity(rows.len());
+        let (mut nnz, mut max_row_nnz) = (0usize, 0usize);
+        for (s, &(row_start, row_end)) in rows.iter().enumerate() {
+            let m = make_shard(s, row_start, row_end)?;
+            ensure!(
+                m.nrows == nrows && m.ncols == ncols,
+                "shard {s}: producer returned {}x{}, expected {nrows}x{ncols}",
+                m.nrows,
+                m.ncols
+            );
+            let p = RowPartition { row_start, row_end, nnz: m.indptr[row_end] - m.indptr[row_start] };
+            ensure!(
+                m.nnz() == p.nnz,
+                "shard {s}: {} entries fall outside rows {row_start}..{row_end}",
+                m.nnz() - p.nnz
+            );
+            max_row_nnz = max_row_nnz.max(m.max_row_nnz());
+            self.write_shard(&m, s, &p)
+                .with_context(|| format!("writing {}", shard_path(&self.dir, s).display()))?;
+            nnz += p.nnz;
+            parts.push(p);
+        }
+        let manifest =
+            OocManifest { precision: V::precision(), nrows, ncols, nnz, fro, max_row_nnz, policy, parts };
+        manifest.save(&self.dir)?;
+        Ok(manifest)
+    }
+
+    /// Plan chunk boundaries for one shard: whole 512-row windows, closing
+    /// a chunk once its payload reaches the target; chunks tile the entire
+    /// shard row range (the tail chunk may carry zero entries).
+    fn plan_chunks<V: Dataword>(
+        &self,
+        m: &CsrMatrix<V>,
+        p: &RowPartition,
+    ) -> Vec<(usize, usize, usize)> {
+        let cap = packet_capacity(V::BITS);
+        let mut chunks = Vec::new();
+        let (mut c0, mut cn) = (p.row_start, 0usize);
+        let mut w0 = p.row_start;
+        while w0 < p.row_end {
+            let w1 = (w0 + TOPK_ROW_CHUNK).min(p.row_end);
+            cn += m.indptr[w1] - m.indptr[w0];
+            if cn.div_ceil(cap) * LINE_BYTES >= self.chunk_target_bytes || w1 == p.row_end {
+                chunks.push((c0, w1, cn));
+                (c0, cn) = (w1, 0);
+            }
+            w0 = w1;
+        }
+        chunks
+    }
+
+    fn write_shard<V: Dataword>(&self, m: &CsrMatrix<V>, s: usize, p: &RowPartition) -> Result<()> {
+        let cap = packet_capacity(V::BITS);
+        let vb = V::bytes();
+        let chunks = self.plan_chunks(m, p);
+        let file = std::fs::File::create(shard_path(&self.dir, s))?;
+        let mut w = std::io::BufWriter::new(file);
+        let mut header = [0u8; HEADER_BYTES];
+        header[0..4].copy_from_slice(&MAGIC);
+        header[4..8].copy_from_slice(&FORMAT_VERSION.to_le_bytes());
+        header[8..12].copy_from_slice(&precision_tag(V::precision()).to_le_bytes());
+        header[12..16].copy_from_slice(&(s as u32).to_le_bytes());
+        for (i, v) in [m.nrows, m.ncols, p.row_start, p.row_end, p.nnz, chunks.len()]
+            .into_iter()
+            .enumerate()
+        {
+            header[16 + i * 8..24 + i * 8].copy_from_slice(&(v as u64).to_le_bytes());
+        }
+        w.write_all(&header)?;
+        // Reserve the chunk table; payload checksums are back-patched after
+        // the single streaming pass over the entries.
+        w.write_all(&vec![0u8; chunks.len() * TABLE_ENTRY_BYTES])?;
+        let mut metas = Vec::with_capacity(chunks.len());
+        for &(r0, r1, cn) in &chunks {
+            let mut hash = FNV_OFFSET;
+            let mut payload = 0u64;
+            let mut line = [0u8; LINE_BYTES];
+            let mut slot = 0usize;
+            for r in r0..r1 {
+                for k in m.indptr[r]..m.indptr[r + 1] {
+                    let o = slot * (8 + vb);
+                    line[o..o + 4].copy_from_slice(&(r as u32).to_le_bytes());
+                    line[o + 4..o + 8].copy_from_slice(&m.indices[k].to_le_bytes());
+                    let bits = m.vals[k].to_bits();
+                    line[o + 8..o + 8 + vb].copy_from_slice(&bits.to_le_bytes()[..vb]);
+                    slot += 1;
+                    if slot == cap {
+                        hash = fnv1a(hash, &line);
+                        w.write_all(&line)?;
+                        payload += LINE_BYTES as u64;
+                        line = [0u8; LINE_BYTES];
+                        slot = 0;
+                    }
+                }
+            }
+            if slot > 0 {
+                hash = fnv1a(hash, &line);
+                w.write_all(&line)?;
+                payload += LINE_BYTES as u64;
+            }
+            debug_assert_eq!(payload as usize, cn.div_ceil(cap) * LINE_BYTES);
+            metas.push((r0 as u64, r1 as u64, cn as u64, payload, hash));
+        }
+        w.seek(SeekFrom::Start(HEADER_BYTES as u64))?;
+        for (r0, r1, cn, payload, hash) in metas {
+            for v in [r0, r1, cn, payload, hash] {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        w.flush()?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reader: OocMatrix + double-buffered OocShardSource
+// ---------------------------------------------------------------------------
+
+/// One chunk's location inside a shard file.
+#[derive(Clone, Debug)]
+struct ChunkMeta {
+    row_start: usize,
+    row_end: usize,
+    nnz: usize,
+    payload_bytes: usize,
+    checksum: u64,
+    /// Absolute file offset of the first payload byte.
+    file_offset: u64,
+    /// Global packet-line index of the chunk's first line (error messages).
+    first_line: usize,
+}
+
+#[derive(Debug)]
+struct ShardMeta {
+    path: PathBuf,
+    chunks: Vec<ChunkMeta>,
+}
+
+/// A decoded chunk: the raw packet lines plus column-index/value arrays
+/// unpacked for the SpMV gather. Buffers are pooled by the owning
+/// [`OocMatrix`] — warm sweeps allocate nothing.
+pub struct ChunkBuf<V: Dataword> {
+    raw: Vec<u8>,
+    /// Absolute row index per entry (ascending; row-major CSR order).
+    pub(crate) rows: Vec<u32>,
+    /// Column index per entry.
+    pub(crate) cols: Vec<u32>,
+    /// Value per entry (raw bits restored, no re-quantization).
+    pub(crate) vals: Vec<V>,
+    /// First row this chunk covers (inclusive).
+    pub(crate) row_start: usize,
+    /// Last row this chunk covers (exclusive).
+    pub(crate) row_end: usize,
+}
+
+impl<V: Dataword> ChunkBuf<V> {
+    fn with_capacity(max_payload: usize, max_nnz: usize) -> Self {
+        Self {
+            raw: Vec::with_capacity(max_payload),
+            rows: Vec::with_capacity(max_nnz),
+            cols: Vec::with_capacity(max_nnz),
+            vals: Vec::with_capacity(max_nnz),
+            row_start: 0,
+            row_end: 0,
+        }
+    }
+
+    fn capacity_bytes(&self) -> usize {
+        self.raw.capacity()
+            + self.rows.capacity() * 4
+            + self.cols.capacity() * 4
+            + self.vals.capacity() * V::bytes()
+    }
+
+    /// Decoded entries in this chunk.
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// True when the chunk covers rows but carries no entries.
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    /// Row range `[row_start, row_end)` this chunk covers.
+    pub fn row_range(&self) -> (usize, usize) {
+        (self.row_start, self.row_end)
+    }
+
+    /// Absolute row index per entry.
+    pub fn rows(&self) -> &[u32] {
+        &self.rows
+    }
+
+    /// Column index per entry.
+    pub fn cols(&self) -> &[u32] {
+        &self.cols
+    }
+
+    /// Stored value per entry.
+    pub fn vals(&self) -> &[V] {
+        &self.vals
+    }
+}
+
+enum SlotState<V: Dataword> {
+    Pending,
+    Ready(ChunkBuf<V>),
+    Failed(String),
+    Taken,
+}
+
+struct PrefetchSlot<V: Dataword> {
+    state: Mutex<SlotState<V>>,
+    cv: Condvar,
+}
+
+/// A file-backed matrix: shard/chunk metadata, a dedicated I/O thread pool,
+/// and a preallocated pool of chunk buffers (two per shard — one being
+/// consumed, one being prefetched). Resident footprint is O(chunk table) +
+/// O(buffers), never O(nnz).
+pub struct OocMatrix<V: Dataword> {
+    dir: PathBuf,
+    nrows: usize,
+    ncols: usize,
+    nnz: usize,
+    fro: f64,
+    max_row_nnz: usize,
+    policy: PartitionPolicy,
+    parts: Vec<RowPartition>,
+    shards: Vec<ShardMeta>,
+    /// Dedicated I/O workers. Never the CU compute pool: `ThreadPool`
+    /// scopes assert against re-entry, and compute workers must be able to
+    /// enqueue prefetches without waiting on themselves.
+    io: ThreadPool,
+    buffers: Mutex<Vec<ChunkBuf<V>>>,
+    buffer_bytes: usize,
+    io_bytes: AtomicU64,
+    chunks_read: AtomicU64,
+    stalls: AtomicU64,
+}
+
+impl<V: Dataword> OocMatrix<V> {
+    /// Open an OOC directory for streaming. Validates the manifest, every
+    /// shard header, chunk-table geometry (alignment, tiling, nnz sums) and
+    /// file lengths — a truncated file is rejected here with the packet
+    /// line where data stops. Chunk *contents* are checksum-verified on
+    /// every read (see [`OocMatrix::verify`] for an eager full pass).
+    pub fn open(dir: impl Into<PathBuf>) -> Result<Arc<Self>> {
+        let dir = dir.into();
+        let man = OocManifest::load(&dir)?;
+        ensure!(
+            man.precision == V::precision(),
+            "{}: precision mismatch: file stores {}, engine requested {}",
+            dir.join(MANIFEST_NAME).display(),
+            man.precision.name(),
+            V::precision().name()
+        );
+        let mut shards = Vec::with_capacity(man.parts.len());
+        for (s, p) in man.parts.iter().enumerate() {
+            shards.push(Self::open_shard(&dir, s, p, &man)?);
+        }
+        let max_nnz =
+            shards.iter().flat_map(|s| s.chunks.iter()).map(|c| c.nnz).max().unwrap_or(0);
+        let max_payload =
+            shards.iter().flat_map(|s| s.chunks.iter()).map(|c| c.payload_bytes).max().unwrap_or(0);
+        // Two buffers per shard: one consumed by the sweep, one filled by
+        // the prefetcher. Preallocated once; warm sweeps allocate nothing.
+        let nbufs = 2 * man.parts.len().max(1);
+        let buffers: Vec<ChunkBuf<V>> =
+            (0..nbufs).map(|_| ChunkBuf::with_capacity(max_payload, max_nnz)).collect();
+        let buffer_bytes = buffers.iter().map(|b| b.capacity_bytes()).sum::<usize>()
+            + shards.iter().map(|s| s.chunks.len() * TABLE_ENTRY_BYTES).sum::<usize>();
+        let io = ThreadPool::new(man.parts.len().clamp(1, 4));
+        Ok(Arc::new(Self {
+            dir,
+            nrows: man.nrows,
+            ncols: man.ncols,
+            nnz: man.nnz,
+            fro: man.fro,
+            max_row_nnz: man.max_row_nnz,
+            policy: man.policy,
+            parts: man.parts,
+            shards,
+            io,
+            buffers: Mutex::new(buffers),
+            buffer_bytes,
+            io_bytes: AtomicU64::new(0),
+            chunks_read: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
+        }))
+    }
+
+    fn open_shard(dir: &Path, s: usize, p: &RowPartition, man: &OocManifest) -> Result<ShardMeta> {
+        let path = shard_path(dir, s);
+        let mut file = std::fs::File::open(&path)
+            .with_context(|| format!("opening OOC shard {}", path.display()))?;
+        let actual_len = file.metadata()?.len();
+        let name = path.display().to_string();
+        ensure!(
+            actual_len >= HEADER_BYTES as u64,
+            "{name}: truncated header ({actual_len} of {HEADER_BYTES} bytes)"
+        );
+        let mut header = [0u8; HEADER_BYTES];
+        file.read_exact(&mut header)?;
+        ensure!(header[0..4] == MAGIC, "{name}: bad magic {:02x?}", &header[0..4]);
+        let version = get_u32(&header, 4);
+        ensure!(
+            version == FORMAT_VERSION,
+            "{name}: unsupported version {version} (this build reads {FORMAT_VERSION})"
+        );
+        let tag = get_u32(&header, 8);
+        let stored = tag_precision(tag)
+            .with_context(|| format!("{name}: unknown precision tag {tag}"))?;
+        ensure!(
+            stored == V::precision(),
+            "{name}: precision mismatch: file stores {}, engine requested {}",
+            stored.name(),
+            V::precision().name()
+        );
+        ensure!(get_u32(&header, 12) as usize == s, "{name}: shard index mismatch");
+        let (nrows, ncols) = (get_u64(&header, 16) as usize, get_u64(&header, 24) as usize);
+        let (r0, r1) = (get_u64(&header, 32) as usize, get_u64(&header, 40) as usize);
+        let (snnz, nchunks) = (get_u64(&header, 48) as usize, get_u64(&header, 56) as usize);
+        ensure!(
+            (nrows, ncols) == (man.nrows, man.ncols)
+                && (r0, r1, snnz) == (p.row_start, p.row_end, p.nnz),
+            "{name}: header disagrees with manifest (rows {r0}..{r1} nnz {snnz} \
+             vs {}..{} nnz {})",
+            p.row_start,
+            p.row_end,
+            p.nnz
+        );
+        let table_bytes = nchunks * TABLE_ENTRY_BYTES;
+        ensure!(
+            actual_len >= (HEADER_BYTES + table_bytes) as u64,
+            "{name}: truncated chunk table ({actual_len} bytes, need {})",
+            HEADER_BYTES + table_bytes
+        );
+        let mut table = vec![0u8; table_bytes];
+        file.read_exact(&mut table)?;
+        let cap = packet_capacity(V::BITS);
+        let mut chunks = Vec::with_capacity(nchunks);
+        let mut offset = (HEADER_BYTES + table_bytes) as u64;
+        let mut first_line = 0usize;
+        let (mut cursor_row, mut total_nnz) = (p.row_start, 0usize);
+        for c in 0..nchunks {
+            let e = &table[c * TABLE_ENTRY_BYTES..(c + 1) * TABLE_ENTRY_BYTES];
+            let meta = ChunkMeta {
+                row_start: get_u64(e, 0) as usize,
+                row_end: get_u64(e, 8) as usize,
+                nnz: get_u64(e, 16) as usize,
+                payload_bytes: get_u64(e, 24) as usize,
+                checksum: get_u64(e, 32),
+                file_offset: offset,
+                first_line,
+            };
+            ensure!(
+                meta.row_start == cursor_row && meta.row_end > meta.row_start
+                    && meta.row_end <= p.row_end,
+                "{name}: chunk {c} rows {}..{} do not tile the shard (expected start {cursor_row})",
+                meta.row_start,
+                meta.row_end
+            );
+            ensure!(
+                (meta.row_start - p.row_start) % TOPK_ROW_CHUNK == 0,
+                "{name}: chunk {c} starts at row {} — not aligned to the {TOPK_ROW_CHUNK}-row \
+                 kernel window",
+                meta.row_start
+            );
+            ensure!(
+                meta.payload_bytes == meta.nnz.div_ceil(cap) * LINE_BYTES,
+                "{name}: chunk {c} payload {} bytes inconsistent with nnz {} at {} \
+                 entries/line",
+                meta.payload_bytes,
+                meta.nnz,
+                cap
+            );
+            cursor_row = meta.row_end;
+            total_nnz += meta.nnz;
+            offset += meta.payload_bytes as u64;
+            first_line += meta.payload_bytes / LINE_BYTES;
+            chunks.push(meta);
+        }
+        ensure!(
+            nchunks == 0 || cursor_row == p.row_end,
+            "{name}: chunks end at row {cursor_row}, shard ends at {}",
+            p.row_end
+        );
+        ensure!(
+            total_nnz == p.nnz,
+            "{name}: chunk nnz sum {total_nnz} != shard nnz {}",
+            p.nnz
+        );
+        ensure!(
+            actual_len == offset,
+            "{name}: truncated at packet line {} (expected {} payload lines / {} bytes, \
+             file holds {} bytes)",
+            (actual_len.saturating_sub((HEADER_BYTES + table_bytes) as u64) / LINE_BYTES as u64),
+            first_line,
+            offset,
+            actual_len
+        );
+        Ok(ShardMeta { path, chunks })
+    }
+
+    /// Matrix rows.
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    /// Matrix columns.
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Frobenius norm recorded at write time (eigenvalue rescale factor).
+    pub fn fro(&self) -> f64 {
+        self.fro
+    }
+
+    /// Maximum row length recorded at write time.
+    pub fn max_row_nnz(&self) -> usize {
+        self.max_row_nnz
+    }
+
+    /// Partition policy the shard files were written with.
+    pub fn policy(&self) -> PartitionPolicy {
+        self.policy
+    }
+
+    /// CU shard partition (identical to the resident engine's).
+    pub fn parts(&self) -> &[RowPartition] {
+        &self.parts
+    }
+
+    /// Directory this matrix streams from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Total chunks across all shards.
+    pub fn chunk_count(&self) -> usize {
+        self.shards.iter().map(|s| s.chunks.len()).sum()
+    }
+
+    /// Resident bytes this matrix pins: the preallocated chunk buffers plus
+    /// chunk tables — O(buffer), never O(nnz). What the registry charges.
+    pub fn buffer_bytes(&self) -> usize {
+        self.buffer_bytes
+    }
+
+    /// Payload bytes read from storage so far (whole 64-byte lines).
+    pub fn io_bytes_read(&self) -> u64 {
+        self.io_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Chunks read from storage so far.
+    pub fn chunks_read(&self) -> u64 {
+        self.chunks_read.load(Ordering::Relaxed)
+    }
+
+    /// Times a sweep blocked waiting for a prefetch that was still in
+    /// flight. Strictly fewer stalls than chunks read ⇒ I/O overlapped
+    /// compute.
+    pub fn prefetch_stalls(&self) -> u64 {
+        self.stalls.load(Ordering::Relaxed)
+    }
+
+    /// Read + checksum + decode one chunk into a pooled buffer. Runs on the
+    /// I/O pool for prefetches and inline for [`OocMatrix::verify`].
+    fn read_chunk(&self, shard: usize, chunk: usize) -> Result<ChunkBuf<V>> {
+        let smeta = &self.shards[shard];
+        let meta = &smeta.chunks[chunk];
+        let mut buf = self
+            .buffers
+            .lock()
+            .expect("ooc buffer pool poisoned")
+            .pop()
+            // The pool is sized for steady state (2 per shard); a caller
+            // holding guards across sweeps just grows it transiently.
+            .unwrap_or_else(|| ChunkBuf::with_capacity(0, 0));
+        let name = smeta.path.display();
+        let mut file = std::fs::File::open(&smeta.path)
+            .with_context(|| format!("opening OOC shard {name}"))?;
+        file.seek(SeekFrom::Start(meta.file_offset))?;
+        buf.raw.clear();
+        buf.raw.resize(meta.payload_bytes, 0);
+        file.read_exact(&mut buf.raw).with_context(|| {
+            format!(
+                "{name}: short read in chunk {chunk} (packet lines {}..{})",
+                meta.first_line,
+                meta.first_line + meta.payload_bytes / LINE_BYTES
+            )
+        })?;
+        let computed = fnv1a(FNV_OFFSET, &buf.raw);
+        ensure!(
+            computed == meta.checksum,
+            "{name}: checksum mismatch in chunk {chunk} (rows {}..{}, packet lines {}..{}): \
+             stored {:#018x}, computed {computed:#018x}",
+            meta.row_start,
+            meta.row_end,
+            meta.first_line,
+            meta.first_line + meta.payload_bytes / LINE_BYTES,
+            meta.checksum
+        );
+        let cap = packet_capacity(V::BITS);
+        let vb = V::bytes();
+        buf.rows.clear();
+        buf.cols.clear();
+        buf.vals.clear();
+        let mut remaining = meta.nnz;
+        for line in buf.raw.chunks_exact(LINE_BYTES) {
+            let take = cap.min(remaining);
+            for i in 0..take {
+                let o = i * (8 + vb);
+                buf.rows.push(get_u32(line, o));
+                buf.cols.push(get_u32(line, o + 4));
+                let bits = if vb == 2 {
+                    u16::from_le_bytes([line[o + 8], line[o + 9]]) as u32
+                } else {
+                    get_u32(line, o + 8)
+                };
+                buf.vals.push(V::from_bits(bits));
+            }
+            remaining -= take;
+            if remaining == 0 {
+                break;
+            }
+        }
+        buf.row_start = meta.row_start;
+        buf.row_end = meta.row_end;
+        self.io_bytes.fetch_add(meta.payload_bytes as u64, Ordering::Relaxed);
+        self.chunks_read.fetch_add(1, Ordering::Relaxed);
+        Ok(buf)
+    }
+
+    fn recycle(&self, buf: ChunkBuf<V>) {
+        self.buffers.lock().expect("ooc buffer pool poisoned").push(buf);
+    }
+
+    /// Eagerly read every chunk of every shard, verifying checksums —
+    /// the `Result`-returning integrity pass (sweeps themselves panic on a
+    /// corrupt chunk, since kernels cannot return errors mid-fork).
+    pub fn verify(&self) -> Result<()> {
+        for s in 0..self.shards.len() {
+            for c in 0..self.shards[s].chunks.len() {
+                let buf = self.read_chunk(s, c)?;
+                self.recycle(buf);
+            }
+        }
+        Ok(())
+    }
+
+    /// Stream every entry in global CSR order (shard-major, row-major) —
+    /// the exact accumulation order `query::column_sums`/`row_l1_norms` use
+    /// on the resident matrix, so f64 reductions match bitwise.
+    pub fn for_each_entry(self: &Arc<Self>, mut f: impl FnMut(u32, u32, V)) {
+        for s in 0..self.parts.len() {
+            let mut src = OocShardSource::new(self.clone(), s);
+            while let Some(chunk) = src.next_chunk() {
+                for e in 0..chunk.len() {
+                    f(chunk.rows[e], chunk.cols[e], chunk.vals[e]);
+                }
+            }
+        }
+    }
+}
+
+/// Guard over a decoded chunk; returns the buffer to the matrix's pool on
+/// drop so warm sweeps never allocate.
+pub struct ChunkGuard<V: Dataword> {
+    matrix: Arc<OocMatrix<V>>,
+    buf: Option<ChunkBuf<V>>,
+}
+
+impl<V: Dataword> std::ops::Deref for ChunkGuard<V> {
+    type Target = ChunkBuf<V>;
+    fn deref(&self) -> &ChunkBuf<V> {
+        self.buf.as_ref().expect("chunk buffer present until drop")
+    }
+}
+
+impl<V: Dataword> Drop for ChunkGuard<V> {
+    fn drop(&mut self) {
+        if let Some(buf) = self.buf.take() {
+            self.matrix.recycle(buf);
+        }
+    }
+}
+
+/// Double-buffered replay of one shard's chunk sequence: the next chunk is
+/// always being read+decoded on the I/O pool while the caller consumes the
+/// current one. One sweep = one source per shard.
+pub struct OocShardSource<V: Dataword> {
+    matrix: Arc<OocMatrix<V>>,
+    shard: usize,
+    next: usize,
+    inflight: Option<Arc<PrefetchSlot<V>>>,
+}
+
+impl<V: Dataword> OocShardSource<V> {
+    /// Start streaming `shard`, immediately issuing the first prefetch.
+    pub fn new(matrix: Arc<OocMatrix<V>>, shard: usize) -> Self {
+        let inflight =
+            (!matrix.shards[shard].chunks.is_empty()).then(|| Self::issue(&matrix, shard, 0));
+        Self { matrix, shard, next: 0, inflight }
+    }
+
+    fn issue(matrix: &Arc<OocMatrix<V>>, shard: usize, chunk: usize) -> Arc<PrefetchSlot<V>> {
+        let slot =
+            Arc::new(PrefetchSlot { state: Mutex::new(SlotState::Pending), cv: Condvar::new() });
+        let (m, s) = (matrix.clone(), slot.clone());
+        matrix.io.execute(move || {
+            let outcome = match m.read_chunk(shard, chunk) {
+                Ok(buf) => SlotState::Ready(buf),
+                Err(e) => SlotState::Failed(format!("{e:#}")),
+            };
+            *s.state.lock().expect("prefetch slot poisoned") = outcome;
+            s.cv.notify_all();
+        });
+        slot
+    }
+
+    /// Hand out the next chunk, blocking only if the prefetch has not
+    /// landed yet (counted in [`OocMatrix::prefetch_stalls`]). Issues the
+    /// following chunk's read *before* blocking, so the second buffer fills
+    /// while this one is consumed.
+    ///
+    /// Panics if the underlying read fails (corrupt chunk mid-sweep);
+    /// integrity-checking callers use [`OocMatrix::verify`] instead.
+    pub fn next_chunk(&mut self) -> Option<ChunkGuard<V>> {
+        let total = self.matrix.shards[self.shard].chunks.len();
+        if self.next >= total {
+            return None;
+        }
+        let slot = self.inflight.take().expect("prefetch issued for current chunk");
+        if self.next + 1 < total {
+            self.inflight = Some(Self::issue(&self.matrix, self.shard, self.next + 1));
+        }
+        self.next += 1;
+        let mut st = slot.state.lock().expect("prefetch slot poisoned");
+        if matches!(*st, SlotState::Pending) {
+            self.matrix.stalls.fetch_add(1, Ordering::Relaxed);
+            while matches!(*st, SlotState::Pending) {
+                st = slot.cv.wait(st).expect("prefetch slot poisoned");
+            }
+        }
+        match std::mem::replace(&mut *st, SlotState::Taken) {
+            SlotState::Ready(buf) => {
+                drop(st);
+                Some(ChunkGuard { matrix: self.matrix.clone(), buf: Some(buf) })
+            }
+            SlotState::Failed(msg) => panic!("out-of-core chunk read failed: {msg}"),
+            SlotState::Pending | SlotState::Taken => unreachable!("slot settled above"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{Q1_15, Q1_31};
+    use crate::graphs;
+
+    fn cleanup(dir: &Path) {
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    fn write_sample<V: Dataword>(
+        dir: &Path,
+        cus: usize,
+        chunk_target: usize,
+    ) -> (CsrMatrix<V>, OocManifest) {
+        let m: CsrMatrix<V> = graphs::erdos_renyi(200, 1400, 7).to_csr().to_precision::<V>();
+        let man = PacketFileWriter::new(dir)
+            .chunk_target_bytes(chunk_target)
+            .write_csr(&m, 2.5, cus, PartitionPolicy::BalancedNnz)
+            .expect("write");
+        (m, man)
+    }
+
+    fn csr_triplets<V: Dataword>(m: &CsrMatrix<V>) -> Vec<(u32, u32, u32)> {
+        let mut out = Vec::with_capacity(m.nnz());
+        for r in 0..m.nrows {
+            for k in m.indptr[r]..m.indptr[r + 1] {
+                out.push((r as u32, m.indices[k], m.vals[k].to_bits()));
+            }
+        }
+        out
+    }
+
+    fn roundtrip_bitwise<V: Dataword>() {
+        let dir = scratch_dir("roundtrip");
+        let (m, man) = write_sample::<V>(&dir, 3, 256);
+        assert_eq!(man.parts, partition_rows_balanced(&m, 3, PartitionPolicy::BalancedNnz));
+        let ooc = OocMatrix::<V>::open(&dir).expect("open");
+        assert_eq!((ooc.nrows(), ooc.ncols(), ooc.nnz()), (m.nrows, m.ncols, m.nnz()));
+        assert_eq!(ooc.fro(), 2.5);
+        assert_eq!(ooc.max_row_nnz(), m.max_row_nnz());
+        ooc.verify().expect("verify");
+        let mut got = Vec::new();
+        ooc.for_each_entry(|r, c, v| got.push((r, c, v.to_bits())));
+        assert_eq!(got, csr_triplets(&m), "{}: stream order / raw bits differ", V::NAME);
+        // Telemetry: every chunk read at least once, all payload counted.
+        assert!(ooc.chunks_read() >= ooc.chunk_count() as u64);
+        assert!(ooc.io_bytes_read() > 0);
+        assert!(ooc.prefetch_stalls() <= ooc.chunks_read());
+        cleanup(&dir);
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_for_all_precisions() {
+        roundtrip_bitwise::<f32>();
+        roundtrip_bitwise::<Q1_31>();
+        roundtrip_bitwise::<crate::fixed::Q2_30>();
+        roundtrip_bitwise::<Q1_15>();
+    }
+
+    #[test]
+    fn buffers_return_to_pool_and_stay_bounded() {
+        let dir = scratch_dir("pool");
+        let (_m, man) = write_sample::<f32>(&dir, 3, 128);
+        let ooc = OocMatrix::<f32>::open(&dir).expect("open");
+        let before = ooc.buffers.lock().unwrap().len();
+        assert_eq!(before, 2 * man.parts.len());
+        for _ in 0..3 {
+            ooc.for_each_entry(|_, _, _| {});
+        }
+        assert_eq!(ooc.buffers.lock().unwrap().len(), before, "buffers leaked or grew");
+        assert!(ooc.buffer_bytes() > 0);
+        cleanup(&dir);
+    }
+
+    #[test]
+    fn wrong_precision_is_rejected() {
+        let dir = scratch_dir("precision");
+        let (_m, _man) = write_sample::<Q1_31>(&dir, 2, 512);
+        let err = match OocMatrix::<Q1_15>::open(&dir) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("wrong-precision open must fail"),
+        };
+        assert!(err.contains("precision mismatch"), "{err}");
+        assert!(err.contains("q1.31") && err.contains("q1.15"), "{err}");
+        cleanup(&dir);
+    }
+
+    #[test]
+    fn corrupted_chunk_names_chunk_and_lines() {
+        let dir = scratch_dir("corrupt");
+        let (_m, _man) = write_sample::<f32>(&dir, 1, 256);
+        // Flip one payload byte in the last chunk of shard 0.
+        let path = shard_path(&dir, 0);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 17;
+        bytes[last] ^= 0xA5;
+        std::fs::write(&path, bytes).unwrap();
+        let ooc = OocMatrix::<f32>::open(&dir).expect("open succeeds; payload unread");
+        let err = format!("{:#}", ooc.verify().expect_err("corrupt payload must fail verify"));
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(err.contains("chunk") && err.contains("packet lines"), "{err}");
+        cleanup(&dir);
+    }
+
+    #[test]
+    fn truncated_file_is_rejected_with_line_number() {
+        let dir = scratch_dir("truncate");
+        let (_m, _man) = write_sample::<f32>(&dir, 1, 256);
+        let path = shard_path(&dir, 0);
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - LINE_BYTES as u64).unwrap();
+        let err = match OocMatrix::<f32>::open(&dir) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("truncated file must be rejected at open"),
+        };
+        assert!(err.contains("truncated at packet line"), "{err}");
+        cleanup(&dir);
+    }
+
+    #[test]
+    fn manifest_errors_are_line_numbered() {
+        let dir = scratch_dir("manifest");
+        let (_m, _man) = write_sample::<f32>(&dir, 2, 512);
+        let path = dir.join(MANIFEST_NAME);
+        let text = std::fs::read_to_string(&path).unwrap();
+        // `nrows = ...` is the manifest's 4th line.
+        let bad = text
+            .lines()
+            .map(|l| if l.starts_with("nrows") { "nrows = banana".to_string() } else { l.into() })
+            .collect::<Vec<_>>()
+            .join("\n");
+        std::fs::write(&path, bad).unwrap();
+        let err = format!("{:#}", OocManifest::load(&dir).expect_err("bad manifest"));
+        assert!(err.contains("manifest.tkm:4"), "{err}");
+        assert!(err.contains("nrows"), "{err}");
+        cleanup(&dir);
+    }
+
+    #[test]
+    fn chunks_tile_shards_including_empty_windows() {
+        // Entries only in the first rows of a 1100-row matrix: with a tiny
+        // chunk target the trailing 512-row windows become a zero-entry
+        // chunk that still covers its rows (the windowed kernels need every
+        // row range present even where the matrix is locally empty).
+        let dir = scratch_dir("tiling");
+        let mut coo: CooMatrix = CooMatrix::new(1100, 1100);
+        for i in 0..10 {
+            coo.push(i, (i + 1) % 10, 0.25 + i as f32 * 0.01);
+            coo.push((i + 1) % 10, i, 0.25 + i as f32 * 0.01);
+        }
+        coo.canonicalize();
+        let m = coo.to_csr();
+        PacketFileWriter::new(&dir)
+            .chunk_target_bytes(64)
+            .write_csr(&m, 1.0, 1, PartitionPolicy::EqualRows)
+            .expect("write");
+        let ooc = OocMatrix::<f32>::open(&dir).expect("open");
+        let shard = &ooc.shards[0];
+        assert!(shard.chunks.len() >= 2, "expected multiple chunks, got {}", shard.chunks.len());
+        assert_eq!(shard.chunks.first().unwrap().row_start, 0);
+        assert_eq!(shard.chunks.last().unwrap().row_end, 1100);
+        for w in shard.chunks.windows(2) {
+            assert_eq!(w[0].row_end, w[1].row_start, "chunks must tile");
+        }
+        assert!(shard.chunks.iter().any(|c| c.nnz == 0), "zero-entry tail chunk expected");
+        let mut seen = 0usize;
+        ooc.for_each_entry(|_, _, _| seen += 1);
+        assert_eq!(seen, m.nnz());
+        ooc.verify().expect("verify");
+        cleanup(&dir);
+    }
+
+    #[test]
+    fn empty_tail_shard_streams_nothing() {
+        // More CUs than occupied rows: tail shards are empty ranges.
+        let dir = scratch_dir("empty-shard");
+        let mut coo: CooMatrix = CooMatrix::new(6, 6);
+        for i in 0..6 {
+            coo.push(i, i, 0.5);
+        }
+        coo.canonicalize();
+        let m = coo.to_csr();
+        PacketFileWriter::new(&dir)
+            .chunk_target_bytes(64)
+            .write_csr(&m, 1.0, 8, PartitionPolicy::EqualRows)
+            .expect("write");
+        let ooc = OocMatrix::<f32>::open(&dir).expect("open");
+        assert_eq!(ooc.parts().len(), 8);
+        let mut seen = 0usize;
+        ooc.for_each_entry(|r, c, v| {
+            assert_eq!(r, c);
+            assert_eq!(v, 0.5);
+            seen += 1;
+        });
+        assert_eq!(seen, 6);
+        cleanup(&dir);
+    }
+}

@@ -60,6 +60,7 @@ impl<V: Dataword> CooPacket<V> {
 /// Streaming packet view over a COO range (typically one CU's shard).
 pub struct PacketStream<'a, V: Dataword = f32> {
     coo: &'a CooMatrix<V>,
+    start: usize,
     pos: usize,
     end: usize,
     width: usize,
@@ -78,12 +79,14 @@ impl<'a, V: Dataword> PacketStream<'a, V> {
     pub fn over_range(coo: &'a CooMatrix<V>, start: usize, end: usize, width: usize) -> Self {
         assert!(width >= 1 && width <= PACKET_MAX_NNZ, "unreasonable packet width {width}");
         assert!(start <= end && end <= coo.nnz());
-        Self { coo, pos: start, end, width }
+        Self { coo, start, pos: start, end, width }
     }
 
-    /// Total packets this stream will yield.
+    /// Total packets this stream yields over its whole `[start, end)` range
+    /// — a property of the range, stable across iteration (the OOC writer
+    /// sizes chunk files from it, so it must not drift with the cursor).
     pub fn packet_count(&self) -> usize {
-        let n = self.end - self.pos;
+        let n = self.end - self.start;
         n.div_ceil(self.width)
     }
 
@@ -177,6 +180,66 @@ mod tests {
         assert_eq!(s.packet_count(), 3);
         let lens: Vec<usize> = PacketStream::over_range(&m, 2, 9, 3).map(|p| p.len).collect();
         assert_eq!(lens, vec![3, 3, 1]);
+    }
+
+    #[test]
+    fn empty_range_yields_nothing() {
+        let m = coo(10);
+        let mut s = PacketStream::over_range(&m, 5, 5, 4);
+        assert_eq!(s.packet_count(), 0);
+        assert_eq!(s.line_bytes(), 0);
+        assert!(s.next().is_none());
+        // Degenerate empty range at the very end of the entry array.
+        let mut tail = PacketStream::over_range(&m, 10, 10, 5);
+        assert_eq!(tail.packet_count(), 0);
+        assert!(tail.next().is_none());
+    }
+
+    #[test]
+    fn packet_count_is_stable_across_iteration() {
+        // `packet_count`/`line_bytes` describe the whole range; partially
+        // draining the iterator must not change them (the OOC writer calls
+        // them after interleaved reads).
+        let m = coo(17);
+        let mut s = PacketStream::over_range(&m, 1, 17, 5);
+        let (total, bytes) = (s.packet_count(), s.line_bytes());
+        assert_eq!(total, 4); // 16 entries at width 5: 5, 5, 5, 1
+        assert_eq!(bytes, 4 * 64);
+        assert_eq!(s.next().unwrap().len, 5);
+        assert_eq!(s.next().unwrap().len, 5);
+        assert_eq!(s.packet_count(), total, "count drifted after partial iteration");
+        assert_eq!(s.line_bytes(), bytes);
+        assert_eq!(s.by_ref().count(), 2);
+        assert_eq!(s.packet_count(), total, "count drifted after exhaustion");
+    }
+
+    #[test]
+    fn count_and_bytes_consistent_across_all_precisions() {
+        // Satellite pin: for every storage format, packet_count matches the
+        // packets actually yielded and line_bytes is count * 64 — including
+        // a range that ends mid-packet (width does not divide the span).
+        use crate::fixed::{Precision, Q2_30};
+        fn check<V: Dataword>(m: &CooMatrix<V>) {
+            let cap = CooPacket::<V>::capacity();
+            assert_eq!(cap, V::precision().packet_capacity());
+            for &(start, end) in &[(0usize, 19usize), (2, 17), (3, 3), (0, cap), (1, 1 + cap)] {
+                let s = PacketStream::over_range(m, start, end, cap);
+                let yielded: Vec<_> = PacketStream::over_range(m, start, end, cap).collect();
+                assert_eq!(s.packet_count(), yielded.len(), "{} [{start},{end})", V::NAME);
+                assert_eq!(s.line_bytes(), yielded.len() * (PACKET_BITS / 8));
+                assert_eq!(yielded.iter().map(|p| p.len).sum::<usize>(), end - start);
+                // Every packet but the last is full; a mid-packet tail is short.
+                for p in yielded.iter().rev().skip(1) {
+                    assert_eq!(p.len, cap);
+                }
+            }
+        }
+        let m = coo(19);
+        check(&m);
+        check(&m.to_precision::<Q1_31>());
+        check(&m.to_precision::<Q2_30>());
+        check(&m.to_precision::<Q1_15>());
+        assert_eq!(Precision::ALL.len(), 4);
     }
 
     #[test]

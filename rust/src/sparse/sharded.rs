@@ -42,6 +42,7 @@
 use crate::fixed::{packet_capacity, Dataword};
 use crate::lanczos::{FusedBlockIteration, FusedIteration, Operator};
 use crate::linalg;
+use crate::sparse::ooc::{OocMatrix, OocShardSource};
 use crate::sparse::query::{self, merge_top_k, PprOptions, PprResult, TopKEntry, TopKHeap};
 use crate::sparse::{partition_rows_balanced, CsrMatrix, PartitionPolicy, RowPartition};
 use crate::util::pool::ThreadPool;
@@ -52,14 +53,70 @@ use std::sync::Arc;
 /// Rows a CU worker scores per stripe-kernel call inside the Top-K sweep:
 /// large enough to amortize the call, small enough that the scratch stays
 /// cache-resident (the bounded heap, not the score vector, is the per-CU
-/// state the paper's design keeps on chip).
-const TOPK_ROW_CHUNK: usize = 512;
+/// state the paper's design keeps on chip). Out-of-core chunk boundaries
+/// (`sparse::ooc`) align to this window so both backings see the same
+/// kernel window sequence.
+pub(crate) const TOPK_ROW_CHUNK: usize = 512;
+
+/// Where a CU shard's packets come from.
+///
+/// `Resident` is the classic engine: the whole CSR matrix pinned in RAM.
+/// `Ooc` keeps the matrix in an on-disk packet directory and streams each
+/// stripe through [`OocShardSource`]'s double-buffered prefetch — O(buffer)
+/// resident bytes instead of O(nnz), same bitwise results (the OOC kernels
+/// replay the exact per-row f32 accumulation order of
+/// [`CsrMatrix::spmv_into_stripe`]).
+pub enum MatrixBacking<V: Dataword = f32> {
+    /// Whole matrix in RAM behind an `Arc` (shared across engines).
+    Resident(Arc<CsrMatrix<V>>),
+    /// Matrix on storage; chunks stream through pooled, prefetched buffers.
+    Ooc(Arc<OocMatrix<V>>),
+}
+
+impl<V: Dataword> MatrixBacking<V> {
+    /// Matrix rows.
+    pub fn nrows(&self) -> usize {
+        match self {
+            MatrixBacking::Resident(m) => m.nrows,
+            MatrixBacking::Ooc(o) => o.nrows(),
+        }
+    }
+
+    /// Matrix columns.
+    pub fn ncols(&self) -> usize {
+        match self {
+            MatrixBacking::Resident(m) => m.ncols,
+            MatrixBacking::Ooc(o) => o.ncols(),
+        }
+    }
+
+    /// Stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        match self {
+            MatrixBacking::Resident(m) => m.nnz(),
+            MatrixBacking::Ooc(o) => o.nnz(),
+        }
+    }
+
+    /// Longest row (sizes the early-exit inflate bound).
+    pub fn max_row_nnz(&self) -> usize {
+        match self {
+            MatrixBacking::Resident(m) => m.max_row_nnz(),
+            MatrixBacking::Ooc(o) => o.max_row_nnz(),
+        }
+    }
+
+    /// True when the matrix streams from storage.
+    pub fn is_ooc(&self) -> bool {
+        matches!(self, MatrixBacking::Ooc(_))
+    }
+}
 
 /// Multi-CU SpMV: row stripes dispatched to a thread pool, one worker per
 /// CU shard. Output regions are disjoint so no synchronization is needed
 /// beyond the final join — exactly the paper's partition + merge scheme.
 pub struct ShardedSpmv<V: Dataword = f32> {
-    matrix: Arc<CsrMatrix<V>>,
+    backing: MatrixBacking<V>,
     parts: Vec<RowPartition>,
     policy: PartitionPolicy,
     pool: Arc<ThreadPool>,
@@ -73,7 +130,14 @@ impl<V: Dataword> ShardedSpmv<V> {
     /// fewer workers, stripes are multiplexed onto the available ones).
     pub fn new(matrix: Arc<CsrMatrix<V>>, cus: usize, policy: PartitionPolicy, pool: Arc<ThreadPool>) -> Self {
         let parts = partition_rows_balanced(&matrix, cus, policy);
-        Self { matrix, parts, policy, pool, applies: AtomicUsize::new(0), shards_skipped: AtomicUsize::new(0) }
+        Self {
+            backing: MatrixBacking::Resident(matrix),
+            parts,
+            policy,
+            pool,
+            applies: AtomicUsize::new(0),
+            shards_skipped: AtomicUsize::new(0),
+        }
     }
 
     /// Convenience constructor that spawns a dedicated pool with one worker
@@ -83,6 +147,31 @@ impl<V: Dataword> ShardedSpmv<V> {
     pub fn with_own_pool(matrix: Arc<CsrMatrix<V>>, cus: usize, policy: PartitionPolicy) -> Self {
         let pool = Arc::new(ThreadPool::new(cus.max(1)));
         Self::new(matrix, cus, policy, pool)
+    }
+
+    /// Engine over an out-of-core matrix: shard table and policy come from
+    /// the packet directory's manifest (written by the same
+    /// `partition_rows_balanced` a resident prepare would run, so CU
+    /// geometry — and therefore every merge order — matches the resident
+    /// twin exactly). Each sweep streams chunk files through the matrix's
+    /// double-buffered prefetcher; only O(buffer) matrix bytes stay in RAM.
+    pub fn new_ooc(matrix: Arc<OocMatrix<V>>, pool: Arc<ThreadPool>) -> Self {
+        let parts = matrix.parts().to_vec();
+        let policy = matrix.policy();
+        Self {
+            backing: MatrixBacking::Ooc(matrix),
+            parts,
+            policy,
+            pool,
+            applies: AtomicUsize::new(0),
+            shards_skipped: AtomicUsize::new(0),
+        }
+    }
+
+    /// [`ShardedSpmv::new_ooc`] with a dedicated one-worker-per-shard pool.
+    pub fn with_own_pool_ooc(matrix: Arc<OocMatrix<V>>) -> Self {
+        let pool = Arc::new(ThreadPool::new(matrix.parts().len().max(1)));
+        Self::new_ooc(matrix, pool)
     }
 
     /// The shard table (exposed for the FPGA model and tests).
@@ -130,9 +219,13 @@ impl<V: Dataword> ShardedSpmv<V> {
         packet_capacity(V::BITS)
     }
 
-    /// Bytes of the matrix value array in this storage format.
+    /// Bytes of the matrix value array in this storage format (on disk for
+    /// the out-of-core backing).
     pub fn value_bytes(&self) -> usize {
-        self.matrix.value_bytes()
+        match &self.backing {
+            MatrixBacking::Resident(m) => m.value_bytes(),
+            MatrixBacking::Ooc(o) => o.nnz() * V::bytes(),
+        }
     }
 
     /// Cumulative HBM matrix-stream bytes across all `apply` calls so far
@@ -141,9 +234,48 @@ impl<V: Dataword> ShardedSpmv<V> {
         self.applies() * self.bytes_per_apply()
     }
 
-    /// The underlying CSR matrix.
-    pub fn matrix(&self) -> &Arc<CsrMatrix<V>> {
-        &self.matrix
+    /// Where this engine's packets come from.
+    pub fn backing(&self) -> &MatrixBacking<V> {
+        &self.backing
+    }
+
+    /// The resident CSR matrix, when there is one (`None` for an
+    /// out-of-core engine — its entries only ever exist chunk by chunk).
+    pub fn matrix(&self) -> Option<&Arc<CsrMatrix<V>>> {
+        match &self.backing {
+            MatrixBacking::Resident(m) => Some(m),
+            MatrixBacking::Ooc(_) => None,
+        }
+    }
+
+    /// The out-of-core matrix, when the engine streams from storage.
+    pub fn ooc_matrix(&self) -> Option<&Arc<OocMatrix<V>>> {
+        match &self.backing {
+            MatrixBacking::Resident(_) => None,
+            MatrixBacking::Ooc(o) => Some(o),
+        }
+    }
+
+    /// True when sweeps stream chunk files instead of resident CSR rows.
+    pub fn is_ooc(&self) -> bool {
+        self.backing.is_ooc()
+    }
+
+    /// One CU stripe of `y = M x` from the out-of-core backing: zero-fill,
+    /// then accumulate streamed entries in row-major order. Per output row
+    /// this performs the exact f32 operation sequence of
+    /// [`CsrMatrix::spmv_into_stripe`] (left-to-right products into a +0.0
+    /// start, untouched rows keep +0.0), which is what makes OOC solves
+    /// bitwise-identical to resident ones.
+    fn ooc_spmv_stripe(ooc: &Arc<OocMatrix<V>>, shard: usize, x: &[f32], y_stripe: &mut [f32], r0: usize) {
+        y_stripe.fill(0.0);
+        let mut src = OocShardSource::new(Arc::clone(ooc), shard);
+        while let Some(chunk) = src.next_chunk() {
+            let (rows, cols, vals) = (chunk.rows(), chunk.cols(), chunk.vals());
+            for e in 0..vals.len() {
+                y_stripe[rows[e] as usize - r0] += vals[e].to_f32() * x[cols[e] as usize];
+            }
+        }
     }
 
     /// Streaming Top-K SpMV query: score every row of the resident matrix
@@ -164,33 +296,13 @@ impl<V: Dataword> ShardedSpmv<V> {
     /// [`top_k_serial`](crate::sparse::top_k_serial) for any shard count
     /// or partition policy.
     /// `k` larger than the row count clamps to it.
+    ///
+    /// Implemented as the batch-1 case of [`ShardedSpmv::top_k_batch`] —
+    /// one kernel serves both backings and every batch size, and the
+    /// per-query stripe sweep is the same call sequence either way.
     pub fn top_k(&self, x: &[f32], k: usize) -> Vec<TopKEntry> {
-        assert!(x.len() >= self.matrix.ncols, "query vector shorter than ncols");
-        self.applies.fetch_add(1, Ordering::Relaxed);
-        let m = &self.matrix;
-        let parts = &self.parts;
-        let k = k.min(m.nrows);
-        let mut slots: Vec<Vec<TopKEntry>> = vec![Vec::new(); parts.len()];
-        let s_ptr = SendPtr(slots.as_mut_ptr());
-        self.pool.scope_chunks(parts.len(), |i| {
-            let p = parts[i];
-            let mut heap = TopKHeap::new(k);
-            let mut buf = [0.0f32; TOPK_ROW_CHUNK];
-            let mut r0 = p.row_start;
-            while r0 < p.row_end {
-                let r1 = (r0 + TOPK_ROW_CHUNK).min(p.row_end);
-                let chunk = &mut buf[..r1 - r0];
-                m.spmv_into_stripe(x, chunk, r0, r1);
-                for (off, &score) in chunk.iter().enumerate() {
-                    heap.push((r0 + off) as u32, score);
-                }
-                r0 = r1;
-            }
-            // SAFETY: as in `apply` — the scoped join outlives every use
-            // and slot `i` is written by exactly this task.
-            unsafe { *s_ptr.get().add(i) = heap.into_sorted() };
-        });
-        merge_top_k(slots, k)
+        let (mut res, _) = self.top_k_batch_core(&[x], k, None);
+        res.pop().unwrap_or_default()
     }
 
     /// Batched multi-query Top-K SpMM: answer `b = xs.len()` dense queries
@@ -254,36 +366,67 @@ impl<V: Dataword> ShardedSpmv<V> {
         (res.pop().unwrap_or_default(), skipped)
     }
 
-    /// One CU worker's share of a batched sweep: chunk the stripe, score
-    /// every query per chunk while the chunk's matrix lines are cache-hot,
-    /// keep per-query bounded heaps. Per query this issues the exact
-    /// stripe-kernel call sequence `top_k` issues — the bitwise anchor of
-    /// the batch path.
-    fn sweep_shard(m: &CsrMatrix<V>, p: RowPartition, xs: &[&[f32]], k: usize) -> Vec<Vec<TopKEntry>> {
+    /// One CU worker's share of a batched sweep: walk the stripe in
+    /// 512-row windows, score every query per window while the window's
+    /// matrix lines are cache-hot (resident CSR rows or a streamed OOC
+    /// chunk), keep per-query bounded heaps. Per query and per window this
+    /// produces the exact score bits of the serial stripe kernel — the
+    /// bitwise anchor of both the batch path and the out-of-core path
+    /// (OOC chunk boundaries are aligned to the same 512-row windows, so
+    /// the window sequence is identical across backings).
+    fn sweep_shard(&self, shard: usize, xs: &[&[f32]], k: usize) -> Vec<Vec<TopKEntry>> {
+        let p = self.parts[shard];
         let mut heaps: Vec<TopKHeap> = xs.iter().map(|_| TopKHeap::new(k)).collect();
         let mut buf = [0.0f32; TOPK_ROW_CHUNK];
-        let mut r0 = p.row_start;
-        while r0 < p.row_end {
-            let r1 = (r0 + TOPK_ROW_CHUNK).min(p.row_end);
-            for (heap, x) in heaps.iter_mut().zip(xs) {
-                let chunk = &mut buf[..r1 - r0];
-                m.spmv_into_stripe(x, chunk, r0, r1);
-                for (off, &score) in chunk.iter().enumerate() {
-                    heap.push((r0 + off) as u32, score);
+        match &self.backing {
+            MatrixBacking::Resident(m) => {
+                let mut r0 = p.row_start;
+                while r0 < p.row_end {
+                    let r1 = (r0 + TOPK_ROW_CHUNK).min(p.row_end);
+                    for (heap, x) in heaps.iter_mut().zip(xs) {
+                        let chunk = &mut buf[..r1 - r0];
+                        m.spmv_into_stripe(x, chunk, r0, r1);
+                        for (off, &score) in chunk.iter().enumerate() {
+                            heap.push((r0 + off) as u32, score);
+                        }
+                    }
+                    r0 = r1;
                 }
             }
-            r0 = r1;
+            MatrixBacking::Ooc(ooc) => {
+                let mut src = OocShardSource::new(Arc::clone(ooc), shard);
+                while let Some(chunk) = src.next_chunk() {
+                    let (c0, c1) = chunk.row_range();
+                    let (rows, cols, vals) = (chunk.rows(), chunk.cols(), chunk.vals());
+                    let (mut e0, mut r0) = (0usize, c0);
+                    while r0 < c1 {
+                        let r1 = (r0 + TOPK_ROW_CHUNK).min(c1);
+                        let e1 = e0 + rows[e0..].partition_point(|&r| (r as usize) < r1);
+                        for (heap, x) in heaps.iter_mut().zip(xs) {
+                            let scores = &mut buf[..r1 - r0];
+                            scores.fill(0.0);
+                            for e in e0..e1 {
+                                scores[rows[e] as usize - r0] += vals[e].to_f32() * x[cols[e] as usize];
+                            }
+                            for (off, &score) in scores.iter().enumerate() {
+                                heap.push((r0 + off) as u32, score);
+                            }
+                        }
+                        (e0, r0) = (e1, r1);
+                    }
+                }
+            }
         }
         heaps.into_iter().map(TopKHeap::into_sorted).collect()
     }
 
     fn top_k_batch_core(&self, xs: &[&[f32]], k: usize, row_l1: Option<&[f64]>) -> (Vec<Vec<TopKEntry>>, usize) {
-        let m = &self.matrix;
+        let (nrows, ncols) = (self.backing.nrows(), self.backing.ncols());
         for x in xs {
-            assert!(x.len() >= m.ncols, "query vector shorter than ncols");
+            assert!(x.len() >= ncols, "query vector shorter than ncols");
         }
         let b = xs.len();
-        let k = k.min(m.nrows);
+        let k = k.min(nrows);
         if b == 0 || k == 0 {
             // Nothing to select: deterministic empties, no matrix stream.
             return (vec![Vec::new(); b], 0);
@@ -297,7 +440,7 @@ impl<V: Dataword> ShardedSpmv<V> {
             let mut slots: Vec<Vec<Vec<TopKEntry>>> = vec![Vec::new(); parts.len()];
             let s_ptr = SendPtr(slots.as_mut_ptr());
             self.pool.scope_chunks(parts.len(), |i| {
-                let out = Self::sweep_shard(m, parts[i], xs, k);
+                let out = self.sweep_shard(i, xs, k);
                 // SAFETY: as in `apply` — the scoped join outlives every
                 // use and slot `i` is written by exactly this task.
                 unsafe { *s_ptr.get().add(i) = out };
@@ -310,7 +453,7 @@ impl<V: Dataword> ShardedSpmv<V> {
             }
             return (results, 0);
         };
-        assert_eq!(rl1.len(), m.nrows, "row-bound table must cover every row");
+        assert_eq!(rl1.len(), nrows, "row-bound table must cover every row");
 
         // Conservative per-shard score bound: the shard's max row L1 times
         // the query's max |x_j|, inflated past the worst-case relative
@@ -325,8 +468,9 @@ impl<V: Dataword> ShardedSpmv<V> {
             shard_l1[s] = hi;
         }
         let xmax: Vec<f64> =
-            xs.iter().map(|x| x[..m.ncols].iter().fold(0.0f64, |acc, &v| acc.max((v as f64).abs()))).collect();
-        let inflate = (1.0 + (-24.0f64).exp2()).powi((m.max_row_nnz().min(i32::MAX as usize - 2) as i32) + 2);
+            xs.iter().map(|x| x[..ncols].iter().fold(0.0f64, |acc, &v| acc.max((v as f64).abs()))).collect();
+        let inflate = (1.0 + (-24.0f64).exp2())
+            .powi((self.backing.max_row_nnz().min(i32::MAX as usize - 2) as i32) + 2);
         // Hottest bound first; ties to the lower shard (deterministic).
         // Every query's bound shares the shard factor, so this one order
         // is descending for the whole batch and the prune check can stop
@@ -354,7 +498,7 @@ impl<V: Dataword> ShardedSpmv<V> {
             let mut slots: Vec<Vec<Vec<TopKEntry>>> = vec![Vec::new(); live.len()];
             let s_ptr = SendPtr(slots.as_mut_ptr());
             self.pool.scope_chunks(live.len(), |j| {
-                let out = Self::sweep_shard(m, parts[live[j]], xs, k);
+                let out = self.sweep_shard(live[j], xs, k);
                 // SAFETY: as in `apply` — the scoped join outlives every
                 // use and slot `j` is written by exactly this task.
                 unsafe { *s_ptr.get().add(j) = out };
@@ -382,7 +526,17 @@ impl<V: Dataword> ShardedSpmv<V> {
     /// registry can cache it per `(handle, precision, generation)` beside
     /// the PPR colsums.
     pub fn row_l1_norms(&self) -> Vec<f64> {
-        query::row_l1_norms(self.matrix.as_ref())
+        match &self.backing {
+            MatrixBacking::Resident(m) => query::row_l1_norms(m.as_ref()),
+            MatrixBacking::Ooc(o) => {
+                // One streaming pass in global CSR order: each row's |v|
+                // terms fold left-to-right exactly as the resident kernel's,
+                // so the f64 table matches it bitwise.
+                let mut norms = vec![0.0f64; o.nrows()];
+                o.for_each_entry(|r, _, v| norms[r as usize] += (v.to_f32() as f64).abs());
+                norms
+            }
+        }
     }
 
     /// Personalized PageRank on the resident matrix: damped power
@@ -409,7 +563,18 @@ impl<V: Dataword> ShardedSpmv<V> {
     /// (see [`column_sums`](crate::sparse::column_sums)). Exposed so the
     /// registry can cache it per `(handle, precision, generation)`.
     pub fn column_sums(&self) -> Vec<f64> {
-        query::column_sums(self.matrix.as_ref())
+        match &self.backing {
+            MatrixBacking::Resident(m) => query::column_sums(m.as_ref()),
+            MatrixBacking::Ooc(o) => {
+                // Streamed in the same flat entry order the resident kernel
+                // walks (row-major over the whole matrix), so each column's
+                // f64 accumulation sequence — and the table — is bitwise
+                // identical.
+                let mut sums = vec![0.0f64; o.ncols()];
+                o.for_each_entry(|_, c, v| sums[c as usize] += v.to_f32() as f64);
+                sums
+            }
+        }
     }
 
     /// [`ShardedSpmv::ppr`] with a precomputed column-sum table — the
@@ -430,8 +595,8 @@ impl<V: Dataword> ShardedSpmv<V> {
     /// after a small `CooDelta`, so warm re-solves stream the matrix
     /// measurably fewer times; each iteration still counts one `apply`.
     pub fn ppr_with_colsums_seeded(&self, opts: &PprOptions, colsums: &[f64], seed: Option<&[f32]>) -> PprResult {
-        assert_eq!(self.matrix.nrows, self.matrix.ncols, "PPR needs a square matrix");
-        query::ppr_with_seed(self.matrix.nrows, colsums, opts, seed, |z, y| self.apply(z, y))
+        assert_eq!(self.backing.nrows(), self.backing.ncols(), "PPR needs a square matrix");
+        query::ppr_with_seed(self.backing.nrows(), colsums, opts, seed, |z, y| self.apply(z, y))
     }
 
     /// Rebind this engine to an updated matrix, re-deriving the CU shard
@@ -464,7 +629,12 @@ impl<V: Dataword> ShardedSpmv<V> {
     /// CSR under deltas get true in-place splicing from
     /// [`CsrMatrix::apply_delta`].
     pub fn rebuild_shards(&self, matrix: Arc<CsrMatrix<V>>, dirty_rows: &[u32]) -> (Self, ShardRebuild) {
-        assert_eq!(matrix.nrows, self.matrix.nrows, "update must preserve dimensions");
+        assert!(
+            !self.is_ooc(),
+            "rebuild_shards on an out-of-core engine: delta updates require a resident matrix \
+             (re-export the packet directory instead)"
+        );
+        assert_eq!(matrix.nrows, self.backing.nrows(), "update must preserve dimensions");
         debug_assert!(dirty_rows.windows(2).all(|w| w[0] < w[1]), "dirty rows must be sorted and unique");
         let parts = partition_rows_balanced(&matrix, self.parts.len(), self.policy);
         let mut stats = ShardRebuild::default();
@@ -480,7 +650,7 @@ impl<V: Dataword> ShardedSpmv<V> {
             }
         }
         let engine = Self {
-            matrix,
+            backing: MatrixBacking::Resident(matrix),
             parts,
             policy: self.policy,
             pool: Arc::clone(&self.pool),
@@ -506,10 +676,10 @@ impl<V: Dataword> Operator for ShardedSpmv<V> {
         Some(self)
     }
     fn n(&self) -> usize {
-        self.matrix.nrows
+        self.backing.nrows()
     }
     fn nnz(&self) -> usize {
-        self.matrix.nnz()
+        self.backing.nnz()
     }
     fn value_bits(&self) -> u32 {
         V::BITS
@@ -520,10 +690,31 @@ impl<V: Dataword> Operator for ShardedSpmv<V> {
         let cap = packet_capacity(V::BITS);
         self.parts.iter().map(|p| p.nnz.div_ceil(cap)).sum()
     }
+    fn io_bytes_read(&self) -> u64 {
+        match &self.backing {
+            MatrixBacking::Resident(_) => 0,
+            MatrixBacking::Ooc(o) => o.io_bytes_read(),
+        }
+    }
+    fn prefetch_stalls(&self) -> u64 {
+        match &self.backing {
+            MatrixBacking::Resident(_) => 0,
+            MatrixBacking::Ooc(o) => o.prefetch_stalls(),
+        }
+    }
+    fn resident_bytes(&self) -> usize {
+        match &self.backing {
+            MatrixBacking::Resident(m) => {
+                8 * m.indptr.len() + 4 * m.indices.len() + V::bytes() * m.vals.len()
+            }
+            // The matrix itself stays on storage; RAM holds only the
+            // preallocated chunk buffers + chunk tables.
+            MatrixBacking::Ooc(o) => o.buffer_bytes(),
+        }
+    }
     fn apply(&self, x: &[f32], y: &mut [f32]) {
-        assert_eq!(y.len(), self.matrix.nrows);
+        assert_eq!(y.len(), self.backing.nrows());
         self.applies.fetch_add(1, Ordering::Relaxed);
-        let m = &self.matrix;
         let parts = &self.parts;
         // Disjoint writes: each task owns rows [row_start, row_end) and
         // materializes only its own stripe of the output buffer, so the
@@ -538,7 +729,10 @@ impl<V: Dataword> Operator for ShardedSpmv<V> {
             let y_stripe = unsafe {
                 std::slice::from_raw_parts_mut(y_ptr.get().add(p.row_start), p.row_end - p.row_start)
             };
-            m.spmv_into_stripe(x, y_stripe, p.row_start, p.row_end);
+            match &self.backing {
+                MatrixBacking::Resident(m) => m.spmv_into_stripe(x, y_stripe, p.row_start, p.row_end),
+                MatrixBacking::Ooc(ooc) => Self::ooc_spmv_stripe(ooc, i, x, y_stripe, p.row_start),
+            }
         });
     }
 
@@ -558,10 +752,10 @@ impl<V: Dataword> Operator for ShardedSpmv<V> {
     /// SpMV + axpy + dot (+ K reorth dots) in **one** fork/join over the
     /// data instead of a parade of serial full-length passes.
     fn apply_fused(&self, x: &[f32], y: &mut [f32], it: &mut FusedIteration<'_>) -> f64 {
-        assert_eq!(y.len(), self.matrix.nrows);
-        assert_eq!(x.len(), self.matrix.nrows);
+        let n = self.backing.nrows();
+        assert_eq!(y.len(), n);
+        assert_eq!(x.len(), n);
         self.applies.fetch_add(1, Ordering::Relaxed);
-        let m = &self.matrix;
         let parts = &self.parts;
         let shards = parts.len();
         let nproj = it.basis.map_or(0, |b| b.rows());
@@ -570,7 +764,7 @@ impl<V: Dataword> Operator for ShardedSpmv<V> {
         assert!(it.projs.len() >= nproj, "projection buffer too small");
         let (beta_prev, v_prev, basis) = (it.beta_prev, it.v_prev, it.basis);
         if beta_prev != 0.0 {
-            assert_eq!(v_prev.len(), m.nrows);
+            assert_eq!(v_prev.len(), n);
         }
         let y_ptr = SendPtr(y.as_mut_ptr());
         let p_ptr = SendPtr(it.partials.as_mut_ptr());
@@ -583,7 +777,14 @@ impl<V: Dataword> Operator for ShardedSpmv<V> {
             // `1 + nproj`) is written by exactly this task.
             let w_stripe = unsafe { std::slice::from_raw_parts_mut(y_ptr.get().add(r0), r1 - r0) };
             let slot = unsafe { std::slice::from_raw_parts_mut(p_ptr.get().add(i * stride), stride) };
-            m.spmv_into_stripe(x, w_stripe, r0, r1);
+            // The stripe SpMV streams resident rows or prefetched OOC
+            // chunks; either way the axpy/dot/reorth tail below runs on the
+            // same bitwise stripe, while the next shard's chunks are
+            // already being read — the I/O-behind-compute overlap.
+            match &self.backing {
+                MatrixBacking::Resident(m) => m.spmv_into_stripe(x, w_stripe, r0, r1),
+                MatrixBacking::Ooc(ooc) => Self::ooc_spmv_stripe(ooc, i, x, w_stripe, r0),
+            }
             slot[0] = if beta_prev != 0.0 {
                 linalg::axpy_dot(-beta_prev, &v_prev[r0..r1], w_stripe, &x[r0..r1])
             } else {
@@ -618,12 +819,11 @@ impl<V: Dataword> Operator for ShardedSpmv<V> {
     /// — `applies` ticks once, not `b` times — which is exactly the
     /// bytes-per-Ritz-pair economics `benches/lanczos_block.rs` pins.
     fn apply_fused_block(&self, x: &[f32], y: &mut [f32], it: &mut FusedBlockIteration<'_>) {
-        let n = self.matrix.nrows;
+        let n = self.backing.nrows();
         let b = it.b;
         assert_eq!(x.len(), b * n, "x must be a column-major b x n panel");
         assert_eq!(y.len(), b * n, "y must be a column-major b x n panel");
         self.applies.fetch_add(1, Ordering::Relaxed);
-        let m = &self.matrix;
         let parts = &self.parts;
         let shards = parts.len();
         let nproj = it.basis.map_or(0, |bs| bs.rows());
@@ -647,13 +847,19 @@ impl<V: Dataword> Operator for ShardedSpmv<V> {
             // by exactly this task.
             let slot = unsafe { std::slice::from_raw_parts_mut(p_ptr.get().add(i * stride), stride) };
             slot.fill(0.0);
-            let mut r0 = p.row_start;
-            while r0 < p.row_end {
-                let r1 = (r0 + TOPK_ROW_CHUNK).min(p.row_end);
+            // One 512-row window of the fused block sweep, shared by both
+            // backings: `spmv` fills column `c`'s window of `w`, then the
+            // Paige-reordered triangular subtraction, block dots, and
+            // reorth projections run on it cache-hot. OOC chunk boundaries
+            // align to these windows, so the window sequence — and every
+            // f32/f64 accumulation order — is identical either way.
+            let mut fuse_window = |r0: usize, r1: usize, spmv: &mut dyn FnMut(usize, &mut [f32])| {
                 for c in 0..b {
+                    // SAFETY: as above — windows of column `c` within this
+                    // task's row stripe; disjoint across tasks.
                     let w_chunk =
                         unsafe { std::slice::from_raw_parts_mut(y_ptr.get().add(c * n + r0), r1 - r0) };
-                    m.spmv_into_stripe(&x[c * n..(c + 1) * n], w_chunk, r0, r1);
+                    spmv(c, w_chunk);
                     if !v_prev.is_empty() {
                         // w_c -= sum_{i >= c} B_j[c][i] * v_prev_i over the
                         // chunk rows (B_j is upper triangular).
@@ -676,7 +882,38 @@ impl<V: Dataword> Operator for ShardedSpmv<V> {
                         );
                     }
                 }
-                r0 = r1;
+            };
+            match &self.backing {
+                MatrixBacking::Resident(m) => {
+                    let mut r0 = p.row_start;
+                    while r0 < p.row_end {
+                        let r1 = (r0 + TOPK_ROW_CHUNK).min(p.row_end);
+                        fuse_window(r0, r1, &mut |c, w| {
+                            m.spmv_into_stripe(&x[c * n..(c + 1) * n], w, r0, r1)
+                        });
+                        r0 = r1;
+                    }
+                }
+                MatrixBacking::Ooc(ooc) => {
+                    let mut src = OocShardSource::new(Arc::clone(ooc), i);
+                    while let Some(chunk) = src.next_chunk() {
+                        let (c0, c1) = chunk.row_range();
+                        let (rows, cols, vals) = (chunk.rows(), chunk.cols(), chunk.vals());
+                        let (mut e0, mut r0) = (0usize, c0);
+                        while r0 < c1 {
+                            let r1 = (r0 + TOPK_ROW_CHUNK).min(c1);
+                            let e1 = e0 + rows[e0..].partition_point(|&r| (r as usize) < r1);
+                            fuse_window(r0, r1, &mut |c, w| {
+                                w.fill(0.0);
+                                let xc = &x[c * n..(c + 1) * n];
+                                for e in e0..e1 {
+                                    w[rows[e] as usize - r0] += vals[e].to_f32() * xc[cols[e] as usize];
+                                }
+                            });
+                            (e0, r0) = (e1, r1);
+                        }
+                    }
+                }
             }
         });
         // Merge Unit: fold the per-shard partials in shard order
@@ -1009,6 +1246,71 @@ mod tests {
             assert_eq!(engine.applies(), got.iterations, "one stream per iteration");
         }
         assert!(serial.converged);
+    }
+
+    #[test]
+    fn ooc_backed_engine_is_bitwise_equal_to_resident() {
+        use crate::sparse::ooc::{scratch_dir, OocMatrix, PacketFileWriter};
+        let dir = scratch_dir("engine");
+        // 4096 rows over 3 shards = multiple 512-row windows per shard, and
+        // the small chunk target splits each shard into several chunks, so
+        // the double-buffer hand-off actually runs.
+        let m = Arc::new(graphs::rmat(1 << 12, 8 << 12, 0.57, 0.19, 0.19, 63).to_csr());
+        PacketFileWriter::new(&dir)
+            .chunk_target_bytes(4096)
+            .write_csr(m.as_ref(), 1.0, 3, PartitionPolicy::BalancedNnz)
+            .expect("write");
+        let ooc = OocMatrix::<f32>::open(&dir).expect("open");
+        let resident = ShardedSpmv::with_own_pool(Arc::clone(&m), 3, PartitionPolicy::BalancedNnz);
+        let streamed = ShardedSpmv::with_own_pool_ooc(Arc::clone(&ooc));
+        assert!(streamed.is_ooc() && !resident.is_ooc());
+        assert!(streamed.matrix().is_none() && streamed.ooc_matrix().is_some());
+        assert_eq!(streamed.partitions(), resident.partitions());
+        assert_eq!(streamed.nnz(), resident.nnz());
+        // apply
+        let x: Vec<f32> = (0..m.nrows).map(|i| ((i * 37) % 11) as f32 * 0.1 - 0.5).collect();
+        let (mut ya, mut yb) = (vec![0.0f32; m.nrows], vec![0.0f32; m.nrows]);
+        resident.apply(&x, &mut ya);
+        streamed.apply(&x, &mut yb);
+        assert_eq!(ya, yb, "OOC apply must be bitwise resident");
+        // fused sweep (with Paige axpy + dot)
+        let v_prev: Vec<f32> = (0..m.nrows).map(|i| ((i as f32) * 0.03).cos() * 0.2).collect();
+        let shards = resident.fused_shards();
+        let (mut pa, mut pb) = (vec![0.0f64; shards], vec![0.0f64; shards]);
+        let mut it_a = FusedIteration {
+            beta_prev: 0.7,
+            v_prev: &v_prev,
+            basis: None,
+            partials: &mut pa,
+            projs: &mut [],
+        };
+        let mut it_b = FusedIteration {
+            beta_prev: 0.7,
+            v_prev: &v_prev,
+            basis: None,
+            partials: &mut pb,
+            projs: &mut [],
+        };
+        let (mut wa, mut wb) = (ya.clone(), ya.clone());
+        let aa = resident.apply_fused(&x, &mut wa, &mut it_a);
+        let ab = streamed.apply_fused(&x, &mut wb, &mut it_b);
+        assert_eq!(wa, wb, "fused stripe must be bitwise resident");
+        assert_eq!(aa.to_bits(), ab.to_bits(), "merged alpha must be bitwise resident");
+        // top-k, query tables, PPR
+        assert_eq!(streamed.top_k(&x, 8), resident.top_k(&x, 8));
+        assert_eq!(streamed.row_l1_norms(), resident.row_l1_norms());
+        assert_eq!(streamed.column_sums(), resident.column_sums());
+        let opts = crate::sparse::PprOptions { source: 5, ..Default::default() };
+        assert_eq!(streamed.ppr(&opts), resident.ppr(&opts));
+        // telemetry moved bytes through the prefetcher
+        assert!(streamed.io_bytes_read() > 0);
+        assert!(streamed.prefetch_stalls() <= ooc.chunks_read());
+        // OOC residency is the chunk-buffer pool, not the matrix. (At this
+        // small scale the decoded buffers can rival the CSR itself — the
+        // strict `ooc < resident` bound is asserted at streaming scale in
+        // tests/ooc_stream.rs.)
+        assert_eq!(streamed.resident_bytes(), ooc.buffer_bytes(), "OOC must charge O(buffer) bytes");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

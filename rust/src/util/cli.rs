@@ -34,6 +34,7 @@ pub struct Command {
     about: &'static str,
     opts: Vec<OptSpec>,
     positionals: Vec<(&'static str, &'static str)>,
+    opt_positionals: Vec<(&'static str, &'static str)>,
 }
 
 impl Command {
@@ -60,17 +61,31 @@ impl Command {
         self
     }
 
+    /// Add an optional trailing positional argument (after all required
+    /// ones). When omitted, [`Matches::get`] returns `None` — the command
+    /// decides whether another source (e.g. `--ooc <dir>`) stands in.
+    pub fn positional_opt(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opt_positionals.push((name, help));
+        self
+    }
+
     /// Render the usage/help text.
     pub fn usage(&self) -> String {
         let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
         for (p, _) in &self.positionals {
             s.push_str(&format!(" <{p}>"));
         }
+        for (p, _) in &self.opt_positionals {
+            s.push_str(&format!(" [<{p}>]"));
+        }
         s.push_str(" [OPTIONS]\n");
-        if !self.positionals.is_empty() {
+        if !self.positionals.is_empty() || !self.opt_positionals.is_empty() {
             s.push_str("\nARGS:\n");
             for (p, h) in &self.positionals {
                 s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+            for (p, h) in &self.opt_positionals {
+                s.push_str(&format!("  [<{p}>]  {h}\n"));
             }
         }
         if !self.opts.is_empty() {
@@ -137,7 +152,14 @@ impl Command {
         for (i, (name, _)) in self.positionals.iter().enumerate() {
             values.insert(name.to_string(), pos[i].clone());
         }
-        Ok(Matches { values, flags, extra_positionals: pos.split_off(self.positionals.len()) })
+        for (i, (name, _)) in self.opt_positionals.iter().enumerate() {
+            if let Some(v) = pos.get(self.positionals.len() + i) {
+                values.insert(name.to_string(), v.clone());
+            }
+        }
+        let consumed =
+            self.positionals.len() + self.opt_positionals.len().min(pos.len() - self.positionals.len());
+        Ok(Matches { values, flags, extra_positionals: pos.split_off(consumed) })
     }
 }
 
@@ -281,6 +303,22 @@ mod tests {
         let m = cmd.parse(&args(&["--ks", "2,pony"])).unwrap();
         let e = m.parse_list::<usize>("ks").unwrap_err();
         assert!(e.0.contains("'pony'"), "{}", e.0);
+    }
+
+    #[test]
+    fn optional_positional_may_be_omitted() {
+        let cmd = Command::new("solve", "solve")
+            .positional_opt("input", "matrix file")
+            .opt("ooc", "packet directory", None);
+        let m = cmd.parse(&args(&["--ooc", "pkts/"])).unwrap();
+        assert_eq!(m.get("input"), None);
+        assert_eq!(m.str("ooc").unwrap(), "pkts/");
+        let m = cmd.parse(&args(&["g.mtx"])).unwrap();
+        assert_eq!(m.get("input"), Some("g.mtx"));
+        assert_eq!(m.get("ooc"), None);
+        let m = cmd.parse(&args(&["g.mtx", "trailing"])).unwrap();
+        assert_eq!(m.extra_positionals, vec!["trailing".to_string()]);
+        assert!(cmd.usage().contains("[<input>]"), "{}", cmd.usage());
     }
 
     #[test]

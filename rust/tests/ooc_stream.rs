@@ -1,0 +1,231 @@
+//! Out-of-core streaming integration: the file-backed packet datapath must
+//! be a pure *storage* change — same eigenpairs, same tridiagonal, same
+//! basis bits as the resident engine at every precision and shard count —
+//! while pinning only O(buffers) bytes instead of O(nnz).
+//!
+//! Four properties:
+//!
+//! 1. **Bitwise solve equality** through the coordinator, 4 precisions ×
+//!    shard counts {1, 3, 5, 8}: eigenvalue and eigenvector bits match the
+//!    resident solve exactly.
+//! 2. **Bitwise phase-1 equality** at the Lanczos layer: the `Tridiagonal`
+//!    and every basis row agree bit-for-bit between a resident
+//!    `ShardedSpmv` and its OOC twin.
+//! 3. **Damage rejection**: a missing manifest, a truncated shard file, a
+//!    flipped payload byte, and a precision mismatch all surface as typed
+//!    errors naming what broke and where.
+//! 4. **Residency bound** (counting allocator): opening a packet directory
+//!    and warm-sweeping it allocates buffer-pool bytes, never matrix
+//!    bytes — the registry's O(n)+buffer charging model is real.
+
+#[global_allocator]
+static ALLOC: topk_eigen::util::alloc::CountingAlloc = topk_eigen::util::alloc::CountingAlloc;
+
+use std::path::Path;
+use std::sync::Arc;
+use topk_eigen::coordinator::{Solution, SolveOptions, Solver};
+use topk_eigen::fixed::{Dataword, Precision, Q1_15, Q1_31, Q2_30};
+use topk_eigen::graphs;
+use topk_eigen::lanczos::{
+    lanczos_typed_ws, LanczosOptions, LanczosResult, LanczosWorkspace, ReorthPolicy,
+};
+use topk_eigen::sparse::ooc::{scratch_dir, shard_path};
+use topk_eigen::sparse::{OocMatrix, PacketFileWriter, PartitionPolicy, ShardedSpmv};
+use topk_eigen::util::alloc::thread_allocated_bytes;
+
+fn cleanup(dir: &Path) {
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Raw bit patterns of a solution: `==` on floats would accept `-0.0` for
+/// `0.0`, which is weaker than the storage-change-only contract.
+fn solution_bits(sol: &Solution) -> (Vec<u64>, Vec<Vec<u32>>) {
+    (
+        sol.eigenvalues.iter().map(|l| l.to_bits()).collect(),
+        sol.eigenvectors.iter().map(|v| v.iter().map(|x| x.to_bits()).collect()).collect(),
+    )
+}
+
+#[test]
+fn ooc_solves_match_resident_solves_bitwise() {
+    let g = graphs::rmat(1 << 10, 8 << 10, 0.57, 0.19, 0.19, 31);
+    for precision in Precision::ALL {
+        for cus in [1usize, 3, 5, 8] {
+            let opts = SolveOptions { k: 6, precision, cus, ..Default::default() };
+            let mut solver = Solver::new(opts.clone());
+            let prep = solver.prepare(&g).expect("prepare resident");
+            let sol_res = solver.solve_prepared(&prep).expect("resident solve");
+
+            let dir = scratch_dir(&format!("stream-eq-{}-{cus}", precision.name()));
+            prep.export_ooc(&dir, Some(2048)).expect("export packet files");
+            let mut osolver = Solver::new(opts.clone());
+            let oprep = osolver.prepare_ooc(&dir).expect("prepare ooc");
+            assert!(oprep.is_ooc());
+            assert_eq!(oprep.engine(), "native-ooc");
+            assert_eq!((oprep.n(), oprep.nnz()), (prep.n(), prep.nnz()));
+            let sol_ooc = osolver.solve_prepared(&oprep).expect("ooc solve");
+
+            assert_eq!(
+                solution_bits(&sol_res),
+                solution_bits(&sol_ooc),
+                "{} cus={cus}: OOC eigenpairs diverged from resident",
+                precision.name()
+            );
+            assert_eq!(sol_res.frobenius_norm.to_bits(), sol_ooc.frobenius_norm.to_bits());
+            assert!(sol_ooc.metrics.io_bytes_read > 0, "OOC solve reported no file reads");
+            assert_eq!(sol_res.metrics.io_bytes_read, 0, "resident solve charged file reads");
+            cleanup(&dir);
+        }
+    }
+}
+
+fn tridiag_matches<V: Dataword>() {
+    let m = Arc::new(graphs::erdos_renyi(300, 2400, 13).to_csr().to_precision::<V>());
+    let dir = scratch_dir(&format!("stream-tridiag-{}", V::NAME));
+    let man = PacketFileWriter::new(&dir)
+        .chunk_target_bytes(1024)
+        .write_csr(&m, 1.0, 3, PartitionPolicy::BalancedNnz)
+        .expect("write packet files");
+    assert_eq!(man.nnz, m.nnz());
+
+    let resident = ShardedSpmv::with_own_pool(Arc::clone(&m), 3, PartitionPolicy::BalancedNnz);
+    let ooc = ShardedSpmv::with_own_pool_ooc(OocMatrix::<V>::open(&dir).expect("open"));
+    let opts = LanczosOptions {
+        k: 10,
+        reorth: ReorthPolicy::EveryN(2),
+        fused: true,
+        ..Default::default()
+    };
+    let mut ws = LanczosWorkspace::new();
+    let a: LanczosResult<V> = lanczos_typed_ws(&resident, &opts, &mut ws);
+    let b: LanczosResult<V> = lanczos_typed_ws(&ooc, &opts, &mut ws);
+
+    assert_eq!(a.tridiag, b.tridiag, "{}: tridiagonal diverged on the OOC engine", V::NAME);
+    assert_eq!(a.breakdown_at, b.breakdown_at);
+    let bits = |r: &[f32]| r.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    for i in 0..a.k() {
+        assert_eq!(
+            bits(&a.basis_row_f32(i)),
+            bits(&b.basis_row_f32(i)),
+            "{}: basis row {i} diverged",
+            V::NAME
+        );
+    }
+    cleanup(&dir);
+}
+
+#[test]
+fn fused_lanczos_tridiagonal_is_identical_on_the_ooc_engine() {
+    tridiag_matches::<f32>();
+    tridiag_matches::<Q1_31>();
+    tridiag_matches::<Q2_30>();
+    tridiag_matches::<Q1_15>();
+}
+
+fn write_sample(dir: &Path) {
+    let m = graphs::erdos_renyi(200, 1400, 7).to_csr();
+    PacketFileWriter::new(dir)
+        .chunk_target_bytes(512)
+        .write_csr(&m, 2.0, 2, PartitionPolicy::BalancedNnz)
+        .expect("write packet files");
+}
+
+#[test]
+fn damaged_directories_are_rejected_with_located_errors() {
+    // Missing manifest.
+    let dir = scratch_dir("stream-errs");
+    let err = format!("{:#}", OocMatrix::<f32>::open(&dir).unwrap_err());
+    assert!(err.contains("manifest"), "missing-manifest error unhelpful: {err}");
+
+    // Truncated shard payload: opening names the packet line where data
+    // stops, without reading any chunk.
+    write_sample(&dir);
+    let shard0 = shard_path(&dir, 0);
+    let len = std::fs::metadata(&shard0).expect("stat").len();
+    let f = std::fs::OpenOptions::new().write(true).open(&shard0).expect("reopen");
+    f.set_len(len - 64).expect("truncate");
+    drop(f);
+    let err = format!("{:#}", OocMatrix::<f32>::open(&dir).unwrap_err());
+    assert!(err.contains("truncated at packet line"), "truncation error unhelpful: {err}");
+    cleanup(&dir);
+
+    // Flipped payload byte: geometry still opens, the checksum pass names
+    // the corrupt chunk and its row/line window.
+    write_sample(&dir);
+    let mut bytes = std::fs::read(&shard0).expect("read shard");
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xFF;
+    std::fs::write(&shard0, &bytes).expect("write corrupted shard");
+    let ooc = OocMatrix::<f32>::open(&dir).expect("geometry is still consistent");
+    let err = format!("{:#}", ooc.verify().unwrap_err());
+    assert!(err.contains("checksum mismatch"), "corruption error unhelpful: {err}");
+    assert!(err.contains("packet lines"), "corruption error lacks line window: {err}");
+    cleanup(&dir);
+
+    // Precision mismatch: files written as f32, engine opened at Q1.15.
+    write_sample(&dir);
+    let err = format!("{:#}", OocMatrix::<Q1_15>::open(&dir).unwrap_err());
+    assert!(err.contains("precision mismatch"), "precision error unhelpful: {err}");
+    cleanup(&dir);
+}
+
+#[test]
+fn ooc_residency_is_buffer_bounded_not_nnz_bounded() {
+    // Large enough that streaming actually wins: ~60k entries of CSR
+    // against a handful of 4 KiB double buffers.
+    let g = graphs::mesh2d(128, 128, 0.9, 0.02, 5);
+    let opts = SolveOptions { k: 6, cus: 2, ..Default::default() };
+    let mut solver = Solver::new(opts.clone());
+    let prep = solver.prepare(&g).expect("prepare resident");
+    let dir = scratch_dir("stream-bytes");
+    prep.export_ooc(&dir, Some(4096)).expect("export packet files");
+
+    // Opening allocates the chunk-buffer pool and chunk tables — strictly
+    // less than the resident CSR those buffers replace. The counting
+    // allocator is thread-local and chunk reads run on the matrix's I/O
+    // pool, so this thread's delta is exactly the pinned footprint.
+    let before = thread_allocated_bytes();
+    let ooc = OocMatrix::<f32>::open(&dir).expect("open");
+    let open_bytes = (thread_allocated_bytes() - before) as usize;
+    assert!(
+        ooc.buffer_bytes() < prep.resident_bytes(),
+        "buffer pool {} >= resident CSR {}",
+        ooc.buffer_bytes(),
+        prep.resident_bytes()
+    );
+    assert!(
+        open_bytes < prep.resident_bytes(),
+        "open() allocated {open_bytes} bytes, as much as the {} byte resident CSR",
+        prep.resident_bytes()
+    );
+
+    // A warm sweep must not materialize the matrix on the consuming
+    // thread: per-chunk prefetch bookkeeping only, well under even the
+    // buffer pool.
+    let mut warm = 0usize;
+    ooc.for_each_entry(|_, _, _| warm += 1);
+    let before = thread_allocated_bytes();
+    let mut swept = 0usize;
+    ooc.for_each_entry(|_, _, _| swept += 1);
+    let sweep_bytes = (thread_allocated_bytes() - before) as usize;
+    assert_eq!(swept, prep.nnz());
+    assert_eq!(warm, swept);
+    assert!(
+        sweep_bytes < ooc.buffer_bytes(),
+        "warm sweep allocated {sweep_bytes} bytes against a {} byte buffer pool",
+        ooc.buffer_bytes()
+    );
+    assert!(ooc.prefetch_stalls() <= ooc.chunks_read());
+
+    // The coordinator charges the same model: OOC residency strictly
+    // below the resident engine it mirrors.
+    let mut osolver = Solver::new(opts.clone());
+    let oprep = osolver.prepare_ooc(&dir).expect("prepare ooc");
+    assert!(
+        oprep.resident_bytes() < prep.resident_bytes(),
+        "OOC residency {} not below resident {}",
+        oprep.resident_bytes(),
+        prep.resident_bytes()
+    );
+    cleanup(&dir);
+}

@@ -109,8 +109,29 @@ def check_query_throughput(rows, count):
             f"mixed-load query p99 {mixed['query_p99_ms']:.2f} ms")
 
 
+def check_lanczos_ooc(rows, count):
+    names = ("f32", "q131", "q230", "q115")
+    require(rows, tuple(f"resident_{n}" for n in names)
+            + tuple(f"ooc_{n}" for n in names))
+    for n in names:
+        ooc = rows[f"ooc_{n}"]
+        # The bench aborts before writing rows unless the OOC eigenpairs
+        # match the resident solve bit-for-bit; the flag pins that here.
+        assert ooc["bitwise_equal"] == 1.0, ooc
+        assert ooc["io_bytes_read"] > 0, ooc
+        assert ooc["bytes_per_s"] > 0, ooc
+        assert rows[f"resident_{n}"]["bytes_per_s"] > 0, rows[f"resident_{n}"]
+        # Double buffering must overlap I/O with compute: a sweep that
+        # blocks on every chunk stalls as often as it reads.
+        assert ooc["prefetch_stalls"] < ooc["chunks_read"], ooc
+    f32 = rows["ooc_f32"]
+    return (f"bitwise OK at 4 formats; f32 OOC {f32['bytes_per_s'] / 1e6:.0f} MB/s, "
+            f"{f32['prefetch_stalls']:.0f} stalls / {f32['chunks_read']:.0f} chunk reads")
+
+
 CHECKS = {
     "lanczos_fused": check_lanczos_fused,
+    "lanczos_ooc": check_lanczos_ooc,
     "lanczos_block": check_lanczos_block,
     "service_throughput": check_service_throughput,
     "delta_update": check_delta_update,

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# Generate an out-of-core R-MAT packet directory without ever holding the
+# graph in memory: edges are re-derived per shard and written straight to
+# 512-bit-aligned chunk files (see `topk-eigen generate-ooc --help`).
+#
+# Usage: scripts/gen_ooc_graph.sh <dir> [n] [degree] [precision] [cus]
+#
+#   dir        output packet directory (created; must not hold other data)
+#   n          vertex count, power of two        (default 4194304 = 2^22)
+#   degree     target edges per vertex           (default 8)
+#   precision  f32 | q1.31 | q2.30 | q1.15       (default f32)
+#   cus        shard files / compute units       (default 5)
+#
+# The resulting directory solves directly:
+#   cargo run --release -- solve --ooc <dir> -k 8
+set -euo pipefail
+
+dir=${1:?usage: $0 <dir> [n] [degree] [precision] [cus]}
+n=${2:-4194304}
+degree=${3:-8}
+precision=${4:-f32}
+cus=${5:-5}
+
+cd "$(dirname "$0")/../rust"
+exec cargo run --release -- generate-ooc "$dir" \
+    --n "$n" --degree "$degree" --precision "$precision" --cus "$cus"
