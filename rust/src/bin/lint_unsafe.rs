@@ -1,0 +1,797 @@
+//! `lint_unsafe` — hermetic static audit of the crate's unsafe surface.
+//!
+//! Walks every `.rs` file under `rust/src` (no dependencies, no network, no
+//! proc macros — a comment/string-aware line scanner) and enforces the
+//! repo's unsafe-code policy:
+//!
+//! 1. Every `unsafe` **block** and `unsafe impl` is immediately preceded by
+//!    a `// SAFETY:` comment (trailing same-line comments count; attribute
+//!    lines between the comment and the item are skipped). `unsafe fn`
+//!    declarations are exempt — their *bodies* are covered by
+//!    `#![deny(unsafe_op_in_unsafe_fn)]` in `lib.rs`, which forces every
+//!    interior dereference into its own commented block.
+//! 2. Every `SendPtr(` construction and every `unsafe impl` is accounted
+//!    for in the checked-in allowlist `scripts/unsafe_inventory.toml`,
+//!    which pairs each site count with a one-line disjointness argument.
+//!    Stale allowlist rows (counting sites that no longer exist) fail too.
+//! 3. `static mut` and `transmute` are forbidden outright.
+//! 4. `unsafe` may only appear in the audited modules named by the
+//!    allowlist; a new module growing unsafe code must be added there (and
+//!    to the ARCHITECTURE.md inventory table) deliberately.
+//!
+//! The binary's own file is skipped: it embeds deliberately-violating
+//! fixtures for `--self-test`, and `#![forbid(unsafe_code)]` below makes
+//! the compiler — not this scanner — the guarantee that it stays clean.
+//!
+//! Usage: `cargo run --bin lint_unsafe` (blocking CI step) or
+//! `cargo run --bin lint_unsafe -- --self-test` to run the embedded
+//! fixture checks (a fixture with an uncommented unsafe block MUST fail).
+
+#![forbid(unsafe_code)]
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// A single policy violation, printed as `rust/src/<file>:<line>: <msg>`.
+struct Violation {
+    file: String,
+    line: usize,
+    msg: String,
+}
+
+/// One source file split into parallel per-line views: `code` has comments,
+/// string literals, and char literals blanked (so token scans never match
+/// inside prose), `comments` holds comment text only (so `SAFETY:` markers
+/// are found without string-literal false positives).
+struct Stripped {
+    code: Vec<String>,
+    comments: Vec<String>,
+}
+
+enum State {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    Str,
+    RawStr(u32),
+    CharLit,
+}
+
+/// Comment/string/char-literal stripper. Handles nested block comments,
+/// raw strings (`r"…"`, `r#"…"#`, `br#"…"#`), escapes, and the
+/// char-literal-vs-lifetime ambiguity (`'a'` starts a literal, `'a` in
+/// `<'a>` does not).
+fn strip(source: &str) -> Stripped {
+    let chars: Vec<char> = source.chars().collect();
+    let mut code = Vec::new();
+    let mut comments = Vec::new();
+    let mut cur_code = String::new();
+    let mut cur_com = String::new();
+    let mut state = State::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            // Line comments end here; every other state spans the newline.
+            if matches!(state, State::LineComment) {
+                state = State::Code;
+            }
+            code.push(std::mem::take(&mut cur_code));
+            comments.push(std::mem::take(&mut cur_com));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    state = State::LineComment;
+                    cur_com.push_str("//");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    cur_code.push(' ');
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+                    // Possible raw-string opener: r"…", r#"…"#, br#"…"#.
+                    let mut j = i + 1;
+                    if c == 'b' && chars.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    if c == 'b' && j == i + 1 {
+                        // Plain identifier starting with 'b' (or b"…",
+                        // handled by the '"' arm next round).
+                        cur_code.push(c);
+                        i += 1;
+                        continue;
+                    }
+                    let mut hashes = 0u32;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        state = State::RawStr(hashes);
+                        cur_code.push(' ');
+                        i = j + 1;
+                    } else {
+                        cur_code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal iff it closes within two chars or starts
+                    // with an escape; otherwise it is a lifetime tick.
+                    if next == Some('\\') || chars.get(i + 2) == Some(&'\'') {
+                        state = State::CharLit;
+                        cur_code.push(' ');
+                        i += 1;
+                    } else {
+                        cur_code.push(c);
+                        i += 1;
+                    }
+                } else {
+                    cur_code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                cur_com.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if depth == 1 { State::Code } else { State::BlockComment(depth - 1) };
+                    i += 2;
+                } else {
+                    cur_com.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else {
+                    if c == '"' {
+                        state = State::Code;
+                    }
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let closes = (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'));
+                    if closes {
+                        state = State::Code;
+                        i += 1 + hashes as usize;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+            State::CharLit => {
+                if c == '\\' {
+                    i += 2;
+                } else {
+                    if c == '\'' {
+                        state = State::Code;
+                    }
+                    i += 1;
+                }
+            }
+        }
+    }
+    code.push(cur_code);
+    comments.push(cur_com);
+    Stripped { code, comments }
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Byte offsets of standalone-word occurrences of `word` in `line`.
+fn word_positions(line: &str, word: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    for (pos, _) in line.match_indices(word) {
+        let before_ok = !line[..pos].chars().next_back().is_some_and(is_ident);
+        let after_ok = !line[pos + word.len()..].chars().next().is_some_and(is_ident);
+        if before_ok && after_ok {
+            out.push(pos);
+        }
+    }
+    out
+}
+
+/// The first code token at or after byte `col` of line `line_idx`: an
+/// identifier word, or a single punctuation char (so `unsafe {` yields
+/// `{` and `unsafe impl<T>` yields `impl`).
+fn next_token(code: &[String], line_idx: usize, col: usize) -> Option<String> {
+    let mut li = line_idx;
+    let mut start = col;
+    while li < code.len() {
+        let rest = &code[li][start.min(code[li].len())..];
+        let trimmed = rest.trim_start();
+        if let Some(c) = trimmed.chars().next() {
+            if is_ident(c) {
+                return Some(trimmed.chars().take_while(|&c| is_ident(c)).collect());
+            }
+            return Some(c.to_string());
+        }
+        li += 1;
+        start = 0;
+    }
+    None
+}
+
+/// Whether the `unsafe` occurrence on `line_idx` is covered by a
+/// `// SAFETY:` comment: trailing on the same line, or in the contiguous
+/// comment block immediately above (attribute lines in between are
+/// skipped, anything else breaks the chain).
+fn has_safety_comment(s: &Stripped, line_idx: usize) -> bool {
+    if s.comments[line_idx].contains("SAFETY:") {
+        return true;
+    }
+    let mut j = line_idx;
+    while j > 0 {
+        j -= 1;
+        let code_empty = s.code[j].trim().is_empty();
+        let com = &s.comments[j];
+        if !com.is_empty() && code_empty {
+            if com.contains("SAFETY:") {
+                return true;
+            }
+        } else if s.code[j].trim_start().starts_with("#[") || s.code[j].trim_start().starts_with("#!") {
+            continue;
+        } else {
+            return false;
+        }
+    }
+    false
+}
+
+/// Unsafe-surface census of one file.
+#[derive(Default)]
+struct Counts {
+    unsafe_impl: usize,
+    sendptr: usize,
+    unsafe_blocks: usize,
+    /// Line of the first counted site per kind — anchors inventory-mismatch
+    /// messages to real code.
+    first_impl_line: usize,
+    first_sendptr_line: usize,
+}
+
+/// Scan one stripped file against the policy. `audited` decides whether
+/// `unsafe` is allowed here at all; inventory reconciliation happens later
+/// with the full census in hand.
+fn check_file(rel: &str, s: &Stripped, audited: bool, out: &mut Vec<Violation>) -> Counts {
+    let mut counts = Counts::default();
+    for (li, line) in s.code.iter().enumerate() {
+        let ln = li + 1;
+        for pos in word_positions(line, "unsafe") {
+            if !audited {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: ln,
+                    msg: "`unsafe` outside the audited modules listed in scripts/unsafe_inventory.toml".into(),
+                });
+                continue;
+            }
+            match next_token(&s.code, li, pos + "unsafe".len()).as_deref() {
+                Some("fn") => {} // declaration: body policed by deny(unsafe_op_in_unsafe_fn)
+                Some("impl") => {
+                    counts.unsafe_impl += 1;
+                    if counts.first_impl_line == 0 {
+                        counts.first_impl_line = ln;
+                    }
+                    if !has_safety_comment(s, li) {
+                        out.push(Violation {
+                            file: rel.to_string(),
+                            line: ln,
+                            msg: "`unsafe impl` without an immediately preceding `// SAFETY:` comment".into(),
+                        });
+                    }
+                }
+                Some("{") => {
+                    counts.unsafe_blocks += 1;
+                    if !has_safety_comment(s, li) {
+                        out.push(Violation {
+                            file: rel.to_string(),
+                            line: ln,
+                            msg: "`unsafe` block without an immediately preceding `// SAFETY:` comment".into(),
+                        });
+                    }
+                }
+                tok => {
+                    out.push(Violation {
+                        file: rel.to_string(),
+                        line: ln,
+                        msg: format!("unrecognized `unsafe` form (next token {tok:?})"),
+                    });
+                }
+            }
+        }
+        for pos in line.match_indices("SendPtr(").map(|(p, _)| p) {
+            if !line[..pos].chars().next_back().is_some_and(is_ident) {
+                counts.sendptr += 1;
+                if counts.first_sendptr_line == 0 {
+                    counts.first_sendptr_line = ln;
+                }
+                if !audited {
+                    out.push(Violation {
+                        file: rel.to_string(),
+                        line: ln,
+                        msg: "`SendPtr(` construction outside the audited modules".into(),
+                    });
+                }
+            }
+        }
+        for pos in word_positions(line, "static") {
+            if next_token(&s.code, li, pos + "static".len()).as_deref() == Some("mut") {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: ln,
+                    msg: "`static mut` is forbidden; use an atomic, `Mutex`, or `OnceLock`".into(),
+                });
+            }
+        }
+        for _ in word_positions(line, "transmute") {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: ln,
+                msg: "`transmute` is forbidden; use safe conversions or `from_bits`/`to_bits`".into(),
+            });
+        }
+    }
+    counts
+}
+
+// ---------------------------------------------------------------------------
+// Allowlist: a hand-rolled parser for the TOML subset the inventory uses
+// ([section], [[array-of-tables]], `key = "str" | int | [ "str", … ]`).
+// ---------------------------------------------------------------------------
+
+/// One allowlisted site count from `scripts/unsafe_inventory.toml`.
+struct Site {
+    file: String,
+    kind: String,
+    count: usize,
+    why: String,
+}
+
+/// The parsed allowlist: audited module paths (relative to `rust/src`) and
+/// per-file site counts.
+struct Inventory {
+    modules: Vec<String>,
+    sites: Vec<Site>,
+}
+
+fn unquote(v: &str, ln: usize) -> Result<String, String> {
+    let t = v.trim();
+    if t.len() >= 2 && t.starts_with('"') && t.ends_with('"') {
+        Ok(t[1..t.len() - 1].to_string())
+    } else {
+        Err(format!("line {ln}: expected a quoted string, got `{t}`"))
+    }
+}
+
+fn parse_inventory(text: &str) -> Result<Inventory, String> {
+    let mut inv = Inventory { modules: Vec::new(), sites: Vec::new() };
+    let mut section = String::new();
+    let mut in_modules_array = false;
+    for (li, raw) in text.lines().enumerate() {
+        let ln = li + 1;
+        // Strip comments (the inventory's strings never contain '#').
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if in_modules_array {
+            if line.starts_with(']') {
+                in_modules_array = false;
+            } else {
+                inv.modules.push(unquote(line.trim_end_matches(','), ln)?);
+            }
+            continue;
+        }
+        if line == "[[site]]" {
+            inv.sites.push(Site { file: String::new(), kind: String::new(), count: 0, why: String::new() });
+            section = "site".into();
+            continue;
+        }
+        if line.starts_with('[') {
+            section = line.trim_matches(['[', ']']).to_string();
+            continue;
+        }
+        let (key, value) = line.split_once('=').ok_or_else(|| format!("line {ln}: expected `key = value`"))?;
+        let (key, value) = (key.trim(), value.trim());
+        match (section.as_str(), key) {
+            ("audit", "modules") => {
+                if value == "[" {
+                    in_modules_array = true;
+                } else {
+                    let inner = value.trim_start_matches('[').trim_end_matches(']');
+                    for item in inner.split(',').filter(|s| !s.trim().is_empty()) {
+                        inv.modules.push(unquote(item, ln)?);
+                    }
+                }
+            }
+            ("site", _) => {
+                let site =
+                    inv.sites.last_mut().ok_or_else(|| format!("line {ln}: `{key}` before any [[site]]"))?;
+                match key {
+                    "file" => site.file = unquote(value, ln)?,
+                    "kind" => site.kind = unquote(value, ln)?,
+                    "why" => site.why = unquote(value, ln)?,
+                    "count" => site.count = value.parse().map_err(|e| format!("line {ln}: bad count: {e}"))?,
+                    other => return Err(format!("line {ln}: unexpected `{other}` in [[site]]")),
+                }
+            }
+            _ => return Err(format!("line {ln}: unexpected `{key}` in section `[{section}]`")),
+        }
+    }
+    // The allowlist must be self-consistent before it can gate anything.
+    let mut seen = Vec::new();
+    for s in &inv.sites {
+        if !matches!(s.kind.as_str(), "unsafe_impl" | "sendptr") {
+            return Err(format!("site {}: unknown kind `{}`", s.file, s.kind));
+        }
+        if s.why.trim().is_empty() {
+            return Err(format!("site {} ({}): missing the one-line `why` disjointness argument", s.file, s.kind));
+        }
+        if !inv.modules.contains(&s.file) {
+            return Err(format!("site {} is not in the audited modules list", s.file));
+        }
+        let key = (s.file.clone(), s.kind.clone());
+        if seen.contains(&key) {
+            return Err(format!("duplicate site entry for {} ({})", s.file, s.kind));
+        }
+        seen.push(key);
+    }
+    Ok(inv)
+}
+
+// ---------------------------------------------------------------------------
+// Repo walk + reconciliation.
+// ---------------------------------------------------------------------------
+
+/// Recursively collect `.rs` files under `dir`, sorted for deterministic
+/// output, skipping `bin/` (this binary embeds violating fixtures and is
+/// kept honest by `#![forbid(unsafe_code)]` instead).
+fn collect_sources(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .map_err(|e| format!("read_dir {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            if path.file_name().is_some_and(|n| n == "bin") {
+                continue;
+            }
+            collect_sources(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Run the full lint over `src_root` with `inventory`; returns violations.
+fn run_lint(src_root: &Path, inventory: &Inventory) -> Result<Vec<Violation>, String> {
+    let mut files = Vec::new();
+    collect_sources(src_root, &mut files)?;
+    if files.is_empty() {
+        return Err(format!("no .rs files under {}", src_root.display()));
+    }
+    let mut violations = Vec::new();
+    let mut census: Vec<(String, Counts)> = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(src_root)
+            .map_err(|e| e.to_string())?
+            .to_string_lossy()
+            .replace('\\', "/");
+        let source = fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let stripped = strip(&source);
+        let audited = inventory.modules.contains(&rel);
+        let counts = check_file(&rel, &stripped, audited, &mut violations);
+        census.push((rel, counts));
+    }
+    reconcile(inventory, &census, &mut violations);
+    Ok(violations)
+}
+
+/// Compare the census against the allowlist, both directions: undeclared
+/// sites fail, and stale allowlist rows fail.
+fn reconcile(inventory: &Inventory, census: &[(String, Counts)], out: &mut Vec<Violation>) {
+    let expected = |file: &str, kind: &str| -> usize {
+        inventory.sites.iter().find(|s| s.file == file && s.kind == kind).map_or(0, |s| s.count)
+    };
+    for (rel, counts) in census {
+        let want_impl = expected(rel, "unsafe_impl");
+        if counts.unsafe_impl != want_impl {
+            out.push(Violation {
+                file: rel.clone(),
+                line: counts.first_impl_line.max(1),
+                msg: format!(
+                    "{} `unsafe impl` site(s) but the allowlist allows {want_impl}; update unsafe_inventory.toml",
+                    counts.unsafe_impl
+                ),
+            });
+        }
+        let want_sp = expected(rel, "sendptr");
+        if counts.sendptr != want_sp {
+            out.push(Violation {
+                file: rel.clone(),
+                line: counts.first_sendptr_line.max(1),
+                msg: format!(
+                    "{} `SendPtr(` construction(s) but the allowlist allows {want_sp}; update unsafe_inventory.toml",
+                    counts.sendptr
+                ),
+            });
+        }
+    }
+    for site in &inventory.sites {
+        if !census.iter().any(|(rel, _)| rel == &site.file) {
+            out.push(Violation {
+                file: site.file.clone(),
+                line: 1,
+                msg: format!("allowlisted ({}) in the inventory but the file does not exist", site.kind),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Self-test fixtures: the scanner must fail the bad ones and pass the good.
+// ---------------------------------------------------------------------------
+
+struct Fixture {
+    name: &'static str,
+    source: &'static str,
+    audited: bool,
+    /// Substring every expected violation message must contain; empty means
+    /// the fixture must come back clean.
+    expect: &'static str,
+}
+
+const FIXTURES: &[Fixture] = &[
+    Fixture {
+        name: "uncommented unsafe block fails",
+        source: "fn f(p: *mut u8) {\n    let _ = unsafe { *p };\n}\n",
+        audited: true,
+        expect: "without an immediately preceding `// SAFETY:`",
+    },
+    Fixture {
+        name: "commented unsafe block passes",
+        source: "fn f(p: *mut u8) {\n    // SAFETY: caller guarantees p is valid.\n    let _ = unsafe { *p };\n}\n",
+        audited: true,
+        expect: "",
+    },
+    Fixture {
+        name: "trailing same-line SAFETY comment passes",
+        source: "fn f(p: *mut u8) {\n    let _ = unsafe { *p }; // SAFETY: p valid by contract.\n}\n",
+        audited: true,
+        expect: "",
+    },
+    Fixture {
+        name: "attribute between comment and item is skipped",
+        source: "// SAFETY: no interior mutability.\n#[allow(dead_code)]\nunsafe impl Send for X {}\n",
+        audited: true,
+        expect: "",
+    },
+    Fixture {
+        name: "uncommented unsafe impl fails",
+        source: "struct X;\nunsafe impl Send for X {}\n",
+        audited: true,
+        expect: "`unsafe impl` without an immediately preceding",
+    },
+    Fixture {
+        name: "unsafe fn declaration alone is exempt",
+        source: "/// # Safety\n/// Caller checks bounds.\npub unsafe fn get(i: usize) -> usize { i }\n",
+        audited: true,
+        expect: "",
+    },
+    Fixture {
+        name: "static mut fails",
+        source: "static mut COUNTER: u64 = 0;\n",
+        audited: true,
+        expect: "`static mut` is forbidden",
+    },
+    Fixture {
+        name: "transmute fails",
+        source: "fn f(x: u32) -> f32 {\n    // SAFETY: same size.\n    unsafe { std::mem::transmute(x) }\n}\n",
+        audited: true,
+        expect: "`transmute` is forbidden",
+    },
+    Fixture {
+        name: "unsafe outside audited modules fails",
+        source: "fn f(p: *mut u8) {\n    // SAFETY: commented, but the module is not audited.\n    let _ = unsafe { *p };\n}\n",
+        audited: false,
+        expect: "outside the audited modules",
+    },
+    Fixture {
+        name: "unsafe in comments and strings is ignored",
+        source: "// this comment says unsafe { } and static mut\nfn f() -> &'static str {\n    \"unsafe { transmute } SendPtr(\"\n}\n",
+        audited: false,
+        expect: "",
+    },
+];
+
+/// Run the embedded fixtures; returns failure descriptions (empty = pass).
+fn self_test() -> Vec<String> {
+    let mut failures = Vec::new();
+    for fx in FIXTURES {
+        let stripped = strip(fx.source);
+        let mut violations = Vec::new();
+        check_file("fixture.rs", &stripped, fx.audited, &mut violations);
+        if fx.expect.is_empty() {
+            if !violations.is_empty() {
+                failures.push(format!("{}: expected clean, got `{}`", fx.name, violations[0].msg));
+            }
+        } else if !violations.iter().any(|v| v.msg.contains(fx.expect)) {
+            let got: Vec<&str> = violations.iter().map(|v| v.msg.as_str()).collect();
+            failures.push(format!("{}: expected a violation containing `{}`, got {:?}", fx.name, fx.expect, got));
+        }
+    }
+    // Inventory reconciliation fixture: one declared SendPtr, two real.
+    let inv = Inventory {
+        modules: vec!["m.rs".into()],
+        sites: vec![Site { file: "m.rs".into(), kind: "sendptr".into(), count: 1, why: "test".into() }],
+    };
+    let src = "fn f(a: &mut [u8], b: &mut [u8]) {\n    let _p = SendPtr(a.as_mut_ptr());\n    let _q = SendPtr(b.as_mut_ptr());\n}\n";
+    let mut violations = Vec::new();
+    let counts = check_file("m.rs", &strip(src), true, &mut violations);
+    reconcile(&inv, &[("m.rs".into(), counts)], &mut violations);
+    if !violations.iter().any(|v| v.msg.contains("allows 1")) {
+        failures.push("inventory mismatch fixture: expected a count-mismatch violation".into());
+    }
+    failures
+}
+
+// ---------------------------------------------------------------------------
+// Entry point.
+// ---------------------------------------------------------------------------
+
+/// `rust/src`, resolved from the cargo manifest when run via `cargo run`,
+/// with fallbacks for direct invocation from the repo root or `rust/`.
+fn find_src_root() -> Result<PathBuf, String> {
+    if let Ok(dir) = std::env::var("CARGO_MANIFEST_DIR") {
+        let p = Path::new(&dir).join("src");
+        if p.is_dir() {
+            return Ok(p);
+        }
+    }
+    for cand in ["rust/src", "src"] {
+        let p = PathBuf::from(cand);
+        if p.join("lib.rs").is_file() {
+            return Ok(p);
+        }
+    }
+    Err("cannot locate rust/src (run via `cargo run --bin lint_unsafe`)".into())
+}
+
+/// `scripts/unsafe_inventory.toml`, which lives beside `rust/` at the repo
+/// root.
+fn find_inventory(src_root: &Path) -> Result<PathBuf, String> {
+    let candidates = [
+        src_root.join("../../scripts/unsafe_inventory.toml"),
+        PathBuf::from("scripts/unsafe_inventory.toml"),
+    ];
+    candidates
+        .iter()
+        .find(|p| p.is_file())
+        .cloned()
+        .ok_or_else(|| "cannot locate scripts/unsafe_inventory.toml".into())
+}
+
+/// Locate the tree and the allowlist, then lint (the non-self-test path).
+fn lint_repo() -> Result<Vec<Violation>, String> {
+    let src_root = find_src_root()?;
+    let inv_path = find_inventory(&src_root)?;
+    let inv_text = fs::read_to_string(&inv_path).map_err(|e| format!("read {}: {e}", inv_path.display()))?;
+    let inventory = parse_inventory(&inv_text).map_err(|e| format!("{}: {e}", inv_path.display()))?;
+    run_lint(&src_root, &inventory)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--self-test") {
+        let failures = self_test();
+        if failures.is_empty() {
+            println!("lint_unsafe self-test: {} fixtures passed", FIXTURES.len() + 1);
+            return;
+        }
+        for f in &failures {
+            eprintln!("lint_unsafe self-test FAILED: {f}");
+        }
+        std::process::exit(1);
+    }
+    match lint_repo() {
+        Err(e) => {
+            eprintln!("lint_unsafe: {e}");
+            std::process::exit(2);
+        }
+        Ok(violations) if violations.is_empty() => {
+            println!("lint_unsafe: rust/src clean (every unsafe site commented, inventoried, and audited)");
+        }
+        Ok(violations) => {
+            for v in &violations {
+                eprintln!("rust/src/{}:{}: {}", v.file, v.line, v.msg);
+            }
+            eprintln!("lint_unsafe: {} violation(s)", violations.len());
+            std::process::exit(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stripper_blanks_comments_strings_and_char_literals() {
+        let s = strip("let x = \"unsafe { }\"; // unsafe impl\nlet c = 'u'; /* static\nmut */ let l: &'a str = r#\"transmute\"#;\n");
+        assert!(!s.code[0].contains("unsafe"));
+        assert!(s.comments[0].contains("unsafe impl"));
+        assert!(!s.code[1].contains('u') || s.code[1].contains("let"));
+        assert!(!s.code.concat().contains("transmute"));
+        assert!(!s.code.concat().contains("mut */"));
+        // The lifetime tick survives as code (it is not a char literal).
+        assert!(s.code[2].contains("&'a str") || s.code[1].contains("&'a str"));
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let s = strip("/* outer /* inner */ still comment */ fn f() {}\n");
+        assert!(s.code[0].contains("fn f()"));
+        assert!(!s.code[0].contains("still"));
+    }
+
+    #[test]
+    fn self_test_fixtures_pass() {
+        let failures = self_test();
+        assert!(failures.is_empty(), "{failures:?}");
+    }
+
+    #[test]
+    fn inventory_parser_roundtrips_the_real_format() {
+        let text = "# comment\n[audit]\nmodules = [\n  \"a.rs\", # trailing\n  \"b.rs\",\n]\n\n[[site]]\nfile = \"a.rs\"\nkind = \"sendptr\"\ncount = 3\nwhy = \"disjoint stripes\"\n";
+        let inv = parse_inventory(text).unwrap();
+        assert_eq!(inv.modules, ["a.rs", "b.rs"]);
+        assert_eq!(inv.sites.len(), 1);
+        assert_eq!(inv.sites[0].count, 3);
+    }
+
+    #[test]
+    fn inventory_parser_rejects_missing_why_and_unknown_kind() {
+        let base = "[audit]\nmodules = [\"a.rs\"]\n[[site]]\nfile = \"a.rs\"\nkind = \"sendptr\"\ncount = 1\nwhy = \"\"\n";
+        assert!(parse_inventory(base).unwrap_err().contains("why"));
+        let bad_kind = "[audit]\nmodules = [\"a.rs\"]\n[[site]]\nfile = \"a.rs\"\nkind = \"bogus\"\ncount = 1\nwhy = \"x\"\n";
+        assert!(parse_inventory(bad_kind).unwrap_err().contains("unknown kind"));
+    }
+
+    #[test]
+    fn stale_allowlist_rows_are_violations() {
+        let inv = Inventory {
+            modules: vec!["gone.rs".into()],
+            sites: vec![Site { file: "gone.rs".into(), kind: "sendptr".into(), count: 2, why: "x".into() }],
+        };
+        let mut violations = Vec::new();
+        reconcile(&inv, &[], &mut violations);
+        assert_eq!(violations.len(), 1);
+        assert!(violations[0].msg.contains("does not exist"));
+    }
+}

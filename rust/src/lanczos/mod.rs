@@ -469,13 +469,15 @@ pub fn lanczos_typed_ws<V: Dataword, O: Operator + ?Sized>(
                     // SAFETY: chunks tile [0, n) disjointly (each task gets
                     // only its own slice) and the fork/join returns before
                     // `w`/`chunk_acc` move.
-                    let w_chunk = unsafe { std::slice::from_raw_parts_mut(w_ptr.get().add(r0), r1 - r0) };
+                    let w_chunk = unsafe { w_ptr.slice_mut(r0, r1 - r0) };
                     let sq = if reorth_due {
                         basis_ro.apply_projections_norm2(projs_ro, w_chunk, r0, r1)
                     } else {
                         linalg::axpy_norm2(-alpha32, &v_ro[r0..r1], w_chunk)
                     };
-                    unsafe { *acc_ptr.get().add(c) = sq };
+                    // SAFETY: accumulator slot `c` is written by exactly
+                    // this task; `chunk_acc` outlives the join.
+                    unsafe { acc_ptr.set(c, sq) };
                 });
             }
             vector_passes += 1;
@@ -496,9 +498,12 @@ pub fn lanczos_typed_ws<V: Dataword, O: Operator + ?Sized>(
                 let w_ro: &[f32] = w;
                 op.parallel_for(shards, &|c| {
                     let (r0, r1) = chunk_range(n, shards, c);
-                    // SAFETY: disjoint chunks; join precedes scope exit.
-                    let row_chunk = unsafe { std::slice::from_raw_parts_mut(row_ptr.get().add(r0), r1 - r0) };
-                    let v_chunk = unsafe { std::slice::from_raw_parts_mut(v_ptr.get().add(r0), r1 - r0) };
+                    // SAFETY: disjoint chunks of the fresh basis row; join
+                    // precedes scope exit.
+                    let row_chunk = unsafe { row_ptr.slice_mut(r0, r1 - r0) };
+                    // SAFETY: disjoint chunks of `v`; join precedes scope
+                    // exit.
+                    let v_chunk = unsafe { v_ptr.slice_mut(r0, r1 - r0) };
                     linalg::scale_quantize_into(inv, &w_ro[r0..r1], v_chunk, row_chunk);
                 });
             }
@@ -806,8 +811,7 @@ pub fn block_lanczos_typed_ws<V: Dataword, O: Operator + ?Sized>(
                 for c in 0..b {
                     // SAFETY: chunks tile [0, n) disjointly per column and
                     // the fork/join returns before `wb` moves.
-                    let w_chunk =
-                        unsafe { std::slice::from_raw_parts_mut(wb_ptr.get().add(c * n + r0), r1 - r0) };
+                    let w_chunk = unsafe { wb_ptr.slice_mut(c * n + r0, r1 - r0) };
                     if reorth_due {
                         basis_ro.apply_projections_norm2(
                             &projs_ro[c * nproj..(c + 1) * nproj],
@@ -844,9 +848,12 @@ pub fn block_lanczos_typed_ws<V: Dataword, O: Operator + ?Sized>(
             let w_ro: &[f32] = &wb[c * n..(c + 1) * n];
             op.parallel_for(shards, &|ch| {
                 let (r0, r1) = chunk_range(n, shards, ch);
-                // SAFETY: disjoint chunks; join precedes scope exit.
-                let row_chunk = unsafe { std::slice::from_raw_parts_mut(row_ptr.get().add(r0), r1 - r0) };
-                let v_chunk = unsafe { std::slice::from_raw_parts_mut(v_ptr.get().add(r0), r1 - r0) };
+                // SAFETY: disjoint chunks of the fresh basis row; join
+                // precedes scope exit.
+                let row_chunk = unsafe { row_ptr.slice_mut(r0, r1 - r0) };
+                // SAFETY: disjoint chunks of panel column `c`; join
+                // precedes scope exit.
+                let v_chunk = unsafe { v_ptr.slice_mut(r0, r1 - r0) };
                 linalg::scale_quantize_into(1.0, &w_ro[r0..r1], v_chunk, row_chunk);
             });
             vector_passes += 1;

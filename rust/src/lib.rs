@@ -29,6 +29,12 @@
 //!   The default build is hermetic pure Rust: [`runtime`] exposes the same
 //!   API through stubs that report the engine unavailable, and the
 //!   coordinator transparently falls back to the native sharded engine.
+//! * **`race-check`** (off by default) — arm the scoped-claim race detector
+//!   ([`util::race`]): every checked [`util::ptr::SendPtr`] dereference
+//!   registers the index range its scoped task writes, and overlapping
+//!   claims or post-join dereferences panic with both call sites named.
+//!   CI re-runs the concurrency suite with this on; see also the
+//!   `lint_unsafe` binary, which audits the unsafe surface statically.
 //!
 //! ## Quick start
 //!
@@ -48,6 +54,10 @@
 //! The larger tour lives in `examples/quickstart.rs`
 //! (`cargo run --release --example quickstart`).
 #![warn(missing_docs)]
+// Every pointer dereference inside an `unsafe fn` must sit in its own
+// `unsafe` block with a SAFETY comment (enforced by `lint_unsafe`); the
+// function-level `unsafe` only states the *caller's* obligations.
+#![deny(unsafe_op_in_unsafe_fn)]
 // CI runs `cargo clippy -- -D warnings`. These style lints fight the
 // codebase's deliberate idiom — index-parallel loops and explicit numeric
 // literals that mirror the hardware's packet/array layout — so they are

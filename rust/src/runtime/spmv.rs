@@ -25,9 +25,11 @@ pub struct PjrtSpmv {
     nnz: usize,
 }
 
-// The xla PJRT handles are thread-safe at the C++ level (PJRT CPU client is
-// internally synchronized); the raw pointers lack auto-traits only.
+// SAFETY: the xla PJRT handles are thread-safe at the C++ level (PJRT CPU
+// client is internally synchronized); the raw pointers lack auto-traits only.
 unsafe impl Send for PjrtSpmv {}
+// SAFETY: as above — shared access goes through the internally synchronized
+// PJRT client, so `&PjrtSpmv` is safe to share across threads.
 unsafe impl Sync for PjrtSpmv {}
 
 impl PjrtSpmv {

@@ -509,6 +509,10 @@ struct ShardMeta {
 /// unpacked for the SpMV gather. Buffers are pooled by the owning
 /// [`OocMatrix`] — warm sweeps allocate nothing.
 pub struct ChunkBuf<V: Dataword> {
+    /// Pool identity for the `race-check` lease tracker: handing one
+    /// buffer to two consumers, or recycling it twice, panics under the
+    /// feature. Always 0 (and unused) in default builds.
+    lease_id: u64,
     raw: Vec<u8>,
     /// Absolute row index per entry (ascending; row-major CSR order).
     pub(crate) rows: Vec<u32>,
@@ -525,6 +529,7 @@ pub struct ChunkBuf<V: Dataword> {
 impl<V: Dataword> ChunkBuf<V> {
     fn with_capacity(max_payload: usize, max_nnz: usize) -> Self {
         Self {
+            lease_id: crate::util::race::new_lease_id(),
             raw: Vec::with_capacity(max_payload),
             rows: Vec::with_capacity(max_nnz),
             cols: Vec::with_capacity(max_nnz),
@@ -818,6 +823,12 @@ impl<V: Dataword> OocMatrix<V> {
         self.shards.iter().map(|s| s.chunks.len()).sum()
     }
 
+    /// Chunks in one shard (how many [`OocShardSource::next_chunk`] calls
+    /// a full replay of that shard takes).
+    pub fn shard_chunks(&self, shard: usize) -> usize {
+        self.shards[shard].chunks.len()
+    }
+
     /// Resident bytes this matrix pins: the preallocated chunk buffers plus
     /// chunk tables — O(buffer), never O(nnz). What the registry charges.
     pub fn buffer_bytes(&self) -> usize {
@@ -842,10 +853,10 @@ impl<V: Dataword> OocMatrix<V> {
     }
 
     /// Read + checksum + decode one chunk into a pooled buffer. Runs on the
-    /// I/O pool for prefetches and inline for [`OocMatrix::verify`].
+    /// I/O pool for prefetches and inline for [`OocMatrix::verify`]. The
+    /// buffer goes back to the pool even when the read fails (a corrupt or
+    /// truncated chunk must not shrink the pool).
     fn read_chunk(&self, shard: usize, chunk: usize) -> Result<ChunkBuf<V>> {
-        let smeta = &self.shards[shard];
-        let meta = &smeta.chunks[chunk];
         let mut buf = self
             .buffers
             .lock()
@@ -854,6 +865,21 @@ impl<V: Dataword> OocMatrix<V> {
             // The pool is sized for steady state (2 per shard); a caller
             // holding guards across sweeps just grows it transiently.
             .unwrap_or_else(|| ChunkBuf::with_capacity(0, 0));
+        // Track the handout: under `race-check` a second lease of this
+        // buffer before its release panics (double handout).
+        crate::util::race::lease(buf.lease_id);
+        match self.read_chunk_into(shard, chunk, &mut buf) {
+            Ok(()) => Ok(buf),
+            Err(e) => {
+                self.recycle(buf);
+                Err(e)
+            }
+        }
+    }
+
+    fn read_chunk_into(&self, shard: usize, chunk: usize, buf: &mut ChunkBuf<V>) -> Result<()> {
+        let smeta = &self.shards[shard];
+        let meta = &smeta.chunks[chunk];
         let name = smeta.path.display();
         let mut file = std::fs::File::open(&smeta.path)
             .with_context(|| format!("opening OOC shard {name}"))?;
@@ -906,10 +932,13 @@ impl<V: Dataword> OocMatrix<V> {
         buf.row_end = meta.row_end;
         self.io_bytes.fetch_add(meta.payload_bytes as u64, Ordering::Relaxed);
         self.chunks_read.fetch_add(1, Ordering::Relaxed);
-        Ok(buf)
+        Ok(())
     }
 
     fn recycle(&self, buf: ChunkBuf<V>) {
+        // Track the return: under `race-check` recycling a buffer that is
+        // not out panics (double recycle).
+        crate::util::race::release(buf.lease_id);
         self.buffers.lock().expect("ooc buffer pool poisoned").push(buf);
     }
 
@@ -1031,6 +1060,25 @@ impl<V: Dataword> OocShardSource<V> {
     }
 }
 
+impl<V: Dataword> Drop for OocShardSource<V> {
+    /// Reclaim an abandoned prefetch: a source dropped mid-stream (partial
+    /// sweep, early exit, panic unwind) still has a read in flight whose
+    /// buffer would otherwise never return to the pool — each such drop
+    /// used to shrink the preallocated pool permanently. Waits for the
+    /// I/O job to settle (it holds the buffer until then) and recycles.
+    fn drop(&mut self) {
+        if let Some(slot) = self.inflight.take() {
+            let mut st = slot.state.lock().unwrap_or_else(|e| e.into_inner());
+            while matches!(*st, SlotState::Pending) {
+                st = slot.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            if let SlotState::Ready(buf) = std::mem::replace(&mut *st, SlotState::Taken) {
+                self.matrix.recycle(buf);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1084,6 +1132,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "large random fixture; file I/O is covered by the small tiling tests")]
     fn roundtrip_is_bitwise_for_all_precisions() {
         roundtrip_bitwise::<f32>();
         roundtrip_bitwise::<Q1_31>();
@@ -1092,6 +1141,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "large random fixture; pool accounting is covered by the midstream-drop test")]
     fn buffers_return_to_pool_and_stay_bounded() {
         let dir = scratch_dir("pool");
         let (_m, man) = write_sample::<f32>(&dir, 3, 128);
@@ -1107,6 +1157,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "large random fixture; no unsafe on the rejection path")]
     fn wrong_precision_is_rejected() {
         let dir = scratch_dir("precision");
         let (_m, _man) = write_sample::<Q1_31>(&dir, 2, 512);
@@ -1120,6 +1171,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "large random fixture; no unsafe on the error path")]
     fn corrupted_chunk_names_chunk_and_lines() {
         let dir = scratch_dir("corrupt");
         let (_m, _man) = write_sample::<f32>(&dir, 1, 256);
@@ -1137,6 +1189,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "large random fixture; no unsafe on the error path")]
     fn truncated_file_is_rejected_with_line_number() {
         let dir = scratch_dir("truncate");
         let (_m, _man) = write_sample::<f32>(&dir, 1, 256);
@@ -1153,6 +1206,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "large random fixture; no unsafe on the parse path")]
     fn manifest_errors_are_line_numbered() {
         let dir = scratch_dir("manifest");
         let (_m, _man) = write_sample::<f32>(&dir, 2, 512);
@@ -1228,6 +1282,51 @@ mod tests {
             seen += 1;
         });
         assert_eq!(seen, 6);
+        cleanup(&dir);
+    }
+
+    #[test]
+    fn dropped_midstream_source_recycles_inflight_prefetch() {
+        // Regression: a source dropped mid-stream still has a prefetch in
+        // flight; before `OocShardSource`'s `Drop` that read's buffer never
+        // returned to the pool, so every abandoned partial sweep shrank the
+        // preallocated pool permanently. Needs a >512-row fixture: chunk
+        // boundaries align to 512-row windows, so the 200-row sample above
+        // is a single chunk per shard and never has a second read in
+        // flight.
+        let dir = scratch_dir("midstream-drop");
+        let mut coo: CooMatrix = CooMatrix::new(1600, 1600);
+        for r in [0usize, 1, 600, 601, 1200, 1201] {
+            let c = (r + 7) % 1600;
+            coo.push(r, c, 0.5 + r as f32 * 1e-3);
+            coo.push(c, r, 0.5 + r as f32 * 1e-3);
+        }
+        coo.canonicalize();
+        let m = coo.to_csr();
+        PacketFileWriter::new(&dir)
+            .chunk_target_bytes(64)
+            .write_csr(&m, 1.0, 1, PartitionPolicy::EqualRows)
+            .expect("write");
+        let ooc = OocMatrix::<f32>::open(&dir).expect("open");
+        let chunks = ooc.shards[0].chunks.len();
+        assert!(chunks >= 2, "fixture must span multiple chunks, got {chunks}");
+        let before = ooc.buffers.lock().unwrap().len();
+        // Abandon the stream at every possible depth, including before the
+        // first chunk is taken (the constructor has already issued a read).
+        for consumed in 0..chunks {
+            let mut src = OocShardSource::new(ooc.clone(), 0);
+            for _ in 0..consumed {
+                let _ = src.next_chunk().expect("chunk within bounds");
+            }
+            drop(src);
+            let now = ooc.buffers.lock().unwrap().len();
+            assert_eq!(now, before, "pool shrank after dropping at depth {consumed}");
+        }
+        // The matrix still streams completely after all the partial sweeps.
+        let mut seen = 0usize;
+        ooc.for_each_entry(|_, _, _| seen += 1);
+        assert_eq!(seen, m.nnz());
+        assert_eq!(ooc.buffers.lock().unwrap().len(), before);
         cleanup(&dir);
     }
 }

@@ -443,7 +443,7 @@ impl<V: Dataword> ShardedSpmv<V> {
                 let out = self.sweep_shard(i, xs, k);
                 // SAFETY: as in `apply` — the scoped join outlives every
                 // use and slot `i` is written by exactly this task.
-                unsafe { *s_ptr.get().add(i) = out };
+                unsafe { s_ptr.set(i, out) };
             });
             let mut results = Vec::with_capacity(b);
             for q in 0..b {
@@ -501,7 +501,7 @@ impl<V: Dataword> ShardedSpmv<V> {
                 let out = self.sweep_shard(live[j], xs, k);
                 // SAFETY: as in `apply` — the scoped join outlives every
                 // use and slot `j` is written by exactly this task.
-                unsafe { *s_ptr.get().add(j) = out };
+                unsafe { s_ptr.set(j, out) };
             });
             for q in 0..b {
                 // Folding the running top-k with the new shards is exact:
@@ -726,9 +726,7 @@ impl<V: Dataword> Operator for ShardedSpmv<V> {
             // SAFETY: `scope_chunks` blocks until every worker finishes, so
             // the pointer outlives all uses; stripes tile `[0, nrows)`
             // without overlap (invariant of `partition_rows_balanced`).
-            let y_stripe = unsafe {
-                std::slice::from_raw_parts_mut(y_ptr.get().add(p.row_start), p.row_end - p.row_start)
-            };
+            let y_stripe = unsafe { y_ptr.slice_mut(p.row_start, p.row_end - p.row_start) };
             match &self.backing {
                 MatrixBacking::Resident(m) => m.spmv_into_stripe(x, y_stripe, p.row_start, p.row_end),
                 MatrixBacking::Ooc(ooc) => Self::ooc_spmv_stripe(ooc, i, x, y_stripe, p.row_start),
@@ -771,12 +769,13 @@ impl<V: Dataword> Operator for ShardedSpmv<V> {
         self.pool.scope_chunks(shards, |i| {
             let p = parts[i];
             let (r0, r1) = (p.row_start, p.row_end);
-            // SAFETY: as in `apply` — the scoped join outlives every use,
-            // stripes tile `[0, nrows)` disjointly so the stripe-local
-            // `&mut` views never overlap, and partials slot `i` (stride
-            // `1 + nproj`) is written by exactly this task.
-            let w_stripe = unsafe { std::slice::from_raw_parts_mut(y_ptr.get().add(r0), r1 - r0) };
-            let slot = unsafe { std::slice::from_raw_parts_mut(p_ptr.get().add(i * stride), stride) };
+            // SAFETY: as in `apply` — the scoped join outlives every use
+            // and stripes tile `[0, nrows)` disjointly, so the stripe-local
+            // `&mut` views never overlap.
+            let w_stripe = unsafe { y_ptr.slice_mut(r0, r1 - r0) };
+            // SAFETY: partials slot `i` (stride `1 + nproj`) is written by
+            // exactly this task; the scratch outlives the join.
+            let slot = unsafe { p_ptr.slice_mut(i * stride, stride) };
             // The stripe SpMV streams resident rows or prefetched OOC
             // chunks; either way the axpy/dot/reorth tail below runs on the
             // same bitwise stripe, while the next shard's chunks are
@@ -840,12 +839,10 @@ impl<V: Dataword> Operator for ShardedSpmv<V> {
         let p_ptr = SendPtr(it.partials.as_mut_ptr());
         self.pool.scope_chunks(shards, |i| {
             let p = parts[i];
-            // SAFETY: as in `apply_fused` — the scoped join outlives every
-            // use; row stripes tile `[0, n)` disjointly, so the chunk-local
-            // `&mut` views of each output column never overlap across
-            // tasks; partials slot `i` (stride `b*b + nproj*b`) is written
-            // by exactly this task.
-            let slot = unsafe { std::slice::from_raw_parts_mut(p_ptr.get().add(i * stride), stride) };
+            // SAFETY: as in `apply_fused` — partials slot `i` (stride
+            // `b*b + nproj*b`) is written by exactly this task; the scoped
+            // join outlives every use.
+            let slot = unsafe { p_ptr.slice_mut(i * stride, stride) };
             slot.fill(0.0);
             // One 512-row window of the fused block sweep, shared by both
             // backings: `spmv` fills column `c`'s window of `w`, then the
@@ -857,8 +854,7 @@ impl<V: Dataword> Operator for ShardedSpmv<V> {
                 for c in 0..b {
                     // SAFETY: as above — windows of column `c` within this
                     // task's row stripe; disjoint across tasks.
-                    let w_chunk =
-                        unsafe { std::slice::from_raw_parts_mut(y_ptr.get().add(c * n + r0), r1 - r0) };
+                    let w_chunk = unsafe { y_ptr.slice_mut(c * n + r0, r1 - r0) };
                     spmv(c, w_chunk);
                     if !v_prev.is_empty() {
                         // w_c -= sum_{i >= c} B_j[c][i] * v_prev_i over the
@@ -943,6 +939,7 @@ mod tests {
     use crate::sparse::CooMatrix;
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy random fixture; mini_fused_datapath covers this path under Miri")]
     fn sharded_matches_serial() {
         let m = Arc::new(graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 3).to_csr());
         let pool = Arc::new(ThreadPool::new(5));
@@ -994,6 +991,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy random fixture; mini_fused_datapath covers this path under Miri")]
     fn concurrent_applies_on_one_shared_engine_are_bitwise_serial() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<ShardedSpmv>();
@@ -1021,6 +1019,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy random fixture; mini_fused_datapath covers this path under Miri")]
     fn fused_block_sweep_matches_serial_reference_and_streams_once() {
         use crate::lanczos::{BasisArena, BasisDots, FusedBlockIteration};
         let m = Arc::new(graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 13).to_csr());
@@ -1085,6 +1084,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy random fixture; mini_fused_datapath covers this path under Miri")]
     fn rebuild_shards_reuses_untouched_cus_and_matches_fresh_engine() {
         use crate::sparse::CooDelta;
         let mut coo = graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 23);
@@ -1127,6 +1127,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy random fixture; mini_fused_datapath covers this path under Miri")]
     fn own_pool_constructor_matches_shared_pool() {
         let m = Arc::new(graphs::erdos_renyi(200, 1600, 9).to_csr());
         let x: Vec<f32> = (0..200).map(|i| (i as f32 * 0.017).sin()).collect();
@@ -1140,6 +1141,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy random fixture; mini_fused_datapath covers this path under Miri")]
     fn top_k_matches_serial_oracle_and_counts_one_apply() {
         let m = Arc::new(graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 41).to_csr());
         let x: Vec<f32> = (0..m.nrows).map(|i| ((i * 29) % 13) as f32 * 0.1 - 0.6).collect();
@@ -1155,6 +1157,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy random fixture; mini_fused_datapath covers this path under Miri")]
     fn top_k_batch_is_bitwise_equal_to_independent_queries_and_streams_once() {
         let m = Arc::new(graphs::rmat(1 << 9, 8 << 9, 0.57, 0.19, 0.19, 51).to_csr());
         let xs: Vec<Vec<f32>> = (0..4)
@@ -1177,6 +1180,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy random fixture; mini_fused_datapath covers this path under Miri")]
     fn early_exit_skips_cold_shards_and_stays_bitwise_exact() {
         // Skewed norms: rows 0..64 carry ~5 orders of magnitude more
         // weight than the rest, so under EqualRows all hot rows land in
@@ -1218,6 +1222,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy random fixture; mini_fused_datapath covers this path under Miri")]
     fn seeded_engine_ppr_matches_cold_fixed_point_in_fewer_streams() {
         let m = Arc::new(graphs::mesh2d(12, 12, 0.9, 0.02, 7).to_csr());
         let opts = crate::sparse::PprOptions { source: 3, ..Default::default() };
@@ -1235,6 +1240,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy random fixture; mini_fused_datapath covers this path under Miri")]
     fn ppr_matches_serial_oracle_for_any_cu_count() {
         let m = Arc::new(graphs::mesh2d(12, 12, 0.9, 0.02, 7).to_csr());
         let opts = crate::sparse::PprOptions { source: 3, ..Default::default() };
@@ -1249,6 +1255,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy random fixture; mini_fused_datapath covers this path under Miri")]
     fn ooc_backed_engine_is_bitwise_equal_to_resident() {
         use crate::sparse::ooc::{scratch_dir, OocMatrix, PacketFileWriter};
         let dir = scratch_dir("engine");
@@ -1314,6 +1321,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "heavy random fixture; mini_fused_datapath covers this path under Miri")]
     fn typed_engine_shrinks_stream_and_stays_close() {
         let mut coo = graphs::rmat(1 << 8, 8 << 8, 0.57, 0.19, 0.19, 17);
         crate::sparse::normalize_frobenius(&mut coo);
@@ -1342,5 +1350,51 @@ mod tests {
         for (p, r) in yb.iter().zip(&ya) {
             assert!(((p - r).abs() as f64) <= bound, "{p} vs {r} (bound {bound})");
         }
+    }
+
+    #[test]
+    fn mini_fused_datapath_matches_serial_on_a_tiny_fixture() {
+        // Small deterministic fixture sized for Miri: the same checked
+        // SendPtr paths the heavy tests cover (apply stripes, fused
+        // partials slots, top-k batch slots) on a 24-row ring + diagonal,
+        // 3 shards, pool of 2 — every `scope_chunks` here really forks.
+        use crate::lanczos::FusedIteration;
+        let n = 24usize;
+        let mut coo: CooMatrix = CooMatrix::new(n, n);
+        for i in 0..n {
+            coo.push(i, (i + 1) % n, 0.5 + i as f32 * 0.01);
+            coo.push((i + 1) % n, i, 0.5 + i as f32 * 0.01);
+            coo.push(i, i, -0.25);
+        }
+        coo.canonicalize();
+        let m = Arc::new(coo.to_csr());
+        let x: Vec<f32> = (0..n).map(|i| ((i * 5) % 7) as f32 * 0.2 - 0.5).collect();
+        let serial = m.spmv(&x);
+        let pool = Arc::new(ThreadPool::new(2));
+        let engine = ShardedSpmv::new(Arc::clone(&m), 3, PartitionPolicy::EqualRows, pool);
+        // apply: stripe writes through the checked slice accessor.
+        let mut y = vec![0.0f32; n];
+        engine.apply(&x, &mut y);
+        assert_eq!(serial, y);
+        // apply_fused: stripe + partials-slot writes, no reorth basis.
+        let v_prev = vec![0.0f32; n];
+        let mut w = vec![0.0f32; n];
+        let mut partials = vec![0.0f64; 3];
+        let mut projs = [0.0f64; 0];
+        let mut it = FusedIteration {
+            beta_prev: 0.0,
+            v_prev: &v_prev,
+            basis: None,
+            partials: &mut partials,
+            projs: &mut projs,
+        };
+        let alpha = engine.apply_fused(&x, &mut w, &mut it);
+        assert_eq!(w, serial, "fused stripe must equal the plain apply");
+        let want: f64 = linalg::dot(&serial, &x);
+        assert!((alpha - want).abs() <= 1e-9 * want.abs().max(1.0), "{alpha} vs {want}");
+        // top_k_batch: per-shard heap slots through the checked set().
+        let got = engine.top_k_batch(&[x.clone(), x.clone()], 3);
+        let oracle = crate::sparse::top_k_serial(&m, &x, 3);
+        assert_eq!(got, vec![oracle.clone(), oracle]);
     }
 }

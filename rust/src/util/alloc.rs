@@ -56,10 +56,13 @@ impl CountingAlloc {
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         Self::record(layout.size());
+        // SAFETY: the caller upholds GlobalAlloc's contract; forwarded
+        // verbatim to `System`.
         unsafe { System.alloc(layout) }
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        // SAFETY: as in `alloc` — the caller's contract, forwarded.
         unsafe { System.dealloc(ptr, layout) }
     }
 
@@ -69,11 +72,13 @@ unsafe impl GlobalAlloc for CountingAlloc {
         if new_size > layout.size() {
             Self::record(new_size - layout.size());
         }
+        // SAFETY: as in `alloc` — the caller's contract, forwarded.
         unsafe { System.realloc(ptr, layout, new_size) }
     }
 
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         Self::record(layout.size());
+        // SAFETY: as in `alloc` — the caller's contract, forwarded.
         unsafe { System.alloc_zeroed(layout) }
     }
 }

@@ -3,12 +3,12 @@
 //! process start; repeated installs are no-ops.
 
 use log::{Level, LevelFilter, Metadata, Record};
-use std::sync::Once;
+use std::sync::{Once, OnceLock};
 use std::time::Instant;
 
 static INIT: Once = Once::new();
 static LOGGER: StderrLogger = StderrLogger;
-static mut START: Option<Instant> = None;
+static START: OnceLock<Instant> = OnceLock::new();
 
 struct StderrLogger;
 
@@ -21,9 +21,7 @@ impl log::Log for StderrLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        // SAFETY: START is written exactly once inside `Once` before any
-        // logging can happen.
-        let t0 = unsafe { (*std::ptr::addr_of!(START)).unwrap_or_else(Instant::now) };
+        let t0 = START.get().copied().unwrap_or_else(Instant::now);
         let dt = t0.elapsed().as_secs_f64();
         let lvl = match record.level() {
             Level::Error => "ERROR",
@@ -42,9 +40,7 @@ impl log::Log for StderrLogger {
 /// `info`.
 pub fn init() {
     INIT.call_once(|| {
-        unsafe {
-            START = Some(Instant::now());
-        }
+        let _ = START.set(Instant::now());
         let level = match std::env::var("TOPK_LOG").as_deref() {
             Ok("error") => LevelFilter::Error,
             Ok("warn") => LevelFilter::Warn,

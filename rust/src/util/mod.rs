@@ -14,5 +14,6 @@ pub mod logging;
 pub mod pool;
 pub mod ptr;
 pub mod prop;
+pub mod race;
 pub mod rng;
 pub mod timer;

@@ -43,6 +43,10 @@ struct ScopeTask {
     /// First panic's payload, re-raised verbatim by the publisher so the
     /// original assertion message survives the fork/join.
     panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    /// Race-detector scope id ([`crate::util::race::ScopeToken`]) binding
+    /// every task index of this fork/join to one claim registry. Always 0
+    /// without `--features race-check` (the detector is a no-op shim).
+    race_scope: u64,
 }
 
 impl ScopeTask {
@@ -57,6 +61,8 @@ impl ScopeTask {
     /// its stack and blocks until `done == tasks` and no worker holds the
     /// pointer (`scope_users == 0`).
     unsafe fn drain(task: *const ScopeTask) {
+        // SAFETY: the caller's contract (above) — the descriptor outlives
+        // this call.
         let t = unsafe { &*task };
         loop {
             let i = t.next.fetch_add(1, Ordering::Relaxed);
@@ -65,6 +71,10 @@ impl ScopeTask {
             }
             if !t.panicked.load(Ordering::Relaxed) {
                 let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    // Bind this thread to (scope, task index) for the race
+                    // detector; the guard pops the binding even on panic,
+                    // and the whole call is a no-op without `race-check`.
+                    let _task = crate::util::race::enter_task(t.race_scope, i);
                     // SAFETY: see above — the closure is alive for the whole
                     // drain.
                     unsafe { (t.call)(t.fptr, i) }
@@ -275,9 +285,15 @@ impl ThreadPool {
         }
 
         unsafe fn call_impl<F: Fn(usize)>(p: *const (), i: usize) {
+            // SAFETY: `p` is the publisher's `&F`, alive until the join
+            // completes (the caller's contract).
             unsafe { (*(p as *const F))(i) }
         }
 
+        // Open the race-detector scope before the descriptor becomes
+        // visible to workers; declared before `task` so it drops after the
+        // join (also on the resume_unwind path), retiring every claim.
+        let race_scope = crate::util::race::ScopeToken::begin();
         let task = ScopeTask {
             fptr: &f as *const F as *const (),
             call: call_impl::<F>,
@@ -286,6 +302,7 @@ impl ThreadPool {
             done: AtomicUsize::new(0),
             panicked: AtomicBool::new(false),
             panic_payload: Mutex::new(None),
+            race_scope: race_scope.id(),
         };
         {
             let me = std::thread::current().id();
@@ -384,14 +401,16 @@ mod tests {
     fn executes_all_jobs() {
         let pool = ThreadPool::new(4);
         let counter = Arc::new(AtomicU64::new(0));
-        for _ in 0..100 {
+        // Miri runs the same logic at a fraction of the job count.
+        let jobs = if cfg!(miri) { 16 } else { 100 };
+        for _ in 0..jobs {
             let c = Arc::clone(&counter);
             pool.execute(move || {
                 c.fetch_add(1, Ordering::SeqCst);
             });
         }
         pool.wait_idle();
-        assert_eq!(counter.load(Ordering::SeqCst), 100);
+        assert_eq!(counter.load(Ordering::SeqCst), jobs as u64);
     }
 
     #[test]
@@ -428,7 +447,8 @@ mod tests {
     #[test]
     fn consecutive_scopes_reuse_workers() {
         let pool = ThreadPool::new(3);
-        for round in 0..50usize {
+        let rounds = if cfg!(miri) { 5 } else { 50 };
+        for round in 0..rounds {
             let hits: Vec<AtomicU64> = (0..7).map(|_| AtomicU64::new(0)).collect();
             pool.scope_chunks(7, |i| {
                 hits[i].fetch_add(1, Ordering::SeqCst);
@@ -544,7 +564,8 @@ mod tests {
             for t in 0..2 {
                 let pool = Arc::clone(&pool);
                 s.spawn(move || {
-                    for _ in 0..25 {
+                    let rounds = if cfg!(miri) { 4 } else { 25 };
+                    for _ in 0..rounds {
                         let sum = AtomicU64::new(0);
                         pool.scope_chunks(10, |i| {
                             sum.fetch_add(i as u64 + 1, Ordering::SeqCst);

@@ -8,6 +8,13 @@
 //! pointee can move or drop. [`SendPtr`] is the single place that unsafe
 //! `Send`/`Sync` assertion lives, so the aliasing contract has one audit
 //! point instead of one copy per call site.
+//!
+//! The [`slice_mut`](SendPtr::slice_mut) and [`set`](SendPtr::set)
+//! accessors are the *checked* way to dereference: under
+//! `--features race-check` they register the claimed index range with
+//! [`crate::util::race`] before producing a reference, so overlapping
+//! claims from different scoped tasks panic with both call sites named.
+//! In default builds the claim is a compiled-out no-op.
 
 /// Raw mutable pointer asserted to be safe to share across a structured
 /// fork/join. The safety obligation is the *caller's*: tasks must write
@@ -22,6 +29,8 @@ pub struct SendPtr<T>(
 // inside scoped tasks whose disjointness and lifetime the publishing call
 // site proves (see the SAFETY comments at each use).
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: as above — `SendPtr` is a plain address; shared references to it
+// never dereference, so `Sync` adds no obligations beyond `Send`'s.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 impl<T> Copy for SendPtr<T> {}
@@ -35,5 +44,69 @@ impl<T> SendPtr<T> {
     /// The wrapped pointer.
     pub fn get(self) -> *mut T {
         self.0
+    }
+
+    /// Exclusive view of elements `[start, start + len)` of the pointed-to
+    /// buffer, race-claimed for the current scoped task.
+    ///
+    /// # Safety
+    ///
+    /// The caller must guarantee the pointer addresses at least
+    /// `start + len` initialized, aligned elements that outlive `'a`, and
+    /// that no other reference to that element range exists while the
+    /// returned slice is live (scoped tasks prove this by tiling disjoint
+    /// ranges and joining before the buffer moves).
+    #[track_caller]
+    pub unsafe fn slice_mut<'a>(self, start: usize, len: usize) -> &'a mut [T] {
+        crate::util::race::claim_range(self.0 as usize, start, start + len);
+        // SAFETY: the caller's contract above — `start + len` in-bounds
+        // elements, no aliasing view, pointee outlives `'a`.
+        unsafe { std::slice::from_raw_parts_mut(self.0.add(start), len) }
+    }
+
+    /// Overwrite element `index` (dropping the old value), race-claimed
+    /// for the current scoped task.
+    ///
+    /// # Safety
+    ///
+    /// The caller must guarantee `index` is in bounds of an initialized,
+    /// live buffer and that no other access to that element races with
+    /// this write.
+    #[track_caller]
+    pub unsafe fn set(self, index: usize, value: T) {
+        crate::util::race::claim_range(self.0 as usize, index, index + 1);
+        // SAFETY: the caller's contract above — `index` in bounds,
+        // initialized, unaliased. Place assignment (not `ptr::write`) so
+        // the previous element value is dropped.
+        unsafe { *self.0.add(index) = value }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_views_from_one_base_are_independent() {
+        let mut buf = vec![0u32; 8];
+        let p = SendPtr(buf.as_mut_ptr());
+        // SAFETY: the two views tile [0, 8) disjointly and `buf` outlives
+        // both (this test is serial, so no scope is active).
+        let lo = unsafe { p.slice_mut(0, 4) };
+        // SAFETY: as above — [4, 8) does not overlap [0, 4).
+        let hi = unsafe { p.slice_mut(4, 4) };
+        lo.fill(1);
+        hi.fill(2);
+        assert_eq!(buf, [1, 1, 1, 1, 2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn set_writes_one_element_and_drops_the_old_value() {
+        let mut buf = vec![vec![1usize; 3], vec![2; 3]];
+        let p = SendPtr(buf.as_mut_ptr());
+        // SAFETY: index 1 is in bounds and nothing else touches it.
+        unsafe { p.set(1, vec![9; 2]) };
+        assert_eq!(buf[0], [1, 1, 1]);
+        assert_eq!(buf[1], [9, 9]);
     }
 }

@@ -1,0 +1,342 @@
+//! Opt-in scoped-claim race detector (`--features race-check`).
+//!
+//! The crate's parallel kernels share output buffers across scoped tasks
+//! through [`SendPtr`](crate::util::ptr::SendPtr) and a manual disjointness
+//! argument: every task writes only its own index range, and the fork/join
+//! completes before the buffer moves or drops. This module machine-checks
+//! that argument on demand:
+//!
+//! * [`ScopeToken::begin`] — opened by
+//!   [`ThreadPool::scope_chunks`](crate::util::pool::ThreadPool::scope_chunks)
+//!   before the task descriptor is published to workers; dropping it (after
+//!   the join, also on unwind) retires the scope together with every claim
+//!   registered under it, so a panicking task cannot leak claimed ranges.
+//! * [`enter_task`] — binds a worker thread to `(scope, task index)` while
+//!   it runs one claimed index; the guard pops the binding even on panic.
+//! * [`claim_range`] — called by the checked `SendPtr` accessors *before*
+//!   any reference is produced. Registers elements `[start, end)` of a
+//!   buffer for the current task and panics if the range overlaps a claim
+//!   made by a *different* task on the same buffer, naming both call
+//!   sites. A claim arriving after its scope already joined fail-stops the
+//!   process: the pointee's stack frame may already be gone, so no
+//!   recovery is sound.
+//! * [`lease`]/[`release`] — identity tracking for the out-of-core
+//!   chunk-buffer pool: a pooled buffer handed out twice, or recycled
+//!   twice, panics at the offending call site.
+//!
+//! Without the feature every hook is an empty `#[inline]` function — the
+//! hot paths compile exactly as they did before the detector existed.
+//! With it, overlap checking is O(claims²) per scope behind a per-scope
+//! mutex: a debug/CI tool, not a production path.
+
+#[cfg(feature = "race-check")]
+mod imp {
+    use std::cell::RefCell;
+    use std::collections::{HashMap, HashSet};
+    use std::panic::Location;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+    /// One registered write claim: elements `[start, end)` of the buffer
+    /// based at `base`, made by scoped task `task` at `site`.
+    struct Claim {
+        base: usize,
+        start: usize,
+        end: usize,
+        task: usize,
+        site: &'static Location<'static>,
+    }
+
+    /// Claim registry of one live `scope_chunks` fork/join.
+    struct ScopeState {
+        closed: AtomicBool,
+        claims: Mutex<Vec<Claim>>,
+    }
+
+    /// Detector locks ignore poisoning: the whole point of an overlap
+    /// panic is to unwind through these mutexes, and the registry must
+    /// stay coherent for the assertions that run after the catch.
+    fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+        m.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn registry() -> &'static Mutex<HashMap<u64, Arc<ScopeState>>> {
+        static REGISTRY: OnceLock<Mutex<HashMap<u64, Arc<ScopeState>>>> = OnceLock::new();
+        REGISTRY.get_or_init(|| Mutex::new(HashMap::new()))
+    }
+
+    fn leases() -> &'static Mutex<HashSet<u64>> {
+        static LEASES: OnceLock<Mutex<HashSet<u64>>> = OnceLock::new();
+        LEASES.get_or_init(|| Mutex::new(HashSet::new()))
+    }
+
+    thread_local! {
+        /// Stack of `(scope, task index)` contexts; the top entry is the
+        /// scoped task this thread is currently running. A stack, not a
+        /// slot, because the publisher of one pool can drain a task that
+        /// itself publishes a scope on a *different* pool.
+        static CURRENT: RefCell<Vec<(Arc<ScopeState>, usize)>> = const { RefCell::new(Vec::new()) };
+    }
+
+    /// Live handle on one fork/join's claim registry. Created by the
+    /// publisher before the task descriptor becomes visible to workers;
+    /// dropped after the join completes (also on unwind), which erases the
+    /// scope's claims and turns any straggler claim into a fail-stop.
+    pub struct ScopeToken {
+        id: u64,
+    }
+
+    impl ScopeToken {
+        /// Open a new scope and register its (empty) claim set.
+        pub fn begin() -> Self {
+            static NEXT: AtomicU64 = AtomicU64::new(1);
+            let id = NEXT.fetch_add(1, Ordering::Relaxed);
+            let state = Arc::new(ScopeState {
+                closed: AtomicBool::new(false),
+                claims: Mutex::new(Vec::new()),
+            });
+            lock(registry()).insert(id, state);
+            Self { id }
+        }
+
+        /// Identifier workers pass to [`enter_task`].
+        pub fn id(&self) -> u64 {
+            self.id
+        }
+    }
+
+    impl Drop for ScopeToken {
+        fn drop(&mut self) {
+            if let Some(state) = lock(registry()).remove(&self.id) {
+                state.closed.store(true, Ordering::Release);
+            }
+        }
+    }
+
+    /// Unbinds the thread's task context on drop (a panicking task still
+    /// pops its binding on the way out).
+    pub struct TaskGuard {
+        /// Keep the guard on the thread that entered the task.
+        _not_send: std::marker::PhantomData<*const ()>,
+    }
+
+    impl Drop for TaskGuard {
+        fn drop(&mut self) {
+            CURRENT.with(|c| {
+                c.borrow_mut().pop();
+            });
+        }
+    }
+
+    /// Bind the current thread to task `task` of scope `scope` for the
+    /// guard's lifetime. Fail-stops if the scope has already joined: a
+    /// task starting after its publisher returned would read a freed stack
+    /// frame, so no in-process recovery is sound.
+    pub fn enter_task(scope: u64, task: usize) -> TaskGuard {
+        let state = lock(registry()).get(&scope).cloned();
+        let Some(state) = state else {
+            eprintln!(
+                "race-check: task {task} entered scope {scope} after its join completed; aborting"
+            );
+            std::process::abort();
+        };
+        CURRENT.with(|c| c.borrow_mut().push((state, task)));
+        TaskGuard { _not_send: std::marker::PhantomData }
+    }
+
+    /// Register a claim on elements `[start, end)` of the buffer based at
+    /// `base` for the scoped task running on this thread.
+    ///
+    /// No active scope (serial paths, the `tasks == 1` inline fast path)
+    /// means there is nothing to race with: the claim is a no-op. An
+    /// overlap with a *different* task's claim on the same buffer panics,
+    /// naming both call sites; overlapping re-claims by the same task are
+    /// fine (sequential within a task). A claim against a scope that has
+    /// already joined fail-stops the process.
+    #[track_caller]
+    pub fn claim_range(base: usize, start: usize, end: usize) {
+        let site = Location::caller();
+        CURRENT.with(|cur| {
+            let ctx = cur.borrow();
+            let Some((state, task)) = ctx.last() else {
+                return;
+            };
+            if state.closed.load(Ordering::Acquire) {
+                eprintln!(
+                    "race-check: post-join dereference at {site}: claim [{start}, {end}) on \
+                     buffer {base:#x} arrived after the scope's join completed; aborting"
+                );
+                std::process::abort();
+            }
+            let mut claims = lock(&state.claims);
+            for c in claims.iter() {
+                if c.base == base && c.task != *task && start < c.end && c.start < end {
+                    panic!(
+                        "race-check: overlapping claims on buffer {base:#x}: task {task} claims \
+                         [{start}, {end}) at {site}, task {} already claimed [{}, {}) at {}",
+                        c.task, c.start, c.end, c.site
+                    );
+                }
+            }
+            claims.push(Claim { base, start, end, task: *task, site });
+        });
+    }
+
+    /// Number of scopes currently open (tests assert this returns to zero
+    /// after every join, including panicked ones).
+    pub fn active_scopes() -> usize {
+        lock(registry()).len()
+    }
+
+    /// Fresh identity for a pooled buffer (out-of-core lease tracking).
+    pub fn new_lease_id() -> u64 {
+        static NEXT: AtomicU64 = AtomicU64::new(1);
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Record pooled buffer `id` as handed out to a consumer. Panics if it
+    /// is already out — two owners of one recycled buffer is exactly the
+    /// prefetch-pool bug class this guards.
+    #[track_caller]
+    pub fn lease(id: u64) {
+        assert!(
+            lock(leases()).insert(id),
+            "race-check: pooled buffer {id} handed out while still leased (double handout)"
+        );
+    }
+
+    /// Record pooled buffer `id` as returned to its pool. Panics if it was
+    /// not out (double recycle).
+    #[track_caller]
+    pub fn release(id: u64) {
+        assert!(
+            lock(leases()).remove(&id),
+            "race-check: pooled buffer {id} recycled while not leased (double recycle)"
+        );
+    }
+}
+
+#[cfg(not(feature = "race-check"))]
+mod imp {
+    //! Compiled-out stand-ins: every hook is an empty inline function the
+    //! optimizer erases, so default builds pay nothing for the detector.
+
+    /// Scope handle (no-op without `race-check`).
+    pub struct ScopeToken;
+
+    impl ScopeToken {
+        /// Open a detector scope (no-op).
+        #[inline(always)]
+        pub fn begin() -> Self {
+            ScopeToken
+        }
+
+        /// Scope id for task binding (always 0).
+        #[inline(always)]
+        pub fn id(&self) -> u64 {
+            0
+        }
+    }
+
+    /// Task-context guard (no-op without `race-check`).
+    pub struct TaskGuard;
+
+    /// Bind the current thread to `(scope, task)` (no-op).
+    #[inline(always)]
+    pub fn enter_task(_scope: u64, _task: usize) -> TaskGuard {
+        TaskGuard
+    }
+
+    /// Register a half-open claim `[start, end)` on `base` (no-op).
+    #[inline(always)]
+    pub fn claim_range(_base: usize, _start: usize, _end: usize) {}
+
+    /// Open detector scopes (always 0 without `race-check`).
+    #[inline(always)]
+    pub fn active_scopes() -> usize {
+        0
+    }
+
+    /// Fresh pooled-buffer identity (always 0 without `race-check`).
+    #[inline(always)]
+    pub fn new_lease_id() -> u64 {
+        0
+    }
+
+    /// Record a pooled-buffer handout (no-op).
+    #[inline(always)]
+    pub fn lease(_id: u64) {}
+
+    /// Record a pooled-buffer return (no-op).
+    #[inline(always)]
+    pub fn release(_id: u64) {}
+}
+
+pub use imp::*;
+
+#[cfg(all(test, feature = "race-check"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn claims_without_a_scope_are_ignored() {
+        // Serial paths (`tasks == 1` inlining, the default Operator's
+        // serial `parallel_for`) claim with no active scope: must be free.
+        claim_range(0x1000, 0, 10);
+        claim_range(0x1000, 5, 15);
+    }
+
+    #[test]
+    fn same_task_overlap_is_allowed_and_scope_retires() {
+        {
+            let scope = ScopeToken::begin();
+            let _task = enter_task(scope.id(), 0);
+            claim_range(0x2000, 0, 10);
+            // Same task, overlapping range: sequential within the task.
+            claim_range(0x2000, 5, 15);
+        }
+        // Token dropped: its registry record must be gone.
+        // (Other tests may hold scopes concurrently, so only assert this
+        // scope no longer pins the count above the others'.)
+    }
+
+    #[test]
+    fn cross_task_overlap_panics_with_both_sites() {
+        let scope = ScopeToken::begin();
+        {
+            let _t0 = enter_task(scope.id(), 0);
+            claim_range(0x3000, 0, 100);
+        }
+        let _t1 = enter_task(scope.id(), 1);
+        let r = std::panic::catch_unwind(|| claim_range(0x3000, 50, 150));
+        let payload = r.expect_err("cross-task overlap must panic");
+        let msg = payload.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("overlapping claims"), "{msg}");
+        assert_eq!(msg.matches("race.rs").count(), 2, "both sites named: {msg}");
+    }
+
+    #[test]
+    fn distinct_buffers_do_not_conflict() {
+        let scope = ScopeToken::begin();
+        {
+            let _t0 = enter_task(scope.id(), 0);
+            claim_range(0x4000, 0, 100);
+        }
+        let _t1 = enter_task(scope.id(), 1);
+        // Same range, different base: different buffer, no conflict.
+        claim_range(0x5000, 0, 100);
+    }
+
+    #[test]
+    fn lease_cycle_balances_and_double_lease_panics() {
+        let id = new_lease_id();
+        lease(id);
+        release(id);
+        lease(id);
+        let r = std::panic::catch_unwind(|| lease(id));
+        assert!(r.is_err(), "double handout must panic");
+        release(id);
+        let r = std::panic::catch_unwind(|| release(id));
+        assert!(r.is_err(), "double recycle must panic");
+    }
+}

@@ -29,7 +29,7 @@ use topk_eigen::graphs;
 use topk_eigen::lanczos::{
     lanczos_typed_ws, LanczosOptions, LanczosResult, LanczosWorkspace, ReorthPolicy,
 };
-use topk_eigen::sparse::ooc::{scratch_dir, shard_path};
+use topk_eigen::sparse::ooc::{scratch_dir, shard_path, OocShardSource};
 use topk_eigen::sparse::{OocMatrix, PacketFileWriter, PartitionPolicy, ShardedSpmv};
 use topk_eigen::util::alloc::thread_allocated_bytes;
 
@@ -227,5 +227,47 @@ fn ooc_residency_is_buffer_bounded_not_nnz_bounded() {
         oprep.resident_bytes(),
         prep.resident_bytes()
     );
+    cleanup(&dir);
+}
+
+#[test]
+fn abandoned_partial_sweeps_leave_the_stream_intact() {
+    // Regression companion to the `OocShardSource` drop fix (the unit test
+    // in `sparse/ooc.rs` pins the pool count): a source dropped mid-stream
+    // always has a prefetch in flight whose buffer must return to the
+    // pool. Through the public API: abandon shard streams at every depth,
+    // repeatedly, and the matrix must keep producing the identical full
+    // entry stream — no lost buffers, no torn state, no stuck I/O jobs.
+    let m = graphs::erdos_renyi(1600, 9000, 23).to_csr();
+    let dir = scratch_dir("stream-abandon");
+    PacketFileWriter::new(&dir)
+        .chunk_target_bytes(512)
+        .write_csr(&m, 1.0, 3, PartitionPolicy::EqualRows)
+        .expect("write packet files");
+    let ooc = OocMatrix::<f32>::open(&dir).expect("open");
+    assert!(
+        ooc.chunk_count() > ooc.parts().len(),
+        "fixture must have multiple chunks per shard to keep a prefetch in flight"
+    );
+
+    let mut reference: Vec<(u32, u32, u32)> = Vec::new();
+    ooc.for_each_entry(|r, c, v| reference.push((r, c, v.to_bits())));
+    assert_eq!(reference.len(), m.nnz());
+
+    for round in 0..3 {
+        for shard in 0..ooc.parts().len() {
+            // Depths 0 (constructor's prefetch only) through "all but one".
+            for consumed in 0..ooc.shard_chunks(shard).max(1) {
+                let mut src = OocShardSource::new(ooc.clone(), shard);
+                for _ in 0..consumed {
+                    let _ = src.next_chunk();
+                }
+                drop(src);
+            }
+        }
+        let mut got: Vec<(u32, u32, u32)> = Vec::new();
+        ooc.for_each_entry(|r, c, v| got.push((r, c, v.to_bits())));
+        assert_eq!(got, reference, "round {round}: stream changed after abandoned sweeps");
+    }
     cleanup(&dir);
 }

@@ -1,0 +1,109 @@
+//! Detector-on integration tests (`cargo test --features race-check`):
+//! prove the scoped-claim race detector actually fires on a deliberate
+//! overlap (naming both call sites), and that a panicking task does not
+//! leak its claimed ranges — the whole suite runs with the feature on in
+//! CI, so these are the tests that keep the detector honest.
+
+#![cfg(feature = "race-check")]
+
+use std::sync::Mutex;
+use topk_eigen::util::pool::ThreadPool;
+use topk_eigen::util::ptr::SendPtr;
+use topk_eigen::util::race;
+
+/// The detector's scope registry is process-global and these tests assert
+/// `active_scopes() == 0`, so they must not interleave.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn payload_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else {
+        String::from("<non-string panic payload>")
+    }
+}
+
+#[test]
+fn overlapping_claims_panic_with_both_sites() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let pool = ThreadPool::new(2);
+    let mut buf = vec![0.0f32; 64];
+    let ptr = SendPtr(buf.as_mut_ptr());
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.scope_chunks(2, |task| {
+            if task == 0 {
+                // SAFETY: deliberately *not* disjoint — [0, 40) overlaps
+                // task 1's [24, 64) — so the detector must refuse one of
+                // the two claims before any aliasing `&mut` exists.
+                let view = unsafe { ptr.slice_mut(0, 40) };
+                view[0] = 1.0;
+            } else {
+                // SAFETY: as above — the deliberate overlap under test.
+                let view = unsafe { ptr.slice_mut(24, 40) };
+                view[0] = 2.0;
+            }
+        });
+    }));
+    let payload = r.expect_err("overlapping claims must panic through the fork/join");
+    let msg = payload_message(payload.as_ref());
+    assert!(msg.contains("race-check: overlapping claims"), "unexpected panic: {msg}");
+    // Both the refused claim's site and the prior claim's site are named,
+    // each as a `race_check.rs:<line>` location in this file.
+    assert_eq!(msg.matches("race_check.rs").count(), 2, "both call sites named: {msg}");
+    // The join completed despite the panic: the scope must be retired.
+    assert_eq!(race::active_scopes(), 0, "scope leaked after overlap panic");
+    // The pool survives and a disjoint claim set runs clean.
+    pool.scope_chunks(2, |task| {
+        // SAFETY: [0, 32) and [32, 64) tile the buffer disjointly and the
+        // join precedes any other use.
+        let view = unsafe { ptr.slice_mut(task * 32, 32) };
+        view.fill(task as f32);
+    });
+    assert_eq!(buf[0], 0.0);
+    assert_eq!(buf[63], 1.0);
+}
+
+#[test]
+fn panicking_task_does_not_leak_claims() {
+    let _serial = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+    let pool = ThreadPool::new(3);
+    let mut buf = vec![0u64; 32];
+    let ptr = SendPtr(buf.as_mut_ptr());
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.scope_chunks(4, |task| {
+            // SAFETY: stripes of 8 tile [0, 32) disjointly per task; the
+            // join precedes any other use of `buf`.
+            let stripe = unsafe { ptr.slice_mut(task * 8, 8) };
+            stripe.fill(task as u64 + 1);
+            if task == 2 {
+                panic!("task boom");
+            }
+        });
+    }));
+    // The task's own panic — not a detector report — reaches the publisher.
+    let payload = r.expect_err("task panic must propagate");
+    assert_eq!(payload_message(payload.as_ref()), "task boom");
+    assert_eq!(race::active_scopes(), 0, "scope leaked after task panic");
+    // The panicked scope's claims are gone: the *identical* ranges claim
+    // cleanly in a fresh scope (a leak would report them as overlaps).
+    pool.scope_chunks(4, |task| {
+        // SAFETY: same disjoint stripes as above.
+        let stripe = unsafe { ptr.slice_mut(task * 8, 8) };
+        stripe.fill(10 + task as u64);
+    });
+    assert_eq!(buf, (0..32).map(|i| 10 + i as u64 / 8).collect::<Vec<_>>());
+    // ...and the detector is still armed: a real overlap still fires.
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        pool.scope_chunks(2, |_task| {
+            // SAFETY: deliberately overlapping — every task claims the
+            // whole buffer; the detector must refuse the second claim.
+            let view = unsafe { ptr.slice_mut(0, 32) };
+            view[0] = 99;
+        });
+    }));
+    let msg = payload_message(r.expect_err("full-buffer overlap must panic").as_ref());
+    assert!(msg.contains("race-check: overlapping claims"), "{msg}");
+    assert_eq!(race::active_scopes(), 0);
+}
